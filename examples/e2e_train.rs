@@ -1,0 +1,116 @@
+//! End-to-end driver (DESIGN.md deliverable): train a transformer LM under
+//! Dorm for a few hundred steps, exercising every layer of the stack —
+//!
+//!   L1 Pallas kernels (fused matmul + flash attention, inside the HLO)
+//!   L2 JAX model (AOT'd to artifacts/tfm_e2e_*.hlo.txt)
+//!   L3 Rust: DormMaster allocation -> PS trainer -> PJRT compute service
+//!
+//! — including one mid-training elastic rescale through the checkpoint
+//! protocol. Logs the loss curve; EXPERIMENTS.md §E2E records a run.
+//!
+//! ```bash
+//! cargo run --release --example e2e_train -- [--steps N] [--model tfm|tfm_e2e]
+//! ```
+
+use dorm::app::{AppSpec, CheckpointStore, Engine};
+use dorm::config::{ClusterConfig, DormConfig};
+use dorm::master::DormMaster;
+use dorm::resources::Res;
+use dorm::runtime::{ComputeService, Manifest};
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    dorm::util::logger::init();
+    let steps: u64 = arg("--steps", "200").parse()?;
+    let model = arg("--model", "tfm");
+    let log_every: u64 = arg("--log-every", "10").parse()?;
+
+    let manifest = Manifest::load("artifacts")?;
+    let meta = manifest.model(&model)?.clone();
+    println!(
+        "== e2e: training {model} ({} params, batch {}x{}) for {steps} steps ==",
+        meta.n_params,
+        meta.x_shape[0],
+        meta.x_shape.get(1).copied().unwrap_or(1)
+    );
+    let t0 = std::time::Instant::now();
+    let service = ComputeService::start_filtered(&manifest, Some(&[model.as_str()]))?;
+    println!("pjrt compile: {:.1?}", t0.elapsed());
+
+    let cluster = ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+    let store = CheckpointStore::new(std::env::temp_dir().join("dorm_e2e"))?;
+    let mut master = DormMaster::new(&cluster, DormConfig::DORM1, store)
+        .with_compute(service.handle(), manifest);
+
+    let app = master.submit(AppSpec {
+        executor: Engine::TensorFlow,
+        demand: Res::cpu_gpu_ram(4.0, 0.0, 16.0),
+        weight: 1,
+        n_max: 8,
+        n_min: 1,
+        cmd: [model.clone(), model.clone()],
+    })?;
+    println!("{app} running with {} containers (worker slots)", master.containers_of(app));
+
+    let train_start = std::time::Instant::now();
+    let mut curve: Vec<(u64, f32)> = Vec::new();
+    let rescale_at = steps / 2;
+    let mut done = 0;
+    while done < steps {
+        let chunk = log_every.min(steps - done);
+        let logs = master.train_round(chunk)?;
+        done += chunk;
+        for (id, step, loss) in &logs {
+            if *id != app {
+                continue; // track the primary app's curve only
+            }
+            curve.push((*step, *loss));
+            println!("step {step:4}  loss {loss:.4}  ({:.1} ms/step avg)",
+                     train_start.elapsed().as_millis() as f64 / done as f64);
+        }
+        // mid-training: force the Fig. 5 adjustment by submitting a
+        // second app, which shrinks the first one's partition
+        if done >= rescale_at && master.active_apps() == 1 {
+            let second = master.submit(AppSpec {
+                executor: Engine::MxNet,
+                demand: Res::cpu_gpu_ram(4.0, 0.0, 16.0),
+                weight: 1,
+                n_max: 8,
+                n_min: 1,
+                cmd: [model.clone(), model.clone()],
+            })?;
+            println!(
+                "-- rescale: submitted {second}; {app} now has {} containers \
+                 ({} adjustment(s) so far) --",
+                master.containers_of(app),
+                master.total_adjustments
+            );
+        }
+    }
+
+    let first = curve.first().map(|&(_, l)| l).unwrap_or(f32::NAN);
+    let last = curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
+    println!(
+        "== done: {} steps in {:.1?} ({:.0} ms/step); loss {first:.4} -> {last:.4} ==",
+        curve.last().map(|&(s, _)| s).unwrap_or(0),
+        train_start.elapsed(),
+        train_start.elapsed().as_millis() as f64 / steps as f64,
+    );
+    // CSV for EXPERIMENTS.md
+    let cols = [
+        ("step", curve.iter().map(|&(s, _)| s as f64).collect::<Vec<_>>()),
+        ("loss", curve.iter().map(|&(_, l)| l as f64).collect::<Vec<_>>()),
+    ];
+    let path = dorm::report::write_csv("e2e_loss_curve.csv", &cols)?;
+    println!("loss curve -> {}", path.display());
+    assert!(last < first, "training must reduce loss");
+    Ok(())
+}

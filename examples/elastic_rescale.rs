@@ -1,0 +1,60 @@
+//! Elastic rescale: the §III-C-2 checkpoint-based adjustment protocol on a
+//! real training job.
+//!
+//! Trains MF, then walks the exact Fig. 5 cycle — checkpoint → kill →
+//! create/destroy containers → resume at a different width — twice, and
+//! verifies the loss curve continues across both adjustments (no restart
+//! from iteration 0, the whole point of the protocol).
+//!
+//! ```bash
+//! cargo run --release --example elastic_rescale
+//! ```
+
+use dorm::app::{AppId, CheckpointStore};
+use dorm::ps::{Trainer, TrainerConfig};
+use dorm::runtime::{ComputeService, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    dorm::util::logger::init();
+    let manifest = Manifest::load("artifacts")?;
+    let service = ComputeService::start_filtered(&manifest, Some(&["mf"]))?;
+    let meta = manifest.model("mf")?;
+    let store = CheckpointStore::new(std::env::temp_dir().join("dorm_rescale"))?;
+    let app = AppId(1);
+
+    // phase 1: 2 containers
+    let cfg = TrainerConfig { workers: 2, lr: 0.3, seed: 1, data_seed: 7, ..Default::default() };
+    let mut t = Trainer::new(app, meta, service.handle(), cfg.clone())?;
+    let l0 = t.run(20)?;
+    println!("phase 1 (W=2): step {:3} loss {:.4}", l0.step, l0.loss);
+
+    // adjustment 1: scale UP to 6 containers
+    t.checkpoint(&store)?;
+    drop(t); // kill
+    let cfg = TrainerConfig { workers: 6, ..cfg };
+    let mut t = Trainer::resume(app, meta, service.handle(), cfg.clone(), &store)?;
+    assert_eq!(t.current_step(), 20, "resume continues, not restarts");
+    let l1 = t.run(20)?;
+    println!("phase 2 (W=6): step {:3} loss {:.4}  (resumed at step 20)", l1.step, l1.loss);
+
+    // adjustment 2: scale DOWN to 3 containers
+    t.checkpoint(&store)?;
+    drop(t);
+    let cfg = TrainerConfig { workers: 3, ..cfg };
+    let mut t = Trainer::resume(app, meta, service.handle(), cfg, &store)?;
+    let l2 = t.run(20)?;
+    println!("phase 3 (W=3): step {:3} loss {:.4}", l2.step, l2.loss);
+
+    assert_eq!(t.current_step(), 60);
+    assert!(
+        l2.loss < l0.loss,
+        "loss must keep improving across adjustments: {} -> {}",
+        l0.loss,
+        l2.loss
+    );
+    println!(
+        "loss improved monotonically across 2 kill/resume cycles: {:.4} -> {:.4} -> {:.4}",
+        l0.loss, l1.loss, l2.loss
+    );
+    Ok(())
+}

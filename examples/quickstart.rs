@@ -1,0 +1,79 @@
+//! Quickstart: a two-application shared cluster in ~60 lines.
+//!
+//! Builds a 4-server cluster, submits an LR and an MF training job through
+//! the DormMaster, lets the utilization–fairness optimizer partition the
+//! cluster, and trains both models for real through the AOT'd JAX/Pallas
+//! artifacts (run `make artifacts` first).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dorm::app::{AppSpec, CheckpointStore, Engine};
+use dorm::config::{ClusterConfig, DormConfig};
+use dorm::master::DormMaster;
+use dorm::resources::Res;
+use dorm::runtime::{ComputeService, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    dorm::util::logger::init();
+
+    // 1. The compute substrate: PJRT CPU client + the AOT'd models.
+    let manifest = Manifest::load("artifacts")?;
+    let service = ComputeService::start_filtered(&manifest, Some(&["lr", "mf"]))?;
+
+    // 2. A small cluster and a Dorm master (θ₁ = θ₂ = 0.2).
+    let cluster = ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+    let store = CheckpointStore::new(std::env::temp_dir().join("dorm_quickstart"))?;
+    let mut master = DormMaster::new(&cluster, DormConfig { theta1: 0.2, theta2: 0.2 }, store)
+        .with_compute(service.handle(), manifest);
+
+    // 3. Submit the paper's 6-tuples: (executor, d, w, n_max, n_min, cmd).
+    let lr = master.submit(AppSpec {
+        executor: Engine::MxNet,
+        demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+        weight: 1,
+        n_max: 16,
+        n_min: 1,
+        cmd: ["lr".into(), "lr".into()],
+    })?;
+    println!("submitted {lr}: LR gets {} containers (alone in the cluster)", master.containers_of(lr));
+
+    let mf = master.submit(AppSpec {
+        executor: Engine::TensorFlow,
+        demand: Res::cpu_gpu_ram(2.0, 0.0, 6.0),
+        weight: 2,
+        n_max: 16,
+        n_min: 1,
+        cmd: ["mf".into(), "mf".into()],
+    })?;
+    println!(
+        "submitted {mf}: optimizer re-partitioned -> LR {} / MF {} containers, \
+         {} adjustment(s), cluster utilization {:.2}",
+        master.containers_of(lr),
+        master.containers_of(mf),
+        master.total_adjustments,
+        master.utilization()
+    );
+
+    // 4. Train both for a few BSP rounds (each container = 1 worker slot).
+    for round in 1..=5 {
+        let logs = master.train_round(5)?;
+        print!("round {round}:");
+        for (id, step, loss) in logs {
+            print!("  {id} step {step} loss {loss:.4}");
+        }
+        println!();
+    }
+
+    // 5. Completing LR frees its partition; MF scales up.
+    master.complete(lr)?;
+    println!(
+        "completed {lr} -> MF rescaled to {} containers (utilization {:.2})",
+        master.containers_of(mf),
+        master.utilization()
+    );
+    master.complete(mf)?;
+    println!("done");
+    Ok(())
+}

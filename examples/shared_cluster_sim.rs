@@ -1,0 +1,107 @@
+//! The paper's §V testbed experiment, end to end: Table II's 50 apps on the
+//! 21-server cluster for 24 simulated hours under the static baseline and
+//! Dorm-1/2/3, reporting the Figs 6–9 summary statistics.
+//!
+//! ```bash
+//! cargo run --release --example shared_cluster_sim [seed] [--fig1]
+//! ```
+
+use dorm::report;
+use dorm::sim::{fairness_reduction, mean_speedup, utilization_ratio, Experiment};
+use dorm::util::stats;
+use dorm::util::Rng;
+use dorm::workload::{app_duration_hours, task_duration_secs, DurationModel};
+
+fn fig1() {
+    println!("== Fig. 1: CDFs of distributed-ML app/task duration (model) ==");
+    let model = DurationModel::default();
+    let mut rng = Rng::new(1);
+    let apps: Vec<f64> = (0..20_000).map(|_| app_duration_hours(&model, &mut rng)).collect();
+    let tasks: Vec<f64> = (0..20_000).map(|_| task_duration_secs(&model, &mut rng)).collect();
+    let hours = [1.0, 3.0, 6.0, 12.0, 24.0, 48.0];
+    let secs = [0.5, 1.0, 1.5, 3.0, 10.0, 30.0];
+    let app_cdf = stats::ecdf(&apps, &hours);
+    let task_cdf = stats::ecdf(&tasks, &secs);
+    let rows: Vec<Vec<String>> = hours
+        .iter()
+        .zip(&app_cdf)
+        .zip(secs.iter().zip(&task_cdf))
+        .map(|((h, ac), (s, tc))| {
+            vec![format!("{h}h"), format!("{ac:.3}"), format!("{s}s"), format!("{tc:.3}")]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(&["app dur", "CDF", "task dur", "CDF"], &rows)
+    );
+    println!(
+        "paper anchors: P(app > 6h) ≈ 0.9 (got {:.3}); P(task < 1.5s) ≈ 0.5 (got {:.3})\n",
+        1.0 - app_cdf[2],
+        task_cdf[2]
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--fig1") {
+        fig1();
+        return;
+    }
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(17);
+
+    println!("== §V experiment: 50 apps / 20 slaves / 24 h (seed {seed}) ==");
+    let exp = Experiment::paper(seed);
+    let t0 = std::time::Instant::now();
+    let runs = exp.run_all();
+    println!("(4 systems simulated in {:.2?})\n", t0.elapsed());
+
+    let (baseline, dorms) = runs.split_first().unwrap();
+
+    // Fig. 6-8 summary table
+    let mut rows = Vec::new();
+    for run in &runs {
+        rows.push(vec![
+            run.label.clone(),
+            format!("{:.2}", run.metrics().utilization.mean_over(0.0, 5.0)),
+            format!("{:.2}", run.metrics().utilization.mean_over(0.0, 24.0)),
+            format!("{:.2}", run.metrics().fairness_loss.max()),
+            format!("{:.0}", run.metrics().adjustments.last().unwrap_or(0.0)),
+            format!("{}", run.outcome.completed),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["system", "util(0-5h)", "util(24h)", "max fairness loss", "adjusted apps", "completed"],
+            &rows
+        )
+    );
+
+    // headline ratios (paper: ×2.55/2.46/2.32 util, ×1.52 fairness, ×2.7 speedup)
+    let mut rows = Vec::new();
+    for d in dorms {
+        rows.push(vec![
+            d.label.clone(),
+            format!("{:.2}x", utilization_ratio(d, baseline, 5.0)),
+            format!("{:.2}x", fairness_reduction(d, baseline, 24.0)),
+            format!("{:.2}x", mean_speedup(d, baseline)),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["system", "utilization gain (first 5h)", "fairness-loss reduction", "mean speedup"],
+            &rows
+        )
+    );
+
+    // utilization chart (Fig. 6 shape)
+    let series: Vec<(&str, Vec<(f64, f64)>)> = runs
+        .iter()
+        .map(|r| (r.label.as_str(), r.metrics().utilization.resample(0.0, 24.0, 60)))
+        .collect();
+    let series_refs: Vec<(&str, &[(f64, f64)])> =
+        series.iter().map(|(l, s)| (*l, s.as_slice())).collect();
+    println!("Fig. 6 shape — resource utilization over 24h:");
+    println!("{}", report::ascii_chart(&series_refs, 14, 64));
+}

@@ -1,0 +1,116 @@
+"""AOT pipeline: lower every model's init/grad/apply to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's bundled XLA (xla_extension
+0.5.1) rejects (``proto.id() <= INT_MAX``).  The HLO text parser reassigns
+ids, so text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs, per model M in ``model.default_models()``:
+
+    artifacts/M_init.hlo.txt    (seed i32[])                    -> (params,)
+    artifacts/M_grad.hlo.txt    (params, x, y)                  -> (loss, grads)
+    artifacts/M_apply.hlo.txt   (params, gsum, count, lr)       -> (params,)
+    artifacts/manifest.kv       flat key=value metadata for the Rust loader
+
+Run once by ``make artifacts``; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dt(tag):
+    return jnp.int32 if tag == "i32" else jnp.float32
+
+
+def lower_model(spec, outdir, manifest, verbose=True):
+    n = spec.n_params
+    params = _sds((n,), jnp.float32)
+    x = _sds(spec.x_shape, _dt(spec.x_dtype))
+    y = _sds(spec.y_shape, _dt(spec.y_dtype))
+    scalar = _sds((), jnp.float32)
+    seed = _sds((), jnp.int32)
+
+    jobs = [
+        ("init", spec.init, (seed,)),
+        ("grad", spec.grad, (params, x, y)),
+        ("apply", spec.apply, (params, params, scalar, scalar)),
+    ]
+    files = []
+    for tag, fn, args in jobs:
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        fname = f"{spec.name}_{tag}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        files.append(fname)
+        if verbose:
+            print(f"  {fname}: {len(text)} chars ({time.time()-t0:.1f}s)",
+                  flush=True)
+
+    pfx = f"model.{spec.name}"
+    manifest[f"{pfx}.params"] = str(n)
+    manifest[f"{pfx}.x.shape"] = "x".join(map(str, spec.x_shape))
+    manifest[f"{pfx}.x.dtype"] = spec.x_dtype
+    manifest[f"{pfx}.y.shape"] = "x".join(map(str, spec.y_shape))
+    manifest[f"{pfx}.y.dtype"] = spec.y_dtype
+    for k, v in sorted(spec.meta.items()):
+        manifest[f"{pfx}.meta.{k}"] = str(v)
+    for tag, fname in zip(("init", "grad", "apply"), files):
+        manifest[f"{pfx}.artifact.{tag}"] = fname
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="",
+                    help="comma-separated subset (default: all)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    specs = model_lib.default_models()
+    if args.models:
+        want = set(args.models.split(","))
+        specs = [s for s in specs if s.name in want]
+        missing = want - {s.name for s in specs}
+        if missing:
+            sys.exit(f"unknown models: {sorted(missing)}")
+
+    manifest = {"manifest.version": "1",
+                "manifest.models": ",".join(s.name for s in specs)}
+    for spec in specs:
+        print(f"lowering {spec.name} (n_params={spec.n_params}) ...", flush=True)
+        lower_model(spec, args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.kv"), "w") as f:
+        for k in sorted(manifest):
+            f.write(f"{k}={manifest[k]}\n")
+    print(f"wrote {len(specs)} models -> {args.out}/manifest.kv")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""L1: flash-style causal attention Pallas kernel.
+
+``causal_attention(q, k, v)`` computes softmax(q @ k^T / sqrt(dh) + causal
+mask) @ v with the flash-attention recurrence: the KV sequence is processed
+in blocks with running row-max / row-sum statistics so the S x S score matrix
+is never materialized in HBM.
+
+TPU adaptation (DESIGN.md §2): flash attention on GPU keeps the running
+statistics in registers and communicates via warp shuffles; on TPU the
+per-(batch, head) Q tile and the (m, l, acc) statistics live in VMEM for the
+whole KV sweep, and the KV blocks are streamed HBM->VMEM by the grid
+pipeline.  The grid is (B*H, S/bq, S/bk) with the KV dimension innermost so
+the statistics scratch is revisited across KV steps.
+
+interpret=True only on this image (CPU PJRT cannot run Mosaic custom-calls).
+Oracle: ``ref.attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, scale, bq, bk, kv_steps):
+    """One (batch*head, q-block, kv-block) grid cell of the flash recurrence."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, dh]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, dh]
+    v = v_ref[0].astype(jnp.float32)                  # [bk, dh]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+
+    # Causal mask in global coordinates: query row qi*bq + r attends to
+    # kv column ki*bk + c iff global_q >= global_k.
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [bq]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    # Guard fully-masked rows (all NEG_INF) against exp overflow/nan.
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where((rows >= cols), p, 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ki == kv_steps - 1)
+    def _store():
+        # Rows with l == 0 cannot occur under the causal mask (row attends to
+        # itself), but keep the division safe anyway.
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    if dim <= preferred:
+        return dim
+    for cand in (preferred, 128, 64, 32, 16, 8, 4, 2):
+        if cand <= preferred and dim % cand == 0:
+            return cand
+    return 1
+
+
+def causal_attention_fwd(q, k, v, *, bq=128, bk=128):
+    """softmax(q k^T / sqrt(dh), causal) v via the flash recurrence.
+
+    q, k, v: [B, H, S, Dh]. Returns [B, H, S, Dh] in q.dtype.
+    """
+    if q.shape != k.shape or q.shape != v.shape or q.ndim != 4:
+        raise ValueError(f"expected q=k=v [B,H,S,Dh]; got {q.shape} {k.shape} {v.shape}")
+    b, h, s, dh = q.shape
+    bq = _pick_block(s, bq)
+    bk = _pick_block(s, bk)
+    grid = (b * h, s // bq, s // bk)
+    scale = 1.0 / math.sqrt(dh)
+
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, bq=bq, bk=bk, kv_steps=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),    # running row max m
+            pltpu.VMEM((bq,), jnp.float32),    # running row sum l
+            pltpu.VMEM((bq, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)
+
+
+@jax.custom_vjp
+def causal_attention(q, k, v):
+    """Differentiable causal attention: forward is the Pallas flash kernel;
+    backward recomputes through the jnp oracle (same numerics to kernel tol),
+    keeping the AOT'd backward pass free of unexpanded custom calls."""
+    return causal_attention_fwd(q, k, v)
+
+
+def _attn_ref(q, k, v):
+    from . import ref  # local import to avoid a cycle at module load
+    return ref.attention_ref(q, k, v)
+
+
+def _attn_vjp_fwd(q, k, v):
+    return causal_attention_fwd(q, k, v), (q, k, v)
+
+
+def _attn_vjp_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(_attn_ref, q, k, v)
+    return vjp(g)
+
+
+causal_attention.defvjp(_attn_vjp_fwd, _attn_vjp_bwd)
+
+
+def vmem_footprint_bytes(s, dh, bq=128, bk=128, in_bytes=4):
+    """Static VMEM footprint for the chosen tiling: resident Q tile +
+    statistics + accumulator, double-buffered streamed K/V tiles."""
+    bq, bk = _pick_block(s, bq), _pick_block(s, bk)
+    resident = bq * dh * in_bytes + bq * 4 * 2 + bq * dh * 4 + bq * dh * in_bytes
+    stream = 2 * (bk * dh * in_bytes) * 2
+    return resident + stream

@@ -1,0 +1,165 @@
+"""L1: tiled fused matmul Pallas kernel.
+
+``fused_matmul(x, w, b, activation)`` computes ``act(x @ w + b)`` as a single
+Pallas kernel.  This is the compute hot-spot shared by every L2 model in the
+repo: the LR forward, the MF score path (dense variant) and every projection
+/ MLP matmul inside the transformer LM.
+
+TPU adaptation (DESIGN.md §2).  The paper's workloads were written for GPU
+clusters (CUDA threadblocks staging tiles through shared memory).  Here the
+same insight — keep operand tiles resident in fast memory and stream the K
+dimension — is expressed the TPU way:
+
+* ``BlockSpec`` carries the HBM->VMEM schedule.  The grid is
+  ``(M/bm, N/bn, K/bk)`` and XLA/Mosaic double-buffers the HBM loads between
+  grid steps; on GPU this is the hand-written cp.async pipeline.
+* The (bm, bn) f32 accumulator lives in a VMEM scratch ref across the K
+  grid dimension (revisiting semantics), mirroring the MXU's native
+  accumulate-into-f32 path rather than WMMA fragment accumulation.
+* Tile sizes default to 128-multiples when the problem allows, matching the
+  128x128 MXU systolic array; small problems fall back to the full dim.
+
+The kernel MUST run with ``interpret=True`` on this image: real TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+Correctness is pinned against the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Activations the kernel can fuse. Keys are stable strings so the L2 model
+# code and the tests can enumerate them.
+_ACTIVATIONS = {
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred, biased to MXU-friendly
+    multiples.  Guarantees the grid exactly tiles the problem."""
+    if dim <= preferred:
+        return dim
+    for cand in (preferred, 128, 64, 32, 16, 8, 4, 2):
+        if cand <= preferred and dim % cand == 0:
+            return cand
+    return 1
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, act, k_steps):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (fastest) dimension so
+    the accumulator scratch is revisited across K steps."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU path: accumulate in f32 regardless of input dtype.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        out = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _ACTIVATIONS[act](out).astype(o_ref.dtype)
+
+
+def fused_matmul_fwd(x, w, b, activation="linear", *, bm=128, bn=128, bk=128):
+    """act(x @ w + b) as a Pallas kernel (forward only, no autodiff rule).
+
+    x: [M, K], w: [K, N], b: [N]. Returns [M, N] in x.dtype.
+    Tile sizes are clamped/snapped to divisors of the problem dims.
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"fused_matmul expects x[M,K], w[K,N], b[N]; got "
+                         f"{x.shape}, {w.shape}, {b.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape[0] != n:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+
+    kernel = functools.partial(_matmul_kernel, act=activation, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        # f32 VMEM accumulator tile, revisited across the K grid dim.
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_matmul(x, w, b, activation="linear"):
+    """Differentiable fused matmul: forward runs the Pallas kernel, backward
+    re-derives gradients with Pallas matmuls (dX = g @ Wt, dW = Xt @ g) plus
+    the activation's local derivative — so the backward pass exercises the
+    same L1 kernel."""
+    return fused_matmul_fwd(x, w, b, activation)
+
+
+def _vjp_fwd(x, w, b, activation):
+    z = fused_matmul_fwd(x, w, b, "linear")  # pre-activation, saved for bwd
+    y = _ACTIVATIONS[activation](z)
+    return y.astype(x.dtype), (x, w, z)
+
+
+def _vjp_bwd(activation, res, g):
+    x, w, z = res
+    # d act / d z evaluated via jax on the saved pre-activation.
+    _, act_vjp = jax.vjp(_ACTIVATIONS[activation], z)
+    (gz,) = act_vjp(g.astype(z.dtype))
+    zeros_n = jnp.zeros((w.shape[1],), jnp.float32)
+    zeros_k = jnp.zeros((w.shape[0],), jnp.float32)
+    dx = fused_matmul_fwd(gz, w.T, zeros_k, "linear").astype(x.dtype)
+    dw = fused_matmul_fwd(x.T, gz, zeros_n, "linear").astype(w.dtype)
+    db = jnp.sum(gz, axis=0).astype(z.dtype)
+    return dx, dw, db
+
+
+fused_matmul.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_footprint_bytes(m, k, n, bm=128, bn=128, bk=128, in_bytes=4):
+    """Static VMEM footprint estimate for the chosen tiling (DESIGN.md §7):
+    x tile + w tile + b tile + out tile + f32 accumulator, x2 for the
+    double-buffered HBM->VMEM pipeline on the streamed operands."""
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    stream = (bm * bk + bk * bn) * in_bytes * 2  # double-buffered
+    resident = bn * in_bytes + bm * bn * in_bytes + bm * bn * 4
+    return stream + resident
+
+
+def mxu_utilization_estimate(m, k, n, bm=128, bn=128, bk=128):
+    """Fraction of MXU 128x128x128 macro-ops doing useful work for this
+    tiling — 1.0 when every tile dim is a 128 multiple."""
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    eff = 1.0
+    for t in (bm, bn, bk):
+        eff *= min(t, 128) / 128.0 if t < 128 else 1.0
+    return eff

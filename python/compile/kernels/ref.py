@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: pytest asserts the kernels match
+these references across shape/dtype sweeps (hypothesis), and the kernels'
+custom-vjp backward passes are validated against jax.grad of these.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = {
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+def matmul_ref(x, w, b, activation="linear"):
+    """act(x @ w + b) with f32 accumulation, matching the kernel contract."""
+    z = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    z = z + b.astype(jnp.float32)
+    return _ACTIVATIONS[activation](z).astype(x.dtype)
+
+
+def attention_ref(q, k, v):
+    """Causal softmax(q k^T / sqrt(dh)) v over [B, H, S, Dh], f32 math."""
+    b, h, s, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)

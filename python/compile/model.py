@@ -1,0 +1,265 @@
+"""L2: the distributed-ML applications Dorm hosts, written in JAX.
+
+The paper evaluates Dorm on LR (Criteo), MF (MovieLens) and CNN image models
+(CaffeNet / VGG-16 / GoogLeNet / AlexNet / ResNet-50) running on MxNet /
+TensorFlow / Petuum / MPI-Caffe.  Here the same roles are filled by three
+model families implemented directly in JAX (DESIGN.md §1 substitution table):
+
+* ``lr``   — logistic regression (the Criteo-Log row of Table II),
+* ``mf``   — matrix factorization (the MovieLens row),
+* ``tfm``  — a decoder-only transformer LM standing in for the deep image
+             models (iterative, compute-bound, parameter-heavy).
+
+Every model follows the **flat-parameter convention** so the Rust parameter
+server is model-agnostic (DESIGN.md §5):
+
+    init(seed)                       -> params[N] f32
+    grad(params, x, y)               -> (loss scalar f32, grads[N] f32)
+    apply(params, gsum, count, lr)   -> params[N] f32   (SGD over summed grads)
+
+``grad`` computes the *sum-of-gradients scaled by local batch*, i.e. plain
+mean over the local batch; data-parallel workers each call ``grad`` on their
+shard and the PS averages with ``apply`` (gsum = sum of worker grads, count =
+number of workers).  The hot matmuls and the attention go through the L1
+Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.matmul import fused_matmul
+from .kernels.attention import causal_attention
+
+
+# --------------------------------------------------------------------------
+# Generic plumbing: pytree model -> flat-parameter init/grad/apply.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Everything the AOT pipeline and the Rust PS need to know."""
+    name: str
+    init: Callable          # (seed int32 scalar) -> params[N]
+    grad: Callable           # (params[N], x, y) -> (loss, grads[N])
+    apply: Callable           # (params[N], gsum[N], count, lr) -> params[N]
+    n_params: int
+    x_shape: tuple
+    x_dtype: str              # "f32" | "i32"
+    y_shape: tuple
+    y_dtype: str
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _flatten_model(name, init_pytree, loss_fn, example_x, example_y, meta=None):
+    """Wrap a pytree-params model into the flat-parameter convention."""
+    params0 = init_pytree(jax.random.PRNGKey(0))
+    flat0, unravel = ravel_pytree(params0)
+    n = flat0.shape[0]
+
+    def init(seed):
+        p = init_pytree(jax.random.PRNGKey(seed))
+        flat, _ = ravel_pytree(p)
+        return flat.astype(jnp.float32)
+
+    def grad(params, x, y):
+        def f(flat):
+            return loss_fn(unravel(flat), x, y)
+        loss, g = jax.value_and_grad(f)(params)
+        return loss.astype(jnp.float32), g.astype(jnp.float32)
+
+    def apply(params, gsum, count, lr):
+        return (params - lr * gsum / count).astype(jnp.float32)
+
+    return ModelSpec(
+        name=name, init=init, grad=grad, apply=apply, n_params=int(n),
+        x_shape=tuple(example_x.shape),
+        x_dtype="i32" if example_x.dtype == jnp.int32 else "f32",
+        y_shape=tuple(example_y.shape),
+        y_dtype="i32" if example_y.dtype == jnp.int32 else "f32",
+        meta=dict(meta or {}),
+    )
+
+
+# --------------------------------------------------------------------------
+# Logistic regression (Table II row 1: MxNet / Criteo-Log / LR).
+# --------------------------------------------------------------------------
+
+def make_lr(d: int = 64, batch: int = 256) -> ModelSpec:
+    """Binary logistic regression over dense features.
+
+    The forward matmul runs on the L1 fused-matmul kernel (activation fused
+    at the kernel level would skip the numerically-stable xent path, so the
+    kernel emits logits and the loss uses log-sigmoid directly).
+    """
+
+    def init_pytree(key):
+        kw, = jax.random.split(key, 1)
+        return {
+            "w": jax.random.normal(kw, (d, 1), jnp.float32) * 0.01,
+            "b": jnp.zeros((1,), jnp.float32),
+        }
+
+    def loss_fn(p, x, y):
+        logits = fused_matmul(x, p["w"], p["b"], "linear")[:, 0]
+        # mean binary cross-entropy, stable form
+        return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                        jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+    ex_x = jnp.zeros((batch, d), jnp.float32)
+    ex_y = jnp.zeros((batch,), jnp.float32)
+    return _flatten_model("lr", init_pytree, loss_fn, ex_x, ex_y,
+                          meta={"d": d, "batch": batch})
+
+
+# --------------------------------------------------------------------------
+# Matrix factorization (Table II row 2: TensorFlow / MovieLens / MF).
+# --------------------------------------------------------------------------
+
+def make_mf(n_users: int = 512, n_items: int = 256, k: int = 16,
+            batch: int = 256, reg: float = 1e-4) -> ModelSpec:
+    """Rating-prediction MF: r_ui ~ <U_u, V_i> + bias terms, L2-regularized
+    squared error.  Gradients w.r.t. the embedding tables flow through
+    gather -> autodiff emits the scatter-add the PS framework expects."""
+
+    def init_pytree(key):
+        ku, ki = jax.random.split(key)
+        return {
+            "u": jax.random.normal(ku, (n_users, k), jnp.float32) * 0.1,
+            "v": jax.random.normal(ki, (n_items, k), jnp.float32) * 0.1,
+            "bu": jnp.zeros((n_users,), jnp.float32),
+            "bv": jnp.zeros((n_items,), jnp.float32),
+            "mu": jnp.zeros((), jnp.float32),
+        }
+
+    def loss_fn(p, x, y):
+        uu = jnp.take(p["u"], x[:, 0], axis=0)
+        vv = jnp.take(p["v"], x[:, 1], axis=0)
+        pred = (uu * vv).sum(-1) + jnp.take(p["bu"], x[:, 0]) \
+            + jnp.take(p["bv"], x[:, 1]) + p["mu"]
+        mse = jnp.mean((pred - y) ** 2)
+        l2 = reg * ((uu ** 2).sum(-1).mean() + (vv ** 2).sum(-1).mean())
+        return mse + l2
+
+    ex_x = jnp.zeros((batch, 2), jnp.int32)
+    ex_y = jnp.zeros((batch,), jnp.float32)
+    return _flatten_model("mf", init_pytree, loss_fn, ex_x, ex_y,
+                          meta={"n_users": n_users, "n_items": n_items,
+                                "k": k, "batch": batch})
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (stand-in for the deep image models of Table II).
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TfmConfig:
+    vocab: int = 1024
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq: int = 64
+    batch: int = 8
+
+    @property
+    def d_head(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self):
+        return 4 * self.d_model
+
+
+def make_tfm(cfg: TfmConfig = TfmConfig(), name: str = "tfm") -> ModelSpec:
+    """Pre-LN decoder-only LM.  QKV/out/MLP projections run on the L1 fused
+    matmul kernel; attention runs on the L1 flash kernel."""
+
+    def init_pytree(key):
+        keys = jax.random.split(key, 3 + 6 * cfg.n_layers)
+        it = iter(keys)
+        s = 0.02
+        p = {
+            "embed": jax.random.normal(next(it), (cfg.vocab, cfg.d_model)) * s,
+            "pos": jax.random.normal(next(it), (cfg.seq, cfg.d_model)) * s,
+            "unembed": jax.random.normal(next(it), (cfg.d_model, cfg.vocab)) * s,
+            "lnf": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+            "layers": [],
+        }
+        for _ in range(cfg.n_layers):
+            p["layers"].append({
+                "ln1": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+                "wqkv": jax.random.normal(next(it), (cfg.d_model, 3 * cfg.d_model)) * s,
+                "bqkv": jnp.zeros((3 * cfg.d_model,)),
+                "wo": jax.random.normal(next(it), (cfg.d_model, cfg.d_model)) * s,
+                "bo": jnp.zeros((cfg.d_model,)),
+                "ln2": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+                "w1": jax.random.normal(next(it), (cfg.d_model, cfg.d_ff)) * s,
+                "b1": jnp.zeros((cfg.d_ff,)),
+                "w2": jax.random.normal(next(it), (cfg.d_ff, cfg.d_model)) * s,
+                "b2": jnp.zeros((cfg.d_model,)),
+            })
+        return jax.tree.map(lambda a: a.astype(jnp.float32), p)
+
+    def layernorm(h, ln):
+        mu = h.mean(-1, keepdims=True)
+        var = ((h - mu) ** 2).mean(-1, keepdims=True)
+        return (h - mu) * jax.lax.rsqrt(var + 1e-5) * ln["g"] + ln["b"]
+
+    def block(h, lp):
+        b, s, d = h.shape
+        x = layernorm(h, lp["ln1"])
+        qkv = fused_matmul(x.reshape(b * s, d), lp["wqkv"], lp["bqkv"], "linear")
+        qkv = qkv.reshape(b, s, 3, cfg.n_heads, cfg.d_head)
+        q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))
+        attn = causal_attention(q, k, v)                # [b, h, s, dh]
+        attn = attn.transpose(0, 2, 1, 3).reshape(b * s, d)
+        h = h + fused_matmul(attn, lp["wo"], lp["bo"], "linear").reshape(b, s, d)
+        x = layernorm(h, lp["ln2"])
+        y = fused_matmul(x.reshape(b * s, d), lp["w1"], lp["b1"], "gelu")
+        y = fused_matmul(y, lp["w2"], lp["b2"], "linear")
+        return h + y.reshape(b, s, d)
+
+    def loss_fn(p, x, y):
+        b, s = x.shape
+        h = jnp.take(p["embed"], x, axis=0) + p["pos"][None, :s]
+        for lp in p["layers"]:
+            h = block(h, lp)
+        h = layernorm(h, p["lnf"])
+        logits = fused_matmul(h.reshape(b * s, cfg.d_model), p["unembed"],
+                              jnp.zeros((cfg.vocab,), jnp.float32), "linear")
+        logits = logits.reshape(b, s, cfg.vocab)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        return nll.mean()
+
+    ex_x = jnp.zeros((cfg.batch, cfg.seq), jnp.int32)
+    ex_y = jnp.zeros((cfg.batch, cfg.seq), jnp.int32)
+    return _flatten_model(name, init_pytree, loss_fn, ex_x, ex_y,
+                          meta={"vocab": cfg.vocab, "d_model": cfg.d_model,
+                                "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+                                "seq": cfg.seq, "batch": cfg.batch})
+
+
+# --------------------------------------------------------------------------
+# Registry used by aot.py and the tests.
+# --------------------------------------------------------------------------
+
+def default_models() -> list:
+    """The artifact set built by `make artifacts`."""
+    return [
+        make_lr(),
+        make_mf(),
+        make_tfm(TfmConfig(), "tfm"),
+        # The E2E driver's model: largest LM that trains a few hundred steps
+        # in minutes on this 1-core image. Scales to 100M+ by editing the
+        # config; see EXPERIMENTS.md §E2E.
+        make_tfm(TfmConfig(vocab=4096, d_model=256, n_layers=4, n_heads=8,
+                           seq=64, batch=8), "tfm_e2e"),
+    ]

@@ -1,0 +1,52 @@
+"""AOT pipeline tests: manifest integrity and HLO-text invariants."""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile.model import make_lr
+
+import jax
+import jax.numpy as jnp
+
+
+def test_to_hlo_text_structure():
+    spec = make_lr(d=4, batch=8)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    text = aot.to_hlo_text(jax.jit(spec.init).lower(seed))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # tuple-rooted (return_tuple=True) so the Rust side can to_tuple1()
+    assert "(f32[9]" in text.replace(" ", "")[:20000] or "tuple" in text
+
+
+def test_lower_model_writes_artifacts(tmp_path):
+    spec = make_lr(d=4, batch=8)
+    manifest = {}
+    aot.lower_model(spec, str(tmp_path), manifest, verbose=False)
+    for tag in ("init", "grad", "apply"):
+        fname = manifest[f"model.lr.artifact.{tag}"]
+        path = tmp_path / fname
+        assert path.exists() and path.stat().st_size > 0
+        assert "HloModule" in path.read_text()[:200]
+    assert manifest["model.lr.params"] == "5"
+    assert manifest["model.lr.x.shape"] == "8x4"
+    assert manifest["model.lr.x.dtype"] == "f32"
+    assert manifest["model.lr.meta.d"] == "4"
+
+
+def test_main_subset_and_manifest(tmp_path, monkeypatch):
+    import compile.model as m
+
+    monkeypatch.setattr(m, "default_models", lambda: [make_lr(d=4, batch=8)])
+    aot.main(["--out", str(tmp_path), "--models", "lr"])
+    kv = dict(line.strip().split("=", 1)
+              for line in open(tmp_path / "manifest.kv"))
+    assert kv["manifest.models"] == "lr"
+    assert kv["model.lr.artifact.grad"] == "lr_grad.hlo.txt"
+
+
+def test_main_rejects_unknown_model(tmp_path):
+    with pytest.raises(SystemExit):
+        aot.main(["--out", str(tmp_path), "--models", "nope"])

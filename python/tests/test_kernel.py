@@ -1,0 +1,176 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/dtypes for both Pallas kernels and asserts
+allclose against ref.py; explicit cases pin block-edge behaviour and the
+custom-vjp backward passes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import (causal_attention, causal_attention_fwd,
+                                       vmem_footprint_bytes as attn_vmem)
+from compile.kernels.matmul import (fused_matmul, fused_matmul_fwd,
+                                    mxu_utilization_estimate,
+                                    vmem_footprint_bytes as mm_vmem)
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------- matmul --
+
+ACTS = ["linear", "relu", "gelu", "sigmoid"]
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_matmul_matches_ref(act):
+    x, w, b = randn((16, 24)), randn((24, 8)), randn((8,))
+    got = fused_matmul_fwd(x, w, b, act, bm=8, bn=4, bk=8)
+    want = ref.matmul_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 3, 8, 16, 31]),
+    k=st.sampled_from([1, 4, 8, 24, 33]),
+    n=st.sampled_from([1, 2, 8, 17]),
+    act=st.sampled_from(ACTS),
+    bm=st.sampled_from([2, 4, 8, 128]),
+)
+def test_matmul_hypothesis_shapes(m, k, n, act, bm):
+    x, w, b = randn((m, k)), randn((k, n)), randn((n,))
+    got = fused_matmul_fwd(x, w, b, act, bm=bm, bn=bm, bk=bm)
+    want = ref.matmul_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_matmul_dtypes(dtype):
+    x, w, b = randn((8, 16), dtype), randn((16, 8), dtype), randn((8,), dtype)
+    got = fused_matmul_fwd(x, w, b, "linear", bm=4, bn=4, bk=4)
+    want = ref.matmul_ref(x, w, b, "linear")
+    assert got.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_matmul_grad_matches_ref_grad():
+    x, w, b = randn((8, 12)), randn((12, 6)), randn((6,))
+
+    def loss_kernel(x, w, b):
+        return (fused_matmul(x, w, b, "gelu") ** 2).sum()
+
+    def loss_ref(x, w, b):
+        return (ref.matmul_ref(x, w, b, "gelu") ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        fused_matmul_fwd(randn((4, 4)), randn((5, 4)), randn((4,)))
+    with pytest.raises(ValueError):
+        fused_matmul_fwd(randn((4,)), randn((4, 4)), randn((4,)))
+    with pytest.raises(ValueError):
+        fused_matmul_fwd(randn((4, 4)), randn((4, 4)), randn((4,)),
+                         activation="tanh")
+
+
+def test_matmul_under_jit():
+    x, w, b = randn((8, 8)), randn((8, 8)), randn((8,))
+    got = jax.jit(lambda x, w, b: fused_matmul(x, w, b, "relu"))(x, w, b)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w, b, "relu"),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_and_mxu_estimates_sane():
+    # 128-aligned problem should fully utilize the MXU model.
+    assert mxu_utilization_estimate(256, 256, 256) == 1.0
+    assert mxu_utilization_estimate(8, 8, 8) < 0.01
+    # footprint is monotone in the tile sizes and bounded by ~16MB VMEM
+    assert mm_vmem(128, 128, 128) < 16 * 2**20
+    assert attn_vmem(128, 64) < 16 * 2**20
+
+
+# ------------------------------------------------------------- attention --
+
+def test_attention_matches_ref_single_block():
+    q, k, v = (randn((2, 2, 8, 4)) for _ in range(3))
+    got = causal_attention_fwd(q, k, v, bq=8, bk=8)
+    np.testing.assert_allclose(got, ref.attention_ref(q, k, v),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_matches_ref_blocked():
+    q, k, v = (randn((1, 2, 32, 8)) for _ in range(3))
+    got = causal_attention_fwd(q, k, v, bq=8, bk=4)
+    np.testing.assert_allclose(got, ref.attention_ref(q, k, v),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 3]),
+    s=st.sampled_from([4, 16, 32]),
+    dh=st.sampled_from([4, 8]),
+    bq=st.sampled_from([2, 4, 128]),
+)
+def test_attention_hypothesis(b, h, s, dh, bq):
+    q, k, v = (randn((b, h, s, dh)) for _ in range(3))
+    got = causal_attention_fwd(q, k, v, bq=bq, bk=bq)
+    np.testing.assert_allclose(got, ref.attention_ref(q, k, v),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_causality():
+    """Perturbing future keys/values must not change earlier outputs."""
+    q, k, v = (randn((1, 1, 16, 4)) for _ in range(3))
+    base = causal_attention_fwd(q, k, v, bq=4, bk=4)
+    k2 = k.at[:, :, 12:].set(randn((1, 1, 4, 4)) * 100)
+    v2 = v.at[:, :, 12:].set(randn((1, 1, 4, 4)) * 100)
+    pert = causal_attention_fwd(q, k2, v2, bq=4, bk=4)
+    np.testing.assert_allclose(base[:, :, :12], pert[:, :, :12],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[:, :, 12:], pert[:, :, 12:])
+
+
+def test_attention_grad_matches_ref_grad():
+    q, k, v = (randn((1, 2, 8, 4)) for _ in range(3))
+    gk = jax.grad(lambda *a: causal_attention(*a).sum(), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: ref.attention_ref(*a).sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        causal_attention_fwd(randn((2, 2, 8, 4)), randn((2, 2, 8, 5)),
+                             randn((2, 2, 8, 4)))
+    with pytest.raises(ValueError):
+        causal_attention_fwd(randn((8, 4)), randn((8, 4)), randn((8, 4)))
+
+
+def test_attention_bf16():
+    q, k, v = (randn((1, 1, 8, 4), jnp.bfloat16) for _ in range(3))
+    got = causal_attention_fwd(q, k, v, bq=4, bk=4)
+    want = ref.attention_ref(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,72 @@
+//! Fig. 1 reproduction: CDFs of distributed-ML application and task
+//! duration from the fitted production-trace model.
+//!
+//! Paper anchors (§I): ~90 % of applications run > 6 h; ~50 % of tasks
+//! take < 1.5 s.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use dorm::report;
+use dorm::util::{stats, Rng};
+use dorm::workload::{app_duration_hours, task_duration_secs, DurationModel};
+
+fn main() {
+    harness::banner("Fig. 1 — duration CDFs (production-trace model)");
+    let model = DurationModel::production();
+    let mut rng = Rng::new(1);
+    let n = 50_000;
+    let apps: Vec<f64> = (0..n).map(|_| app_duration_hours(&model, &mut rng)).collect();
+    let tasks: Vec<f64> = (0..n).map(|_| task_duration_secs(&model, &mut rng)).collect();
+
+    let hours = [0.5, 1.0, 2.0, 4.0, 6.0, 9.0, 12.0, 18.0, 24.0, 48.0];
+    let secs = [0.2, 0.5, 1.0, 1.5, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+    let app_cdf = stats::ecdf(&apps, &hours);
+    let task_cdf = stats::ecdf(&tasks, &secs);
+
+    let rows: Vec<Vec<String>> = hours
+        .iter()
+        .zip(&app_cdf)
+        .zip(secs.iter().zip(&task_cdf))
+        .map(|((h, a), (s, t))| {
+            vec![
+                format!("{h}"),
+                format!("{a:.3}"),
+                format!("{}", model.app_cdf(*h)).chars().take(5).collect(),
+                format!("{s}"),
+                format!("{t:.3}"),
+                format!("{}", model.task_cdf(*s)).chars().take(5).collect(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &["app h", "CDF emp", "CDF fit", "task s", "CDF emp", "CDF fit"],
+            &rows
+        )
+    );
+
+    harness::paper_row(
+        "P(app duration > 6 h)",
+        "~0.90",
+        &format!("{:.3}", 1.0 - app_cdf[4]),
+    );
+    harness::paper_row(
+        "P(task duration < 1.5 s)",
+        "~0.50",
+        &format!("{:.3}", task_cdf[3]),
+    );
+
+    let series_a: Vec<(f64, f64)> = hours.iter().zip(&app_cdf).map(|(&h, &c)| (h, c)).collect();
+    println!("\napp-duration CDF:\n{}", report::ascii_chart(&[("apps", &series_a)], 10, 60));
+
+    let _ = report::write_csv(
+        "fig1_app_cdf.csv",
+        &[("hours", hours.to_vec()), ("cdf", app_cdf)],
+    );
+    harness::bench_micro("sample 1k app durations", 3, 30, || {
+        let mut r = Rng::new(9);
+        let _: f64 = (0..1000).map(|_| app_duration_hours(&model, &mut r)).sum();
+    });
+}

@@ -1,0 +1,84 @@
+//! Fig. 6 reproduction: resource utilization of the testbed over 24 h —
+//! static baseline vs Dorm-1/2/3.
+//!
+//! Paper headline (§V-B-1): Dorm-1/2/3 increase utilization by ×2.55 /
+//! ×2.46 / ×2.32 on average in the first 5 hours.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use dorm::baselines::IaasPolicy;
+use dorm::config::DormConfig;
+use dorm::report;
+use dorm::sim::{headline_over_seeds, utilization_ratio, Experiment};
+
+fn main() {
+    harness::banner("Fig. 6 — resource utilization over 24 h (50 apps, 20 slaves)");
+    let t0 = std::time::Instant::now();
+    let exp = Experiment::paper(17);
+    let runs = exp.run_all();
+    println!("  (4 systems x 24 h simulated in {:.2?})", t0.elapsed());
+    let (baseline, dorms) = runs.split_first().unwrap();
+
+    let mut rows = Vec::new();
+    for r in &runs {
+        rows.push(vec![
+            r.label.clone(),
+            format!("{:.2}", r.metrics().utilization.mean_over(0.0, 5.0)),
+            format!("{:.2}", r.metrics().utilization.mean_over(0.0, 24.0)),
+            format!("{:.2}", r.metrics().utilization.max()),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(&["system", "mean util 0-5h", "mean util 0-24h", "peak"], &rows)
+    );
+
+    let paper = ["2.55x", "2.46x", "2.32x"];
+    for (d, p) in dorms.iter().zip(paper) {
+        harness::paper_row(
+            &format!("utilization gain vs baseline, first 5h ({})", d.label),
+            p,
+            &format!("{:.2}x", utilization_ratio(d, baseline, 5.0)),
+        );
+    }
+
+    // IaaS comparator (§II-B): engine-partitioned virtual clusters
+    let iaas = exp.run(&mut IaasPolicy::proportional(20));
+    harness::paper_row(
+        "IaaS (engine-partitioned) mean util 0-24h vs static",
+        "worse (no flow between engines)",
+        &format!(
+            "{:.2} vs {:.2}",
+            iaas.metrics().utilization.mean_over(0.0, 24.0),
+            baseline.metrics().utilization.mean_over(0.0, 24.0)
+        ),
+    );
+
+    // multi-seed robustness of the headline (3 seeds)
+    let agg = headline_over_seeds(DormConfig::DORM3, &[17, 23, 42]);
+    harness::paper_row(
+        "Dorm-3 utilization gain, 3 seeds (mean±std)",
+        "2.32x",
+        &format!("{:.2}x ± {:.2}", agg[0].0, agg[0].1),
+    );
+
+    // the Fig. 6 curves
+    let series: Vec<(String, Vec<(f64, f64)>)> = runs
+        .iter()
+        .map(|r| (r.label.clone(), r.metrics().utilization.resample(0.0, 24.0, 64)))
+        .collect();
+    let refs: Vec<(&str, &[(f64, f64)])> =
+        series.iter().map(|(l, s)| (l.as_str(), s.as_slice())).collect();
+    println!("\n{}", report::ascii_chart(&refs, 14, 64));
+
+    for (label, s) in &series {
+        let _ = report::write_csv(
+            &format!("fig6_{}.csv", label.replace(['(', ')', '=', ',', '.'], "_")),
+            &[
+                ("hours", s.iter().map(|&(t, _)| t).collect()),
+                ("utilization", s.iter().map(|&(_, u)| u).collect()),
+            ],
+        );
+    }
+}

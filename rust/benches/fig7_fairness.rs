@@ -1,0 +1,63 @@
+//! Fig. 7 reproduction: fairness loss of the testbed over 24 h.
+//!
+//! Paper headlines (§V-B-2): Dorm bounds fairness loss by θ₁·2m (Dorm-1
+//! within ~1.5, Dorm-3 within ~0.6); Dorm-3 reduces fairness loss ×1.52
+//! vs the baseline on average.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use dorm::report;
+use dorm::sim::{fairness_reduction, Experiment};
+
+fn main() {
+    harness::banner("Fig. 7 — fairness loss over 24 h");
+    let exp = Experiment::paper(17);
+    let runs = exp.run_all();
+    let (baseline, dorms) = runs.split_first().unwrap();
+
+    let mut rows = Vec::new();
+    for r in &runs {
+        rows.push(vec![
+            r.label.clone(),
+            format!("{:.3}", r.metrics().fairness_loss.mean_over(0.0, 24.0)),
+            format!("{:.3}", r.metrics().fairness_loss.max()),
+        ]);
+    }
+    println!("{}", report::table(&["system", "mean loss", "max loss"], &rows));
+
+    harness::paper_row(
+        "Dorm-1 max fairness loss (θ₁=0.2 -> bound 1.2)",
+        "<= ~1.5",
+        &format!("{:.2}", dorms[0].metrics().fairness_loss.max()),
+    );
+    harness::paper_row(
+        "Dorm-3 max fairness loss (θ₁=0.1 -> bound 0.6)",
+        "<= ~0.6",
+        &format!("{:.2}", dorms[2].metrics().fairness_loss.max()),
+    );
+    harness::paper_row(
+        "Dorm-3 fairness-loss reduction vs baseline",
+        "1.52x",
+        &format!("{:.2}x", fairness_reduction(&dorms[2], baseline, 24.0)),
+    );
+    harness::paper_row(
+        "Dorm-1 tolerates more loss than Dorm-3",
+        "yes",
+        if dorms[0].metrics().fairness_loss.max()
+            >= dorms[2].metrics().fairness_loss.max() - 1e-9
+        {
+            "yes"
+        } else {
+            "no"
+        },
+    );
+
+    let series: Vec<(String, Vec<(f64, f64)>)> = runs
+        .iter()
+        .map(|r| (r.label.clone(), r.metrics().fairness_loss.resample(0.0, 24.0, 64)))
+        .collect();
+    let refs: Vec<(&str, &[(f64, f64)])> =
+        series.iter().map(|(l, s)| (l.as_str(), s.as_slice())).collect();
+    println!("\n{}", report::ascii_chart(&refs, 12, 64));
+}

@@ -1,0 +1,80 @@
+//! Fig. 8 reproduction: resource-adjustment overhead over 24 h.
+//!
+//! Paper headlines (§V-B-3): Dorm-2/Dorm-3 kill+resume at most 2 apps per
+//! adjustment operation and affect ~80 / ~76 apps in total over 24 h; the
+//! bound ⌈θ₂·|Aᵗ∩Aᵗ⁻¹|⌉ holds per operation.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use dorm::report;
+use dorm::sim::Experiment;
+
+fn main() {
+    harness::banner("Fig. 8 — cumulative adjusted applications over 24 h");
+    let exp = Experiment::paper(17);
+    let runs = exp.run_all();
+
+    let mut rows = Vec::new();
+    for r in &runs {
+        let batches = &r.metrics().adjustment_batch_sizes;
+        let max_batch = batches.iter().copied().max().unwrap_or(0);
+        rows.push(vec![
+            r.label.clone(),
+            format!("{:.0}", r.metrics().adjustments.last().unwrap_or(0.0)),
+            format!("{}", batches.len()),
+            format!("{max_batch}"),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["system", "total adjusted apps", "adjust operations", "max apps/op"],
+            &rows
+        )
+    );
+
+    let d2 = &runs[2]; // dorm(t1=0.1,t2=0.2)
+    let d3 = &runs[3]; // dorm(t1=0.1,t2=0.1)
+    harness::paper_row(
+        "Dorm-2 total adjusted apps in 24 h",
+        "~80",
+        &format!("{:.0}", d2.metrics().adjustments.last().unwrap_or(0.0)),
+    );
+    harness::paper_row(
+        "Dorm-3 total adjusted apps in 24 h",
+        "~76",
+        &format!("{:.0}", d3.metrics().adjustments.last().unwrap_or(0.0)),
+    );
+    for d in [d2, d3] {
+        let max_batch = d
+            .metrics()
+            .adjustment_batch_sizes
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0);
+        harness::paper_row(
+            &format!("max apps killed+resumed per operation ({})", d.label),
+            "<= 2",
+            &format!("{max_batch}"),
+        );
+    }
+    harness::paper_row(
+        "Dorm-2 (θ₂=0.2) adjusts >= Dorm-3 (θ₂=0.1)",
+        "yes",
+        if d2.metrics().adjustments.last() >= d3.metrics().adjustments.last() {
+            "yes"
+        } else {
+            "no"
+        },
+    );
+
+    let series: Vec<(String, Vec<(f64, f64)>)> = runs
+        .iter()
+        .map(|r| (r.label.clone(), r.metrics().adjustments.resample(0.0, 24.0, 64)))
+        .collect();
+    let refs: Vec<(&str, &[(f64, f64)])> =
+        series.iter().map(|(l, s)| (l.as_str(), s.as_slice())).collect();
+    println!("\n{}", report::ascii_chart(&refs, 12, 64));
+}

@@ -1,0 +1,60 @@
+//! Fig. 9(a) reproduction: application speedup ratio vs the static
+//! baseline, per model type (matched pairs — same app under both systems).
+//!
+//! Paper headline (§V-B-4): Dorm-1/2/3 speed applications up by ×2.79 /
+//! ×2.73 / ×2.72 on average.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use dorm::report;
+use dorm::sim::{mean_speedup, speedup_by_tag, Experiment};
+
+fn main() {
+    harness::banner("Fig. 9a — application speedup vs static baseline");
+    let exp = Experiment::paper(17);
+    let runs = exp.run_all();
+    let (baseline, dorms) = runs.split_first().unwrap();
+
+    // per-tag table (the Fig. 9a bars), one column per Dorm config
+    let tags: Vec<String> = speedup_by_tag(&dorms[0], baseline)
+        .into_iter()
+        .map(|(t, _)| t)
+        .collect();
+    let mut rows = Vec::new();
+    for tag in &tags {
+        let mut row = vec![tag.clone()];
+        for d in dorms {
+            let by = speedup_by_tag(d, baseline);
+            let v = by
+                .iter()
+                .find(|(t, _)| t == tag)
+                .map(|&(_, s)| format!("{s:.2}x"))
+                .unwrap_or_else(|| "-".into());
+            row.push(v);
+        }
+        rows.push(row);
+    }
+    println!(
+        "{}",
+        report::table(&["model", "Dorm-1", "Dorm-2", "Dorm-3"], &rows)
+    );
+
+    let paper = ["2.79x", "2.73x", "2.72x"];
+    for (d, p) in dorms.iter().zip(paper) {
+        harness::paper_row(
+            &format!("mean speedup ({})", d.label),
+            p,
+            &format!("{:.2}x", mean_speedup(d, baseline)),
+        );
+    }
+    harness::paper_row(
+        "Dorm consistently faster than baseline",
+        "yes",
+        if dorms.iter().all(|d| mean_speedup(d, baseline) > 1.0) {
+            "yes"
+        } else {
+            "no"
+        },
+    );
+}

@@ -1,0 +1,37 @@
+//! Minimal benchmark harness (criterion is not in the vendored registry).
+//!
+//! Provides timed micro-benchmarks (warmup + N iterations, mean/p50/p99)
+//! and a uniform banner/report style for the figure benches, which are
+//! *reproduction* benches: they regenerate a paper table/figure and print
+//! paper-vs-measured rows.
+
+use std::time::Instant;
+
+/// Time `f` with warmup; returns (mean_us, p50_us, p99_us).
+pub fn bench_micro<F: FnMut()>(label: &str, warmup: u32, iters: u32, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p99 = samples[((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1)];
+    println!("  {label:<44} mean {mean:>10.1} us   p50 {p50:>10.1} us   p99 {p99:>10.1} us");
+    (mean, p50, p99)
+}
+
+/// Section banner.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// A paper-vs-measured row.
+pub fn paper_row(metric: &str, paper: &str, measured: &str) {
+    println!("  {metric:<52} paper: {paper:<16} measured: {measured}");
+}

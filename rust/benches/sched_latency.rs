@@ -1,0 +1,63 @@
+//! §II-C reproduction: per-task scheduling latency of task-level two-level
+//! sharing (Mesos-like) vs Dorm's local task placement.
+//!
+//! Paper measurement: "in a 100-node Mesos cluster ... the average
+//! scheduling latency per task is about 430 ms"; Dorm places tasks on the
+//! local TaskExecutor (§III-D) with no central round-trip.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use dorm::baselines::tasklevel::{dorm_local_placement_ms, TaskLevelModel};
+use dorm::report;
+use dorm::util::Rng;
+
+fn main() {
+    harness::banner("§II-C — task-level scheduling latency vs cluster size");
+    let mut rng = Rng::new(7);
+    let sizes = [10usize, 25, 50, 75, 100, 150];
+    let mut rows = Vec::new();
+    let mut means = Vec::new();
+    for &nodes in &sizes {
+        let m = TaskLevelModel { nodes, ..Default::default() };
+        let s = m.simulate(300, &mut rng);
+        means.push((nodes as f64, s.mean_ms));
+        rows.push(vec![
+            format!("{nodes}"),
+            format!("{:.2}", m.rho()),
+            m.analytic_mean_ms()
+                .map(|a| format!("{a:.0}"))
+                .unwrap_or_else(|| "sat".into()),
+            format!("{:.0}", s.mean_ms),
+            format!("{:.0}", s.p50_ms),
+            format!("{:.0}", s.p99_ms),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["nodes", "offered load ρ", "M/M/1 (ms)", "mean (ms)", "p50", "p99"],
+            &rows
+        )
+    );
+
+    let hundred = means.iter().find(|(n, _)| *n == 100.0).unwrap().1;
+    harness::paper_row(
+        "mean scheduling latency per task, 100 nodes",
+        "~430 ms",
+        &format!("{hundred:.0} ms"),
+    );
+    harness::paper_row(
+        "Dorm local task placement (§III-D)",
+        "~0 (no petition)",
+        &format!("{:.3} ms", dorm_local_placement_ms()),
+    );
+    harness::paper_row(
+        "latency ratio (task-level / Dorm)",
+        ">> 10^4",
+        &format!("{:.0}x", hundred / dorm_local_placement_ms()),
+    );
+
+    println!("\nlatency vs cluster size:");
+    println!("{}", report::ascii_chart(&[("mean ms", &means)], 10, 60));
+}

@@ -1,0 +1,114 @@
+//! Solver micro-benchmarks: the optimizer must decide well under the
+//! paper's implied budget (sub-second per event; also ≪ the 430 ms/task
+//! latency it criticizes Mesos for).  Tracks heuristic vs exact MILP
+//! latency and the end-to-end allocate() (counts + placement) path at
+//! paper scale (50 apps × 20 slaves).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::collections::BTreeMap;
+
+use dorm::app::AppId;
+use dorm::config::DormConfig;
+use dorm::optimizer::{build_count_milp, OptApp, Optimizer, SolveMode};
+use dorm::resources::Res;
+use dorm::solver::heuristic::{heuristic_solve, CountApp, CountProblem};
+use dorm::solver::{milp, MilpOptions};
+use dorm::util::Rng;
+use dorm::workload::table2_rows;
+
+fn paper_scale_problem(napps: usize, rng: &mut Rng) -> CountProblem {
+    let rows = table2_rows();
+    let apps: Vec<CountApp> = (0..napps)
+        .map(|_| {
+            let row = &rows[rng.below(rows.len() as u64) as usize];
+            CountApp {
+                demand: row.demand.clone(),
+                weight: row.weight as f64,
+                n_min: row.n_min,
+                n_max: row.n_max,
+                prev: (rng.f64() < 0.7).then(|| rng.range_u64(1, 8) as u32),
+            }
+        })
+        .collect();
+    CountProblem::new(apps, Res::cpu_gpu_ram(240.0, 5.0, 2560.0), 0.1, 0.1)
+}
+
+fn opt_apps(p: &CountProblem) -> Vec<OptApp> {
+    p.apps
+        .iter()
+        .enumerate()
+        .map(|(i, a)| OptApp {
+            id: AppId(i as u64),
+            demand: a.demand.clone(),
+            weight: a.weight,
+            n_min: a.n_min,
+            n_max: a.n_max,
+            prev: a.prev,
+            current: BTreeMap::new(),
+        })
+        .collect()
+}
+
+fn main() {
+    harness::banner("solver microbenchmarks (paper scale: 20 slaves, 240/5/2560)");
+    let mut rng = Rng::new(3);
+
+    for napps in [5usize, 15, 30, 50] {
+        let p = paper_scale_problem(napps, &mut rng);
+        harness::bench_micro(
+            &format!("heuristic_solve, {napps} apps"),
+            3,
+            30,
+            || {
+                let _ = heuristic_solve(&p);
+            },
+        );
+    }
+
+    for napps in [5usize, 10, 15] {
+        let p = paper_scale_problem(napps, &mut rng);
+        let warm = heuristic_solve(&p);
+        harness::bench_micro(
+            &format!("exact MILP (B&B, warm-started), {napps} apps"),
+            1,
+            5,
+            || {
+                let m = build_count_milp(&p);
+                let _ = milp::solve(
+                    &m,
+                    &MilpOptions {
+                        warm_start: warm
+                            .as_ref()
+                            .map(|c| dorm::optimizer::counts_to_point(&p, c)),
+                        ..Default::default()
+                    },
+                );
+            },
+        );
+    }
+
+    // end-to-end allocate(): counts + placement on 20 servers
+    let caps: Vec<Res> = (0..20)
+        .map(|i| Res::cpu_gpu_ram(12.0, if i < 5 { 1.0 } else { 0.0 }, 128.0))
+        .collect();
+    for napps in [15usize, 50] {
+        let p = paper_scale_problem(napps, &mut rng);
+        let apps = opt_apps(&p);
+        let opt = Optimizer::with_mode(DormConfig::DORM3, SolveMode::Heuristic);
+        let (mean, _, _) = harness::bench_micro(
+            &format!("optimizer.allocate (counts+placement), {napps} apps"),
+            3,
+            20,
+            || {
+                let _ = opt.allocate(&apps, &caps);
+            },
+        );
+        harness::paper_row(
+            &format!("allocation decision latency, {napps} apps"),
+            "sub-second (CPLEX)",
+            &format!("{:.2} ms", mean / 1000.0),
+        );
+    }
+}

@@ -1,0 +1,274 @@
+//! Checkpoint store: the "reliable storage system" of §III-C-2.
+//!
+//! The paper parks application state on Lustre between the kill and resume
+//! steps of the adjustment protocol; here the store is a directory of
+//! checksummed binary files (DESIGN.md §1).  Writes are atomic
+//! (tmp + rename) so a crash mid-save can never corrupt the latest good
+//! checkpoint, and loads verify an FNV-1a digest so corruption is detected
+//! rather than silently resumed from (failure-injection tested).
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::spec::AppId;
+
+const MAGIC: &[u8; 8] = b"DORMCKPT";
+const VERSION: u32 = 1;
+
+/// A point-in-time snapshot of a training application: the flat parameter
+/// vector (L2 convention, DESIGN.md §5) plus the iteration cursor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub app: AppId,
+    /// Training step the parameters correspond to.
+    pub step: u64,
+    /// Model name (key into `artifacts/manifest.kv`).
+    pub model: String,
+    /// Last recorded training loss (diagnostic only).
+    pub loss: f32,
+    /// Flat f32 parameters.
+    pub params: Vec<f32>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk format (little-endian, digest-terminated).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(64 + self.params.len() * 4);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.app.0.to_le_bytes());
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.model.len() as u32).to_le_bytes());
+        buf.extend_from_slice(self.model.as_bytes());
+        buf.extend_from_slice(&self.loss.to_le_bytes());
+        buf.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for p in &self.params {
+            buf.extend_from_slice(&p.to_le_bytes());
+        }
+        let digest = fnv1a(&buf);
+        buf.extend_from_slice(&digest.to_le_bytes());
+        buf
+    }
+
+    /// Parse + verify the digest.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            bail!("checkpoint truncated ({} bytes)", bytes.len());
+        }
+        let (body, digest_bytes) = bytes.split_at(bytes.len() - 8);
+        let expect = u64::from_le_bytes(digest_bytes.try_into().unwrap());
+        if fnv1a(body) != expect {
+            bail!("checkpoint digest mismatch (corrupt file)");
+        }
+        let mut cur = body;
+        let mut take = |n: usize| -> Result<&[u8]> {
+            if cur.len() < n {
+                bail!("checkpoint truncated");
+            }
+            let (head, rest) = cur.split_at(n);
+            cur = rest;
+            Ok(head)
+        };
+        if take(8)? != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let version = u32::from_le_bytes(take(4)?.try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let app = AppId(u64::from_le_bytes(take(8)?.try_into().unwrap()));
+        let step = u64::from_le_bytes(take(8)?.try_into().unwrap());
+        let name_len = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let model = String::from_utf8(take(name_len)?.to_vec())
+            .context("checkpoint model name not utf-8")?;
+        let loss = f32::from_le_bytes(take(4)?.try_into().unwrap());
+        let n = u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize;
+        let raw = take(n * 4)?;
+        let params = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Checkpoint { app, step, model, loss, params })
+    }
+}
+
+/// Directory-backed checkpoint store. One file per (app, step); `latest`
+/// resolution picks the highest step with a valid digest.
+#[derive(Clone, Debug)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointStore { dir })
+    }
+
+    fn path_for(&self, app: AppId, step: u64) -> PathBuf {
+        self.dir.join(format!("{app}.step{step:012}.ckpt"))
+    }
+
+    /// Atomic save: write to a tmp file, fsync, rename into place.
+    pub fn save(&self, ckpt: &Checkpoint) -> Result<PathBuf> {
+        let final_path = self.path_for(ckpt.app, ckpt.step);
+        let tmp = final_path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&ckpt.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &final_path)?;
+        Ok(final_path)
+    }
+
+    /// Load the newest valid checkpoint for `app`; corrupt files are
+    /// skipped (with a warning) so a bad latest falls back to the previous.
+    pub fn load_latest(&self, app: AppId) -> Result<Option<Checkpoint>> {
+        let mut candidates: Vec<PathBuf> = std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map_or(false, |n| {
+                        n.starts_with(&format!("{app}.step")) && n.ends_with(".ckpt")
+                    })
+            })
+            .collect();
+        candidates.sort(); // step is zero-padded -> lexicographic == numeric
+        for path in candidates.iter().rev() {
+            let mut bytes = Vec::new();
+            std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+            match Checkpoint::from_bytes(&bytes) {
+                Ok(c) => return Ok(Some(c)),
+                Err(e) => {
+                    log::warn!("skipping corrupt checkpoint {}: {e}", path.display());
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Remove all checkpoints for a completed app.
+    pub fn gc(&self, app: AppId) -> Result<usize> {
+        let mut removed = 0;
+        for e in std::fs::read_dir(&self.dir)? {
+            let p = e?.path();
+            if p.file_name()
+                .and_then(|n| n.to_str())
+                .map_or(false, |n| n.starts_with(&format!("{app}.step")))
+            {
+                std::fs::remove_file(&p)?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dorm_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample(app: u64, step: u64) -> Checkpoint {
+        Checkpoint {
+            app: AppId(app),
+            step,
+            model: "lr".into(),
+            loss: 0.693,
+            params: (0..257).map(|i| i as f32 * 0.5).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let c = sample(7, 42);
+        let got = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(got, c);
+    }
+
+    #[test]
+    fn detects_corruption_anywhere() {
+        let c = sample(1, 1);
+        let bytes = c.to_bytes();
+        for pos in [0, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0xFF;
+            assert!(
+                Checkpoint::from_bytes(&bad).is_err(),
+                "corruption at {pos} undetected"
+            );
+        }
+        assert!(Checkpoint::from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn store_save_load_latest() {
+        let store = CheckpointStore::new(tmpdir("latest")).unwrap();
+        store.save(&sample(3, 10)).unwrap();
+        store.save(&sample(3, 200)).unwrap();
+        store.save(&sample(4, 999)).unwrap(); // other app
+        let got = store.load_latest(AppId(3)).unwrap().unwrap();
+        assert_eq!(got.step, 200);
+        assert!(store.load_latest(AppId(99)).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_previous() {
+        let store = CheckpointStore::new(tmpdir("fallback")).unwrap();
+        store.save(&sample(5, 1)).unwrap();
+        let p = store.save(&sample(5, 2)).unwrap();
+        // corrupt the newest file
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, bytes).unwrap();
+        let got = store.load_latest(AppId(5)).unwrap().unwrap();
+        assert_eq!(got.step, 1, "should fall back to the older checkpoint");
+    }
+
+    #[test]
+    fn gc_removes_all_for_app() {
+        let store = CheckpointStore::new(tmpdir("gc")).unwrap();
+        store.save(&sample(6, 1)).unwrap();
+        store.save(&sample(6, 2)).unwrap();
+        store.save(&sample(7, 1)).unwrap();
+        assert_eq!(store.gc(AppId(6)).unwrap(), 2);
+        assert!(store.load_latest(AppId(6)).unwrap().is_none());
+        assert!(store.load_latest(AppId(7)).unwrap().is_some());
+    }
+
+    #[test]
+    fn big_params_roundtrip() {
+        let mut c = sample(8, 3);
+        c.params = (0..100_000).map(|i| (i as f32).sin()).collect();
+        let got = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(got.params.len(), 100_000);
+        assert_eq!(got, c);
+    }
+}

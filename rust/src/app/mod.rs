@@ -1,0 +1,9 @@
+//! Applications: the paper's submission 6-tuple (§III-B), the lifecycle
+//! state machine driven by the adjustment protocol (§III-C-2), and the
+//! checkpoint store that makes kill/resume safe.
+
+mod checkpoint;
+mod spec;
+
+pub use checkpoint::{Checkpoint, CheckpointStore};
+pub use spec::{AppId, AppSpec, AppState, Engine};

@@ -1,0 +1,221 @@
+//! The application 6-tuple and lifecycle state machine.
+//!
+//! §III-B: a submission is `(executor, d, w, n_max, n_min, cmd)`.  Here
+//! `executor` is an [`Engine`] (the distributed-ML system the app runs on —
+//! in this repo every engine is served by the in-crate PS runtime, see
+//! DESIGN.md §1), `d` a per-container [`Res`] demand, `w` an integer
+//! weight, and `cmd` names the model artifact to start/resume with.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::resources::Res;
+
+/// Opaque application identifier assigned by the master at submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AppId(pub u64);
+
+impl fmt::Display for AppId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "app{}", self.0)
+    }
+}
+
+/// The computation engine requested by the user (paper Table II column 1).
+/// All four production systems are substituted by the in-crate PS runtime;
+/// the enum is kept so workloads round-trip the paper's submission tuples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Engine {
+    MxNet,
+    TensorFlow,
+    Petuum,
+    MpiCaffe,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Result<Engine> {
+        Ok(match s {
+            "MxNet" | "mxnet" => Engine::MxNet,
+            "TensorFlow" | "tensorflow" => Engine::TensorFlow,
+            "Petuum" | "petuum" => Engine::Petuum,
+            "MPI-Caffe" | "mpi-caffe" | "caffe" => Engine::MpiCaffe,
+            other => bail!("unknown engine {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::MxNet => "MxNet",
+            Engine::TensorFlow => "TensorFlow",
+            Engine::Petuum => "Petuum",
+            Engine::MpiCaffe => "MPI-Caffe",
+        }
+    }
+}
+
+/// The §III-B submission 6-tuple.
+#[derive(Clone, Debug)]
+pub struct AppSpec {
+    pub executor: Engine,
+    /// Per-container resource demand `d`.
+    pub demand: Res,
+    /// Weight `w` (≥ 1).
+    pub weight: u32,
+    pub n_max: u32,
+    pub n_min: u32,
+    /// `cmd`: [start, resume] — here the model name in `artifacts/manifest.kv`
+    /// plus free-form args (the PS runtime interprets them).
+    pub cmd: [String; 2],
+}
+
+impl AppSpec {
+    /// Validate the tuple the way DormMaster does at submission time.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_min == 0 {
+            bail!("n_min must be >= 1 (an admitted app needs a partition)");
+        }
+        if self.n_min > self.n_max {
+            bail!("n_min {} > n_max {}", self.n_min, self.n_max);
+        }
+        if self.weight == 0 {
+            bail!("weight must be >= 1");
+        }
+        if self.demand.is_zero() {
+            bail!("demand must be non-zero");
+        }
+        if self.demand.0.iter().any(|&d| d < 0.0) {
+            bail!("demand must be non-negative");
+        }
+        Ok(())
+    }
+}
+
+/// Lifecycle states (§III-C-2 adjustment protocol + Fig. 5).
+///
+/// ```text
+/// Submitted -> Pending -> Running <-> Checkpointing -> Killed -> Resuming -> Running
+///                             \-> Completed
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppState {
+    /// Accepted, waiting for the optimizer to admit it.
+    Pending,
+    /// Tasks executing on its partition.
+    Running,
+    /// State being saved to reliable storage prior to a kill.
+    Checkpointing,
+    /// Containers destroyed; state lives only in the checkpoint store.
+    Killed,
+    /// Containers recreated; restoring from checkpoint.
+    Resuming,
+    Completed,
+    /// Terminal failure (checkpoint corruption, repeated crashes).
+    Failed,
+}
+
+impl AppState {
+    /// Legal transitions of the lifecycle state machine; the master refuses
+    /// anything else (tested below and fuzzed in the master tests).
+    pub fn can_transition(self, to: AppState) -> bool {
+        use AppState::*;
+        matches!(
+            (self, to),
+            (Pending, Running)
+                | (Pending, Failed)
+                | (Running, Checkpointing)
+                | (Running, Completed)
+                | (Running, Failed)
+                | (Checkpointing, Killed)
+                | (Checkpointing, Failed)
+                | (Killed, Resuming)
+                | (Killed, Failed)
+                | (Resuming, Running)
+                | (Resuming, Failed)
+        )
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, AppState::Completed | AppState::Failed)
+    }
+
+    /// Does the app currently hold cluster resources?
+    pub fn holds_resources(self) -> bool {
+        matches!(
+            self,
+            AppState::Running | AppState::Checkpointing | AppState::Resuming
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> AppSpec {
+        AppSpec {
+            executor: Engine::MpiCaffe,
+            demand: Res::cpu_gpu_ram(1.0, 1.0, 8.0),
+            weight: 2,
+            n_max: 5,
+            n_min: 1,
+            cmd: ["start.sh".into(), "resume.sh".into()],
+        }
+    }
+
+    #[test]
+    fn paper_example_tuple_validates() {
+        // §III-C-3 example: MPI-Caffe, ⟨1 CPU, 1 GPU, 8GB⟩, w=2, max 5, min 1
+        assert!(spec().validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_tuples_rejected() {
+        let mut s = spec();
+        s.n_min = 0;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.n_min = 6;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.weight = 0;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.demand = Res::zeros(3);
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.demand = Res(vec![-1.0, 0.0, 8.0]);
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        for e in [Engine::MxNet, Engine::TensorFlow, Engine::Petuum, Engine::MpiCaffe] {
+            assert_eq!(Engine::parse(e.name()).unwrap(), e);
+        }
+        assert!(Engine::parse("Spark").is_err());
+    }
+
+    #[test]
+    fn lifecycle_legal_paths() {
+        use AppState::*;
+        // the Fig. 5 adjustment cycle
+        let cycle = [Pending, Running, Checkpointing, Killed, Resuming, Running, Completed];
+        for w in cycle.windows(2) {
+            assert!(w[0].can_transition(w[1]), "{:?} -> {:?}", w[0], w[1]);
+        }
+        // illegal jumps
+        assert!(!Pending.can_transition(Killed));
+        assert!(!Running.can_transition(Resuming));
+        assert!(!Completed.can_transition(Running));
+        assert!(!Killed.can_transition(Running));
+    }
+
+    #[test]
+    fn terminal_and_resource_holding() {
+        use AppState::*;
+        assert!(Completed.is_terminal() && Failed.is_terminal());
+        assert!(!Killed.holds_resources());
+        assert!(Running.holds_resources() && Checkpointing.holds_resources());
+    }
+}

@@ -1,0 +1,78 @@
+//! Two-level (Mesos-like) baseline in **app-level** sharing mode (§II-C):
+//! resource offers negotiated at admission, allocations static afterwards.
+//!
+//! Functionally this behaves like the Swarm baseline — the paper's point is
+//! precisely that app-level two-level sharing cannot adjust allocations —
+//! plus a non-zero admission latency for the offer round-trips.  The
+//! interesting two-level pathology (per-task scheduling latency) lives in
+//! [`super::tasklevel`].
+
+use crate::sim::{AllocationUpdate, CmsPolicy, SimCtx};
+
+use super::static_alloc::StaticPolicy;
+
+/// Mesos-like app-level offers: static allocations + admission latency.
+#[derive(Debug)]
+pub struct MesosAppLevelPolicy {
+    inner: StaticPolicy,
+    /// Offer negotiation rounds × round-trip latency, in hours.
+    pub admission_latency_hours: f64,
+}
+
+impl MesosAppLevelPolicy {
+    /// Default: 3 offer rounds × ~0.5 s ≈ 1.5 s of negotiation.
+    pub fn new() -> Self {
+        MesosAppLevelPolicy {
+            inner: StaticPolicy::new(),
+            admission_latency_hours: 1.5 / 3600.0,
+        }
+    }
+}
+
+impl Default for MesosAppLevelPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CmsPolicy for MesosAppLevelPolicy {
+    fn name(&self) -> String {
+        "mesos-app".into()
+    }
+
+    fn on_change(&mut self, ctx: &SimCtx) -> Option<AllocationUpdate> {
+        self.inner.on_change(ctx)
+    }
+
+    fn admission_latency_hours(&self) -> f64 {
+        self.admission_latency_hours
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, SimConfig};
+    use crate::sim::{run_sim, PerfModel};
+    use crate::workload::{table2_rows, WorkloadApp};
+
+    #[test]
+    fn behaves_like_static_plus_latency() {
+        let rows = table2_rows();
+        let wl = vec![WorkloadApp {
+            row: 0,
+            tag: "LR".into(),
+            submit_hours: 0.0,
+            duration_at_baseline_hours: 1.0,
+            baseline_n: 8,
+        }];
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 3.0, ..Default::default() };
+        let mut pol = MesosAppLevelPolicy::new();
+        let out = run_sim(&mut pol, &rows, &wl, &cfg, &sim, &PerfModel::default());
+        assert_eq!(out.completed, 1);
+        let dur = out.metrics.completions[0].1;
+        // 1h of work + ~1.5s admission latency
+        assert!(dur > 1.0 && dur < 1.001, "{dur}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Baseline cluster-management systems the paper compares against (§II-B/C,
+//! §V-A-4):
+//!
+//! * [`StaticPolicy`] — the Swarm baseline: fixed container counts per app
+//!   type ("8, 8, 4, 2, 2, 2, 3"), FIFO admission when the fixed partition
+//!   fits, never resized.
+//! * [`MesosAppLevelPolicy`] — two-level offers in app-level mode: same
+//!   static allocations, plus an offer-negotiation admission latency.
+//! * [`IaasPolicy`] — OpenStack-style engine-partitioned virtual clusters
+//!   (one app per engine at a time; capacity cannot flow between engines).
+//! * [`tasklevel`] — the task-level sharing model behind the paper's
+//!   "~430 ms average scheduling latency per task in a 100-node Mesos
+//!   cluster" measurement (§II-C), reproduced by `benches/sched_latency.rs`.
+
+mod iaas;
+mod mesos;
+mod static_alloc;
+pub mod tasklevel;
+
+pub use iaas::IaasPolicy;
+pub use mesos::MesosAppLevelPolicy;
+pub use static_alloc::StaticPolicy;

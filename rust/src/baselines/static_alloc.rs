@@ -1,0 +1,140 @@
+//! The Swarm baseline (§V-A-4): statically sized partitions.
+//!
+//! Each app type has a fixed container count; an arriving app is admitted
+//! iff its full fixed partition can be placed right now, otherwise it waits
+//! in FIFO order.  Allocations are never adjusted — exactly the "app-level
+//! static sharing" behaviour §II-C attributes to existing CMSs.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{place, PlacementInput, ServerId};
+use crate::sim::{AllocationUpdate, CmsPolicy, SimCtx};
+
+/// Swarm-like static allocator.
+#[derive(Debug, Default)]
+pub struct StaticPolicy {
+    _private: (),
+}
+
+impl StaticPolicy {
+    pub fn new() -> Self {
+        StaticPolicy { _private: () }
+    }
+}
+
+impl CmsPolicy for StaticPolicy {
+    fn name(&self) -> String {
+        "static".into()
+    }
+
+    fn on_change(&mut self, ctx: &SimCtx) -> Option<AllocationUpdate> {
+        let capacities: Vec<_> = ctx
+            .cluster
+            .servers
+            .iter()
+            .map(|s| s.capacity.clone())
+            .collect();
+
+        // running apps stay pinned exactly as they are
+        let mut assignment: BTreeMap<_, BTreeMap<ServerId, u32>> = BTreeMap::new();
+        let mut pinned: Vec<PlacementInput> = Vec::new();
+        for app in ctx.apps.values() {
+            if app.containers > 0 {
+                let cur = ctx.cluster.placement_of(app.id);
+                assignment.insert(app.id, cur.clone());
+                pinned.push(PlacementInput {
+                    app: app.id,
+                    demand: app.demand.clone(),
+                    target: app.containers,
+                    current: cur,
+                });
+            }
+        }
+
+        // pending apps admitted FIFO (by submit time) if the full fixed
+        // partition fits
+        let mut pending: Vec<_> = ctx
+            .apps
+            .values()
+            .filter(|a| a.containers == 0)
+            .collect();
+        pending.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap());
+
+        for app in pending {
+            let mut inputs = pinned.clone();
+            inputs.push(PlacementInput {
+                app: app.id,
+                demand: app.demand.clone(),
+                target: app.baseline_n,
+                current: BTreeMap::new(),
+            });
+            if let Some(p) = place(&inputs, &capacities) {
+                let placed = p.assignment[&app.id].clone();
+                pinned.push(PlacementInput {
+                    app: app.id,
+                    demand: app.demand.clone(),
+                    target: app.baseline_n,
+                    current: placed.clone(),
+                });
+                assignment.insert(app.id, placed);
+            }
+            // head-of-line blocking is intentional? No: Swarm admits any
+            // app that fits (others keep waiting), so continue scanning.
+        }
+
+        Some(AllocationUpdate { assignment, adjusted: vec![] })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, SimConfig};
+    use crate::sim::{run_sim, PerfModel};
+    use crate::workload::{table2_rows, WorkloadApp};
+
+    #[test]
+    fn admits_when_fits_queues_when_not() {
+        // cluster fits exactly one LR partition (8 x <2,0,8>)
+        let rows = table2_rows();
+        let wl = vec![
+            WorkloadApp { row: 0, tag: "LR".into(), submit_hours: 0.0,
+                duration_at_baseline_hours: 1.0, baseline_n: 8 },
+            WorkloadApp { row: 0, tag: "LR".into(), submit_hours: 0.1,
+                duration_at_baseline_hours: 1.0, baseline_n: 8 },
+        ];
+        let cfg = ClusterConfig::uniform(
+            2,
+            crate::resources::Res::cpu_gpu_ram(8.0, 0.0, 64.0),
+        );
+        let sim = SimConfig { horizon_hours: 5.0, ..Default::default() };
+        let mut pol = StaticPolicy::new();
+        let out = run_sim(&mut pol, &rows, &wl, &cfg, &sim, &PerfModel::default());
+        assert_eq!(out.completed, 2);
+        // second app had to wait for the first -> duration from submit
+        // is ~1.0 (first) and ~1.9 (second waited 0.9h)
+        let durs: Vec<f64> = out.metrics.completions.iter().map(|&(_, d)| d).collect();
+        assert!((durs[0] - 1.0).abs() < 1e-6);
+        assert!(durs[1] > 1.5, "queued app should wait, got {}", durs[1]);
+    }
+
+    #[test]
+    fn never_adjusts() {
+        let rows = table2_rows();
+        let wl: Vec<WorkloadApp> = (0..6)
+            .map(|i| WorkloadApp {
+                row: 0,
+                tag: "LR".into(),
+                submit_hours: i as f64 * 0.2,
+                duration_at_baseline_hours: 1.0,
+                baseline_n: 4,
+            })
+            .collect();
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 6.0, ..Default::default() };
+        let mut pol = StaticPolicy::new();
+        let out = run_sim(&mut pol, &rows, &wl, &cfg, &sim, &PerfModel::default());
+        assert_eq!(out.metrics.adjustments.last(), Some(0.0));
+        assert!(out.metrics.adjustment_batch_sizes.is_empty());
+    }
+}

@@ -1,0 +1,212 @@
+//! Task-level sharing model: the per-task scheduling-latency pathology the
+//! paper measures on Mesos (§II-C — "in a 100-node Mesos cluster ... the
+//! average scheduling latency per task is about 430 ms").
+//!
+//! In task-level mode every short ML task must petition the central
+//! resource manager for an offer before it can run.  That makes the
+//! manager an M/M/1-style bottleneck: with `n` busy nodes each finishing a
+//! ~1.5 s task (Fig. 1 median) and immediately requesting the next, the
+//! request rate approaches saturation and latency explodes.  This module
+//! gives both the analytic M/M/1 expectation and a discrete-event
+//! simulation (FIFO central queue + offer round-trips), which
+//! `benches/sched_latency.rs` sweeps over cluster size to regenerate the
+//! 430 ms observation and the Dorm comparison (local TaskScheduler ⇒ no
+//! central round-trip at all, §III-D).
+
+use crate::util::stats;
+use crate::util::Rng;
+
+/// Parameters of the central-scheduler queueing model.
+#[derive(Clone, Debug)]
+pub struct TaskLevelModel {
+    /// Nodes continuously producing tasks.
+    pub nodes: usize,
+    /// Mean task runtime in seconds (Fig. 1: ~1.5 s median).
+    pub mean_task_secs: f64,
+    /// Central manager's mean service time per scheduling request (offer
+    /// construction + placement decision), seconds.
+    pub service_secs: f64,
+    /// Network round-trip per offer negotiation, seconds.
+    pub rtt_secs: f64,
+}
+
+impl Default for TaskLevelModel {
+    fn default() -> Self {
+        TaskLevelModel {
+            nodes: 100,
+            mean_task_secs: 1.5,
+            // 20 ms to build/commit an offer: the manager caps at μ = 50
+            // grants/s while 100 free-running nodes would produce ≈ 66.7
+            // requests/s.  The closed loop equilibrates where throughput
+            // matches capacity: nodes/(task + W) = μ  ⇒  W = nodes/μ −
+            // task = 100/50 − 1.5 = 0.5 s — the paper's ~430 ms regime.
+            service_secs: 0.020,
+            rtt_secs: 0.002,
+        }
+    }
+}
+
+/// Latency statistics from a run.
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub utilization: f64,
+}
+
+impl TaskLevelModel {
+    /// Offered load ρ = λ/μ of the central manager.
+    pub fn rho(&self) -> f64 {
+        let lambda = self.nodes as f64 / self.mean_task_secs;
+        lambda * self.service_secs
+    }
+
+    /// Analytic M/M/1 mean sojourn (queue + service) + RTT, in ms.
+    /// Returns `None` at or beyond saturation.
+    pub fn analytic_mean_ms(&self) -> Option<f64> {
+        let lambda = self.nodes as f64 / self.mean_task_secs;
+        let mu = 1.0 / self.service_secs;
+        if lambda >= mu {
+            return None;
+        }
+        Some(((1.0 / (mu - lambda)) + self.rtt_secs) * 1000.0)
+    }
+
+    /// DES of the closed system: each node loops task -> request -> wait
+    /// for grant -> next task.  Exponential task and service times.
+    pub fn simulate(&self, tasks_per_node: usize, rng: &mut Rng) -> LatencyStats {
+        #[derive(PartialEq, Clone, Debug)]
+        enum Ev {
+            TaskDone(usize),
+            GrantReady,
+        }
+        let mut q: crate::sim::EventQueue<Ev> = crate::sim::EventQueue::new();
+        // manager FIFO queue of (node, enqueue_time)
+        let mut fifo: std::collections::VecDeque<(usize, f64)> =
+            std::collections::VecDeque::new();
+        let mut busy_until = 0.0f64;
+        let mut latencies: Vec<f64> = Vec::new();
+        let mut remaining = vec![tasks_per_node; self.nodes];
+        let mut busy_time = 0.0f64;
+
+        for node in 0..self.nodes {
+            // stagger initial task completions
+            q.schedule(rng.exponential(self.mean_task_secs), Ev::TaskDone(node));
+        }
+
+        while let Some(ev) = q.pop() {
+            let now = ev.time;
+            match ev.event {
+                Ev::TaskDone(node) => {
+                    if remaining[node] == 0 {
+                        continue;
+                    }
+                    remaining[node] -= 1;
+                    // node petitions the central manager (rtt/2 to arrive)
+                    fifo.push_back((node, now + self.rtt_secs / 2.0));
+                    // manager serves FIFO
+                    let start = busy_until.max(now + self.rtt_secs / 2.0);
+                    let service = rng.exponential(self.service_secs);
+                    busy_until = start + service;
+                    busy_time += service;
+                    q.schedule(busy_until, Ev::GrantReady);
+                }
+                Ev::GrantReady => {
+                    let Some((node, enq)) = fifo.pop_front() else { continue };
+                    // grant travels back rtt/2; task then starts
+                    let granted = now + self.rtt_secs / 2.0;
+                    latencies.push((granted - enq + self.rtt_secs / 2.0) * 1000.0);
+                    if remaining[node] > 0 {
+                        q.schedule(
+                            granted + rng.exponential(self.mean_task_secs),
+                            Ev::TaskDone(node),
+                        );
+                    }
+                }
+            }
+        }
+
+        let total_time = busy_until.max(1e-9);
+        LatencyStats {
+            mean_ms: stats::mean(&latencies),
+            p50_ms: stats::percentile(&latencies, 50.0),
+            p99_ms: stats::percentile(&latencies, 99.0),
+            utilization: busy_time / total_time,
+        }
+    }
+}
+
+/// Dorm's counterpart (§III-D): the TaskScheduler is local to the
+/// container, so placing a task costs only the local dispatch — no central
+/// round-trip.  Modeled as a constant few microseconds.
+pub fn dorm_local_placement_ms() -> f64 {
+    0.005
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_model_lands_in_papers_regime() {
+        let m = TaskLevelModel::default();
+        // open-loop saturated (that is the paper's point: short tasks
+        // overwhelm the central manager); the closed loop equilibrates at
+        // W = nodes/mu - task = 0.5 s of scheduling latency.
+        assert!(m.rho() > 1.0, "rho {}", m.rho());
+        assert!(m.analytic_mean_ms().is_none());
+        let mut rng = Rng::new(42);
+        let s = m.simulate(200, &mut rng);
+        // the paper measured ~430 ms; shape-level agreement: hundreds of ms
+        assert!(
+            s.mean_ms > 200.0 && s.mean_ms < 900.0,
+            "mean latency {} ms out of the paper's regime",
+            s.mean_ms
+        );
+    }
+
+    #[test]
+    fn latency_explodes_with_cluster_size() {
+        let mut rng = Rng::new(1);
+        let small = TaskLevelModel { nodes: 20, ..Default::default() }
+            .simulate(200, &mut rng);
+        let large = TaskLevelModel { nodes: 100, ..Default::default() }
+            .simulate(200, &mut rng);
+        assert!(
+            large.mean_ms > 3.0 * small.mean_ms,
+            "large {} vs small {}",
+            large.mean_ms,
+            small.mean_ms
+        );
+    }
+
+    #[test]
+    fn analytic_and_sim_agree_at_moderate_load() {
+        let m = TaskLevelModel { nodes: 50, ..Default::default() };
+        let mut rng = Rng::new(9);
+        let sim = m.simulate(400, &mut rng);
+        let ana = m.analytic_mean_ms().unwrap();
+        // closed-loop sim is below the open-loop M/M/1 bound; same order
+        assert!(
+            sim.mean_ms < ana * 1.5 && sim.mean_ms > ana * 0.1,
+            "sim {} vs analytic {}",
+            sim.mean_ms,
+            ana
+        );
+    }
+
+    #[test]
+    fn saturation_detected() {
+        let m = TaskLevelModel { nodes: 1000, ..Default::default() };
+        assert!(m.analytic_mean_ms().is_none());
+    }
+
+    #[test]
+    fn dorm_is_orders_of_magnitude_cheaper() {
+        let m = TaskLevelModel::default();
+        let mut rng = Rng::new(2);
+        let s = m.simulate(100, &mut rng);
+        assert!(s.mean_ms / dorm_local_placement_ms() > 1e4);
+    }
+}

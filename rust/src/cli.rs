@@ -1,0 +1,137 @@
+//! Command-line interface (clap is not in the vendored registry; this is a
+//! small positional+flag parser with typed accessors and usage text).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: subcommand + flags (`--key value` / `--flag`).
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an argv slice (without the binary name).
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        cli.command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing subcommand"))?;
+        if cli.command.starts_with('-') {
+            bail!("expected a subcommand, got flag {:?}", cli.command);
+        }
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bad flag {arg:?}");
+                }
+                // flag value = next token unless it is another flag / end
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                cli.flags.insert(key.to_string(), value);
+            } else {
+                cli.positional.push(arg.clone());
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn str_flag(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    pub fn u64_flag(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} wants an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} wants a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+dorm — dynamically-partitioned cluster management for distributed ML
+        (reproduction of Sun et al., SMARTCOMP'17)
+
+USAGE: dorm <command> [flags]
+
+COMMANDS:
+  simulate   run the §V testbed experiment (static + Dorm-1/2/3, 24 h DES)
+               --seed N          workload seed (default 17)
+               --horizon H       hours (default 24)
+  fig1       print the Fig. 1 duration-CDF model
+  train      train a model through the full Dorm stack (needs artifacts/)
+               --model NAME      lr | mf | tfm | tfm_e2e (default lr)
+               --steps N         BSP steps (default 100)
+               --workers W       worker slots (default 4)
+               --lr X            learning rate (default 0.1)
+  latency    task-level scheduling-latency analysis (§II-C, 430 ms claim)
+               --nodes N         cluster size (default 100)
+  help       this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_positionals() {
+        let c = Cli::parse(&argv("simulate extra --seed 42 --fig1")).unwrap();
+        assert_eq!(c.command, "simulate");
+        assert_eq!(c.u64_flag("seed", 0).unwrap(), 42);
+        assert!(c.bool_flag("fig1"));
+        assert_eq!(c.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Cli::parse(&argv("train")).unwrap();
+        assert_eq!(c.str_flag("model", "lr"), "lr");
+        assert_eq!(c.u64_flag("steps", 100).unwrap(), 100);
+        assert!(!c.bool_flag("verbose"));
+    }
+
+    #[test]
+    fn errors_reported() {
+        assert!(Cli::parse(&[]).is_err());
+        assert!(Cli::parse(&["--seed".into(), "2".into()]).is_err());
+        let c = Cli::parse(&argv("train --steps abc")).unwrap();
+        assert!(c.u64_flag("steps", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let c = Cli::parse(&argv("simulate --verbose --seed 3")).unwrap();
+        assert!(c.bool_flag("verbose"));
+        assert_eq!(c.u64_flag("seed", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn f64_flag_parses() {
+        let c = Cli::parse(&argv("train --lr 0.25")).unwrap();
+        assert_eq!(c.f64_flag("lr", 0.1).unwrap(), 0.25);
+        assert_eq!(c.f64_flag("other", 0.5).unwrap(), 0.5);
+    }
+}

@@ -1,0 +1,284 @@
+//! Cluster model: servers (DormSlaves' resource views), per-application
+//! partitions, and the placement bookkeeping shared by the real runtime
+//! ([`crate::master`]) and the simulator ([`crate::sim`]).
+//!
+//! A *partition* (§III-A) is the set of containers an application owns; a
+//! *container* is a uniform resource bundle `d` on one server.  State here
+//! is pure bookkeeping — actually starting/stopping work is the slaves'
+//! job — which is what lets the simulator and the live master share it.
+
+mod placement;
+
+pub use placement::{place, Placement, PlacementInput};
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::app::AppId;
+use crate::config::ClusterConfig;
+use crate::resources::Res;
+
+/// Index into the cluster's server list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ServerId(pub usize);
+
+/// One server's live allocation state.
+#[derive(Clone, Debug)]
+pub struct Server {
+    pub name: String,
+    pub capacity: Res,
+    /// Containers per application on this server (the paper's xᵢⱼ).
+    pub containers: BTreeMap<AppId, u32>,
+}
+
+impl Server {
+    /// Resources currently committed on this server.
+    pub fn used(&self, demands: &BTreeMap<AppId, Res>) -> Res {
+        let mut used = Res::zeros(self.capacity.m());
+        for (app, &count) in &self.containers {
+            if let Some(d) = demands.get(app) {
+                used += &d.times(count);
+            }
+        }
+        used
+    }
+
+    pub fn free(&self, demands: &BTreeMap<AppId, Res>) -> Res {
+        self.capacity.saturating_sub(&self.used(demands))
+    }
+}
+
+/// Whole-cluster allocation state: servers + per-app demand vectors.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    pub servers: Vec<Server>,
+    /// Demand vector per admitted application (uniform per container,
+    /// §III-A-4).
+    pub demands: BTreeMap<AppId, Res>,
+}
+
+impl ClusterState {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        ClusterState {
+            servers: cfg
+                .servers
+                .iter()
+                .map(|s| Server {
+                    name: s.name.clone(),
+                    capacity: s.capacity.clone(),
+                    containers: BTreeMap::new(),
+                })
+                .collect(),
+            demands: BTreeMap::new(),
+        }
+    }
+
+    pub fn total_capacity(&self) -> Res {
+        let m = self.servers.first().map(|s| s.capacity.m()).unwrap_or(0);
+        self.servers.iter().fold(Res::zeros(m), |mut acc, s| {
+            acc += &s.capacity;
+            acc
+        })
+    }
+
+    /// Register an application's demand vector (at admission).
+    pub fn register_app(&mut self, app: AppId, demand: Res) {
+        self.demands.insert(app, demand);
+    }
+
+    /// Drop an application and all its containers (at completion).
+    pub fn remove_app(&mut self, app: AppId) {
+        self.demands.remove(&app);
+        for s in &mut self.servers {
+            s.containers.remove(&app);
+        }
+    }
+
+    /// Create `count` containers of `app` on `server`, enforcing capacity.
+    pub fn create_containers(&mut self, app: AppId, server: ServerId, count: u32) -> Result<()> {
+        let Some(demand) = self.demands.get(&app).cloned() else {
+            bail!("{app} has no registered demand");
+        };
+        let s = &mut self.servers[server.0];
+        let mut used = Res::zeros(s.capacity.m());
+        for (a, &c) in &s.containers {
+            used += &self.demands[a].times(c);
+        }
+        used += &demand.times(count);
+        if !used.fits_in(&s.capacity) {
+            bail!(
+                "capacity exceeded on {}: used {used:?} > cap {:?}",
+                s.name,
+                s.capacity
+            );
+        }
+        *s.containers.entry(app).or_insert(0) += count;
+        Ok(())
+    }
+
+    /// Destroy `count` containers of `app` on `server`.
+    pub fn destroy_containers(&mut self, app: AppId, server: ServerId, count: u32) -> Result<()> {
+        let s = &mut self.servers[server.0];
+        let have = s.containers.get(&app).copied().unwrap_or(0);
+        if have < count {
+            bail!("{app} has only {have} containers on {}, asked {count}", s.name);
+        }
+        if have == count {
+            s.containers.remove(&app);
+        } else {
+            *s.containers.get_mut(&app).unwrap() -= count;
+        }
+        Ok(())
+    }
+
+    /// The paper's xᵢⱼ row for one application.
+    pub fn placement_of(&self, app: AppId) -> BTreeMap<ServerId, u32> {
+        self.servers
+            .iter()
+            .enumerate()
+            .filter_map(|(j, s)| {
+                s.containers
+                    .get(&app)
+                    .map(|&c| (ServerId(j), c))
+                    .filter(|&(_, c)| c > 0)
+            })
+            .collect()
+    }
+
+    /// Σⱼ xᵢⱼ.
+    pub fn container_count(&self, app: AppId) -> u32 {
+        self.servers
+            .iter()
+            .map(|s| s.containers.get(&app).copied().unwrap_or(0))
+            .sum()
+    }
+
+    /// Cluster-wide usage vector (numerator of Eq. 1).
+    pub fn total_used(&self) -> Res {
+        let m = self.total_capacity().m();
+        self.servers.iter().fold(Res::zeros(m), |mut acc, s| {
+            acc += &s.used(&self.demands);
+            acc
+        })
+    }
+
+    /// Eq. 1: ResourceUtilization(t) = Σₖ uₖ — ranges in [0, m].
+    pub fn utilization(&self) -> f64 {
+        self.total_used().utilization_sum(&self.total_capacity())
+    }
+
+    /// Application `i`'s actual dominant share sᵢ (Table I).
+    pub fn dominant_share(&self, app: AppId) -> f64 {
+        match self.demands.get(&app) {
+            Some(d) => d
+                .times(self.container_count(app))
+                .dominant_share(&self.total_capacity()),
+            None => 0.0,
+        }
+    }
+
+    /// Sanity invariant: every server within capacity (debug builds assert
+    /// this after each adjustment; also property-tested).
+    pub fn check_invariants(&self) -> Result<()> {
+        for s in &self.servers {
+            let used = s.used(&self.demands);
+            if !used.fits_in(&s.capacity) {
+                bail!("invariant violated: {} over capacity ({used:?})", s.name);
+            }
+        }
+        for s in &self.servers {
+            for app in s.containers.keys() {
+                if !self.demands.contains_key(app) {
+                    bail!("invariant violated: {} hosts unregistered {app}", s.name);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ClusterState {
+        ClusterState::new(&ClusterConfig::uniform(2, Res::cpu_gpu_ram(8.0, 1.0, 64.0)))
+    }
+
+    #[test]
+    fn create_destroy_roundtrip() {
+        let mut cs = small();
+        let a = AppId(1);
+        cs.register_app(a, Res::cpu_gpu_ram(2.0, 0.0, 8.0));
+        cs.create_containers(a, ServerId(0), 3).unwrap();
+        assert_eq!(cs.container_count(a), 3);
+        cs.destroy_containers(a, ServerId(0), 2).unwrap();
+        assert_eq!(cs.container_count(a), 1);
+        cs.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut cs = small();
+        let a = AppId(1);
+        cs.register_app(a, Res::cpu_gpu_ram(2.0, 0.0, 8.0));
+        assert!(cs.create_containers(a, ServerId(0), 5).is_err()); // 10 CPU > 8
+        cs.create_containers(a, ServerId(0), 4).unwrap();
+        assert!(cs.create_containers(a, ServerId(0), 1).is_err());
+    }
+
+    #[test]
+    fn destroy_more_than_held_fails() {
+        let mut cs = small();
+        let a = AppId(1);
+        cs.register_app(a, Res::cpu_gpu_ram(1.0, 0.0, 1.0));
+        cs.create_containers(a, ServerId(0), 1).unwrap();
+        assert!(cs.destroy_containers(a, ServerId(0), 2).is_err());
+        assert!(cs.destroy_containers(a, ServerId(1), 1).is_err());
+    }
+
+    #[test]
+    fn utilization_eq1() {
+        let mut cs = small(); // totals: 16 cpu, 2 gpu, 128 ram
+        let a = AppId(1);
+        cs.register_app(a, Res::cpu_gpu_ram(4.0, 1.0, 32.0));
+        cs.create_containers(a, ServerId(0), 1).unwrap();
+        cs.create_containers(a, ServerId(1), 1).unwrap();
+        // u = 8/16 + 2/2 + 64/128 = 0.5 + 1 + 0.5 = 2.0
+        assert!((cs.utilization() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dominant_share_tracks_gpu() {
+        let mut cs = small();
+        let a = AppId(1);
+        cs.register_app(a, Res::cpu_gpu_ram(1.0, 1.0, 8.0));
+        cs.create_containers(a, ServerId(0), 1).unwrap();
+        // shares: 1/16 cpu, 1/2 gpu, 8/128 ram -> dominant 0.5
+        assert!((cs.dominant_share(a) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remove_app_clears_everything() {
+        let mut cs = small();
+        let a = AppId(1);
+        cs.register_app(a, Res::cpu_gpu_ram(1.0, 0.0, 1.0));
+        cs.create_containers(a, ServerId(0), 2).unwrap();
+        cs.remove_app(a);
+        assert_eq!(cs.container_count(a), 0);
+        assert_eq!(cs.utilization(), 0.0);
+        cs.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn placement_of_lists_only_nonzero() {
+        let mut cs = small();
+        let a = AppId(1);
+        cs.register_app(a, Res::cpu_gpu_ram(1.0, 0.0, 1.0));
+        cs.create_containers(a, ServerId(1), 2).unwrap();
+        let p = cs.placement_of(a);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[&ServerId(1)], 2);
+    }
+}

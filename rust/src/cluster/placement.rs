@@ -1,0 +1,265 @@
+//! Placement round: map per-application container *counts* onto concrete
+//! servers (the xᵢⱼ of P2), keeping unadjusted applications pinned.
+//!
+//! Eq. 3 counts an application as adjusted if **any** xᵢⱼ changes, so the
+//! placement round must (a) leave apps whose count is unchanged exactly
+//! where they are and (b) re-place adjusted apps by best-fit-decreasing on
+//! the dominant share — the classic FFD/BFD bin-packing heuristic, which at
+//! paper scale (uniform containers, 20 servers) packs whatever the
+//! aggregate-capacity check admits; when it cannot, the optimizer retries
+//! with reduced counts (see [`crate::optimizer`]).
+
+use std::collections::BTreeMap;
+
+use crate::app::AppId;
+use crate::resources::Res;
+
+use super::ServerId;
+
+/// One application's placement request.
+#[derive(Clone, Debug)]
+pub struct PlacementInput {
+    pub app: AppId,
+    pub demand: Res,
+    /// Target total containers (the optimizer's nᵢ).
+    pub target: u32,
+    /// Current placement (empty for new apps).
+    pub current: BTreeMap<ServerId, u32>,
+}
+
+/// Result: per-app server assignment plus the create/destroy delta.
+#[derive(Clone, Debug, Default)]
+pub struct Placement {
+    /// Final xᵢⱼ.
+    pub assignment: BTreeMap<AppId, BTreeMap<ServerId, u32>>,
+    /// Containers to destroy, per app per server (before creates).
+    pub destroy: Vec<(AppId, ServerId, u32)>,
+    /// Containers to create, per app per server.
+    pub create: Vec<(AppId, ServerId, u32)>,
+}
+
+impl Placement {
+    /// Apps whose placement changed (rᵢ = 1 in Eq. 3 terms).
+    pub fn adjusted_apps(&self) -> Vec<AppId> {
+        let mut apps: Vec<AppId> = self
+            .destroy
+            .iter()
+            .chain(self.create.iter())
+            .map(|&(a, _, _)| a)
+            .collect();
+        apps.sort();
+        apps.dedup();
+        apps
+    }
+}
+
+/// Compute a placement for the given targets on servers with `capacity`.
+///
+/// Returns `None` if the targets cannot be packed (caller reduces counts
+/// and retries).  Unchanged apps (target == current total) keep their exact
+/// xᵢⱼ row; changed apps release all containers and are re-packed
+/// best-fit-decreasing.
+pub fn place(inputs: &[PlacementInput], capacities: &[Res]) -> Option<Placement> {
+    let m = capacities.first().map(|c| c.m()).unwrap_or(0);
+    let mut free: Vec<Res> = capacities.to_vec();
+
+    // Phase 1: pin unchanged apps and subtract their usage.
+    let mut out = Placement::default();
+    let mut movers: Vec<&PlacementInput> = Vec::new();
+    for inp in inputs {
+        let cur_total: u32 = inp.current.values().sum();
+        if cur_total == inp.target && inp.target > 0 {
+            for (&sid, &cnt) in &inp.current {
+                let need = inp.demand.times(cnt);
+                if !need.fits_in(&free[sid.0]) {
+                    // existing state exceeds capacity — corrupted input
+                    return None;
+                }
+                free[sid.0] -= &need;
+            }
+            out.assignment.insert(inp.app, inp.current.clone());
+        } else {
+            movers.push(inp);
+        }
+    }
+
+    // Phase 2: movers release everything...
+    for inp in &movers {
+        for (&sid, &cnt) in &inp.current {
+            if cnt > 0 {
+                out.destroy.push((inp.app, sid, cnt));
+            }
+        }
+    }
+
+    // ...and are re-packed best-fit-decreasing by dominant demand.
+    let total_cap = capacities.iter().fold(Res::zeros(m), |mut acc, c| {
+        acc += c;
+        acc
+    });
+    let mut order: Vec<usize> = (0..movers.len()).collect();
+    order.sort_by(|&a, &b| {
+        let da = movers[a].demand.dominant_share(&total_cap);
+        let db = movers[b].demand.dominant_share(&total_cap);
+        db.partial_cmp(&da).unwrap()
+    });
+
+    for &idx in &order {
+        let inp = movers[idx];
+        let mut assigned: BTreeMap<ServerId, u32> = BTreeMap::new();
+        for _ in 0..inp.target {
+            // best fit: the feasible server with the least remaining
+            // dominant-share slack after placing (packs tightly).
+            let mut best: Option<(usize, f64)> = None;
+            for (j, f) in free.iter().enumerate() {
+                if inp.demand.fits_in(f) {
+                    let slack = f
+                        .clone()
+                        .saturating_sub(&inp.demand)
+                        .dominant_share(&total_cap);
+                    match best {
+                        Some((_, bs)) if bs <= slack => {}
+                        _ => best = Some((j, slack)),
+                    }
+                }
+            }
+            let j = best?.0;
+            free[j] -= &inp.demand;
+            *assigned.entry(ServerId(j)).or_insert(0) += 1;
+        }
+        for (&sid, &cnt) in &assigned {
+            out.create.push((inp.app, sid, cnt));
+        }
+        out.assignment.insert(inp.app, assigned);
+    }
+
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn inp(id: u64, demand: Res, target: u32, current: &[(usize, u32)]) -> PlacementInput {
+        PlacementInput {
+            app: AppId(id),
+            demand,
+            target,
+            current: current
+                .iter()
+                .map(|&(j, c)| (ServerId(j), c))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn packs_simple_case() {
+        let caps = vec![Res(vec![4.0]), Res(vec![4.0])];
+        let p = place(
+            &[inp(1, Res(vec![1.0]), 6, &[])],
+            &caps,
+        )
+        .unwrap();
+        let total: u32 = p.assignment[&AppId(1)].values().sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn pinned_apps_do_not_move() {
+        let caps = vec![Res(vec![4.0]), Res(vec![4.0])];
+        let p = place(
+            &[
+                inp(1, Res(vec![1.0]), 2, &[(0, 2)]), // unchanged
+                inp(2, Res(vec![1.0]), 3, &[(1, 1)]), // grows
+            ],
+            &caps,
+        )
+        .unwrap();
+        assert_eq!(p.assignment[&AppId(1)][&ServerId(0)], 2);
+        assert!(p.adjusted_apps() == vec![AppId(2)]);
+        // app2 released its old container and re-packed
+        assert!(p.destroy.contains(&(AppId(2), ServerId(1), 1)));
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let caps = vec![Res(vec![2.0])];
+        assert!(place(&[inp(1, Res(vec![1.0]), 3, &[])], &caps).is_none());
+    }
+
+    #[test]
+    fn fragmentation_case_needs_bfd() {
+        // two servers 3+3; apps: one 2-demand x1, one 1-demand x4.
+        // BFD places the big one first, then fills: feasible.
+        let caps = vec![Res(vec![3.0]), Res(vec![3.0])];
+        let p = place(
+            &[
+                inp(1, Res(vec![2.0]), 1, &[]),
+                inp(2, Res(vec![1.0]), 4, &[]),
+            ],
+            &caps,
+        )
+        .unwrap();
+        let t1: u32 = p.assignment[&AppId(1)].values().sum();
+        let t2: u32 = p.assignment[&AppId(2)].values().sum();
+        assert_eq!((t1, t2), (1, 4));
+    }
+
+    #[test]
+    fn gpu_containers_land_on_gpu_servers() {
+        let caps = vec![
+            Res::cpu_gpu_ram(12.0, 1.0, 128.0),
+            Res::cpu_gpu_ram(12.0, 0.0, 128.0),
+        ];
+        let p = place(
+            &[inp(1, Res::cpu_gpu_ram(4.0, 1.0, 16.0), 1, &[])],
+            &caps,
+        )
+        .unwrap();
+        assert_eq!(p.assignment[&AppId(1)][&ServerId(0)], 1);
+    }
+
+    #[test]
+    fn prop_placement_respects_capacity() {
+        prop::check(150, |rng: &mut Rng| {
+            let m = 2;
+            let nsrv = rng.range_u64(1, 6) as usize;
+            let caps: Vec<Res> = (0..nsrv)
+                .map(|_| Res((0..m).map(|_| rng.range_f64(4.0, 20.0)).collect()))
+                .collect();
+            let napps = rng.range_u64(1, 6) as usize;
+            let inputs: Vec<PlacementInput> = (0..napps)
+                .map(|i| PlacementInput {
+                    app: AppId(i as u64),
+                    demand: Res((0..m).map(|_| rng.range_f64(0.5, 4.0)).collect()),
+                    target: rng.range_u64(0, 6) as u32,
+                    current: BTreeMap::new(),
+                })
+                .collect();
+            if let Some(p) = place(&inputs, &caps) {
+                // per-server usage within capacity
+                for (j, cap) in caps.iter().enumerate() {
+                    let mut used = Res::zeros(m);
+                    for inpt in &inputs {
+                        if let Some(cnt) = p.assignment[&inpt.app].get(&ServerId(j)) {
+                            used += &inpt.demand.times(*cnt);
+                        }
+                    }
+                    if !used.fits_in(cap) {
+                        return Err(format!("server {j} over capacity"));
+                    }
+                }
+                // every app got exactly its target
+                for inpt in &inputs {
+                    let got: u32 = p.assignment[&inpt.app].values().sum();
+                    if got != inpt.target {
+                        return Err(format!("{:?}: got {got} wanted {}", inpt.app, inpt.target));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

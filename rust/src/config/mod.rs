@@ -1,0 +1,14 @@
+//! Configuration system: a TOML-subset parser plus typed views for the
+//! cluster, the Dorm thresholds and the simulated workload.
+//!
+//! serde is not in this image's vendored registry (DESIGN.md §6), so this is
+//! a small hand-rolled parser covering the subset the repo uses:
+//! `[section]` headers, `key = value` with string / number / bool / arrays
+//! of numbers or strings, `#` comments, and `key=value` flat files (the
+//! artifact `manifest.kv` format shares the scalar grammar).
+
+mod parse;
+mod schema;
+
+pub use parse::{parse_kv_file, parse_toml, TomlDoc, Value};
+pub use schema::{ClusterConfig, DormConfig, ServerConfig, SimConfig};

@@ -1,0 +1,284 @@
+//! TOML-subset / key-value parser (see module docs in `mod.rs`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_f64().and_then(|n| {
+            if n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64 {
+                Some(n as u32)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section -> key -> value`. Keys outside any section
+/// land in the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Typed getters with config-style error messages.
+    pub fn str_of(&self, section: &str, key: &str) -> Result<&str> {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("missing string [{section}].{key}"))
+    }
+
+    pub fn f64_of(&self, section: &str, key: &str) -> Result<f64> {
+        self.get(section, key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow!("missing number [{section}].{key}"))
+    }
+
+    pub fn u32_of(&self, section: &str, key: &str) -> Result<u32> {
+        self.get(section, key)
+            .and_then(Value::as_u32)
+            .ok_or_else(|| anyhow!("missing integer [{section}].{key}"))
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn u32_or(&self, section: &str, key: &str, default: u32) -> u32 {
+        self.get(section, key).and_then(Value::as_u32).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+}
+
+fn parse_scalar(raw: &str) -> Result<Value> {
+    let s = raw.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string: {raw}"))?;
+        // minimal escapes
+        let un = inner.replace("\\\"", "\"").replace("\\\\", "\\");
+        return Ok(Value::Str(un));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array: {raw}"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_scalar(&part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow!("unparseable value: {raw}"))
+}
+
+/// Split an array body on commas that are not inside quotes.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for ch in s.chars() {
+        match ch {
+            '"' => {
+                in_str = !in_str;
+                cur.push(ch);
+            }
+            ',' if !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+/// Strip a trailing `#` comment that is not inside a string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse TOML-subset text.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: bad section header", lineno + 1))?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let value = parse_scalar(v)
+            .with_context(|| format!("line {}: key {}", lineno + 1, k.trim()))?;
+        doc.sections
+            .get_mut(&section)
+            .unwrap()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Parse a flat `key=value` file (the artifact manifest format); values stay
+/// raw strings.
+pub fn parse_kv_file(path: &Path) -> Result<BTreeMap<String, String>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("{}:{}: expected key=value", path.display(), lineno + 1))?;
+        out.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_arrays() {
+        let doc = parse_toml(
+            r#"
+            top = 1
+            [cluster]
+            slaves = 20            # trailing comment
+            name = "testbed #1"
+            caps = [240, 5, 2560]
+            gpus_enabled = true
+            tags = ["a", "b"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.f64_of("", "top").unwrap(), 1.0);
+        assert_eq!(doc.u32_of("cluster", "slaves").unwrap(), 20);
+        assert_eq!(doc.str_of("cluster", "name").unwrap(), "testbed #1");
+        let caps = doc.get("cluster", "caps").unwrap().as_array().unwrap();
+        assert_eq!(caps.len(), 3);
+        assert_eq!(caps[2].as_f64().unwrap(), 2560.0);
+        assert_eq!(doc.get("cluster", "gpus_enabled").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let doc = parse_toml("[a]\nx = 2").unwrap();
+        assert_eq!(doc.f64_or("a", "x", 9.0), 2.0);
+        assert_eq!(doc.f64_or("a", "y", 9.0), 9.0);
+        assert!(doc.f64_of("a", "y").is_err());
+        assert!(doc.str_of("b", "z").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("novalue").is_err());
+        assert!(parse_toml("x = [1, 2").is_err());
+        assert!(parse_toml("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn u32_rejects_fractional_and_negative() {
+        let doc = parse_toml("x = 1.5\ny = -2").unwrap();
+        assert!(doc.u32_of("", "x").is_err());
+        assert!(doc.u32_of("", "y").is_err());
+    }
+
+    #[test]
+    fn kv_file_roundtrip() {
+        let dir = std::env::temp_dir().join("dorm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.kv");
+        std::fs::write(&p, "# comment\na.b=1\nmodel.lr.x.shape=256x64\n").unwrap();
+        let kv = parse_kv_file(&p).unwrap();
+        assert_eq!(kv["a.b"], "1");
+        assert_eq!(kv["model.lr.x.shape"], "256x64");
+    }
+}

@@ -1,0 +1,200 @@
+//! Typed configuration schemas on top of the TOML-subset parser.
+//!
+//! `ClusterConfig::paper_testbed()` reproduces the paper's §V-A testbed:
+//! 20 DormSlaves totalling 240 CPU cores, 5 GPUs and 2.5 TB RAM.
+
+use anyhow::{bail, Result};
+
+use super::parse::TomlDoc;
+use crate::resources::Res;
+
+/// One DormSlave's capacity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerConfig {
+    pub name: String,
+    pub capacity: Res,
+}
+
+/// The whole cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub servers: Vec<ServerConfig>,
+}
+
+impl ClusterConfig {
+    /// Paper §V-A: 20 DormSlaves, 240 CPUs / 5 GPUs / 2560 GB total.
+    /// 12 CPUs and 128 GB per slave; the 5 GPUs live on the first 5 slaves.
+    pub fn paper_testbed() -> Self {
+        let servers = (0..20)
+            .map(|i| ServerConfig {
+                name: format!("slave{i:02}"),
+                capacity: Res::cpu_gpu_ram(12.0, if i < 5 { 1.0 } else { 0.0 }, 128.0),
+            })
+            .collect();
+        ClusterConfig { servers }
+    }
+
+    /// Uniform synthetic cluster (tests / ablations).
+    pub fn uniform(n: usize, per_server: Res) -> Self {
+        ClusterConfig {
+            servers: (0..n)
+                .map(|i| ServerConfig {
+                    name: format!("slave{i:02}"),
+                    capacity: per_server.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Aggregate capacity Σ c_h (the denominator of Eqs 1–2).
+    pub fn total_capacity(&self) -> Res {
+        let m = self.servers.first().map(|s| s.capacity.m()).unwrap_or(0);
+        self.servers
+            .iter()
+            .fold(Res::zeros(m), |mut acc, s| {
+                acc += &s.capacity;
+                acc
+            })
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let n = doc.u32_of("cluster", "slaves")? as usize;
+        let caps = doc
+            .get("cluster", "capacity_per_slave")
+            .and_then(|v| v.as_array())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect::<Vec<_>>());
+        let Some(caps) = caps else {
+            bail!("[cluster].capacity_per_slave must be an array of numbers");
+        };
+        let gpus_total = doc.u32_or("cluster", "gpus_total", 0);
+        let mut cfg = ClusterConfig::uniform(n, Res(caps));
+        // distribute whole GPUs over the first servers (paper style)
+        if cfg.servers.first().map(|s| s.capacity.m()) == Some(3) {
+            for (i, s) in cfg.servers.iter_mut().enumerate() {
+                s.capacity.0[1] = if (i as u32) < gpus_total { 1.0 } else { 0.0 };
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Dorm's optimizer thresholds (§V-A-2 configurations).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DormConfig {
+    /// θ₁: fairness-loss threshold.
+    pub theta1: f64,
+    /// θ₂: adjustment-overhead threshold.
+    pub theta2: f64,
+}
+
+impl DormConfig {
+    pub const DORM1: DormConfig = DormConfig { theta1: 0.2, theta2: 0.1 };
+    pub const DORM2: DormConfig = DormConfig { theta1: 0.1, theta2: 0.2 };
+    pub const DORM3: DormConfig = DormConfig { theta1: 0.1, theta2: 0.1 };
+
+    pub fn named(name: &str) -> Result<Self> {
+        Ok(match name {
+            "dorm1" | "Dorm-1" => Self::DORM1,
+            "dorm2" | "Dorm-2" => Self::DORM2,
+            "dorm3" | "Dorm-3" => Self::DORM3,
+            other => bail!("unknown Dorm config {other:?} (dorm1|dorm2|dorm3)"),
+        })
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let c = DormConfig {
+            theta1: doc.f64_or("dorm", "theta1", 0.1),
+            theta2: doc.f64_or("dorm", "theta2", 0.1),
+        };
+        if !(0.0..=1.0).contains(&c.theta1) || !(0.0..=1.0).contains(&c.theta2) {
+            bail!("theta1/theta2 must be in [0,1], got {c:?}");
+        }
+        Ok(c)
+    }
+}
+
+/// Simulation parameters (§V-A-3 workload + horizon).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Simulation horizon in hours (paper: 24 h).
+    pub horizon_hours: f64,
+    /// Mean inter-arrival time in minutes (paper: 20 min).
+    pub mean_interarrival_min: f64,
+    /// Metric sampling period in minutes.
+    pub sample_period_min: f64,
+    /// RNG seed (workload + arrival order).
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            horizon_hours: 24.0,
+            mean_interarrival_min: 20.0,
+            sample_period_min: 5.0,
+            seed: 17,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = SimConfig::default();
+        Ok(SimConfig {
+            horizon_hours: doc.f64_or("sim", "horizon_hours", d.horizon_hours),
+            mean_interarrival_min: doc
+                .f64_or("sim", "mean_interarrival_min", d.mean_interarrival_min),
+            sample_period_min: doc.f64_or("sim", "sample_period_min", d.sample_period_min),
+            seed: doc.f64_or("sim", "seed", d.seed as f64) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse::parse_toml;
+
+    #[test]
+    fn paper_testbed_totals() {
+        let c = ClusterConfig::paper_testbed();
+        assert_eq!(c.servers.len(), 20);
+        let total = c.total_capacity();
+        assert_eq!(total, Res::cpu_gpu_ram(240.0, 5.0, 2560.0));
+    }
+
+    #[test]
+    fn dorm_named_configs_match_paper() {
+        assert_eq!(DormConfig::named("dorm1").unwrap(), DormConfig { theta1: 0.2, theta2: 0.1 });
+        assert_eq!(DormConfig::named("dorm2").unwrap(), DormConfig { theta1: 0.1, theta2: 0.2 });
+        assert_eq!(DormConfig::named("dorm3").unwrap(), DormConfig { theta1: 0.1, theta2: 0.1 });
+        assert!(DormConfig::named("dorm9").is_err());
+    }
+
+    #[test]
+    fn cluster_from_doc() {
+        let doc = parse_toml(
+            "[cluster]\nslaves = 4\ncapacity_per_slave = [12, 0, 128]\ngpus_total = 2\n",
+        )
+        .unwrap();
+        let c = ClusterConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.servers.len(), 4);
+        assert_eq!(c.total_capacity(), Res::cpu_gpu_ram(48.0, 2.0, 512.0));
+    }
+
+    #[test]
+    fn dorm_from_doc_validates_range() {
+        let ok = parse_toml("[dorm]\ntheta1 = 0.2\ntheta2 = 0.1\n").unwrap();
+        assert_eq!(DormConfig::from_doc(&ok).unwrap(), DormConfig::DORM1);
+        let bad = parse_toml("[dorm]\ntheta1 = 1.5\n").unwrap();
+        assert!(DormConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn sim_defaults() {
+        let doc = parse_toml("").unwrap();
+        let s = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(s.horizon_hours, 24.0);
+        assert_eq!(s.mean_interarrival_min, 20.0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Dominant Resource Fairness (Ghodsi et al., NSDI'11) — progressive
+//! filling over *containers*.
+//!
+//! The utilization–fairness optimizer (§IV) needs each application's
+//! **theoretical dominant share** ŝᵢ (Table I): the share DRF would give it
+//! against the aggregate cluster capacity, honoring the application's
+//! per-container demand dᵢ, weight wᵢ and container bounds [n_min, n_max].
+//! [`drf_allocate`] computes exactly that by weighted progressive filling:
+//! repeatedly grant one container to the application with the smallest
+//! weighted dominant share that can still grow.
+//!
+//! It is also used directly as a standalone allocator baseline (the
+//! "fairness-only" ablation in `benches/ablation_theta.rs`).
+
+use crate::resources::Res;
+
+/// Per-application DRF input.
+#[derive(Clone, Debug)]
+pub struct DrfApp {
+    /// Per-container demand vector dᵢ.
+    pub demand: Res,
+    /// Weight wᵢ (>= 1 in the paper's workload; any positive value works).
+    pub weight: f64,
+    pub n_min: u32,
+    pub n_max: u32,
+}
+
+/// DRF allocation result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DrfAllocation {
+    /// Containers per application (paper's Σⱼ xᵢⱼ aggregated).
+    pub containers: Vec<u32>,
+    /// Theoretical dominant shares ŝᵢ.
+    pub shares: Vec<f64>,
+}
+
+/// Weighted DRF progressive filling against aggregate capacity `cap`.
+///
+/// Starts every application at `n_min` containers (constraint Eq. 8); the
+/// caller is responsible for the cluster being able to hold Σ n_min (the
+/// optimizer guarantees it by construction of the admitted set). Then grants
+/// containers one at a time to the app minimizing (dominant share / weight),
+/// skipping apps at `n_max` or whose next container would exceed capacity.
+pub fn drf_allocate(apps: &[DrfApp], cap: &Res) -> DrfAllocation {
+    let n = apps.len();
+    let mut counts: Vec<u32> = apps.iter().map(|a| a.n_min).collect();
+    let mut used = Res::zeros(cap.m());
+    for (a, &c) in apps.iter().zip(&counts) {
+        used += &a.demand.times(c);
+    }
+
+    loop {
+        // candidate with the smallest weighted dominant share that can grow
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..n {
+            if counts[i] >= apps[i].n_max {
+                continue;
+            }
+            let next = used.clone() + apps[i].demand.clone();
+            if !next.fits_in(cap) {
+                continue;
+            }
+            let share = apps[i].demand.times(counts[i]).dominant_share(cap);
+            let key = share / apps[i].weight.max(1e-12);
+            match best {
+                Some((_, bk)) if bk <= key => {}
+                _ => best = Some((i, key)),
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                used += &apps[i].demand;
+                counts[i] += 1;
+            }
+            None => break,
+        }
+    }
+
+    let shares = apps
+        .iter()
+        .zip(&counts)
+        .map(|(a, &c)| a.demand.times(c).dominant_share(cap))
+        .collect();
+    DrfAllocation { containers: counts, shares }
+}
+
+/// Eq. (2): fairness loss Σᵢ |sᵢ − ŝᵢ| given actual and theoretical shares.
+pub fn fairness_loss(actual: &[f64], theoretical: &[f64]) -> f64 {
+    debug_assert_eq!(actual.len(), theoretical.len());
+    actual
+        .iter()
+        .zip(theoretical)
+        .map(|(s, sh)| (s - sh).abs())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn app(cpu: f64, gpu: f64, ram: f64, w: f64, lo: u32, hi: u32) -> DrfApp {
+        DrfApp {
+            demand: Res::cpu_gpu_ram(cpu, gpu, ram),
+            weight: w,
+            n_min: lo,
+            n_max: hi,
+        }
+    }
+
+    #[test]
+    fn classic_drf_example() {
+        // Ghodsi et al. §3: cluster <9 CPU, 18 GB>, app A <1,4>, app B <3,1>.
+        // DRF equalizes dominant shares: A gets 3 tasks (12 GB -> 2/3),
+        // B gets 2 tasks (6 CPU -> 2/3).
+        let cap = Res(vec![9.0, 18.0]);
+        let apps = vec![
+            DrfApp { demand: Res(vec![1.0, 4.0]), weight: 1.0, n_min: 0, n_max: 100 },
+            DrfApp { demand: Res(vec![3.0, 1.0]), weight: 1.0, n_min: 0, n_max: 100 },
+        ];
+        let out = drf_allocate(&apps, &cap);
+        assert_eq!(out.containers, vec![3, 2]);
+        assert!((out.shares[0] - 2.0 / 3.0).abs() < 1e-9);
+        assert!((out.shares[1] - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_n_max_and_gives_leftovers_to_others() {
+        let cap = Res::cpu_gpu_ram(100.0, 0.0, 1000.0);
+        let apps = vec![
+            app(1.0, 0.0, 1.0, 1.0, 1, 2),
+            app(1.0, 0.0, 1.0, 1.0, 1, 1000),
+        ];
+        let out = drf_allocate(&apps, &cap);
+        assert_eq!(out.containers[0], 2);
+        assert_eq!(out.containers[1], 98); // rest of the CPUs
+    }
+
+    #[test]
+    fn respects_n_min_floor() {
+        let cap = Res::cpu_gpu_ram(10.0, 0.0, 100.0);
+        let apps = vec![app(1.0, 0.0, 1.0, 1.0, 4, 10), app(1.0, 0.0, 1.0, 100.0, 1, 10)];
+        let out = drf_allocate(&apps, &cap);
+        assert!(out.containers[0] >= 4);
+    }
+
+    #[test]
+    fn weights_bias_allocation() {
+        let cap = Res::cpu_gpu_ram(90.0, 0.0, 900.0);
+        let apps = vec![
+            app(1.0, 0.0, 1.0, 2.0, 0, 1000),
+            app(1.0, 0.0, 1.0, 1.0, 0, 1000),
+        ];
+        let out = drf_allocate(&apps, &cap);
+        // weighted DRF: shares proportional to weights -> 60 vs 30
+        assert_eq!(out.containers, vec![60, 30]);
+    }
+
+    #[test]
+    fn gpu_scarcity_limits_gpu_apps() {
+        let cap = Res::cpu_gpu_ram(240.0, 5.0, 2560.0);
+        let apps = vec![
+            app(4.0, 1.0, 32.0, 1.0, 1, 5), // VGG-16 row of Table II
+            app(2.0, 0.0, 8.0, 1.0, 1, 32), // LR row
+        ];
+        let out = drf_allocate(&apps, &cap);
+        assert!(out.containers[0] <= 5, "only 5 GPUs exist");
+    }
+
+    #[test]
+    fn fairness_loss_eq2() {
+        assert_eq!(fairness_loss(&[0.5, 0.2], &[0.3, 0.2]), 0.2);
+        assert_eq!(fairness_loss(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn prop_never_exceeds_capacity_and_bounds() {
+        prop::check(100, |rng: &mut Rng| {
+            let m = rng.range_u64(1, 4) as usize;
+            let cap = Res((0..m).map(|_| rng.range_f64(10.0, 200.0)).collect());
+            let napps = rng.range_u64(1, 8) as usize;
+            let apps: Vec<DrfApp> = (0..napps)
+                .map(|_| {
+                    let lo = rng.range_u64(0, 2) as u32;
+                    DrfApp {
+                        demand: Res((0..m).map(|_| rng.range_f64(0.1, 5.0)).collect()),
+                        weight: rng.range_f64(0.5, 4.0),
+                        n_min: lo,
+                        n_max: lo + rng.range_u64(0, 20) as u32,
+                    }
+                })
+                .collect();
+            let out = drf_allocate(&apps, &cap);
+            let mut used = Res::zeros(m);
+            for (a, &c) in apps.iter().zip(&out.containers) {
+                if c < a.n_min || c > a.n_max {
+                    return Err(format!("count {c} outside [{}, {}]", a.n_min, a.n_max));
+                }
+                used += &a.demand.times(c);
+            }
+            // capacity may be exceeded only by the n_min floors
+            let floor_used = apps.iter().fold(Res::zeros(m), |mut acc, a| {
+                acc += &a.demand.times(a.n_min);
+                acc
+            });
+            let effective_cap = cap.max(&floor_used);
+            if !used.fits_in(&effective_cap) {
+                return Err(format!("used {used:?} exceeds cap {cap:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pareto_no_app_can_grow() {
+        prop::check(100, |rng: &mut Rng| {
+            let m = 2;
+            let cap = Res((0..m).map(|_| rng.range_f64(20.0, 100.0)).collect());
+            let napps = rng.range_u64(1, 6) as usize;
+            let apps: Vec<DrfApp> = (0..napps)
+                .map(|_| DrfApp {
+                    demand: Res((0..m).map(|_| rng.range_f64(0.5, 4.0)).collect()),
+                    weight: 1.0,
+                    n_min: 0,
+                    n_max: 50,
+                })
+                .collect();
+            let out = drf_allocate(&apps, &cap);
+            let mut used = Res::zeros(m);
+            for (a, &c) in apps.iter().zip(&out.containers) {
+                used += &a.demand.times(c);
+            }
+            // Pareto efficiency: no app below n_max can still fit +1 container.
+            for (i, a) in apps.iter().enumerate() {
+                if out.containers[i] < a.n_max {
+                    let next = used.clone() + a.demand.clone();
+                    if next.fits_in(&cap) {
+                        return Err(format!("app {i} could still grow"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

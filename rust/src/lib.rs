@@ -1,0 +1,65 @@
+//! # Dorm — dynamically-partitioned cluster management for distributed ML
+//!
+//! Reproduction of Sun et al., *"Towards Distributed Machine Learning in
+//! Shared Clusters: A Dynamically-Partitioned Approach"* (IEEE SMARTCOMP
+//! 2017).  See `DESIGN.md` for the system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! The crate is the L3 (coordination) layer of a three-layer stack:
+//!
+//! * **L3 (this crate)** — DormMaster/DormSlave cluster manager, the
+//!   utilization–fairness optimizer (our own simplex + branch-and-bound MILP
+//!   solver standing in for CPLEX), the checkpoint-based resource-adjustment
+//!   protocol, a parameter-server training runtime, the baseline CMSs, and a
+//!   discrete-event simulator that regenerates every figure of the paper.
+//! * **L2 (python/compile/model.py, build-time)** — the hosted ML models
+//!   (LR / MF / transformer LM) as flat-parameter `init/grad/apply` JAX
+//!   functions, AOT-lowered to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels (tiled
+//!   fused matmul, flash attention) called from L2.
+//!
+//! Python never runs at request time: [`runtime`] loads the HLO artifacts
+//! through the PJRT C API (`xla` crate) and [`ps`] trains with them.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`resources`] | m-typed resource algebra (Eqs 1–2 foundations) |
+//! | [`drf`] | dominant-resource-fairness progressive filling (ŝᵢ) |
+//! | [`solver`] | simplex LP + branch-and-bound MILP + heuristic |
+//! | [`optimizer`] | builds the paper's P2 from cluster state, solves it |
+//! | [`cluster`] | servers, partitions, containers |
+//! | [`app`] | application 6-tuple, lifecycle, checkpoints |
+//! | [`master`] / [`slave`] | the Dorm control plane |
+//! | [`ps`] | BSP parameter-server runtime (the "MxNet" stand-in) |
+//! | [`runtime`] | PJRT executor service for `artifacts/*.hlo.txt` |
+//! | [`sim`] | discrete-event simulator (Figs 6–9) |
+//! | [`workload`] | Table II + Fig 1 workload models |
+//! | [`baselines`] | static (Swarm) and two-level (Mesos) comparators |
+//! | [`metrics`] | utilization / fairness-loss / adjustment time series |
+//! | [`config`] | TOML-subset config system (no serde in this image) |
+//! | [`report`] | ASCII tables + CSV emitters for the benches |
+//! | [`util`] | PRNG, stats, property-testing mini-framework, logging |
+
+pub mod app;
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod drf;
+pub mod master;
+pub mod metrics;
+pub mod optimizer;
+pub mod ps;
+pub mod report;
+pub mod resources;
+pub mod runtime;
+pub mod sim;
+pub mod slave;
+pub mod solver;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,162 @@
+//! `dorm` — the leader binary: run the §V simulation, train models through
+//! the full three-layer stack, or analyze scheduling latency.  See
+//! [`dorm::cli::USAGE`].
+
+use anyhow::Result;
+
+use dorm::app::{AppId, CheckpointStore};
+use dorm::baselines::tasklevel::{dorm_local_placement_ms, TaskLevelModel};
+use dorm::cli::{Cli, USAGE};
+use dorm::ps::{Trainer, TrainerConfig};
+use dorm::report;
+use dorm::runtime::{ComputeService, Manifest};
+use dorm::sim::{fairness_reduction, mean_speedup, utilization_ratio, Experiment};
+use dorm::util::{stats, Rng};
+use dorm::workload::{app_duration_hours, task_duration_secs, DurationModel};
+
+fn main() {
+    dorm::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "help" || args[0] == "--help" {
+        print!("{USAGE}");
+        return;
+    }
+    let cli = match Cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cli.command.as_str() {
+        "simulate" => cmd_simulate(&cli),
+        "fig1" => cmd_fig1(),
+        "train" => cmd_train(&cli),
+        "latency" => cmd_latency(&cli),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_simulate(cli: &Cli) -> Result<()> {
+    let seed = cli.u64_flag("seed", 17)?;
+    let horizon = cli.f64_flag("horizon", 24.0)?;
+    let mut exp = Experiment::paper(seed);
+    exp.sim.horizon_hours = horizon;
+    println!("§V experiment: 50 apps / 20 slaves / {horizon} h (seed {seed})");
+    let runs = exp.run_all();
+    let (baseline, dorms) = runs.split_first().unwrap();
+    let mut rows = Vec::new();
+    for r in &runs {
+        rows.push(vec![
+            r.label.clone(),
+            format!("{:.2}", r.metrics().utilization.mean_over(0.0, horizon)),
+            format!("{:.2}", r.metrics().fairness_loss.max()),
+            format!("{:.0}", r.metrics().adjustments.last().unwrap_or(0.0)),
+            format!("{}", r.outcome.completed),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["system", "mean util", "max fairness loss", "adjusted", "completed"],
+            &rows
+        )
+    );
+    for d in dorms {
+        println!(
+            "{}: util gain {:.2}x | fairness reduction {:.2}x | speedup {:.2}x",
+            d.label,
+            utilization_ratio(d, baseline, 5.0_f64.min(horizon)),
+            fairness_reduction(d, baseline, horizon),
+            mean_speedup(d, baseline),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig1() -> Result<()> {
+    let model = DurationModel::production();
+    let mut rng = Rng::new(1);
+    let apps: Vec<f64> = (0..20_000).map(|_| app_duration_hours(&model, &mut rng)).collect();
+    let tasks: Vec<f64> = (0..20_000).map(|_| task_duration_secs(&model, &mut rng)).collect();
+    println!(
+        "app duration:  p10 {:.1}h  p50 {:.1}h  p90 {:.1}h   (paper: 90% > 6h)",
+        stats::percentile(&apps, 10.0),
+        stats::percentile(&apps, 50.0),
+        stats::percentile(&apps, 90.0)
+    );
+    println!(
+        "task duration: p10 {:.2}s  p50 {:.2}s  p90 {:.2}s   (paper: 50% < 1.5s)",
+        stats::percentile(&tasks, 10.0),
+        stats::percentile(&tasks, 50.0),
+        stats::percentile(&tasks, 90.0)
+    );
+    Ok(())
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let model = cli.str_flag("model", "lr");
+    let steps = cli.u64_flag("steps", 100)?;
+    let workers = cli.u64_flag("workers", 4)? as u32;
+    let lr = cli.f64_flag("lr", 0.1)? as f32;
+
+    let manifest = Manifest::load("artifacts")?;
+    let service = ComputeService::start_filtered(&manifest, Some(&[model.as_str()]))?;
+    let meta = manifest.model(&model)?;
+    println!("training {model}: {} params, {workers} worker slots, {steps} steps", meta.n_params);
+    let cfg = TrainerConfig { workers, lr, seed: 1, data_seed: 1, ..Default::default() };
+    let mut t = Trainer::new(AppId(1), meta, service.handle(), cfg)?;
+    let t0 = std::time::Instant::now();
+    for chunk in 0..(steps / 10).max(1) {
+        let log = t.run(10.min(steps - chunk * 10))?;
+        println!("step {:4}  loss {:.4}", log.step, log.loss);
+        if log.step >= steps {
+            break;
+        }
+    }
+    println!(
+        "{} steps in {:.1?} ({:.0} ms/step)",
+        t.current_step(),
+        t0.elapsed(),
+        t0.elapsed().as_millis() as f64 / t.current_step() as f64
+    );
+    let stats = service.handle().stats()?;
+    let exec_ms = stats.exec_micros as f64 / 1000.0;
+    let total_ms = t0.elapsed().as_millis() as f64;
+    println!(
+        "xla exec time: {:.0} ms of {:.0} ms total ({:.1}% — coordinator overhead {:.1}%)",
+        exec_ms,
+        total_ms,
+        100.0 * exec_ms / total_ms,
+        100.0 * (1.0 - exec_ms / total_ms)
+    );
+    let store = CheckpointStore::new("checkpoints")?;
+    let path = t.checkpoint(&store)?;
+    println!("checkpoint -> {}", path.display());
+    Ok(())
+}
+
+fn cmd_latency(cli: &Cli) -> Result<()> {
+    let nodes = cli.u64_flag("nodes", 100)? as usize;
+    let m = TaskLevelModel { nodes, ..Default::default() };
+    let mut rng = Rng::new(7);
+    let s = m.simulate(300, &mut rng);
+    println!(
+        "task-level two-level sharing, {nodes} nodes: mean {:.0} ms, p50 {:.0} ms, p99 {:.0} ms",
+        s.mean_ms, s.p50_ms, s.p99_ms
+    );
+    println!("(paper measured ~430 ms at 100 nodes)");
+    println!(
+        "Dorm local placement (§III-D): {:.3} ms ({:.0}x faster)",
+        dorm_local_placement_ms(),
+        s.mean_ms / dorm_local_placement_ms()
+    );
+    Ok(())
+}

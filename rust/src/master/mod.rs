@@ -1,0 +1,401 @@
+//! DormMaster: the central manager (§III-A-1) driving the live runtime.
+//!
+//! Owns the cluster bookkeeping, the utilization–fairness optimizer and the
+//! checkpoint store; talks to per-server [`DormSlave`]s for container
+//! lifecycle and to the PS runtime ([`crate::ps::Trainer`]) for the actual
+//! training work.  The §III-C-2 adjustment protocol and the Fig. 5 flow:
+//!
+//! 1. submission / completion triggers the optimizer;
+//! 2. new allocations are enforced by destroying/creating containers;
+//! 3. adjusted apps are checkpointed, killed and resumed at the new scale.
+//!
+//! When no compute service is attached (e.g. artifacts not built) the
+//! master still performs all resource management — apps are bookkeeping
+//! entries without trainers, which is what the control-plane tests use.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::app::{AppId, AppSpec, AppState, CheckpointStore};
+use crate::cluster::ServerId;
+use crate::config::{ClusterConfig, DormConfig};
+use crate::optimizer::{Decision, OptApp, Optimizer, SolveMode};
+use crate::ps::{Trainer, TrainerConfig};
+use crate::resources::Res;
+use crate::runtime::{ComputeHandle, Manifest};
+use crate::slave::DormSlave;
+
+/// One application under management.
+pub struct ManagedApp {
+    pub id: AppId,
+    pub spec: AppSpec,
+    pub state: AppState,
+    /// Model name (from `cmd[0]`) when a compute service is attached.
+    pub model: Option<String>,
+    pub trainer: Option<Trainer>,
+    /// Kill/resume cycles this app went through (Fig. 9b bookkeeping).
+    pub adjustments: u32,
+}
+
+/// The central manager.
+pub struct DormMaster {
+    pub slaves: Vec<DormSlave>,
+    optimizer: Optimizer,
+    store: CheckpointStore,
+    compute: Option<(ComputeHandle, Manifest)>,
+    apps: BTreeMap<AppId, ManagedApp>,
+    next_id: u64,
+    /// Total adjusted-app count (Eq. 4 accumulated).
+    pub total_adjustments: u32,
+}
+
+impl DormMaster {
+    pub fn new(
+        cluster: &ClusterConfig,
+        dorm: DormConfig,
+        store: CheckpointStore,
+    ) -> Self {
+        DormMaster {
+            slaves: cluster
+                .servers
+                .iter()
+                .map(|s| DormSlave::new(s.name.clone(), s.capacity.clone()))
+                .collect(),
+            optimizer: Optimizer::with_mode(dorm, SolveMode::Heuristic),
+            store,
+            compute: None,
+            apps: BTreeMap::new(),
+            next_id: 0,
+            total_adjustments: 0,
+        }
+    }
+
+    /// Attach the PJRT compute service: submitted apps now get trainers.
+    pub fn with_compute(mut self, handle: ComputeHandle, manifest: Manifest) -> Self {
+        self.compute = Some((handle, manifest));
+        self
+    }
+
+    /// §III-B: submit the 6-tuple. Returns the assigned id; triggers an
+    /// allocation round.
+    pub fn submit(&mut self, spec: AppSpec) -> Result<AppId> {
+        spec.validate().context("invalid submission")?;
+        self.next_id += 1;
+        let id = AppId(self.next_id);
+        let model = self.compute.is_some().then(|| spec.cmd[0].clone());
+        if let (Some((_, manifest)), Some(m)) = (&self.compute, &model) {
+            let meta = manifest.model(m)?;
+            if meta.n_params == 0 {
+                bail!("model {m} has no parameters");
+            }
+        }
+        self.apps.insert(
+            id,
+            ManagedApp {
+                id,
+                spec,
+                state: AppState::Pending,
+                model,
+                trainer: None,
+                adjustments: 0,
+            },
+        );
+        self.reallocate()?;
+        Ok(id)
+    }
+
+    /// Mark an app completed (trainer converged / user cancelled), free its
+    /// partition and re-optimize for the survivors.
+    pub fn complete(&mut self, id: AppId) -> Result<()> {
+        let app = self
+            .apps
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown app {id}"))?;
+        if app.state.is_terminal() {
+            bail!("{id} already terminal");
+        }
+        app.state = AppState::Completed;
+        app.trainer = None;
+        for s in &mut self.slaves {
+            s.destroy_all(id);
+        }
+        let _ = self.store.gc(id);
+        self.reallocate()?;
+        Ok(())
+    }
+
+    /// Containers currently held by `id` across all slaves.
+    pub fn containers_of(&self, id: AppId) -> u32 {
+        self.slaves.iter().map(|s| s.count_for(id)).sum()
+    }
+
+    /// Current xᵢⱼ row for `id`.
+    fn placement_of(&self, id: AppId) -> BTreeMap<ServerId, u32> {
+        self.slaves
+            .iter()
+            .enumerate()
+            .filter_map(|(j, s)| {
+                let c = s.count_for(id);
+                (c > 0).then_some((ServerId(j), c))
+            })
+            .collect()
+    }
+
+    /// Eq. 1 over the slaves' double-entry books.
+    pub fn utilization(&self) -> f64 {
+        let m = self.slaves.first().map(|s| s.capacity().m()).unwrap_or(0);
+        let (used, cap) = self.slaves.iter().fold(
+            (Res::zeros(m), Res::zeros(m)),
+            |(mut u, mut c), s| {
+                u += &s.used();
+                c += s.capacity();
+                (u, c)
+            },
+        );
+        used.utilization_sum(&cap)
+    }
+
+    /// Run the optimizer and enforce the decision (§III-C).
+    pub fn reallocate(&mut self) -> Result<()> {
+        let capacities: Vec<Res> = self.slaves.iter().map(|s| s.capacity().clone()).collect();
+
+        // active = non-terminal apps; deferral order = newest pending first
+        let mut running: Vec<OptApp> = Vec::new();
+        let mut pending: Vec<OptApp> = Vec::new();
+        for app in self.apps.values() {
+            if app.state.is_terminal() {
+                continue;
+            }
+            let held = self.containers_of(app.id);
+            let opt = OptApp {
+                id: app.id,
+                demand: app.spec.demand.clone(),
+                weight: app.spec.weight as f64,
+                n_min: app.spec.n_min,
+                n_max: app.spec.n_max,
+                prev: (held > 0).then_some(held),
+                current: self.placement_of(app.id),
+            };
+            if held > 0 {
+                running.push(opt);
+            } else {
+                pending.push(opt);
+            }
+        }
+
+        let mut decision: Option<Decision> = None;
+        for admit in (0..=pending.len()).rev() {
+            let mut apps = running.clone();
+            apps.extend(pending[..admit].iter().cloned());
+            if let Some(d) = self.optimizer.allocate(&apps, &capacities) {
+                decision = Some(d);
+                break;
+            }
+        }
+        let Some(decision) = decision else {
+            log::warn!("no feasible allocation; keeping existing partitions");
+            return Ok(());
+        };
+
+        self.enforce(decision)
+    }
+
+    /// Fig. 5 steps (3)–(4): destroy/create containers, checkpoint + kill +
+    /// resume the adjusted apps, start the newly admitted ones.
+    fn enforce(&mut self, decision: Decision) -> Result<()> {
+        let adjusted: Vec<AppId> = decision.adjusted.clone();
+
+        // (a) checkpoint + kill adjusted apps before touching containers
+        for id in &adjusted {
+            let app = self.apps.get_mut(id).expect("adjusted app exists");
+            if let Some(trainer) = &app.trainer {
+                app.state = AppState::Checkpointing;
+                trainer.checkpoint(&self.store).context("checkpoint")?;
+            }
+            app.trainer = None;
+            app.state = AppState::Killed;
+            app.adjustments += 1;
+        }
+        self.total_adjustments += adjusted.len() as u32;
+
+        // (b) all destroys, then all creates (shrinkers free the space)
+        for (id, sid, count) in &decision.placement.destroy {
+            self.slaves[sid.0].destroy(*id, *count)?;
+        }
+        for (id, sid, count) in &decision.placement.create {
+            let demand = self.apps[id].spec.demand.clone();
+            self.slaves[sid.0].create(*id, &demand, *count)?;
+        }
+
+        // (c) resume adjusted + start newly admitted apps
+        let ids: Vec<AppId> = self.apps.keys().copied().collect();
+        for id in ids {
+            let held = self.containers_of(id);
+            let app = self.apps.get_mut(&id).unwrap();
+            if app.state.is_terminal() {
+                continue;
+            }
+            match app.state {
+                AppState::Killed if held > 0 => {
+                    // resume from checkpoint at the new width
+                    if let (Some((h, manifest)), Some(model)) = (&self.compute, &app.model) {
+                        let meta = manifest.model(model)?;
+                        let cfg = TrainerConfig {
+                            workers: held,
+                            ..TrainerConfig::default()
+                        };
+                        app.state = AppState::Resuming;
+                        app.trainer = Some(
+                            Trainer::resume(id, meta, h.clone(), cfg, &self.store)
+                                .context("resume")?,
+                        );
+                    }
+                    app.state = AppState::Running;
+                }
+                AppState::Pending if held > 0 => {
+                    if let (Some((h, manifest)), Some(model)) = (&self.compute, &app.model) {
+                        let meta = manifest.model(model)?;
+                        let cfg = TrainerConfig {
+                            workers: held,
+                            ..TrainerConfig::default()
+                        };
+                        app.trainer = Some(
+                            Trainer::new(id, meta, h.clone(), cfg).context("start")?,
+                        );
+                    }
+                    app.state = AppState::Running;
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive every running trainer `steps` BSP steps (time-shared on this
+    /// 1-core image). Returns (app, step, loss) logs.
+    pub fn train_round(&mut self, steps: u64) -> Result<Vec<(AppId, u64, f32)>> {
+        let mut out = Vec::new();
+        for app in self.apps.values_mut() {
+            if let Some(t) = &mut app.trainer {
+                let log = t.run(steps)?;
+                out.push((app.id, log.step, log.loss));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn app_state(&self, id: AppId) -> Option<AppState> {
+        self.apps.get(&id).map(|a| a.state)
+    }
+
+    pub fn app(&self, id: AppId) -> Option<&ManagedApp> {
+        self.apps.get(&id)
+    }
+
+    pub fn store(&self) -> &CheckpointStore {
+        &self.store
+    }
+
+    /// Active (non-terminal) app count.
+    pub fn active_apps(&self) -> usize {
+        self.apps.values().filter(|a| !a.state.is_terminal()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::Engine;
+
+    fn store(tag: &str) -> CheckpointStore {
+        let d = std::env::temp_dir().join(format!("dorm_master_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        CheckpointStore::new(d).unwrap()
+    }
+
+    fn spec(cpu: f64, gpu: f64, ram: f64, w: u32, lo: u32, hi: u32) -> AppSpec {
+        AppSpec {
+            executor: Engine::MxNet,
+            demand: Res::cpu_gpu_ram(cpu, gpu, ram),
+            weight: w,
+            n_max: hi,
+            n_min: lo,
+            cmd: ["lr".into(), "lr".into()],
+        }
+    }
+
+    fn master(tag: &str) -> DormMaster {
+        DormMaster::new(
+            &ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+            DormConfig { theta1: 0.5, theta2: 0.5 },
+            store(tag),
+        )
+    }
+
+    #[test]
+    fn lone_app_gets_max_partition() {
+        let mut m = master("lone");
+        let id = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 12)).unwrap();
+        assert_eq!(m.app_state(id), Some(AppState::Running));
+        assert_eq!(m.containers_of(id), 12);
+        assert!(m.utilization() > 0.0);
+    }
+
+    #[test]
+    fn second_submission_shrinks_first() {
+        let mut m = master("shrink");
+        let a = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 24)).unwrap();
+        assert_eq!(m.containers_of(a), 24); // all 48 CPUs
+        let b = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 24)).unwrap();
+        // capacity: 48 CPUs -> 24 containers split between the two
+        let (ca, cb) = (m.containers_of(a), m.containers_of(b));
+        assert!(ca + cb <= 24);
+        assert!(cb >= 1, "newcomer must be admitted");
+        assert!(m.total_adjustments >= 1, "first app was adjusted");
+        assert_eq!(m.app_state(a), Some(AppState::Running));
+        assert_eq!(m.app_state(b), Some(AppState::Running));
+    }
+
+    #[test]
+    fn completion_releases_and_regrows() {
+        let mut m = master("release");
+        let a = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 24)).unwrap();
+        let b = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 24)).unwrap();
+        m.complete(a).unwrap();
+        assert_eq!(m.app_state(a), Some(AppState::Completed));
+        assert_eq!(m.containers_of(a), 0);
+        // survivor takes the freed capacity (within θ₂ limits: 1 app -> 1 adjustment allowed)
+        assert!(m.containers_of(b) > 12, "{}", m.containers_of(b));
+        assert!(m.complete(a).is_err(), "double completion rejected");
+    }
+
+    #[test]
+    fn invalid_submissions_rejected() {
+        let mut m = master("invalid");
+        assert!(m.submit(spec(2.0, 0.0, 8.0, 1, 0, 4)).is_err()); // n_min 0
+        assert!(m.submit(spec(2.0, 0.0, 8.0, 0, 1, 4)).is_err()); // weight 0
+        assert_eq!(m.active_apps(), 0);
+    }
+
+    #[test]
+    fn oversized_floor_defers_app() {
+        let mut m = master("defer");
+        // demands exceed the whole cluster -> stays pending
+        let id = m.submit(spec(50.0, 0.0, 8.0, 1, 1, 2)).unwrap();
+        assert_eq!(m.app_state(id), Some(AppState::Pending));
+        assert_eq!(m.containers_of(id), 0);
+    }
+
+    #[test]
+    fn slave_books_match_master_utilization() {
+        let mut m = master("books");
+        let _ = m.submit(spec(3.0, 0.0, 16.0, 1, 1, 8)).unwrap();
+        let _ = m.submit(spec(2.0, 0.0, 8.0, 2, 1, 8)).unwrap();
+        // every slave within capacity
+        for s in &m.slaves {
+            assert!(s.used().fits_in(s.capacity()), "{}", s.name);
+        }
+        assert!(m.utilization() > 0.0 && m.utilization() <= 3.0);
+    }
+}

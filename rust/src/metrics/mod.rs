@@ -1,0 +1,154 @@
+//! Measured quantities of §IV-A as time series: resource utilization
+//! (Eq. 1), fairness loss (Eq. 2) and cumulative resource-adjustment
+//! overhead (Eq. 4), sampled by the master / simulator and consumed by the
+//! figure benches.
+
+use crate::util::stats;
+
+/// A named step-function time series (time in hours, value).
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        debug_assert!(
+            self.points.last().map_or(true, |&(lt, _)| t >= lt),
+            "time must be non-decreasing"
+        );
+        self.points.push((t, v));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|&(_, v)| v).fold(0.0, f64::max)
+    }
+
+    /// Time-weighted mean over [t0, t1] (step-function semantics).
+    pub fn mean_over(&self, t0: f64, t1: f64) -> f64 {
+        stats::time_weighted_mean(&self.points, t0, t1)
+    }
+
+    /// Resample onto a uniform grid (for figure output).
+    pub fn resample(&self, t0: f64, t1: f64, n: usize) -> Vec<(f64, f64)> {
+        assert!(n >= 2);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = t0 + (t1 - t0) * i as f64 / (n - 1) as f64;
+            let idx = self.points.partition_point(|&(pt, _)| pt <= t);
+            let v = if idx == 0 { 0.0 } else { self.points[idx - 1].1 };
+            out.push((t, v));
+        }
+        out
+    }
+}
+
+/// The three §IV-A metrics for one cluster-manager run.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    /// Eq. 1 over time.
+    pub utilization: Series,
+    /// Eq. 2 over time.
+    pub fairness_loss: Series,
+    /// Eq. 4, cumulative count of adjusted (killed+resumed) apps.
+    pub adjustments: Series,
+    /// Per-adjustment-operation affected-app counts (Fig. 8's "at most N
+    /// per operation" claim).
+    pub adjustment_batch_sizes: Vec<u32>,
+    /// (app tag, completion duration hours) per finished app (Fig. 9a).
+    pub completions: Vec<(String, f64)>,
+    /// Per-app completion durations keyed by workload index — used for the
+    /// matched-pair speedup of Fig. 9a (same app under two systems).
+    pub app_durations: std::collections::BTreeMap<u64, (String, f64)>,
+}
+
+impl RunMetrics {
+    pub fn new(name: &str) -> Self {
+        RunMetrics {
+            utilization: Series::new(format!("{name}.utilization")),
+            fairness_loss: Series::new(format!("{name}.fairness_loss")),
+            adjustments: Series::new(format!("{name}.adjustments")),
+            adjustment_batch_sizes: Vec::new(),
+            completions: Vec::new(),
+            app_durations: std::collections::BTreeMap::new(),
+        }
+    }
+
+    /// Mean duration per app tag (the Fig. 9a aggregation).
+    pub fn mean_duration_by_tag(&self) -> Vec<(String, f64)> {
+        let mut tags: Vec<String> = self
+            .completions
+            .iter()
+            .map(|(t, _)| t.clone())
+            .collect();
+        tags.sort();
+        tags.dedup();
+        tags.into_iter()
+            .map(|tag| {
+                let ds: Vec<f64> = self
+                    .completions
+                    .iter()
+                    .filter(|(t, _)| *t == tag)
+                    .map(|&(_, d)| d)
+                    .collect();
+                (tag, stats::mean(&ds))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_push_and_aggregates() {
+        let mut s = Series::new("u");
+        s.push(0.0, 1.0);
+        s.push(1.0, 3.0);
+        assert_eq!(s.last(), Some(3.0));
+        assert_eq!(s.max(), 3.0);
+        assert!((s.mean_over(0.0, 2.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resample_step_semantics() {
+        let mut s = Series::new("u");
+        s.push(0.0, 1.0);
+        s.push(10.0, 2.0);
+        let r = s.resample(0.0, 20.0, 5);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r[0].1, 1.0); // t=0
+        assert_eq!(r[1].1, 1.0); // t=5
+        assert_eq!(r[2].1, 2.0); // t=10
+        assert_eq!(r[4].1, 2.0); // t=20
+    }
+
+    #[test]
+    fn resample_before_first_point_is_zero() {
+        let mut s = Series::new("u");
+        s.push(5.0, 7.0);
+        let r = s.resample(0.0, 10.0, 3);
+        assert_eq!(r[0].1, 0.0);
+        assert_eq!(r[1].1, 7.0);
+    }
+
+    #[test]
+    fn mean_duration_groups_by_tag() {
+        let mut m = RunMetrics::new("x");
+        m.completions.push(("lr".into(), 2.0));
+        m.completions.push(("lr".into(), 4.0));
+        m.completions.push(("mf".into(), 1.0));
+        let by = m.mean_duration_by_tag();
+        assert_eq!(by, vec![("lr".into(), 3.0), ("mf".into(), 1.0)]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Translate a [`CountProblem`] into the paper's P2 MILP (Eqs 10–18),
+//! count-aggregated.
+//!
+//! Variable layout (n = |A| apps, c = carried-over apps):
+//!
+//! ```text
+//! [ n_0 .. n_{A-1} | l_0 .. l_{A-1} | r_{k_0} .. r_{k_{c-1}} ]
+//!    integer counts   continuous loss   binary adjust flags
+//! ```
+//!
+//! * objective (Eq. 10): max Σᵢ nᵢ · (Σₖ dᵢₖ/Cₖ)
+//! * capacity (Eq. 6, aggregated): Σᵢ nᵢ dᵢₖ ≤ Cₖ ∀k
+//! * bounds (Eqs 7–8): n_min ≤ nᵢ ≤ n_max
+//! * |·| linearization (Eqs 11–12): lᵢ ≥ ±(nᵢ·dsᵢ − ŝᵢ)
+//! * adjustment linearization (Eqs 13–14): M·rᵢ ≥ ±(nᵢ − prevᵢ), M = n_max
+//! * budgets (Eqs 15–16): Σ lᵢ ≤ ⌈θ₁·2m⌉, Σ rᵢ ≤ ⌈θ₂·|carried|⌉
+
+use crate::solver::heuristic::CountProblem;
+use crate::solver::{Cmp, Constraint, Lp, Milp};
+
+/// Build the exact count-aggregated P2.
+pub fn build_count_milp(p: &CountProblem) -> Milp {
+    let a = p.apps.len();
+    let m = p.cap.m();
+    let carried: Vec<usize> = (0..a).filter(|&i| p.apps[i].prev.is_some()).collect();
+    let nvars = 2 * a + carried.len();
+
+    // dominant share of one container of app i
+    let ds: Vec<f64> = p
+        .apps
+        .iter()
+        .map(|ap| ap.demand.dominant_share(&p.cap))
+        .collect();
+
+    // objective: utilization density per container for n_i; 0 for l, r
+    let mut objective = vec![0.0; nvars];
+    for i in 0..a {
+        objective[i] = p.apps[i].demand.utilization_sum(&p.cap);
+    }
+
+    let mut cons: Vec<Constraint> = Vec::new();
+
+    // Eq. 6 (aggregated capacity) per resource type
+    for k in 0..m {
+        if p.cap[k] <= 0.0 {
+            // zero-capacity type: demands on it must be zero to fit at all
+            continue;
+        }
+        let coeffs: Vec<(usize, f64)> = (0..a)
+            .filter(|&i| p.apps[i].demand[k] != 0.0)
+            .map(|i| (i, p.apps[i].demand[k]))
+            .collect();
+        if !coeffs.is_empty() {
+            cons.push(Constraint::new(coeffs, Cmp::Le, p.cap[k]));
+        }
+    }
+
+    // Eqs 7-8 bounds
+    for i in 0..a {
+        cons.push(Constraint::new(vec![(i, 1.0)], Cmp::Le, p.apps[i].n_max as f64));
+        cons.push(Constraint::new(vec![(i, 1.0)], Cmp::Ge, p.apps[i].n_min as f64));
+    }
+
+    // Eqs 11-12: l_i >= |n_i*ds_i - shat_i|
+    for i in 0..a {
+        let l = a + i;
+        // n_i*ds_i - l_i <= shat_i
+        cons.push(Constraint::new(
+            vec![(i, ds[i]), (l, -1.0)],
+            Cmp::Le,
+            p.shares_hat[i],
+        ));
+        // -n_i*ds_i - l_i <= -shat_i
+        cons.push(Constraint::new(
+            vec![(i, -ds[i]), (l, -1.0)],
+            Cmp::Le,
+            -p.shares_hat[i],
+        ));
+    }
+
+    // Eqs 13-14: M r >= |n_i - prev_i| for carried apps; r binary
+    for (ri, &i) in carried.iter().enumerate() {
+        let r = 2 * a + ri;
+        let prev = p.apps[i].prev.unwrap() as f64;
+        let big_m = (p.apps[i].n_max as f64).max(prev) + 1.0;
+        cons.push(Constraint::new(vec![(i, 1.0), (r, -big_m)], Cmp::Le, prev));
+        cons.push(Constraint::new(vec![(i, -1.0), (r, -big_m)], Cmp::Le, -prev));
+        cons.push(Constraint::new(vec![(r, 1.0)], Cmp::Le, 1.0));
+    }
+
+    // Eq. 15: Σ l_i <= ceil(theta1 * 2m)
+    cons.push(Constraint::new(
+        (0..a).map(|i| (a + i, 1.0)).collect(),
+        Cmp::Le,
+        p.fairness_bound(),
+    ));
+
+    // Eq. 16: Σ r_i <= ceil(theta2 * |carried|)
+    if !carried.is_empty() {
+        cons.push(Constraint::new(
+            (0..carried.len()).map(|ri| (2 * a + ri, 1.0)).collect(),
+            Cmp::Le,
+            p.adjust_bound() as f64,
+        ));
+    }
+
+    let mut integer = vec![false; nvars];
+    for v in integer.iter_mut().take(a) {
+        *v = true; // counts (Eq. 9)
+    }
+    for v in integer.iter_mut().skip(2 * a) {
+        *v = true; // adjust flags (Eq. 18)
+    }
+
+    Milp {
+        lp: Lp { n: nvars, objective, maximize: true, constraints: cons },
+        integer,
+    }
+}
+
+/// Lift a heuristic `counts` vector to a full variable-space point usable as
+/// a branch-and-bound warm start (fills in the implied lᵢ and rᵢ).
+pub fn counts_to_point(p: &CountProblem, counts: &[u32]) -> Vec<f64> {
+    let a = p.apps.len();
+    let carried: Vec<usize> = (0..a).filter(|&i| p.apps[i].prev.is_some()).collect();
+    let mut x = vec![0.0; 2 * a + carried.len()];
+    for i in 0..a {
+        x[i] = counts[i] as f64;
+        let s = p.apps[i].demand.times(counts[i]).dominant_share(&p.cap);
+        x[a + i] = (s - p.shares_hat[i]).abs();
+    }
+    for (ri, &i) in carried.iter().enumerate() {
+        x[2 * a + ri] = if p.apps[i].prev.unwrap() != counts[i] { 1.0 } else { 0.0 };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::Res;
+    use crate::solver::heuristic::{heuristic_solve, CountApp};
+    use crate::solver::{milp, MilpOptions};
+
+    fn problem() -> CountProblem {
+        CountProblem::new(
+            vec![
+                CountApp {
+                    demand: Res(vec![2.0, 8.0]),
+                    weight: 1.0,
+                    n_min: 1,
+                    n_max: 10,
+                    prev: Some(2),
+                },
+                CountApp {
+                    demand: Res(vec![4.0, 4.0]),
+                    weight: 2.0,
+                    n_min: 1,
+                    n_max: 10,
+                    prev: None,
+                },
+            ],
+            Res(vec![24.0, 96.0]),
+            0.3,
+            0.5,
+        )
+    }
+
+    #[test]
+    fn milp_solution_is_problem_feasible() {
+        let p = problem();
+        let m = build_count_milp(&p);
+        let out = milp::solve(&m, &MilpOptions::default());
+        let (x, _) = out.solution().expect("feasible");
+        let counts: Vec<u32> = (0..2).map(|i| x[i].round() as u32).collect();
+        assert!(p.is_feasible(&counts), "{counts:?}");
+    }
+
+    #[test]
+    fn warm_start_point_is_feasible_in_milp() {
+        let p = problem();
+        let counts = heuristic_solve(&p).unwrap();
+        let point = counts_to_point(&p, &counts);
+        let m = build_count_milp(&p);
+        // every constraint must hold at the lifted point
+        for (ci, c) in m.lp.constraints.iter().enumerate() {
+            let lhs: f64 = c.coeffs.iter().map(|&(j, v)| v * point[j]).sum();
+            let ok = match c.cmp {
+                Cmp::Le => lhs <= c.rhs + 1e-6,
+                Cmp::Ge => lhs >= c.rhs - 1e-6,
+                Cmp::Eq => (lhs - c.rhs).abs() <= 1e-6,
+            };
+            assert!(ok, "constraint {ci} violated at warm start: {lhs} vs {}", c.rhs);
+        }
+    }
+
+    #[test]
+    fn variable_layout_sizes() {
+        let p = problem();
+        let m = build_count_milp(&p);
+        // 2 counts + 2 losses + 1 carried flag
+        assert_eq!(m.lp.n, 5);
+        assert_eq!(m.integer, vec![true, true, false, false, true]);
+    }
+
+    #[test]
+    fn milp_beats_or_ties_heuristic() {
+        let p = problem();
+        let h = heuristic_solve(&p).unwrap();
+        let m = build_count_milp(&p);
+        let out = milp::solve(
+            &m,
+            &MilpOptions { warm_start: Some(counts_to_point(&p, &h)), ..Default::default() },
+        );
+        let (x, _) = out.solution().unwrap();
+        let counts: Vec<u32> = (0..2).map(|i| x[i].round() as u32).collect();
+        assert!(p.utilization(&counts) >= p.utilization(&h) - 1e-9);
+    }
+}

@@ -1,0 +1,404 @@
+//! The utilization–fairness optimizer (paper §IV).
+//!
+//! Builds the paper's **P2** from the current cluster state and solves it.
+//! Per DESIGN.md §6 the solve is count-aggregated: the paper's own
+//! observation that containers of one application are uniform (§III-A-4)
+//! collapses the per-(i,j) variables xᵢⱼ into per-app counts nᵢ = Σⱼ xᵢⱼ
+//! checked against aggregate capacity, followed by a placement round
+//! ([`crate::cluster::place`]) that reconstructs xᵢⱼ; if packing fails the
+//! optimizer retries with reduced counts.
+//!
+//! Three solve modes:
+//! * [`SolveMode::Heuristic`] — DRF-seeded greedy + local search (µs-scale);
+//! * [`SolveMode::Exact`] — our branch-and-bound MILP (the CPLEX stand-in),
+//!   warm-started with the heuristic incumbent;
+//! * [`SolveMode::Auto`] — exact for small |A|, heuristic beyond.
+//!
+//! The tests cross-validate heuristic vs exact on random instances; the
+//! `solver_micro` bench tracks both latencies against the paper's implied
+//! sub-second allocation budget.
+
+mod milp_build;
+
+pub use milp_build::{build_count_milp, counts_to_point};
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::app::AppId;
+use crate::cluster::{place, Placement, PlacementInput, ServerId};
+use crate::config::DormConfig;
+use crate::resources::Res;
+use crate::solver::heuristic::{heuristic_solve, heuristic_solve_relaxed, CountApp, CountProblem};
+use crate::solver::{milp, MilpOptions, MilpOutcome};
+
+/// One application as the optimizer sees it.
+#[derive(Clone, Debug)]
+pub struct OptApp {
+    pub id: AppId,
+    pub demand: Res,
+    pub weight: f64,
+    pub n_min: u32,
+    pub n_max: u32,
+    /// Containers held at t−1 (None for new arrivals; Eq. 4 exempts them).
+    pub prev: Option<u32>,
+    /// Current placement (empty for new arrivals).
+    pub current: BTreeMap<ServerId, u32>,
+}
+
+/// How to solve the count problem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveMode {
+    Heuristic,
+    Exact,
+    /// Exact (warm-started) when |A| ≤ 16, heuristic otherwise.
+    Auto,
+}
+
+/// Solver telemetry for the benches.
+#[derive(Clone, Debug, Default)]
+pub struct SolveStats {
+    pub used_exact: bool,
+    /// Fairness bound was unreachable; the best-effort relaxation was used
+    /// (fairness loss minimized instead of bounded, DESIGN.md §6).
+    pub relaxed: bool,
+    pub bb_nodes: usize,
+    pub solve_micros: u128,
+}
+
+/// The optimizer's output: new counts + concrete placement + the Eq. 1/2/4
+/// metrics of the decision.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    pub counts: BTreeMap<AppId, u32>,
+    pub placement: Placement,
+    pub utilization: f64,
+    pub fairness_loss: f64,
+    /// Carried-over apps whose allocation changed (Eq. 4 numerator).
+    pub adjusted: Vec<AppId>,
+    pub stats: SolveStats,
+}
+
+/// The utilization–fairness optimizer (a module of the DormMaster, §III-A).
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub cfg: DormConfig,
+    pub mode: SolveMode,
+}
+
+impl Optimizer {
+    pub fn new(cfg: DormConfig) -> Self {
+        Optimizer { cfg, mode: SolveMode::Auto }
+    }
+
+    pub fn with_mode(cfg: DormConfig, mode: SolveMode) -> Self {
+        Optimizer { cfg, mode }
+    }
+
+    fn count_problem(&self, apps: &[OptApp], cap: &Res) -> CountProblem {
+        CountProblem::new(
+            apps.iter()
+                .map(|a| CountApp {
+                    demand: a.demand.clone(),
+                    weight: a.weight,
+                    n_min: a.n_min,
+                    n_max: a.n_max,
+                    prev: a.prev,
+                })
+                .collect(),
+            cap.clone(),
+            self.cfg.theta1,
+            self.cfg.theta2,
+        )
+    }
+
+    /// Solve for per-app container counts. `None` = no feasible allocation
+    /// (the master keeps existing allocations, paper §IV-B).
+    pub fn solve_counts(
+        &self,
+        apps: &[OptApp],
+        cap: &Res,
+    ) -> Option<(Vec<u32>, SolveStats)> {
+        let t0 = Instant::now();
+        let p = self.count_problem(apps, cap);
+        let heur = heuristic_solve(&p);
+
+        let use_exact = match self.mode {
+            SolveMode::Heuristic => false,
+            SolveMode::Exact => true,
+            SolveMode::Auto => apps.len() <= 16,
+        };
+
+        let mut stats = SolveStats::default();
+        let counts = if use_exact {
+            let milp_prob = build_count_milp(&p);
+            let opts = MilpOptions {
+                warm_start: heur
+                    .as_ref()
+                    .map(|c| milp_build::counts_to_point(&p, c)),
+                node_limit: 50_000,
+                ..Default::default()
+            };
+            match milp::solve(&milp_prob, &opts) {
+                MilpOutcome::Optimal { x, nodes, .. }
+                | MilpOutcome::Feasible { x, nodes, .. } => {
+                    stats.used_exact = true;
+                    stats.bb_nodes = nodes;
+                    let counts: Vec<u32> =
+                        (0..apps.len()).map(|i| x[i].round() as u32).collect();
+                    // exact solution must itself be feasible in problem terms
+                    if p.is_feasible(&counts) {
+                        Some(counts)
+                    } else {
+                        heur
+                    }
+                }
+                _ => heur,
+            }
+        } else {
+            heur
+        };
+        let counts = match counts {
+            Some(c) => Some(c),
+            None => {
+                stats.relaxed = true;
+                heuristic_solve_relaxed(&p)
+            }
+        };
+
+        stats.solve_micros = t0.elapsed().as_micros();
+        counts.map(|c| (c, stats))
+    }
+
+    /// Full allocation: counts + placement.  Reduces counts (adjusted/new
+    /// apps first) when the packing round fails on fragmentation.
+    pub fn allocate(&self, apps: &[OptApp], capacities: &[Res]) -> Option<Decision> {
+        let m = capacities.first().map(|c| c.m()).unwrap_or(0);
+        let cap = capacities.iter().fold(Res::zeros(m), |mut acc, c| {
+            acc += c;
+            acc
+        });
+        let (mut counts, stats) = self.solve_counts(apps, &cap)?;
+        let p = self.count_problem(apps, &cap);
+
+        for _attempt in 0..256 {
+            let inputs: Vec<PlacementInput> = apps
+                .iter()
+                .zip(&counts)
+                .map(|(a, &c)| PlacementInput {
+                    app: a.id,
+                    demand: a.demand.clone(),
+                    target: c,
+                    current: a.current.clone(),
+                })
+                .collect();
+            if let Some(placement) = place(&inputs, capacities) {
+                let counts_map: BTreeMap<AppId, u32> = apps
+                    .iter()
+                    .zip(&counts)
+                    .map(|(a, &c)| (a.id, c))
+                    .collect();
+                let adjusted: Vec<AppId> = apps
+                    .iter()
+                    .zip(&counts)
+                    .filter(|(a, &c)| {
+                        a.prev.map_or(false, |prev| {
+                            prev != c
+                                || placement.assignment.get(&a.id) != Some(&a.current)
+                        })
+                    })
+                    .map(|(a, _)| a.id)
+                    .collect();
+                return Some(Decision {
+                    utilization: p.utilization(&counts),
+                    fairness_loss: p.fairness_loss_of(&counts),
+                    counts: counts_map,
+                    placement,
+                    adjusted,
+                    stats,
+                });
+            }
+            // Packing failed: decrement the shrink-preferred app with the
+            // lowest utilization density — prefer apps already being
+            // adjusted or new, so the θ₂ budget is not eaten by repair.
+            let mut cand: Option<(usize, (u8, f64))> = None;
+            for (i, a) in apps.iter().enumerate() {
+                if counts[i] > a.n_min {
+                    let already_adjusted =
+                        a.prev.map_or(true, |prev| prev != counts[i]);
+                    let class = if already_adjusted { 0u8 } else { 1u8 };
+                    let density = a.demand.utilization_sum(&cap);
+                    let key = (class, density);
+                    match &cand {
+                        Some((_, bk)) if *bk <= key => {}
+                        _ => cand = Some((i, key)),
+                    }
+                }
+            }
+            let (i, _) = cand?;
+            counts[i] -= 1;
+            let still_ok = if stats.relaxed {
+                // relaxed mode: capacity/bounds/θ₂ only
+                counts
+                    .iter()
+                    .zip(apps)
+                    .all(|(&c, a)| c >= a.n_min && c <= a.n_max)
+                    && p.used_of(&counts).fits_in(&cap)
+                    && p.adjustments(&counts) <= p.adjust_bound()
+            } else {
+                p.is_feasible(&counts)
+            };
+            if !still_ok {
+                // feasibility lost (e.g. θ₂): give up — master keeps the
+                // previous allocation.
+                return None;
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn oapp(id: u64, cpu: f64, ram: f64, lo: u32, hi: u32, prev: Option<u32>) -> OptApp {
+        OptApp {
+            id: AppId(id),
+            demand: Res(vec![cpu, ram]),
+            weight: 1.0,
+            n_min: lo,
+            n_max: hi,
+            prev,
+            current: BTreeMap::new(),
+        }
+    }
+
+    fn caps(n: usize, cpu: f64, ram: f64) -> Vec<Res> {
+        (0..n).map(|_| Res(vec![cpu, ram])).collect()
+    }
+
+    #[test]
+    fn single_app_scales_to_max() {
+        let opt = Optimizer::new(DormConfig::DORM3);
+        let apps = vec![oapp(1, 2.0, 8.0, 1, 10, None)];
+        let d = opt.allocate(&apps, &caps(4, 12.0, 64.0)).unwrap();
+        assert_eq!(d.counts[&AppId(1)], 10);
+        assert!(d.adjusted.is_empty(), "new app is not an adjustment");
+    }
+
+    #[test]
+    fn exact_and_heuristic_agree_on_objective() {
+        let apps = vec![
+            oapp(1, 2.0, 4.0, 1, 12, None),
+            oapp(2, 3.0, 2.0, 1, 12, None),
+            oapp(3, 1.0, 6.0, 1, 12, None),
+        ];
+        let cap = Res(vec![24.0, 48.0]);
+        let he = Optimizer::with_mode(DormConfig::DORM1, SolveMode::Heuristic);
+        let ex = Optimizer::with_mode(DormConfig::DORM1, SolveMode::Exact);
+        let (ch, _) = he.solve_counts(&apps, &cap).unwrap();
+        let (ce, se) = ex.solve_counts(&apps, &cap).unwrap();
+        assert!(se.used_exact);
+        let p = ex.count_problem(&apps, &cap);
+        // exact is optimal: its objective dominates (or ties) the heuristic
+        assert!(
+            p.utilization(&ce) >= p.utilization(&ch) - 1e-9,
+            "exact {} < heuristic {}",
+            p.utilization(&ce),
+            p.utilization(&ch)
+        );
+    }
+
+    #[test]
+    fn adjustment_budget_respected_end_to_end() {
+        // 5 carried apps, θ₂ = 0.2 -> at most ⌈1⌉ = 1 adjustment
+        let apps: Vec<OptApp> = (0..5)
+            .map(|i| {
+                let mut a = oapp(i, 1.0, 1.0, 1, 20, Some(2));
+                a.current = [(ServerId(0), 2)].into_iter().collect();
+                a
+            })
+            .collect();
+        let opt = Optimizer::with_mode(
+            DormConfig { theta1: 1.0, theta2: 0.2 },
+            SolveMode::Heuristic,
+        );
+        let d = opt.allocate(&apps, &caps(2, 20.0, 20.0)).unwrap();
+        assert!(d.adjusted.len() <= 1, "{:?}", d.adjusted);
+    }
+
+    #[test]
+    fn infeasible_floors_yield_none() {
+        let opt = Optimizer::new(DormConfig::DORM3);
+        let apps = vec![oapp(1, 10.0, 10.0, 4, 8, None)];
+        assert!(opt.allocate(&apps, &caps(1, 12.0, 12.0)).is_none());
+    }
+
+    #[test]
+    fn fragmentation_reduces_counts() {
+        // aggregate would admit more, but per-server caps of 4 CPUs hold
+        // only 2 containers of 2 CPUs each.
+        let opt = Optimizer::with_mode(
+            DormConfig { theta1: 1.0, theta2: 1.0 },
+            SolveMode::Heuristic,
+        );
+        let apps = vec![oapp(1, 2.0, 1.0, 1, 5, None)];
+        let capacities = vec![Res(vec![4.0, 100.0]), Res(vec![4.0, 100.0])];
+        let d = opt.allocate(&apps, &capacities).unwrap();
+        assert_eq!(d.counts[&AppId(1)], 4);
+    }
+
+    #[test]
+    fn prop_exact_never_worse_than_heuristic() {
+        prop::check(25, |rng: &mut Rng| {
+            let napps = rng.range_u64(1, 5) as usize;
+            let apps: Vec<OptApp> = (0..napps)
+                .map(|i| OptApp {
+                    id: AppId(i as u64),
+                    demand: Res(vec![
+                        rng.range_f64(0.5, 4.0),
+                        rng.range_f64(0.5, 4.0),
+                    ]),
+                    weight: rng.range_f64(0.5, 3.0),
+                    n_min: 1,
+                    n_max: 1 + rng.range_u64(0, 8) as u32,
+                    prev: if rng.f64() < 0.4 {
+                        Some(rng.range_u64(1, 5) as u32)
+                    } else {
+                        None
+                    },
+                    current: BTreeMap::new(),
+                })
+                .collect();
+            let cap = Res(vec![rng.range_f64(15.0, 60.0), rng.range_f64(15.0, 60.0)]);
+            let cfg = DormConfig {
+                theta1: rng.range_f64(0.1, 0.6),
+                theta2: rng.range_f64(0.1, 0.8),
+            };
+            let he = Optimizer::with_mode(cfg, SolveMode::Heuristic);
+            let ex = Optimizer::with_mode(cfg, SolveMode::Exact);
+            let p = ex.count_problem(&apps, &cap);
+            match (he.solve_counts(&apps, &cap), ex.solve_counts(&apps, &cap)) {
+                (Some((ch, _)), Some((ce, _))) => {
+                    if p.utilization(&ce) + 1e-6 < p.utilization(&ch) {
+                        return Err(format!(
+                            "exact {:?} (u={}) worse than heuristic {:?} (u={})",
+                            ce,
+                            p.utilization(&ce),
+                            ch,
+                            p.utilization(&ch)
+                        ));
+                    }
+                    Ok(())
+                }
+                // heuristic may fail where exact succeeds; the reverse
+                // (exact fails, heuristic succeeds) is a solver bug.
+                (Some(_), None) => Err("exact failed where heuristic found a point".into()),
+                _ => Ok(()),
+            }
+        });
+    }
+}

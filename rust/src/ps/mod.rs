@@ -1,0 +1,19 @@
+//! Parameter-server training runtime — the "distributed ML system"
+//! substrate standing in for MxNet / TensorFlow / Petuum / MPI-Caffe
+//! (DESIGN.md §1).
+//!
+//! Implements the PS framework of the paper's Fig. 2 in its BSP variant:
+//! the server holds the flat parameter vector; each *worker slot* (one per
+//! container of the application's partition) computes the gradient of its
+//! own data shard through the PJRT compute service; the server averages
+//! and applies.  On this 1-core image worker slots execute sequentially —
+//! the sharding semantics (and therefore the checkpoint/rescale math) are
+//! identical to a multi-node deployment, which is what Dorm's adjustment
+//! protocol needs: `test_data_parallel_equivalence` (python) and the
+//! trainer tests pin that invariant.
+
+mod data;
+mod trainer;
+
+pub use data::ShardGen;
+pub use trainer::{StepLog, SyncMode, Trainer, TrainerConfig};

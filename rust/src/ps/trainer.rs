@@ -1,0 +1,398 @@
+//! BSP data-parallel trainer over the PJRT compute service.
+//!
+//! One [`Trainer`] is the execution side of one Dorm application: its
+//! worker slots correspond to the containers of the application's
+//! partition.  The step loop is the PS framework's BSP round (Fig. 2):
+//!
+//! ```text
+//! step s: for each worker w < W:  (loss_w, g_w) = grad(params, shard(w, s))
+//!         params <- apply(params, Σ g_w, W, lr)
+//! ```
+//!
+//! Checkpointing snapshots `(params, step)` through the digest-checked
+//! [`CheckpointStore`]; resuming at a different worker count W′ continues
+//! the same training run at the new data-parallel width — the property
+//! Dorm's checkpoint-based resource adjustment (§III-C-2) relies on.
+
+use anyhow::{bail, Context, Result};
+
+use crate::app::{AppId, Checkpoint, CheckpointStore};
+use crate::runtime::{ComputeHandle, ModelMeta};
+
+use super::data::ShardGen;
+
+/// Task-scheduling policy of the local TaskScheduler (§II-A: "such as
+/// Bulk Synchronous Parallel (BSP) or Stale Synchronous Parallel (SSP)").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncMode {
+    /// All workers' gradients are averaged into one update per step.
+    Bsp,
+    /// Workers push gradients one at a time against a cached copy of the
+    /// parameters that may be up to `staleness` steps old (SSP bound s).
+    Ssp { staleness: u32 },
+}
+
+/// Trainer hyperparameters.
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    /// Worker slots (= containers of the partition).
+    pub workers: u32,
+    pub lr: f32,
+    /// Parameter-init seed.
+    pub seed: i32,
+    /// Data seed (teacher + shards).
+    pub data_seed: u64,
+    pub mode: SyncMode,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig { workers: 1, lr: 0.1, seed: 1, data_seed: 1, mode: SyncMode::Bsp }
+    }
+}
+
+/// One step's record (loss curve entry).
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    pub step: u64,
+    /// Mean worker loss at this step.
+    pub loss: f32,
+    pub wall_millis: u128,
+}
+
+/// The live trainer for one application.
+pub struct Trainer {
+    pub app: AppId,
+    meta: ModelMeta,
+    compute: ComputeHandle,
+    shards: ShardGen,
+    cfg: TrainerConfig,
+    params: Vec<f32>,
+    step: u64,
+    /// SSP: per-worker cached params + the step they were refreshed at.
+    stale_cache: Vec<(u64, Vec<f32>)>,
+    pub history: Vec<StepLog>,
+}
+
+impl Trainer {
+    /// Fresh trainer: params from the model's AOT'd init program.
+    pub fn new(
+        app: AppId,
+        meta: &ModelMeta,
+        compute: ComputeHandle,
+        cfg: TrainerConfig,
+    ) -> Result<Trainer> {
+        if cfg.workers == 0 {
+            bail!("trainer needs at least one worker slot");
+        }
+        let params = compute
+            .init(&meta.name, cfg.seed)
+            .context("init params")?;
+        Ok(Trainer {
+            app,
+            meta: meta.clone(),
+            shards: ShardGen::new(meta, cfg.data_seed),
+            compute,
+            cfg,
+            params,
+            step: 0,
+            stale_cache: Vec::new(),
+            history: Vec::new(),
+        })
+    }
+
+    /// Resume from the newest checkpoint in `store` with a (possibly
+    /// different) worker count — the §III-C-2 resume path.
+    pub fn resume(
+        app: AppId,
+        meta: &ModelMeta,
+        compute: ComputeHandle,
+        cfg: TrainerConfig,
+        store: &CheckpointStore,
+    ) -> Result<Trainer> {
+        let ckpt = store
+            .load_latest(app)?
+            .ok_or_else(|| anyhow::anyhow!("no checkpoint for {app}"))?;
+        if ckpt.model != meta.name {
+            bail!("checkpoint is for model {:?}, app runs {:?}", ckpt.model, meta.name);
+        }
+        if ckpt.params.len() != meta.n_params {
+            bail!(
+                "checkpoint has {} params, model wants {}",
+                ckpt.params.len(),
+                meta.n_params
+            );
+        }
+        Ok(Trainer {
+            app,
+            meta: meta.clone(),
+            shards: ShardGen::new(meta, cfg.data_seed),
+            compute,
+            cfg,
+            step: ckpt.step,
+            params: ckpt.params,
+            stale_cache: Vec::new(),
+            history: Vec::new(),
+        })
+    }
+
+    /// One training step across all worker slots (BSP or SSP semantics).
+    pub fn step(&mut self) -> Result<StepLog> {
+        let t0 = std::time::Instant::now();
+        let loss = match self.cfg.mode {
+            SyncMode::Bsp => self.step_bsp()?,
+            SyncMode::Ssp { staleness } => self.step_ssp(staleness)?,
+        };
+        self.step += 1;
+        let log = StepLog {
+            step: self.step,
+            loss,
+            wall_millis: t0.elapsed().as_millis(),
+        };
+        self.history.push(log);
+        Ok(log)
+    }
+
+    /// BSP round: every worker's gradient on the *same* params, one update.
+    fn step_bsp(&mut self) -> Result<f32> {
+        let mut gsum = vec![0.0f32; self.meta.n_params];
+        let mut loss_sum = 0.0f32;
+        for w in 0..self.cfg.workers {
+            let (x, y) = self.shards.batch(w, self.step);
+            let out = self
+                .compute
+                .grad(&self.meta.name, self.params.clone(), x, y)
+                .with_context(|| format!("grad worker {w} step {}", self.step))?;
+            for (acc, g) in gsum.iter_mut().zip(&out.grads) {
+                *acc += g;
+            }
+            loss_sum += out.loss;
+        }
+        self.params = self
+            .compute
+            .apply(
+                &self.meta.name,
+                std::mem::take(&mut self.params),
+                gsum,
+                self.cfg.workers as f32,
+                self.cfg.lr,
+            )
+            .context("apply")?;
+        Ok(loss_sum / self.cfg.workers as f32)
+    }
+
+    /// SSP round: each worker computes against a cached parameter copy no
+    /// older than `staleness` steps and the server applies immediately
+    /// (per-worker updates within the round, count = 1).
+    fn step_ssp(&mut self, staleness: u32) -> Result<f32> {
+        if self.stale_cache.len() != self.cfg.workers as usize {
+            self.stale_cache = (0..self.cfg.workers)
+                .map(|_| (self.step, self.params.clone()))
+                .collect();
+        }
+        let mut loss_sum = 0.0f32;
+        for w in 0..self.cfg.workers {
+            let (refreshed, cached) = &mut self.stale_cache[w as usize];
+            if self.step - *refreshed >= staleness as u64 {
+                *refreshed = self.step;
+                *cached = self.params.clone();
+            }
+            let (x, y) = self.shards.batch(w, self.step);
+            let out = self
+                .compute
+                .grad(&self.meta.name, cached.clone(), x, y)
+                .with_context(|| format!("ssp grad worker {w} step {}", self.step))?;
+            self.params = self
+                .compute
+                .apply(
+                    &self.meta.name,
+                    std::mem::take(&mut self.params),
+                    out.grads,
+                    1.0,
+                    self.cfg.lr,
+                )
+                .context("ssp apply")?;
+            loss_sum += out.loss;
+        }
+        Ok(loss_sum / self.cfg.workers as f32)
+    }
+
+    /// Run `n` steps, returning the last log.
+    pub fn run(&mut self, n: u64) -> Result<StepLog> {
+        let mut last = None;
+        for _ in 0..n {
+            last = Some(self.step()?);
+        }
+        last.ok_or_else(|| anyhow::anyhow!("run(0)"))
+    }
+
+    /// Snapshot to the checkpoint store (§III-C-2 save path).
+    pub fn checkpoint(&self, store: &CheckpointStore) -> Result<std::path::PathBuf> {
+        store.save(&Checkpoint {
+            app: self.app,
+            step: self.step,
+            model: self.meta.name.clone(),
+            loss: self.history.last().map(|l| l.loss).unwrap_or(f32::NAN),
+            params: self.params.clone(),
+        })
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn workers(&self) -> u32 {
+        self.cfg.workers
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.history.last().map(|l| l.loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ComputeService, Manifest};
+
+    fn service(models: &[&str]) -> Option<(Manifest, ComputeService)> {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.kv").exists() {
+            return None;
+        }
+        let manifest = Manifest::load(dir).unwrap();
+        let svc = ComputeService::start_filtered(&manifest, Some(models)).unwrap();
+        Some((manifest, svc))
+    }
+
+    fn store(tag: &str) -> CheckpointStore {
+        let d = std::env::temp_dir().join(format!("dorm_trainer_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        CheckpointStore::new(d).unwrap()
+    }
+
+    #[test]
+    fn lr_learns_with_two_workers() {
+        let Some((manifest, svc)) = service(&["lr"]) else { return };
+        let meta = manifest.model("lr").unwrap();
+        let cfg = TrainerConfig { workers: 2, lr: 0.5, ..Default::default() };
+        let mut t = Trainer::new(AppId(1), meta, svc.handle(), cfg).unwrap();
+        let first = t.step().unwrap().loss;
+        let last = t.run(25).unwrap().loss;
+        assert!(last < first * 0.7, "{first} -> {last}");
+    }
+
+    #[test]
+    fn checkpoint_resume_roundtrip_preserves_state() {
+        let Some((manifest, svc)) = service(&["lr"]) else { return };
+        let meta = manifest.model("lr").unwrap();
+        let st = store("roundtrip");
+        let cfg = TrainerConfig { workers: 2, lr: 0.3, ..Default::default() };
+        let mut t = Trainer::new(AppId(2), meta, svc.handle(), cfg.clone()).unwrap();
+        t.run(5).unwrap();
+        let params_before = t.params().to_vec();
+        t.checkpoint(&st).unwrap();
+
+        // kill + resume at a DIFFERENT width (the Dorm adjustment)
+        let cfg2 = TrainerConfig { workers: 4, ..cfg };
+        let mut r = Trainer::resume(AppId(2), meta, svc.handle(), cfg2, &st).unwrap();
+        assert_eq!(r.current_step(), 5);
+        assert_eq!(r.params(), params_before.as_slice());
+        assert_eq!(r.workers(), 4);
+        // training continues and still improves
+        let l1 = r.step().unwrap().loss;
+        let l2 = r.run(15).unwrap().loss;
+        assert!(l2 < l1 * 1.05, "{l1} -> {l2}");
+    }
+
+    #[test]
+    fn resume_guards_model_mismatch() {
+        let Some((manifest, svc)) = service(&["lr", "mf"]) else { return };
+        let st = store("mismatch");
+        let lr = manifest.model("lr").unwrap();
+        let mf = manifest.model("mf").unwrap();
+        let mut t = Trainer::new(AppId(3), lr, svc.handle(), TrainerConfig::default()).unwrap();
+        t.run(1).unwrap();
+        t.checkpoint(&st).unwrap();
+        let err = match Trainer::resume(AppId(3), mf, svc.handle(), TrainerConfig::default(), &st) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("resume with wrong model must fail"),
+        };
+        assert!(err.contains("model") || err.contains("checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn deterministic_replay_same_seeds() {
+        let Some((manifest, svc)) = service(&["mf"]) else { return };
+        let meta = manifest.model("mf").unwrap();
+        let cfg = TrainerConfig { workers: 2, lr: 0.2, seed: 9, data_seed: 5, ..Default::default() };
+        let mut a = Trainer::new(AppId(4), meta, svc.handle(), cfg.clone()).unwrap();
+        let mut b = Trainer::new(AppId(5), meta, svc.handle(), cfg).unwrap();
+        a.run(3).unwrap();
+        b.run(3).unwrap();
+        assert_eq!(a.params(), b.params(), "same seeds must replay identically");
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let Some((manifest, svc)) = service(&["lr"]) else { return };
+        let meta = manifest.model("lr").unwrap();
+        let cfg = TrainerConfig { workers: 0, ..Default::default() };
+        assert!(Trainer::new(AppId(6), meta, svc.handle(), cfg).is_err());
+    }
+}
+
+#[cfg(test)]
+mod ssp_tests {
+    use super::*;
+    use crate::runtime::{ComputeService, Manifest};
+
+    fn service() -> Option<(Manifest, ComputeService)> {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.kv").exists() {
+            return None;
+        }
+        let manifest = Manifest::load(dir).unwrap();
+        let svc = ComputeService::start_filtered(&manifest, Some(&["lr"])).unwrap();
+        Some((manifest, svc))
+    }
+
+    #[test]
+    fn ssp_converges_and_differs_from_bsp() {
+        let Some((manifest, svc)) = service() else { return };
+        let meta = manifest.model("lr").unwrap();
+        let bsp_cfg = TrainerConfig { workers: 3, lr: 0.3, ..Default::default() };
+        let ssp_cfg = TrainerConfig { mode: SyncMode::Ssp { staleness: 2 }, ..bsp_cfg.clone() };
+
+        let mut bsp = Trainer::new(crate::app::AppId(11), meta, svc.handle(), bsp_cfg).unwrap();
+        let mut ssp = Trainer::new(crate::app::AppId(12), meta, svc.handle(), ssp_cfg).unwrap();
+        let b0 = bsp.step().unwrap().loss;
+        let s0 = ssp.step().unwrap().loss;
+        let b = bsp.run(20).unwrap().loss;
+        let s = ssp.run(20).unwrap().loss;
+        assert!(b < b0 * 0.8, "bsp: {b0} -> {b}");
+        assert!(s < s0 * 0.8, "ssp must converge too: {s0} -> {s}");
+        // different update schedules -> different trajectories
+        assert_ne!(bsp.params(), ssp.params());
+    }
+
+    #[test]
+    fn ssp_staleness_zero_refreshes_every_step() {
+        let Some((manifest, svc)) = service() else { return };
+        let meta = manifest.model("lr").unwrap();
+        let cfg = TrainerConfig {
+            workers: 2,
+            lr: 0.2,
+            mode: SyncMode::Ssp { staleness: 0 },
+            ..Default::default()
+        };
+        let mut t = Trainer::new(crate::app::AppId(13), meta, svc.handle(), cfg).unwrap();
+        let first = t.step().unwrap().loss;
+        let last = t.run(15).unwrap().loss;
+        assert!(last < first, "{first} -> {last}");
+    }
+}

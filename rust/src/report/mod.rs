@@ -1,0 +1,141 @@
+//! Report emitters: ASCII tables and series plots for the figure benches,
+//! plus CSV output for external plotting.
+
+use std::fmt::Write as _;
+
+/// Render a table with a header row.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            let _ = write!(out, "+{}", "-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        let _ = write!(out, "| {:w$} ", h, w = widths[i]);
+    }
+    out.push_str("|\n");
+    sep(&mut out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            let _ = write!(out, "| {:w$} ", cell, w = widths[i]);
+        }
+        out.push_str("|\n");
+    }
+    sep(&mut out);
+    out
+}
+
+/// ASCII line chart of one or more (label, series) over a shared x grid.
+/// Series are (x, y) pairs; y is auto-scaled.
+pub fn ascii_chart(series: &[(&str, &[(f64, f64)])], height: usize, width: usize) -> String {
+    let mut out = String::new();
+    if series.is_empty() || series.iter().all(|(_, s)| s.is_empty()) {
+        return "(empty chart)\n".into();
+    }
+    let ymax = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().map(|&(_, y)| y))
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let xmin = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().map(|&(x, _)| x))
+        .fold(f64::MAX, f64::min);
+    let xmax = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().map(|&(x, _)| x))
+        .fold(f64::MIN, f64::max)
+        .max(xmin + 1e-12);
+
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in s.iter() {
+            let col = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let row = ((1.0 - (y / ymax).clamp(0.0, 1.0)) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = mark;
+        }
+    }
+    let _ = writeln!(out, "  ymax = {ymax:.3}");
+    for row in &grid {
+        let _ = writeln!(out, "  |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "  +{}", "-".repeat(width));
+    let _ = writeln!(out, "   x: {xmin:.2} .. {xmax:.2}");
+    for (si, (label, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "   {} = {label}", marks[si % marks.len()]);
+    }
+    out
+}
+
+/// CSV with a header; columns are (name, values) of equal length.
+pub fn csv(columns: &[(&str, Vec<f64>)]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{}",
+        columns.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(",")
+    );
+    let nrows = columns.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+    for r in 0..nrows {
+        let row: Vec<String> = columns
+            .iter()
+            .map(|(_, v)| v.get(r).map(|x| format!("{x}")).unwrap_or_default())
+            .collect();
+        let _ = writeln!(out, "{}", row.join(","));
+    }
+    out
+}
+
+/// Write a CSV file under `reports/`, creating the directory.
+pub fn write_csv(name: &str, columns: &[(&str, Vec<f64>)]) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, csv(columns))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = table(
+            &["name", "value"],
+            &[
+                vec!["utilization".into(), "2.32".into()],
+                vec!["x".into(), "1".into()],
+            ],
+        );
+        assert!(t.contains("| utilization | 2.32  |"));
+        assert!(t.starts_with('+'));
+    }
+
+    #[test]
+    fn chart_handles_empty_and_data() {
+        assert_eq!(ascii_chart(&[], 5, 10), "(empty chart)\n");
+        let s = [(0.0, 0.0), (1.0, 1.0), (2.0, 2.0)];
+        let c = ascii_chart(&[("up", &s)], 5, 20);
+        assert!(c.contains("ymax = 2.000"));
+        assert!(c.contains("* = up"));
+    }
+
+    #[test]
+    fn csv_round_numbers() {
+        let c = csv(&[("t", vec![0.0, 1.0]), ("u", vec![2.5, 3.5])]);
+        assert_eq!(c, "t,u\n0,2.5\n1,3.5\n");
+    }
+}

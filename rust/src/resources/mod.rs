@@ -1,0 +1,264 @@
+//! Resource algebra: the `m`-typed vectors underlying every equation in the
+//! paper (§IV, Table I).
+//!
+//! A [`Res`] is a non-negative vector over the cluster's resource types.
+//! The paper's testbed uses m = 3 (CPU cores, GPUs, RAM GB) — provided by
+//! [`Res::cpu_gpu_ram`] — but everything here (and in [`crate::drf`] /
+//! [`crate::solver`]) works for arbitrary `m`, which the property tests
+//! exercise.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Index, Mul, Sub, SubAssign};
+
+/// Names of the standard testbed resource dimensions.
+pub const STD_KINDS: [&str; 3] = ["cpu", "gpu", "ram_gb"];
+
+/// A non-negative resource vector (demand, capacity or usage).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Res(pub Vec<f64>);
+
+impl Res {
+    /// Zero vector with `m` resource types.
+    pub fn zeros(m: usize) -> Self {
+        Res(vec![0.0; m])
+    }
+
+    /// The standard ⟨CPU, GPU, RAM-GB⟩ triple used by the paper's testbed.
+    pub fn cpu_gpu_ram(cpu: f64, gpu: f64, ram_gb: f64) -> Self {
+        Res(vec![cpu, gpu, ram_gb])
+    }
+
+    /// Number of resource types (the paper's `m`).
+    pub fn m(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.0.iter().all(|&x| x == 0.0)
+    }
+
+    /// True iff every component of `self` fits within `cap`.
+    pub fn fits_in(&self, cap: &Res) -> bool {
+        debug_assert_eq!(self.m(), cap.m());
+        self.0.iter().zip(&cap.0).all(|(d, c)| d <= &(c + 1e-9))
+    }
+
+    /// Component-wise max.
+    pub fn max(&self, other: &Res) -> Res {
+        debug_assert_eq!(self.m(), other.m());
+        Res(self
+            .0
+            .iter()
+            .zip(&other.0)
+            .map(|(a, b)| a.max(*b))
+            .collect())
+    }
+
+    /// Saturating subtraction (clamps at zero) — useful for "free capacity"
+    /// bookkeeping where float dust must not go negative.
+    pub fn saturating_sub(&self, other: &Res) -> Res {
+        debug_assert_eq!(self.m(), other.m());
+        Res(self
+            .0
+            .iter()
+            .zip(&other.0)
+            .map(|(a, b)| (a - b).max(0.0))
+            .collect())
+    }
+
+    /// Dominant share of this demand against a capacity: the max over
+    /// resource types of demand/capacity (zero-capacity types are skipped —
+    /// a demand on a zero-capacity type never fits and is caught by
+    /// `fits_in`). This is the DRF "dominant share" primitive (§IV-A-2).
+    pub fn dominant_share(&self, cap: &Res) -> f64 {
+        debug_assert_eq!(self.m(), cap.m());
+        self.0
+            .iter()
+            .zip(&cap.0)
+            .filter(|(_, c)| **c > 0.0)
+            .map(|(d, c)| d / c)
+            .fold(0.0, f64::max)
+    }
+
+    /// Index of the dominant resource (argmax of demand/capacity).
+    pub fn dominant_kind(&self, cap: &Res) -> usize {
+        let mut best = (0usize, -1.0f64);
+        for (k, (d, c)) in self.0.iter().zip(&cap.0).enumerate() {
+            if *c > 0.0 {
+                let s = d / c;
+                if s > best.1 {
+                    best = (k, s);
+                }
+            }
+        }
+        best.0
+    }
+
+    /// Eq. (1) inner term: sum over types of usage/capacity ("sum of all m
+    /// types of hardware resources' utilization"). Ranges in [0, m].
+    pub fn utilization_sum(&self, cap: &Res) -> f64 {
+        debug_assert_eq!(self.m(), cap.m());
+        self.0
+            .iter()
+            .zip(&cap.0)
+            .filter(|(_, c)| **c > 0.0)
+            .map(|(u, c)| u / c)
+            .sum()
+    }
+
+    /// Scale by an integer container count.
+    pub fn times(&self, n: u32) -> Res {
+        self.clone() * n as f64
+    }
+}
+
+impl Add for Res {
+    type Output = Res;
+    fn add(self, rhs: Res) -> Res {
+        debug_assert_eq!(self.m(), rhs.m());
+        Res(self.0.iter().zip(&rhs.0).map(|(a, b)| a + b).collect())
+    }
+}
+
+impl AddAssign<&Res> for Res {
+    fn add_assign(&mut self, rhs: &Res) {
+        debug_assert_eq!(self.m(), rhs.m());
+        for (a, b) in self.0.iter_mut().zip(&rhs.0) {
+            *a += b;
+        }
+    }
+}
+
+impl Sub for Res {
+    type Output = Res;
+    fn sub(self, rhs: Res) -> Res {
+        debug_assert_eq!(self.m(), rhs.m());
+        Res(self.0.iter().zip(&rhs.0).map(|(a, b)| a - b).collect())
+    }
+}
+
+impl SubAssign<&Res> for Res {
+    fn sub_assign(&mut self, rhs: &Res) {
+        debug_assert_eq!(self.m(), rhs.m());
+        for (a, b) in self.0.iter_mut().zip(&rhs.0) {
+            *a -= b;
+        }
+    }
+}
+
+impl Mul<f64> for Res {
+    type Output = Res;
+    fn mul(self, k: f64) -> Res {
+        Res(self.0.iter().map(|a| a * k).collect())
+    }
+}
+
+impl Index<usize> for Res {
+    type Output = f64;
+    fn index(&self, i: usize) -> &f64 {
+        &self.0[i]
+    }
+}
+
+impl fmt::Display for Res {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "⟨")?;
+        for (i, v) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            if self.m() == 3 {
+                write!(f, "{} {}", v, STD_KINDS[i])?;
+            } else {
+                write!(f, "{v}")?;
+            }
+        }
+        write!(f, "⟩")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn fits_and_arith() {
+        let d = Res::cpu_gpu_ram(2.0, 1.0, 8.0);
+        let c = Res::cpu_gpu_ram(12.0, 1.0, 64.0);
+        assert!(d.fits_in(&c));
+        assert!(!d.times(2).fits_in(&c)); // 2 GPUs > 1
+        let free = c.clone().sub(d.clone());
+        assert_eq!(free, Res::cpu_gpu_ram(10.0, 0.0, 56.0));
+        assert!((d.clone() * 3.0)[0] - 6.0 < 1e-12);
+    }
+
+    #[test]
+    fn dominant_share_matches_paper_example() {
+        // demand ⟨2 CPU, 0 GPU, 8 GB⟩ on capacity ⟨240, 5, 2560⟩:
+        // shares = (1/120, 0, 1/320) -> dominant = CPU.
+        let d = Res::cpu_gpu_ram(2.0, 0.0, 8.0);
+        let c = Res::cpu_gpu_ram(240.0, 5.0, 2560.0);
+        assert!((d.dominant_share(&c) - 2.0 / 240.0).abs() < 1e-12);
+        assert_eq!(d.dominant_kind(&c), 0);
+        // with a GPU the GPU dominates: 1/5 > 4/240
+        let d2 = Res::cpu_gpu_ram(4.0, 1.0, 32.0);
+        assert_eq!(d2.dominant_kind(&c), 1);
+        assert!((d2.dominant_share(&c) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_sum_bounds() {
+        let c = Res::cpu_gpu_ram(10.0, 2.0, 100.0);
+        assert_eq!(Res::zeros(3).utilization_sum(&c), 0.0);
+        assert!((c.utilization_sum(&c) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_capacity_types_are_skipped() {
+        let d = Res(vec![1.0, 0.0]);
+        let c = Res(vec![2.0, 0.0]);
+        assert_eq!(d.dominant_share(&c), 0.5);
+        assert_eq!(d.utilization_sum(&c), 0.5);
+    }
+
+    #[test]
+    fn saturating_sub_clamps() {
+        let a = Res(vec![1.0, 5.0]);
+        let b = Res(vec![2.0, 3.0]);
+        assert_eq!(a.saturating_sub(&b), Res(vec![0.0, 2.0]));
+    }
+
+    #[test]
+    fn prop_dominant_share_scales_linearly() {
+        prop::check(200, |rng| {
+            let m = rng.range_u64(1, 5) as usize;
+            let d = Res((0..m).map(|_| rng.range_f64(0.0, 10.0)).collect());
+            let c = Res((0..m).map(|_| rng.range_f64(1.0, 100.0)).collect());
+            let k = rng.range_u64(1, 9) as u32;
+            prop::close(
+                d.times(k).dominant_share(&c),
+                d.dominant_share(&c) * k as f64,
+                1e-9,
+            )
+        });
+    }
+
+    #[test]
+    fn prop_fits_in_consistent_with_dominant_share() {
+        prop::check(200, |rng| {
+            let m = rng.range_u64(1, 4) as usize;
+            let c = Res((0..m).map(|_| rng.range_f64(1.0, 50.0)).collect());
+            let d = Res((0..m).map(|_| rng.range_f64(0.0, 60.0)).collect());
+            let fits = d.fits_in(&c);
+            let share = d.dominant_share(&c);
+            if fits && share > 1.0 + 1e-9 {
+                return Err(format!("fits but share {share} > 1"));
+            }
+            if !fits && share <= 1.0 - 1e-9 {
+                return Err(format!("doesn't fit but share {share} <= 1"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,191 @@
+//! `artifacts/manifest.kv` parsing — the contract between `aot.py` and the
+//! Rust runtime (DESIGN.md §5).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::parse_kv_file;
+
+/// Element type of a model input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other:?} in manifest"),
+        }
+    }
+}
+
+/// One model's metadata + artifact paths.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_params: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: Dtype,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: Dtype,
+    /// Free-form model hyperparameters (vocab, d_model, ...).
+    pub meta: BTreeMap<String, String>,
+    pub init_path: PathBuf,
+    pub grad_path: PathBuf,
+    pub apply_path: PathBuf,
+}
+
+impl ModelMeta {
+    /// Per-worker batch size (first x dimension).
+    pub fn batch(&self) -> usize {
+        self.x_shape.first().copied().unwrap_or(1)
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|p| p.parse::<usize>().map_err(|_| anyhow!("bad shape {s:?}")))
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.kv` and resolve artifact paths.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let kv = parse_kv_file(&dir.join("manifest.kv"))?;
+        let names = kv
+            .get("manifest.models")
+            .ok_or_else(|| anyhow!("manifest.models missing"))?;
+        let mut models = BTreeMap::new();
+        for name in names.split(',').filter(|s| !s.is_empty()) {
+            let pfx = format!("model.{name}");
+            let get = |k: &str| -> Result<&String> {
+                kv.get(&format!("{pfx}.{k}"))
+                    .ok_or_else(|| anyhow!("{pfx}.{k} missing from manifest"))
+            };
+            let meta = kv
+                .iter()
+                .filter_map(|(k, v)| {
+                    k.strip_prefix(&format!("{pfx}.meta."))
+                        .map(|mk| (mk.to_string(), v.clone()))
+                })
+                .collect();
+            let m = ModelMeta {
+                name: name.to_string(),
+                n_params: get("params")?.parse().context("params")?,
+                x_shape: parse_shape(get("x.shape")?)?,
+                x_dtype: Dtype::parse(get("x.dtype")?)?,
+                y_shape: parse_shape(get("y.shape")?)?,
+                y_dtype: Dtype::parse(get("y.dtype")?)?,
+                meta,
+                init_path: dir.join(get("artifact.init")?),
+                grad_path: dir.join(get("artifact.grad")?),
+                apply_path: dir.join(get("artifact.apply")?),
+            };
+            for p in [&m.init_path, &m.grad_path, &m.apply_path] {
+                if !p.exists() {
+                    bail!("artifact {} missing (run `make artifacts`)", p.display());
+                }
+            }
+            models.insert(name.to_string(), m);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest ({:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, extra: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        for f in ["toy_init.hlo.txt", "toy_grad.hlo.txt", "toy_apply.hlo.txt"] {
+            std::fs::write(dir.join(f), "HloModule toy").unwrap();
+        }
+        std::fs::write(
+            dir.join("manifest.kv"),
+            format!(
+                "manifest.models=toy\n\
+                 model.toy.params=5\n\
+                 model.toy.x.shape=8x4\n\
+                 model.toy.x.dtype=f32\n\
+                 model.toy.y.shape=8\n\
+                 model.toy.y.dtype=f32\n\
+                 model.toy.meta.d=4\n\
+                 model.toy.artifact.init=toy_init.hlo.txt\n\
+                 model.toy.artifact.grad=toy_grad.hlo.txt\n\
+                 model.toy.artifact.apply=toy_apply.hlo.txt\n{extra}"
+            ),
+        )
+        .unwrap();
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dorm_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let dir = tmp("ok");
+        write_manifest(&dir, "");
+        let m = Manifest::load(&dir).unwrap();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.n_params, 5);
+        assert_eq!(toy.x_shape, vec![8, 4]);
+        assert_eq!(toy.batch(), 8);
+        assert_eq!(toy.x_dtype, Dtype::F32);
+        assert_eq!(toy.meta_usize("d"), Some(4));
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_fails() {
+        let dir = tmp("missing");
+        write_manifest(&dir, "");
+        std::fs::remove_file(dir.join("toy_grad.hlo.txt")).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // integration: parse the actual artifacts/ directory when built
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.kv").exists() {
+            let m = Manifest::load(dir).unwrap();
+            for name in ["lr", "mf", "tfm"] {
+                let meta = m.model(name).unwrap();
+                assert!(meta.n_params > 0);
+            }
+        }
+    }
+}

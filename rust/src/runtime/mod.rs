@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT'd HLO-text artifacts and execute them from
+//! the L3 hot path.
+//!
+//! Build-time Python (`python/compile/aot.py`) writes one HLO text file per
+//! model function (`{model}_{init,grad,apply}.hlo.txt`) plus `manifest.kv`;
+//! this module parses the manifest ([`Manifest`]), compiles the programs on
+//! the PJRT CPU client (`xla` crate) and serves execute requests.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so a single
+//! **compute-service thread** owns the client and all compiled executables;
+//! the rest of the system talks to it through an mpsc request channel via
+//! the cloneable [`ComputeHandle`].  On this 1-core image that serialization
+//! costs nothing and it keeps the unsafe surface at zero.
+
+mod manifest;
+mod service;
+
+pub use manifest::{Dtype, Manifest, ModelMeta};
+pub use service::{ComputeHandle, ComputeService, GradOut, TensorData};

@@ -1,0 +1,422 @@
+//! The compute service: a dedicated thread owning the PJRT CPU client and
+//! every compiled model executable, serving init/grad/apply requests over
+//! channels (see module docs in `mod.rs` for why a single owner thread).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Dtype, Manifest, ModelMeta};
+
+/// An input tensor crossing the service boundary.
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+}
+
+/// grad() output: loss + flat gradient.
+#[derive(Clone, Debug)]
+pub struct GradOut {
+    pub loss: f32,
+    pub grads: Vec<f32>,
+}
+
+enum Request {
+    Init { model: String, seed: i32, reply: mpsc::Sender<Result<Vec<f32>>> },
+    Grad {
+        model: String,
+        params: Vec<f32>,
+        x: TensorData,
+        y: TensorData,
+        reply: mpsc::Sender<Result<GradOut>>,
+    },
+    Apply {
+        model: String,
+        params: Vec<f32>,
+        gsum: Vec<f32>,
+        count: f32,
+        lr: f32,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Stats { reply: mpsc::Sender<ServiceStats> },
+    Shutdown,
+}
+
+/// Execution counters (perf pass bookkeeping).
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub init_calls: u64,
+    pub grad_calls: u64,
+    pub apply_calls: u64,
+    pub exec_micros: u128,
+}
+
+/// Cloneable handle to the compute-service thread.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ComputeHandle {
+    /// Run `{model}_init`: seed -> params.
+    pub fn init(&self, model: &str, seed: i32) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Init { model: model.into(), seed, reply })
+            .map_err(|_| anyhow!("compute service down"))?;
+        rx.recv().map_err(|_| anyhow!("compute service died"))?
+    }
+
+    /// Run `{model}_grad`: (params, x, y) -> (loss, grads).
+    pub fn grad(&self, model: &str, params: Vec<f32>, x: TensorData, y: TensorData) -> Result<GradOut> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Grad { model: model.into(), params, x, y, reply })
+            .map_err(|_| anyhow!("compute service down"))?;
+        rx.recv().map_err(|_| anyhow!("compute service died"))?
+    }
+
+    /// Run `{model}_apply`: SGD over summed worker grads.
+    pub fn apply(&self, model: &str, params: Vec<f32>, gsum: Vec<f32>, count: f32, lr: f32) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Apply { model: model.into(), params, gsum, count, lr, reply })
+            .map_err(|_| anyhow!("compute service down"))?;
+        rx.recv().map_err(|_| anyhow!("compute service died"))?
+    }
+
+    pub fn stats(&self) -> Result<ServiceStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Stats { reply })
+            .map_err(|_| anyhow!("compute service down"))?;
+        rx.recv().map_err(|_| anyhow!("compute service died"))
+    }
+}
+
+/// The service: spawn once, hand out [`ComputeHandle`]s.
+pub struct ComputeService {
+    handle: ComputeHandle,
+    join: Option<JoinHandle<()>>,
+    tx: mpsc::Sender<Request>,
+}
+
+struct Compiled {
+    init: xla::PjRtLoadedExecutable,
+    grad: xla::PjRtLoadedExecutable,
+    apply: xla::PjRtLoadedExecutable,
+    meta: ModelMeta,
+}
+
+impl ComputeService {
+    /// Start the service thread: creates the PJRT CPU client and compiles
+    /// every model in the manifest (reported errors fail the constructor).
+    pub fn start(manifest: &Manifest) -> Result<ComputeService> {
+        Self::start_filtered(manifest, None)
+    }
+
+    /// As [`ComputeService::start`] but compiling only the named models —
+    /// XLA compilation of the big transformer takes tens of seconds on
+    /// this 1-core image, so tests and examples compile what they use.
+    pub fn start_filtered(manifest: &Manifest, only: Option<&[&str]>) -> Result<ComputeService> {
+        let mut manifest = manifest.clone();
+        if let Some(names) = only {
+            manifest.models.retain(|k, _| names.contains(&k.as_str()));
+        }
+        let manifest = manifest;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("dorm-compute".into())
+            .spawn(move || service_main(manifest, rx, ready_tx))
+            .context("spawning compute thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("compute service died during startup"))??;
+        Ok(ComputeService {
+            handle: ComputeHandle { tx: tx.clone() },
+            join: Some(join),
+            tx,
+        })
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn service_main(manifest: Manifest, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
+    let setup = (|| -> Result<(xla::PjRtClient, BTreeMap<String, Compiled>)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        let mut compiled = BTreeMap::new();
+        for (name, meta) in &manifest.models {
+            let load = |p: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+                let proto = xla::HloModuleProto::from_text_file(
+                    p.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                )
+                .map_err(|e| anyhow!("parsing {}: {e}", p.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e}", p.display()))
+            };
+            compiled.insert(
+                name.clone(),
+                Compiled {
+                    init: load(&meta.init_path)?,
+                    grad: load(&meta.grad_path)?,
+                    apply: load(&meta.apply_path)?,
+                    meta: meta.clone(),
+                },
+            );
+            log::info!("compiled model {name} ({} params)", meta.n_params);
+        }
+        Ok((client, compiled))
+    })();
+
+    let (_client, compiled) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let mut stats = ServiceStats::default();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+            Request::Init { model, seed, reply } => {
+                let t0 = std::time::Instant::now();
+                let out = run_init(&compiled, &model, seed);
+                stats.init_calls += 1;
+                stats.exec_micros += t0.elapsed().as_micros();
+                let _ = reply.send(out);
+            }
+            Request::Grad { model, params, x, y, reply } => {
+                let t0 = std::time::Instant::now();
+                let out = run_grad(&compiled, &model, &params, &x, &y);
+                stats.grad_calls += 1;
+                stats.exec_micros += t0.elapsed().as_micros();
+                let _ = reply.send(out);
+            }
+            Request::Apply { model, params, gsum, count, lr, reply } => {
+                let t0 = std::time::Instant::now();
+                let out = run_apply(&compiled, &model, &params, &gsum, count, lr);
+                stats.apply_calls += 1;
+                stats.exec_micros += t0.elapsed().as_micros();
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+fn get<'a>(compiled: &'a BTreeMap<String, Compiled>, model: &str) -> Result<&'a Compiled> {
+    compiled
+        .get(model)
+        .ok_or_else(|| anyhow!("model {model:?} not loaded"))
+}
+
+fn tensor_literal(data: &TensorData, shape: &[usize], expect: Dtype) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        bail!("tensor has {} elements, shape {shape:?} wants {n}", data.len());
+    }
+    if data.dtype() != expect {
+        bail!("dtype mismatch: got {:?}, expected {expect:?}", data.dtype());
+    }
+    let lit = match data {
+        TensorData::F32(v) => xla::Literal::vec1(v),
+        TensorData::I32(v) => xla::Literal::vec1(v),
+    };
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+fn params_literal(params: &[f32], n: usize) -> Result<xla::Literal> {
+    if params.len() != n {
+        bail!("params has {} elements, model wants {n}", params.len());
+    }
+    Ok(xla::Literal::vec1(params))
+}
+
+fn first_result(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+    let bufs = exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute: {e}"))?;
+    bufs[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e}"))
+}
+
+fn run_init(compiled: &BTreeMap<String, Compiled>, model: &str, seed: i32) -> Result<Vec<f32>> {
+    let c = get(compiled, model)?;
+    let seed_lit = xla::Literal::scalar(seed);
+    let out = first_result(&c.init, &[seed_lit])?;
+    let params = out.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+    params.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+}
+
+fn run_grad(
+    compiled: &BTreeMap<String, Compiled>,
+    model: &str,
+    params: &[f32],
+    x: &TensorData,
+    y: &TensorData,
+) -> Result<GradOut> {
+    let c = get(compiled, model)?;
+    let p = params_literal(params, c.meta.n_params)?;
+    let xl = tensor_literal(x, &c.meta.x_shape, c.meta.x_dtype)?;
+    let yl = tensor_literal(y, &c.meta.y_shape, c.meta.y_dtype)?;
+    let out = first_result(&c.grad, &[p, xl, yl])?;
+    let (loss, grads) = out.to_tuple2().map_err(|e| anyhow!("untuple2: {e}"))?;
+    Ok(GradOut {
+        loss: loss.to_vec::<f32>().map_err(|e| anyhow!("loss: {e}"))?[0],
+        grads: grads.to_vec::<f32>().map_err(|e| anyhow!("grads: {e}"))?,
+    })
+}
+
+fn run_apply(
+    compiled: &BTreeMap<String, Compiled>,
+    model: &str,
+    params: &[f32],
+    gsum: &[f32],
+    count: f32,
+    lr: f32,
+) -> Result<Vec<f32>> {
+    let c = get(compiled, model)?;
+    let p = params_literal(params, c.meta.n_params)?;
+    let g = params_literal(gsum, c.meta.n_params)?;
+    let out = first_result(&c.apply, &[p, g, xla::Literal::scalar(count), xla::Literal::scalar(lr)])?;
+    let new_params = out.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+    new_params.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Manifest> {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.kv").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    /// End-to-end: init -> grad -> apply on the real LR artifact; loss must
+    /// decrease over a few SGD steps.  Skipped when artifacts are absent
+    /// (CI without `make artifacts`).
+    #[test]
+    fn lr_train_loop_reduces_loss() {
+        let Some(manifest) = artifacts() else { return };
+        let svc = ComputeService::start_filtered(&manifest, Some(&["lr"])).unwrap();
+        let h = svc.handle();
+        let meta = manifest.model("lr").unwrap();
+        let (b, d) = (meta.x_shape[0], meta.x_shape[1]);
+
+        // deterministic synthetic teacher data
+        let mut rng = crate::util::Rng::new(7);
+        let teacher: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..b)
+            .map(|i| {
+                let z: f32 = (0..d).map(|j| x[i * d + j] * teacher[j]).sum();
+                if z > 0.0 { 1.0 } else { 0.0 }
+            })
+            .collect();
+
+        let mut params = h.init("lr", 1).unwrap();
+        assert_eq!(params.len(), meta.n_params);
+        let first = h
+            .grad("lr", params.clone(), TensorData::F32(x.clone()), TensorData::F32(y.clone()))
+            .unwrap();
+        let mut last = first.loss;
+        for _ in 0..30 {
+            let g = h
+                .grad("lr", params.clone(), TensorData::F32(x.clone()), TensorData::F32(y.clone()))
+                .unwrap();
+            params = h.apply("lr", params, g.grads, 1.0, 0.5).unwrap();
+            last = g.loss;
+        }
+        assert!(
+            last < first.loss * 0.8,
+            "loss did not decrease: {} -> {last}",
+            first.loss
+        );
+        let stats = h.stats().unwrap();
+        assert!(stats.grad_calls >= 31 && stats.apply_calls == 30);
+    }
+
+    #[test]
+    fn shape_and_dtype_errors_reported() {
+        let Some(manifest) = artifacts() else { return };
+        let svc = ComputeService::start_filtered(&manifest, Some(&["lr"])).unwrap();
+        let h = svc.handle();
+        let meta = manifest.model("lr").unwrap();
+        let n = meta.x_shape.iter().product::<usize>();
+        // wrong param count
+        assert!(h
+            .grad("lr", vec![0.0; 3], TensorData::F32(vec![0.0; n]),
+                  TensorData::F32(vec![0.0; meta.x_shape[0]]))
+            .is_err());
+        // wrong dtype
+        assert!(h
+            .grad("lr", vec![0.0; meta.n_params], TensorData::I32(vec![0; n]),
+                  TensorData::F32(vec![0.0; meta.x_shape[0]]))
+            .is_err());
+        // unknown model
+        assert!(h.init("bogus", 0).is_err());
+    }
+
+    /// The same seed must produce identical parameters (jax PRNG is
+    /// deterministic through the AOT path).
+    #[test]
+    fn init_deterministic_through_pjrt() {
+        let Some(manifest) = artifacts() else { return };
+        let svc = ComputeService::start_filtered(&manifest, Some(&["mf"])).unwrap();
+        let h = svc.handle();
+        let a = h.init("mf", 42).unwrap();
+        let b = h.init("mf", 42).unwrap();
+        let c = h.init("mf", 43).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,128 @@
+//! Event queue: a min-heap over (time, sequence) with lazy cancellation.
+//!
+//! Completion events are invalidated whenever an app's allocation changes;
+//! instead of deleting from the heap, each event carries a version and the
+//! runner drops events whose version no longer matches the app's.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulation time in hours. Finite by construction.
+pub type SimTime = f64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scheduled<E> {
+    pub time: SimTime,
+    /// Tie-break: FIFO among equal times (deterministic replay).
+    pub seq: u64,
+    pub event: E,
+}
+
+impl<E: PartialEq> Eq for Scheduled<E> {}
+
+impl<E: PartialEq> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E: PartialEq> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("sim time must be finite")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Time-ordered event queue.
+#[derive(Clone, Debug)]
+pub struct EventQueue<E: PartialEq> {
+    heap: BinaryHeap<Scheduled<E>>,
+    seq: u64,
+    now: SimTime,
+}
+
+impl<E: PartialEq> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+}
+
+impl<E: PartialEq> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulation time (the time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `t` (must be >= now).
+    pub fn schedule(&mut self, t: SimTime, event: E) {
+        debug_assert!(t >= self.now - 1e-12, "scheduling into the past: {t} < {}", self.now);
+        debug_assert!(t.is_finite());
+        self.seq += 1;
+        self.heap.push(Scheduled { time: t.max(self.now), seq: self.seq, event });
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
+        let s = self.heap.pop()?;
+        self.now = s.time;
+        Some(s)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|s| s.event)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn fifo_among_equal_times() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "first");
+        q.schedule(1.0, "second");
+        q.schedule(1.0, "third");
+        assert_eq!(q.pop().unwrap().event, "first");
+        assert_eq!(q.pop().unwrap().event, "second");
+        assert_eq!(q.pop().unwrap().event, "third");
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, 1);
+        q.schedule(2.0, 2);
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.now(), 2.0);
+        q.schedule(2.5, 3); // scheduling relative to new now is fine
+        q.pop();
+        assert_eq!(q.now(), 2.5);
+        q.pop();
+        assert_eq!(q.now(), 5.0);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,212 @@
+//! The paper's §V experiment, packaged: Table II workload on the 21-server
+//! testbed for 24 h under the baseline and Dorm-1/2/3, plus the summary
+//! statistics every figure bench and `examples/shared_cluster_sim.rs`
+//! report.
+
+use crate::baselines::StaticPolicy;
+use crate::config::{ClusterConfig, DormConfig, SimConfig};
+use crate::metrics::RunMetrics;
+use crate::util::stats;
+use crate::util::Rng;
+use crate::workload::{table2_rows, WorkloadApp, WorkloadGen};
+
+use super::dorm_policy::DormPolicy;
+use super::perf_model::PerfModel;
+use super::runner::{run_sim, CmsPolicy, SimOutcome};
+
+/// One system's results over the experiment.
+pub struct SystemRun {
+    pub label: String,
+    pub outcome: SimOutcome,
+}
+
+impl SystemRun {
+    pub fn metrics(&self) -> &RunMetrics {
+        &self.outcome.metrics
+    }
+}
+
+/// The full §V testbed experiment.
+pub struct Experiment {
+    pub cluster: ClusterConfig,
+    pub sim: SimConfig,
+    pub pm: PerfModel,
+    pub workload: Vec<WorkloadApp>,
+}
+
+impl Experiment {
+    /// Paper defaults: 20 slaves, 24 h, 50 apps, Poisson(20 min).
+    pub fn paper(seed: u64) -> Self {
+        let gen = WorkloadGen::default();
+        let mut rng = Rng::new(seed);
+        Experiment {
+            cluster: ClusterConfig::paper_testbed(),
+            sim: SimConfig { seed, ..Default::default() },
+            pm: PerfModel::default(),
+            workload: gen.generate(&mut rng),
+        }
+    }
+
+    /// A scaled-down variant for fast tests/benches (horizon in hours):
+    /// fewer apps and durations shrunk so a meaningful fraction complete
+    /// within the shorter horizon.
+    pub fn scaled(seed: u64, horizon_hours: f64, napps: usize) -> Self {
+        let mut e = Self::paper(seed);
+        e.sim.horizon_hours = horizon_hours;
+        e.workload.truncate(napps);
+        let factor = (horizon_hours / 24.0).min(1.0) * 0.5;
+        for w in &mut e.workload {
+            w.duration_at_baseline_hours *= factor;
+            // compress arrivals proportionally too
+            w.submit_hours *= horizon_hours / 24.0;
+        }
+        e
+    }
+
+    pub fn run(&self, policy: &mut dyn CmsPolicy) -> SystemRun {
+        let rows = table2_rows();
+        let label = policy.name();
+        let outcome = run_sim(policy, &rows, &self.workload, &self.cluster, &self.sim, &self.pm);
+        SystemRun { label, outcome }
+    }
+
+    /// Run the baseline + the three Dorm configurations of §V-A-2.
+    pub fn run_all(&self) -> Vec<SystemRun> {
+        let mut out = Vec::new();
+        out.push(self.run(&mut StaticPolicy::new()));
+        for cfg in [DormConfig::DORM1, DormConfig::DORM2, DormConfig::DORM3] {
+            out.push(self.run(&mut DormPolicy::new(cfg)));
+        }
+        out
+    }
+}
+
+/// Multi-seed aggregate of the three §V headline ratios for one Dorm
+/// config: (mean, std) of utilization gain, fairness reduction, speedup.
+/// Seeds vary the Poisson arrivals, the type shuffle and the durations —
+/// the benches report this so single-seed luck is visible.
+pub fn headline_over_seeds(
+    cfg: crate::config::DormConfig,
+    seeds: &[u64],
+) -> [(f64, f64); 3] {
+    let mut gains = [Vec::new(), Vec::new(), Vec::new()];
+    for &seed in seeds {
+        let exp = Experiment::paper(seed);
+        let b = exp.run(&mut StaticPolicy::new());
+        let d = exp.run(&mut DormPolicy::new(cfg));
+        gains[0].push(utilization_ratio(&d, &b, 5.0));
+        gains[1].push(fairness_reduction(&d, &b, 24.0));
+        gains[2].push(mean_speedup(&d, &b));
+    }
+    [
+        (stats::mean(&gains[0]), stats::std_dev(&gains[0])),
+        (stats::mean(&gains[1]), stats::std_dev(&gains[1])),
+        (stats::mean(&gains[2]), stats::std_dev(&gains[2])),
+    ]
+}
+
+/// §V-B-1 headline: ratio of mean utilization over the first `hours` hours.
+pub fn utilization_ratio(dorm: &SystemRun, baseline: &SystemRun, hours: f64) -> f64 {
+    let d = dorm.metrics().utilization.mean_over(0.0, hours);
+    let b = baseline.metrics().utilization.mean_over(0.0, hours).max(1e-9);
+    d / b
+}
+
+/// §V-B-2: ratio of mean fairness loss (baseline / dorm — >1 means Dorm is
+/// fairer).
+pub fn fairness_reduction(dorm: &SystemRun, baseline: &SystemRun, hours: f64) -> f64 {
+    let d = dorm.metrics().fairness_loss.mean_over(0.0, hours).max(1e-9);
+    let b = baseline.metrics().fairness_loss.mean_over(0.0, hours);
+    b / d
+}
+
+/// §V-B-4: mean matched-pair speedup — each application completed under
+/// *both* systems contributes dur_baseline / dur_dorm.  Matching by app
+/// (not by tag means) avoids the censoring bias where the two systems
+/// complete different subsets of the workload within the horizon.
+pub fn mean_speedup(dorm: &SystemRun, baseline: &SystemRun) -> f64 {
+    stats::mean(&matched_speedups(dorm, baseline).iter().map(|&(_, s)| s).collect::<Vec<_>>())
+}
+
+/// Matched-pair speedups as (tag, ratio) — the Fig. 9a series.
+pub fn matched_speedups(dorm: &SystemRun, baseline: &SystemRun) -> Vec<(String, f64)> {
+    let d = &dorm.metrics().app_durations;
+    let b = &baseline.metrics().app_durations;
+    let mut out = Vec::new();
+    for (id, (tag, dur_d)) in d {
+        if let Some((_, dur_b)) = b.get(id) {
+            if *dur_d > 0.0 {
+                out.push((tag.clone(), dur_b / dur_d));
+            }
+        }
+    }
+    out
+}
+
+/// Per-tag mean of the matched-pair speedups (the Fig. 9a bars).
+pub fn speedup_by_tag(dorm: &SystemRun, baseline: &SystemRun) -> Vec<(String, f64)> {
+    let pairs = matched_speedups(dorm, baseline);
+    let mut tags: Vec<String> = pairs.iter().map(|(t, _)| t.clone()).collect();
+    tags.sort();
+    tags.dedup();
+    tags.into_iter()
+        .map(|tag| {
+            let rs: Vec<f64> = pairs
+                .iter()
+                .filter(|(t, _)| *t == tag)
+                .map(|&(_, r)| r)
+                .collect();
+            (tag, stats::mean(&rs))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline §V shape test: Dorm beats the static baseline on
+    /// utilization and speedup while bounding adjustments.  Scaled horizon
+    /// keeps the test fast; the full 24 h run lives in the benches.
+    #[test]
+    fn dorm_beats_baseline_on_scaled_experiment() {
+        let exp = Experiment::scaled(17, 8.0, 16);
+        let runs = exp.run_all();
+        let (baseline, dorms) = runs.split_first().unwrap();
+        assert_eq!(baseline.label, "static");
+        for d in dorms {
+            let ur = utilization_ratio(d, baseline, 5.0);
+            assert!(
+                ur > 1.1,
+                "{}: utilization ratio {ur} not > 1.1",
+                d.label
+            );
+            let sp = mean_speedup(d, baseline);
+            assert!(sp > 1.0, "{}: speedup {sp} not > 1", d.label);
+        }
+    }
+
+    #[test]
+    fn adjustment_overhead_ordered_by_theta2() {
+        // Dorm-2 (θ₂=0.2) is allowed more adjustments than Dorm-3 (θ₂=0.1);
+        // over a full run it should adjust at least as often.
+        let exp = Experiment::scaled(23, 8.0, 16);
+        let d2 = exp.run(&mut DormPolicy::new(DormConfig::DORM2));
+        let d3 = exp.run(&mut DormPolicy::new(DormConfig::DORM3));
+        let a2 = d2.metrics().adjustments.last().unwrap_or(0.0);
+        let a3 = d3.metrics().adjustments.last().unwrap_or(0.0);
+        assert!(a2 + 1.0 >= a3, "dorm2 {a2} vs dorm3 {a3}");
+    }
+
+    #[test]
+    fn per_operation_batch_bounded() {
+        // Fig. 8: "would kill and resume 2 applications at most per
+        // resource adjustment operation" for θ₂ = 0.1/0.2 at ≤ ~20 carried
+        // apps. Check the decision-time bound ⌈θ₂·|carried|⌉ holds.
+        let exp = Experiment::scaled(29, 8.0, 16);
+        let run = exp.run(&mut DormPolicy::new(DormConfig::DORM3));
+        for &batch in &run.metrics().adjustment_batch_sizes {
+            assert!(batch <= 2, "batch {batch} > bound");
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Discrete-event simulator of the paper's testbed experiments (§V).
+//!
+//! The 24-hour evaluations (Figs 6–9) are functions of the allocator and
+//! the workload, not of the hardware (DESIGN.md §1), so they run here in
+//! simulated time: the same [`crate::optimizer`] the live master uses makes
+//! every decision, the same [`crate::cluster::ClusterState`] bookkeeping
+//! tracks placements, and the same [`crate::metrics`] series are sampled.
+//!
+//! * [`engine`] — the event queue (time-ordered heap with cancellation).
+//! * [`perf_model`] — iterative-training progress: speedup vs container
+//!   count, checkpoint/kill/resume pauses.
+//! * [`runner`] — drives a [`CmsPolicy`] over a workload and collects
+//!   [`crate::metrics::RunMetrics`]; policies are Dorm (θ-configured) and
+//!   the baselines in [`crate::baselines`].
+
+pub mod dorm_policy;
+pub mod engine;
+pub mod experiment;
+pub mod perf_model;
+pub mod runner;
+
+pub use dorm_policy::DormPolicy;
+pub use experiment::{fairness_reduction, headline_over_seeds, matched_speedups, mean_speedup, speedup_by_tag, utilization_ratio, Experiment, SystemRun};
+pub use engine::{EventQueue, SimTime};
+pub use perf_model::PerfModel;
+pub use runner::{run_sim, AllocationUpdate, CmsPolicy, SimApp, SimCtx, SimOutcome};

@@ -1,0 +1,375 @@
+//! Simulation runner: drives a [`CmsPolicy`] over a workload trace,
+//! tracking progress, adjustments and the §IV-A metrics.
+//!
+//! The runner owns the ground truth ([`crate::cluster::ClusterState`] +
+//! per-app progress); policies only *decide* assignments.  Every decision
+//! is applied through create/destroy diffs so the capacity invariants are
+//! checked on every event (`debug_assert` + explicit check in tests).
+
+use std::collections::BTreeMap;
+
+use crate::app::AppId;
+use crate::cluster::{ClusterState, ServerId};
+use crate::config::{ClusterConfig, SimConfig};
+use crate::drf::{drf_allocate, fairness_loss, DrfApp};
+use crate::metrics::RunMetrics;
+use crate::resources::Res;
+use crate::workload::{Table2Row, WorkloadApp};
+
+use super::engine::EventQueue;
+use super::perf_model::PerfModel;
+
+/// One application inside the simulation.
+#[derive(Clone, Debug)]
+pub struct SimApp {
+    pub id: AppId,
+    pub row: usize,
+    pub tag: String,
+    pub demand: Res,
+    pub weight: f64,
+    pub n_min: u32,
+    pub n_max: u32,
+    /// Static count the baseline policies use.
+    pub baseline_n: u32,
+    pub submit: f64,
+    pub work_total: f64,
+    pub work_remaining: f64,
+    pub containers: u32,
+    /// Last time progress was settled.
+    pub last_settle: f64,
+    /// No progress before this time (checkpoint/kill/resume pause).
+    pub paused_until: f64,
+    /// Times this app was killed+resumed (Fig. 9b bookkeeping).
+    pub kills: u32,
+    /// Completion-event version (lazy cancellation).
+    pub version: u64,
+    pub completed_at: Option<f64>,
+}
+
+impl SimApp {
+    /// Settle progress up to `now` given the perf model.
+    fn settle(&mut self, now: f64, pm: &PerfModel) {
+        let start = self.last_settle.max(self.paused_until.min(now));
+        // active interval is [max(last_settle, paused_until), now]
+        let active_from = self.last_settle.max(self.paused_until);
+        if now > active_from && self.containers > 0 {
+            let dt = now - active_from;
+            self.work_remaining =
+                (self.work_remaining - dt * pm.speed(self.containers)).max(0.0);
+        }
+        let _ = start;
+        self.last_settle = now;
+    }
+
+    /// Absolute completion time if the allocation stays as-is.
+    fn eta(&self, now: f64, pm: &PerfModel) -> Option<f64> {
+        if self.containers == 0 {
+            return None;
+        }
+        let start = now.max(self.paused_until);
+        Some(start + self.work_remaining / pm.speed(self.containers))
+    }
+}
+
+/// Read-only view handed to policies.
+pub struct SimCtx<'a> {
+    pub now: f64,
+    /// Active (submitted, incomplete) apps, submission-ordered ids.
+    pub apps: &'a BTreeMap<AppId, SimApp>,
+    pub cluster: &'a ClusterState,
+}
+
+/// A policy's decision: the complete next assignment for every active app
+/// (apps omitted keep zero containers), plus which carried-over apps were
+/// adjusted (killed + resumed).
+#[derive(Clone, Debug, Default)]
+pub struct AllocationUpdate {
+    pub assignment: BTreeMap<AppId, BTreeMap<ServerId, u32>>,
+    pub adjusted: Vec<AppId>,
+}
+
+/// A cluster-management policy under simulation.
+pub trait CmsPolicy {
+    fn name(&self) -> String;
+    /// Called after every arrival and completion. `None` = keep current
+    /// allocations (e.g. no feasible solution, paper §IV-B).
+    fn on_change(&mut self, ctx: &SimCtx) -> Option<AllocationUpdate>;
+    /// Admission/scheduling latency charged to newly started apps (used by
+    /// the Mesos-like baseline; Dorm's is ~solver time, effectively 0 at
+    /// hour scale).
+    fn admission_latency_hours(&self) -> f64 {
+        0.0
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Event {
+    Arrival(usize),
+    Completion { app: AppId, version: u64 },
+    Sample,
+}
+
+/// Everything a run produces.
+pub struct SimOutcome {
+    pub metrics: RunMetrics,
+    /// All apps (completed and not) at horizon end.
+    pub apps: BTreeMap<AppId, SimApp>,
+    /// Completed fraction.
+    pub completed: usize,
+}
+
+/// Run `policy` over `workload` on `cluster_cfg` for `sim.horizon_hours`.
+pub fn run_sim(
+    policy: &mut dyn CmsPolicy,
+    rows: &[Table2Row],
+    workload: &[WorkloadApp],
+    cluster_cfg: &ClusterConfig,
+    sim: &SimConfig,
+    pm: &PerfModel,
+) -> SimOutcome {
+    let mut cluster = ClusterState::new(cluster_cfg);
+    let mut metrics = RunMetrics::new(&policy.name());
+    let mut q: EventQueue<Event> = EventQueue::new();
+    let mut apps: BTreeMap<AppId, SimApp> = BTreeMap::new();
+    let mut done: BTreeMap<AppId, SimApp> = BTreeMap::new();
+    let mut total_adjusted = 0u32;
+
+    for (i, w) in workload.iter().enumerate() {
+        if w.submit_hours <= sim.horizon_hours {
+            q.schedule(w.submit_hours, Event::Arrival(i));
+        }
+    }
+    q.schedule(0.0, Event::Sample);
+
+    while let Some(ev) = q.pop() {
+        let now = ev.time;
+        if now > sim.horizon_hours {
+            break;
+        }
+        match ev.event {
+            Event::Arrival(idx) => {
+                let w = &workload[idx];
+                let row = &rows[w.row];
+                let id = AppId(idx as u64);
+                let app = SimApp {
+                    id,
+                    row: w.row,
+                    tag: w.tag.clone(),
+                    demand: row.demand.clone(),
+                    weight: row.weight as f64,
+                    n_min: row.n_min,
+                    n_max: row.n_max,
+                    baseline_n: w.baseline_n,
+                    submit: now,
+                    work_total: pm.work_for(w.duration_at_baseline_hours, w.baseline_n),
+                    work_remaining: pm.work_for(w.duration_at_baseline_hours, w.baseline_n),
+                    containers: 0,
+                    last_settle: now,
+                    paused_until: now + policy.admission_latency_hours(),
+                    kills: 0,
+                    version: 0,
+                    completed_at: None,
+                };
+                cluster.register_app(id, app.demand.clone());
+                apps.insert(id, app);
+                reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm,
+                           &mut metrics, &mut total_adjusted);
+                sample(&mut metrics, now, &apps, &cluster, total_adjusted);
+            }
+            Event::Completion { app: id, version } => {
+                let Some(app) = apps.get_mut(&id) else { continue };
+                if app.version != version {
+                    continue; // stale event
+                }
+                app.settle(now, pm);
+                debug_assert!(app.work_remaining <= 1e-6, "{}", app.work_remaining);
+                app.completed_at = Some(now);
+                metrics
+                    .completions
+                    .push((app.tag.clone(), now - app.submit));
+                metrics
+                    .app_durations
+                    .insert(id.0, (app.tag.clone(), now - app.submit));
+                let finished = apps.remove(&id).unwrap();
+                cluster.remove_app(id);
+                done.insert(id, finished);
+                reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm,
+                           &mut metrics, &mut total_adjusted);
+                sample(&mut metrics, now, &apps, &cluster, total_adjusted);
+            }
+            Event::Sample => {
+                sample(&mut metrics, now, &apps, &cluster, total_adjusted);
+                let next = now + sim.sample_period_min / 60.0;
+                if next <= sim.horizon_hours {
+                    q.schedule(next, Event::Sample);
+                }
+            }
+        }
+    }
+
+    // merge remaining active apps into the report
+    let completed = done.len();
+    for (id, app) in apps {
+        done.insert(id, app);
+    }
+    SimOutcome { metrics, apps: done, completed }
+}
+
+/// Ask the policy for a new assignment and apply it.
+#[allow(clippy::too_many_arguments)]
+fn reallocate(
+    policy: &mut dyn CmsPolicy,
+    apps: &mut BTreeMap<AppId, SimApp>,
+    cluster: &mut ClusterState,
+    q: &mut EventQueue<Event>,
+    now: f64,
+    pm: &PerfModel,
+    metrics: &mut RunMetrics,
+    total_adjusted: &mut u32,
+) {
+    // settle everyone before the allocation changes
+    for app in apps.values_mut() {
+        app.settle(now, pm);
+    }
+    let update = {
+        let ctx = SimCtx { now, apps, cluster };
+        policy.on_change(&ctx)
+    };
+    let Some(update) = update else { return };
+
+    // apply diffs: ALL destroys first (shrinking apps free the space the
+    // growing ones move into), then all creates.
+    let mut changed: Vec<AppId> = Vec::new();
+    for (id, _) in apps.iter() {
+        let target = update.assignment.get(id).cloned().unwrap_or_default();
+        let current = cluster.placement_of(*id);
+        if target == current {
+            continue;
+        }
+        changed.push(*id);
+        for (&sid, &cnt) in &current {
+            cluster
+                .destroy_containers(*id, sid, cnt)
+                .expect("destroy within bookkeeping");
+        }
+    }
+    for id in &changed {
+        let target = update.assignment.get(id).cloned().unwrap_or_default();
+        for (&sid, &cnt) in &target {
+            if let Err(e) = cluster.create_containers(*id, sid, cnt) {
+                panic!("policy {} produced invalid placement: {e}", policy.name());
+            }
+        }
+        if let Some(app) = apps.get_mut(id) {
+            app.containers = target.values().sum();
+        }
+    }
+
+    // pauses + reschedules
+    let adjusted: Vec<AppId> = update.adjusted.clone();
+    for id in &adjusted {
+        if let Some(app) = apps.get_mut(id) {
+            app.paused_until = now + pm.adjust_pause_hours();
+            app.kills += 1;
+        }
+    }
+    if !adjusted.is_empty() {
+        *total_adjusted += adjusted.len() as u32;
+        metrics.adjustment_batch_sizes.push(adjusted.len() as u32);
+    }
+    for app in apps.values_mut() {
+        app.version += 1;
+        if let Some(eta) = app.eta(now, pm) {
+            q.schedule(eta, Event::Completion { app: app.id, version: app.version });
+        }
+    }
+    debug_assert!(cluster.check_invariants().is_ok());
+}
+
+/// Record the §IV-A metrics at `now`.
+fn sample(
+    metrics: &mut RunMetrics,
+    now: f64,
+    apps: &BTreeMap<AppId, SimApp>,
+    cluster: &ClusterState,
+    total_adjusted: u32,
+) {
+    metrics.utilization.push(now, cluster.utilization());
+    // fairness loss (Eq. 2) over the active set
+    let cap = cluster.total_capacity();
+    let drf_apps: Vec<DrfApp> = apps
+        .values()
+        .map(|a| DrfApp {
+            demand: a.demand.clone(),
+            weight: a.weight,
+            n_min: a.n_min.min(a.n_max),
+            n_max: a.n_max,
+        })
+        .collect();
+    let shat = if drf_apps.is_empty() {
+        vec![]
+    } else {
+        drf_allocate(&drf_apps, &cap).shares
+    };
+    let actual: Vec<f64> = apps
+        .values()
+        .map(|a| a.demand.times(a.containers).dominant_share(&cap))
+        .collect();
+    metrics.fairness_loss.push(now, fairness_loss(&actual, &shat));
+    metrics.adjustments.push(now, total_adjusted as f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::StaticPolicy;
+    use crate::workload::{table2_rows, WorkloadGen};
+    use crate::util::Rng;
+
+    fn tiny_workload() -> (Vec<Table2Row>, Vec<WorkloadApp>) {
+        let rows = table2_rows();
+        let apps = vec![
+            WorkloadApp { row: 0, tag: "LR".into(), submit_hours: 0.0,
+                duration_at_baseline_hours: 2.0, baseline_n: 8 },
+            WorkloadApp { row: 1, tag: "MF".into(), submit_hours: 0.5,
+                duration_at_baseline_hours: 3.0, baseline_n: 8 },
+        ];
+        (rows, apps)
+    }
+
+    #[test]
+    fn static_policy_runs_apps_at_fixed_duration() {
+        let (rows, wl) = tiny_workload();
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 12.0, ..Default::default() };
+        let pm = PerfModel::default();
+        let mut pol = StaticPolicy::new();
+        let out = run_sim(&mut pol, &rows, &wl, &cfg, &sim, &pm);
+        assert_eq!(out.completed, 2);
+        // static baseline runs each app at exactly its baseline count ->
+        // duration equals the sampled duration
+        let lr_dur = out.metrics.completions.iter()
+            .find(|(t, _)| t == "LR").unwrap().1;
+        assert!((lr_dur - 2.0).abs() < 1e-6, "{lr_dur}");
+    }
+
+    #[test]
+    fn full_table2_workload_static_completes_some() {
+        let rows = table2_rows();
+        let gen = WorkloadGen::default();
+        let mut rng = Rng::new(5);
+        let wl = gen.generate(&mut rng);
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 24.0, ..Default::default() };
+        let mut pol = StaticPolicy::new();
+        let out = run_sim(&mut pol, &rows, &wl, &cfg, &sim, &pm_fast());
+        assert!(out.completed > 0);
+        // utilization sampled and bounded by m = 3
+        assert!(out.metrics.utilization.max() <= 3.0 + 1e-9);
+        assert!(out.metrics.utilization.max() > 0.0);
+    }
+
+    fn pm_fast() -> PerfModel {
+        PerfModel::default()
+    }
+}

@@ -1,0 +1,202 @@
+//! DormSlave: the per-server agent (§III-A-2).
+//!
+//! Reports local capacity to the master and owns the container lifecycle
+//! on its server.  In the paper a container is a Docker cgroup; here it is
+//! a resource-accounted execution slot (DESIGN.md §1) — the slave enforces
+//! its server's capacity independently of the master's bookkeeping
+//! (double-entry: a buggy master decision is caught at the slave).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::app::AppId;
+use crate::resources::Res;
+
+/// Unique container identifier (slave-local counter + slave name).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ContainerId {
+    pub slave: String,
+    pub serial: u64,
+}
+
+/// A live container: a resource bundle bound to one application.
+#[derive(Clone, Debug)]
+pub struct Container {
+    pub id: ContainerId,
+    pub app: AppId,
+    pub demand: Res,
+}
+
+/// The per-server agent.
+#[derive(Clone, Debug)]
+pub struct DormSlave {
+    pub name: String,
+    capacity: Res,
+    containers: Vec<Container>,
+    next_serial: u64,
+}
+
+impl DormSlave {
+    pub fn new(name: impl Into<String>, capacity: Res) -> Self {
+        DormSlave {
+            name: name.into(),
+            capacity,
+            containers: Vec::new(),
+            next_serial: 0,
+        }
+    }
+
+    /// §III-A-2: report available resources to the master.
+    pub fn available(&self) -> Res {
+        let used = self.used();
+        self.capacity.saturating_sub(&used)
+    }
+
+    pub fn used(&self) -> Res {
+        self.containers
+            .iter()
+            .fold(Res::zeros(self.capacity.m()), |mut acc, c| {
+                acc += &c.demand;
+                acc
+            })
+    }
+
+    pub fn capacity(&self) -> &Res {
+        &self.capacity
+    }
+
+    /// Create `count` containers for `app`; all-or-nothing.
+    pub fn create(&mut self, app: AppId, demand: &Res, count: u32) -> Result<Vec<ContainerId>> {
+        let need = demand.times(count);
+        let used = self.used();
+        if !(used.clone() + need).fits_in(&self.capacity) {
+            bail!(
+                "slave {}: cannot create {count} x {demand} (used {used}, cap {})",
+                self.name,
+                self.capacity
+            );
+        }
+        let mut ids = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            self.next_serial += 1;
+            let id = ContainerId { slave: self.name.clone(), serial: self.next_serial };
+            self.containers.push(Container {
+                id: id.clone(),
+                app,
+                demand: demand.clone(),
+            });
+            ids.push(id);
+        }
+        Ok(ids)
+    }
+
+    /// Destroy `count` containers of `app`; all-or-nothing.
+    pub fn destroy(&mut self, app: AppId, count: u32) -> Result<()> {
+        let have = self.count_for(app);
+        if have < count {
+            bail!("slave {}: {app} has {have} containers, asked to destroy {count}", self.name);
+        }
+        let mut left = count;
+        self.containers.retain(|c| {
+            if left > 0 && c.app == app {
+                left -= 1;
+                false
+            } else {
+                true
+            }
+        });
+        Ok(())
+    }
+
+    /// Destroy everything belonging to `app` (completion path).
+    pub fn destroy_all(&mut self, app: AppId) -> u32 {
+        let before = self.containers.len();
+        self.containers.retain(|c| c.app != app);
+        (before - self.containers.len()) as u32
+    }
+
+    pub fn count_for(&self, app: AppId) -> u32 {
+        self.containers.iter().filter(|c| c.app == app).count() as u32
+    }
+
+    /// Containers per app (the xᵢⱼ column this slave holds).
+    pub fn inventory(&self) -> BTreeMap<AppId, u32> {
+        let mut out = BTreeMap::new();
+        for c in &self.containers {
+            *out.entry(c.app).or_insert(0) += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slave() -> DormSlave {
+        DormSlave::new("s0", Res::cpu_gpu_ram(12.0, 1.0, 128.0))
+    }
+
+    #[test]
+    fn create_destroy_accounting() {
+        let mut s = slave();
+        let d = Res::cpu_gpu_ram(2.0, 0.0, 8.0);
+        let ids = s.create(AppId(1), &d, 3).unwrap();
+        assert_eq!(ids.len(), 3);
+        assert_eq!(s.count_for(AppId(1)), 3);
+        assert_eq!(s.available(), Res::cpu_gpu_ram(6.0, 1.0, 104.0));
+        s.destroy(AppId(1), 2).unwrap();
+        assert_eq!(s.count_for(AppId(1)), 1);
+    }
+
+    #[test]
+    fn capacity_enforced_all_or_nothing() {
+        let mut s = slave();
+        let d = Res::cpu_gpu_ram(5.0, 0.0, 8.0);
+        assert!(s.create(AppId(1), &d, 3).is_err(), "15 CPU > 12");
+        assert_eq!(s.count_for(AppId(1)), 0, "no partial create");
+        s.create(AppId(1), &d, 2).unwrap();
+    }
+
+    #[test]
+    fn gpu_scarcity() {
+        let mut s = slave();
+        let d = Res::cpu_gpu_ram(1.0, 1.0, 8.0);
+        s.create(AppId(1), &d, 1).unwrap();
+        assert!(s.create(AppId(2), &d, 1).is_err(), "only 1 GPU");
+    }
+
+    #[test]
+    fn destroy_all_and_inventory() {
+        let mut s = slave();
+        let d = Res::cpu_gpu_ram(1.0, 0.0, 4.0);
+        s.create(AppId(1), &d, 2).unwrap();
+        s.create(AppId(2), &d, 1).unwrap();
+        let inv = s.inventory();
+        assert_eq!(inv[&AppId(1)], 2);
+        assert_eq!(inv[&AppId(2)], 1);
+        assert_eq!(s.destroy_all(AppId(1)), 2);
+        assert_eq!(s.count_for(AppId(1)), 0);
+        assert_eq!(s.count_for(AppId(2)), 1);
+    }
+
+    #[test]
+    fn container_ids_unique() {
+        let mut s = slave();
+        let d = Res::cpu_gpu_ram(1.0, 0.0, 4.0);
+        let a = s.create(AppId(1), &d, 2).unwrap();
+        s.destroy(AppId(1), 2).unwrap();
+        let b = s.create(AppId(1), &d, 2).unwrap();
+        assert!(a.iter().all(|id| !b.contains(id)));
+    }
+
+    #[test]
+    fn destroy_more_than_held_fails() {
+        let mut s = slave();
+        let d = Res::cpu_gpu_ram(1.0, 0.0, 4.0);
+        s.create(AppId(1), &d, 1).unwrap();
+        assert!(s.destroy(AppId(1), 2).is_err());
+        assert_eq!(s.count_for(AppId(1)), 1);
+    }
+}

@@ -1,0 +1,673 @@
+//! DRF-guided greedy + local-search heuristic for the count-aggregated P2.
+//!
+//! The optimizer (DESIGN.md §6) exploits the paper's uniform-container
+//! observation (§III-A-4) to solve for per-application container *counts*
+//! nᵢ = Σⱼ xᵢⱼ against aggregate capacity, then runs a placement round.
+//! [`CountProblem`] is that aggregated problem; this module provides the
+//! fast heuristic solver, and [`crate::optimizer`] builds the equivalent
+//! exact MILP whose solutions the tests cross-validate against.
+//!
+//! Pipeline: DRF seed → greedy utilization climb under the fairness bound →
+//! adjustment repair under the θ₂ bound → 1-swap local search.
+
+use crate::drf::{drf_allocate, fairness_loss, DrfApp};
+use crate::resources::Res;
+
+/// One application in the count-aggregated allocation problem.
+#[derive(Clone, Debug)]
+pub struct CountApp {
+    pub demand: Res,
+    pub weight: f64,
+    pub n_min: u32,
+    pub n_max: u32,
+    /// Containers at t−1; `None` for newly submitted apps (not counted in
+    /// the adjustment overhead, Eq. 4).
+    pub prev: Option<u32>,
+}
+
+/// The count-aggregated utilization–fairness problem (paper P2, §IV-B).
+#[derive(Clone, Debug)]
+pub struct CountProblem {
+    pub apps: Vec<CountApp>,
+    pub cap: Res,
+    /// θ₁ ∈ [0,1]: fairness-loss threshold (Eq. 15 bound = ⌈θ₁ · 2m⌉).
+    pub theta1: f64,
+    /// θ₂ ∈ [0,1]: adjustment threshold (Eq. 16 bound = ⌈θ₂ · |Aᵗ∩Aᵗ⁻¹|⌉).
+    pub theta2: f64,
+    /// Theoretical DRF shares ŝᵢ (computed by [`CountProblem::new`]).
+    pub shares_hat: Vec<f64>,
+}
+
+impl CountProblem {
+    /// Build the problem; ŝᵢ comes from weighted DRF progressive filling.
+    pub fn new(apps: Vec<CountApp>, cap: Res, theta1: f64, theta2: f64) -> Self {
+        let drf_apps: Vec<DrfApp> = apps
+            .iter()
+            .map(|a| DrfApp {
+                demand: a.demand.clone(),
+                weight: a.weight,
+                n_min: a.n_min,
+                n_max: a.n_max,
+            })
+            .collect();
+        let shares_hat = drf_allocate(&drf_apps, &cap).shares;
+        CountProblem { apps, cap, theta1, theta2, shares_hat }
+    }
+
+    /// Eq. 15 RHS.  The published formula is ⌈θ₁ × 2m⌉, but the paper's
+    /// own Fig. 7 shows Dorm-3 (θ₁ = 0.1, m = 3) bounded by 0.6 = θ₁·2m —
+    /// the ceiling would allow 1.0 — so we use the un-ceiled bound, which
+    /// matches the measured behaviour (documented in DESIGN.md §6).
+    pub fn fairness_bound(&self) -> f64 {
+        self.theta1 * 2.0 * self.cap.m() as f64
+    }
+
+    /// Eq. 16 RHS: ⌈θ₂ × |Aᵗ ∩ Aᵗ⁻¹|⌉.
+    pub fn adjust_bound(&self) -> u32 {
+        let carry = self.apps.iter().filter(|a| a.prev.is_some()).count();
+        (self.theta2 * carry as f64).ceil() as u32
+    }
+
+    /// Eq. 10 objective: Σₖ Σᵢ nᵢ·dᵢₖ / Cₖ.
+    pub fn utilization(&self, counts: &[u32]) -> f64 {
+        let mut used = Res::zeros(self.cap.m());
+        for (a, &c) in self.apps.iter().zip(counts) {
+            used += &a.demand.times(c);
+        }
+        used.utilization_sum(&self.cap)
+    }
+
+    /// Eq. 2: Σᵢ |sᵢ − ŝᵢ| for the given counts.
+    pub fn fairness_loss_of(&self, counts: &[u32]) -> f64 {
+        let actual: Vec<f64> = self
+            .apps
+            .iter()
+            .zip(counts)
+            .map(|(a, &c)| a.demand.times(c).dominant_share(&self.cap))
+            .collect();
+        fairness_loss(&actual, &self.shares_hat)
+    }
+
+    /// Eq. 4: number of carried-over apps whose count changed.
+    pub fn adjustments(&self, counts: &[u32]) -> u32 {
+        self.apps
+            .iter()
+            .zip(counts)
+            .filter(|(a, &c)| a.prev.map_or(false, |p| p != c))
+            .count() as u32
+    }
+
+    /// Aggregate usage vector at the given counts.
+    pub fn used_of(&self, counts: &[u32]) -> Res {
+        let mut used = Res::zeros(self.cap.m());
+        for (a, &c) in self.apps.iter().zip(counts) {
+            used += &a.demand.times(c);
+        }
+        used
+    }
+
+    /// Full feasibility: capacity + bounds + both θ constraints.
+    pub fn is_feasible(&self, counts: &[u32]) -> bool {
+        counts.len() == self.apps.len()
+            && self
+                .apps
+                .iter()
+                .zip(counts)
+                .all(|(a, &c)| c >= a.n_min && c <= a.n_max)
+            && self.used_of(counts).fits_in(&self.cap)
+            && self.fairness_loss_of(counts) <= self.fairness_bound() + 1e-9
+            && self.adjustments(counts) <= self.adjust_bound()
+    }
+}
+
+/// Heuristic solve. Returns `None` when no feasible point is found — the
+/// master then keeps existing allocations (paper §IV-B last paragraph).
+///
+/// Runs two pipelines and returns the better feasible result:
+/// * **DRF-seeded**: fairness-first, then utilization climb, then
+///   adjustment repair — strongest when the θ₂ budget is loose;
+/// * **prev-anchored**: start from the incumbent allocation (θ₂-free by
+///   construction), spend the adjustment budget only where it buys
+///   capacity for new arrivals or utilization — this is the pipeline that
+///   handles the paper's core scenario of shrinking one running app to
+///   admit a newcomer (Fig. 5).
+pub fn heuristic_solve(p: &CountProblem) -> Option<Vec<u32>> {
+    let n = p.apps.len();
+    if n == 0 {
+        return Some(vec![]);
+    }
+
+    let drf_based = drf_pipeline(p);
+    let anchored = prev_anchored_pipeline(p);
+    match (drf_based, anchored) {
+        (Some(a), Some(b)) => {
+            Some(if p.utilization(&a) >= p.utilization(&b) { a } else { b })
+        }
+        (a, b) => a.or(b),
+    }
+}
+
+/// Best-effort solve when the full P2 is infeasible: honor capacity,
+/// bounds and the θ₂ budget, and *minimize* fairness loss instead of
+/// bounding it.  Freezing allocations whenever the fairness bound is
+/// unreachable lets the loss plateau for hours (the failure mode the
+/// paper's Fig. 7 does not show); converging toward DRF as fast as the
+/// adjustment budget allows is the faithful reading of "keep high resource
+/// utilization and low fairness loss" (§IV-A).  The optimizer uses this as
+/// a fallback and reports it in its stats.
+pub fn heuristic_solve_relaxed(p: &CountProblem) -> Option<Vec<u32>> {
+    let n = p.apps.len();
+    if n == 0 {
+        return Some(vec![]);
+    }
+    // prev-anchored base with capacity repair (as in the strict pipeline)
+    let mut counts: Vec<u32> = p
+        .apps
+        .iter()
+        .map(|a| a.prev.map(|v| v.clamp(a.n_min, a.n_max)).unwrap_or(a.n_min))
+        .collect();
+    let mut guard = 0;
+    while !p.used_of(&counts).fits_in(&p.cap) {
+        guard += 1;
+        if guard > 100_000 {
+            return None;
+        }
+        let mut cand: Option<(usize, (u8, f64))> = None;
+        for i in 0..n {
+            if counts[i] > p.apps[i].n_min {
+                let pristine = p.apps[i].prev.map_or(false, |prev| prev == counts[i]);
+                let key = (u8::from(pristine), p.apps[i].demand.utilization_sum(&p.cap));
+                match &cand {
+                    Some((_, bk)) if *bk <= key => {}
+                    _ => cand = Some((i, key)),
+                }
+            }
+        }
+        let (i, _) = cand?;
+        counts[i] -= 1;
+    }
+    if p.adjustments(&counts) > p.adjust_bound() {
+        return None;
+    }
+
+    // steepest-descent on fairness loss (ties: utilization), spending the
+    // remaining θ₂ budget one container move at a time
+    let mut guard = 0;
+    loop {
+        guard += 1;
+        if guard > 100_000 {
+            break;
+        }
+        let cur_loss = p.fairness_loss_of(&counts);
+        let cur_util = p.utilization(&counts);
+        let mut best: Option<(usize, i32, f64, f64)> = None; // (app, delta, loss, util)
+        for i in 0..n {
+            for delta in [1i32, -1] {
+                let nc = counts[i] as i64 + delta as i64;
+                if nc < p.apps[i].n_min as i64 || nc > p.apps[i].n_max as i64 {
+                    continue;
+                }
+                counts[i] = nc as u32;
+                let ok = p.used_of(&counts).fits_in(&p.cap)
+                    && p.adjustments(&counts) <= p.adjust_bound();
+                let (loss, util) = if ok {
+                    (p.fairness_loss_of(&counts), p.utilization(&counts))
+                } else {
+                    (f64::INFINITY, 0.0)
+                };
+                counts[i] = (nc - delta as i64) as u32;
+                if !ok {
+                    continue;
+                }
+                let improves = loss < cur_loss - 1e-12
+                    || (loss <= cur_loss + 1e-12 && util > cur_util + 1e-12);
+                if improves {
+                    match &best {
+                        Some((_, _, bl, bu))
+                            if (*bl, -*bu) <= (loss, -util) => {}
+                        _ => best = Some((i, delta, loss, util)),
+                    }
+                }
+            }
+        }
+        match best {
+            Some((i, delta, _, _)) => {
+                counts[i] = (counts[i] as i64 + delta as i64) as u32;
+            }
+            None => break,
+        }
+    }
+
+    // relaxed feasibility: everything but the fairness bound
+    let ok = p
+        .apps
+        .iter()
+        .zip(&counts)
+        .all(|(a, &c)| c >= a.n_min && c <= a.n_max)
+        && p.used_of(&counts).fits_in(&p.cap)
+        && p.adjustments(&counts) <= p.adjust_bound();
+    ok.then_some(counts)
+}
+
+/// Pipeline 1: DRF seed -> greedy fill -> adjustment repair -> local search.
+fn drf_pipeline(p: &CountProblem) -> Option<Vec<u32>> {
+    let drf_apps: Vec<DrfApp> = p
+        .apps
+        .iter()
+        .map(|a| DrfApp {
+            demand: a.demand.clone(),
+            weight: a.weight,
+            n_min: a.n_min,
+            n_max: a.n_max,
+        })
+        .collect();
+    let mut counts = drf_allocate(&drf_apps, &p.cap).containers;
+    greedy_fill(p, &mut counts);
+    if p.adjustments(&counts) > p.adjust_bound() {
+        repair_adjustments(p, &mut counts);
+    }
+    local_search(p, &mut counts);
+    p.is_feasible(&counts).then_some(counts)
+}
+
+/// Pipeline 2: anchor on the incumbent allocation and spend the θ₂ budget
+/// deliberately.
+fn prev_anchored_pipeline(p: &CountProblem) -> Option<Vec<u32>> {
+    let n = p.apps.len();
+    // base: carried apps keep prev (clamped), new apps start at n_min
+    let mut counts: Vec<u32> = p
+        .apps
+        .iter()
+        .map(|a| {
+            a.prev
+                .map(|v| v.clamp(a.n_min, a.n_max))
+                .unwrap_or(a.n_min)
+        })
+        .collect();
+
+    // capacity repair: shrink one container at a time, preferring apps
+    // that are already adjusted (clamping counts as a change) or new, then
+    // the lowest-density carried app — each first shrink of a pristine
+    // carried app spends one unit of θ₂ budget.
+    let mut guard = 0;
+    while !p
+        .apps
+        .iter()
+        .zip(&counts)
+        .fold(Res::zeros(p.cap.m()), |mut acc, (a, &c)| {
+            acc += &a.demand.times(c);
+            acc
+        })
+        .fits_in(&p.cap)
+    {
+        guard += 1;
+        if guard > 100_000 {
+            return None;
+        }
+        let mut cand: Option<(usize, (u8, f64))> = None;
+        for i in 0..n {
+            if counts[i] > p.apps[i].n_min {
+                let pristine =
+                    p.apps[i].prev.map_or(false, |prev| prev == counts[i]);
+                let class = u8::from(pristine); // adjusted/new first
+                let density = p.apps[i].demand.utilization_sum(&p.cap);
+                let key = (class, density);
+                match &cand {
+                    Some((_, bk)) if *bk <= key => {}
+                    _ => cand = Some((i, key)),
+                }
+            }
+        }
+        let (i, _) = cand?;
+        counts[i] -= 1;
+    }
+    if p.adjustments(&counts) > p.adjust_bound() {
+        return None; // n_min floors alone blew the budget
+    }
+
+    // growth: spend spare capacity on free apps first (new or already
+    // adjusted), then on pristine carried apps while θ₂ budget remains.
+    let fb = p.fairness_bound();
+    let mut guard = 0;
+    loop {
+        guard += 1;
+        if guard > 100_000 {
+            break;
+        }
+        let used = p
+            .apps
+            .iter()
+            .zip(&counts)
+            .fold(Res::zeros(p.cap.m()), |mut acc, (a, &c)| {
+                acc += &a.demand.times(c);
+                acc
+            });
+        let budget_left = p.adjust_bound().saturating_sub(p.adjustments(&counts));
+        let mut best: Option<(usize, (u8, f64))> = None;
+        for i in 0..n {
+            let a = &p.apps[i];
+            if counts[i] >= a.n_max {
+                continue;
+            }
+            let pristine = a.prev.map_or(false, |prev| prev == counts[i]);
+            if pristine && budget_left == 0 {
+                continue;
+            }
+            if !(used.clone() + a.demand.clone()).fits_in(&p.cap) {
+                continue;
+            }
+            counts[i] += 1;
+            let fair_ok = p.fairness_loss_of(&counts) <= fb + 1e-9;
+            counts[i] -= 1;
+            if !fair_ok {
+                continue;
+            }
+            // prefer free growth (class 0), then highest utilization gain
+            // (min-select on (class, -gain))
+            let key = (u8::from(pristine), -a.demand.utilization_sum(&p.cap));
+            match &best {
+                Some((_, bk)) if *bk <= key => {}
+                _ => best = Some((i, key)),
+            }
+        }
+        match best {
+            Some((i, _)) => counts[i] += 1,
+            None => break,
+        }
+    }
+
+    local_search(p, &mut counts);
+    p.is_feasible(&counts).then_some(counts)
+}
+
+/// Repeatedly add the container with the best marginal utilization gain
+/// while capacity, n_max and the fairness bound allow.
+fn greedy_fill(p: &CountProblem, counts: &mut Vec<u32>) {
+    let fb = p.fairness_bound();
+    let mut used = p.used_of(counts);
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, a) in p.apps.iter().enumerate() {
+            if counts[i] >= a.n_max {
+                continue;
+            }
+            let next_used = used.clone() + a.demand.clone();
+            if !next_used.fits_in(&p.cap) {
+                continue;
+            }
+            counts[i] += 1;
+            let ok = p.fairness_loss_of(counts) <= fb + 1e-9;
+            counts[i] -= 1;
+            if !ok {
+                continue;
+            }
+            let gain = a.demand.utilization_sum(&p.cap);
+            match best {
+                Some((_, bg)) if bg >= gain => {}
+                _ => best = Some((i, gain)),
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                used += &p.apps[i].demand;
+                counts[i] += 1;
+            }
+            None => break,
+        }
+    }
+}
+
+/// Revert changed carried-over apps back to their previous counts, cheapest
+/// utilization loss first, until the adjustment bound holds.
+fn repair_adjustments(p: &CountProblem, counts: &mut Vec<u32>) {
+    let bound = p.adjust_bound();
+    // candidates: carried-over apps whose count differs from prev
+    let mut cands: Vec<(usize, f64)> = p
+        .apps
+        .iter()
+        .enumerate()
+        .filter_map(|(i, a)| {
+            let prev = a.prev?;
+            if prev == counts[i] {
+                return None;
+            }
+            let delta = counts[i] as f64 - prev as f64;
+            // cost of reverting = lost utilization (can be negative = gain)
+            let cost = delta * p.apps[i].demand.utilization_sum(&p.cap);
+            Some((i, cost))
+        })
+        .collect();
+    cands.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+    for (i, _) in cands {
+        if p.adjustments(counts) <= bound {
+            break;
+        }
+        let prev = p.apps[i].prev.unwrap().clamp(p.apps[i].n_min, p.apps[i].n_max);
+        let saved = counts[i];
+        counts[i] = prev;
+        // reverting upward may break capacity — undo if so
+        if !p.used_of(counts).fits_in(&p.cap) {
+            counts[i] = saved;
+        }
+    }
+}
+
+/// Single-container moves and pairwise swaps that improve the objective
+/// while staying feasible.
+fn local_search(p: &CountProblem, counts: &mut Vec<u32>) {
+    let n = p.apps.len();
+    let mut improved = true;
+    let mut guard = 0;
+    while improved && guard < 10_000 {
+        improved = false;
+        guard += 1;
+        let base_util = p.utilization(counts);
+        // try +1 moves
+        for i in 0..n {
+            if counts[i] < p.apps[i].n_max {
+                counts[i] += 1;
+                if p.is_feasible(counts) && p.utilization(counts) > base_util + 1e-12 {
+                    improved = true;
+                    break;
+                }
+                counts[i] -= 1;
+            }
+        }
+        if improved {
+            continue;
+        }
+        // try -1/+1 swaps (move a container's worth between apps)
+        'outer: for i in 0..n {
+            if counts[i] <= p.apps[i].n_min {
+                continue;
+            }
+            for j in 0..n {
+                if i == j || counts[j] >= p.apps[j].n_max {
+                    continue;
+                }
+                counts[i] -= 1;
+                counts[j] += 1;
+                if p.is_feasible(counts) && p.utilization(counts) > base_util + 1e-12 {
+                    improved = true;
+                    break 'outer;
+                }
+                counts[i] += 1;
+                counts[j] -= 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn capp(cpu: f64, ram: f64, w: f64, lo: u32, hi: u32, prev: Option<u32>) -> CountApp {
+        CountApp {
+            demand: Res(vec![cpu, ram]),
+            weight: w,
+            n_min: lo,
+            n_max: hi,
+            prev,
+        }
+    }
+
+    #[test]
+    fn fills_idle_capacity() {
+        // one app alone in the cluster should scale to its max (the Dorm
+        // behaviour the paper's Fig 6 relies on).
+        let p = CountProblem::new(
+            vec![capp(2.0, 8.0, 1.0, 1, 32, None)],
+            Res(vec![240.0, 2560.0]),
+            0.1,
+            0.1,
+        );
+        let counts = heuristic_solve(&p).unwrap();
+        assert_eq!(counts, vec![32]);
+    }
+
+    #[test]
+    fn respects_capacity_with_two_apps() {
+        let p = CountProblem::new(
+            vec![
+                capp(4.0, 8.0, 1.0, 1, 100, None),
+                capp(4.0, 8.0, 1.0, 1, 100, None),
+            ],
+            Res(vec![40.0, 400.0]),
+            0.5,
+            1.0,
+        );
+        let counts = heuristic_solve(&p).unwrap();
+        assert!(counts.iter().sum::<u32>() <= 10);
+        assert!(counts.iter().sum::<u32>() >= 9); // near-full utilization
+    }
+
+    #[test]
+    fn adjustment_bound_limits_churn() {
+        // 4 carried-over apps at 5 containers each; θ₂ = 0.25 allows only
+        // ⌈0.25·4⌉ = 1 app to change.
+        let apps: Vec<CountApp> =
+            (0..4).map(|_| capp(1.0, 1.0, 1.0, 1, 100, Some(5))).collect();
+        let p = CountProblem::new(apps, Res(vec![100.0, 100.0]), 1.0, 0.25);
+        let counts = heuristic_solve(&p).unwrap();
+        assert!(p.adjustments(&counts) <= 1, "{counts:?}");
+    }
+
+    #[test]
+    fn zero_theta2_freezes_carried_apps() {
+        let apps = vec![
+            capp(1.0, 1.0, 1.0, 1, 100, Some(3)),
+            capp(1.0, 1.0, 1.0, 1, 100, None), // new arrival may still grow
+        ];
+        let p = CountProblem::new(apps, Res(vec![50.0, 50.0]), 1.0, 0.0);
+        let counts = heuristic_solve(&p).unwrap();
+        assert_eq!(counts[0], 3, "carried app must not change, got {counts:?}");
+        assert!(counts[1] >= 1);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        // n_min floors alone exceed capacity -> no feasible point
+        let apps = vec![capp(10.0, 10.0, 1.0, 3, 5, None)];
+        let p = CountProblem::new(apps, Res(vec![10.0, 10.0]), 1.0, 1.0);
+        assert!(heuristic_solve(&p).is_none());
+    }
+
+    #[test]
+    fn bounds_formulas_match_paper() {
+        let p = CountProblem::new(
+            vec![
+                capp(1.0, 1.0, 1.0, 1, 2, Some(1)),
+                capp(1.0, 1.0, 1.0, 1, 2, Some(1)),
+                capp(1.0, 1.0, 1.0, 1, 2, None),
+            ],
+            Res(vec![10.0, 10.0]),
+            0.2,
+            0.6,
+        );
+        // m = 2: 0.2·4 = 0.8 (un-ceiled, see fairness_bound docs);
+        // carried = 2: ⌈0.6·2⌉ = 2
+        assert!((p.fairness_bound() - 0.8).abs() < 1e-12);
+        assert_eq!(p.adjust_bound(), 2);
+    }
+
+    #[test]
+    fn prop_heuristic_solutions_always_feasible() {
+        prop::check(120, |rng: &mut Rng| {
+            let p = random_problem(rng);
+            if let Some(counts) = heuristic_solve(&p) {
+                if !p.is_feasible(&counts) {
+                    return Err(format!("infeasible output {counts:?} for {p:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_heuristic_at_least_drf_utilization() {
+        // the heuristic must never do worse than its DRF seed when feasible
+        prop::check(80, |rng: &mut Rng| {
+            let mut p = random_problem(rng);
+            // no carried-over apps -> adjustment constraint vacuous
+            for a in &mut p.apps {
+                a.prev = None;
+            }
+            let drf_apps: Vec<DrfApp> = p
+                .apps
+                .iter()
+                .map(|a| DrfApp {
+                    demand: a.demand.clone(),
+                    weight: a.weight,
+                    n_min: a.n_min,
+                    n_max: a.n_max,
+                })
+                .collect();
+            let seed = drf_allocate(&drf_apps, &p.cap).containers;
+            match heuristic_solve(&p) {
+                Some(counts) => {
+                    if p.utilization(&counts) + 1e-9 < p.utilization(&seed)
+                        && p.fairness_loss_of(&seed) <= p.fairness_bound()
+                    {
+                        return Err(format!(
+                            "heuristic {counts:?} worse than DRF seed {seed:?}"
+                        ));
+                    }
+                    Ok(())
+                }
+                None => Ok(()), // feasibility can genuinely fail (floors)
+            }
+        });
+    }
+
+    pub(crate) fn random_problem(rng: &mut Rng) -> CountProblem {
+        let m = rng.range_u64(2, 3) as usize;
+        let cap = Res((0..m).map(|_| rng.range_f64(20.0, 120.0)).collect());
+        let napps = rng.range_u64(1, 7) as usize;
+        let apps: Vec<CountApp> = (0..napps)
+            .map(|_| {
+                let lo = rng.range_u64(0, 2) as u32;
+                CountApp {
+                    demand: Res((0..m).map(|_| rng.range_f64(0.5, 6.0)).collect()),
+                    weight: rng.range_f64(0.5, 4.0),
+                    n_min: lo,
+                    n_max: lo + rng.range_u64(1, 12) as u32,
+                    prev: if rng.f64() < 0.5 {
+                        Some(rng.range_u64(0, 8) as u32)
+                    } else {
+                        None
+                    },
+                }
+            })
+            .collect();
+        CountProblem::new(
+            apps,
+            cap,
+            rng.range_f64(0.05, 0.5),
+            rng.range_f64(0.0, 0.5),
+        )
+    }
+}

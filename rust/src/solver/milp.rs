@@ -1,0 +1,345 @@
+//! Branch-and-bound MILP on top of the simplex LP relaxation.
+//!
+//! Depth-first with best-incumbent pruning, branching on the most
+//! fractional integer variable; optional warm-start incumbent (the
+//! optimizer passes the heuristic solution so B&B starts with a tight
+//! bound).  Exact on the paper-scale count-aggregated P2 (≤ ~100 integer
+//! variables); node/time limits turn it into an anytime solver beyond that.
+
+use super::simplex::{self, Cmp, Constraint, Lp, LpOutcome};
+
+/// MILP = LP + integrality markers (`integer[j]` ⇒ x\_j ∈ ℤ₊).
+#[derive(Clone, Debug)]
+pub struct Milp {
+    pub lp: Lp,
+    pub integer: Vec<bool>,
+}
+
+/// Search limits / tolerances.
+#[derive(Clone, Debug)]
+pub struct MilpOptions {
+    /// Max branch-and-bound nodes before returning the incumbent.
+    pub node_limit: usize,
+    /// Integrality tolerance.
+    pub int_tol: f64,
+    /// Optional warm-start feasible point (must satisfy all constraints).
+    pub warm_start: Option<Vec<f64>>,
+}
+
+impl Default for MilpOptions {
+    fn default() -> Self {
+        MilpOptions { node_limit: 20_000, int_tol: 1e-6, warm_start: None }
+    }
+}
+
+/// Result of [`solve`].
+#[derive(Clone, Debug)]
+pub enum MilpOutcome {
+    /// Proven optimal (search exhausted).
+    Optimal { x: Vec<f64>, obj: f64, nodes: usize },
+    /// Feasible incumbent, optimality not proven (node limit hit).
+    Feasible { x: Vec<f64>, obj: f64, nodes: usize },
+    Infeasible,
+    Unbounded,
+}
+
+impl MilpOutcome {
+    /// The solution vector if any feasible point was found.
+    pub fn solution(&self) -> Option<(&[f64], f64)> {
+        match self {
+            MilpOutcome::Optimal { x, obj, .. } | MilpOutcome::Feasible { x, obj, .. } => {
+                Some((x, *obj))
+            }
+            _ => None,
+        }
+    }
+}
+
+struct Node {
+    /// Extra bound constraints (var, is_upper, value).
+    bounds: Vec<(usize, bool, f64)>,
+}
+
+fn obj_value(lp: &Lp, x: &[f64]) -> f64 {
+    lp.objective.iter().zip(x).map(|(c, v)| c * v).sum()
+}
+
+fn is_integral(milp: &Milp, x: &[f64], tol: f64) -> bool {
+    milp.integer
+        .iter()
+        .zip(x)
+        .all(|(&int, &v)| !int || (v - v.round()).abs() <= tol)
+}
+
+/// Check a candidate point against all constraints (warm-start validation).
+fn feasible(milp: &Milp, x: &[f64], tol: f64) -> bool {
+    if x.len() != milp.lp.n || x.iter().any(|&v| v < -tol) {
+        return false;
+    }
+    if !is_integral(milp, x, tol) {
+        return false;
+    }
+    milp.lp.constraints.iter().all(|c| {
+        let lhs: f64 = c.coeffs.iter().map(|&(j, v)| v * x[j]).sum();
+        match c.cmp {
+            Cmp::Le => lhs <= c.rhs + 1e-6,
+            Cmp::Ge => lhs >= c.rhs - 1e-6,
+            Cmp::Eq => (lhs - c.rhs).abs() <= 1e-6,
+        }
+    })
+}
+
+/// Solve the MILP by branch and bound.
+pub fn solve(milp: &Milp, opts: &MilpOptions) -> MilpOutcome {
+    debug_assert_eq!(milp.integer.len(), milp.lp.n);
+    let maximize = milp.lp.maximize;
+    let better = |a: f64, b: f64| if maximize { a > b + 1e-9 } else { a < b - 1e-9 };
+
+    let mut incumbent: Option<(Vec<f64>, f64)> = None;
+    if let Some(ws) = &opts.warm_start {
+        if feasible(milp, ws, opts.int_tol) {
+            incumbent = Some((ws.clone(), obj_value(&milp.lp, ws)));
+        }
+    }
+
+    let mut stack = vec![Node { bounds: vec![] }];
+    let mut nodes = 0usize;
+    let mut exhausted = true;
+
+    while let Some(node) = stack.pop() {
+        if nodes >= opts.node_limit {
+            exhausted = false;
+            break;
+        }
+        nodes += 1;
+
+        // LP relaxation with the node's bound constraints appended.
+        let mut lp = milp.lp.clone();
+        for &(var, is_upper, val) in &node.bounds {
+            lp.constraints.push(Constraint::new(
+                vec![(var, 1.0)],
+                if is_upper { Cmp::Le } else { Cmp::Ge },
+                val,
+            ));
+        }
+        let (x, obj) = match simplex::solve(&lp) {
+            LpOutcome::Optimal { x, obj } => (x, obj),
+            LpOutcome::Infeasible => continue,
+            LpOutcome::Unbounded => return MilpOutcome::Unbounded,
+        };
+
+        // bound pruning
+        if let Some((_, inc_obj)) = &incumbent {
+            if !better(obj, *inc_obj) {
+                continue;
+            }
+        }
+
+        // most fractional integer variable
+        let mut frac_var: Option<(usize, f64)> = None;
+        for (j, (&int, &v)) in milp.integer.iter().zip(&x).enumerate() {
+            if int {
+                let f = (v - v.round()).abs();
+                if f > opts.int_tol {
+                    let dist = (v - v.floor() - 0.5).abs(); // 0 = most fractional
+                    match frac_var {
+                        Some((_, bd)) if bd <= dist => {}
+                        _ => frac_var = Some((j, dist)),
+                    }
+                }
+            }
+        }
+
+        match frac_var {
+            None => {
+                // integral: snap and accept as incumbent
+                let xi: Vec<f64> = milp
+                    .integer
+                    .iter()
+                    .zip(&x)
+                    .map(|(&int, &v)| if int { v.round() } else { v })
+                    .collect();
+                let oi = obj_value(&milp.lp, &xi);
+                if incumbent.as_ref().map_or(true, |(_, io)| better(oi, *io)) {
+                    incumbent = Some((xi, oi));
+                }
+            }
+            Some((j, _)) => {
+                let v = x[j];
+                // push "floor" branch last so it is explored first (DFS),
+                // which tends to find feasible incumbents quickly here
+                // (counts round down into capacity).
+                let mut up = node.bounds.clone();
+                up.push((j, false, v.ceil()));
+                stack.push(Node { bounds: up });
+                let mut down = node.bounds;
+                down.push((j, true, v.floor()));
+                stack.push(Node { bounds: down });
+            }
+        }
+    }
+
+    match incumbent {
+        Some((x, obj)) if exhausted => MilpOutcome::Optimal { x, obj, nodes },
+        Some((x, obj)) => MilpOutcome::Feasible { x, obj, nodes },
+        None if exhausted => MilpOutcome::Infeasible,
+        None => MilpOutcome::Infeasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knapsack(values: &[f64], weights: &[f64], cap: f64) -> Milp {
+        let n = values.len();
+        let mut constraints = vec![Constraint::new(
+            weights.iter().cloned().enumerate().collect(),
+            Cmp::Le,
+            cap,
+        )];
+        for j in 0..n {
+            constraints.push(Constraint::new(vec![(j, 1.0)], Cmp::Le, 1.0));
+        }
+        Milp {
+            lp: Lp { n, objective: values.to_vec(), maximize: true, constraints },
+            integer: vec![true; n],
+        }
+    }
+
+    #[test]
+    fn solves_01_knapsack() {
+        // items (v, w): (60,10) (100,20) (120,30), cap 50 -> best 220
+        let m = knapsack(&[60.0, 100.0, 120.0], &[10.0, 20.0, 30.0], 50.0);
+        match solve(&m, &MilpOptions::default()) {
+            MilpOutcome::Optimal { x, obj, .. } => {
+                assert!((obj - 220.0).abs() < 1e-6, "{x:?}");
+                assert!((x[0] - 0.0).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn integer_rounding_matters() {
+        // max x st 2x <= 5, x int -> 2 (LP gives 2.5)
+        let m = Milp {
+            lp: Lp {
+                n: 1,
+                objective: vec![1.0],
+                maximize: true,
+                constraints: vec![Constraint::new(vec![(0, 2.0)], Cmp::Le, 5.0)],
+            },
+            integer: vec![true],
+        };
+        match solve(&m, &MilpOptions::default()) {
+            MilpOutcome::Optimal { x, obj, .. } => {
+                assert_eq!(x[0], 2.0);
+                assert_eq!(obj, 2.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn mixed_integer_continuous() {
+        // max x + y, x int: x + y <= 3.7, x <= 2.2 -> x=2, y=1.7
+        let m = Milp {
+            lp: Lp {
+                n: 2,
+                objective: vec![1.0, 1.0],
+                maximize: true,
+                constraints: vec![
+                    Constraint::new(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 3.7),
+                    Constraint::new(vec![(0, 1.0)], Cmp::Le, 2.2),
+                ],
+            },
+            integer: vec![true, false],
+        };
+        match solve(&m, &MilpOptions::default()) {
+            MilpOutcome::Optimal { x, obj, .. } => {
+                assert_eq!(x[0], 2.0);
+                assert!((obj - 3.7).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_milp() {
+        // x int, 0.4 <= x <= 0.6
+        let m = Milp {
+            lp: Lp {
+                n: 1,
+                objective: vec![1.0],
+                maximize: true,
+                constraints: vec![
+                    Constraint::new(vec![(0, 1.0)], Cmp::Ge, 0.4),
+                    Constraint::new(vec![(0, 1.0)], Cmp::Le, 0.6),
+                ],
+            },
+            integer: vec![true],
+        };
+        assert!(matches!(solve(&m, &MilpOptions::default()), MilpOutcome::Infeasible));
+    }
+
+    #[test]
+    fn warm_start_accepted_and_node_limit_returns_feasible() {
+        let m = knapsack(&[60.0, 100.0, 120.0], &[10.0, 20.0, 30.0], 50.0);
+        let opts = MilpOptions {
+            node_limit: 1,
+            warm_start: Some(vec![1.0, 0.0, 0.0]),
+            ..Default::default()
+        };
+        match solve(&m, &opts) {
+            MilpOutcome::Feasible { obj, .. } | MilpOutcome::Optimal { obj, .. } => {
+                assert!(obj >= 60.0 - 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_warm_start_rejected() {
+        let m = knapsack(&[60.0], &[10.0], 5.0);
+        let opts = MilpOptions {
+            warm_start: Some(vec![1.0]), // violates capacity
+            ..Default::default()
+        };
+        match solve(&m, &opts) {
+            MilpOutcome::Optimal { x, .. } => assert_eq!(x[0], 0.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_milp_matches_exhaustive_small() {
+        use crate::util::prop;
+        prop::check(60, |rng| {
+            // random 0/1 knapsack with n<=10: compare against brute force
+            let n = rng.range_u64(1, 10) as usize;
+            let values: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 20.0)).collect();
+            let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 10.0)).collect();
+            let cap = rng.range_f64(5.0, 30.0);
+            let m = knapsack(&values, &weights, cap);
+            let got = match solve(&m, &MilpOptions::default()) {
+                MilpOutcome::Optimal { obj, .. } => obj,
+                other => return Err(format!("{other:?}")),
+            };
+            let mut best = 0.0f64;
+            for mask in 0u32..(1 << n) {
+                let (mut v, mut w) = (0.0, 0.0);
+                for j in 0..n {
+                    if mask & (1 << j) != 0 {
+                        v += values[j];
+                        w += weights[j];
+                    }
+                }
+                if w <= cap + 1e-9 {
+                    best = best.max(v);
+                }
+            }
+            prop::close(got, best, 1e-5)
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Linear / mixed-integer programming substrate.
+//!
+//! The paper solves its allocation problem **P2** (§IV-B) with CPLEX.
+//! CPLEX is proprietary, so this module implements the needed solver stack
+//! from scratch (DESIGN.md §1, S3–S5):
+//!
+//! * [`simplex`] — dense-tableau two-phase primal simplex for LP,
+//! * [`milp`] — branch-and-bound over the LP relaxation for MILP,
+//! * [`heuristic`] — DRF-guided greedy + local search used for large
+//!   instances and as a warm-start incumbent for branch-and-bound; its
+//!   quality is cross-validated against the exact solver in the tests and
+//!   in `benches/solver_micro.rs`.
+
+pub mod heuristic;
+pub mod milp;
+pub mod simplex;
+
+pub use milp::{Milp, MilpOptions, MilpOutcome};
+pub use simplex::{Cmp, Constraint, Lp, LpOutcome};

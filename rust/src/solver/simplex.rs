@@ -1,0 +1,469 @@
+//! Two-phase primal simplex over a dense tableau.
+//!
+//! Supports `max`/`min` of a linear objective over constraints of the form
+//! `a·x ≤ b`, `a·x ≥ b`, `a·x = b` with `x ≥ 0` — exactly the shape of the
+//! paper's P2 relaxation.  Dantzig pricing with a Bland's-rule fallback
+//! after a degeneracy threshold (guarantees termination), artificial
+//! variables for phase 1.
+//!
+//! Dense is the right trade-off here: the optimizer's count-aggregated form
+//! of P2 is ~|A| variables × ~(2|A| + m) rows (DESIGN.md §6), i.e. at most a
+//! few hundred entries per solve at paper scale.
+
+/// Comparison operator of a [`Constraint`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// Sparse linear constraint `Σ coeffs[k].1 · x[coeffs[k].0]  cmp  rhs`.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub coeffs: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+impl Constraint {
+    pub fn new(coeffs: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) -> Self {
+        Constraint { coeffs, cmp, rhs }
+    }
+}
+
+/// A linear program over `n` non-negative structural variables.
+#[derive(Clone, Debug)]
+pub struct Lp {
+    pub n: usize,
+    /// Dense objective coefficients, length `n`.
+    pub objective: Vec<f64>,
+    pub maximize: bool,
+    pub constraints: Vec<Constraint>,
+}
+
+/// Result of [`solve`].
+#[derive(Clone, Debug)]
+pub enum LpOutcome {
+    Optimal { x: Vec<f64>, obj: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+const EPS: f64 = 1e-9;
+/// Iterations of Dantzig pricing before switching to Bland's rule.
+const BLAND_AFTER: usize = 2_000;
+/// Hard iteration cap (defense in depth; Bland guarantees termination).
+const MAX_ITERS: usize = 200_000;
+
+struct Tableau {
+    /// rows × (cols + 1); last column is RHS.
+    a: Vec<Vec<f64>>,
+    /// objective row (reduced costs), length cols + 1; we *maximize* it.
+    z: Vec<f64>,
+    basis: Vec<usize>,
+    cols: usize,
+}
+
+impl Tableau {
+    fn pivot(&mut self, row: usize, col: usize) {
+        let piv = self.a[row][col];
+        debug_assert!(piv.abs() > EPS);
+        let inv = 1.0 / piv;
+        for v in self.a[row].iter_mut() {
+            *v *= inv;
+        }
+        let prow = self.a[row].clone();
+        for (r, arow) in self.a.iter_mut().enumerate() {
+            if r != row {
+                let f = arow[col];
+                if f.abs() > EPS {
+                    for (av, pv) in arow.iter_mut().zip(&prow) {
+                        *av -= f * pv;
+                    }
+                }
+            }
+        }
+        let f = self.z[col];
+        if f.abs() > EPS {
+            for (zv, pv) in self.z.iter_mut().zip(&prow) {
+                *zv -= f * pv;
+            }
+        }
+        self.basis[row] = col;
+    }
+
+    /// Run simplex iterations until optimal/unbounded. Returns false on
+    /// unbounded.
+    fn optimize(&mut self) -> bool {
+        for iter in 0..MAX_ITERS {
+            let bland = iter >= BLAND_AFTER;
+            // entering column: positive reduced cost (maximization)
+            let mut col = None;
+            if bland {
+                for j in 0..self.cols {
+                    if self.z[j] > EPS {
+                        col = Some(j);
+                        break;
+                    }
+                }
+            } else {
+                let mut best = EPS;
+                for j in 0..self.cols {
+                    if self.z[j] > best {
+                        best = self.z[j];
+                        col = Some(j);
+                    }
+                }
+            }
+            let col = match col {
+                Some(c) => c,
+                None => return true, // optimal
+            };
+            // ratio test
+            let mut row = None;
+            let mut best_ratio = f64::INFINITY;
+            for r in 0..self.a.len() {
+                let arc = self.a[r][col];
+                if arc > EPS {
+                    let ratio = self.a[r][self.cols] / arc;
+                    let better = ratio < best_ratio - EPS
+                        || (bland
+                            && (ratio - best_ratio).abs() <= EPS
+                            && row.map_or(true, |pr: usize| self.basis[r] < self.basis[pr]));
+                    if better {
+                        best_ratio = ratio;
+                        row = Some(r);
+                    }
+                }
+            }
+            match row {
+                Some(r) => self.pivot(r, col),
+                None => return false, // unbounded
+            }
+        }
+        // iteration cap: treat as optimal-with-current-basis; callers only
+        // see this under pathological cycling, which Bland prevents.
+        true
+    }
+}
+
+/// Solve the LP. Variables are implicitly bounded below by 0.
+pub fn solve(lp: &Lp) -> LpOutcome {
+    let n = lp.n;
+    let m = lp.constraints.len();
+    debug_assert_eq!(lp.objective.len(), n);
+
+    // Column layout: [structural | slack/surplus | artificial].
+    let mut n_slack = 0usize;
+    let mut n_art = 0usize;
+    // (row, slack_col_or_none, art_col_or_none) computed in a first pass
+    let mut row_plan = Vec::with_capacity(m);
+    for c in &lp.constraints {
+        // normalize rhs >= 0 by flipping the row
+        let flip = c.rhs < 0.0;
+        let cmp = match (c.cmp, flip) {
+            (Cmp::Le, false) | (Cmp::Ge, true) => Cmp::Le,
+            (Cmp::Ge, false) | (Cmp::Le, true) => Cmp::Ge,
+            (Cmp::Eq, _) => Cmp::Eq,
+        };
+        let (slack, art) = match cmp {
+            Cmp::Le => (Some(n_slack), None),
+            Cmp::Ge => (Some(n_slack), Some(n_art)),
+            Cmp::Eq => (None, Some(n_art)),
+        };
+        if slack.is_some() {
+            n_slack += 1;
+        }
+        if art.is_some() {
+            n_art += 1;
+        }
+        row_plan.push((flip, cmp, slack, art));
+    }
+
+    let cols = n + n_slack + n_art;
+    let mut a = vec![vec![0.0; cols + 1]; m];
+    let mut basis = vec![0usize; m];
+
+    for (r, (c, &(flip, cmp, slack, art))) in
+        lp.constraints.iter().zip(&row_plan).enumerate()
+    {
+        let sign = if flip { -1.0 } else { 1.0 };
+        for &(j, v) in &c.coeffs {
+            debug_assert!(j < n, "coefficient index out of range");
+            a[r][j] += sign * v;
+        }
+        a[r][cols] = sign * c.rhs;
+        if let Some(s) = slack {
+            let sc = n + s;
+            a[r][sc] = match cmp {
+                Cmp::Le => 1.0,
+                Cmp::Ge => -1.0,
+                Cmp::Eq => unreachable!(),
+            };
+            if cmp == Cmp::Le {
+                basis[r] = sc;
+            }
+        }
+        if let Some(t) = art {
+            let ac = n + n_slack + t;
+            a[r][ac] = 1.0;
+            basis[r] = ac;
+        }
+    }
+
+    let mut tab = Tableau { a, z: vec![0.0; cols + 1], basis, cols };
+
+    // ---- Phase 1: maximize -(sum of artificials) -------------------------
+    if n_art > 0 {
+        // z = -Σ art  => reduced costs: start from c_j = 0 except art = -1,
+        // then add rows whose basis is artificial (price out the basis).
+        for j in 0..cols + 1 {
+            let mut zj = 0.0;
+            for r in 0..m {
+                if tab.basis[r] >= n + n_slack {
+                    zj += tab.a[r][j];
+                }
+            }
+            // maximize -sum(art): reduced cost = (sum of art rows) - c_j
+            // where c_j = 1 for artificial columns.
+            let cj = if j >= n + n_slack && j < cols { 1.0 } else { 0.0 };
+            tab.z[j] = zj - cj;
+        }
+        if !tab.optimize() {
+            return LpOutcome::Infeasible; // phase-1 unbounded can't happen
+        }
+        if tab.z[cols] > 1e-6 {
+            return LpOutcome::Infeasible;
+        }
+        // Drive remaining artificials out of the basis where possible.
+        for r in 0..m {
+            if tab.basis[r] >= n + n_slack {
+                if let Some(j) = (0..n + n_slack).find(|&j| tab.a[r][j].abs() > 1e-7) {
+                    tab.pivot(r, j);
+                }
+                // else: redundant row; its artificial stays basic at 0.
+            }
+        }
+        // Forbid artificials from re-entering.
+        for r in 0..m {
+            for j in n + n_slack..cols {
+                tab.a[r][j] = 0.0;
+            }
+        }
+    }
+
+    // ---- Phase 2: the real objective -------------------------------------
+    let sgn = if lp.maximize { 1.0 } else { -1.0 };
+    let cost = |j: usize| -> f64 {
+        if j < n {
+            sgn * lp.objective[j]
+        } else {
+            0.0
+        }
+    };
+    for j in 0..cols + 1 {
+        let mut zj = 0.0;
+        for r in 0..m {
+            zj += cost(tab.basis[r]) * tab.a[r][j];
+        }
+        let cj = if j < cols { cost(j) } else { 0.0 };
+        tab.z[j] = cj - zj;
+    }
+    // artificial columns stay zeroed / never priced in
+    for j in n + n_slack..cols {
+        tab.z[j] = f64::NEG_INFINITY.max(-1e18); // strongly negative
+    }
+    if !tab.optimize() {
+        return LpOutcome::Unbounded;
+    }
+
+    let mut x = vec![0.0; n];
+    for r in 0..m {
+        if tab.basis[r] < n {
+            x[tab.basis[r]] = tab.a[r][cols].max(0.0);
+        }
+    }
+    let obj: f64 = lp
+        .objective
+        .iter()
+        .zip(&x)
+        .map(|(c, v)| c * v)
+        .sum();
+    LpOutcome::Optimal { x, obj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn le(coeffs: Vec<(usize, f64)>, rhs: f64) -> Constraint {
+        Constraint::new(coeffs, Cmp::Le, rhs)
+    }
+
+    #[test]
+    fn textbook_max() {
+        // max 3x + 5y st x<=4, 2y<=12, 3x+2y<=18 -> x=2,y=6, obj=36
+        let lp = Lp {
+            n: 2,
+            objective: vec![3.0, 5.0],
+            maximize: true,
+            constraints: vec![
+                le(vec![(0, 1.0)], 4.0),
+                le(vec![(1, 2.0)], 12.0),
+                le(vec![(0, 3.0), (1, 2.0)], 18.0),
+            ],
+        };
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert!((x[0] - 2.0).abs() < 1e-7, "{x:?}");
+                assert!((x[1] - 6.0).abs() < 1e-7);
+                assert!((obj - 36.0).abs() < 1e-7);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn minimization_with_ge() {
+        // min 2x + 3y st x + y >= 4, x >= 1 -> x=4? obj: 2*4=8 (y=0)
+        let lp = Lp {
+            n: 2,
+            objective: vec![2.0, 3.0],
+            maximize: false,
+            constraints: vec![
+                Constraint::new(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0),
+                Constraint::new(vec![(0, 1.0)], Cmp::Ge, 1.0),
+            ],
+        };
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert!((obj - 8.0).abs() < 1e-7, "{x:?} {obj}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // max x + y st x + y = 5, x <= 3 -> obj 5
+        let lp = Lp {
+            n: 2,
+            objective: vec![1.0, 1.0],
+            maximize: true,
+            constraints: vec![
+                Constraint::new(vec![(0, 1.0), (1, 1.0)], Cmp::Eq, 5.0),
+                le(vec![(0, 1.0)], 3.0),
+            ],
+        };
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert!((obj - 5.0).abs() < 1e-7);
+                assert!((x[0] + x[1] - 5.0).abs() < 1e-7);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x <= 1 and x >= 2
+        let lp = Lp {
+            n: 1,
+            objective: vec![1.0],
+            maximize: true,
+            constraints: vec![
+                le(vec![(0, 1.0)], 1.0),
+                Constraint::new(vec![(0, 1.0)], Cmp::Ge, 2.0),
+            ],
+        };
+        assert!(matches!(solve(&lp), LpOutcome::Infeasible));
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let lp = Lp {
+            n: 1,
+            objective: vec![1.0],
+            maximize: true,
+            constraints: vec![Constraint::new(vec![(0, 1.0)], Cmp::Ge, 0.0)],
+        };
+        assert!(matches!(solve(&lp), LpOutcome::Unbounded));
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // -x <= -2  ==  x >= 2; max -x -> x = 2, obj = -2
+        let lp = Lp {
+            n: 1,
+            objective: vec![-1.0],
+            maximize: true,
+            constraints: vec![le(vec![(0, -1.0)], -2.0)],
+        };
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert!((x[0] - 2.0).abs() < 1e-7);
+                assert!((obj + 2.0).abs() < 1e-7);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // classic degenerate corner; just needs to terminate at obj 0 corner
+        let lp = Lp {
+            n: 2,
+            objective: vec![1.0, 1.0],
+            maximize: true,
+            constraints: vec![
+                le(vec![(0, 1.0), (1, 1.0)], 1.0),
+                le(vec![(0, 1.0), (1, 1.0)], 1.0),
+                le(vec![(0, 1.0)], 1.0),
+            ],
+        };
+        match solve(&lp) {
+            LpOutcome::Optimal { obj, .. } => assert!((obj - 1.0).abs() < 1e-7),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_feasible_solution_satisfies_constraints() {
+        use crate::util::prop;
+        prop::check(150, |rng| {
+            let n = rng.range_u64(1, 6) as usize;
+            let m = rng.range_u64(1, 6) as usize;
+            let lp = Lp {
+                n,
+                objective: (0..n).map(|_| rng.range_f64(-3.0, 3.0)).collect(),
+                maximize: true,
+                constraints: (0..m)
+                    .map(|_| {
+                        // a·x <= b with a >= 0, b >= 0 keeps it feasible+bounded
+                        Constraint::new(
+                            (0..n).map(|j| (j, rng.range_f64(0.1, 2.0))).collect(),
+                            Cmp::Le,
+                            rng.range_f64(0.5, 20.0),
+                        )
+                    })
+                    .collect(),
+            };
+            match solve(&lp) {
+                LpOutcome::Optimal { x, .. } => {
+                    for (ci, c) in lp.constraints.iter().enumerate() {
+                        let lhs: f64 = c.coeffs.iter().map(|&(j, v)| v * x[j]).sum();
+                        if lhs > c.rhs + 1e-6 {
+                            return Err(format!("constraint {ci} violated: {lhs} > {}", c.rhs));
+                        }
+                    }
+                    if x.iter().any(|&v| v < -1e-9) {
+                        return Err("negative variable".into());
+                    }
+                    Ok(())
+                }
+                other => Err(format!("expected optimal, got {other:?}")),
+            }
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared utilities: deterministic PRNG, statistics helpers, a tiny
+//! property-testing framework, and a stderr logger.
+//!
+//! These exist because the vendored crate registry on this image has no
+//! `rand`, `proptest` or `env_logger`; they are small, fully tested, and
+//! deterministic (every experiment in EXPERIMENTS.md is reproducible from a
+//! seed).
+
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,148 @@
+//! Property-testing mini-framework (proptest is not in the vendored
+//! registry).  Deterministic: each case is generated from a seeded [`Rng`];
+//! on failure the framework reports the case index and seed so the exact
+//! input is reproducible, and performs a simple halving "shrink" pass for
+//! `Vec`-shaped inputs via [`check_shrink`].
+//!
+//! ```ignore
+//! prop::check(100, |rng| {
+//!     let n = rng.range_u64(1, 50) as usize;
+//!     // ... generate input, return Err(msg) on property violation
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` generated property checks. Panics with the failing seed and
+/// case index on the first violation.
+pub fn check<F>(cases: u32, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_seeded(0xD0B5_EED5, cases, &mut property);
+}
+
+/// As [`check`] but with an explicit base seed (used to reproduce failures).
+pub fn check_seeded<F>(base_seed: u64, cases: u32, property: &mut F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed at case {case} (reproduce with seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Property check over a generated `Vec<T>` input with halving shrink: when
+/// a case fails, successively smaller prefixes/suffixes are retried and the
+/// smallest failing input is reported.
+pub fn check_shrink<T, G, P>(cases: u32, mut generate: G, mut property: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> Vec<T>,
+    P: FnMut(&[T]) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000_0000 ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = property(&input) {
+            // shrink: try halves repeatedly while they still fail
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut changed = true;
+            while changed && best.len() > 1 {
+                changed = false;
+                let half = best.len() / 2;
+                let halves = [best[..half].to_vec(), best[half..].to_vec()];
+                for cand in halves {
+                    if let Err(m) = property(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        changed = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed at case {case} (seed {seed:#x});\n  \
+                 shrunk input ({} elems): {best:?}\n  violation: {best_msg}",
+                best.len()
+            );
+        }
+    }
+}
+
+/// Assert two floats are within `tol` (absolute) — helper for properties.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(50, |rng| {
+            count += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |rng| {
+            if rng.f64() < 2.0 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input (1 elems)")]
+    fn shrink_reduces_to_minimal() {
+        // property: no element equals 7 — generator always plants one.
+        check_shrink(
+            1,
+            |rng| {
+                let mut v: Vec<u64> = (0..16).map(|_| rng.below(5)).collect();
+                v[3] = 7;
+                v
+            },
+            |xs| {
+                if xs.contains(&7) {
+                    Err("contains 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(close(1.0, 2.0, 1e-6).is_err());
+    }
+}

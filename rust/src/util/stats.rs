@@ -1,0 +1,144 @@
+//! Statistics helpers used by the metrics pipeline, the workload model and
+//! the bench harness: mean/std, percentiles, empirical CDFs and a tiny
+//! online accumulator.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation; 0.0 for < 2 samples.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, p in [0, 100]. Panics on empty input.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&p));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Empirical CDF evaluated at `points`: fraction of samples <= point.
+pub fn ecdf(samples: &[f64], points: &[f64]) -> Vec<f64> {
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points
+        .iter()
+        .map(|&p| {
+            let idx = v.partition_point(|&x| x <= p);
+            idx as f64 / v.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Online mean/min/max/count accumulator (constant memory).
+#[derive(Clone, Debug, Default)]
+pub struct Acc {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Acc {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Time-weighted average of a step function sampled as (time, value) points
+/// over [t0, t1]; each value holds until the next sample.
+pub fn time_weighted_mean(series: &[(f64, f64)], t0: f64, t1: f64) -> f64 {
+    if series.is_empty() || t1 <= t0 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for (idx, &(t, v)) in series.iter().enumerate() {
+        let start = t.max(t0);
+        let end = series.get(idx + 1).map(|&(tn, _)| tn).unwrap_or(t1).min(t1);
+        if end > start {
+            total += v * (end - start);
+        }
+    }
+    total / (t1 - t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((std_dev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn ecdf_fraction() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        let c = ecdf(&s, &[0.5, 2.0, 10.0]);
+        assert_eq!(c, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn acc_tracks_min_max_mean() {
+        let mut a = Acc::default();
+        for x in [3.0, 1.0, 2.0] {
+            a.push(x);
+        }
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 3.0);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_weighted() {
+        // value 1 on [0,10), value 3 on [10,20)
+        let series = [(0.0, 1.0), (10.0, 3.0)];
+        assert!((time_weighted_mean(&series, 0.0, 20.0) - 2.0).abs() < 1e-12);
+        assert!((time_weighted_mean(&series, 0.0, 10.0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,155 @@
+//! Fig. 1 duration model.
+//!
+//! The paper's production-trace CDFs are proprietary; §I states the two
+//! anchor quantiles — **about 90 % of distributed-ML applications run more
+//! than 6 hours** and **about 50 % of tasks take less than 1.5 s** — and
+//! Fig. 1 shows smooth log-normal-looking CDFs.  We therefore fit
+//! log-normal distributions through those anchors (DESIGN.md §1):
+//!
+//! * app duration: P(X > 6 h) = 0.9 with shape σ = 0.6
+//!   ⇒ μ = ln 6 + 0.6·z₀.₉ = ln 6 + 0.6·1.2816 (median ≈ 12.9 h);
+//! * task duration: median 1.5 s with shape σ = 1.2 (short tasks with a
+//!   heavy right tail, matching the "very short task" observation).
+
+use crate::util::Rng;
+
+/// z-score of the 90th percentile of the standard normal.
+const Z90: f64 = 1.2815515655446004;
+
+/// Log-normal parameters for app and task durations.
+#[derive(Clone, Debug)]
+pub struct DurationModel {
+    pub app_mu: f64,
+    pub app_sigma: f64,
+    pub task_mu: f64,
+    pub task_sigma: f64,
+}
+
+impl Default for DurationModel {
+    fn default() -> Self {
+        Self::production()
+    }
+}
+
+impl DurationModel {
+    /// The Fig. 1 production-trace fit (90 % of apps > 6 h).
+    pub fn production() -> Self {
+        let app_sigma = 0.6;
+        let task_sigma = 1.2;
+        DurationModel {
+            // P(X > 6) = 0.9  <=>  (ln 6 - mu)/sigma = -z90
+            app_mu: 6.0f64.ln() + app_sigma * Z90,
+            app_sigma,
+            // median 1.5 s
+            task_mu: 1.5f64.ln(),
+            task_sigma,
+        }
+    }
+
+    /// The §V synthetic-evaluation workload.  The paper never states the
+    /// durations of the 50 synthetic apps; the published outcomes pin them
+    /// instead — the baseline "can only handle the first 15 submitted
+    /// applications" in 5 h and Dorm speeds apps up ~2.7× (close to the
+    /// speed(n_max)/speed(baseline) ceiling), which requires a moderately
+    /// loaded cluster with a persistent backlog, i.e. median ≈ 9 h (see
+    /// EXPERIMENTS.md §Calib for the sweep that pins this).
+    pub fn synthetic_eval() -> Self {
+        DurationModel {
+            app_mu: 9.0f64.ln(),
+            app_sigma: 0.5,
+            task_mu: 1.5f64.ln(),
+            task_sigma: 1.2,
+        }
+    }
+}
+
+/// Sample an application duration in hours.
+pub fn app_duration_hours(model: &DurationModel, rng: &mut Rng) -> f64 {
+    rng.log_normal(model.app_mu, model.app_sigma)
+}
+
+/// Sample a task duration in seconds.
+pub fn task_duration_secs(model: &DurationModel, rng: &mut Rng) -> f64 {
+    rng.log_normal(model.task_mu, model.task_sigma)
+}
+
+/// Standard normal CDF (Abramowitz–Stegun 7.1.26 erf approximation),
+/// used to evaluate the model CDF analytically for Fig. 1.
+pub fn normal_cdf(z: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.3275911 * z.abs() / std::f64::consts::SQRT_2);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf = 1.0 - poly * (-z * z / 2.0).exp();
+    if z >= 0.0 {
+        0.5 * (1.0 + erf)
+    } else {
+        0.5 * (1.0 - erf)
+    }
+}
+
+impl DurationModel {
+    /// Analytic CDF of app duration at `hours`.
+    pub fn app_cdf(&self, hours: f64) -> f64 {
+        if hours <= 0.0 {
+            return 0.0;
+        }
+        normal_cdf((hours.ln() - self.app_mu) / self.app_sigma)
+    }
+
+    /// Analytic CDF of task duration at `secs`.
+    pub fn task_cdf(&self, secs: f64) -> f64 {
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        normal_cdf((secs.ln() - self.task_mu) / self.task_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn anchors_hold_analytically() {
+        let m = DurationModel::default();
+        // 90% of apps run longer than 6h
+        assert!((m.app_cdf(6.0) - 0.10).abs() < 0.005, "{}", m.app_cdf(6.0));
+        // 50% of tasks under 1.5s
+        assert!((m.task_cdf(1.5) - 0.50).abs() < 0.005, "{}", m.task_cdf(1.5));
+    }
+
+    #[test]
+    fn anchors_hold_empirically() {
+        let m = DurationModel::default();
+        let mut rng = Rng::new(99);
+        let apps: Vec<f64> = (0..40_000).map(|_| app_duration_hours(&m, &mut rng)).collect();
+        let frac_over_6h = apps.iter().filter(|&&d| d > 6.0).count() as f64 / apps.len() as f64;
+        assert!((frac_over_6h - 0.9).abs() < 0.01, "{frac_over_6h}");
+
+        let tasks: Vec<f64> = (0..40_000).map(|_| task_duration_secs(&m, &mut rng)).collect();
+        let frac_under = tasks.iter().filter(|&&d| d < 1.5).count() as f64 / tasks.len() as f64;
+        assert!((frac_under - 0.5).abs() < 0.01, "{frac_under}");
+    }
+
+    #[test]
+    fn empirical_matches_analytic_cdf() {
+        let m = DurationModel::default();
+        let mut rng = Rng::new(4);
+        let apps: Vec<f64> = (0..20_000).map(|_| app_duration_hours(&m, &mut rng)).collect();
+        for h in [2.0, 6.0, 12.0, 24.0] {
+            let emp = stats::ecdf(&apps, &[h])[0];
+            let ana = m.app_cdf(h);
+            assert!((emp - ana).abs() < 0.02, "h={h}: emp {emp} vs ana {ana}");
+        }
+    }
+
+    #[test]
+    fn normal_cdf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-6);
+        assert!((normal_cdf(Z90) - 0.9).abs() < 1e-4);
+        assert!(normal_cdf(-8.0) < 1e-6);
+        assert!(normal_cdf(8.0) > 1.0 - 1e-6);
+    }
+}

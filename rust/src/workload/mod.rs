@@ -1,0 +1,10 @@
+//! Workload models: the literal Table II synthetic workload and the Fig. 1
+//! duration distributions fitted to the paper's stated quantiles
+//! (DESIGN.md §1 — the Sensetime production trace is proprietary, so the
+//! published CDF shapes are what we reproduce).
+
+mod durations;
+mod table2;
+
+pub use durations::{app_duration_hours, task_duration_secs, DurationModel};
+pub use table2::{table2_rows, Table2Row, WorkloadApp, WorkloadGen};

@@ -1,0 +1,198 @@
+//! Table II, encoded verbatim, plus the §V-A-3 online workload generator:
+//! 50 applications drawn from the 7 rows, submitted as a Poisson process
+//! with 20-minute mean inter-arrival time.
+
+use crate::app::Engine;
+use crate::resources::Res;
+use crate::util::Rng;
+
+use super::durations::DurationModel;
+
+/// One row of Table II.
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub engine: Engine,
+    pub dataset: &'static str,
+    pub model: &'static str,
+    /// ⟨CPUs, GPUs, RAM GB⟩ per container.
+    pub demand: Res,
+    pub weight: u32,
+    pub n_max: u32,
+    pub n_min: u32,
+    /// Number of applications of this type in the 50-app workload.
+    pub num: u32,
+    /// Static container count the Swarm baseline gives this type (§V-A-4:
+    /// "8, 8, 4, 2, 2, 2, 3").
+    pub baseline_containers: u32,
+    /// Median training duration at the baseline container count, hours.
+    /// The paper does not state per-type durations; these are calibrated
+    /// from what the models actually cost (LR on Criteo / MF on MovieLens
+    /// ≈ an hour; CaffeNet on CIFAR-10 a few hours; the ImageNet models a
+    /// day or more) and validated against the §V headline factors
+    /// (EXPERIMENTS.md §Calib).
+    pub duration_median_hours: f64,
+}
+
+/// The literal Table II (plus the §V-A-4 baseline column).
+pub fn table2_rows() -> Vec<Table2Row> {
+    use Engine::*;
+    vec![
+        Table2Row { engine: MxNet, dataset: "Criteo-Log", model: "LR",
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0), weight: 1, n_max: 32, n_min: 1,
+            num: 20, baseline_containers: 8, duration_median_hours: 1.2 },
+        Table2Row { engine: TensorFlow, dataset: "MovieLens", model: "MF",
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 6.0), weight: 2, n_max: 32, n_min: 1,
+            num: 20, baseline_containers: 8, duration_median_hours: 1.2 },
+        Table2Row { engine: MpiCaffe, dataset: "CIFAR-10", model: "CaffeNet",
+            demand: Res::cpu_gpu_ram(4.0, 0.0, 6.0), weight: 4, n_max: 8, n_min: 1,
+            num: 6, baseline_containers: 4, duration_median_hours: 3.0 },
+        Table2Row { engine: MxNet, dataset: "ImageNet", model: "VGG-16",
+            demand: Res::cpu_gpu_ram(4.0, 1.0, 32.0), weight: 1, n_max: 5, n_min: 1,
+            num: 1, baseline_containers: 2, duration_median_hours: 30.0 },
+        Table2Row { engine: TensorFlow, dataset: "ImageNet", model: "GoogLeNet",
+            demand: Res::cpu_gpu_ram(6.0, 1.0, 16.0), weight: 1, n_max: 5, n_min: 1,
+            num: 1, baseline_containers: 2, duration_median_hours: 24.0 },
+        Table2Row { engine: Petuum, dataset: "ImageNet", model: "AlexNet",
+            demand: Res::cpu_gpu_ram(6.0, 1.0, 16.0), weight: 2, n_max: 5, n_min: 1,
+            num: 1, baseline_containers: 2, duration_median_hours: 24.0 },
+        Table2Row { engine: MpiCaffe, dataset: "ImageNet", model: "ResNet-50",
+            demand: Res::cpu_gpu_ram(4.0, 1.0, 32.0), weight: 4, n_max: 5, n_min: 1,
+            num: 1, baseline_containers: 3, duration_median_hours: 36.0 },
+    ]
+}
+
+/// One generated application instance of the online workload.
+#[derive(Clone, Debug)]
+pub struct WorkloadApp {
+    /// Index into [`table2_rows`].
+    pub row: usize,
+    /// Short tag like "LR" / "VGG-16" (Fig. 9a grouping).
+    pub tag: String,
+    /// Submission time, hours from experiment start.
+    pub submit_hours: f64,
+    /// Duration the app would take at its type's baseline container count
+    /// (sampled from the Fig. 1 CDF).  The sim's perf model converts this
+    /// to total work via its speedup curve, so the baseline run reproduces
+    /// the Fig. 1 durations exactly and Dorm's speedup comes from scaling
+    /// beyond the baseline count.
+    pub duration_at_baseline_hours: f64,
+    /// The type's baseline container count (the §V-A-4 static allocation).
+    pub baseline_n: u32,
+}
+
+/// The §V-A-3 online workload generator.
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    pub rows: Vec<Table2Row>,
+    pub mean_interarrival_min: f64,
+    pub duration_model: DurationModel,
+}
+
+impl Default for WorkloadGen {
+    fn default() -> Self {
+        WorkloadGen {
+            rows: table2_rows(),
+            mean_interarrival_min: 20.0,
+            duration_model: DurationModel::synthetic_eval(),
+        }
+    }
+}
+
+impl WorkloadGen {
+    /// Generate the 50-app workload: the Table II type counts, shuffled
+    /// into random submission order, Poisson arrivals.
+    pub fn generate(&self, rng: &mut Rng) -> Vec<WorkloadApp> {
+        // expand type indices per Table II "Num" column
+        let mut types: Vec<usize> = Vec::new();
+        for (i, row) in self.rows.iter().enumerate() {
+            for _ in 0..row.num {
+                types.push(i);
+            }
+        }
+        rng.shuffle(&mut types);
+
+        let mut out = Vec::with_capacity(types.len());
+        let mut t_hours = 0.0;
+        for row_idx in types {
+            t_hours += rng.exponential(self.mean_interarrival_min) / 60.0;
+            let row = &self.rows[row_idx];
+            // Sample the app's *duration at its baseline container count*:
+            // log-normal around the row's median (sigma from the synthetic
+            // model), so the mix of short LR/MF and day-long ImageNet jobs
+            // reproduces both the §V backlog and the §V speedups.
+            let dur = row.duration_median_hours
+                * rng.log_normal(0.0, self.duration_model.app_sigma);
+            out.push(WorkloadApp {
+                row: row_idx,
+                tag: row.model.to_string(),
+                submit_hours: t_hours,
+                duration_at_baseline_hours: dur,
+                baseline_n: row.baseline_containers.max(1),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        let rows = table2_rows();
+        assert_eq!(rows.len(), 7);
+        let total: u32 = rows.iter().map(|r| r.num).sum();
+        assert_eq!(total, 50, "paper: 50 applications");
+        // §V-A-4 baseline container counts
+        let base: Vec<u32> = rows.iter().map(|r| r.baseline_containers).collect();
+        assert_eq!(base, vec![8, 8, 4, 2, 2, 2, 3]);
+        // spot-check two rows against the printed table
+        assert_eq!(rows[0].demand, Res::cpu_gpu_ram(2.0, 0.0, 8.0));
+        assert_eq!(rows[6].model, "ResNet-50");
+        assert_eq!(rows[6].weight, 4);
+        assert_eq!(rows[3].n_max, 5);
+    }
+
+    #[test]
+    fn generator_produces_50_sorted_arrivals() {
+        let gen = WorkloadGen::default();
+        let mut rng = Rng::new(1);
+        let apps = gen.generate(&mut rng);
+        assert_eq!(apps.len(), 50);
+        for w in apps.windows(2) {
+            assert!(w[0].submit_hours <= w[1].submit_hours);
+        }
+        // mean inter-arrival ≈ 20 min over many seeds
+        let mut total = 0.0;
+        let n_seeds = 40;
+        for seed in 0..n_seeds {
+            let mut rng = Rng::new(seed);
+            let apps = gen.generate(&mut rng);
+            total += apps.last().unwrap().submit_hours / 49.0;
+        }
+        let mean_hours = total / n_seeds as f64;
+        assert!((mean_hours - 20.0 / 60.0).abs() < 0.05, "mean {mean_hours}");
+    }
+
+    #[test]
+    fn type_mix_matches_counts() {
+        let gen = WorkloadGen::default();
+        let mut rng = Rng::new(7);
+        let apps = gen.generate(&mut rng);
+        for (i, row) in gen.rows.iter().enumerate() {
+            let n = apps.iter().filter(|a| a.row == i).count() as u32;
+            assert_eq!(n, row.num, "row {}", row.model);
+        }
+    }
+
+    #[test]
+    fn durations_positive_and_baseline_n_matches_row() {
+        let gen = WorkloadGen::default();
+        let mut rng = Rng::new(3);
+        for a in gen.generate(&mut rng) {
+            assert!(a.duration_at_baseline_hours > 0.0);
+            assert_eq!(a.baseline_n, gen.rows[a.row].baseline_containers);
+        }
+    }
+}
