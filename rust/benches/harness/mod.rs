@@ -18,7 +18,7 @@ pub fn bench_micro<F: FnMut()>(label: &str, warmup: u32, iters: u32, mut f: F) -
         f();
         samples.push(t0.elapsed().as_secs_f64() * 1e6);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let p50 = samples[samples.len() / 2];
     let p99 = samples[((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1)];

@@ -15,8 +15,7 @@ use std::collections::BTreeMap;
 
 use crate::app::Engine;
 use crate::cluster::{place, PlacementInput, ServerId};
-use crate::sim::{AllocationUpdate, CmsPolicy, SimCtx};
-use crate::workload::table2_rows;
+use crate::sched::{AllocationUpdate, CmsPolicy, SchedCtx};
 
 /// OpenStack-like engine-partitioned baseline.
 #[derive(Debug)]
@@ -66,25 +65,24 @@ impl CmsPolicy for IaasPolicy {
         "iaas".into()
     }
 
-    fn on_change(&mut self, ctx: &SimCtx) -> Option<AllocationUpdate> {
-        let rows = table2_rows();
+    fn on_change(&mut self, ctx: &SchedCtx) -> Option<AllocationUpdate> {
         let mut assignment: BTreeMap<_, BTreeMap<ServerId, u32>> = BTreeMap::new();
 
         // keep running apps pinned
         let mut engine_busy: BTreeMap<Engine, bool> = BTreeMap::new();
         for app in ctx.apps.values() {
             if app.containers > 0 {
-                assignment.insert(app.id, ctx.cluster.placement_of(app.id));
-                engine_busy.insert(rows[app.row].engine, true);
+                assignment.insert(app.id, app.placement.clone());
+                engine_busy.insert(app.engine, true);
             }
         }
 
         // admit the oldest pending app per idle engine, inside the
         // engine's partition only
         let mut pending: Vec<_> = ctx.apps.values().filter(|a| a.containers == 0).collect();
-        pending.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap());
+        pending.sort_by(|a, b| a.submit.total_cmp(&b.submit));
         for app in pending {
-            let engine = rows[app.row].engine;
+            let engine = app.engine;
             if engine_busy.get(&engine).copied().unwrap_or(false) {
                 continue; // one app per virtual cluster (no multi-app support)
             }
@@ -94,7 +92,7 @@ impl CmsPolicy for IaasPolicy {
             }
             let caps: Vec<_> = servers
                 .iter()
-                .map(|&j| ctx.cluster.servers[j].capacity.clone())
+                .map(|&j| ctx.capacities[j].clone())
                 .collect();
             let input = PlacementInput {
                 app: app.id,
@@ -122,7 +120,7 @@ mod tests {
     use super::*;
     use crate::config::{ClusterConfig, SimConfig};
     use crate::sim::{run_sim, PerfModel};
-    use crate::workload::WorkloadApp;
+    use crate::workload::{table2_rows, WorkloadApp};
 
     #[test]
     fn partition_covers_all_servers() {

@@ -7,7 +7,7 @@
 //! interesting two-level pathology (per-task scheduling latency) lives in
 //! [`super::tasklevel`].
 
-use crate::sim::{AllocationUpdate, CmsPolicy, SimCtx};
+use crate::sched::{AllocationUpdate, CmsPolicy, SchedCtx};
 
 use super::static_alloc::StaticPolicy;
 
@@ -40,7 +40,7 @@ impl CmsPolicy for MesosAppLevelPolicy {
         "mesos-app".into()
     }
 
-    fn on_change(&mut self, ctx: &SimCtx) -> Option<AllocationUpdate> {
+    fn on_change(&mut self, ctx: &SchedCtx) -> Option<AllocationUpdate> {
         self.inner.on_change(ctx)
     }
 

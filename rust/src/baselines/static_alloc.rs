@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 
 use crate::cluster::{place, PlacementInput, ServerId};
-use crate::sim::{AllocationUpdate, CmsPolicy, SimCtx};
+use crate::sched::{AllocationUpdate, CmsPolicy, SchedCtx};
 
 /// Swarm-like static allocator.
 #[derive(Debug, Default)]
@@ -27,20 +27,13 @@ impl CmsPolicy for StaticPolicy {
         "static".into()
     }
 
-    fn on_change(&mut self, ctx: &SimCtx) -> Option<AllocationUpdate> {
-        let capacities: Vec<_> = ctx
-            .cluster
-            .servers
-            .iter()
-            .map(|s| s.capacity.clone())
-            .collect();
-
+    fn on_change(&mut self, ctx: &SchedCtx) -> Option<AllocationUpdate> {
         // running apps stay pinned exactly as they are
         let mut assignment: BTreeMap<_, BTreeMap<ServerId, u32>> = BTreeMap::new();
         let mut pinned: Vec<PlacementInput> = Vec::new();
         for app in ctx.apps.values() {
             if app.containers > 0 {
-                let cur = ctx.cluster.placement_of(app.id);
+                let cur = app.placement.clone();
                 assignment.insert(app.id, cur.clone());
                 pinned.push(PlacementInput {
                     app: app.id,
@@ -58,7 +51,7 @@ impl CmsPolicy for StaticPolicy {
             .values()
             .filter(|a| a.containers == 0)
             .collect();
-        pending.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap());
+        pending.sort_by(|a, b| a.submit.total_cmp(&b.submit));
 
         for app in pending {
             let mut inputs = pinned.clone();
@@ -68,7 +61,7 @@ impl CmsPolicy for StaticPolicy {
                 target: app.baseline_n,
                 current: BTreeMap::new(),
             });
-            if let Some(p) = place(&inputs, &capacities) {
+            if let Some(p) = place(&inputs, ctx.capacities) {
                 let placed = p.assignment[&app.id].clone();
                 pinned.push(PlacementInput {
                     app: app.id,

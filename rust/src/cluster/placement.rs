@@ -101,7 +101,7 @@ pub fn place(inputs: &[PlacementInput], capacities: &[Res]) -> Option<Placement>
     order.sort_by(|&a, &b| {
         let da = movers[a].demand.dominant_share(&total_cap);
         let db = movers[b].demand.dominant_share(&total_cap);
-        db.partial_cmp(&da).unwrap()
+        db.total_cmp(&da)
     });
 
     for &idx in &order {

@@ -2,8 +2,8 @@
 //!
 //! Reproduction of Sun et al., *"Towards Distributed Machine Learning in
 //! Shared Clusters: A Dynamically-Partitioned Approach"* (IEEE SMARTCOMP
-//! 2017).  See `DESIGN.md` for the system inventory and the per-experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! 2017).  See `DESIGN.md` (repo root) for the system inventory and design
+//! notes, and `ROADMAP.md` for the growth plan and open items.
 //!
 //! The crate is the L3 (coordination) layer of a three-layer stack:
 //!
@@ -29,6 +29,7 @@
 //! | [`drf`] | dominant-resource-fairness progressive filling (ŝᵢ) |
 //! | [`solver`] | simplex LP + branch-and-bound MILP + heuristic |
 //! | [`optimizer`] | builds the paper's P2 from cluster state, solves it |
+//! | [`sched`] | shared allocation engine + policy interface (master ∩ sim), cached/warm-started re-solves |
 //! | [`cluster`] | servers, partitions, containers |
 //! | [`app`] | application 6-tuple, lifecycle, checkpoints |
 //! | [`master`] / [`slave`] | the Dorm control plane |
@@ -55,6 +56,7 @@ pub mod ps;
 pub mod report;
 pub mod resources;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod slave;
 pub mod solver;

@@ -1,11 +1,15 @@
 //! DormMaster: the central manager (§III-A-1) driving the live runtime.
 //!
-//! Owns the cluster bookkeeping, the utilization–fairness optimizer and the
-//! checkpoint store; talks to per-server [`DormSlave`]s for container
-//! lifecycle and to the PS runtime ([`crate::ps::Trainer`]) for the actual
-//! training work.  The §III-C-2 adjustment protocol and the Fig. 5 flow:
+//! Owns the cluster bookkeeping and the checkpoint store; talks to
+//! per-server [`DormSlave`]s for container lifecycle and to the PS runtime
+//! ([`crate::ps::Trainer`]) for the actual training work.  All scheduling
+//! goes through a [`CmsPolicy`] — by default Dorm's shared
+//! [`crate::sched::AllocationEngine`] (the same code the simulator runs),
+//! but any policy, including the [`crate::baselines`], can drive the live
+//! master via [`DormMaster::with_policy`].  The §III-C-2 adjustment
+//! protocol and the Fig. 5 flow:
 //!
-//! 1. submission / completion triggers the optimizer;
+//! 1. submission / completion snapshots the cluster and asks the policy;
 //! 2. new allocations are enforced by destroying/creating containers;
 //! 3. adjusted apps are checkpointed, killed and resumed at the new scale.
 //!
@@ -20,10 +24,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::app::{AppId, AppSpec, AppState, CheckpointStore};
 use crate::cluster::ServerId;
 use crate::config::{ClusterConfig, DormConfig};
-use crate::optimizer::{Decision, OptApp, Optimizer, SolveMode};
+use crate::optimizer::SolveMode;
 use crate::ps::{Trainer, TrainerConfig};
 use crate::resources::Res;
 use crate::runtime::{ComputeHandle, Manifest};
+use crate::sched::{AllocationUpdate, CmsPolicy, DormPolicy, SchedApp, SchedCtx};
 use crate::slave::DormSlave;
 
 /// One application under management.
@@ -41,7 +46,7 @@ pub struct ManagedApp {
 /// The central manager.
 pub struct DormMaster {
     pub slaves: Vec<DormSlave>,
-    optimizer: Optimizer,
+    policy: Box<dyn CmsPolicy>,
     store: CheckpointStore,
     compute: Option<(ComputeHandle, Manifest)>,
     apps: BTreeMap<AppId, ManagedApp>,
@@ -51,9 +56,25 @@ pub struct DormMaster {
 }
 
 impl DormMaster {
+    /// A master running the paper's system: the shared allocation engine
+    /// with the given θ thresholds.
     pub fn new(
         cluster: &ClusterConfig,
         dorm: DormConfig,
+        store: CheckpointStore,
+    ) -> Self {
+        Self::with_policy(
+            cluster,
+            Box::new(DormPolicy::with_mode(dorm, SolveMode::Heuristic)),
+            store,
+        )
+    }
+
+    /// A master driven by an arbitrary [`CmsPolicy`] — the same objects the
+    /// simulator runs (Dorm, static/Swarm, Mesos app-level, IaaS, ...).
+    pub fn with_policy(
+        cluster: &ClusterConfig,
+        policy: Box<dyn CmsPolicy>,
         store: CheckpointStore,
     ) -> Self {
         DormMaster {
@@ -62,7 +83,7 @@ impl DormMaster {
                 .iter()
                 .map(|s| DormSlave::new(s.name.clone(), s.capacity.clone()))
                 .collect(),
-            optimizer: Optimizer::with_mode(dorm, SolveMode::Heuristic),
+            policy,
             store,
             compute: None,
             apps: BTreeMap::new(),
@@ -156,59 +177,66 @@ impl DormMaster {
         used.utilization_sum(&cap)
     }
 
-    /// Run the optimizer and enforce the decision (§III-C).
+    /// Snapshot the cluster, ask the policy, enforce the update (§III-C).
+    /// The snapshot/decide/enforce split is what lets the DES and the live
+    /// master share every policy: this method is the live counterpart of
+    /// the simulator's event handler.
     pub fn reallocate(&mut self) -> Result<()> {
         let capacities: Vec<Res> = self.slaves.iter().map(|s| s.capacity().clone()).collect();
 
-        // active = non-terminal apps; deferral order = newest pending first
-        let mut running: Vec<OptApp> = Vec::new();
-        let mut pending: Vec<OptApp> = Vec::new();
+        let mut snapshot: BTreeMap<AppId, SchedApp> = BTreeMap::new();
         for app in self.apps.values() {
             if app.state.is_terminal() {
                 continue;
             }
-            let held = self.containers_of(app.id);
-            let opt = OptApp {
-                id: app.id,
-                demand: app.spec.demand.clone(),
-                weight: app.spec.weight as f64,
-                n_min: app.spec.n_min,
-                n_max: app.spec.n_max,
-                prev: (held > 0).then_some(held),
-                current: self.placement_of(app.id),
-            };
-            if held > 0 {
-                running.push(opt);
-            } else {
-                pending.push(opt);
-            }
+            let placement = self.placement_of(app.id);
+            snapshot.insert(
+                app.id,
+                SchedApp {
+                    id: app.id,
+                    demand: app.spec.demand.clone(),
+                    weight: app.spec.weight as f64,
+                    n_min: app.spec.n_min,
+                    n_max: app.spec.n_max,
+                    containers: placement.values().sum(),
+                    placement,
+                    // ids are assigned in submission order, so they double
+                    // as the FIFO key (the DES uses simulated hours)
+                    submit: app.id.0 as f64,
+                    // static policies run the app at its requested width
+                    baseline_n: app.spec.n_max,
+                    engine: app.spec.executor,
+                },
+            );
         }
 
-        let mut decision: Option<Decision> = None;
-        for admit in (0..=pending.len()).rev() {
-            let mut apps = running.clone();
-            apps.extend(pending[..admit].iter().cloned());
-            if let Some(d) = self.optimizer.allocate(&apps, &capacities) {
-                decision = Some(d);
-                break;
-            }
-        }
-        let Some(decision) = decision else {
+        let update = {
+            let ctx = SchedCtx {
+                now: self.next_id as f64,
+                apps: &snapshot,
+                capacities: &capacities,
+            };
+            self.policy.on_change(&ctx)
+        };
+        let Some(update) = update else {
             log::warn!("no feasible allocation; keeping existing partitions");
             return Ok(());
         };
 
-        self.enforce(decision)
+        self.enforce(update)
     }
 
     /// Fig. 5 steps (3)–(4): destroy/create containers, checkpoint + kill +
     /// resume the adjusted apps, start the newly admitted ones.
-    fn enforce(&mut self, decision: Decision) -> Result<()> {
-        let adjusted: Vec<AppId> = decision.adjusted.clone();
+    fn enforce(&mut self, update: AllocationUpdate) -> Result<()> {
+        let adjusted: Vec<AppId> = update.adjusted.clone();
 
         // (a) checkpoint + kill adjusted apps before touching containers
         for id in &adjusted {
-            let app = self.apps.get_mut(id).expect("adjusted app exists");
+            let Some(app) = self.apps.get_mut(id) else {
+                log::warn!("policy adjusted unknown {id}; ignoring");
+                continue;
+            };
             if let Some(trainer) = &app.trainer {
                 app.state = AppState::Checkpointing;
                 trainer.checkpoint(&self.store).context("checkpoint")?;
@@ -219,13 +247,31 @@ impl DormMaster {
         }
         self.total_adjustments += adjusted.len() as u32;
 
-        // (b) all destroys, then all creates (shrinkers free the space)
-        for (id, sid, count) in &decision.placement.destroy {
-            self.slaves[sid.0].destroy(*id, *count)?;
+        // (b) diff the target assignment against the slaves' books:
+        // all destroys first (shrinkers free the space), then all creates
+        let active: Vec<AppId> = self
+            .apps
+            .iter()
+            .filter(|(_, a)| !a.state.is_terminal())
+            .map(|(id, _)| *id)
+            .collect();
+        let mut creates: Vec<(AppId, BTreeMap<ServerId, u32>)> = Vec::new();
+        for id in &active {
+            let target = update.assignment.get(id).cloned().unwrap_or_default();
+            let current = self.placement_of(*id);
+            if target == current {
+                continue;
+            }
+            for (sid, cnt) in &current {
+                self.slaves[sid.0].destroy(*id, *cnt)?;
+            }
+            creates.push((*id, target));
         }
-        for (id, sid, count) in &decision.placement.create {
+        for (id, target) in &creates {
             let demand = self.apps[id].spec.demand.clone();
-            self.slaves[sid.0].create(*id, &demand, *count)?;
+            for (sid, cnt) in target {
+                self.slaves[sid.0].create(*id, &demand, *cnt)?;
+            }
         }
 
         // (c) resume adjusted + start newly admitted apps
@@ -385,6 +431,47 @@ mod tests {
         let id = m.submit(spec(50.0, 0.0, 8.0, 1, 1, 2)).unwrap();
         assert_eq!(m.app_state(id), Some(AppState::Pending));
         assert_eq!(m.containers_of(id), 0);
+    }
+
+    #[test]
+    fn static_baseline_drives_live_master() {
+        use crate::baselines::StaticPolicy;
+        let cluster = ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+        let mut m = DormMaster::with_policy(
+            &cluster,
+            Box::new(StaticPolicy::new()),
+            store("static"),
+        );
+        // the Swarm baseline gives each app its fixed width and never
+        // resizes — now running against the real control plane
+        let a = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 8)).unwrap();
+        assert_eq!(m.containers_of(a), 8);
+        let b = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 8)).unwrap();
+        assert_eq!(m.containers_of(a), 8, "static never resizes");
+        assert_eq!(m.containers_of(b), 8);
+        assert_eq!(m.total_adjustments, 0);
+        // an app whose full fixed partition does not fit waits pending
+        let c = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 16)).unwrap();
+        assert_eq!(m.app_state(c), Some(AppState::Pending));
+        assert_eq!(m.containers_of(c), 0);
+        // completion frees space; the queued app starts at full width
+        m.complete(a).unwrap();
+        assert_eq!(m.containers_of(c), 16);
+        assert_eq!(m.app_state(c), Some(AppState::Running));
+        assert_eq!(m.total_adjustments, 0, "static adjusted nothing");
+    }
+
+    #[test]
+    fn dorm_master_reuses_engine_cache_on_identical_snapshots() {
+        let mut m = master("cache");
+        let id = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 12)).unwrap();
+        let held = m.containers_of(id);
+        // no state change between explicit re-solves: snapshot identical,
+        // so the engine must answer from its cache and change nothing
+        m.reallocate().unwrap();
+        m.reallocate().unwrap();
+        assert_eq!(m.containers_of(id), held);
+        assert_eq!(m.total_adjustments, 0);
     }
 
     #[test]

@@ -29,7 +29,9 @@ use crate::app::AppId;
 use crate::cluster::{place, Placement, PlacementInput, ServerId};
 use crate::config::DormConfig;
 use crate::resources::Res;
-use crate::solver::heuristic::{heuristic_solve, heuristic_solve_relaxed, CountApp, CountProblem};
+use crate::solver::heuristic::{
+    heuristic_solve, heuristic_solve_from, heuristic_solve_relaxed, CountApp, CountProblem,
+};
 use crate::solver::{milp, MilpOptions, MilpOutcome};
 
 /// One application as the optimizer sees it.
@@ -64,6 +66,12 @@ pub struct SolveStats {
     pub relaxed: bool,
     pub bb_nodes: usize,
     pub solve_micros: u128,
+    /// Decision served from an engine's snapshot cache — no solve ran
+    /// (set by [`crate::sched::AllocationEngine`], never by the optimizer).
+    pub cache_hit: bool,
+    /// A previous solution seeded this solve as a feasible warm-start
+    /// incumbent (extra heuristic anchor + branch-and-bound bound).
+    pub warm_start: bool,
 }
 
 /// The optimizer's output: new counts + concrete placement + the Eq. 1/2/4
@@ -119,9 +127,43 @@ impl Optimizer {
         apps: &[OptApp],
         cap: &Res,
     ) -> Option<(Vec<u32>, SolveStats)> {
+        self.solve_counts_warm(apps, cap, None)
+    }
+
+    /// As [`Optimizer::solve_counts`], additionally seeding the solve with
+    /// `warm` — the counts of a previous solution, per app (apps without an
+    /// entry anchor at `n_min`).  The warm point runs as an extra anchored
+    /// heuristic pipeline and, in exact mode, supplies the branch-and-bound
+    /// incumbent, so it can only improve (or tie) the cold result; with
+    /// `warm = None` this is byte-identical to the cold path.
+    pub fn solve_counts_warm(
+        &self,
+        apps: &[OptApp],
+        cap: &Res,
+        warm: Option<&BTreeMap<AppId, u32>>,
+    ) -> Option<(Vec<u32>, SolveStats)> {
         let t0 = Instant::now();
         let p = self.count_problem(apps, cap);
+        let mut stats = SolveStats::default();
+
         let heur = heuristic_solve(&p);
+        let warm_cand = warm
+            .filter(|w| apps.iter().any(|a| w.contains_key(&a.id)))
+            .and_then(|w| {
+                let seed: Vec<u32> = apps
+                    .iter()
+                    .map(|a| w.get(&a.id).copied().unwrap_or(a.n_min))
+                    .collect();
+                heuristic_solve_from(&p, &seed)
+            });
+        stats.warm_start = warm_cand.is_some();
+        // best feasible incumbent of the cold pipelines and the warm anchor
+        let heur = match (heur, warm_cand) {
+            (Some(a), Some(b)) => {
+                Some(if p.utilization(&a) >= p.utilization(&b) { a } else { b })
+            }
+            (a, b) => a.or(b),
+        };
 
         let use_exact = match self.mode {
             SolveMode::Heuristic => false,
@@ -129,7 +171,6 @@ impl Optimizer {
             SolveMode::Auto => apps.len() <= 16,
         };
 
-        let mut stats = SolveStats::default();
         let counts = if use_exact {
             let milp_prob = build_count_milp(&p);
             let opts = MilpOptions {
@@ -173,12 +214,23 @@ impl Optimizer {
     /// Full allocation: counts + placement.  Reduces counts (adjusted/new
     /// apps first) when the packing round fails on fragmentation.
     pub fn allocate(&self, apps: &[OptApp], capacities: &[Res]) -> Option<Decision> {
+        self.allocate_warm(apps, capacities, None)
+    }
+
+    /// As [`Optimizer::allocate`], seeding the count solve with a previous
+    /// solution's counts (see [`Optimizer::solve_counts_warm`]).
+    pub fn allocate_warm(
+        &self,
+        apps: &[OptApp],
+        capacities: &[Res],
+        warm: Option<&BTreeMap<AppId, u32>>,
+    ) -> Option<Decision> {
         let m = capacities.first().map(|c| c.m()).unwrap_or(0);
         let cap = capacities.iter().fold(Res::zeros(m), |mut acc, c| {
             acc += c;
             acc
         });
-        let (mut counts, stats) = self.solve_counts(apps, &cap)?;
+        let (mut counts, stats) = self.solve_counts_warm(apps, &cap, warm)?;
         let p = self.count_problem(apps, &cap);
 
         for _attempt in 0..256 {
@@ -309,6 +361,37 @@ mod tests {
             "exact {} < heuristic {}",
             p.utilization(&ce),
             p.utilization(&ch)
+        );
+    }
+
+    #[test]
+    fn warm_start_no_worse_than_cold_and_flagged() {
+        // carried apps + one arrival; warm = the previous counts
+        let mut apps: Vec<OptApp> = (0..3)
+            .map(|i| {
+                let mut a = oapp(i, 2.0, 2.0, 1, 12, Some(4));
+                // spread across both servers so the pinned state fits
+                a.current = [(ServerId(i as usize % 2), 4)].into_iter().collect();
+                a
+            })
+            .collect();
+        apps.push(oapp(9, 2.0, 2.0, 1, 12, None));
+        let warm: BTreeMap<AppId, u32> =
+            (0..3).map(|i| (AppId(i), 4u32)).collect();
+        let capacities = caps(2, 16.0, 16.0);
+        let opt = Optimizer::with_mode(
+            DormConfig { theta1: 1.0, theta2: 0.4 },
+            SolveMode::Heuristic,
+        );
+        let cold = opt.allocate(&apps, &capacities).unwrap();
+        let warm_d = opt.allocate_warm(&apps, &capacities, Some(&warm)).unwrap();
+        assert!(warm_d.stats.warm_start, "warm incumbent must be recorded");
+        assert!(!cold.stats.warm_start);
+        assert!(
+            warm_d.utilization >= cold.utilization - 1e-9,
+            "warm {} < cold {}",
+            warm_d.utilization,
+            cold.utilization
         );
     }
 

@@ -1,0 +1,335 @@
+//! The shared allocation engine: Dorm's decision loop, extracted so the
+//! live master and the simulator run byte-identical scheduling code.
+//!
+//! Responsibilities (§III-C Fig. 5 steps (1)–(2), §IV-B):
+//!
+//! 1. split the snapshot into carried (running) and pending apps, order
+//!    pending FIFO by submission;
+//! 2. admit the longest feasible FIFO prefix — on infeasibility the
+//!    *newest* pending app is deferred first and the solve retried
+//!    ("Dorm would keep existing resource allocations until more running
+//!    applications finish");
+//! 3. solve the count-aggregated P2 through [`Optimizer`] and return the
+//!    [`Decision`] (counts + placement + adjusted set).
+//!
+//! Incremental re-solve state, per engine:
+//!
+//! * **snapshot cache** — the paper rebuilds and solves P2 on every event,
+//!   but consecutive events frequently present an identical (apps,
+//!   capacity) snapshot (metric samples, no-op completions of deferred
+//!   apps, replayed events).  The engine keys the last decision by the
+//!   exact bit pattern of its inputs and returns it without solving when
+//!   the key matches ([`SolveStats::cache_hit`]).
+//! * **warm start** — the previous solution's counts are fed to the next
+//!   solve as an incumbent: the heuristic anchors a candidate pipeline on
+//!   them and branch-and-bound starts with their objective as its pruning
+//!   bound ([`SolveStats::warm_start`]), instead of only the per-call
+//!   heuristic incumbent.  `benches/sched_latency.rs` and
+//!   `benches/solver_micro.rs` quantify both paths.
+
+use std::collections::BTreeMap;
+
+use crate::app::AppId;
+use crate::config::DormConfig;
+use crate::optimizer::{Decision, OptApp, Optimizer, SolveMode};
+use crate::resources::Res;
+
+use super::policy::{AllocationUpdate, CmsPolicy, SchedApp, SchedCtx};
+
+/// One application as the engine sees it: the optimizer row plus the FIFO
+/// admission key.
+#[derive(Clone, Debug)]
+pub struct EngineApp {
+    pub opt: OptApp,
+    /// FIFO key; ties broken by [`AppId`] (submission order).
+    pub submit: f64,
+}
+
+impl EngineApp {
+    /// Build the engine row from a policy-level snapshot row.
+    pub fn from_sched(a: &SchedApp) -> EngineApp {
+        EngineApp {
+            opt: OptApp {
+                id: a.id,
+                demand: a.demand.clone(),
+                weight: a.weight,
+                n_min: a.n_min,
+                n_max: a.n_max,
+                prev: (a.containers > 0).then_some(a.containers),
+                current: a.placement.clone(),
+            },
+            submit: a.submit,
+        }
+    }
+}
+
+/// Engine-lifetime telemetry (cache + warm-start effectiveness).
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    /// Decisions served by actually solving.
+    pub solves: u64,
+    /// Decisions served from the snapshot cache without solving.
+    pub cache_hits: u64,
+    /// Solves where the previous solution seeded a feasible incumbent.
+    pub warm_start_hits: u64,
+}
+
+/// Exact-input key for the snapshot cache: every field the solve depends
+/// on, with floats compared by bit pattern (NaN-safe, no tolerance —
+/// a near-identical snapshot must re-solve).
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct SnapshotKey {
+    apps: Vec<AppKey>,
+    caps: Vec<Vec<u64>>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct AppKey {
+    id: u64,
+    demand: Vec<u64>,
+    weight: u64,
+    n_min: u32,
+    n_max: u32,
+    prev: Option<u32>,
+    current: Vec<(usize, u32)>,
+}
+
+fn res_bits(r: &Res) -> Vec<u64> {
+    r.0.iter().map(|v| v.to_bits()).collect()
+}
+
+fn snapshot_key(apps: &[&EngineApp], capacities: &[Res]) -> SnapshotKey {
+    SnapshotKey {
+        apps: apps
+            .iter()
+            .map(|e| AppKey {
+                id: e.opt.id.0,
+                demand: res_bits(&e.opt.demand),
+                weight: e.opt.weight.to_bits(),
+                n_min: e.opt.n_min,
+                n_max: e.opt.n_max,
+                prev: e.opt.prev,
+                current: e.opt.current.iter().map(|(s, &c)| (s.0, c)).collect(),
+            })
+            .collect(),
+        caps: capacities.iter().map(res_bits).collect(),
+    }
+}
+
+struct CacheEntry {
+    key: SnapshotKey,
+    decision: Decision,
+}
+
+/// The shared Dorm decision loop (see module docs).
+pub struct AllocationEngine {
+    optimizer: Optimizer,
+    cache: Option<CacheEntry>,
+    /// Counts of the last enforced decision, per app — the warm-start
+    /// incumbent for the next solve.
+    prev_counts: BTreeMap<AppId, u32>,
+    stats: EngineStats,
+}
+
+impl AllocationEngine {
+    pub fn new(cfg: DormConfig) -> Self {
+        Self::with_mode(cfg, SolveMode::Heuristic)
+    }
+
+    pub fn with_mode(cfg: DormConfig, mode: SolveMode) -> Self {
+        AllocationEngine {
+            optimizer: Optimizer::with_mode(cfg, mode),
+            cache: None,
+            prev_counts: BTreeMap::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &DormConfig {
+        &self.optimizer.cfg
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Drop the cached solution and warm-start state (e.g. after an
+    /// out-of-band capacity change the caller knows invalidates them).
+    pub fn invalidate(&mut self) {
+        self.cache = None;
+        self.prev_counts.clear();
+    }
+
+    /// The shared loop: admission ordering, newest-first deferral, solve.
+    /// `None` = no feasible allocation even with every pending app deferred
+    /// — the backend keeps existing partitions (§IV-B).
+    pub fn decide(&mut self, apps: &[EngineApp], capacities: &[Res]) -> Option<Decision> {
+        // carried apps first (input order), then pending FIFO by submit
+        let running: Vec<&EngineApp> =
+            apps.iter().filter(|e| e.opt.prev.is_some()).collect();
+        let mut pending: Vec<&EngineApp> =
+            apps.iter().filter(|e| e.opt.prev.is_none()).collect();
+        pending.sort_by(|a, b| {
+            a.submit.total_cmp(&b.submit).then(a.opt.id.cmp(&b.opt.id))
+        });
+
+        let ordered: Vec<&EngineApp> =
+            running.iter().chain(pending.iter()).copied().collect();
+        let key = snapshot_key(&ordered, capacities);
+        if let Some(entry) = &self.cache {
+            if entry.key == key {
+                self.stats.cache_hits += 1;
+                let mut d = entry.decision.clone();
+                d.stats.cache_hit = true;
+                return Some(d);
+            }
+        }
+
+        self.stats.solves += 1;
+        let running_opts: Vec<OptApp> =
+            running.iter().map(|e| e.opt.clone()).collect();
+        let pending_opts: Vec<OptApp> =
+            pending.iter().map(|e| e.opt.clone()).collect();
+        // snapshot the incumbent (cheap: one count per app) so the borrow
+        // doesn't conflict with updating it on success
+        let warm_counts = self.prev_counts.clone();
+        let warm = (!warm_counts.is_empty()).then_some(&warm_counts);
+
+        // admit as many pending apps (FIFO) as stay feasible
+        for admit in (0..=pending_opts.len()).rev() {
+            let mut try_apps = running_opts.clone();
+            try_apps.extend(pending_opts[..admit].iter().cloned());
+            if let Some(d) = self.optimizer.allocate_warm(&try_apps, capacities, warm) {
+                if d.stats.warm_start {
+                    self.stats.warm_start_hits += 1;
+                }
+                self.prev_counts = d.counts.clone();
+                self.cache = Some(CacheEntry { key, decision: d.clone() });
+                return Some(d);
+            }
+        }
+        None
+    }
+}
+
+/// Dorm as a [`CmsPolicy`]: a thin adapter over [`AllocationEngine`] —
+/// usable unchanged by the live [`crate::master::DormMaster`] and the DES
+/// ([`crate::sim::run_sim`]).
+pub struct DormPolicy {
+    pub engine: AllocationEngine,
+    label: String,
+}
+
+impl DormPolicy {
+    pub fn new(cfg: DormConfig) -> Self {
+        Self::with_mode(cfg, SolveMode::Heuristic)
+    }
+
+    pub fn with_mode(cfg: DormConfig, mode: SolveMode) -> Self {
+        DormPolicy {
+            label: format!("dorm(t1={},t2={})", cfg.theta1, cfg.theta2),
+            engine: AllocationEngine::with_mode(cfg, mode),
+        }
+    }
+}
+
+impl CmsPolicy for DormPolicy {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn on_change(&mut self, ctx: &SchedCtx) -> Option<AllocationUpdate> {
+        let apps: Vec<EngineApp> = ctx.apps.values().map(EngineApp::from_sched).collect();
+        let d = self.engine.decide(&apps, ctx.capacities)?;
+        Some(AllocationUpdate {
+            assignment: d.placement.assignment,
+            adjusted: d.adjusted,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerId;
+
+    fn eapp(id: u64, cpu: f64, ram: f64, lo: u32, hi: u32, held: u32, submit: f64) -> EngineApp {
+        let current: BTreeMap<ServerId, u32> = if held > 0 {
+            [(ServerId(0), held)].into_iter().collect()
+        } else {
+            BTreeMap::new()
+        };
+        EngineApp {
+            opt: OptApp {
+                id: AppId(id),
+                demand: Res(vec![cpu, ram]),
+                weight: 1.0,
+                n_min: lo,
+                n_max: hi,
+                prev: (held > 0).then_some(held),
+                current,
+            },
+            submit,
+        }
+    }
+
+    fn caps(n: usize, cpu: f64, ram: f64) -> Vec<Res> {
+        (0..n).map(|_| Res(vec![cpu, ram])).collect()
+    }
+
+    #[test]
+    fn identical_snapshot_is_served_from_cache() {
+        let mut eng = AllocationEngine::new(DormConfig::DORM3);
+        let apps = vec![eapp(1, 2.0, 8.0, 1, 10, 0, 0.0)];
+        let capacities = caps(4, 12.0, 64.0);
+        let d1 = eng.decide(&apps, &capacities).unwrap();
+        assert!(!d1.stats.cache_hit);
+        let d2 = eng.decide(&apps, &capacities).unwrap();
+        assert!(d2.stats.cache_hit);
+        assert_eq!(d1.counts, d2.counts);
+        assert_eq!(eng.stats().solves, 1);
+        assert_eq!(eng.stats().cache_hits, 1);
+    }
+
+    #[test]
+    fn changed_snapshot_resolves_with_warm_start() {
+        let mut eng = AllocationEngine::new(DormConfig { theta1: 1.0, theta2: 1.0 });
+        let capacities = caps(2, 20.0, 20.0);
+        let a = eapp(1, 1.0, 1.0, 1, 40, 0, 0.0);
+        let d1 = eng.decide(&[a.clone()], &capacities).unwrap();
+        let held = d1.counts[&AppId(1)];
+        assert!(held > 0);
+        // second event: app 1 carried at its decided width, app 2 arrives
+        let carried = eapp(1, 1.0, 1.0, 1, 40, held, 0.0);
+        let arriving = eapp(2, 1.0, 1.0, 1, 40, 0, 1.0);
+        let d2 = eng.decide(&[carried, arriving], &capacities).unwrap();
+        assert!(!d2.stats.cache_hit);
+        assert!(d2.stats.warm_start, "previous counts must seed the solve");
+        assert_eq!(eng.stats().solves, 2);
+        assert!(eng.stats().warm_start_hits >= 1);
+        assert!(d2.counts[&AppId(2)] >= 1);
+    }
+
+    #[test]
+    fn newest_pending_deferred_first() {
+        let mut eng = AllocationEngine::new(DormConfig { theta1: 1.0, theta2: 1.0 });
+        let capacities = caps(1, 10.0, 10.0);
+        // each app floors at 3 containers of 2 CPUs: only one fits
+        let old = eapp(1, 2.0, 1.0, 3, 5, 0, 0.0);
+        let newer = eapp(2, 2.0, 1.0, 3, 5, 0, 1.0);
+        let d = eng.decide(&[newer.clone(), old.clone()], &capacities).unwrap();
+        assert!(d.counts.contains_key(&AppId(1)), "older app admitted");
+        assert!(!d.counts.contains_key(&AppId(2)), "newest deferred first");
+    }
+
+    #[test]
+    fn cache_invalidated_by_capacity_change() {
+        let mut eng = AllocationEngine::new(DormConfig::DORM3);
+        let apps = vec![eapp(1, 2.0, 8.0, 1, 10, 0, 0.0)];
+        let d1 = eng.decide(&apps, &caps(4, 12.0, 64.0)).unwrap();
+        let d2 = eng.decide(&apps, &caps(2, 12.0, 64.0)).unwrap();
+        assert!(!d2.stats.cache_hit, "smaller cluster must re-solve");
+        assert!(d2.counts[&AppId(1)] <= d1.counts[&AppId(1)]);
+        assert_eq!(eng.stats().solves, 2);
+    }
+}

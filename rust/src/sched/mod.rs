@@ -1,0 +1,30 @@
+//! Backend-agnostic scheduling core shared by the live control plane and
+//! the discrete-event simulator.
+//!
+//! Dorm's central mechanism (§III–§IV) is one loop — on every arrival or
+//! completion, snapshot cluster/application state, rebuild the
+//! utilization–fairness problem, solve it, and enforce the delta.  This
+//! module owns that loop once so both backends run the *same* code:
+//!
+//! * [`CmsPolicy`] — the cluster-management policy interface.  A policy
+//!   sees a neutral [`SchedCtx`] snapshot ([`SchedApp`] rows + server
+//!   capacities) and returns an [`AllocationUpdate`]; it cannot tell
+//!   whether a real master ([`crate::master::DormMaster`]) or the DES
+//!   ([`crate::sim::run_sim`]) is driving it, so every policy — Dorm and
+//!   all the baselines in [`crate::baselines`] — runs against either.
+//! * [`AllocationEngine`] — Dorm's shared decision loop: FIFO admission
+//!   with newest-first deferral on infeasibility (§IV-B), solve via
+//!   [`crate::optimizer::Optimizer`], emit the delta.  It also owns the
+//!   incremental re-solve state: an (apps, capacity) snapshot cache that
+//!   skips the solve entirely when nothing changed since the last event,
+//!   and the previous solution counts fed to the solvers as a warm-start
+//!   incumbent (cache hits / incumbent reuse are reported through
+//!   [`crate::optimizer::SolveStats`] and [`EngineStats`]).
+//! * [`DormPolicy`] — the paper's system as a [`CmsPolicy`]: a thin
+//!   adapter over [`AllocationEngine`].
+
+mod engine;
+mod policy;
+
+pub use engine::{AllocationEngine, DormPolicy, EngineApp, EngineStats};
+pub use policy::{AllocationUpdate, CmsPolicy, SchedApp, SchedCtx};

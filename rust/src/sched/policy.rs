@@ -1,0 +1,78 @@
+//! The policy interface: what any cluster-management strategy sees
+//! (a backend-neutral snapshot) and what it returns (a full assignment).
+
+use std::collections::BTreeMap;
+
+use crate::app::{AppId, Engine};
+use crate::cluster::ServerId;
+use crate::resources::Res;
+
+/// One application as a policy sees it — the fields every backend (live
+/// master, DES) can provide, and everything any policy needs.
+#[derive(Clone, Debug)]
+pub struct SchedApp {
+    pub id: AppId,
+    /// Per-container demand `d` (uniform containers, §III-A-4).
+    pub demand: Res,
+    /// Weight `w` as a float (the optimizer's wᵢ).
+    pub weight: f64,
+    pub n_min: u32,
+    pub n_max: u32,
+    /// Containers currently held (0 = pending / deferred).
+    pub containers: u32,
+    /// Current xᵢⱼ row (empty when `containers == 0`).
+    pub placement: BTreeMap<ServerId, u32>,
+    /// FIFO admission key: earlier submissions admitted first, the newest
+    /// pending app deferred first on infeasibility (§IV-B).  The DES uses
+    /// simulated hours; the live master uses submission order.
+    pub submit: f64,
+    /// Fixed partition size a static (Swarm/Mesos app-level) policy gives
+    /// this app; ignored by Dorm.  Backend caveat: the DES fills this from
+    /// the workload's per-type baseline width (§V-A-4), while the live
+    /// master — whose submission 6-tuple carries no baseline column — uses
+    /// `n_max` (the requested width).  Dorm decisions are identical across
+    /// backends (`tests/parity.rs`); static-policy widths are only
+    /// comparable across backends when the submission's `n_max` equals the
+    /// workload baseline.
+    pub baseline_n: u32,
+    /// Requested DCS engine — the IaaS baseline partitions servers by it.
+    pub engine: Engine,
+}
+
+/// Read-only snapshot handed to policies on every arrival/completion.
+pub struct SchedCtx<'a> {
+    /// Event time (simulated hours in the DES, event counter on the live
+    /// master); only used for ordering/latency bookkeeping, never solved on.
+    pub now: f64,
+    /// Active (admitted-or-pending, non-terminal) applications.
+    pub apps: &'a BTreeMap<AppId, SchedApp>,
+    /// Per-server capacities, indexed by [`ServerId`].
+    pub capacities: &'a [Res],
+}
+
+/// A policy's decision: the complete next assignment for every active app
+/// (apps omitted keep zero containers), plus which carried-over apps were
+/// adjusted (checkpointed + killed + resumed at the new scale).
+#[derive(Clone, Debug, Default)]
+pub struct AllocationUpdate {
+    pub assignment: BTreeMap<AppId, BTreeMap<ServerId, u32>>,
+    pub adjusted: Vec<AppId>,
+}
+
+/// A cluster-management policy.  Implementations decide assignments only;
+/// enforcement (container create/destroy, checkpoint/kill/resume) belongs
+/// to the backend driving the policy.
+pub trait CmsPolicy {
+    fn name(&self) -> String;
+
+    /// Called after every arrival and completion. `None` = keep current
+    /// allocations (e.g. no feasible solution, paper §IV-B).
+    fn on_change(&mut self, ctx: &SchedCtx) -> Option<AllocationUpdate>;
+
+    /// Admission/scheduling latency charged to newly started apps (used by
+    /// the Mesos-like baseline; Dorm's is ~solver time, effectively 0 at
+    /// hour scale).
+    fn admission_latency_hours(&self) -> f64 {
+        0.0
+    }
+}

@@ -1,98 +1,18 @@
-//! Dorm as a simulation policy: the utilization–fairness optimizer driving
-//! the dynamically-partitioned mechanism (§III + §IV) inside the DES.
+//! Dorm under simulation — a re-export of the shared policy.
 //!
-//! On every arrival/completion the policy rebuilds the optimizer input from
-//! the live cluster state and asks for a new allocation.  If P2 is
-//! infeasible with every pending app admitted (the Σ n_min floors can
-//! exceed capacity), pending apps are deferred newest-first and the solve
-//! retried — "Dorm would keep existing resource allocations until more
-//! running applications finish" (§IV-B).
+//! The admission/deferral/solve loop that used to live here moved to
+//! [`crate::sched::AllocationEngine`] so the DES and the live
+//! [`crate::master::DormMaster`] run byte-identical scheduling code (the
+//! `tests/parity.rs` golden test pins that invariant).  [`DormPolicy`] is
+//! the thin [`crate::sched::CmsPolicy`] adapter over that engine; this
+//! module keeps the simulation-level behaviour tests.
 
-use crate::config::DormConfig;
-use crate::optimizer::{OptApp, Optimizer, SolveMode};
-
-use super::runner::{AllocationUpdate, CmsPolicy, SimCtx};
-
-/// Dorm under simulation.
-#[derive(Debug)]
-pub struct DormPolicy {
-    pub optimizer: Optimizer,
-    label: String,
-}
-
-impl DormPolicy {
-    pub fn new(cfg: DormConfig) -> Self {
-        Self::with_mode(cfg, SolveMode::Heuristic)
-    }
-
-    pub fn with_mode(cfg: DormConfig, mode: SolveMode) -> Self {
-        DormPolicy {
-            label: format!("dorm(t1={},t2={})", cfg.theta1, cfg.theta2),
-            optimizer: Optimizer::with_mode(cfg, mode),
-        }
-    }
-}
-
-impl CmsPolicy for DormPolicy {
-    fn name(&self) -> String {
-        self.label.clone()
-    }
-
-    fn on_change(&mut self, ctx: &SimCtx) -> Option<AllocationUpdate> {
-        let capacities: Vec<_> = ctx
-            .cluster
-            .servers
-            .iter()
-            .map(|s| s.capacity.clone())
-            .collect();
-
-        // running first, then pending in submission order — the deferral
-        // order drops the *newest* pending app first
-        let mut running: Vec<OptApp> = Vec::new();
-        let mut pending: Vec<OptApp> = Vec::new();
-        let mut pending_order: Vec<(f64, usize)> = Vec::new();
-        for app in ctx.apps.values() {
-            let opt = OptApp {
-                id: app.id,
-                demand: app.demand.clone(),
-                weight: app.weight,
-                n_min: app.n_min,
-                n_max: app.n_max,
-                prev: (app.containers > 0).then_some(app.containers),
-                current: ctx.cluster.placement_of(app.id),
-            };
-            if app.containers > 0 {
-                running.push(opt);
-            } else {
-                pending_order.push((app.submit, pending.len()));
-                pending.push(opt);
-            }
-        }
-        pending_order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let ordered_pending: Vec<OptApp> = pending_order
-            .iter()
-            .map(|&(_, i)| pending[i].clone())
-            .collect();
-
-        // admit as many pending apps (FIFO) as stay feasible
-        for admit in (0..=ordered_pending.len()).rev() {
-            let mut apps = running.clone();
-            apps.extend(ordered_pending[..admit].iter().cloned());
-            if let Some(decision) = self.optimizer.allocate(&apps, &capacities) {
-                return Some(AllocationUpdate {
-                    assignment: decision.placement.assignment,
-                    adjusted: decision.adjusted,
-                });
-            }
-        }
-        None // keep existing allocations
-    }
-}
+pub use crate::sched::DormPolicy;
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ClusterConfig, SimConfig};
+    use crate::config::{ClusterConfig, DormConfig, SimConfig};
     use crate::sim::{run_sim, PerfModel};
     use crate::workload::{table2_rows, WorkloadApp};
 
@@ -161,5 +81,22 @@ mod tests {
             .count();
         let frac = viol as f64 / out.metrics.fairness_loss.points.len() as f64;
         assert!(frac < 0.35, "fairness bound violated in {frac} of samples");
+    }
+
+    #[test]
+    fn engine_cache_and_warm_start_are_exercised_by_a_run() {
+        let rows = table2_rows();
+        let wl: Vec<WorkloadApp> = (0..4).map(|i| lr(i as f64 * 0.5, 3.0)).collect();
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 12.0, ..Default::default() };
+        let mut pol = DormPolicy::new(DormConfig::DORM1);
+        let out = run_sim(&mut pol, &rows, &wl, &cfg, &sim, &PerfModel::default());
+        assert_eq!(out.completed, 4);
+        let stats = pol.engine.stats().clone();
+        // every arrival/completion event asked the engine ...
+        assert!(stats.solves + stats.cache_hits >= 8);
+        // ... and once carried state exists the previous solution seeds
+        // each re-solve
+        assert!(stats.warm_start_hits >= 1, "{stats:?}");
     }
 }

@@ -28,7 +28,13 @@ impl<E: PartialEq> PartialOrd for Scheduled<E> {
 
 impl<E: PartialEq> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest first
+        // reversed: BinaryHeap is a max-heap, we want earliest first.
+        // Deliberately `partial_cmp().expect(..)` rather than `total_cmp`:
+        // a NaN event time is a scheduling bug (durations or pauses went
+        // NaN upstream) and must abort the run loudly — total ordering
+        // would silently sink NaNs to one end of the heap and the sim
+        // would produce garbage metrics instead of a stack trace.
+        // `schedule()` also debug_asserts `t.is_finite()`.
         other
             .time
             .partial_cmp(&self.time)

@@ -10,9 +10,11 @@ use crate::util::stats;
 use crate::util::Rng;
 use crate::workload::{table2_rows, WorkloadApp, WorkloadGen};
 
+use crate::sched::CmsPolicy;
+
 use super::dorm_policy::DormPolicy;
 use super::perf_model::PerfModel;
-use super::runner::{run_sim, CmsPolicy, SimOutcome};
+use super::runner::{run_sim, SimOutcome};
 
 /// One system's results over the experiment.
 pub struct SystemRun {

@@ -2,9 +2,10 @@
 //!
 //! The 24-hour evaluations (Figs 6–9) are functions of the allocator and
 //! the workload, not of the hardware (DESIGN.md §1), so they run here in
-//! simulated time: the same [`crate::optimizer`] the live master uses makes
-//! every decision, the same [`crate::cluster::ClusterState`] bookkeeping
-//! tracks placements, and the same [`crate::metrics`] series are sampled.
+//! simulated time: the same [`crate::sched::AllocationEngine`] the live
+//! master uses makes every decision (pinned by `tests/parity.rs`), the
+//! same [`crate::cluster::ClusterState`] bookkeeping tracks placements,
+//! and the same [`crate::metrics`] series are sampled.
 //!
 //! * [`engine`] — the event queue (time-ordered heap with cancellation).
 //! * [`perf_model`] — iterative-training progress: speedup vs container
@@ -20,7 +21,14 @@ pub mod perf_model;
 pub mod runner;
 
 pub use dorm_policy::DormPolicy;
-pub use experiment::{fairness_reduction, headline_over_seeds, matched_speedups, mean_speedup, speedup_by_tag, utilization_ratio, Experiment, SystemRun};
 pub use engine::{EventQueue, SimTime};
+pub use experiment::{fairness_reduction, headline_over_seeds, matched_speedups, mean_speedup, speedup_by_tag, utilization_ratio, Experiment, SystemRun};
 pub use perf_model::PerfModel;
-pub use runner::{run_sim, AllocationUpdate, CmsPolicy, SimApp, SimCtx, SimOutcome};
+pub use runner::{run_sim, SimApp, SimOutcome};
+// The policy interface moved to the shared scheduling core; re-exported
+// here so simulation-facing callers keep one import path.
+pub use crate::sched::{AllocationUpdate, CmsPolicy, SchedApp, SchedCtx};
+
+/// Former name of the policy snapshot, kept for downstream code: the sim
+/// and the live master now hand policies the same [`SchedCtx`].
+pub type SimCtx<'a> = SchedCtx<'a>;

@@ -2,18 +2,23 @@
 //! tracking progress, adjustments and the §IV-A metrics.
 //!
 //! The runner owns the ground truth ([`crate::cluster::ClusterState`] +
-//! per-app progress); policies only *decide* assignments.  Every decision
-//! is applied through create/destroy diffs so the capacity invariants are
-//! checked on every event (`debug_assert` + explicit check in tests).
+//! per-app progress); policies only *decide* assignments, through the same
+//! backend-neutral [`CmsPolicy`]/[`crate::sched::SchedCtx`] interface the
+//! live master drives (`crate::sched`) — on every arrival/completion the
+//! runner snapshots its state into [`crate::sched::SchedApp`] rows and
+//! applies the returned update through create/destroy diffs so the
+//! capacity invariants are checked on every event (`debug_assert` +
+//! explicit check in tests).
 
 use std::collections::BTreeMap;
 
 use crate::app::AppId;
-use crate::cluster::{ClusterState, ServerId};
+use crate::cluster::ClusterState;
 use crate::config::{ClusterConfig, SimConfig};
 use crate::drf::{drf_allocate, fairness_loss, DrfApp};
 use crate::metrics::RunMetrics;
 use crate::resources::Res;
+use crate::sched::{CmsPolicy, SchedApp, SchedCtx};
 use crate::workload::{Table2Row, WorkloadApp};
 
 use super::engine::EventQueue;
@@ -68,37 +73,6 @@ impl SimApp {
         }
         let start = now.max(self.paused_until);
         Some(start + self.work_remaining / pm.speed(self.containers))
-    }
-}
-
-/// Read-only view handed to policies.
-pub struct SimCtx<'a> {
-    pub now: f64,
-    /// Active (submitted, incomplete) apps, submission-ordered ids.
-    pub apps: &'a BTreeMap<AppId, SimApp>,
-    pub cluster: &'a ClusterState,
-}
-
-/// A policy's decision: the complete next assignment for every active app
-/// (apps omitted keep zero containers), plus which carried-over apps were
-/// adjusted (killed + resumed).
-#[derive(Clone, Debug, Default)]
-pub struct AllocationUpdate {
-    pub assignment: BTreeMap<AppId, BTreeMap<ServerId, u32>>,
-    pub adjusted: Vec<AppId>,
-}
-
-/// A cluster-management policy under simulation.
-pub trait CmsPolicy {
-    fn name(&self) -> String;
-    /// Called after every arrival and completion. `None` = keep current
-    /// allocations (e.g. no feasible solution, paper §IV-B).
-    fn on_change(&mut self, ctx: &SimCtx) -> Option<AllocationUpdate>;
-    /// Admission/scheduling latency charged to newly started apps (used by
-    /// the Mesos-like baseline; Dorm's is ~solver time, effectively 0 at
-    /// hour scale).
-    fn admission_latency_hours(&self) -> f64 {
-        0.0
     }
 }
 
@@ -172,7 +146,7 @@ pub fn run_sim(
                 };
                 cluster.register_app(id, app.demand.clone());
                 apps.insert(id, app);
-                reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm,
+                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm,
                            &mut metrics, &mut total_adjusted);
                 sample(&mut metrics, now, &apps, &cluster, total_adjusted);
             }
@@ -193,7 +167,7 @@ pub fn run_sim(
                 let finished = apps.remove(&id).unwrap();
                 cluster.remove_app(id);
                 done.insert(id, finished);
-                reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm,
+                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm,
                            &mut metrics, &mut total_adjusted);
                 sample(&mut metrics, now, &apps, &cluster, total_adjusted);
             }
@@ -219,6 +193,7 @@ pub fn run_sim(
 #[allow(clippy::too_many_arguments)]
 fn reallocate(
     policy: &mut dyn CmsPolicy,
+    rows: &[Table2Row],
     apps: &mut BTreeMap<AppId, SimApp>,
     cluster: &mut ClusterState,
     q: &mut EventQueue<Event>,
@@ -231,8 +206,34 @@ fn reallocate(
     for app in apps.values_mut() {
         app.settle(now, pm);
     }
+    // snapshot into the backend-neutral view the live master also produces
+    let snapshot: BTreeMap<AppId, SchedApp> = apps
+        .iter()
+        .map(|(id, a)| {
+            (
+                *id,
+                SchedApp {
+                    id: *id,
+                    demand: a.demand.clone(),
+                    weight: a.weight,
+                    n_min: a.n_min,
+                    n_max: a.n_max,
+                    containers: a.containers,
+                    placement: cluster.placement_of(*id),
+                    submit: a.submit,
+                    baseline_n: a.baseline_n,
+                    engine: rows[a.row].engine,
+                },
+            )
+        })
+        .collect();
+    let capacities: Vec<Res> = cluster
+        .servers
+        .iter()
+        .map(|s| s.capacity.clone())
+        .collect();
     let update = {
-        let ctx = SimCtx { now, apps, cluster };
+        let ctx = SchedCtx { now, apps: &snapshot, capacities: &capacities };
         policy.on_change(&ctx)
     };
     let Some(update) = update else { return };

@@ -166,26 +166,7 @@ pub fn heuristic_solve_relaxed(p: &CountProblem) -> Option<Vec<u32>> {
         .iter()
         .map(|a| a.prev.map(|v| v.clamp(a.n_min, a.n_max)).unwrap_or(a.n_min))
         .collect();
-    let mut guard = 0;
-    while !p.used_of(&counts).fits_in(&p.cap) {
-        guard += 1;
-        if guard > 100_000 {
-            return None;
-        }
-        let mut cand: Option<(usize, (u8, f64))> = None;
-        for i in 0..n {
-            if counts[i] > p.apps[i].n_min {
-                let pristine = p.apps[i].prev.map_or(false, |prev| prev == counts[i]);
-                let key = (u8::from(pristine), p.apps[i].demand.utilization_sum(&p.cap));
-                match &cand {
-                    Some((_, bk)) if *bk <= key => {}
-                    _ => cand = Some((i, key)),
-                }
-            }
-        }
-        let (i, _) = cand?;
-        counts[i] -= 1;
-    }
+    shrink_to_fit(p, &mut counts)?;
     if p.adjustments(&counts) > p.adjust_bound() {
         return None;
     }
@@ -273,9 +254,8 @@ fn drf_pipeline(p: &CountProblem) -> Option<Vec<u32>> {
 /// Pipeline 2: anchor on the incumbent allocation and spend the θ₂ budget
 /// deliberately.
 fn prev_anchored_pipeline(p: &CountProblem) -> Option<Vec<u32>> {
-    let n = p.apps.len();
     // base: carried apps keep prev (clamped), new apps start at n_min
-    let mut counts: Vec<u32> = p
+    let counts: Vec<u32> = p
         .apps
         .iter()
         .map(|a| {
@@ -284,22 +264,51 @@ fn prev_anchored_pipeline(p: &CountProblem) -> Option<Vec<u32>> {
                 .unwrap_or(a.n_min)
         })
         .collect();
+    anchored_solve(p, counts)
+}
 
-    // capacity repair: shrink one container at a time, preferring apps
-    // that are already adjusted (clamping counts as a change) or new, then
-    // the lowest-density carried app — each first shrink of a pristine
-    // carried app spends one unit of θ₂ budget.
-    let mut guard = 0;
-    while !p
+/// Warm-started solve: anchor on an arbitrary `warm` counts vector (the
+/// previous solution an [`crate::sched::AllocationEngine`] cached) instead
+/// of the per-app `prev` fields.  The optimizer runs this as an extra
+/// candidate pipeline and keeps the best feasible result, so a warm start
+/// can only improve (or tie) the cold heuristic.
+pub fn heuristic_solve_from(p: &CountProblem, warm: &[u32]) -> Option<Vec<u32>> {
+    if warm.len() != p.apps.len() {
+        return None;
+    }
+    if p.apps.is_empty() {
+        return Some(vec![]);
+    }
+    let counts: Vec<u32> = p
         .apps
         .iter()
-        .zip(&counts)
-        .fold(Res::zeros(p.cap.m()), |mut acc, (a, &c)| {
-            acc += &a.demand.times(c);
-            acc
-        })
-        .fits_in(&p.cap)
-    {
+        .zip(warm)
+        .map(|(a, &w)| w.clamp(a.n_min, a.n_max))
+        .collect();
+    anchored_solve(p, counts)
+}
+
+/// Shared tail of the anchored pipelines: capacity repair, θ₂ check,
+/// budget-aware growth, local search, feasibility gate.
+fn anchored_solve(p: &CountProblem, mut counts: Vec<u32>) -> Option<Vec<u32>> {
+    shrink_to_fit(p, &mut counts)?;
+    if p.adjustments(&counts) > p.adjust_bound() {
+        return None; // the anchor's floors alone blew the budget
+    }
+    grow_within_budget(p, &mut counts);
+    local_search(p, &mut counts);
+    p.is_feasible(&counts).then_some(counts)
+}
+
+/// Capacity repair: shrink one container at a time until the aggregate
+/// usage fits, preferring apps that are already adjusted (or new), then
+/// the lowest-density carried app — each first shrink of a pristine
+/// carried app spends one unit of θ₂ budget.  `None` when nothing can
+/// shrink (all apps at their floors).
+fn shrink_to_fit(p: &CountProblem, counts: &mut [u32]) -> Option<()> {
+    let n = p.apps.len();
+    let mut guard = 0;
+    while !p.used_of(counts).fits_in(&p.cap) {
         guard += 1;
         if guard > 100_000 {
             return None;
@@ -321,12 +330,14 @@ fn prev_anchored_pipeline(p: &CountProblem) -> Option<Vec<u32>> {
         let (i, _) = cand?;
         counts[i] -= 1;
     }
-    if p.adjustments(&counts) > p.adjust_bound() {
-        return None; // n_min floors alone blew the budget
-    }
+    Some(())
+}
 
-    // growth: spend spare capacity on free apps first (new or already
-    // adjusted), then on pristine carried apps while θ₂ budget remains.
+/// Growth: spend spare capacity on free apps first (new or already
+/// adjusted), then on pristine carried apps while θ₂ budget remains,
+/// never crossing the fairness bound.
+fn grow_within_budget(p: &CountProblem, counts: &mut [u32]) {
+    let n = p.apps.len();
     let fb = p.fairness_bound();
     let mut guard = 0;
     loop {
@@ -334,15 +345,8 @@ fn prev_anchored_pipeline(p: &CountProblem) -> Option<Vec<u32>> {
         if guard > 100_000 {
             break;
         }
-        let used = p
-            .apps
-            .iter()
-            .zip(&counts)
-            .fold(Res::zeros(p.cap.m()), |mut acc, (a, &c)| {
-                acc += &a.demand.times(c);
-                acc
-            });
-        let budget_left = p.adjust_bound().saturating_sub(p.adjustments(&counts));
+        let used = p.used_of(counts);
+        let budget_left = p.adjust_bound().saturating_sub(p.adjustments(counts));
         let mut best: Option<(usize, (u8, f64))> = None;
         for i in 0..n {
             let a = &p.apps[i];
@@ -357,7 +361,7 @@ fn prev_anchored_pipeline(p: &CountProblem) -> Option<Vec<u32>> {
                 continue;
             }
             counts[i] += 1;
-            let fair_ok = p.fairness_loss_of(&counts) <= fb + 1e-9;
+            let fair_ok = p.fairness_loss_of(counts) <= fb + 1e-9;
             counts[i] -= 1;
             if !fair_ok {
                 continue;
@@ -375,9 +379,6 @@ fn prev_anchored_pipeline(p: &CountProblem) -> Option<Vec<u32>> {
             None => break,
         }
     }
-
-    local_search(p, &mut counts);
-    p.is_feasible(&counts).then_some(counts)
 }
 
 /// Repeatedly add the container with the best marginal utilization gain
@@ -437,7 +438,7 @@ fn repair_adjustments(p: &CountProblem, counts: &mut Vec<u32>) {
             Some((i, cost))
         })
         .collect();
-    cands.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    cands.sort_by(|a, b| a.1.total_cmp(&b.1));
 
     for (i, _) in cands {
         if p.adjustments(counts) <= bound {
@@ -592,6 +593,40 @@ mod tests {
         // carried = 2: ⌈0.6·2⌉ = 2
         assert!((p.fairness_bound() - 0.8).abs() < 1e-12);
         assert_eq!(p.adjust_bound(), 2);
+    }
+
+    #[test]
+    fn warm_anchor_preserves_previous_solution_shape() {
+        // carried app at 5, newcomer: warm-starting from the previous
+        // solution must produce a feasible point that keeps the carried
+        // app's count when the budget forbids changing it.
+        let apps = vec![
+            capp(1.0, 1.0, 1.0, 1, 100, Some(5)),
+            capp(1.0, 1.0, 1.0, 1, 100, None),
+        ];
+        let p = CountProblem::new(apps, Res(vec![50.0, 50.0]), 1.0, 0.0);
+        let counts = heuristic_solve_from(&p, &[5, 1]).unwrap();
+        assert!(p.is_feasible(&counts), "{counts:?}");
+        assert_eq!(counts[0], 5, "θ₂ = 0 freezes the carried app");
+        assert!(counts[1] >= 1);
+    }
+
+    #[test]
+    fn prop_warm_anchor_always_feasible() {
+        prop::check(120, |rng: &mut Rng| {
+            let p = random_problem(rng);
+            let warm: Vec<u32> = p
+                .apps
+                .iter()
+                .map(|_| rng.range_u64(0, 10) as u32)
+                .collect();
+            if let Some(counts) = heuristic_solve_from(&p, &warm) {
+                if !p.is_feasible(&counts) {
+                    return Err(format!("infeasible warm output {counts:?} for {p:?}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

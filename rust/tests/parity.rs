@@ -1,0 +1,231 @@
+//! Golden master/sim parity: the refactor's key invariant.
+//!
+//! The live `DormMaster` (no compute service attached) and the DES
+//! `DormPolicy` now delegate to the same `sched::AllocationEngine`.  This
+//! test replays one submission/completion trace through both backends and
+//! asserts the *allocation sequences are identical event by event* — if
+//! either side grows private admission/deferral/solve logic again, this
+//! breaks.
+//!
+//! Protocol: run the DES first and record (a) each event's post-decision
+//! container counts and (b) the event trace itself (arrival/completion
+//! order, from submission times and simulated completion times).  Then
+//! replay that exact trace into a live master and compare counts after
+//! every event.
+
+use std::collections::BTreeMap;
+
+use dorm::app::{AppId, AppSpec, CheckpointStore, Engine};
+use dorm::config::{ClusterConfig, DormConfig, SimConfig};
+use dorm::master::DormMaster;
+use dorm::resources::Res;
+use dorm::sched::{AllocationUpdate, CmsPolicy, DormPolicy, SchedCtx};
+use dorm::sim::{run_sim, PerfModel};
+use dorm::workload::{Table2Row, WorkloadApp};
+
+/// One synthetic application type, shared by both backends.
+struct Spec {
+    demand: Res,
+    weight: u32,
+    n_min: u32,
+    n_max: u32,
+    submit_hours: f64,
+    duration_at_baseline_hours: f64,
+}
+
+fn trace() -> Vec<Spec> {
+    vec![
+        // grabs the whole cluster, then shrinks as others arrive
+        Spec {
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+            weight: 1,
+            n_min: 1,
+            n_max: 24,
+            submit_hours: 0.0,
+            duration_at_baseline_hours: 1.0,
+        },
+        Spec {
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 6.0),
+            weight: 2,
+            n_min: 1,
+            n_max: 24,
+            submit_hours: 0.3,
+            duration_at_baseline_hours: 2.0,
+        },
+        Spec {
+            demand: Res::cpu_gpu_ram(4.0, 0.0, 6.0),
+            weight: 1,
+            n_min: 1,
+            n_max: 8,
+            submit_hours: 0.7,
+            duration_at_baseline_hours: 1.5,
+        },
+        // arrives after the backlog drains: regrow + fresh admission
+        Spec {
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+            weight: 1,
+            n_min: 1,
+            n_max: 24,
+            submit_hours: 4.0,
+            duration_at_baseline_hours: 1.0,
+        },
+    ]
+}
+
+fn cluster() -> ClusterConfig {
+    ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0))
+}
+
+const CFG: DormConfig = DormConfig { theta1: 0.3, theta2: 0.34 };
+
+/// Wraps the shared policy and records, after every event, the decided
+/// container count of every active app (current count when the policy
+/// keeps allocations).
+struct Recording {
+    inner: DormPolicy,
+    log: Vec<BTreeMap<AppId, u32>>,
+}
+
+impl CmsPolicy for Recording {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn on_change(&mut self, ctx: &SchedCtx) -> Option<AllocationUpdate> {
+        let update = self.inner.on_change(ctx);
+        let counts: BTreeMap<AppId, u32> = ctx
+            .apps
+            .values()
+            .map(|a| {
+                let c = match &update {
+                    Some(u) => u
+                        .assignment
+                        .get(&a.id)
+                        .map(|row| row.values().sum())
+                        .unwrap_or(0),
+                    None => a.containers,
+                };
+                (a.id, c)
+            })
+            .collect();
+        self.log.push(counts);
+        update
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    Arrival(usize),
+    Completion(usize),
+}
+
+#[test]
+fn master_and_sim_replay_identical_allocation_sequences() {
+    let specs = trace();
+
+    // ---- DES side -------------------------------------------------------
+    let rows: Vec<Table2Row> = specs
+        .iter()
+        .map(|s| Table2Row {
+            engine: Engine::MxNet,
+            dataset: "synthetic",
+            model: "parity",
+            demand: s.demand.clone(),
+            weight: s.weight,
+            n_max: s.n_max,
+            n_min: s.n_min,
+            num: 1,
+            baseline_containers: 8,
+            duration_median_hours: s.duration_at_baseline_hours,
+        })
+        .collect();
+    let workload: Vec<WorkloadApp> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| WorkloadApp {
+            row: i,
+            tag: format!("app{i}"),
+            submit_hours: s.submit_hours,
+            duration_at_baseline_hours: s.duration_at_baseline_hours,
+            baseline_n: 8,
+        })
+        .collect();
+    let sim = SimConfig { horizon_hours: 24.0, ..Default::default() };
+    let mut pol = Recording { inner: DormPolicy::new(CFG), log: Vec::new() };
+    let out = run_sim(&mut pol, &rows, &workload, &cluster(), &sim, &PerfModel::default());
+    assert_eq!(out.completed, specs.len(), "trace must fully drain");
+
+    // reconstruct the event order the DES processed: arrivals at their
+    // submission times, completions at their simulated times
+    let mut events: Vec<(f64, Ev)> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.submit_hours, Ev::Arrival(i)))
+        .collect();
+    for (id, app) in &out.apps {
+        let t = app.completed_at.expect("all apps completed");
+        events.push((t, Ev::Completion(id.0 as usize)));
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    assert_eq!(pol.log.len(), events.len(), "one decision per event");
+
+    // sim allocation sequence, by workload index
+    let sim_seq: Vec<Vec<u32>> = pol
+        .log
+        .iter()
+        .map(|m| {
+            (0..specs.len())
+                .map(|i| m.get(&AppId(i as u64)).copied().unwrap_or(0))
+                .collect()
+        })
+        .collect();
+
+    // ---- live-master side ----------------------------------------------
+    let dir = std::env::temp_dir().join(format!("dorm_parity_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = CheckpointStore::new(dir).unwrap();
+    let mut master = DormMaster::new(&cluster(), CFG, store);
+    let mut ids: BTreeMap<usize, AppId> = BTreeMap::new();
+    let mut master_seq: Vec<Vec<u32>> = Vec::new();
+    for &(_, ev) in &events {
+        match ev {
+            Ev::Arrival(i) => {
+                let s = &specs[i];
+                let id = master
+                    .submit(AppSpec {
+                        executor: Engine::MxNet,
+                        demand: s.demand.clone(),
+                        weight: s.weight,
+                        n_max: s.n_max,
+                        n_min: s.n_min,
+                        cmd: ["parity".into(), "parity".into()],
+                    })
+                    .unwrap();
+                ids.insert(i, id);
+            }
+            Ev::Completion(i) => {
+                master.complete(ids[&i]).unwrap();
+            }
+        }
+        master_seq.push(
+            (0..specs.len())
+                .map(|i| ids.get(&i).map(|&id| master.containers_of(id)).unwrap_or(0))
+                .collect(),
+        );
+    }
+
+    // ---- the invariant --------------------------------------------------
+    assert_eq!(
+        sim_seq, master_seq,
+        "live master and DES must produce identical allocation sequences\n\
+         events: {events:?}"
+    );
+
+    // sanity: the trace actually exercised the interesting paths
+    let adjusted_total = master.total_adjustments;
+    assert!(adjusted_total >= 1, "trace should force at least one adjustment");
+    let peak_first = sim_seq[0][0];
+    assert_eq!(peak_first, 24, "lone first app takes its n_max");
+    let after_second = &sim_seq[1];
+    assert!(after_second[1] >= 1, "second app admitted");
+}

@@ -1,0 +1,133 @@
+//! Offline stub of the `xla` (xla-rs) PJRT binding.
+//!
+//! The vendored registry on this image has no usable XLA/PJRT binding, so
+//! this shim provides the exact API surface `dorm::runtime::service` uses.
+//! Every entry point that would touch PJRT fails at [`PjRtClient::cpu`]
+//! with a descriptive error; the dorm compute service surfaces that as a
+//! startup error and the rest of the system (master, optimizer, simulator)
+//! keeps working without trainers — the same degradation path as running
+//! without `make artifacts`.  Swap the `xla` path dependency in
+//! `rust/Cargo.toml` for a real xla-rs checkout to enable training.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs's: printable via `{}` in `anyhow!` wrappers.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT backend not available: built against the offline xla stub \
+         (see rust/Cargo.toml to link a real xla-rs)"
+            .to_string(),
+    )
+}
+
+/// Element types the stub's literals accept (mirror of xla-rs NativeType).
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Parsed HLO module (stub: parsing always "succeeds" lazily; the failure
+/// happens earlier, at client construction, so this is never reached).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Host-side tensor literal (stub: carries nothing).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T: NativeType>(_t: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_descriptively() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
