@@ -139,18 +139,7 @@ impl CheckpointStore {
     /// Load the newest valid checkpoint for `app`; corrupt files are
     /// skipped (with a warning) so a bad latest falls back to the previous.
     pub fn load_latest(&self, app: AppId) -> Result<Option<Checkpoint>> {
-        let mut candidates: Vec<PathBuf> = std::fs::read_dir(&self.dir)?
-            .filter_map(|e| e.ok())
-            .map(|e| e.path())
-            .filter(|p| {
-                p.file_name()
-                    .and_then(|n| n.to_str())
-                    .map_or(false, |n| {
-                        n.starts_with(&format!("{app}.step")) && n.ends_with(".ckpt")
-                    })
-            })
-            .collect();
-        candidates.sort(); // step is zero-padded -> lexicographic == numeric
+        let candidates = self.files_of(app)?;
         for path in candidates.iter().rev() {
             let mut bytes = Vec::new();
             std::fs::File::open(path)?.read_to_end(&mut bytes)?;
@@ -162,6 +151,79 @@ impl CheckpointStore {
             }
         }
         Ok(None)
+    }
+
+    /// All checkpoint files of `app`, sorted ascending by step (the
+    /// zero-padded step makes lexicographic == numeric).  The single home
+    /// of the filename-scheme assumptions `load_latest`/`prune` share —
+    /// external callers (tests, tooling) should use this rather than
+    /// re-deriving the naming scheme.
+    pub fn files_of(&self, app: AppId) -> Result<Vec<PathBuf>> {
+        let prefix = format!("{app}.step");
+        let mut out: Vec<PathBuf> = std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map_or(false, |n| n.starts_with(&prefix) && n.ends_with(".ckpt"))
+            })
+            .collect();
+        out.sort();
+        Ok(out)
+    }
+
+    /// Retention: keep only the newest `keep` checkpoints of `app`
+    /// (failure-driven checkpointing makes them frequent; `crate::fault`).
+    /// The newest *good* (digest-valid) snapshot is always kept even when
+    /// it is older than the `keep` newest files — pruning must never turn
+    /// a corrupt latest into an unrecoverable app.  Returns the number of
+    /// files removed.
+    pub fn prune(&self, app: AppId, keep: usize) -> Result<usize> {
+        let files = self.files_of(app)?;
+        if files.len() <= keep.max(1) {
+            return Ok(0);
+        }
+        // newest file whose digest verifies, scanning newest-first
+        let newest_good: Option<&PathBuf> = files.iter().rev().find(|p| {
+            std::fs::read(p)
+                .ok()
+                .and_then(|b| Checkpoint::from_bytes(&b).ok())
+                .is_some()
+        });
+        Self::prune_files(&files, keep, newest_good.map(|p| p.as_path()))
+    }
+
+    /// The shared quota rule: delete all but the newest `keep` files,
+    /// never touching `protect`.
+    fn prune_files(files: &[PathBuf], keep: usize, protect: Option<&Path>) -> Result<usize> {
+        let keep = keep.max(1);
+        if files.len() <= keep {
+            return Ok(0);
+        }
+        let cut = files.len() - keep;
+        let mut removed = 0;
+        for p in &files[..cut] {
+            if Some(p.as_path()) == protect {
+                continue;
+            }
+            std::fs::remove_file(p)?;
+            removed += 1;
+        }
+        Ok(removed)
+    }
+
+    /// Retention right after a successful save: `just_wrote` (the path
+    /// [`CheckpointStore::save`] returned) is digest-valid by construction
+    /// and is never deleted, so the newest-good digest re-scan of
+    /// [`CheckpointStore::prune`] — which would re-read the bytes just
+    /// written — is skipped.  The explicit path matters: after a rollback
+    /// past a corrupt higher-step file, the fresh save is *not* the
+    /// lexicographically newest file on disk, and "protect the newest"
+    /// would delete the only restorable snapshot.  Only use on a save
+    /// path; standalone cleanup must go through `prune`.
+    pub fn prune_after_save(&self, app: AppId, keep: usize, just_wrote: &Path) -> Result<usize> {
+        Self::prune_files(&self.files_of(app)?, keep, Some(just_wrote))
     }
 
     /// Remove all checkpoints for a completed app.
@@ -250,6 +312,75 @@ mod tests {
         std::fs::write(&p, bytes).unwrap();
         let got = store.load_latest(AppId(5)).unwrap().unwrap();
         assert_eq!(got.step, 1, "should fall back to the older checkpoint");
+    }
+
+    #[test]
+    fn prune_keeps_newest_n() {
+        let store = CheckpointStore::new(tmpdir("prune")).unwrap();
+        for step in 1..=5 {
+            store.save(&sample(9, step)).unwrap();
+        }
+        store.save(&sample(10, 1)).unwrap(); // other app untouched
+        assert_eq!(store.prune(AppId(9), 2).unwrap(), 3);
+        assert_eq!(store.load_latest(AppId(9)).unwrap().unwrap().step, 5);
+        // steps 4 and 5 survive: corrupting 5 must still fall back to 4
+        let p5 = store.path_for(AppId(9), 5);
+        let mut bytes = std::fs::read(&p5).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        std::fs::write(&p5, bytes).unwrap();
+        assert_eq!(store.load_latest(AppId(9)).unwrap().unwrap().step, 4);
+        assert_eq!(store.load_latest(AppId(10)).unwrap().unwrap().step, 1);
+        assert_eq!(store.prune(AppId(9), 2).unwrap(), 0, "already at quota");
+    }
+
+    #[test]
+    fn prune_never_deletes_newest_good_snapshot() {
+        let store = CheckpointStore::new(tmpdir("prune_good")).unwrap();
+        store.save(&sample(11, 1)).unwrap();
+        store.save(&sample(11, 2)).unwrap();
+        let p3 = store.save(&sample(11, 3)).unwrap();
+        // newest is corrupt: a naive keep-1 would delete the only good copies
+        let mut bytes = std::fs::read(&p3).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xAA;
+        std::fs::write(&p3, bytes).unwrap();
+        store.prune(AppId(11), 1).unwrap();
+        let got = store.load_latest(AppId(11)).unwrap().unwrap();
+        assert_eq!(got.step, 2, "newest good snapshot must survive pruning");
+        // keep = 0 is clamped to 1, never emptying the store
+        store.prune(AppId(11), 0).unwrap();
+        assert!(store.load_latest(AppId(11)).unwrap().is_some());
+    }
+
+    #[test]
+    fn prune_after_save_enforces_quota_cheaply() {
+        let store = CheckpointStore::new(tmpdir("prune_fast")).unwrap();
+        let mut last = std::path::PathBuf::new();
+        for step in 1..=4 {
+            last = store.save(&sample(14, step)).unwrap();
+            store.prune_after_save(AppId(14), 2, &last).unwrap();
+        }
+        assert_eq!(store.load_latest(AppId(14)).unwrap().unwrap().step, 4);
+        assert_eq!(store.files_of(AppId(14)).unwrap().len(), 2);
+        assert_eq!(store.prune_after_save(AppId(14), 2, &last).unwrap(), 0);
+    }
+
+    #[test]
+    fn prune_after_save_protects_a_rolled_back_write() {
+        let store = CheckpointStore::new(tmpdir("prune_rollback")).unwrap();
+        // a corrupt high-step file lingers; after the rollback the app
+        // saves a LOWER step — retention must not delete the fresh good
+        // file in favour of the corrupt "newest"
+        let p200 = store.save(&sample(16, 200)).unwrap();
+        let mut bytes = std::fs::read(&p200).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x11;
+        std::fs::write(&p200, bytes).unwrap();
+        let p150 = store.save(&sample(16, 150)).unwrap();
+        store.prune_after_save(AppId(16), 1, &p150).unwrap();
+        let got = store.load_latest(AppId(16)).unwrap().unwrap();
+        assert_eq!(got.step, 150, "just-written snapshot must survive pruning");
     }
 
     #[test]

@@ -91,11 +91,13 @@ impl AppSpec {
     }
 }
 
-/// Lifecycle states (§III-C-2 adjustment protocol + Fig. 5).
+/// Lifecycle states (§III-C-2 adjustment protocol + Fig. 5, extended with
+/// the fault path of `crate::fault`).
 ///
 /// ```text
 /// Submitted -> Pending -> Running <-> Checkpointing -> Killed -> Resuming -> Running
 ///                             \-> Completed
+///                             \-> Degraded -> Recovering -> Running   (server death)
 /// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AppState {
@@ -109,6 +111,14 @@ pub enum AppState {
     Killed,
     /// Containers recreated; restoring from checkpoint.
     Resuming,
+    /// A server death broke the partition: containers reclaimed, progress
+    /// since the last checkpoint lost, waiting for the optimizer to
+    /// re-place the app.  Unlike [`AppState::Killed`] nothing was saved
+    /// first — the failure decides the timing, not the protocol.
+    Degraded,
+    /// Re-placed after a failure; restoring from the latest good
+    /// checkpoint at the newly solved scale.
+    Recovering,
     Completed,
     /// Terminal failure (checkpoint corruption, repeated crashes).
     Failed,
@@ -132,6 +142,16 @@ impl AppState {
                 | (Killed, Failed)
                 | (Resuming, Running)
                 | (Resuming, Failed)
+                // fault path: a server death can hit any resource-holding
+                // state; recovery re-enters Running through Recovering
+                | (Running, Degraded)
+                | (Checkpointing, Degraded)
+                | (Resuming, Degraded)
+                | (Recovering, Degraded)
+                | (Degraded, Recovering)
+                | (Degraded, Failed)
+                | (Recovering, Running)
+                | (Recovering, Failed)
         )
     }
 
@@ -143,7 +163,10 @@ impl AppState {
     pub fn holds_resources(self) -> bool {
         matches!(
             self,
-            AppState::Running | AppState::Checkpointing | AppState::Resuming
+            AppState::Running
+                | AppState::Checkpointing
+                | AppState::Resuming
+                | AppState::Recovering
         )
     }
 }
@@ -204,11 +227,19 @@ mod tests {
         for w in cycle.windows(2) {
             assert!(w[0].can_transition(w[1]), "{:?} -> {:?}", w[0], w[1]);
         }
+        // the fault cycle: server death -> re-placed -> running again
+        let fault_cycle = [Running, Degraded, Recovering, Running];
+        for w in fault_cycle.windows(2) {
+            assert!(w[0].can_transition(w[1]), "{:?} -> {:?}", w[0], w[1]);
+        }
         // illegal jumps
         assert!(!Pending.can_transition(Killed));
         assert!(!Running.can_transition(Resuming));
         assert!(!Completed.can_transition(Running));
         assert!(!Killed.can_transition(Running));
+        assert!(!Pending.can_transition(Degraded), "pending holds nothing to lose");
+        assert!(!Degraded.can_transition(Running), "recovery must restore first");
+        assert!(!Killed.can_transition(Recovering), "voluntary kills resume, not recover");
     }
 
     #[test]
@@ -216,6 +247,8 @@ mod tests {
         use AppState::*;
         assert!(Completed.is_terminal() && Failed.is_terminal());
         assert!(!Killed.holds_resources());
+        assert!(!Degraded.holds_resources());
         assert!(Running.holds_resources() && Checkpointing.holds_resources());
+        assert!(Recovering.holds_resources());
     }
 }

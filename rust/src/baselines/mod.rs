@@ -10,7 +10,9 @@
 //!   (one app per engine at a time; capacity cannot flow between engines).
 //! * [`tasklevel`] — the task-level sharing model behind the paper's
 //!   "~430 ms average scheduling latency per task in a 100-node Mesos
-//!   cluster" measurement (§II-C), reproduced by `benches/sched_latency.rs`.
+//!   cluster" measurement (§II-C), reproduced by `benches/sched_latency.rs`,
+//!   plus [`TaskLevelPolicy`], the same pathology as a runnable
+//!   [`crate::sched::CmsPolicy`] (static placements at reduced throughput).
 
 mod iaas;
 mod mesos;
@@ -20,3 +22,4 @@ pub mod tasklevel;
 pub use iaas::IaasPolicy;
 pub use mesos::MesosAppLevelPolicy;
 pub use static_alloc::StaticPolicy;
+pub use tasklevel::TaskLevelPolicy;

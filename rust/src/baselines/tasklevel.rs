@@ -144,6 +144,66 @@ pub fn dorm_local_placement_ms() -> f64 {
     0.005
 }
 
+/// Task-level sharing as a [`CmsPolicy`]: placements match the static
+/// baseline (fixed partitions, never resized), but every ~1.5 s task pays
+/// the central manager's closed-loop scheduling wait before it can start,
+/// shaving throughput to `task / (task + wait)` — at the paper's 100-node
+/// regime (wait = nodes/μ − task = 0.5 s) that is a 25% slowdown on top of
+/// static sharing.  This is the fourth baseline the simulator (and the
+/// `crate::fault` churn experiment) runs against Dorm.
+#[derive(Debug)]
+pub struct TaskLevelPolicy {
+    inner: crate::baselines::StaticPolicy,
+    model: TaskLevelModel,
+    /// Closed-loop per-task scheduling wait, seconds (module docs).
+    wait_secs: f64,
+}
+
+impl TaskLevelPolicy {
+    pub fn new() -> Self {
+        Self::with_model(TaskLevelModel::default())
+    }
+
+    pub fn with_model(model: TaskLevelModel) -> Self {
+        // closed-loop equilibrium: nodes/(task + W) = μ  ⇒  W = nodes·s − task
+        let wait_secs =
+            (model.nodes as f64 * model.service_secs - model.mean_task_secs).max(0.0);
+        TaskLevelPolicy {
+            inner: crate::baselines::StaticPolicy::new(),
+            model,
+            wait_secs,
+        }
+    }
+}
+
+impl Default for TaskLevelPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl crate::sched::CmsPolicy for TaskLevelPolicy {
+    fn name(&self) -> String {
+        "task-level".into()
+    }
+
+    fn on_change(
+        &mut self,
+        ctx: &crate::sched::SchedCtx,
+    ) -> Option<crate::sched::AllocationUpdate> {
+        self.inner.on_change(ctx)
+    }
+
+    fn admission_latency_hours(&self) -> f64 {
+        // first offer round-trip before any task runs
+        (self.wait_secs + self.model.rtt_secs) / 3600.0
+    }
+
+    fn progress_factor(&self) -> f64 {
+        self.model.mean_task_secs / (self.model.mean_task_secs + self.wait_secs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,5 +268,35 @@ mod tests {
         let mut rng = Rng::new(2);
         let s = m.simulate(100, &mut rng);
         assert!(s.mean_ms / dorm_local_placement_ms() > 1e4);
+    }
+
+    #[test]
+    fn task_level_policy_is_static_but_slower() {
+        use crate::config::{ClusterConfig, SimConfig};
+        use crate::sched::CmsPolicy;
+        use crate::sim::{run_sim, PerfModel};
+        use crate::workload::{table2_rows, WorkloadApp};
+
+        let pol = TaskLevelPolicy::new();
+        // paper regime: W = 100·0.02 − 1.5 = 0.5 s -> factor 1.5/2.0
+        assert!((pol.progress_factor() - 0.75).abs() < 1e-12);
+
+        let rows = table2_rows();
+        let wl = vec![WorkloadApp {
+            row: 0,
+            tag: "LR".into(),
+            submit_hours: 0.0,
+            duration_at_baseline_hours: 1.0,
+            baseline_n: 8,
+        }];
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 6.0, ..Default::default() };
+        let mut pol = TaskLevelPolicy::new();
+        let out = run_sim(&mut pol, &rows, &wl, &cfg, &sim, &PerfModel::default());
+        assert_eq!(out.completed, 1);
+        let dur = out.metrics.completions[0].1;
+        // 1 h of baseline work at 75% throughput (+ tiny admission latency)
+        assert!((dur - 1.0 / 0.75).abs() < 0.01, "duration {dur}");
+        assert_eq!(out.metrics.adjustments.last(), Some(0.0), "never adjusts");
     }
 }

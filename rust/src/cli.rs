@@ -77,6 +77,14 @@ COMMANDS:
   simulate   run the §V testbed experiment (static + Dorm-1/2/3, 24 h DES)
                --seed N          workload seed (default 17)
                --horizon H       hours (default 24)
+  churn      failure-injection sweep: Dorm + all four baselines vs MTBF
+               --seed N          workload + failure seed (default 17)
+               --horizon H       hours (default 8)
+               --apps N          workload size (default 16)
+               --mtbfs LIST      comma-separated MTBF hours (default 2,4,8,16,32)
+               --mttr H          mean repair time in hours (default 0.5)
+               --ckpt H          periodic checkpoint cadence hours (0 = on adjustment only)
+               --csv             also write reports/churn_<system>.csv
   fig1       print the Fig. 1 duration-CDF model
   train      train a model through the full Dorm stack (needs artifacts/)
                --model NAME      lr | mf | tfm | tfm_e2e (default lr)

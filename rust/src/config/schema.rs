@@ -113,6 +113,85 @@ impl DormConfig {
     }
 }
 
+/// Fault-tolerance knobs (`crate::fault`, DESIGN.md §8): liveness leases,
+/// checkpoint cadence/retention, and the failure-injection model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Inject failures at all (off reproduces the paper's no-churn world).
+    pub enabled: bool,
+    /// Per-server mean time between failures, hours.
+    pub mtbf_hours: f64,
+    /// Per-server mean time to repair, hours.
+    pub mttr_hours: f64,
+    /// A server whose lease is older than this is declared dead.
+    pub lease_timeout_hours: f64,
+    /// Periodic checkpoint cadence (0 = checkpoint only on adjustment,
+    /// the bare §III-C-2 protocol).
+    pub ckpt_period_hours: f64,
+    /// Keep only the newest N checkpoints per app (≥ 1).
+    pub ckpt_retain: usize,
+    /// Failure-trace RNG seed.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enabled: false,
+            // commodity-server churn scaled to the 24 h experiment
+            mtbf_hours: 168.0,
+            mttr_hours: 0.5,
+            // 3 missed 12 s heartbeats
+            lease_timeout_hours: 0.01,
+            ckpt_period_hours: 0.0,
+            ckpt_retain: 3,
+            seed: 23,
+        }
+    }
+}
+
+impl FaultConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = FaultConfig::default();
+        let c = FaultConfig {
+            enabled: doc
+                .get("fault", "enabled")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.enabled),
+            mtbf_hours: doc.f64_or("fault", "mtbf_hours", d.mtbf_hours),
+            mttr_hours: doc.f64_or("fault", "mttr_hours", d.mttr_hours),
+            lease_timeout_hours: doc
+                .f64_or("fault", "lease_timeout_hours", d.lease_timeout_hours),
+            ckpt_period_hours: doc
+                .f64_or("fault", "ckpt_period_hours", d.ckpt_period_hours),
+            ckpt_retain: doc.u32_or("fault", "ckpt_retain", d.ckpt_retain as u32) as usize,
+            seed: doc.f64_or("fault", "seed", d.seed as f64) as u64,
+        };
+        if c.mtbf_hours <= 0.0 {
+            bail!("[fault].mtbf_hours must be > 0, got {}", c.mtbf_hours);
+        }
+        if c.mttr_hours < 0.0 {
+            bail!("[fault].mttr_hours must be >= 0, got {}", c.mttr_hours);
+        }
+        if c.lease_timeout_hours <= 0.0 {
+            bail!(
+                "[fault].lease_timeout_hours must be > 0, got {}",
+                c.lease_timeout_hours
+            );
+        }
+        if c.ckpt_period_hours < 0.0 {
+            bail!(
+                "[fault].ckpt_period_hours must be >= 0, got {}",
+                c.ckpt_period_hours
+            );
+        }
+        if c.ckpt_retain == 0 {
+            bail!("[fault].ckpt_retain must be >= 1 (never drop the newest)");
+        }
+        Ok(c)
+    }
+}
+
 /// Simulation parameters (§V-A-3 workload + horizon).
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -188,6 +267,36 @@ mod tests {
         assert_eq!(DormConfig::from_doc(&ok).unwrap(), DormConfig::DORM1);
         let bad = parse_toml("[dorm]\ntheta1 = 1.5\n").unwrap();
         assert!(DormConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn fault_section_parses_and_validates() {
+        let doc = parse_toml(
+            "[fault]\nenabled = true\nmtbf_hours = 8\nmttr_hours = 0.25\n\
+             lease_timeout_hours = 0.02\nckpt_period_hours = 0.5\nckpt_retain = 2\nseed = 5\n",
+        )
+        .unwrap();
+        let c = FaultConfig::from_doc(&doc).unwrap();
+        assert!(c.enabled);
+        assert_eq!(c.mtbf_hours, 8.0);
+        assert_eq!(c.mttr_hours, 0.25);
+        assert_eq!(c.ckpt_retain, 2);
+        assert_eq!(c.seed, 5);
+
+        // defaults when the section is absent
+        let empty = parse_toml("").unwrap();
+        assert_eq!(FaultConfig::from_doc(&empty).unwrap(), FaultConfig::default());
+
+        // invalid values rejected
+        for bad in [
+            "[fault]\nmtbf_hours = 0\n",
+            "[fault]\nmttr_hours = -1\n",
+            "[fault]\nlease_timeout_hours = 0\n",
+            "[fault]\nckpt_retain = 0\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(FaultConfig::from_doc(&doc).is_err(), "{bad:?} accepted");
+        }
     }
 
     #[test]

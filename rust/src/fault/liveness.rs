@@ -1,0 +1,139 @@
+//! Server liveness via leases.
+//!
+//! Each DormSlave periodically reports to the master (§III-A-2); the
+//! report renews a lease.  A server whose lease has not been renewed for
+//! `timeout_hours` is declared dead: the master reclaims its capacity and
+//! containers and re-drives the allocation engine (`crate::master`).  The
+//! DES reuses the same table as its alive-set bookkeeping (failures arrive
+//! as injected events rather than missed heartbeats, so its timeout is
+//! infinite).
+
+/// Per-server lease table.  Time is whatever monotone clock the backend
+/// uses: simulated hours in the DES, an event counter on the live master.
+#[derive(Clone, Debug)]
+pub struct LeaseTable {
+    timeout: f64,
+    /// Last renewal time per server (meaningless while dead).
+    renewed: Vec<f64>,
+    alive: Vec<bool>,
+}
+
+impl LeaseTable {
+    /// All servers start alive with leases renewed at time 0.
+    pub fn new(n_servers: usize, timeout: f64) -> Self {
+        assert!(timeout > 0.0, "lease timeout must be positive");
+        LeaseTable {
+            timeout,
+            renewed: vec![0.0; n_servers],
+            alive: vec![true; n_servers],
+        }
+    }
+
+    /// An alive server's heartbeat landed at `now`.  Renewals from dead
+    /// servers are ignored — a dead server must be explicitly recovered
+    /// (its containers are gone; a late heartbeat must not resurrect it
+    /// with stale bookkeeping).
+    pub fn renew(&mut self, server: usize, now: f64) {
+        if self.alive[server] {
+            self.renewed[server] = self.renewed[server].max(now);
+        }
+    }
+
+    /// Alive servers whose lease lapsed before `now`.
+    pub fn expired(&self, now: f64) -> Vec<usize> {
+        (0..self.alive.len())
+            .filter(|&j| self.alive[j] && now - self.renewed[j] > self.timeout)
+            .collect()
+    }
+
+    pub fn mark_dead(&mut self, server: usize) {
+        self.alive[server] = false;
+    }
+
+    /// The server came back; its lease restarts at `now`.
+    pub fn mark_alive(&mut self, server: usize, now: f64) {
+        self.alive[server] = true;
+        self.renewed[server] = now;
+    }
+
+    pub fn is_alive(&self, server: usize) -> bool {
+        self.alive[server]
+    }
+
+    /// Latest renewal timestamp across alive servers — the table's best
+    /// estimate of "now" when the caller has no clock of its own (e.g.
+    /// re-anchoring a recovered server's lease so it does not instantly
+    /// re-expire against later heartbeats).
+    pub fn latest_renewal(&self) -> f64 {
+        self.renewed
+            .iter()
+            .zip(&self.alive)
+            .filter(|&(_, &alive)| alive)
+            .map(|(&r, _)| r)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alive.is_empty()
+    }
+
+    pub fn timeout(&self) -> f64 {
+        self.timeout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heartbeats_keep_servers_alive() {
+        let mut t = LeaseTable::new(3, 1.0);
+        t.renew(0, 0.9);
+        t.renew(1, 0.9);
+        // server 2 never heartbeats after t=0
+        assert_eq!(t.expired(1.5), vec![2]);
+        assert_eq!(t.n_alive(), 3, "expiry is detected, not applied");
+        t.mark_dead(2);
+        assert_eq!(t.n_alive(), 2);
+        assert!(t.expired(1.5).is_empty(), "dead servers not re-reported");
+    }
+
+    #[test]
+    fn dead_servers_ignore_late_heartbeats() {
+        let mut t = LeaseTable::new(1, 1.0);
+        t.mark_dead(0);
+        t.renew(0, 5.0); // late packet from a zombie
+        assert!(!t.is_alive(0));
+        t.mark_alive(0, 6.0);
+        assert!(t.is_alive(0));
+        assert!(t.expired(6.5).is_empty(), "lease restarted at recovery");
+        assert_eq!(t.expired(7.1), vec![0]);
+    }
+
+    #[test]
+    fn latest_renewal_tracks_alive_servers_only() {
+        let mut t = LeaseTable::new(3, 1.0);
+        t.renew(0, 4.0);
+        t.renew(1, 9.0);
+        t.mark_dead(1); // dead server's timestamp must not count
+        assert_eq!(t.latest_renewal(), 4.0);
+        t.mark_alive(2, t.latest_renewal());
+        assert!(t.expired(4.5).is_empty());
+    }
+
+    #[test]
+    fn boundary_is_strict() {
+        let t = LeaseTable::new(1, 1.0);
+        assert!(t.expired(1.0).is_empty(), "exactly at timeout still held");
+        assert_eq!(t.expired(1.0 + 1e-9), vec![0]);
+    }
+}

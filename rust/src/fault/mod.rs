@@ -1,0 +1,38 @@
+//! Fault tolerance and failure injection (DESIGN.md §8).
+//!
+//! The paper assumes servers never fail; a production-scale CMS cannot.
+//! This subsystem treats machine churn as a normal input to the
+//! utilization–fairness optimizer, reusing the §III-C-2 adjustment
+//! primitive (checkpoint → kill → resume) as the recovery mechanism.  It
+//! has three parts, shared by the live [`crate::master::DormMaster`] and
+//! the DES ([`crate::sim::run_sim_faulty`]) so recovery decisions are
+//! backend-identical (`tests/fault.rs` pins the parity):
+//!
+//! * [`liveness`] — lease bookkeeping: slaves report heartbeats, the
+//!   master expires stale leases and reclaims a dead server's capacity and
+//!   containers.  Affected apps transition to `Degraded` and the
+//!   allocation engine is re-driven with the shrunken capacity vector
+//!   (its snapshot cache invalidated via
+//!   [`crate::sched::CmsPolicy::on_capacity_change`]).
+//! * [`recovery`] — lost-work accounting: affected apps resume from their
+//!   latest [`crate::app::CheckpointStore`] snapshot at the newly solved
+//!   scale; work since the last checkpoint (steps on the live master,
+//!   work-hours in the DES) is recorded in a [`RecoveryLog`].
+//! * [`model`] — failure injection: per-server exponential MTBF/MTTR
+//!   traces (deterministic via [`crate::util::Rng`]) or scripted traces,
+//!   fed into the simulator's event queue — or replayed against the live
+//!   master through `DormMaster::fail_server`/`recover_server`.
+//!
+//! [`churn`] packages the evaluation: Dorm and all four baselines swept
+//! over MTBF, reporting utilization, fairness loss, lost work, recovery
+//! time and goodput through [`crate::metrics`]/[`crate::report`].
+
+pub mod churn;
+pub mod liveness;
+pub mod model;
+pub mod recovery;
+
+pub use churn::{churn_csv_columns, churn_sweep, churn_systems, churn_table, ChurnPoint};
+pub use liveness::LeaseTable;
+pub use model::{FailureEvent, FailureKind, FailureModel};
+pub use recovery::{RecoveryLog, RecoveryRecord};

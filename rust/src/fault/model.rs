@@ -1,0 +1,182 @@
+//! Failure injection: when and which servers die and come back.
+//!
+//! Two generators behind one interface: per-server exponential MTBF/MTTR
+//! (the standard machine-churn model, deterministic via
+//! [`crate::util::Rng`]) and scripted traces (tests, replay, the
+//! master↔sim parity suite).  A trace is a time-sorted list of
+//! [`FailureEvent`]s the DES feeds into its event queue and a live-master
+//! harness replays through `fail_server`/`recover_server`.
+
+use crate::util::Rng;
+
+/// A server goes down or comes back.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FailureKind {
+    /// The server dies: capacity and containers are lost.
+    Kill,
+    /// The server rejoins with its original capacity (empty).
+    Recover,
+}
+
+/// One churn event in a trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FailureEvent {
+    /// Hours from run start.
+    pub time: f64,
+    /// Server index (`crate::cluster::ServerId` ordinate).
+    pub server: usize,
+    pub kind: FailureKind,
+}
+
+impl FailureEvent {
+    pub fn kill(time: f64, server: usize) -> Self {
+        FailureEvent { time, server, kind: FailureKind::Kill }
+    }
+
+    pub fn recover(time: f64, server: usize) -> Self {
+        FailureEvent { time, server, kind: FailureKind::Recover }
+    }
+}
+
+/// Trace generator.
+#[derive(Clone, Debug)]
+pub enum FailureModel {
+    /// No churn (the paper's implicit assumption).
+    None,
+    /// Each server independently alternates up-time ~ Exp(mtbf) and
+    /// down-time ~ Exp(mttr).  Deterministic for a given seed; each server
+    /// draws from its own forked stream so traces are stable under
+    /// cluster-size changes.
+    Exponential { mtbf_hours: f64, mttr_hours: f64, seed: u64 },
+    /// Replay exactly these events (times need not be sorted).
+    Scripted(Vec<FailureEvent>),
+}
+
+impl FailureModel {
+    /// The model a `[fault]` config section asks for: exponential churn
+    /// when enabled, [`FailureModel::None`] otherwise.
+    pub fn from_config(cfg: &crate::config::FaultConfig) -> FailureModel {
+        if !cfg.enabled {
+            return FailureModel::None;
+        }
+        FailureModel::Exponential {
+            mtbf_hours: cfg.mtbf_hours,
+            mttr_hours: cfg.mttr_hours,
+            seed: cfg.seed,
+        }
+    }
+
+    /// Materialize the trace for `n_servers` over `[0, horizon_hours]`,
+    /// sorted by (time, server).  Scripted events outside the horizon or
+    /// naming unknown servers are dropped.
+    pub fn trace(&self, n_servers: usize, horizon_hours: f64) -> Vec<FailureEvent> {
+        let mut out = match self {
+            FailureModel::None => Vec::new(),
+            FailureModel::Scripted(events) => events
+                .iter()
+                .filter(|e| e.server < n_servers && e.time <= horizon_hours)
+                .cloned()
+                .collect(),
+            FailureModel::Exponential { mtbf_hours, mttr_hours, seed } => {
+                assert!(*mtbf_hours > 0.0, "MTBF must be positive");
+                assert!(*mttr_hours >= 0.0, "MTTR must be non-negative");
+                let mut base = Rng::new(seed ^ 0xFA17_70DE);
+                let mut events = Vec::new();
+                for server in 0..n_servers {
+                    let mut rng = base.fork(server as u64 + 1);
+                    let mut t = rng.exponential(*mtbf_hours);
+                    while t <= horizon_hours {
+                        events.push(FailureEvent::kill(t, server));
+                        t += rng.exponential(mttr_hours.max(1e-6));
+                        if t > horizon_hours {
+                            break;
+                        }
+                        events.push(FailureEvent::recover(t, server));
+                        t += rng.exponential(*mtbf_hours);
+                    }
+                }
+                events
+            }
+        };
+        out.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.server.cmp(&b.server)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_trace_is_deterministic_and_alternating() {
+        let m = FailureModel::Exponential { mtbf_hours: 2.0, mttr_hours: 0.5, seed: 7 };
+        let a = m.trace(5, 100.0);
+        let b = m.trace(5, 100.0);
+        assert_eq!(a, b, "same seed must replay identically");
+        assert!(!a.is_empty(), "2h MTBF over 100h must produce failures");
+        // per server: strictly alternating Kill / Recover, times increasing
+        for j in 0..5 {
+            let evs: Vec<&FailureEvent> = a.iter().filter(|e| e.server == j).collect();
+            for (i, e) in evs.iter().enumerate() {
+                let want = if i % 2 == 0 { FailureKind::Kill } else { FailureKind::Recover };
+                assert_eq!(e.kind, want, "server {j} event {i}");
+                if i > 0 {
+                    assert!(e.time >= evs[i - 1].time);
+                }
+            }
+        }
+        // globally time-sorted
+        for w in a.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+    }
+
+    #[test]
+    fn exponential_rates_roughly_match_mtbf() {
+        let m = FailureModel::Exponential { mtbf_hours: 10.0, mttr_hours: 1.0, seed: 3 };
+        let trace = m.trace(20, 1000.0);
+        let kills = trace.iter().filter(|e| e.kind == FailureKind::Kill).count();
+        // each server is up ~10/11 of the time -> ~91 kills per server per
+        // 1000h/11h cycle; loose 2x bounds on the aggregate
+        let expected = 20.0 * 1000.0 / 11.0;
+        assert!(
+            (kills as f64) > expected * 0.5 && (kills as f64) < expected * 2.0,
+            "kills {kills} vs expected ~{expected:.0}"
+        );
+    }
+
+    #[test]
+    fn from_config_respects_the_enabled_switch() {
+        use crate::config::FaultConfig;
+        let off = FaultConfig::default();
+        assert!(FailureModel::from_config(&off).trace(8, 100.0).is_empty());
+        let on = FaultConfig {
+            enabled: true,
+            mtbf_hours: 4.0,
+            mttr_hours: 0.5,
+            seed: 9,
+            ..Default::default()
+        };
+        let t = FailureModel::from_config(&on).trace(8, 100.0);
+        assert!(!t.is_empty());
+        // same knobs, same trace (seed flows through)
+        assert_eq!(
+            t,
+            FailureModel::Exponential { mtbf_hours: 4.0, mttr_hours: 0.5, seed: 9 }
+                .trace(8, 100.0)
+        );
+    }
+
+    #[test]
+    fn scripted_trace_filters_and_sorts() {
+        let m = FailureModel::Scripted(vec![
+            FailureEvent::recover(5.0, 1),
+            FailureEvent::kill(1.0, 1),
+            FailureEvent::kill(2.0, 9), // unknown server: dropped
+            FailureEvent::kill(99.0, 0), // past horizon: dropped
+        ]);
+        let t = m.trace(4, 10.0);
+        assert_eq!(t, vec![FailureEvent::kill(1.0, 1), FailureEvent::recover(5.0, 1)]);
+        assert!(FailureModel::None.trace(4, 10.0).is_empty());
+    }
+}

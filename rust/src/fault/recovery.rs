@@ -1,0 +1,109 @@
+//! Lost-work accounting for checkpoint-driven recovery.
+//!
+//! A server death loses everything an affected app computed since its last
+//! checkpoint — the §III-C-2 protocol can only resume from reliable
+//! storage.  Both backends record each (failure, resume) pair here: the
+//! live master in BSP steps, the DES in work-hours; the unit is the
+//! backend's, the bookkeeping is shared.
+
+use crate::app::AppId;
+
+/// One failure → recovery cycle of one application.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveryRecord {
+    pub app: AppId,
+    /// Server whose death broke the app's partition.
+    pub server: usize,
+    /// Backend time of the failure (simulated hours / event counter).
+    pub failed_at: f64,
+    /// Work discarded: progress since the last checkpoint (steps on the
+    /// live master, work-hours in the DES).
+    pub lost_work: f64,
+    /// Set when the app is running again; `None` while still down.
+    pub resumed_at: Option<f64>,
+    /// Container count the optimizer granted at resume (the "newly solved
+    /// scale").
+    pub resumed_scale: u32,
+}
+
+/// Append-only log of recovery cycles.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryLog {
+    records: Vec<RecoveryRecord>,
+}
+
+impl RecoveryLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A server death took `app` down.
+    pub fn failed(&mut self, app: AppId, server: usize, failed_at: f64, lost_work: f64) {
+        self.records.push(RecoveryRecord {
+            app,
+            server,
+            failed_at,
+            lost_work,
+            resumed_at: None,
+            resumed_scale: 0,
+        });
+    }
+
+    /// `app` is running again at `scale` containers: closes its oldest
+    /// open record (failures during recovery open a new one each).
+    pub fn resumed(&mut self, app: AppId, at: f64, scale: u32) {
+        if let Some(r) = self
+            .records
+            .iter_mut()
+            .find(|r| r.app == app && r.resumed_at.is_none())
+        {
+            r.resumed_at = Some(at);
+            r.resumed_scale = scale;
+        }
+    }
+
+    /// The oldest not-yet-resumed record for `app`, if any.
+    pub fn open(&self, app: AppId) -> Option<&RecoveryRecord> {
+        self.records.iter().find(|r| r.app == app && r.resumed_at.is_none())
+    }
+
+    pub fn records(&self) -> &[RecoveryRecord] {
+        &self.records
+    }
+
+    /// Σ lost work across all recorded failures.
+    pub fn total_lost_work(&self) -> f64 {
+        self.records.iter().map(|r| r.lost_work).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_then_resume_closes_oldest_open_record() {
+        let mut log = RecoveryLog::new();
+        log.failed(AppId(1), 0, 1.0, 10.0);
+        log.failed(AppId(2), 0, 1.0, 4.0);
+        log.failed(AppId(1), 2, 2.0, 3.0); // failed again mid-recovery
+        assert_eq!(log.open(AppId(1)).unwrap().failed_at, 1.0);
+        log.resumed(AppId(1), 3.0, 8);
+        assert_eq!(log.open(AppId(1)).unwrap().failed_at, 2.0);
+        log.resumed(AppId(1), 3.5, 6);
+        assert!(log.open(AppId(1)).is_none());
+        assert!(log.open(AppId(2)).is_some(), "app 2 untouched");
+        assert_eq!(log.total_lost_work(), 17.0);
+        assert_eq!(log.len(), 3);
+        let r = &log.records()[0];
+        assert_eq!((r.resumed_at, r.resumed_scale), (Some(3.0), 8));
+    }
+}

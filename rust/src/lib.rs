@@ -33,6 +33,7 @@
 //! | [`cluster`] | servers, partitions, containers |
 //! | [`app`] | application 6-tuple, lifecycle, checkpoints |
 //! | [`master`] / [`slave`] | the Dorm control plane |
+//! | [`fault`] | server liveness (leases), failure injection, checkpoint-driven recovery, churn experiment |
 //! | [`ps`] | BSP parameter-server runtime (the "MxNet" stand-in) |
 //! | [`runtime`] | PJRT executor service for `artifacts/*.hlo.txt` |
 //! | [`sim`] | discrete-event simulator (Figs 6–9) |
@@ -49,6 +50,7 @@ pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod drf;
+pub mod fault;
 pub mod master;
 pub mod metrics;
 pub mod optimizer;

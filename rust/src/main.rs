@@ -30,6 +30,7 @@ fn main() {
     };
     let result = match cli.command.as_str() {
         "simulate" => cmd_simulate(&cli),
+        "churn" => cmd_churn(&cli),
         "fig1" => cmd_fig1(),
         "train" => cmd_train(&cli),
         "latency" => cmd_latency(&cli),
@@ -77,6 +78,50 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
             fairness_reduction(d, baseline, horizon),
             mean_speedup(d, baseline),
         );
+    }
+    Ok(())
+}
+
+fn cmd_churn(cli: &Cli) -> Result<()> {
+    use dorm::config::FaultConfig;
+    use dorm::fault::{churn_csv_columns, churn_sweep, churn_systems, churn_table};
+    let seed = cli.u64_flag("seed", 17)?;
+    let horizon = cli.f64_flag("horizon", 8.0)?;
+    let napps = cli.u64_flag("apps", 16)? as usize;
+    let defaults = FaultConfig::default();
+    let fault = FaultConfig {
+        enabled: true,
+        mttr_hours: cli.f64_flag("mttr", defaults.mttr_hours)?,
+        ckpt_period_hours: cli.f64_flag("ckpt", defaults.ckpt_period_hours)?,
+        seed,
+        ..defaults
+    };
+    let mtbfs: Vec<f64> = cli
+        .str_flag("mtbfs", "2,4,8,16,32")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--mtbfs wants numbers, got {s:?}"))
+        })
+        .collect::<Result<_>>()?;
+    println!(
+        "churn sweep: {napps} apps / {horizon} h / MTTR {} h / ckpt every {} h / \
+         MTBF {mtbfs:?} (seed {seed})",
+        fault.mttr_hours, fault.ckpt_period_hours
+    );
+    let points = churn_sweep(&fault, seed, horizon, napps, &mtbfs);
+    println!("{}", churn_table(&points));
+    if cli.bool_flag("csv") {
+        for system in churn_systems(&points) {
+            let cols = churn_csv_columns(&points, &system);
+            let slug: String = system
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect();
+            let path = report::write_csv(&format!("churn_{slug}.csv"), &cols)?;
+            println!("wrote {}", path.display());
+        }
     }
     Ok(())
 }

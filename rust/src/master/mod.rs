@@ -13,17 +13,31 @@
 //! 2. new allocations are enforced by destroying/creating containers;
 //! 3. adjusted apps are checkpointed, killed and resumed at the new scale.
 //!
+//! Server liveness and recovery (`crate::fault`, DESIGN.md §8): slaves
+//! renew leases via [`DormMaster::heartbeat`]; [`DormMaster::expire_leases`]
+//! declares stale servers dead (the failure-injection harness can force it
+//! with [`DormMaster::fail_server`]).  A death reclaims the server's
+//! capacity and every partition it hosted, rolls the affected apps back to
+//! their last checkpoint (`Degraded`, lost work = steps since the
+//! checkpoint), invalidates the policy's capacity-derived caches, and
+//! re-drives the allocation engine on the shrunken cluster; re-placed apps
+//! resume from the checkpoint store at the newly solved scale
+//! (`Recovering` → `Running`).
+//!
 //! When no compute service is attached (e.g. artifacts not built) the
 //! master still performs all resource management — apps are bookkeeping
-//! entries without trainers, which is what the control-plane tests use.
+//! entries without trainers (progress advances via
+//! [`DormMaster::advance_steps`], checkpoints persist the step cursor),
+//! which is what the control-plane tests use.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::app::{AppId, AppSpec, AppState, CheckpointStore};
+use crate::app::{AppId, AppSpec, AppState, Checkpoint, CheckpointStore};
 use crate::cluster::ServerId;
-use crate::config::{ClusterConfig, DormConfig};
+use crate::config::{ClusterConfig, DormConfig, FaultConfig};
+use crate::fault::{LeaseTable, RecoveryLog};
 use crate::optimizer::SolveMode;
 use crate::ps::{Trainer, TrainerConfig};
 use crate::resources::Res;
@@ -41,6 +55,46 @@ pub struct ManagedApp {
     pub trainer: Option<Trainer>,
     /// Kill/resume cycles this app went through (Fig. 9b bookkeeping).
     pub adjustments: u32,
+    /// Failure-recovery cycles (server deaths survived; `crate::fault`).
+    pub recoveries: u32,
+    /// BSP steps completed (trainer step when one is attached, otherwise
+    /// advanced by [`DormMaster::advance_steps`]).
+    pub steps_done: u64,
+    /// Step of the latest checkpoint; a server death rolls `steps_done`
+    /// back here and the difference is the lost work.
+    pub ckpt_step: u64,
+    /// While `Degraded`: whether a digest-valid checkpoint existed at
+    /// failure time (probed once by `fail_servers`, consumed by the
+    /// recovery resume so it need not re-read the store).
+    ckpt_restorable: bool,
+}
+
+/// Write `app`'s checkpoint — trainer parameters when one is attached,
+/// otherwise a bookkeeping snapshot of the step cursor (so the fault path
+/// can measure lost work without a compute service) — update the cursor,
+/// and apply retention.  Shared by the adjustment prologue and periodic
+/// checkpointing so the two can never diverge.
+fn save_checkpoint(store: &CheckpointStore, retain: usize, app: &mut ManagedApp) -> Result<()> {
+    let written = if let Some(trainer) = &app.trainer {
+        let path = trainer.checkpoint(store).context("checkpoint")?;
+        app.steps_done = trainer.current_step();
+        path
+    } else {
+        store
+            .save(&Checkpoint {
+                app: app.id,
+                step: app.steps_done,
+                model: app.spec.cmd[0].clone(),
+                loss: 0.0,
+                params: Vec::new(),
+            })
+            .context("checkpoint")?
+    };
+    app.ckpt_step = app.steps_done;
+    // the file just written is digest-valid by construction, so retention
+    // can skip the newest-good re-scan (prune_after_save vs prune)
+    store.prune_after_save(app.id, retain, &written)?;
+    Ok(())
 }
 
 /// The central manager.
@@ -51,8 +105,20 @@ pub struct DormMaster {
     compute: Option<(ComputeHandle, Manifest)>,
     apps: BTreeMap<AppId, ManagedApp>,
     next_id: u64,
+    /// Event counter: one tick per mutating control-plane event (submit,
+    /// complete, fail_server, recover_server).  The master has no wall
+    /// clock; this is its monotone "now" for the snapshot FIFO key and the
+    /// recovery log (durations there are *events elapsed*, not hours —
+    /// unlike the DES, whose log speaks simulated hours).
+    clock: u64,
     /// Total adjusted-app count (Eq. 4 accumulated).
     pub total_adjustments: u32,
+    /// Completed failure-recovery cycles across all apps.
+    pub total_recoveries: u32,
+    lease: LeaseTable,
+    recovery_log: RecoveryLog,
+    /// Checkpoint retention: newest N per app (`FaultConfig::ckpt_retain`).
+    ckpt_retain: usize,
 }
 
 impl DormMaster {
@@ -77,6 +143,7 @@ impl DormMaster {
         policy: Box<dyn CmsPolicy>,
         store: CheckpointStore,
     ) -> Self {
+        let n = cluster.servers.len();
         DormMaster {
             slaves: cluster
                 .servers
@@ -88,7 +155,14 @@ impl DormMaster {
             compute: None,
             apps: BTreeMap::new(),
             next_id: 0,
+            clock: 0,
             total_adjustments: 0,
+            total_recoveries: 0,
+            // leases never expire until a [fault] config opts in; failures
+            // can still be forced through fail_server
+            lease: LeaseTable::new(n, f64::INFINITY),
+            recovery_log: RecoveryLog::new(),
+            ckpt_retain: FaultConfig::default().ckpt_retain,
         }
     }
 
@@ -98,10 +172,18 @@ impl DormMaster {
         self
     }
 
+    /// Apply a `[fault]` config: lease timeout + checkpoint retention.
+    pub fn with_fault(mut self, cfg: &FaultConfig) -> Self {
+        self.lease = LeaseTable::new(self.slaves.len(), cfg.lease_timeout_hours);
+        self.ckpt_retain = cfg.ckpt_retain;
+        self
+    }
+
     /// §III-B: submit the 6-tuple. Returns the assigned id; triggers an
     /// allocation round.
     pub fn submit(&mut self, spec: AppSpec) -> Result<AppId> {
         spec.validate().context("invalid submission")?;
+        self.clock += 1;
         self.next_id += 1;
         let id = AppId(self.next_id);
         let model = self.compute.is_some().then(|| spec.cmd[0].clone());
@@ -120,6 +202,10 @@ impl DormMaster {
                 model,
                 trainer: None,
                 adjustments: 0,
+                recoveries: 0,
+                steps_done: 0,
+                ckpt_step: 0,
+                ckpt_restorable: false,
             },
         );
         self.reallocate()?;
@@ -136,6 +222,7 @@ impl DormMaster {
         if app.state.is_terminal() {
             bail!("{id} already terminal");
         }
+        self.clock += 1;
         app.state = AppState::Completed;
         app.trainer = None;
         for s in &mut self.slaves {
@@ -144,6 +231,204 @@ impl DormMaster {
         let _ = self.store.gc(id);
         self.reallocate()?;
         Ok(())
+    }
+
+    // ---- liveness (§III-A-2 reports + lease expiry, `crate::fault`) -----
+
+    /// Consume one slave heartbeat, renewing its lease.  `now` is the
+    /// caller's clock (the live harness drives time; tests pass anything
+    /// monotone).  A real transport would carry the slave's
+    /// [`crate::slave::SlaveReport`] payload; liveness needs only the
+    /// arrival itself, so none is materialized here.
+    pub fn heartbeat(&mut self, server: usize, now: f64) -> Result<()> {
+        if server >= self.slaves.len() {
+            bail!("unknown server {server}");
+        }
+        self.lease.renew(server, now);
+        Ok(())
+    }
+
+    /// Declare every server whose lease lapsed before `now` dead (capacity
+    /// and containers reclaimed, affected apps degraded + re-solved).
+    /// The whole batch dies before the single re-solve — a rack outage
+    /// must not bounce apps through a server that is about to expire in
+    /// the same sweep.  Returns the newly dead servers.
+    pub fn expire_leases(&mut self, now: f64) -> Result<Vec<usize>> {
+        let dead = self.lease.expired(now);
+        if !dead.is_empty() {
+            self.fail_servers(&dead)?;
+        }
+        Ok(dead)
+    }
+
+    /// Failure injection / forced expiry: server `j` is dead.  Its
+    /// capacity leaves the optimization, every partition it hosted is
+    /// reclaimed (BSP cannot continue with lost workers), affected apps
+    /// roll back to their latest checkpoint and become `Degraded`, and the
+    /// allocation engine re-solves on the shrunken cluster (re-placed apps
+    /// resume immediately).  Idempotent.  Returns the affected apps.
+    pub fn fail_server(&mut self, j: usize) -> Result<Vec<AppId>> {
+        if j >= self.slaves.len() {
+            bail!("unknown server {j}");
+        }
+        self.fail_servers(&[j])
+    }
+
+    /// Batch kill: every listed (alive) server is marked dead and every
+    /// affected partition torn down *before* the one re-solve.
+    fn fail_servers(&mut self, servers: &[usize]) -> Result<Vec<AppId>> {
+        // (app, first dead server observed hosting it), insertion-ordered
+        let mut victims: Vec<(AppId, usize)> = Vec::new();
+        let mut any_died = false;
+        for &j in servers {
+            if !self.lease.is_alive(j) {
+                continue;
+            }
+            self.lease.mark_dead(j);
+            any_died = true;
+            for id in self.slaves[j].inventory().keys() {
+                if !victims.iter().any(|&(v, _)| v == *id) {
+                    victims.push((*id, j));
+                }
+            }
+        }
+        if !any_died {
+            return Ok(Vec::new());
+        }
+        self.clock += 1;
+        let now = self.clock as f64;
+        for &(id, j) in &victims {
+            for s in &mut self.slaves {
+                s.destroy_all(id);
+            }
+            // roll back to the newest snapshot that can actually be
+            // restored: ckpt_step is only a cursor — if the latest file
+            // is corrupt on disk, the store's digest check falls back to
+            // the previous good one, and lost work must say so
+            let app = self.apps.get_mut(&id).expect("victim is managed");
+            let (good_step, restorable) = match self.store.load_latest(id) {
+                Ok(Some(c)) => (c.step, true),
+                Ok(None) => (0, false),
+                // store unreadable: recovery will restart from step 0
+                // (restorable = false ⇒ Trainer::new), so the accounting
+                // must charge the whole run as lost to match
+                Err(e) => {
+                    log::warn!(
+                        "checkpoint store unreadable for {id}: {e:#}; \
+                         treating the whole run as lost"
+                    );
+                    (0, false)
+                }
+            };
+            let lost = app.steps_done.saturating_sub(good_step);
+            app.steps_done = good_step;
+            app.ckpt_step = good_step;
+            app.ckpt_restorable = restorable;
+            app.trainer = None;
+            app.state = AppState::Degraded;
+            self.recovery_log.failed(id, j, now, lost as f64);
+        }
+        // the policy's cached solve state was derived from the old
+        // capacity vector — both backends drop it here (tests/fault.rs)
+        self.policy.on_capacity_change();
+        self.reallocate()?;
+        Ok(victims.into_iter().map(|(id, _)| id).collect())
+    }
+
+    /// The server rejoined (empty, original capacity); re-optimize so apps
+    /// can grow back.  Idempotent.  The fresh lease is anchored at the
+    /// newest heartbeat seen anywhere — harnesses that drive real
+    /// wall-clock lease expiry should prefer [`Self::recover_server_at`],
+    /// which takes the caller's clock (after a *full* outage there is no
+    /// alive lease left to borrow a timestamp from).
+    pub fn recover_server(&mut self, j: usize) -> Result<()> {
+        let now = self.lease.latest_renewal();
+        self.recover_server_at(j, now)
+    }
+
+    /// As [`Self::recover_server`], anchoring the fresh lease at `now` in
+    /// the caller's clock domain (the same one `heartbeat`/`expire_leases`
+    /// use), so the rejoined server is not instantly re-expired.
+    pub fn recover_server_at(&mut self, j: usize, now: f64) -> Result<()> {
+        if j >= self.slaves.len() {
+            bail!("unknown server {j}");
+        }
+        if self.lease.is_alive(j) {
+            return Ok(());
+        }
+        self.clock += 1;
+        self.lease.mark_alive(j, now);
+        self.policy.on_capacity_change();
+        self.reallocate()?;
+        Ok(())
+    }
+
+    pub fn is_server_alive(&self, j: usize) -> bool {
+        self.lease.is_alive(j)
+    }
+
+    pub fn alive_servers(&self) -> usize {
+        self.lease.n_alive()
+    }
+
+    /// Failure → recovery accounting (lost steps, resume scales).
+    /// Timestamps are master event ticks (see the `clock` field): a
+    /// recovery completed within the same event as the failure reads
+    /// `resumed_at == failed_at`; a delayed one shows the events elapsed.
+    pub fn recovery_log(&self) -> &RecoveryLog {
+        &self.recovery_log
+    }
+
+    // ---- progress + checkpoint bookkeeping ------------------------------
+
+    /// Count `steps` BSP steps of progress on a running app — the
+    /// bookkeeping path for masters without a compute service (the DES
+    /// cross-checks and the fault tests drive this).
+    pub fn advance_steps(&mut self, id: AppId, steps: u64) -> Result<()> {
+        let app = self
+            .apps
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown app {id}"))?;
+        if app.state != AppState::Running {
+            bail!("{id} is {:?}, not Running", app.state);
+        }
+        if app.trainer.is_some() {
+            bail!("{id} has a trainer; steps advance through train_round");
+        }
+        app.steps_done += steps;
+        Ok(())
+    }
+
+    pub fn steps_of(&self, id: AppId) -> u64 {
+        self.apps.get(&id).map(|a| a.steps_done).unwrap_or(0)
+    }
+
+    /// Persist a checkpoint for one running app without killing it
+    /// (periodic checkpointing; caps what a server death can cost).
+    pub fn checkpoint_app(&mut self, id: AppId) -> Result<()> {
+        let app = self
+            .apps
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown app {id}"))?;
+        if app.state != AppState::Running {
+            bail!("{id} is {:?}, not Running", app.state);
+        }
+        save_checkpoint(&self.store, self.ckpt_retain, app)
+    }
+
+    /// [`Self::checkpoint_app`] for every running app; returns how many
+    /// were checkpointed.
+    pub fn checkpoint_all(&mut self) -> Result<usize> {
+        let ids: Vec<AppId> = self
+            .apps
+            .iter()
+            .filter(|(_, a)| a.state == AppState::Running)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &ids {
+            self.checkpoint_app(*id)?;
+        }
+        Ok(ids.len())
     }
 
     /// Containers currently held by `id` across all slaves.
@@ -163,17 +448,20 @@ impl DormMaster {
             .collect()
     }
 
-    /// Eq. 1 over the slaves' double-entry books.
+    /// Eq. 1 over the slaves' double-entry books (dead servers' capacity
+    /// has left the cluster).
     pub fn utilization(&self) -> f64 {
         let m = self.slaves.first().map(|s| s.capacity().m()).unwrap_or(0);
-        let (used, cap) = self.slaves.iter().fold(
-            (Res::zeros(m), Res::zeros(m)),
-            |(mut u, mut c), s| {
+        let (used, cap) = self
+            .slaves
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| self.lease.is_alive(*j))
+            .fold((Res::zeros(m), Res::zeros(m)), |(mut u, mut c), (_, s)| {
                 u += &s.used();
                 c += s.capacity();
                 (u, c)
-            },
-        );
+            });
         used.utilization_sum(&cap)
     }
 
@@ -182,7 +470,20 @@ impl DormMaster {
     /// master share every policy: this method is the live counterpart of
     /// the simulator's event handler.
     pub fn reallocate(&mut self) -> Result<()> {
-        let capacities: Vec<Res> = self.slaves.iter().map(|s| s.capacity().clone()).collect();
+        // a dead server contributes zero capacity but keeps its ServerId
+        // ordinate, so placements elsewhere stay stable
+        let capacities: Vec<Res> = self
+            .slaves
+            .iter()
+            .enumerate()
+            .map(|(j, s)| {
+                if self.lease.is_alive(j) {
+                    s.capacity().clone()
+                } else {
+                    Res::zeros(s.capacity().m())
+                }
+            })
+            .collect();
 
         let mut snapshot: BTreeMap<AppId, SchedApp> = BTreeMap::new();
         for app in self.apps.values() {
@@ -212,7 +513,7 @@ impl DormMaster {
 
         let update = {
             let ctx = SchedCtx {
-                now: self.next_id as f64,
+                now: self.clock as f64,
                 apps: &snapshot,
                 capacities: &capacities,
             };
@@ -227,25 +528,31 @@ impl DormMaster {
     }
 
     /// Fig. 5 steps (3)–(4): destroy/create containers, checkpoint + kill +
-    /// resume the adjusted apps, start the newly admitted ones.
+    /// resume the adjusted apps, start the newly admitted ones, restore the
+    /// degraded ones from their checkpoints.
     fn enforce(&mut self, update: AllocationUpdate) -> Result<()> {
         let adjusted: Vec<AppId> = update.adjusted.clone();
 
         // (a) checkpoint + kill adjusted apps before touching containers
+        let mut killed = 0u32;
         for id in &adjusted {
             let Some(app) = self.apps.get_mut(id) else {
                 log::warn!("policy adjusted unknown {id}; ignoring");
                 continue;
             };
-            if let Some(trainer) = &app.trainer {
-                app.state = AppState::Checkpointing;
-                trainer.checkpoint(&self.store).context("checkpoint")?;
+            if app.state == AppState::Degraded {
+                continue; // already down from a failure; nothing to save
             }
+            app.state = AppState::Checkpointing;
+            save_checkpoint(&self.store, self.ckpt_retain, app)?;
             app.trainer = None;
             app.state = AppState::Killed;
             app.adjustments += 1;
+            killed += 1;
         }
-        self.total_adjustments += adjusted.len() as u32;
+        // only apps that actually went through checkpoint+kill count
+        // toward Eq. 4 — skipped (degraded/unknown) entries did not adjust
+        self.total_adjustments += killed;
 
         // (b) diff the target assignment against the slaves' books:
         // all destroys first (shrinkers free the space), then all creates
@@ -274,7 +581,8 @@ impl DormMaster {
             }
         }
 
-        // (c) resume adjusted + start newly admitted apps
+        // (c) resume adjusted, restore degraded, start newly admitted apps
+        let now = self.clock as f64;
         let ids: Vec<AppId> = self.apps.keys().copied().collect();
         for id in ids {
             let held = self.containers_of(id);
@@ -298,6 +606,35 @@ impl DormMaster {
                         );
                     }
                     app.state = AppState::Running;
+                }
+                AppState::Degraded if held > 0 => {
+                    // failure recovery: restore from the latest checkpoint
+                    // at the newly solved scale
+                    app.state = AppState::Recovering;
+                    if let (Some((h, manifest)), Some(model)) = (&self.compute, &app.model) {
+                        let meta = manifest.model(model)?;
+                        let cfg = TrainerConfig {
+                            workers: held,
+                            ..TrainerConfig::default()
+                        };
+                        // fail_servers probed the store once; don't re-read
+                        let trainer = if app.ckpt_restorable {
+                            Trainer::resume(id, meta, h.clone(), cfg, &self.store)
+                                .context("recover")?
+                        } else {
+                            // never checkpointed: restart from step 0 (the
+                            // lost work was the whole run, already logged)
+                            Trainer::new(id, meta, h.clone(), cfg)
+                                .context("restart after failure")?
+                        };
+                        app.steps_done = trainer.current_step();
+                        app.ckpt_step = app.steps_done;
+                        app.trainer = Some(trainer);
+                    }
+                    app.state = AppState::Running;
+                    app.recoveries += 1;
+                    self.total_recoveries += 1;
+                    self.recovery_log.resumed(id, now, held);
                 }
                 AppState::Pending if held > 0 => {
                     if let (Some((h, manifest)), Some(model)) = (&self.compute, &app.model) {
@@ -325,6 +662,7 @@ impl DormMaster {
         for app in self.apps.values_mut() {
             if let Some(t) = &mut app.trainer {
                 let log = t.run(steps)?;
+                app.steps_done = log.step;
                 out.push((app.id, log.step, log.loss));
             }
         }
@@ -484,5 +822,161 @@ mod tests {
             assert!(s.used().fits_in(s.capacity()), "{}", s.name);
         }
         assert!(m.utilization() > 0.0 && m.utilization() <= 3.0);
+    }
+
+    #[test]
+    fn server_death_degrades_and_recovers_affected_apps() {
+        let mut m = master("fail");
+        let a = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 24)).unwrap();
+        assert_eq!(m.containers_of(a), 24, "spans all 4 servers");
+        m.advance_steps(a, 100).unwrap();
+        // checkpoint, then make 40 more steps of progress past it
+        m.checkpoint_app(a).unwrap();
+        m.advance_steps(a, 40).unwrap();
+        let victims = m.fail_server(0).unwrap();
+        assert_eq!(victims, vec![a]);
+        assert!(!m.is_server_alive(0));
+        assert_eq!(m.alive_servers(), 3);
+        // re-solved on the 3 remaining servers: running again, smaller
+        assert_eq!(m.app_state(a), Some(AppState::Running));
+        let held = m.containers_of(a);
+        assert!(held > 0 && held <= 18, "held {held}");
+        assert_eq!(m.slaves[0].count_for(a), 0, "nothing on the dead server");
+        // lost work = steps since the checkpoint; progress rolled back
+        assert_eq!(m.steps_of(a), 100);
+        let rec = &m.recovery_log().records()[0];
+        assert_eq!(rec.lost_work, 40.0);
+        assert_eq!(rec.resumed_scale, held);
+        assert!(rec.resumed_at.is_some());
+        assert_eq!(m.total_recoveries, 1);
+        assert_eq!(m.app(a).unwrap().recoveries, 1);
+        // the latest checkpoint is what recovery resumed from
+        let ckpt = m.store().load_latest(a).unwrap().unwrap();
+        assert_eq!(ckpt.step, 100);
+        // double kill is a no-op
+        assert!(m.fail_server(0).unwrap().is_empty());
+        // recovery of the server lets the app grow back
+        m.recover_server(0).unwrap();
+        assert_eq!(m.alive_servers(), 4);
+        assert!(m.containers_of(a) >= held);
+    }
+
+    #[test]
+    fn missed_heartbeats_expire_the_lease() {
+        let cluster = ClusterConfig::uniform(3, Res::cpu_gpu_ram(8.0, 0.0, 32.0));
+        let mut m = DormMaster::new(
+            &cluster,
+            DormConfig { theta1: 0.5, theta2: 0.5 },
+            store("lease"),
+        )
+        .with_fault(&FaultConfig { lease_timeout_hours: 1.0, ..Default::default() });
+        let a = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 12)).unwrap();
+        assert_eq!(m.containers_of(a), 12, "spans all 3 servers");
+        // servers 1 and 2 report at t=2; server 0 has gone silent
+        m.heartbeat(1, 2.0).unwrap();
+        m.heartbeat(2, 2.0).unwrap();
+        let dead = m.expire_leases(2.5).unwrap();
+        assert_eq!(dead, vec![0]);
+        assert_eq!(m.alive_servers(), 2);
+        assert_eq!(m.app_state(a), Some(AppState::Running), "recovered");
+        assert!(m.containers_of(a) <= 8, "re-solved on 2 servers");
+        assert_eq!(m.slaves[0].count_for(a), 0);
+        // a dead server's late heartbeat does not resurrect it
+        m.heartbeat(0, 3.0).unwrap();
+        assert!(!m.is_server_alive(0));
+    }
+
+    #[test]
+    fn unaffected_apps_survive_failures_untouched() {
+        use crate::baselines::StaticPolicy;
+        let cluster = ClusterConfig::uniform(3, Res::cpu_gpu_ram(16.0, 0.0, 64.0));
+        let mut m = DormMaster::with_policy(
+            &cluster,
+            Box::new(StaticPolicy::new()),
+            store("bystander"),
+        );
+        // static places each 8-wide app on one server (16 CPU / 64 GB fit)
+        let a = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 8)).unwrap();
+        let b = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 8)).unwrap();
+        let sa = m.placement_of(a).keys().next().unwrap().0;
+        let sb = m.placement_of(b).keys().next().unwrap().0;
+        assert_ne!(sa, sb, "static packs one app per server here");
+        m.fail_server(sa).unwrap();
+        assert_eq!(m.containers_of(b), 8, "bystander untouched");
+        assert_eq!(m.app(b).unwrap().recoveries, 0);
+        // the victim re-placed at its fixed width on a surviving server
+        assert_eq!(m.containers_of(a), 8);
+        assert_eq!(m.app(a).unwrap().recoveries, 1);
+        assert_eq!(m.total_adjustments, 0, "recovery is not an adjustment");
+    }
+
+    #[test]
+    fn rack_outage_expires_as_one_batch() {
+        // 3 servers, app spans all; servers 0 AND 1 go silent together:
+        // batch expiry must not bounce the app through server 1 (which
+        // would show up as a spurious second recovery cycle)
+        let cluster = ClusterConfig::uniform(3, Res::cpu_gpu_ram(8.0, 0.0, 32.0));
+        let mut m = DormMaster::new(
+            &cluster,
+            DormConfig { theta1: 0.5, theta2: 0.5 },
+            store("rack"),
+        )
+        .with_fault(&FaultConfig { lease_timeout_hours: 1.0, ..Default::default() });
+        let a = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 12)).unwrap();
+        assert_eq!(m.containers_of(a), 12, "spans all 3 servers");
+        m.heartbeat(2, 2.0).unwrap();
+        let dead = m.expire_leases(2.5).unwrap();
+        assert_eq!(dead, vec![0, 1]);
+        assert_eq!(m.alive_servers(), 1);
+        assert_eq!(m.app(a).unwrap().recoveries, 1, "exactly one recovery cycle");
+        assert_eq!(m.recovery_log().len(), 1);
+        assert_eq!(m.containers_of(a), 4, "re-solved on the lone survivor");
+        assert_eq!(m.slaves[0].count_for(a), 0);
+        assert_eq!(m.slaves[1].count_for(a), 0);
+    }
+
+    #[test]
+    fn full_outage_recovery_uses_callers_clock() {
+        let cluster = ClusterConfig::uniform(2, Res::cpu_gpu_ram(8.0, 0.0, 32.0));
+        let mut m = DormMaster::new(
+            &cluster,
+            DormConfig { theta1: 0.5, theta2: 0.5 },
+            store("outage"),
+        )
+        .with_fault(&FaultConfig { lease_timeout_hours: 1.0, ..Default::default() });
+        let a = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 8)).unwrap();
+        let dead = m.expire_leases(5.0).unwrap(); // nobody ever heartbeat
+        assert_eq!(dead, vec![0, 1]);
+        assert_eq!(m.app_state(a), Some(AppState::Degraded));
+        // rejoin at t=5: the lease must anchor at the caller's clock, not
+        // a stale renewal, or the next expiry sweep kills it right again
+        m.recover_server_at(0, 5.0).unwrap();
+        assert_eq!(m.app_state(a), Some(AppState::Running));
+        assert!(
+            m.expire_leases(5.5).unwrap().is_empty(),
+            "freshly rejoined server must stay alive"
+        );
+        assert!(m.is_server_alive(0));
+    }
+
+    #[test]
+    fn degraded_app_waits_when_nothing_fits() {
+        let cluster = ClusterConfig::uniform(2, Res::cpu_gpu_ram(8.0, 0.0, 32.0));
+        let mut m = DormMaster::new(
+            &cluster,
+            DormConfig { theta1: 0.5, theta2: 0.5 },
+            store("wait"),
+        );
+        let a = m.submit(spec(2.0, 0.0, 8.0, 1, 4, 8)).unwrap();
+        assert_eq!(m.app_state(a), Some(AppState::Running));
+        // kill both servers: nowhere to recover to
+        m.fail_server(0).unwrap();
+        m.fail_server(1).unwrap();
+        assert_eq!(m.app_state(a), Some(AppState::Degraded));
+        assert_eq!(m.containers_of(a), 0);
+        // capacity returns -> recovery completes
+        m.recover_server(0).unwrap();
+        assert_eq!(m.app_state(a), Some(AppState::Running));
+        assert!(m.containers_of(a) >= 4);
     }
 }

@@ -69,6 +69,17 @@ pub struct RunMetrics {
     /// Per-app completion durations keyed by workload index — used for the
     /// matched-pair speedup of Fig. 9a (same app under two systems).
     pub app_durations: std::collections::BTreeMap<u64, (String, f64)>,
+    /// Cumulative work lost to server failures (`crate::fault`): progress
+    /// since the last checkpoint, discarded at each server death.
+    /// Work-hours in the DES, BSP steps on the live master.
+    pub lost_work: Series,
+    /// Sampled useful-progress rate summed over apps (work-units/hour;
+    /// paused and recovering apps contribute zero).
+    pub goodput: Series,
+    /// One point per *completed* recovery — recorded once the re-placed
+    /// app's restart pause has elapsed (or it completed), value = hours
+    /// from server death until it was running again.
+    pub recovery: Series,
 }
 
 impl RunMetrics {
@@ -80,7 +91,20 @@ impl RunMetrics {
             adjustment_batch_sizes: Vec::new(),
             completions: Vec::new(),
             app_durations: std::collections::BTreeMap::new(),
+            lost_work: Series::new(format!("{name}.lost_work")),
+            goodput: Series::new(format!("{name}.goodput")),
+            recovery: Series::new(format!("{name}.recovery")),
         }
+    }
+
+    /// Mean recovery duration (hours from server death to running again);
+    /// 0 when no recovery happened.
+    pub fn mean_recovery_hours(&self) -> f64 {
+        if self.recovery.points.is_empty() {
+            return 0.0;
+        }
+        let vals: Vec<f64> = self.recovery.points.iter().map(|&(_, v)| v).collect();
+        stats::mean(&vals)
     }
 
     /// Mean duration per app tag (the Fig. 9a aggregation).

@@ -246,6 +246,13 @@ impl CmsPolicy for DormPolicy {
             adjusted: d.adjusted,
         })
     }
+
+    /// A server died or recovered (`crate::fault`): the cached decision and
+    /// the warm-start incumbent were solved against a capacity vector that
+    /// no longer exists — drop both so the next decide() is a cold solve.
+    fn on_capacity_change(&mut self) {
+        self.engine.invalidate();
+    }
 }
 
 #[cfg(test)]
@@ -320,6 +327,22 @@ mod tests {
         let d = eng.decide(&[newer.clone(), old.clone()], &capacities).unwrap();
         assert!(d.counts.contains_key(&AppId(1)), "older app admitted");
         assert!(!d.counts.contains_key(&AppId(2)), "newest deferred first");
+    }
+
+    #[test]
+    fn explicit_invalidate_forces_cold_resolve() {
+        use super::super::policy::CmsPolicy;
+        let mut pol = DormPolicy::new(DormConfig::DORM3);
+        let apps = vec![eapp(1, 2.0, 8.0, 1, 10, 0, 0.0)];
+        let capacities = caps(4, 12.0, 64.0);
+        let d1 = pol.engine.decide(&apps, &capacities).unwrap();
+        pol.on_capacity_change();
+        // identical snapshot, but the fault path dropped the cache: the
+        // engine must solve again (and reproduce the same counts)
+        let d2 = pol.engine.decide(&apps, &capacities).unwrap();
+        assert!(!d2.stats.cache_hit, "invalidate must force a re-solve");
+        assert_eq!(d1.counts, d2.counts);
+        assert_eq!(pol.engine.stats().solves, 2);
     }
 
     #[test]

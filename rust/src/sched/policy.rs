@@ -75,4 +75,20 @@ pub trait CmsPolicy {
     fn admission_latency_hours(&self) -> f64 {
         0.0
     }
+
+    /// Out-of-band capacity change (a server died or came back,
+    /// `crate::fault`): any solve state derived from the old capacity
+    /// vector — snapshot cache, warm-start incumbent — must be dropped.
+    /// Both backends (live master and DES) call this at the same points so
+    /// stateful policies stay decision-identical across them.  Default:
+    /// no-op (the baselines are stateless).
+    fn on_capacity_change(&mut self) {}
+
+    /// Multiplier on application progress under this CMS, in (0, 1].
+    /// Below 1 models per-task scheduling overhead: task-level sharing
+    /// (§II-C) pays the central manager's latency on every ~1.5 s task,
+    /// shaving throughput even though placements match the static policy.
+    fn progress_factor(&self) -> f64 {
+        1.0
+    }
 }

@@ -14,7 +14,7 @@ use crate::sched::CmsPolicy;
 
 use super::dorm_policy::DormPolicy;
 use super::perf_model::PerfModel;
-use super::runner::{run_sim, SimOutcome};
+use super::runner::SimOutcome;
 
 /// One system's results over the experiment.
 pub struct SystemRun {
@@ -66,9 +66,35 @@ impl Experiment {
     }
 
     pub fn run(&self, policy: &mut dyn CmsPolicy) -> SystemRun {
+        self.run_with_faults(policy, &[])
+    }
+
+    /// Apply a `[fault]` config to this experiment: set the periodic
+    /// checkpoint cadence on the perf model and materialize the failure
+    /// trace its model asks for (empty when `enabled = false`).  Feed the
+    /// returned trace to [`Experiment::run_with_faults`].
+    pub fn apply_fault(
+        &mut self,
+        cfg: &crate::config::FaultConfig,
+    ) -> Vec<crate::fault::FailureEvent> {
+        self.pm.ckpt_period_hours = cfg.ckpt_period_hours;
+        crate::fault::FailureModel::from_config(cfg)
+            .trace(self.cluster.servers.len(), self.sim.horizon_hours)
+    }
+
+    /// [`Experiment::run`] under an injected server-churn trace
+    /// (`crate::fault`): the same workload and cluster, with servers dying
+    /// and rejoining per `faults`.
+    pub fn run_with_faults(
+        &self,
+        policy: &mut dyn CmsPolicy,
+        faults: &[crate::fault::FailureEvent],
+    ) -> SystemRun {
         let rows = table2_rows();
         let label = policy.name();
-        let outcome = run_sim(policy, &rows, &self.workload, &self.cluster, &self.sim, &self.pm);
+        let outcome = super::runner::run_sim_faulty(
+            policy, &rows, &self.workload, &self.cluster, &self.sim, &self.pm, faults,
+        );
         SystemRun { label, outcome }
     }
 

@@ -30,6 +30,13 @@ pub struct PerfModel {
     pub ckpt_save_hours: f64,
     /// Kill + container create/destroy + resume time (hours).
     pub restart_hours: f64,
+    /// Periodic checkpoint cadence for the fault model (`crate::fault`):
+    /// every this many hours a running app's progress is persisted, capping
+    /// what a server death can cost.  0 (the default) checkpoints only on
+    /// adjustment — the bare §III-C-2 protocol, where an app that is never
+    /// adjusted loses everything on failure.  Periodic saves are modeled
+    /// as asynchronous (no pause; DESIGN.md §8).
+    pub ckpt_period_hours: f64,
 }
 
 impl Default for PerfModel {
@@ -39,6 +46,7 @@ impl Default for PerfModel {
             // 4.5 min total pause -> 5% overhead on a 3h app with 2 kills
             ckpt_save_hours: 1.5 / 60.0,
             restart_hours: 3.0 / 60.0,
+            ckpt_period_hours: 0.0,
         }
     }
 }

@@ -1,5 +1,5 @@
 //! Simulation runner: drives a [`CmsPolicy`] over a workload trace,
-//! tracking progress, adjustments and the §IV-A metrics.
+//! tracking progress, adjustments, server churn and the §IV-A metrics.
 //!
 //! The runner owns the ground truth ([`crate::cluster::ClusterState`] +
 //! per-app progress); policies only *decide* assignments, through the same
@@ -9,6 +9,18 @@
 //! applies the returned update through create/destroy diffs so the
 //! capacity invariants are checked on every event (`debug_assert` +
 //! explicit check in tests).
+//!
+//! Failure injection (`crate::fault`, DESIGN.md §8): [`run_sim_faulty`]
+//! additionally replays a churn trace.  A server death zeroes its
+//! capacity, tears down every partition it hosted (BSP cannot continue
+//! with lost workers), rolls the affected apps back to their last
+//! checkpoint — the discarded progress is the *lost work* series — and
+//! re-drives the policy against the shrunken capacity vector (stateful
+//! policies drop their solve caches via
+//! [`CmsPolicy::on_capacity_change`]).  Recovery completes when the app
+//! holds containers again and its restart pause has elapsed; the paper's
+//! checkpoint-on-adjustment plus an optional periodic cadence
+//! ([`PerfModel::ckpt_period_hours`]) decide how much work a death costs.
 
 use std::collections::BTreeMap;
 
@@ -16,6 +28,7 @@ use crate::app::AppId;
 use crate::cluster::ClusterState;
 use crate::config::{ClusterConfig, SimConfig};
 use crate::drf::{drf_allocate, fairness_loss, DrfApp};
+use crate::fault::{FailureEvent, FailureKind, LeaseTable};
 use crate::metrics::RunMetrics;
 use crate::resources::Res;
 use crate::sched::{CmsPolicy, SchedApp, SchedCtx};
@@ -46,33 +59,48 @@ pub struct SimApp {
     pub paused_until: f64,
     /// Times this app was killed+resumed (Fig. 9b bookkeeping).
     pub kills: u32,
+    /// Work completed at the last checkpoint — a server death rolls
+    /// progress back to this (§III-C-2 resumes from reliable storage).
+    pub ckpt_work: f64,
+    /// Set while the app is down from a server death (recovery pending).
+    pub failed_at: Option<f64>,
+    /// Re-placed after a failure but the restart pause has not elapsed:
+    /// (failure time, pause end).  The recovery only counts as complete —
+    /// and lands in the metrics — once the app has actually run; a second
+    /// failure during the pause reopens the original outage instead.
+    pub recovery_due: Option<(f64, f64)>,
+    /// Completed failure-recovery cycles (distinct from voluntary kills).
+    pub recoveries: u32,
     /// Completion-event version (lazy cancellation).
     pub version: u64,
     pub completed_at: Option<f64>,
 }
 
 impl SimApp {
-    /// Settle progress up to `now` given the perf model.
-    fn settle(&mut self, now: f64, pm: &PerfModel) {
-        let start = self.last_settle.max(self.paused_until.min(now));
+    fn work_done(&self) -> f64 {
+        self.work_total - self.work_remaining
+    }
+
+    /// Settle progress up to `now` given the perf model and the policy's
+    /// progress factor.
+    fn settle(&mut self, now: f64, pm: &PerfModel, pf: f64) {
         // active interval is [max(last_settle, paused_until), now]
         let active_from = self.last_settle.max(self.paused_until);
         if now > active_from && self.containers > 0 {
             let dt = now - active_from;
             self.work_remaining =
-                (self.work_remaining - dt * pm.speed(self.containers)).max(0.0);
+                (self.work_remaining - dt * pf * pm.speed(self.containers)).max(0.0);
         }
-        let _ = start;
         self.last_settle = now;
     }
 
     /// Absolute completion time if the allocation stays as-is.
-    fn eta(&self, now: f64, pm: &PerfModel) -> Option<f64> {
+    fn eta(&self, now: f64, pm: &PerfModel, pf: f64) -> Option<f64> {
         if self.containers == 0 {
             return None;
         }
         let start = now.max(self.paused_until);
-        Some(start + self.work_remaining / pm.speed(self.containers))
+        Some(start + self.work_remaining / (pf * pm.speed(self.containers)))
     }
 }
 
@@ -81,6 +109,12 @@ enum Event {
     Arrival(usize),
     Completion { app: AppId, version: u64 },
     Sample,
+    /// Server dies: capacity + hosted partitions lost (`crate::fault`).
+    ServerFail(usize),
+    /// Server rejoins empty with its original capacity.
+    ServerRecover(usize),
+    /// Periodic checkpoint tick ([`PerfModel::ckpt_period_hours`]).
+    CkptTick,
 }
 
 /// Everything a run produces.
@@ -92,7 +126,8 @@ pub struct SimOutcome {
     pub completed: usize,
 }
 
-/// Run `policy` over `workload` on `cluster_cfg` for `sim.horizon_hours`.
+/// Run `policy` over `workload` on `cluster_cfg` for `sim.horizon_hours`
+/// with no server churn (the paper's assumption).
 pub fn run_sim(
     policy: &mut dyn CmsPolicy,
     rows: &[Table2Row],
@@ -101,12 +136,30 @@ pub fn run_sim(
     sim: &SimConfig,
     pm: &PerfModel,
 ) -> SimOutcome {
+    run_sim_faulty(policy, rows, workload, cluster_cfg, sim, pm, &[])
+}
+
+/// [`run_sim`] plus an injected failure trace (see module docs).
+pub fn run_sim_faulty(
+    policy: &mut dyn CmsPolicy,
+    rows: &[Table2Row],
+    workload: &[WorkloadApp],
+    cluster_cfg: &ClusterConfig,
+    sim: &SimConfig,
+    pm: &PerfModel,
+    faults: &[FailureEvent],
+) -> SimOutcome {
     let mut cluster = ClusterState::new(cluster_cfg);
+    let saved_caps: Vec<Res> = cluster.servers.iter().map(|s| s.capacity.clone()).collect();
+    // the DES drives deaths by injected events, not missed heartbeats
+    let mut lease = LeaseTable::new(cluster.servers.len(), f64::INFINITY);
+    let pf = policy.progress_factor();
     let mut metrics = RunMetrics::new(&policy.name());
     let mut q: EventQueue<Event> = EventQueue::new();
     let mut apps: BTreeMap<AppId, SimApp> = BTreeMap::new();
     let mut done: BTreeMap<AppId, SimApp> = BTreeMap::new();
     let mut total_adjusted = 0u32;
+    let mut lost_work = 0.0f64;
 
     for (i, w) in workload.iter().enumerate() {
         if w.submit_hours <= sim.horizon_hours {
@@ -114,6 +167,18 @@ pub fn run_sim(
         }
     }
     q.schedule(0.0, Event::Sample);
+    for f in faults {
+        if f.server < cluster.servers.len() && f.time <= sim.horizon_hours {
+            let ev = match f.kind {
+                FailureKind::Kill => Event::ServerFail(f.server),
+                FailureKind::Recover => Event::ServerRecover(f.server),
+            };
+            q.schedule(f.time, ev);
+        }
+    }
+    if pm.ckpt_period_hours > 0.0 {
+        q.schedule(pm.ckpt_period_hours, Event::CkptTick);
+    }
 
     while let Some(ev) = q.pop() {
         let now = ev.time;
@@ -141,22 +206,32 @@ pub fn run_sim(
                     last_settle: now,
                     paused_until: now + policy.admission_latency_hours(),
                     kills: 0,
+                    ckpt_work: 0.0,
+                    failed_at: None,
+                    recovery_due: None,
+                    recoveries: 0,
                     version: 0,
                     completed_at: None,
                 };
                 cluster.register_app(id, app.demand.clone());
                 apps.insert(id, app);
-                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm,
+                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
                            &mut metrics, &mut total_adjusted);
-                sample(&mut metrics, now, &apps, &cluster, total_adjusted);
+                sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
             }
             Event::Completion { app: id, version } => {
                 let Some(app) = apps.get_mut(&id) else { continue };
                 if app.version != version {
                     continue; // stale event
                 }
-                app.settle(now, pm);
+                app.settle(now, pm, pf);
                 debug_assert!(app.work_remaining <= 1e-6, "{}", app.work_remaining);
+                // completing implies the restart pause elapsed: close any
+                // recovery still pending its pause
+                if let Some((t0, due)) = app.recovery_due.take() {
+                    metrics.recovery.push(now, due - t0);
+                    app.recoveries += 1;
+                }
                 app.completed_at = Some(now);
                 metrics
                     .completions
@@ -167,15 +242,91 @@ pub fn run_sim(
                 let finished = apps.remove(&id).unwrap();
                 cluster.remove_app(id);
                 done.insert(id, finished);
-                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm,
+                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
                            &mut metrics, &mut total_adjusted);
-                sample(&mut metrics, now, &apps, &cluster, total_adjusted);
+                sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
             }
             Event::Sample => {
-                sample(&mut metrics, now, &apps, &cluster, total_adjusted);
+                sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
                 let next = now + sim.sample_period_min / 60.0;
                 if next <= sim.horizon_hours {
                     q.schedule(next, Event::Sample);
+                }
+            }
+            Event::ServerFail(j) => {
+                if !lease.is_alive(j) {
+                    continue; // double kill in the trace
+                }
+                for app in apps.values_mut() {
+                    app.settle(now, pm, pf);
+                }
+                lease.mark_dead(j);
+                // every partition with a container on j is broken: reclaim
+                // it everywhere and roll the app back to its checkpoint
+                let victims: Vec<AppId> =
+                    cluster.servers[j].containers.keys().copied().collect();
+                for id in &victims {
+                    let placement = cluster.placement_of(*id);
+                    for (&sid, &cnt) in &placement {
+                        cluster
+                            .destroy_containers(*id, sid, cnt)
+                            .expect("destroy within bookkeeping");
+                    }
+                    let app = apps.get_mut(id).expect("victim is active");
+                    lost_work += (app.work_done() - app.ckpt_work).max(0.0);
+                    app.work_remaining = app.work_total - app.ckpt_work;
+                    app.containers = 0;
+                    app.version += 1; // cancel any in-flight completion
+                    if let Some((t0, due)) = app.recovery_due.take() {
+                        if now < due {
+                            // re-placed but never ran: that recovery never
+                            // completed — the original outage continues
+                            app.failed_at = Some(t0);
+                        } else {
+                            // the pause elapsed while it ran, the cycle
+                            // just was never closed by an intervening
+                            // event: record it, then open a fresh outage
+                            metrics.recovery.push(now, due - t0);
+                            app.recoveries += 1;
+                            app.failed_at = Some(now);
+                        }
+                    } else if app.failed_at.is_none() {
+                        app.failed_at = Some(now);
+                    }
+                    // the restart penalty is charged when the app is
+                    // re-placed (see reallocate); while down it simply
+                    // holds no containers and makes no progress
+                }
+                cluster.servers[j].capacity = Res::zeros(saved_caps[j].m());
+                policy.on_capacity_change();
+                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                           &mut metrics, &mut total_adjusted);
+                sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
+            }
+            Event::ServerRecover(j) => {
+                if lease.is_alive(j) {
+                    continue; // double recover in the trace
+                }
+                for app in apps.values_mut() {
+                    app.settle(now, pm, pf);
+                }
+                lease.mark_alive(j, now);
+                cluster.servers[j].capacity = saved_caps[j].clone();
+                policy.on_capacity_change();
+                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                           &mut metrics, &mut total_adjusted);
+                sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
+            }
+            Event::CkptTick => {
+                for app in apps.values_mut() {
+                    app.settle(now, pm, pf);
+                    if app.containers > 0 && now >= app.paused_until {
+                        app.ckpt_work = app.work_done();
+                    }
+                }
+                let next = now + pm.ckpt_period_hours;
+                if next <= sim.horizon_hours {
+                    q.schedule(next, Event::CkptTick);
                 }
             }
         }
@@ -199,12 +350,13 @@ fn reallocate(
     q: &mut EventQueue<Event>,
     now: f64,
     pm: &PerfModel,
+    pf: f64,
     metrics: &mut RunMetrics,
     total_adjusted: &mut u32,
 ) {
     // settle everyone before the allocation changes
     for app in apps.values_mut() {
-        app.settle(now, pm);
+        app.settle(now, pm, pf);
     }
     // snapshot into the backend-neutral view the live master also produces
     let snapshot: BTreeMap<AppId, SchedApp> = apps
@@ -266,10 +418,12 @@ fn reallocate(
         }
     }
 
-    // pauses + reschedules
+    // pauses + reschedules; adjusted apps checkpoint before the kill
+    // (§III-C-2: save -> kill -> resume), so an adjustment loses nothing
     let adjusted: Vec<AppId> = update.adjusted.clone();
     for id in &adjusted {
         if let Some(app) = apps.get_mut(id) {
+            app.ckpt_work = app.work_done();
             app.paused_until = now + pm.adjust_pause_hours();
             app.kills += 1;
         }
@@ -278,22 +432,56 @@ fn reallocate(
         *total_adjusted += adjusted.len() as u32;
         metrics.adjustment_batch_sizes.push(adjusted.len() as u32);
     }
+    // a failed app re-placed by this decision pays the restart pause
+    // (kill already happened; no save — the checkpoint predates the
+    // failure); the recovery completes — and is recorded — only once
+    // that pause has elapsed, so a death during the pause cannot leave a
+    // phantom "completed" recovery behind
+    for app in apps.values_mut() {
+        if let Some(t0) = app.failed_at {
+            if app.containers > 0 {
+                app.paused_until = (now + pm.restart_hours).max(app.paused_until);
+                app.failed_at = None;
+                app.recovery_due = Some((t0, app.paused_until));
+            }
+        }
+        match app.recovery_due {
+            // pause elapsed while it held containers: it ran — complete
+            // (even if this very solve just deferred it again)
+            Some((t0, due)) if now >= due => {
+                metrics.recovery.push(now, due - t0);
+                app.recoveries += 1;
+                app.recovery_due = None;
+            }
+            // stripped back to zero containers before the pause ended:
+            // it never ran, so the original outage continues
+            Some((t0, _)) if app.containers == 0 => {
+                app.recovery_due = None;
+                app.failed_at = Some(t0);
+            }
+            _ => {}
+        }
+    }
     for app in apps.values_mut() {
         app.version += 1;
-        if let Some(eta) = app.eta(now, pm) {
+        if let Some(eta) = app.eta(now, pm, pf) {
             q.schedule(eta, Event::Completion { app: app.id, version: app.version });
         }
     }
     debug_assert!(cluster.check_invariants().is_ok());
 }
 
-/// Record the §IV-A metrics at `now`.
+/// Record the §IV-A metrics (+ the fault series) at `now`.
+#[allow(clippy::too_many_arguments)]
 fn sample(
     metrics: &mut RunMetrics,
     now: f64,
     apps: &BTreeMap<AppId, SimApp>,
     cluster: &ClusterState,
     total_adjusted: u32,
+    lost_work: f64,
+    pm: &PerfModel,
+    pf: f64,
 ) {
     metrics.utilization.push(now, cluster.utilization());
     // fairness loss (Eq. 2) over the active set
@@ -318,12 +506,20 @@ fn sample(
         .collect();
     metrics.fairness_loss.push(now, fairness_loss(&actual, &shat));
     metrics.adjustments.push(now, total_adjusted as f64);
+    metrics.lost_work.push(now, lost_work);
+    let goodput: f64 = apps
+        .values()
+        .filter(|a| a.containers > 0 && now >= a.paused_until)
+        .map(|a| pf * pm.speed(a.containers))
+        .sum();
+    metrics.goodput.push(now, goodput);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::baselines::StaticPolicy;
+    use crate::fault::FailureEvent;
     use crate::workload::{table2_rows, WorkloadGen};
     use crate::util::Rng;
 
@@ -372,5 +568,72 @@ mod tests {
 
     fn pm_fast() -> PerfModel {
         PerfModel::default()
+    }
+
+    /// Single app on a 2-server cluster, periodic checkpoints every 0.5 h,
+    /// server 0 dies at t = 0.75: the app loses exactly the work done in
+    /// [0.5, 0.75], recovers on server 1, and still completes.
+    #[test]
+    fn server_death_loses_work_since_checkpoint() {
+        let rows = table2_rows();
+        // LR: 8 containers of <2 CPU, 0 GPU, 8 GB>; one server can host it
+        let wl = vec![WorkloadApp {
+            row: 0,
+            tag: "LR".into(),
+            submit_hours: 0.0,
+            duration_at_baseline_hours: 1.0,
+            baseline_n: 8,
+        }];
+        let cfg = ClusterConfig::uniform(
+            2,
+            crate::resources::Res::cpu_gpu_ram(16.0, 0.0, 64.0),
+        );
+        let sim = SimConfig { horizon_hours: 8.0, ..Default::default() };
+        let pm = PerfModel { ckpt_period_hours: 0.5, ..Default::default() };
+        let faults = vec![FailureEvent::kill(0.75, 0)];
+        let mut pol = StaticPolicy::new();
+        let out = run_sim_faulty(&mut pol, &rows, &wl, &cfg, &sim, &pm, &faults);
+        assert_eq!(out.completed, 1);
+        let app = out.apps.values().next().unwrap();
+        let lost = out.metrics.lost_work.last().unwrap();
+        if app.recoveries == 1 {
+            // the app sat on server 0 and was rolled back 0.25 h of progress
+            let expect = 0.25 * pm.speed(8);
+            assert!((lost - expect).abs() < 1e-6, "lost {lost} vs {expect}");
+            let dur = out.metrics.completions[0].1;
+            // 1 h of work + 0.25 h redone + restart pause
+            let expect_dur = 1.0 + 0.25 + pm.restart_hours;
+            assert!((dur - expect_dur).abs() < 1e-6, "dur {dur} vs {expect_dur}");
+            assert_eq!(out.metrics.recovery.points.len(), 1);
+            let (_, rec) = out.metrics.recovery.points[0];
+            assert!((rec - pm.restart_hours).abs() < 1e-9, "recovery {rec}");
+        } else {
+            // placement put the app on server 1: the death must be free
+            assert_eq!(app.recoveries, 0);
+            assert_eq!(lost, 0.0);
+            let dur = out.metrics.completions[0].1;
+            assert!((dur - 1.0).abs() < 1e-6, "{dur}");
+        }
+    }
+
+    /// A death and recovery with no apps on the dead server must not
+    /// disturb anyone; goodput tracks running width.
+    #[test]
+    fn unrelated_failures_are_free() {
+        let (rows, wl) = tiny_workload();
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 12.0, ..Default::default() };
+        let pm = PerfModel::default();
+        // server 19 carries nothing under best-fit-decreasing for this load
+        let faults = vec![FailureEvent::kill(0.1, 19), FailureEvent::recover(1.0, 19)];
+        let mut pol = StaticPolicy::new();
+        let out = run_sim_faulty(&mut pol, &rows, &wl, &cfg, &sim, &pm, &faults);
+        assert_eq!(out.completed, 2);
+        assert!(out.metrics.goodput.max() > 0.0);
+        for app in out.apps.values() {
+            if app.recoveries == 0 {
+                assert!(app.failed_at.is_none());
+            }
+        }
     }
 }

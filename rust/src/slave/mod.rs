@@ -28,6 +28,21 @@ pub struct Container {
     pub demand: Res,
 }
 
+/// One heartbeat's payload (§III-A-2): what a slave would ship to the
+/// master each reporting period over a networked transport (ROADMAP open
+/// item).  The in-process master needs only the heartbeat's *arrival* —
+/// `DormMaster::heartbeat` renews the liveness lease without
+/// materializing a report — so today this type is the wire-format
+/// scaffolding, not a consumed message.
+#[derive(Clone, Debug)]
+pub struct SlaveReport {
+    pub name: String,
+    pub capacity: Res,
+    pub available: Res,
+    /// Containers per app currently hosted (the slave's xᵢⱼ column).
+    pub containers: BTreeMap<AppId, u32>,
+}
+
 /// The per-server agent.
 #[derive(Clone, Debug)]
 pub struct DormSlave {
@@ -128,6 +143,18 @@ impl DormSlave {
         }
         out
     }
+
+    /// Build the §III-A-2 heartbeat payload (see [`SlaveReport`] — wire
+    /// scaffolding for a networked control plane; the in-process
+    /// `DormMaster::heartbeat` renews the lease without one).
+    pub fn report(&self) -> SlaveReport {
+        SlaveReport {
+            name: self.name.clone(),
+            capacity: self.capacity.clone(),
+            available: self.available(),
+            containers: self.inventory(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +216,18 @@ mod tests {
         s.destroy(AppId(1), 2).unwrap();
         let b = s.create(AppId(1), &d, 2).unwrap();
         assert!(a.iter().all(|id| !b.contains(id)));
+    }
+
+    #[test]
+    fn heartbeat_report_reflects_books() {
+        let mut s = slave();
+        let d = Res::cpu_gpu_ram(2.0, 0.0, 8.0);
+        s.create(AppId(3), &d, 2).unwrap();
+        let r = s.report();
+        assert_eq!(r.name, "s0");
+        assert_eq!(r.capacity, Res::cpu_gpu_ram(12.0, 1.0, 128.0));
+        assert_eq!(r.available, Res::cpu_gpu_ram(8.0, 1.0, 112.0));
+        assert_eq!(r.containers[&AppId(3)], 2);
     }
 
     #[test]

@@ -1,0 +1,426 @@
+//! Fault-subsystem integration: master↔sim recovery parity and
+//! checkpoint-driven recovery semantics (`crate::fault`, DESIGN.md §8).
+//!
+//! The key invariant extends `tests/parity.rs` to server churn: on one
+//! scripted failure trace, the live `DormMaster` (driven through
+//! `fail_server`/`recover_server`) and the DES (`run_sim_faulty`) must
+//! produce the *same allocation/recovery sequence* event by event — both
+//! run the shared `sched::AllocationEngine`, both reclaim a dead server's
+//! capacity the same way, and both drop the engine's capacity-derived
+//! caches at the same points (`CmsPolicy::on_capacity_change`).
+
+use std::collections::BTreeMap;
+
+use dorm::app::{AppId, AppSpec, AppState, CheckpointStore, Engine};
+use dorm::config::{ClusterConfig, DormConfig, SimConfig};
+use dorm::fault::{FailureEvent, FailureModel};
+use dorm::master::DormMaster;
+use dorm::resources::Res;
+use dorm::sched::{AllocationUpdate, CmsPolicy, DormPolicy, SchedCtx};
+use dorm::sim::{run_sim_faulty, PerfModel};
+use dorm::workload::{Table2Row, WorkloadApp};
+
+/// One synthetic application type, shared by both backends.
+struct Spec {
+    demand: Res,
+    weight: u32,
+    n_min: u32,
+    n_max: u32,
+    submit_hours: f64,
+    duration_at_baseline_hours: f64,
+}
+
+fn trace() -> Vec<Spec> {
+    vec![
+        // grabs the whole cluster, then shrinks as others arrive
+        Spec {
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+            weight: 1,
+            n_min: 1,
+            n_max: 24,
+            submit_hours: 0.0,
+            duration_at_baseline_hours: 1.0,
+        },
+        Spec {
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 6.0),
+            weight: 2,
+            n_min: 1,
+            n_max: 24,
+            submit_hours: 0.3,
+            duration_at_baseline_hours: 2.0,
+        },
+        Spec {
+            demand: Res::cpu_gpu_ram(4.0, 0.0, 6.0),
+            weight: 1,
+            n_min: 1,
+            n_max: 8,
+            submit_hours: 0.7,
+            duration_at_baseline_hours: 1.5,
+        },
+    ]
+}
+
+/// Server 0 dies mid-run (while partitions are spread over the whole
+/// cluster) and rejoins later.
+fn failures() -> Vec<FailureEvent> {
+    vec![FailureEvent::kill(1.1, 0), FailureEvent::recover(2.5, 0)]
+}
+
+fn cluster() -> ClusterConfig {
+    ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0))
+}
+
+const CFG: DormConfig = DormConfig { theta1: 0.3, theta2: 0.34 };
+
+fn store(tag: &str) -> CheckpointStore {
+    let d = std::env::temp_dir().join(format!("dorm_fault_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    CheckpointStore::new(d).unwrap()
+}
+
+/// Wraps the shared policy and records, after every event, the decided
+/// container count of every active app (current count when the policy
+/// keeps allocations).  Forwards the capacity-change hook — the DES side
+/// must drop the engine caches exactly where the live master does.
+struct Recording {
+    inner: DormPolicy,
+    log: Vec<BTreeMap<AppId, u32>>,
+}
+
+impl CmsPolicy for Recording {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn on_change(&mut self, ctx: &SchedCtx) -> Option<AllocationUpdate> {
+        let update = self.inner.on_change(ctx);
+        let counts: BTreeMap<AppId, u32> = ctx
+            .apps
+            .values()
+            .map(|a| {
+                let c = match &update {
+                    Some(u) => u
+                        .assignment
+                        .get(&a.id)
+                        .map(|row| row.values().sum())
+                        .unwrap_or(0),
+                    None => a.containers,
+                };
+                (a.id, c)
+            })
+            .collect();
+        self.log.push(counts);
+        update
+    }
+
+    fn on_capacity_change(&mut self) {
+        self.inner.on_capacity_change();
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    Arrival(usize),
+    Completion(usize),
+    Kill(usize),
+    Recover(usize),
+}
+
+#[test]
+fn master_and_sim_replay_identical_recovery_sequences() {
+    let specs = trace();
+    let faults = failures();
+
+    // ---- DES side -------------------------------------------------------
+    let rows: Vec<Table2Row> = specs
+        .iter()
+        .map(|s| Table2Row {
+            engine: Engine::MxNet,
+            dataset: "synthetic",
+            model: "fault",
+            demand: s.demand.clone(),
+            weight: s.weight,
+            n_max: s.n_max,
+            n_min: s.n_min,
+            num: 1,
+            baseline_containers: 8,
+            duration_median_hours: s.duration_at_baseline_hours,
+        })
+        .collect();
+    let workload: Vec<WorkloadApp> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| WorkloadApp {
+            row: i,
+            tag: format!("app{i}"),
+            submit_hours: s.submit_hours,
+            duration_at_baseline_hours: s.duration_at_baseline_hours,
+            baseline_n: 8,
+        })
+        .collect();
+    let sim = SimConfig { horizon_hours: 24.0, ..Default::default() };
+    let mut pol = Recording { inner: DormPolicy::new(CFG), log: Vec::new() };
+    let out = run_sim_faulty(
+        &mut pol,
+        &rows,
+        &workload,
+        &cluster(),
+        &sim,
+        &PerfModel::default(),
+        &faults,
+    );
+    assert_eq!(out.completed, specs.len(), "trace must fully drain");
+
+    // reconstruct the event order the DES processed: arrivals at their
+    // submission times, completions at their simulated times, churn at the
+    // scripted times
+    let mut events: Vec<(f64, Ev)> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.submit_hours, Ev::Arrival(i)))
+        .collect();
+    for (id, app) in &out.apps {
+        let t = app.completed_at.expect("all apps completed");
+        events.push((t, Ev::Completion(id.0 as usize)));
+    }
+    for f in &faults {
+        let ev = match f.kind {
+            dorm::fault::FailureKind::Kill => Ev::Kill(f.server),
+            dorm::fault::FailureKind::Recover => Ev::Recover(f.server),
+        };
+        events.push((f.time, ev));
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    assert_eq!(pol.log.len(), events.len(), "one decision per event");
+
+    // sim allocation sequence, by workload index
+    let sim_seq: Vec<Vec<u32>> = pol
+        .log
+        .iter()
+        .map(|m| {
+            (0..specs.len())
+                .map(|i| m.get(&AppId(i as u64)).copied().unwrap_or(0))
+                .collect()
+        })
+        .collect();
+
+    // the failure actually hit someone: at least one app went through a
+    // recovery cycle in the DES
+    let sim_victims: Vec<u64> = out
+        .apps
+        .values()
+        .filter(|a| a.recoveries > 0)
+        .map(|a| a.id.0)
+        .collect();
+    assert!(!sim_victims.is_empty(), "kill at t=1.1 must break a partition");
+    assert!(
+        out.metrics.lost_work.last().unwrap_or(0.0) >= 0.0
+            && !out.metrics.recovery.points.is_empty(),
+        "fault metrics must be emitted"
+    );
+
+    // ---- live-master side ----------------------------------------------
+    let mut master = DormMaster::new(&cluster(), CFG, store("parity"));
+    let mut ids: BTreeMap<usize, AppId> = BTreeMap::new();
+    let mut master_seq: Vec<Vec<u32>> = Vec::new();
+    for &(_, ev) in &events {
+        match ev {
+            Ev::Arrival(i) => {
+                let s = &specs[i];
+                let id = master
+                    .submit(AppSpec {
+                        executor: Engine::MxNet,
+                        demand: s.demand.clone(),
+                        weight: s.weight,
+                        n_max: s.n_max,
+                        n_min: s.n_min,
+                        cmd: ["fault".into(), "fault".into()],
+                    })
+                    .unwrap();
+                ids.insert(i, id);
+            }
+            Ev::Completion(i) => {
+                master.complete(ids[&i]).unwrap();
+            }
+            Ev::Kill(j) => {
+                master.fail_server(j).unwrap();
+            }
+            Ev::Recover(j) => {
+                master.recover_server(j).unwrap();
+            }
+        }
+        master_seq.push(
+            (0..specs.len())
+                .map(|i| ids.get(&i).map(|&id| master.containers_of(id)).unwrap_or(0))
+                .collect(),
+        );
+    }
+
+    // ---- the invariant --------------------------------------------------
+    assert_eq!(
+        sim_seq, master_seq,
+        "live master and DES must produce identical allocation/recovery \
+         sequences\nevents: {events:?}"
+    );
+
+    // both backends agree on who a server death affected
+    let master_victims: Vec<u64> = (0..specs.len())
+        .filter(|i| master.app(ids[i]).map_or(0, |a| a.recoveries) > 0)
+        .map(|i| ids[&i].0 - 1) // master ids are 1-based submission order
+        .collect();
+    assert_eq!(master_victims, sim_victims, "same apps recovered");
+    assert_eq!(
+        master.recovery_log().len(),
+        master_victims.len(),
+        "one recovery record per victim"
+    );
+    // nothing may sit on the dead server between kill and recover
+    assert!(master.total_recoveries >= 1);
+}
+
+/// Acceptance: an app affected by a server death resumes from its latest
+/// checkpoint at the newly solved scale, and the reported lost work is
+/// exactly the steps since that checkpoint.
+#[test]
+fn recovery_resumes_from_latest_checkpoint_with_exact_lost_work() {
+    let mut master = DormMaster::new(&cluster(), CFG, store("lostwork"));
+    let a = master
+        .submit(AppSpec {
+            executor: Engine::MxNet,
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+            weight: 1,
+            n_max: 24,
+            n_min: 1,
+            cmd: ["fault".into(), "fault".into()],
+        })
+        .unwrap();
+    assert_eq!(master.containers_of(a), 24, "lone app spans the cluster");
+
+    master.advance_steps(a, 500).unwrap();
+    master.checkpoint_app(a).unwrap();
+    master.advance_steps(a, 123).unwrap(); // work that the failure will eat
+
+    let victims = master.fail_server(0).unwrap();
+    assert_eq!(victims, vec![a]);
+
+    // resumed from the latest checkpoint ...
+    let ckpt = master.store().load_latest(a).unwrap().unwrap();
+    assert_eq!(ckpt.step, 500);
+    assert_eq!(master.steps_of(a), 500, "progress rolled back to the checkpoint");
+    assert_eq!(master.app_state(a), Some(AppState::Running));
+
+    // ... at the newly solved scale (3 servers x 12 CPU / 2 CPU demand)
+    let held = master.containers_of(a);
+    assert_eq!(held, 18, "re-solved scale on the shrunken cluster");
+    let rec = &master.recovery_log().records()[0];
+    assert_eq!(rec.resumed_scale, held);
+    assert_eq!(rec.server, 0);
+
+    // ... and lost work == steps since the checkpoint
+    assert_eq!(rec.lost_work, 123.0);
+    assert_eq!(master.recovery_log().total_lost_work(), 123.0);
+}
+
+/// When the latest checkpoint file is corrupt on disk, failure rollback
+/// must land on the newest *restorable* snapshot and the lost-work report
+/// must charge the extra distance — the cursor alone is not the truth.
+#[test]
+fn corrupt_checkpoint_rolls_recovery_back_to_previous_good() {
+    let mut master = DormMaster::new(&cluster(), CFG, store("corrupt_roll"));
+    let a = master
+        .submit(AppSpec {
+            executor: Engine::MxNet,
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+            weight: 1,
+            n_max: 24,
+            n_min: 1,
+            cmd: ["fault".into(), "fault".into()],
+        })
+        .unwrap();
+    master.advance_steps(a, 100).unwrap();
+    master.checkpoint_app(a).unwrap(); // step 100, stays good
+    master.advance_steps(a, 100).unwrap();
+    master.checkpoint_app(a).unwrap(); // step 200, about to rot
+    master.advance_steps(a, 50).unwrap(); // steps_done = 250
+
+    // corrupt the newest checkpoint file
+    let files = master.store().files_of(a).unwrap();
+    let newest = files.last().unwrap();
+    let mut bytes = std::fs::read(newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x5A;
+    std::fs::write(newest, bytes).unwrap();
+
+    let victims = master.fail_server(0).unwrap();
+    assert_eq!(victims, vec![a]);
+    assert_eq!(
+        master.steps_of(a),
+        100,
+        "rolled back to the newest GOOD snapshot, not the corrupt cursor"
+    );
+    assert_eq!(master.recovery_log().records()[0].lost_work, 150.0);
+    assert_eq!(master.app_state(a), Some(AppState::Running));
+    // and what load_latest restores agrees with the rolled-back cursor
+    assert_eq!(master.store().load_latest(a).unwrap().unwrap().step, 100);
+}
+
+/// A scripted exponential model and the scripted trace drive the same
+/// machinery: the DES under generated churn keeps its invariants and
+/// emits the recovery metrics.
+#[test]
+fn generated_churn_trace_drives_the_sim() {
+    let specs = trace();
+    let rows: Vec<Table2Row> = specs
+        .iter()
+        .map(|s| Table2Row {
+            engine: Engine::MxNet,
+            dataset: "synthetic",
+            model: "fault",
+            demand: s.demand.clone(),
+            weight: s.weight,
+            n_max: s.n_max,
+            n_min: s.n_min,
+            num: 1,
+            baseline_containers: 8,
+            duration_median_hours: s.duration_at_baseline_hours,
+        })
+        .collect();
+    let workload: Vec<WorkloadApp> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| WorkloadApp {
+            row: i,
+            tag: format!("app{i}"),
+            submit_hours: s.submit_hours,
+            duration_at_baseline_hours: s.duration_at_baseline_hours,
+            baseline_n: 8,
+        })
+        .collect();
+    let model = FailureModel::Exponential { mtbf_hours: 3.0, mttr_hours: 0.5, seed: 41 };
+    let faults = model.trace(4, 24.0);
+    assert!(!faults.is_empty());
+    let sim = SimConfig { horizon_hours: 24.0, ..Default::default() };
+    let mut pol = DormPolicy::new(CFG);
+    let out = run_sim_faulty(
+        &mut pol,
+        &rows,
+        &workload,
+        &cluster(),
+        &sim,
+        &PerfModel { ckpt_period_hours: 0.25, ..Default::default() },
+        &faults,
+    );
+    // under 3h-MTBF churn with periodic checkpoints the workload still
+    // drains (24h horizon vs ~4.5h of work)
+    assert!(out.completed >= 2, "completed {}", out.completed);
+    assert!(out.metrics.utilization.max() <= 3.0 + 1e-9);
+    let lost = out.metrics.lost_work.last().unwrap_or(0.0);
+    assert!(lost >= 0.0);
+    for app in out.apps.values() {
+        assert!(
+            app.work_remaining >= 0.0 && app.work_remaining.is_finite(),
+            "work_remaining went bad: {}",
+            app.work_remaining
+        );
+    }
+}

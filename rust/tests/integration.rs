@@ -105,6 +105,64 @@ fn corrupted_checkpoint_falls_back() {
     assert_eq!(got.params[0], 1.0);
 }
 
+/// A checkpoint truncated mid-write (crash before the tail was flushed)
+/// must be rejected and recovery must fall back to the previous good
+/// snapshot — same guarantee as digest corruption, different failure mode.
+#[test]
+fn truncated_checkpoint_falls_back() {
+    let st = store("truncated");
+    let ck = |step: u64, v: f32| Checkpoint {
+        app: AppId(12),
+        step,
+        model: "lr".into(),
+        loss: 0.5,
+        params: vec![v; 65],
+    };
+    st.save(&ck(1, 1.0)).unwrap();
+    let p2 = st.save(&ck(2, 2.0)).unwrap();
+    // truncate the newest file: drop the digest and half the params
+    let bytes = std::fs::read(&p2).unwrap();
+    std::fs::write(&p2, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(Checkpoint::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    let got = st.load_latest(AppId(12)).unwrap().unwrap();
+    assert_eq!(got.step, 1, "recovery must use the previous good snapshot");
+    assert_eq!(got.params[0], 1.0);
+
+    // degenerate truncations: empty and shorter-than-header files
+    let p3 = st.save(&ck(3, 3.0)).unwrap();
+    std::fs::write(&p3, b"").unwrap();
+    assert_eq!(st.load_latest(AppId(12)).unwrap().unwrap().step, 1);
+    std::fs::write(&p3, b"DORM").unwrap();
+    assert_eq!(st.load_latest(AppId(12)).unwrap().unwrap().step, 1);
+}
+
+/// Bad-digest checkpoints must not survive retention either: pruning keeps
+/// the newest good snapshot, so corruption + pruning still recovers.
+#[test]
+fn corrupt_checkpoint_rejected_even_after_pruning() {
+    let st = store("corrupt_prune");
+    let ck = |step: u64, v: f32| Checkpoint {
+        app: AppId(13),
+        step,
+        model: "lr".into(),
+        loss: 0.5,
+        params: vec![v; 33],
+    };
+    st.save(&ck(1, 1.0)).unwrap();
+    st.save(&ck(2, 2.0)).unwrap();
+    let p3 = st.save(&ck(3, 3.0)).unwrap();
+    // flip one digest byte of the newest
+    let mut bytes = std::fs::read(&p3).unwrap();
+    let n = bytes.len();
+    bytes[n - 1] ^= 0x01;
+    std::fs::write(&p3, bytes).unwrap();
+    // retention to 1 file: the newest good snapshot (step 2) must survive
+    st.prune(AppId(13), 1).unwrap();
+    let got = st.load_latest(AppId(13)).unwrap().unwrap();
+    assert_eq!(got.step, 2);
+    assert_eq!(got.params[0], 2.0);
+}
+
 /// Slave failure injection: removing a slave's capacity mid-run must not
 /// break the master's books (apps on other slaves unaffected).
 #[test]
