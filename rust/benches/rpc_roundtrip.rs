@@ -1,0 +1,115 @@
+//! Control-plane RPC round-trip latency: `LocalTransport` vs
+//! `TcpTransport` over loopback (DESIGN.md §9).
+//!
+//! Dorm's sharing-overhead argument (§III-D) depends on the master being
+//! off the task hot path — apps only call it on submit/resize — so the
+//! absolute numbers here are budget checks, not throughput goals: an
+//! in-process dispatch should be microseconds, a loopback frame round
+//! trip tens-to-hundreds of microseconds, and both are noise against the
+//! paper's 430 ms *per-task* latency of two-level sharing (`dorm
+//! latency`).  Three request shapes are timed: a lease-only heartbeat
+//! (the steady-state packet), a heartbeat carrying a full `SlaveReport`
+//! (encode/decode of the largest periodic payload), and `QueryState`
+//! (the largest response payload).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use dorm::app::{AppSpec, CheckpointStore, Engine};
+use dorm::config::{ClusterConfig, DormConfig, NetConfig};
+use dorm::master::DormMaster;
+use dorm::net::{serve, ControlPlane, LocalTransport, TcpTransport};
+use dorm::proto::{wire, Request, Response};
+use dorm::resources::Res;
+
+fn master() -> DormMaster {
+    let dir = std::env::temp_dir().join(format!("dorm_rpc_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut m = DormMaster::new(
+        &ClusterConfig::uniform(8, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+        DormConfig { theta1: 0.1, theta2: 0.1 },
+        CheckpointStore::new(dir).unwrap(),
+    );
+    // a representative live population so QueryState/report payloads are
+    // non-trivial: 6 running apps spread over the 8 servers
+    for i in 0..6u32 {
+        m.submit(AppSpec {
+            executor: Engine::MxNet,
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+            weight: 1 + (i % 3),
+            n_max: 8,
+            n_min: 1,
+            cmd: ["lr".into(), "lr".into()],
+        })
+        .unwrap();
+    }
+    m
+}
+
+/// The three request shapes; the heartbeat report mirrors server 0's book
+/// so reconciliation answers "converged" (no directives — steady state).
+fn requests(m: &DormMaster) -> Vec<(&'static str, Request)> {
+    let report = m.slaves[0].report();
+    vec![
+        ("heartbeat (lease only)", Request::Heartbeat {
+            server: 0,
+            now_hours: 1.0,
+            report: None,
+        }),
+        ("heartbeat + SlaveReport", Request::Heartbeat {
+            server: 0,
+            now_hours: 1.0,
+            report: Some(report),
+        }),
+        ("query state (full view)", Request::QueryState { app: None }),
+    ]
+}
+
+fn drive(t: &mut dyn ControlPlane, label: &str, shapes: &[(&'static str, Request)], iters: u32) {
+    for (name, req) in shapes {
+        let req = req.clone();
+        harness::bench_micro(&format!("{label}: {name}"), 50, iters, || {
+            let rsp = t.call(req.clone()).expect("transport failure mid-bench");
+            assert!(!matches!(rsp, Response::Error(_)), "{rsp:?}");
+        });
+    }
+}
+
+fn main() {
+    harness::banner("control-plane RPC round trip (local dispatch vs loopback TCP)");
+
+    let shapes = {
+        let m = master();
+        requests(&m)
+    };
+    for (name, req) in &shapes {
+        println!(
+            "  {:<44} request {} B, worst-case frame limit {} B",
+            name,
+            wire::encode_request(req).len(),
+            NetConfig::default().max_frame_bytes,
+        );
+    }
+
+    harness::banner("LocalTransport (direct dispatch, zero-copy)");
+    let mut local = LocalTransport::new(master());
+    drive(&mut local, "local", &shapes, 2000);
+
+    harness::banner("TcpTransport (length-prefixed frames over 127.0.0.1)");
+    let net = NetConfig { bind_addr: "127.0.0.1:0".into(), ..NetConfig::default() };
+    let handle = serve(master(), &net).unwrap();
+    let mut tcp = TcpTransport::connect(&handle.addr().to_string(), &net).unwrap();
+    drive(&mut tcp, "tcp", &shapes, 1000);
+    handle.stop();
+
+    harness::banner("context");
+    harness::paper_row(
+        "per-task scheduling latency, two-level sharing",
+        "~430 ms",
+        "(see `dorm latency`)",
+    );
+    println!(
+        "  Dorm's control plane is off the task path: tasks place locally\n\
+         \x20 (microseconds); the RPCs above happen once per resize/beat."
+    );
+}

@@ -55,7 +55,7 @@ impl Engine {
 }
 
 /// The §III-B submission 6-tuple.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AppSpec {
     pub executor: Engine,
     /// Per-container resource demand `d`.
@@ -86,6 +86,9 @@ impl AppSpec {
         }
         if self.demand.0.iter().any(|&d| d < 0.0) {
             bail!("demand must be non-negative");
+        }
+        if self.demand.0.iter().any(|&d| !d.is_finite()) {
+            bail!("demand must be finite");
         }
         Ok(())
     }
@@ -209,6 +212,12 @@ mod tests {
         let mut s = spec();
         s.demand = Res(vec![-1.0, 0.0, 8.0]);
         assert!(s.validate().is_err());
+        let mut s = spec();
+        s.demand = Res(vec![f64::NAN, 1.0, 8.0]);
+        assert!(s.validate().is_err(), "NaN demand rejected");
+        let mut s = spec();
+        s.demand = Res(vec![f64::INFINITY, 1.0, 8.0]);
+        assert!(s.validate().is_err(), "infinite demand rejected");
     }
 
     #[test]

@@ -31,11 +31,14 @@ impl Cli {
                     bail!("bad flag {arg:?}");
                 }
                 // flag value = next token unless it is another flag / end
+                // (a single leading '-' is a value: negative numbers)
                 let value = match it.peek() {
                     Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
                     _ => "true".to_string(),
                 };
-                cli.flags.insert(key.to_string(), value);
+                if cli.flags.insert(key.to_string(), value).is_some() {
+                    bail!("duplicate flag --{key} (each flag may appear once)");
+                }
             } else {
                 cli.positional.push(arg.clone());
             }
@@ -93,6 +96,33 @@ COMMANDS:
                --lr X            learning rate (default 0.1)
   latency    task-level scheduling-latency analysis (§II-C, 430 ms claim)
                --nodes N         cluster size (default 100)
+  master     serve the control plane over TCP (DESIGN.md §9)
+               --bind ADDR       listen address (default 127.0.0.1:4600)
+               --slaves N        cluster size (default 2)
+               --cpu/--gpu/--ram per-slave capacity (default 12/0/64)
+               --theta1/--theta2 Dorm thresholds (default 0.1/0.1)
+               --lease-ms T      lease timeout; 0 = never expire (default 0)
+               --sweep-ms T      lease sweep period (default 250 when
+                                 --lease-ms > 0, else off)
+               --store DIR       checkpoint dir (default net_checkpoints)
+             master/slave/ctl all also take:
+               --config FILE     TOML file; its [net] section sets the
+                                 frame limit / timeouts / heartbeat period
+               --frame-kib N     frame-size limit override, KiB
+               --io-timeout-ms T mid-frame stall timeout override
+  slave      run one DormSlave as a separate process
+               --connect ADDR    master address (default 127.0.0.1:4600)
+               --index J         server ordinate in the cluster (default 0)
+               --period-ms T     heartbeat period (default:
+                                 [net].heartbeat_period_ms = 500)
+               --cpu/--gpu/--ram local capacity (default 12/0/64)
+  ctl        one control-plane request against a running master
+               --connect ADDR    master address (default 127.0.0.1:4600)
+               ops: submit [--cpu C --gpu G --ram R --weight W
+                            --nmin N --nmax N]   | complete --app N
+                    query [--app N] | advance --app N --steps S
+                    checkpoint --app N | expire | fail --server J
+                    recover --server J | shutdown
   help       this text
 ";
 
@@ -141,5 +171,34 @@ mod tests {
         let c = Cli::parse(&argv("train --lr 0.25")).unwrap();
         assert_eq!(c.f64_flag("lr", 0.1).unwrap(), 0.25);
         assert_eq!(c.f64_flag("other", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn duplicate_flags_rejected() {
+        let e = Cli::parse(&argv("simulate --seed 1 --seed 2")).unwrap_err();
+        assert!(e.to_string().contains("duplicate flag --seed"), "{e}");
+        // a value-less duplicate is just as wrong
+        assert!(Cli::parse(&argv("simulate --csv --csv")).is_err());
+        // and a bool/value mix must not silently pick a winner
+        assert!(Cli::parse(&argv("simulate --seed --seed 2")).is_err());
+    }
+
+    #[test]
+    fn empty_double_dash_rejected() {
+        assert!(Cli::parse(&argv("simulate -- 3")).is_err());
+        assert!(Cli::parse(&argv("simulate --")).is_err());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // a single leading '-' is a value, not a flag
+        let c = Cli::parse(&argv("train --lr -0.5 --delta -3")).unwrap();
+        assert_eq!(c.f64_flag("lr", 0.1).unwrap(), -0.5);
+        assert_eq!(c.f64_flag("delta", 0.0).unwrap(), -3.0);
+        // negative integers refuse to parse as unsigned, with a message
+        assert!(c.u64_flag("delta", 0).is_err());
+        // a bare negative token with no preceding flag is positional
+        let c = Cli::parse(&argv("simulate -7")).unwrap();
+        assert_eq!(c.positional, vec!["-7"]);
     }
 }

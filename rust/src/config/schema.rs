@@ -192,6 +192,70 @@ impl FaultConfig {
     }
 }
 
+/// Networked control-plane knobs (`crate::net`, DESIGN.md §9): where the
+/// master listens, the frame-size limit both sides enforce, and the two
+/// cadences of the live loop (slave heartbeats, master lease sweeps).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetConfig {
+    /// Master bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub bind_addr: String,
+    /// Maximum frame payload either side will send or accept, bytes.
+    pub max_frame_bytes: usize,
+    /// Slave heartbeat period, milliseconds.
+    pub heartbeat_period_ms: u64,
+    /// Socket read/write timeout, milliseconds (0 = block forever).  A
+    /// half-sent frame is abandoned after this long, so a stalled peer
+    /// cannot wedge a handler thread.
+    pub io_timeout_ms: u64,
+    /// Master-driven lease-sweep period, milliseconds (0 = the server
+    /// never expires leases on its own; a client must send
+    /// ExpireLeases).  Pair with `[fault].lease_timeout_hours`.
+    pub lease_sweep_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            bind_addr: "127.0.0.1:4600".into(),
+            max_frame_bytes: 256 * 1024,
+            heartbeat_period_ms: 500,
+            io_timeout_ms: 5000,
+            lease_sweep_ms: 0,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = NetConfig::default();
+        let c = NetConfig {
+            bind_addr: doc
+                .get("net", "bind_addr")
+                .and_then(|v| v.as_str().map(str::to_string))
+                .unwrap_or(d.bind_addr),
+            max_frame_bytes: doc.u32_or("net", "max_frame_bytes", d.max_frame_bytes as u32)
+                as usize,
+            heartbeat_period_ms: doc
+                .u32_or("net", "heartbeat_period_ms", d.heartbeat_period_ms as u32)
+                as u64,
+            io_timeout_ms: doc.u32_or("net", "io_timeout_ms", d.io_timeout_ms as u32) as u64,
+            lease_sweep_ms: doc.u32_or("net", "lease_sweep_ms", d.lease_sweep_ms as u32) as u64,
+        };
+        // the smallest legal frame must fit a handshake/error response;
+        // 64 B is already absurdly tight but still functional
+        if c.max_frame_bytes < 64 {
+            bail!("[net].max_frame_bytes must be >= 64, got {}", c.max_frame_bytes);
+        }
+        if c.heartbeat_period_ms == 0 {
+            bail!("[net].heartbeat_period_ms must be >= 1");
+        }
+        if c.bind_addr.is_empty() {
+            bail!("[net].bind_addr must be non-empty");
+        }
+        Ok(c)
+    }
+}
+
 /// Simulation parameters (§V-A-3 workload + horizon).
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -296,6 +360,34 @@ mod tests {
         ] {
             let doc = parse_toml(bad).unwrap();
             assert!(FaultConfig::from_doc(&doc).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn net_section_parses_and_validates() {
+        let doc = parse_toml(
+            "[net]\nbind_addr = \"0.0.0.0:7000\"\nmax_frame_bytes = 4096\n\
+             heartbeat_period_ms = 100\nio_timeout_ms = 250\nlease_sweep_ms = 50\n",
+        )
+        .unwrap();
+        let c = NetConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.bind_addr, "0.0.0.0:7000");
+        assert_eq!(c.max_frame_bytes, 4096);
+        assert_eq!(c.heartbeat_period_ms, 100);
+        assert_eq!(c.io_timeout_ms, 250);
+        assert_eq!(c.lease_sweep_ms, 50);
+
+        // defaults when the section is absent
+        let empty = parse_toml("").unwrap();
+        assert_eq!(NetConfig::from_doc(&empty).unwrap(), NetConfig::default());
+
+        for bad in [
+            "[net]\nmax_frame_bytes = 16\n",
+            "[net]\nheartbeat_period_ms = 0\n",
+            "[net]\nbind_addr = \"\"\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(NetConfig::from_doc(&doc).is_err(), "{bad:?} accepted");
         }
     }
 

@@ -33,6 +33,8 @@
 //! | [`cluster`] | servers, partitions, containers |
 //! | [`app`] | application 6-tuple, lifecycle, checkpoints |
 //! | [`master`] / [`slave`] | the Dorm control plane |
+//! | [`proto`] | versioned control-plane protocol: typed Request/Response + wire format |
+//! | [`net`] | transports: in-process dispatch, TCP server/client, slave agent loop |
 //! | [`fault`] | server liveness (leases), failure injection, checkpoint-driven recovery, churn experiment |
 //! | [`ps`] | BSP parameter-server runtime (the "MxNet" stand-in) |
 //! | [`runtime`] | PJRT executor service for `artifacts/*.hlo.txt` |
@@ -53,7 +55,9 @@ pub mod drf;
 pub mod fault;
 pub mod master;
 pub mod metrics;
+pub mod net;
 pub mod optimizer;
+pub mod proto;
 pub mod ps;
 pub mod report;
 pub mod resources;

@@ -34,6 +34,9 @@ fn main() {
         "fig1" => cmd_fig1(),
         "train" => cmd_train(&cli),
         "latency" => cmd_latency(&cli),
+        "master" => cmd_master(&cli),
+        "slave" => cmd_slave(&cli),
+        "ctl" => cmd_ctl(&cli),
         other => {
             eprintln!("unknown command {other:?}\n\n{USAGE}");
             std::process::exit(2);
@@ -185,6 +188,195 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     let store = CheckpointStore::new("checkpoints")?;
     let path = t.checkpoint(&store)?;
     println!("checkpoint -> {}", path.display());
+    Ok(())
+}
+
+/// Resolve the `[net]` configuration for the master/slave/ctl commands:
+/// start from `--config FILE` (a TOML file whose `[net]` section is
+/// parsed by `NetConfig::from_doc`) or the defaults, then apply the
+/// per-run flag overrides (`--frame-kib`, `--io-timeout-ms`).
+fn net_from_cli(cli: &Cli) -> Result<dorm::config::NetConfig> {
+    use dorm::config::{parse_toml, NetConfig};
+    let mut net = match cli.flags.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?;
+            NetConfig::from_doc(&parse_toml(&text)?)?
+        }
+        None => NetConfig::default(),
+    };
+    if cli.flags.contains_key("frame-kib") {
+        let kib = cli.u64_flag("frame-kib", 256)?;
+        if kib == 0 {
+            anyhow::bail!("--frame-kib must be >= 1");
+        }
+        net.max_frame_bytes = kib as usize * 1024;
+    }
+    if cli.flags.contains_key("io-timeout-ms") {
+        net.io_timeout_ms = cli.u64_flag("io-timeout-ms", net.io_timeout_ms)?;
+    }
+    Ok(net)
+}
+
+/// `dorm master`: serve the control plane over TCP until a `ctl shutdown`
+/// arrives (the two-process demo in README.md; DESIGN.md §9).
+fn cmd_master(cli: &Cli) -> Result<()> {
+    use dorm::config::{ClusterConfig, DormConfig, FaultConfig};
+    use dorm::master::DormMaster;
+    use dorm::proto::{PROTO_MAJOR, PROTO_MINOR};
+    use dorm::resources::Res;
+
+    let slaves = cli.u64_flag("slaves", 2)? as usize;
+    let cap = Res::cpu_gpu_ram(
+        cli.f64_flag("cpu", 12.0)?,
+        cli.f64_flag("gpu", 0.0)?,
+        cli.f64_flag("ram", 64.0)?,
+    );
+    let dorm_cfg = DormConfig {
+        theta1: cli.f64_flag("theta1", 0.1)?,
+        theta2: cli.f64_flag("theta2", 0.1)?,
+    };
+    let lease_ms = cli.u64_flag("lease-ms", 0)?;
+    let mut net = net_from_cli(cli)?;
+    net.bind_addr = cli.str_flag("bind", &net.bind_addr);
+    net.lease_sweep_ms =
+        cli.u64_flag("sweep-ms", if lease_ms > 0 { 250 } else { net.lease_sweep_ms })?;
+    let store = CheckpointStore::new(cli.str_flag("store", "net_checkpoints"))?;
+    let mut master = DormMaster::new(&ClusterConfig::uniform(slaves, cap), dorm_cfg, store);
+    if lease_ms > 0 {
+        master = master.with_fault(&FaultConfig {
+            lease_timeout_hours: lease_ms as f64 / 3_600_000.0,
+            ..FaultConfig::default()
+        });
+    }
+    let handle = dorm::net::serve(master, &net)?;
+    println!(
+        "dorm master listening on {} (proto v{PROTO_MAJOR}.{PROTO_MINOR}, {slaves} slaves, \
+         lease timeout {})",
+        handle.addr(),
+        if lease_ms > 0 { format!("{lease_ms} ms") } else { "off".into() },
+    );
+    handle.wait();
+    println!("dorm master: shutdown complete");
+    Ok(())
+}
+
+/// `dorm slave`: one per-server agent as its own process, heartbeating
+/// its report and applying the master's reconciliation directives.
+fn cmd_slave(cli: &Cli) -> Result<()> {
+    use dorm::net::{SlaveAgent, TcpTransport};
+    use dorm::resources::Res;
+    use dorm::slave::DormSlave;
+
+    let addr = cli.str_flag("connect", "127.0.0.1:4600");
+    let index = cli.u64_flag("index", 0)? as u32;
+    let net = net_from_cli(cli)?;
+    // --period-ms overrides the [net].heartbeat_period_ms config knob
+    let period = cli.u64_flag("period-ms", net.heartbeat_period_ms)?;
+    let cap = Res::cpu_gpu_ram(
+        cli.f64_flag("cpu", 12.0)?,
+        cli.f64_flag("gpu", 0.0)?,
+        cli.f64_flag("ram", 64.0)?,
+    );
+    let name = cli.str_flag("name", &format!("slave{index:02}"));
+    let transport = TcpTransport::connect(&addr, &net)?;
+    let mut agent = SlaveAgent::new(DormSlave::new(name.clone(), cap), index, transport);
+    println!("dorm slave {name} (server {index}) connected to {addr}, beating every {period} ms");
+    let beats = agent.run(std::time::Duration::from_millis(period))?;
+    println!("dorm slave {name}: master gone after {beats} beats; exiting");
+    Ok(())
+}
+
+/// `dorm ctl`: issue one typed request against a running master and
+/// print the response (the scriptable harness the CI smoke test drives).
+fn cmd_ctl(cli: &Cli) -> Result<()> {
+    use dorm::app::{AppSpec, Engine};
+    use dorm::net::{ControlPlane, TcpTransport};
+    use dorm::proto::{Request, Response};
+    use dorm::resources::Res;
+
+    let addr = cli.str_flag("connect", "127.0.0.1:4600");
+    let op = cli
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("ctl needs an operation (see `dorm help`)"))?;
+    let req = match op {
+        "submit" => Request::Submit {
+            spec: AppSpec {
+                executor: Engine::MxNet,
+                demand: Res::cpu_gpu_ram(
+                    cli.f64_flag("cpu", 2.0)?,
+                    cli.f64_flag("gpu", 0.0)?,
+                    cli.f64_flag("ram", 8.0)?,
+                ),
+                weight: cli.u64_flag("weight", 1)? as u32,
+                n_min: cli.u64_flag("nmin", 1)? as u32,
+                n_max: cli.u64_flag("nmax", 8)? as u32,
+                cmd: [cli.str_flag("model", "lr"), cli.str_flag("model", "lr")],
+            },
+        },
+        "complete" => Request::Complete { app: AppId(cli.u64_flag("app", 0)?) },
+        // --app N filters to one app; absent = the whole view
+        "query" => Request::QueryState {
+            app: match cli.flags.get("app") {
+                Some(_) => Some(AppId(cli.u64_flag("app", 0)?)),
+                None => None,
+            },
+        },
+        "advance" => Request::AdvanceSteps {
+            app: AppId(cli.u64_flag("app", 0)?),
+            steps: cli.u64_flag("steps", 1)?,
+        },
+        "checkpoint" => Request::CheckpointApp { app: AppId(cli.u64_flag("app", 0)?) },
+        "expire" => Request::ExpireLeases { now_hours: f64::NAN },
+        "fail" => Request::FailServer { server: cli.u64_flag("server", 0)? as u32 },
+        "recover" => Request::RecoverServer {
+            server: cli.u64_flag("server", 0)? as u32,
+            now_hours: f64::NAN,
+        },
+        "shutdown" => Request::Shutdown,
+        other => anyhow::bail!("unknown ctl op {other:?} (see `dorm help`)"),
+    };
+    let net = net_from_cli(cli)?;
+    let mut t = TcpTransport::connect(&addr, &net)?;
+    match t.call(req)? {
+        Response::Submitted { app } => println!("submitted app{}", app.0),
+        Response::Ok => println!("ok"),
+        Response::Expired { dead } => println!("expired servers {dead:?}"),
+        Response::Affected { apps } => {
+            println!("affected apps {:?}", apps.iter().map(|a| a.0).collect::<Vec<_>>())
+        }
+        Response::State(v) => {
+            println!(
+                "clock={} servers={}/{} active={} adjustments={} recoveries={} util={:.3}",
+                v.clock,
+                v.alive_servers,
+                v.total_servers,
+                v.active_apps,
+                v.total_adjustments,
+                v.total_recoveries,
+                v.utilization
+            );
+            for a in &v.apps {
+                println!(
+                    "app{} {:?} containers={} steps={} ckpt={} adj={} rec={}",
+                    a.id.0,
+                    a.state,
+                    a.containers,
+                    a.steps_done,
+                    a.ckpt_step,
+                    a.adjustments,
+                    a.recoveries
+                );
+            }
+        }
+        Response::Error(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+        other => println!("{other:?}"),
+    }
     Ok(())
 }
 

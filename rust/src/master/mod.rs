@@ -31,6 +31,7 @@
 //! which is what the control-plane tests use.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -39,11 +40,14 @@ use crate::cluster::ServerId;
 use crate::config::{ClusterConfig, DormConfig, FaultConfig};
 use crate::fault::{LeaseTable, RecoveryLog};
 use crate::optimizer::SolveMode;
+use crate::proto::{
+    self, AppView, Directive, ErrorCode, ProtoError, Request, Response, StateView,
+};
 use crate::ps::{Trainer, TrainerConfig};
 use crate::resources::Res;
 use crate::runtime::{ComputeHandle, Manifest};
 use crate::sched::{AllocationUpdate, CmsPolicy, DormPolicy, SchedApp, SchedCtx};
-use crate::slave::DormSlave;
+use crate::slave::{DormSlave, SlaveReport};
 
 /// One application under management.
 pub struct ManagedApp {
@@ -95,6 +99,11 @@ fn save_checkpoint(store: &CheckpointStore, retain: usize, app: &mut ManagedApp)
     // can skip the newest-good re-scan (prune_after_save vs prune)
     store.prune_after_save(app.id, retain, &written)?;
     Ok(())
+}
+
+/// Shorthand for a typed control-plane error response.
+fn err(code: ErrorCode, detail: impl fmt::Display) -> Response {
+    Response::Error(ProtoError::new(code, detail))
 }
 
 /// The central manager.
@@ -179,6 +188,227 @@ impl DormMaster {
         self
     }
 
+    // ---- the control-plane API (`crate::proto`, DESIGN.md §9) -----------
+
+    /// The single control-plane entry point: every master↔slave and
+    /// harness↔master interaction is a [`Request`] consumed here and a
+    /// [`Response`] produced here.  The legacy `pub fn` surface
+    /// (`submit`, `complete`, `heartbeat`, ...) is the set of helpers
+    /// behind this method; transports ([`crate::net`]) differ only in how
+    /// the messages travel.  Infallible by design — failures become
+    /// [`Response::Error`] with a typed [`ErrorCode`], so a remote peer
+    /// always gets a decodable answer.
+    pub fn dispatch(&mut self, req: Request) -> Response {
+        match req {
+            Request::Hello { major, minor } => match proto::negotiate(major, minor) {
+                Ok(()) => Response::HelloAck {
+                    major: proto::PROTO_MAJOR,
+                    minor: proto::PROTO_MINOR,
+                },
+                Err(e) => Response::Error(e),
+            },
+            Request::Submit { spec } => {
+                // the typed split a retrying client depends on: a bad
+                // tuple is permanent (InvalidSpec), anything that breaks
+                // past validation (store IO, solver) is Internal
+                if let Err(e) = spec.validate() {
+                    return err(ErrorCode::InvalidSpec, e);
+                }
+                if let Some(rsp) = self.check_demand(&spec.demand, ErrorCode::InvalidSpec) {
+                    return rsp;
+                }
+                match self.submit(spec) {
+                    Ok(id) => Response::Submitted { app: id },
+                    Err(e) => err(ErrorCode::Internal, e),
+                }
+            }
+            Request::Complete { app } => match self.apps.get(&app) {
+                None => err(ErrorCode::UnknownApp, format!("unknown app {app}")),
+                Some(a) if a.state.is_terminal() => {
+                    err(ErrorCode::InvalidState, format!("{app} already terminal"))
+                }
+                Some(_) => match self.complete(app) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => err(ErrorCode::Internal, e),
+                },
+            },
+            Request::Heartbeat { server, now_hours, report } => {
+                let Some(j) = self.known_server(server) else {
+                    return err(ErrorCode::UnknownServer, format!("unknown server {server}"));
+                };
+                if !now_hours.is_finite() {
+                    return err(
+                        ErrorCode::InvalidArgument,
+                        "heartbeat time must be finite by dispatch time \
+                         (only the TCP server stamps arrival times)",
+                    );
+                }
+                match self.heartbeat_report(j, now_hours, report.as_ref()) {
+                    Ok((alive, directives)) => Response::HeartbeatAck { alive, directives },
+                    Err(e) => err(ErrorCode::Internal, e),
+                }
+            }
+            Request::CreateContainers { server, app, demand, count } => {
+                let Some(j) = self.known_server(server) else {
+                    return err(ErrorCode::UnknownServer, format!("unknown server {server}"));
+                };
+                if count == 0 {
+                    return err(ErrorCode::InvalidArgument, "count must be >= 1");
+                }
+                // a sane non-zero demand also bounds `count`: the slave's
+                // capacity check fails before any allocation happens, so
+                // a hostile count cannot drive memory use
+                if let Some(rsp) = self.check_demand(&demand, ErrorCode::InvalidArgument) {
+                    return rsp;
+                }
+                match self.slaves[j].create(app, &demand, count) {
+                    Ok(_) => Response::Ok,
+                    Err(e) => err(ErrorCode::InvalidState, e),
+                }
+            }
+            Request::Destroy { server, app, count } => {
+                let Some(j) = self.known_server(server) else {
+                    return err(ErrorCode::UnknownServer, format!("unknown server {server}"));
+                };
+                match count {
+                    None => {
+                        self.slaves[j].destroy_all(app);
+                        Response::Ok
+                    }
+                    Some(n) => match self.slaves[j].destroy(app, n) {
+                        Ok(()) => Response::Ok,
+                        Err(e) => err(ErrorCode::InvalidState, e),
+                    },
+                }
+            }
+            Request::CheckpointApp { app } => match self.apps.get(&app) {
+                None => err(ErrorCode::UnknownApp, format!("unknown app {app}")),
+                Some(a) if a.state != AppState::Running => err(
+                    ErrorCode::InvalidState,
+                    format!("{app} is {:?}, not Running", a.state),
+                ),
+                Some(_) => match self.checkpoint_app(app) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => err(ErrorCode::Internal, e),
+                },
+            },
+            Request::AdvanceSteps { app, steps } => match self.apps.get(&app) {
+                None => err(ErrorCode::UnknownApp, format!("unknown app {app}")),
+                Some(_) => match self.advance_steps(app, steps) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => err(ErrorCode::InvalidState, e),
+                },
+            },
+            Request::Reallocate => match self.reallocate() {
+                Ok(()) => Response::Ok,
+                Err(e) => err(ErrorCode::Internal, e),
+            },
+            Request::ExpireLeases { now_hours } => {
+                if !now_hours.is_finite() {
+                    return err(ErrorCode::InvalidArgument, "expiry time must be finite");
+                }
+                match self.expire_leases(now_hours) {
+                    Ok(dead) => Response::Expired {
+                        dead: dead.into_iter().map(|j| j as u32).collect(),
+                    },
+                    Err(e) => err(ErrorCode::Internal, e),
+                }
+            }
+            Request::FailServer { server } => {
+                let Some(j) = self.known_server(server) else {
+                    return err(ErrorCode::UnknownServer, format!("unknown server {server}"));
+                };
+                match self.fail_server(j) {
+                    Ok(apps) => Response::Affected { apps },
+                    Err(e) => err(ErrorCode::Internal, e),
+                }
+            }
+            Request::RecoverServer { server, now_hours } => {
+                let Some(j) = self.known_server(server) else {
+                    return err(ErrorCode::UnknownServer, format!("unknown server {server}"));
+                };
+                if !now_hours.is_finite() {
+                    return err(ErrorCode::InvalidArgument, "recovery time must be finite");
+                }
+                match self.recover_server_at(j, now_hours) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => err(ErrorCode::Internal, e),
+                }
+            }
+            Request::QueryState { app } => {
+                if let Some(id) = app {
+                    if !self.apps.contains_key(&id) {
+                        return err(ErrorCode::UnknownApp, format!("unknown app {id}"));
+                    }
+                }
+                Response::State(self.state_view(app))
+            }
+            // serving loops interpret Shutdown; for the master itself it
+            // is an acknowledged no-op (nothing to tear down in-process)
+            Request::Shutdown => Response::Ok,
+        }
+    }
+
+    /// Validate a wire-side server ordinate against the cluster size.
+    fn known_server(&self, server: u32) -> Option<usize> {
+        let j = server as usize;
+        (j < self.slaves.len()).then_some(j)
+    }
+
+    /// Wire-side demand guard: the decoder accepts a `Res` of any arity
+    /// and any bit pattern, so every demand-carrying request is checked
+    /// against the cluster's dimensionality and for finite, non-negative,
+    /// non-zero components before it can reach the solver (a mismatched
+    /// arity would trip `debug_assert`s or silently truncate `zip`s; a
+    /// zero demand would unbound container counts).  Returns the typed
+    /// refusal to send, or `None` when the demand is usable.
+    fn check_demand(&self, d: &Res, code: ErrorCode) -> Option<Response> {
+        let m = self.slaves.first().map(|s| s.capacity().m()).unwrap_or(0);
+        if d.m() != m {
+            return Some(err(
+                code,
+                format!("demand has {} resource types, cluster uses {m}", d.m()),
+            ));
+        }
+        if !d.0.iter().all(|x| x.is_finite() && *x >= 0.0) {
+            return Some(err(code, "demand components must be finite and non-negative"));
+        }
+        if d.is_zero() {
+            return Some(err(code, "demand must be non-zero"));
+        }
+        None
+    }
+
+    /// Observable state snapshot (the [`Request::QueryState`] payload and
+    /// the unit of transport-parity comparison): aggregates plus one row
+    /// per app, optionally filtered.  Deliberately free of anything that
+    /// differs across processes (paths, wall clocks).
+    pub fn state_view(&self, filter: Option<AppId>) -> StateView {
+        StateView {
+            clock: self.clock,
+            alive_servers: self.lease.n_alive() as u32,
+            total_servers: self.slaves.len() as u32,
+            active_apps: self.active_apps() as u32,
+            total_adjustments: self.total_adjustments,
+            total_recoveries: self.total_recoveries,
+            utilization: self.utilization(),
+            apps: self
+                .apps
+                .values()
+                .filter(|a| filter.map_or(true, |id| a.id == id))
+                .map(|a| AppView {
+                    id: a.id,
+                    state: a.state,
+                    containers: self.containers_of(a.id),
+                    steps_done: a.steps_done,
+                    ckpt_step: a.ckpt_step,
+                    adjustments: a.adjustments,
+                    recoveries: a.recoveries,
+                })
+                .collect(),
+        }
+    }
+
     /// §III-B: submit the 6-tuple. Returns the assigned id; triggers an
     /// allocation round.
     pub fn submit(&mut self, spec: AppSpec) -> Result<AppId> {
@@ -246,6 +476,94 @@ impl DormMaster {
         }
         self.lease.renew(server, now);
         Ok(())
+    }
+
+    /// The full heartbeat exchange behind [`Request::Heartbeat`]: renew
+    /// the lease and, when the slave shipped its [`SlaveReport`],
+    /// (a) adopt a changed capacity — the slave is authoritative about
+    /// its own hardware, so a differing report is a *capacity event*:
+    /// the book is updated, the policy's capacity-derived caches are
+    /// dropped ([`CmsPolicy::on_capacity_change`]) and the engine
+    /// re-solves; and (b) compute the reconciliation [`Directive`]s that
+    /// converge the remote book on the master's (desired-state, so a
+    /// lost ack heals on the next beat).  Returns `(alive, directives)`;
+    /// a dead server stays dead (late packets must not resurrect it) and
+    /// is told to clear every container it still holds.
+    pub fn heartbeat_report(
+        &mut self,
+        server: usize,
+        now: f64,
+        report: Option<&SlaveReport>,
+    ) -> Result<(bool, Vec<Directive>)> {
+        if server >= self.slaves.len() {
+            bail!("unknown server {server}");
+        }
+        let alive = self.lease.is_alive(server);
+        self.lease.renew(server, now);
+        if let Some(r) = report {
+            // a capacity is only adoptable if it is sane: right arity,
+            // every component finite and non-negative.  NaN would both
+            // poison the solve and — since NaN != NaN — re-trigger this
+            // event on every beat, so insane reports are ignored loudly.
+            let sane = r.capacity.m() == self.slaves[server].capacity().m()
+                && r.capacity.0.iter().all(|c| c.is_finite() && *c >= 0.0);
+            if !sane {
+                log::warn!(
+                    "server {server} reports unusable capacity {}; keeping {}",
+                    r.capacity,
+                    self.slaves[server].capacity()
+                );
+            }
+            if alive && sane && r.capacity != *self.slaves[server].capacity() {
+                log::info!(
+                    "server {server} reports capacity {} (book had {}); re-solving",
+                    r.capacity,
+                    self.slaves[server].capacity()
+                );
+                self.clock += 1;
+                self.slaves[server].set_capacity(r.capacity.clone())?;
+                self.policy.on_capacity_change();
+                self.reallocate()?;
+            }
+            return Ok((alive, self.reconcile(server, &r.containers)));
+        }
+        Ok((alive, Vec::new()))
+    }
+
+    /// Diff the master's book for `server` against a remote slave's
+    /// reported xᵢⱼ column; the directives transform the remote book
+    /// into the master's.  Pure function of current state — idempotent,
+    /// and an empty vector means the slave is converged.
+    /// All destroys come before all creates — a create may depend on
+    /// capacity a destroy in the same ack frees, and the agent applies
+    /// the list in order against its all-or-nothing local book.
+    fn reconcile(&self, server: usize, remote: &BTreeMap<AppId, u32>) -> Vec<Directive> {
+        let desired = self.slaves[server].inventory();
+        let mut out = Vec::new();
+        let mut creates = Vec::new();
+        for id in remote.keys() {
+            if !desired.contains_key(id) {
+                out.push(Directive::DestroyAll { app: *id });
+            }
+        }
+        for (id, want) in &desired {
+            let have = remote.get(id).copied().unwrap_or(0);
+            if *want > have {
+                let Some(app) = self.apps.get(id) else {
+                    log::warn!("book holds containers for unmanaged {id}; skipping create");
+                    continue;
+                };
+                creates.push(Directive::Create {
+                    app: *id,
+                    demand: app.spec.demand.clone(),
+                    count: *want - have,
+                });
+            } else if have > *want {
+                out.push(Directive::Destroy { app: *id, count: have - *want });
+            }
+        }
+        out.extend(creates);
+        out
     }
 
     /// Declare every server whose lease lapsed before `now` dead (capacity
@@ -957,6 +1275,116 @@ mod tests {
             "freshly rejoined server must stay alive"
         );
         assert!(m.is_server_alive(0));
+    }
+
+    #[test]
+    fn heartbeat_for_unknown_server_is_a_typed_error() {
+        let mut m = master("hb_unknown");
+        // the legacy helper refuses instead of silently inserting a lease
+        assert!(m.heartbeat(4, 1.0).is_err(), "only servers 0..4 exist");
+        assert!(m.heartbeat_report(99, 1.0, None).is_err());
+        // ... and the dispatch surface types the refusal
+        match m.dispatch(Request::Heartbeat { server: 4, now_hours: 1.0, report: None }) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::UnknownServer),
+            other => panic!("expected a typed error, got {other:?}"),
+        }
+        assert_eq!(m.alive_servers(), 4, "no lease state was invented");
+        // non-finite times are refused before they can poison the table
+        match m.dispatch(Request::Heartbeat {
+            server: 0,
+            now_hours: f64::NAN,
+            report: None,
+        }) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::InvalidArgument),
+            other => panic!("expected a typed error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dispatch_covers_the_legacy_surface() {
+        let mut m = master("dispatch");
+        let rsp = m.dispatch(Request::Submit { spec: spec(2.0, 0.0, 8.0, 1, 1, 12) });
+        let id = match rsp {
+            Response::Submitted { app } => app,
+            other => panic!("submit answered {other:?}"),
+        };
+        assert_eq!(
+            m.dispatch(Request::AdvanceSteps { app: id, steps: 7 }),
+            Response::Ok
+        );
+        assert_eq!(m.dispatch(Request::CheckpointApp { app: id }), Response::Ok);
+        match m.dispatch(Request::QueryState { app: Some(id) }) {
+            Response::State(v) => {
+                assert_eq!(v.apps.len(), 1);
+                assert_eq!(v.apps[0].containers, 12);
+                assert_eq!(v.apps[0].steps_done, 7);
+                assert_eq!(v.apps[0].ckpt_step, 7);
+                assert_eq!(v.active_apps, 1);
+            }
+            other => panic!("query answered {other:?}"),
+        }
+        match m.dispatch(Request::FailServer { server: 0 }) {
+            Response::Affected { apps } => assert_eq!(apps, vec![id]),
+            other => panic!("fail answered {other:?}"),
+        }
+        assert_eq!(
+            m.dispatch(Request::RecoverServer { server: 0, now_hours: 1.0 }),
+            Response::Ok
+        );
+        assert_eq!(m.dispatch(Request::Complete { app: id }), Response::Ok);
+        match m.dispatch(Request::Complete { app: id }) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::InvalidState),
+            other => panic!("double completion answered {other:?}"),
+        }
+        match m.dispatch(Request::QueryState { app: Some(AppId(42)) }) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::UnknownApp),
+            other => panic!("bogus query answered {other:?}"),
+        }
+        // version negotiation lives behind dispatch too
+        let hello = m.dispatch(Request::Hello {
+            major: proto::PROTO_MAJOR,
+            minor: proto::PROTO_MINOR,
+        });
+        assert!(matches!(hello, Response::HelloAck { .. }));
+        match m.dispatch(Request::Hello { major: proto::PROTO_MAJOR + 1, minor: 0 }) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::VersionMismatch),
+            other => panic!("future major answered {other:?}"),
+        }
+    }
+
+    #[test]
+    fn capacity_event_heartbeat_invalidates_and_resolves() {
+        let mut m = master("capev");
+        let id = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 24)).unwrap();
+        assert_eq!(m.containers_of(id), 24, "48 CPUs -> 24 containers");
+        // server 0 now reports only 6 CPUs: the master must adopt it,
+        // drop capacity-derived caches, and re-solve smaller
+        let report = SlaveReport {
+            name: "slave00".into(),
+            capacity: Res::cpu_gpu_ram(6.0, 0.0, 64.0),
+            available: Res::cpu_gpu_ram(6.0, 0.0, 64.0),
+            containers: Default::default(),
+        };
+        let (alive, directives) = m.heartbeat_report(0, 1.0, Some(&report)).unwrap();
+        assert!(alive);
+        assert_eq!(*m.slaves[0].capacity(), Res::cpu_gpu_ram(6.0, 0.0, 64.0));
+        // the re-solve happened: the old 24-wide placement (6 per server)
+        // no longer fits server 0, and total width obeys the 42-CPU cap
+        let held = m.containers_of(id);
+        assert!(held < 24 && held >= 1, "re-solved smaller, holds {held}");
+        assert!(m.slaves[0].count_for(id) <= 3, "6 CPUs fit at most 3");
+        for s in &m.slaves {
+            assert!(s.used().fits_in(s.capacity()), "{} over capacity", s.name);
+        }
+        // the directives converge the (empty) remote book on the new book
+        let created: u32 = directives
+            .iter()
+            .map(|d| match d {
+                Directive::Create { count, .. } => *count,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(created, m.slaves[0].count_for(id));
     }
 
     #[test]

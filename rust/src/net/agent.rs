@@ -1,0 +1,252 @@
+//! The standalone slave event loop.
+//!
+//! A [`SlaveAgent`] owns the per-server [`DormSlave`] book and a
+//! [`ControlPlane`] transport to the master.  Each beat it ships its
+//! [`SlaveReport`] ([`Request::Heartbeat`]) and applies the master's
+//! reconciliation [`Directive`]s to the local book — so the remote book
+//! converges on the master's desired state even across lost acks, agent
+//! restarts, or a master that re-solved while the packet was in flight.
+//! If the master says the server is dead (leases expired while the link
+//! was down), the agent re-registers with [`Request::RecoverServer`] and
+//! rejoins empty, exactly like a repaired machine.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::net::ControlPlane;
+use crate::proto::{Directive, Request, Response};
+use crate::slave::DormSlave;
+
+/// What one heartbeat round did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeartbeatOutcome {
+    /// The master's lease verdict for this server.
+    pub alive: bool,
+    /// Directives received (0 = the local book is converged).
+    pub directives: usize,
+    /// Directives that applied cleanly to the local book.
+    pub applied: usize,
+}
+
+/// Per-server agent: local container book + transport to the master.
+pub struct SlaveAgent<T: ControlPlane> {
+    local: DormSlave,
+    server: u32,
+    transport: T,
+}
+
+impl<T: ControlPlane> SlaveAgent<T> {
+    pub fn new(local: DormSlave, server: u32, transport: T) -> Self {
+        SlaveAgent { local, server, transport }
+    }
+
+    pub fn local(&self) -> &DormSlave {
+        &self.local
+    }
+
+    /// One heartbeat round at `now_hours` (non-finite = let the TCP
+    /// server stamp the arrival).  Transport failures are `Err` — the
+    /// caller decides whether to retry or exit; a directive that fails
+    /// to apply is logged and *not* fatal, because the next report shows
+    /// the master the true book and reconciliation heals it.
+    pub fn step(&mut self, now_hours: f64) -> Result<HeartbeatOutcome> {
+        let report = self.local.report();
+        let rsp = self.transport.call(Request::Heartbeat {
+            server: self.server,
+            now_hours,
+            report: Some(report),
+        })?;
+        match rsp {
+            Response::HeartbeatAck { alive, directives } => {
+                let total = directives.len();
+                let mut applied = 0;
+                for d in directives {
+                    match self.apply(d) {
+                        Ok(()) => applied += 1,
+                        Err(e) => log::warn!(
+                            "slave {}: directive failed ({e:#}); reconciling next beat",
+                            self.local.name
+                        ),
+                    }
+                }
+                Ok(HeartbeatOutcome { alive, directives: total, applied })
+            }
+            // a typed rejection travels as ProtoError so callers can tell
+            // "the master refused us" from "the master is gone"
+            Response::Error(e) => Err(anyhow::Error::new(e).context("heartbeat rejected")),
+            other => bail!("unexpected heartbeat response: {other:?}"),
+        }
+    }
+
+    fn apply(&mut self, d: Directive) -> Result<()> {
+        match d {
+            Directive::Create { app, demand, count } => {
+                self.local.create(app, &demand, count)?;
+            }
+            Directive::Destroy { app, count } => self.local.destroy(app, count)?,
+            Directive::DestroyAll { app } => {
+                self.local.destroy_all(app);
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-register after the master declared this server dead.
+    pub fn rejoin(&mut self, now_hours: f64) -> Result<()> {
+        match self.transport.call(Request::RecoverServer { server: self.server, now_hours })? {
+            Response::Ok => Ok(()),
+            Response::Error(e) => Err(anyhow::Error::new(e).context("rejoin rejected")),
+            other => bail!("unexpected rejoin response: {other:?}"),
+        }
+    }
+
+    /// The `dorm slave` process body: beat every `period`, apply
+    /// directives, rejoin if declared dead.  A lost transport means the
+    /// master went away — the loop ends cleanly with the number of beats
+    /// completed.  A typed rejection (e.g. `UnknownServer` from a bad
+    /// `--index`) is operator error, not a shutdown: it propagates as
+    /// `Err` so the process exits non-zero instead of masquerading as a
+    /// clean drain.
+    pub fn run(&mut self, period: Duration) -> Result<u64> {
+        use crate::proto::ProtoError;
+        let mut beats = 0u64;
+        loop {
+            let out = match self.step(f64::NAN) {
+                Ok(out) => out,
+                Err(e) if e.downcast_ref::<ProtoError>().is_some() => {
+                    return Err(e.context(format!(
+                        "master rejected slave {} (server {})",
+                        self.local.name, self.server
+                    )));
+                }
+                Err(e) => {
+                    log::info!("slave {}: master unreachable ({e:#}); exiting", self.local.name);
+                    return Ok(beats);
+                }
+            };
+            beats += 1;
+            if out.directives > 0 {
+                log::info!(
+                    "slave {}: applied {}/{} directives; book now {:?}",
+                    self.local.name,
+                    out.applied,
+                    out.directives,
+                    self.local.inventory()
+                );
+            }
+            if !out.alive {
+                log::warn!("slave {}: master declared us dead; rejoining", self.local.name);
+                if let Err(e) = self.rejoin(f64::NAN) {
+                    // same split as step(): a typed refusal is operator
+                    // error; a lost transport is the master going away
+                    if e.downcast_ref::<ProtoError>().is_some() {
+                        return Err(e.context(format!(
+                            "master rejected slave {} (server {})",
+                            self.local.name, self.server
+                        )));
+                    }
+                    log::info!(
+                        "slave {}: master unreachable during rejoin ({e:#}); exiting",
+                        self.local.name
+                    );
+                    return Ok(beats);
+                }
+            }
+            std::thread::sleep(period);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{AppId, AppSpec, CheckpointStore, Engine};
+    use crate::config::{ClusterConfig, DormConfig};
+    use crate::master::DormMaster;
+    use crate::net::LocalTransport;
+    use crate::resources::Res;
+
+    fn master(tag: &str) -> DormMaster {
+        let dir = std::env::temp_dir().join(format!("dorm_agent_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        DormMaster::new(
+            &ClusterConfig::uniform(2, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+            DormConfig { theta1: 0.5, theta2: 0.5 },
+            CheckpointStore::new(dir).unwrap(),
+        )
+    }
+
+    fn spec(n_max: u32) -> AppSpec {
+        AppSpec {
+            executor: Engine::MxNet,
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+            weight: 1,
+            n_max,
+            n_min: 1,
+            cmd: ["lr".into(), "lr".into()],
+        }
+    }
+
+    /// The agent's empty book converges on the master's desired state in
+    /// one beat, stays converged, and drains on completion — all through
+    /// the ControlPlane interface only.
+    #[test]
+    fn agent_converges_on_master_book() {
+        let mut m = master("converge");
+        let id = m.submit(spec(12)).unwrap();
+        assert_eq!(m.containers_of(id), 12);
+        let local = DormSlave::new("slave00", Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+        let mut agent = SlaveAgent::new(local, 0, LocalTransport::new(m));
+
+        let out = agent.step(1.0).unwrap();
+        assert!(out.alive);
+        assert_eq!(out.directives, 1, "one create batch");
+        assert_eq!(out.applied, 1);
+        assert_eq!(agent.local().count_for(id), 6, "master book has 6 here");
+
+        // converged: second beat is a no-op
+        let out = agent.step(2.0).unwrap();
+        assert_eq!(out.directives, 0);
+
+        // completion drains the remote book on the next beat
+        let rsp = agent.transport.call(Request::Complete { app: id }).unwrap();
+        assert_eq!(rsp, Response::Ok);
+        let out = agent.step(3.0).unwrap();
+        assert_eq!(out.directives, 1);
+        assert_eq!(agent.local().count_for(id), 0);
+        assert_eq!(agent.local().inventory().len(), 0);
+    }
+
+    /// A dead server's heartbeat says so; rejoin restores liveness and
+    /// the following beat repopulates the emptied book.
+    #[test]
+    fn dead_agent_rejoins_and_repopulates() {
+        let mut m = master("rejoin");
+        let id = m.submit(spec(12)).unwrap();
+        m.fail_server(0).unwrap();
+        let local = DormSlave::new("slave00", Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+        let mut agent = SlaveAgent::new(local, 0, LocalTransport::new(m));
+
+        let out = agent.step(1.0).unwrap();
+        assert!(!out.alive, "master must report the dead lease");
+        agent.rejoin(1.5).unwrap();
+        let out = agent.step(2.0).unwrap();
+        assert!(out.alive);
+        assert!(out.applied >= 1, "regrown placement lands on this server");
+        assert!(agent.local().count_for(id) > 0);
+    }
+
+    /// AppId(…) placed by a stale master decision the agent never saw:
+    /// the report exposes it and the master orders it destroyed.
+    #[test]
+    fn stale_local_containers_are_reconciled_away() {
+        let m = master("stale");
+        let mut local = DormSlave::new("slave00", Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+        local.create(AppId(99), &Res::cpu_gpu_ram(1.0, 0.0, 1.0), 2).unwrap();
+        let mut agent = SlaveAgent::new(local, 0, LocalTransport::new(m));
+        let out = agent.step(1.0).unwrap();
+        assert_eq!(out.directives, 1);
+        assert_eq!(agent.local().count_for(AppId(99)), 0);
+    }
+}

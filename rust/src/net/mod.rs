@@ -1,0 +1,110 @@
+//! Control-plane transports (DESIGN.md §9).
+//!
+//! [`crate::proto`] defines *what* travels; this module defines *how*:
+//!
+//! * [`ControlPlane`] — the one-method client interface.  Everything that
+//!   drives a master (harnesses, slave agents, the `dorm ctl` CLI, the
+//!   parity tests) programs against this trait and cannot tell the
+//!   transports apart — that indistinguishability is pinned by
+//!   `tests/transport_parity.rs`.
+//! * [`LocalTransport`] — direct dispatch into an owned
+//!   [`DormMaster`]: zero-copy, no serialization, preserves the
+//!   in-process semantics every pre-existing test runs under.
+//! * [`TcpTransport`] — std-only TCP client: length-prefixed frames
+//!   ([`crate::proto::wire`]), version handshake on connect, typed error
+//!   responses end-to-end.
+//! * [`serve`] ([`server`]) — the master side of TCP: accept loop,
+//!   per-connection handshake enforcement, arrival-time stamping, lease
+//!   sweeping.  [`SlaveAgent`] ([`agent`]) is the standalone slave event
+//!   loop that heartbeats over any transport and applies the master's
+//!   reconciliation directives to its local container book.
+
+mod agent;
+mod server;
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+pub use agent::{HeartbeatOutcome, SlaveAgent};
+pub use server::{serve, ServerHandle};
+
+use crate::config::NetConfig;
+use crate::master::DormMaster;
+use crate::proto::{wire, Request, Response, PROTO_MAJOR, PROTO_MINOR};
+
+/// A client view of the control plane: send one [`Request`], get one
+/// [`Response`].  `Err` is reserved for *transport* failures (connection
+/// lost, frame undecodable); every semantic failure arrives in-band as
+/// [`Response::Error`] so both transports surface identical values.
+pub trait ControlPlane {
+    fn call(&mut self, req: Request) -> Result<Response>;
+}
+
+/// Direct dispatch into an owned master — the zero-cost transport the
+/// in-process tests and simulator harnesses use.
+pub struct LocalTransport {
+    master: DormMaster,
+}
+
+impl LocalTransport {
+    pub fn new(master: DormMaster) -> Self {
+        LocalTransport { master }
+    }
+
+    pub fn master(&self) -> &DormMaster {
+        &self.master
+    }
+
+    pub fn master_mut(&mut self) -> &mut DormMaster {
+        &mut self.master
+    }
+
+    pub fn into_master(self) -> DormMaster {
+        self.master
+    }
+}
+
+impl ControlPlane for LocalTransport {
+    fn call(&mut self, req: Request) -> Result<Response> {
+        Ok(self.master.dispatch(req))
+    }
+}
+
+/// Std-only TCP client: length-prefixed frames plus the version handshake
+/// (connect fails with the peer's typed rejection on a version mismatch).
+pub struct TcpTransport {
+    stream: TcpStream,
+    max_frame: usize,
+}
+
+impl TcpTransport {
+    /// Connect and handshake.  `cfg` supplies the frame-size limit and IO
+    /// timeout (`io_timeout_ms = 0` blocks forever).
+    pub fn connect(addr: &str, cfg: &NetConfig) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let timeout = (cfg.io_timeout_ms > 0).then(|| Duration::from_millis(cfg.io_timeout_ms));
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
+        let mut t = TcpTransport { stream, max_frame: cfg.max_frame_bytes };
+        match t.call(Request::Hello { major: PROTO_MAJOR, minor: PROTO_MINOR })? {
+            Response::HelloAck { .. } => Ok(t),
+            Response::Error(e) => bail!("handshake rejected by {addr}: {e}"),
+            other => bail!("unexpected handshake response from {addr}: {other:?}"),
+        }
+    }
+}
+
+impl ControlPlane for TcpTransport {
+    fn call(&mut self, req: Request) -> Result<Response> {
+        let payload = wire::encode_request(&req);
+        wire::write_frame(&mut self.stream, &payload, self.max_frame)
+            .context("send request frame")?;
+        let payload = wire::read_frame(&mut self.stream, self.max_frame)
+            .context("receive response frame")?;
+        let rsp = wire::decode_response(&payload).context("decode response")?;
+        Ok(rsp)
+    }
+}

@@ -1,0 +1,352 @@
+//! The master side of the TCP control plane.
+//!
+//! [`serve`] binds a listener, moves the [`DormMaster`] behind a mutex,
+//! and runs an accept loop on a background thread; each connection gets
+//! its own handler thread.  Design points:
+//!
+//! * **Handshake first.**  The first frame of every connection must be
+//!   [`Request::Hello`]; version mismatches and pre-handshake requests
+//!   are answered with a typed error and the connection is closed.
+//! * **Errors are answers.**  An unknown request tag or an undecodable
+//!   payload produces a decodable [`Response::Error`] and the connection
+//!   *survives* (framing is intact — the whole frame was consumed).
+//!   Only unrecoverable conditions close it: an oversized frame (framing
+//!   cannot resync past an unread body), an IO error, or a read timeout
+//!   on a half-sent frame — so a stalled or malicious peer cannot wedge
+//!   a handler thread.
+//! * **The server owns wall time.**  Heartbeats/expiries carrying a
+//!   non-finite `now_hours` are stamped with hours since server start —
+//!   one clock domain for the whole lease table, no cross-process clock
+//!   agreement needed.  When `NetConfig::lease_sweep_ms > 0` the accept
+//!   loop also drives [`Request::ExpireLeases`] itself, which is what
+//!   makes lease expiry reflect *real missed packets* in the two-process
+//!   demo.
+
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::NetConfig;
+use crate::master::DormMaster;
+use crate::proto::{wire, ErrorCode, ProtoError, Request, Response};
+
+/// Running server: address, shared master, and the accept-thread handle.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    master: Arc<Mutex<DormMaster>>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` ephemeral ports for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared master, e.g. for in-process inspection in tests.
+    pub fn master(&self) -> Arc<Mutex<DormMaster>> {
+        Arc::clone(&self.master)
+    }
+
+    /// Has a [`Request::Shutdown`] (or [`ServerHandle::stop`]) landed?
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Ask the accept loop to exit without waiting for it.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the accept loop exits (a client sent Shutdown, or
+    /// [`ServerHandle::stop`] was called).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve `master` on `cfg.bind_addr` until a shutdown request arrives.
+pub fn serve(master: DormMaster, cfg: &NetConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.bind_addr)
+        .with_context(|| format!("bind {}", cfg.bind_addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let master = Arc::new(Mutex::new(master));
+    let stop = Arc::new(AtomicBool::new(false));
+    let epoch = Instant::now();
+
+    let accept = {
+        let master = Arc::clone(&master);
+        let stop = Arc::clone(&stop);
+        let cfg = cfg.clone();
+        std::thread::spawn(move || accept_loop(listener, master, stop, cfg, epoch))
+    };
+    Ok(ServerHandle { addr, master, stop, accept: Some(accept) })
+}
+
+fn hours_since(epoch: Instant) -> f64 {
+    epoch.elapsed().as_secs_f64() / 3600.0
+}
+
+fn lock_master(m: &Mutex<DormMaster>) -> std::sync::MutexGuard<'_, DormMaster> {
+    // a handler that panicked mid-dispatch poisons the lock; the master's
+    // state is still the best available, so serving beats aborting
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    master: Arc<Mutex<DormMaster>>,
+    stop: Arc<AtomicBool>,
+    cfg: NetConfig,
+    epoch: Instant,
+) {
+    let sweep_every = (cfg.lease_sweep_ms > 0).then(|| Duration::from_millis(cfg.lease_sweep_ms));
+    let mut last_sweep = Instant::now();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                log::debug!("control-plane connection from {peer}");
+                let master = Arc::clone(&master);
+                let stop = Arc::clone(&stop);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || handle_conn(stream, master, stop, cfg, epoch));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if let Some(period) = sweep_every {
+                    if last_sweep.elapsed() >= period {
+                        last_sweep = Instant::now();
+                        let now = hours_since(epoch);
+                        let rsp = lock_master(&master)
+                            .dispatch(Request::ExpireLeases { now_hours: now });
+                        if let Response::Expired { dead } = rsp {
+                            if !dead.is_empty() {
+                                log::warn!("lease sweep at {now:.5} h: servers {dead:?} expired");
+                            }
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                log::warn!("accept failed: {e}; retrying");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Substitute the server's wall clock for "stamp at arrival" markers.
+fn stamp(req: Request, epoch: Instant) -> Request {
+    match req {
+        Request::Heartbeat { server, now_hours, report } if !now_hours.is_finite() => {
+            Request::Heartbeat { server, now_hours: hours_since(epoch), report }
+        }
+        Request::ExpireLeases { now_hours } if !now_hours.is_finite() => {
+            Request::ExpireLeases { now_hours: hours_since(epoch) }
+        }
+        Request::RecoverServer { server, now_hours } if !now_hours.is_finite() => {
+            Request::RecoverServer { server, now_hours: hours_since(epoch) }
+        }
+        other => other,
+    }
+}
+
+/// Write one response frame.  A response that would itself exceed the
+/// frame limit (e.g. a `StateView` over a very large app population) is
+/// replaced by an in-band typed error rather than silently dropping the
+/// connection — errors are answers here too.
+fn send(stream: &mut TcpStream, rsp: &Response, max: usize) -> bool {
+    let mut payload = wire::encode_response(rsp);
+    if payload.len() > max {
+        // progressively shorter details so the substitute itself fits
+        // even a pathologically small (but legal, >= 64 B) frame limit
+        let full = format!(
+            "response of {} B exceeds the {max} B frame limit; \
+             narrow the query or raise [net].max_frame_bytes",
+            payload.len()
+        );
+        for detail in [full.as_str(), "response too large", ""] {
+            let sub = wire::encode_response(&Response::Error(ProtoError::new(
+                ErrorCode::FrameTooLarge,
+                detail,
+            )));
+            if sub.len() <= max {
+                payload = sub;
+                break;
+            }
+        }
+    }
+    wire::write_frame(stream, &payload, max).is_ok()
+}
+
+/// Read exactly `buf.len()` bytes in ~100 ms polls.  While no byte of
+/// `buf` has arrived and `idle_ok` holds, waiting is healthy (a control
+/// connection between commands) and continues indefinitely; once a frame
+/// is partially read — or for a frame body — a peer silent for `stall`
+/// is stalled and the read fails so the handler can reap the connection.
+/// Checks `stop` between polls.  `Ok(false)` = clean EOF before byte 0.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    idle_ok: bool,
+    stall: Option<Duration>,
+) -> std::result::Result<bool, ()> {
+    use std::io::Read;
+    let mut pos = 0;
+    let mut quiet_since: Option<Instant> = None;
+    while pos < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(false);
+        }
+        match stream.read(&mut buf[pos..]) {
+            Ok(0) => return if pos == 0 { Ok(false) } else { Err(()) },
+            Ok(n) => {
+                pos += n;
+                quiet_since = None;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if idle_ok && pos == 0 {
+                    continue;
+                }
+                let since = *quiet_since.get_or_insert_with(Instant::now);
+                if let Some(stall) = stall {
+                    if since.elapsed() >= stall {
+                        return Err(());
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return Err(()),
+        }
+    }
+    Ok(true)
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    master: Arc<Mutex<DormMaster>>,
+    stop: Arc<AtomicBool>,
+    cfg: NetConfig,
+    epoch: Instant,
+) {
+    stream.set_nodelay(true).ok();
+    // the listener is nonblocking and some platforms let accepted sockets
+    // inherit that flag, which would turn the timeout reads below into a
+    // busy spin and make mid-frame writes fail spuriously — clear it
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    // ~100 ms poll quantum: reads wake often enough to observe `stop` and
+    // to enforce the mid-frame stall deadline without busy-waiting
+    if stream.set_read_timeout(Some(Duration::from_millis(100))).is_err() {
+        return;
+    }
+    let stall = (cfg.io_timeout_ms > 0).then(|| Duration::from_millis(cfg.io_timeout_ms));
+    if stream.set_write_timeout(stall).is_err() {
+        return;
+    }
+    let max = cfg.max_frame_bytes;
+    let mut negotiated = false;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // header: idle waiting is healthy between commands
+        let mut hdr = [0u8; wire::FRAME_HEADER];
+        match read_full(&mut stream, &mut hdr, &stop, true, stall) {
+            Ok(true) => {}
+            _ => return, // EOF, stop, or a peer stalled mid-header
+        }
+        let len = u32::from_be_bytes(hdr) as usize;
+        if len > max {
+            // framing cannot resync past an unread body: answer, close
+            let e = ProtoError::new(
+                ErrorCode::FrameTooLarge,
+                format!("frame of {len} B exceeds the {max} B limit"),
+            );
+            send(&mut stream, &Response::Error(e), max);
+            return;
+        }
+        // body: a silent peer mid-frame is stalled — reap, never hang
+        let mut payload = vec![0u8; len];
+        match read_full(&mut stream, &mut payload, &stop, false, stall) {
+            Ok(true) => {}
+            _ => return,
+        }
+        let req = match wire::decode_request(&payload) {
+            Ok(r) => r,
+            Err(wire::WireError::UnknownRequestTag(t)) => {
+                // a newer peer's message: typed refusal, connection lives
+                let e = ProtoError::new(
+                    ErrorCode::UnsupportedRequest,
+                    format!("request tag {t:#04x} is not known to protocol v{}.{}",
+                        crate::proto::PROTO_MAJOR, crate::proto::PROTO_MINOR),
+                );
+                if !send(&mut stream, &Response::Error(e), max) {
+                    return;
+                }
+                continue;
+            }
+            Err(e) => {
+                let e = ProtoError::new(ErrorCode::MalformedFrame, e);
+                if !send(&mut stream, &Response::Error(e), max) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if !negotiated {
+            match req {
+                Request::Hello { .. } => {
+                    let rsp = lock_master(&master).dispatch(req);
+                    let ok = matches!(rsp, Response::HelloAck { .. });
+                    if !send(&mut stream, &rsp, max) || !ok {
+                        return; // version rejected: typed error then close
+                    }
+                    negotiated = true;
+                    continue;
+                }
+                _ => {
+                    let e = ProtoError::new(
+                        ErrorCode::HandshakeRequired,
+                        "first frame on a connection must be Hello",
+                    );
+                    send(&mut stream, &Response::Error(e), max);
+                    return;
+                }
+            }
+        }
+        let shutdown = req == Request::Shutdown;
+        let rsp = lock_master(&master).dispatch(stamp(req, epoch));
+        let sent = send(&mut stream, &rsp, max);
+        if shutdown {
+            stop.store(true, Ordering::SeqCst);
+            return;
+        }
+        if !sent {
+            return;
+        }
+    }
+}

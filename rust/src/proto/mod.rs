@@ -1,0 +1,287 @@
+//! The versioned control-plane protocol (DESIGN.md §9).
+//!
+//! Dorm's core claim is *flat sharing overhead*: applications launch tasks
+//! directly on their partitions and only talk to the master on resize
+//! (§III-D), so the control plane is a narrow command protocol rather than
+//! a wide object API.  This module pins that surface down as data:
+//!
+//! * [`Request`] / [`Response`] — every master↔slave and harness↔master
+//!   interaction as a serializable message pair.  `DormMaster::dispatch`
+//!   is the single entry point that consumes a [`Request`] and produces a
+//!   [`Response`]; the legacy `pub fn` surface is a set of helpers behind
+//!   it.
+//! * [`ErrorCode`] / [`ProtoError`] — typed failures.  A transport error
+//!   (bad frame, unknown tag) and a semantic error (unknown app, invalid
+//!   state) travel in the same decodable envelope, so a remote peer never
+//!   sees a hang or a closed socket where a diagnosis was possible.
+//! * [`PROTO_MAJOR`] / [`PROTO_MINOR`] + [`negotiate`] — the version
+//!   handshake.  Every connection opens with [`Request::Hello`]; a major
+//!   mismatch (or a *newer* minor — the peer could send requests we
+//!   cannot decode) is rejected with [`ErrorCode::VersionMismatch`].
+//! * [`Directive`] — the master→slave half of the heartbeat exchange.
+//!   Remote slaves converge on the master's book by reconciliation: each
+//!   heartbeat carries the slave's [`SlaveReport`], and the ack returns
+//!   the create/destroy directives that make the remote book match the
+//!   master's (idempotent, self-healing against lost acks — the Borg/K8s
+//!   desired-state shape rather than a fragile command queue).
+//!
+//! The wire encoding lives in [`wire`]; the transports that carry the
+//! frames live in [`crate::net`].
+
+pub mod wire;
+
+use std::fmt;
+
+use crate::app::{AppId, AppSpec, AppState};
+use crate::resources::Res;
+use crate::slave::SlaveReport;
+
+/// Protocol major version: incompatible wire or semantics changes.
+pub const PROTO_MAJOR: u16 = 1;
+/// Protocol minor version: backward-compatible additions within a major.
+pub const PROTO_MINOR: u16 = 0;
+
+/// Version handshake rule: same major, minor no newer than ours (a newer
+/// minor may legally send request tags we cannot decode, so it is refused
+/// up front with a decodable error instead of failing mid-session).
+pub fn negotiate(major: u16, minor: u16) -> Result<(), ProtoError> {
+    if major != PROTO_MAJOR || minor > PROTO_MINOR {
+        return Err(ProtoError {
+            code: ErrorCode::VersionMismatch,
+            detail: format!(
+                "peer speaks v{major}.{minor}, this master speaks v{PROTO_MAJOR}.{PROTO_MINOR}"
+            ),
+        });
+    }
+    Ok(())
+}
+
+/// A control-plane request (client → master).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Version handshake; must be the first frame on a TCP connection.
+    Hello { major: u16, minor: u16 },
+    /// §III-B submission (the 6-tuple).
+    Submit { spec: AppSpec },
+    /// App finished / cancelled; free its partition, re-optimize.
+    Complete { app: AppId },
+    /// Slave liveness + (optionally) its xᵢⱼ column.  `now_hours` is the
+    /// sender's clock; over TCP a non-finite value means "stamp at
+    /// arrival" and the server substitutes its own wall clock (a slave
+    /// must not have to agree with the master about time).
+    Heartbeat {
+        server: u32,
+        now_hours: f64,
+        report: Option<SlaveReport>,
+    },
+    /// Admin/testing: place containers on a server's book directly.
+    CreateContainers {
+        server: u32,
+        app: AppId,
+        demand: Res,
+        count: u32,
+    },
+    /// Admin/testing: remove containers (`count = None` destroys all).
+    Destroy {
+        server: u32,
+        app: AppId,
+        count: Option<u32>,
+    },
+    /// Persist a checkpoint for one running app (periodic checkpointing).
+    CheckpointApp { app: AppId },
+    /// Bookkeeping progress for masters without a compute service.
+    AdvanceSteps { app: AppId, steps: u64 },
+    /// Force a snapshot→solve→enforce round.
+    Reallocate,
+    /// Declare every server with a lapsed lease dead (same clock domain
+    /// as [`Request::Heartbeat`]; non-finite = server wall clock).
+    ExpireLeases { now_hours: f64 },
+    /// Failure injection: the server is dead right now.
+    FailServer { server: u32 },
+    /// The server rejoined empty at original capacity.
+    RecoverServer { server: u32, now_hours: f64 },
+    /// Observable master state; `app` filters to one application.
+    QueryState { app: Option<AppId> },
+    /// Stop serving (TCP server drains and exits; local no-op).
+    Shutdown,
+}
+
+/// A control-plane response (master → client).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Handshake accepted; carries the master's version.
+    HelloAck { major: u16, minor: u16 },
+    Ok,
+    Submitted { app: AppId },
+    /// Heartbeat consumed.  `alive` is the lease verdict (a dead server's
+    /// late heartbeat does not resurrect it — it must send
+    /// [`Request::RecoverServer`]); `directives` converge the reporting
+    /// slave's book on the master's.
+    HeartbeatAck {
+        alive: bool,
+        directives: Vec<Directive>,
+    },
+    /// Servers newly declared dead by [`Request::ExpireLeases`].
+    Expired { dead: Vec<u32> },
+    /// Apps degraded by [`Request::FailServer`].
+    Affected { apps: Vec<AppId> },
+    State(StateView),
+    Error(ProtoError),
+}
+
+/// Master→slave container command, piggybacked on the heartbeat ack.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Directive {
+    Create { app: AppId, demand: Res, count: u32 },
+    Destroy { app: AppId, count: u32 },
+    DestroyAll { app: AppId },
+}
+
+/// Typed error category; the wire carries the code, `detail` is advisory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Handshake refused (major mismatch or newer minor).
+    VersionMismatch,
+    /// A non-Hello frame arrived before the handshake completed.
+    HandshakeRequired,
+    /// Payload failed to decode (truncated fields, bad enum value, ...).
+    MalformedFrame,
+    /// Frame length exceeds the negotiated limit (fatal to the connection).
+    FrameTooLarge,
+    /// Unknown request tag (e.g. a newer peer's new message).
+    UnsupportedRequest,
+    UnknownApp,
+    UnknownServer,
+    /// Submission rejected by `AppSpec::validate`.
+    InvalidSpec,
+    /// The app's lifecycle state forbids the operation.
+    InvalidState,
+    /// A field value is out of domain (non-finite time, zero count, ...).
+    InvalidArgument,
+    /// Anything else; `detail` has the underlying error chain.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_u16(self) -> u16 {
+        match self {
+            ErrorCode::VersionMismatch => 1,
+            ErrorCode::HandshakeRequired => 2,
+            ErrorCode::MalformedFrame => 3,
+            ErrorCode::FrameTooLarge => 4,
+            ErrorCode::UnsupportedRequest => 5,
+            ErrorCode::UnknownApp => 6,
+            ErrorCode::UnknownServer => 7,
+            ErrorCode::InvalidSpec => 8,
+            ErrorCode::InvalidState => 9,
+            ErrorCode::InvalidArgument => 10,
+            ErrorCode::Internal => 11,
+        }
+    }
+
+    /// Decode; an unrecognized code (newer peer) degrades to `Internal`
+    /// rather than failing the whole frame.
+    pub fn from_u16(v: u16) -> ErrorCode {
+        match v {
+            1 => ErrorCode::VersionMismatch,
+            2 => ErrorCode::HandshakeRequired,
+            3 => ErrorCode::MalformedFrame,
+            4 => ErrorCode::FrameTooLarge,
+            5 => ErrorCode::UnsupportedRequest,
+            6 => ErrorCode::UnknownApp,
+            7 => ErrorCode::UnknownServer,
+            8 => ErrorCode::InvalidSpec,
+            9 => ErrorCode::InvalidState,
+            10 => ErrorCode::InvalidArgument,
+            _ => ErrorCode::Internal,
+        }
+    }
+}
+
+/// A typed control-plane error, decodable on the remote side.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProtoError {
+    pub code: ErrorCode,
+    pub detail: String,
+}
+
+impl ProtoError {
+    pub fn new(code: ErrorCode, detail: impl fmt::Display) -> Self {
+        ProtoError { code, detail: detail.to_string() }
+    }
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}: {}", self.code, self.detail)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Observable master state — everything the parity tests compare and the
+/// `dorm ctl query` command prints.  Scalar aggregates plus one row per
+/// (non-filtered) app; no paths or clocks that differ across processes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateView {
+    /// Master event clock (one tick per mutating control-plane event).
+    pub clock: u64,
+    pub alive_servers: u32,
+    pub total_servers: u32,
+    pub active_apps: u32,
+    pub total_adjustments: u32,
+    pub total_recoveries: u32,
+    /// Eq. 1 over alive servers.
+    pub utilization: f64,
+    pub apps: Vec<AppView>,
+}
+
+/// One application row of a [`StateView`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppView {
+    pub id: AppId,
+    pub state: AppState,
+    pub containers: u32,
+    pub steps_done: u64,
+    pub ckpt_step: u64,
+    pub adjustments: u32,
+    pub recoveries: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn negotiate_rules() {
+        assert!(negotiate(PROTO_MAJOR, PROTO_MINOR).is_ok());
+        assert!(negotiate(PROTO_MAJOR, 0).is_ok(), "older minor accepted");
+        let newer_minor = negotiate(PROTO_MAJOR, PROTO_MINOR + 1).unwrap_err();
+        assert_eq!(newer_minor.code, ErrorCode::VersionMismatch);
+        let newer_major = negotiate(PROTO_MAJOR + 1, 0).unwrap_err();
+        assert_eq!(newer_major.code, ErrorCode::VersionMismatch);
+        let older_major = negotiate(0, 0).unwrap_err();
+        assert_eq!(older_major.code, ErrorCode::VersionMismatch);
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [
+            ErrorCode::VersionMismatch,
+            ErrorCode::HandshakeRequired,
+            ErrorCode::MalformedFrame,
+            ErrorCode::FrameTooLarge,
+            ErrorCode::UnsupportedRequest,
+            ErrorCode::UnknownApp,
+            ErrorCode::UnknownServer,
+            ErrorCode::InvalidSpec,
+            ErrorCode::InvalidState,
+            ErrorCode::InvalidArgument,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::from_u16(code.as_u16()), code);
+        }
+        // forward compatibility: a future code degrades, not fails
+        assert_eq!(ErrorCode::from_u16(999), ErrorCode::Internal);
+    }
+}

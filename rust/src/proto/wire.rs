@@ -1,0 +1,815 @@
+//! Binary wire format for the control-plane protocol (DESIGN.md §9).
+//!
+//! serde is not in this image's vendored registry (same constraint as
+//! [`crate::config`]), so the encoding is hand-rolled and deliberately
+//! boring:
+//!
+//! * **Frame**: `u32` big-endian payload length, then the payload.  A
+//!   receiver enforces a configurable length limit *before* allocating
+//!   ([`read_frame`]); an oversized frame is fatal to the connection
+//!   (framing cannot be resynchronized past an unread body).
+//! * **Payload**: one tag byte selecting the message, then its fields.
+//!   Integers are big-endian; `f64` travels as its IEEE-754 bits (NaN
+//!   round-trips — the protocol uses non-finite times as "stamp at
+//!   arrival" markers); strings are `u32` length + UTF-8; options are a
+//!   `0/1` byte; vectors/maps are a `u32` count + elements.
+//! * **Evolution**: decoders read the fields they know and ignore any
+//!   trailing bytes, which is the extension room for same-major additions;
+//!   an unknown *tag* is a typed [`WireError::UnknownRequestTag`] /
+//!   [`WireError::UnknownResponseTag`] so the server can answer with a
+//!   decodable [`ErrorCode::UnsupportedRequest`] instead of hanging up.
+//!
+//! Everything here is pure bytes↔types; sockets live in [`crate::net`].
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::{Read, Write};
+
+use crate::app::{AppId, AppSpec, AppState, Engine};
+use crate::proto::{
+    AppView, Directive, ErrorCode, ProtoError, Request, Response, StateView,
+};
+use crate::resources::Res;
+use crate::slave::SlaveReport;
+
+/// Frame header size: the `u32` payload length.
+pub const FRAME_HEADER: usize = 4;
+
+/// Decode/IO failure. IO errors only arise from the framing helpers.
+#[derive(Debug)]
+pub enum WireError {
+    /// Payload ended before a field was complete.
+    Truncated,
+    /// First payload byte is no request this version knows.
+    UnknownRequestTag(u8),
+    /// First payload byte is no response this version knows.
+    UnknownResponseTag(u8),
+    /// A field decoded to an out-of-domain value (bad UTF-8, bad enum...).
+    Malformed(String),
+    /// Declared frame length exceeds the configured limit.
+    FrameTooLarge { len: usize, max: usize },
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated payload"),
+            WireError::UnknownRequestTag(t) => write!(f, "unknown request tag {t:#04x}"),
+            WireError::UnknownResponseTag(t) => write!(f, "unknown response tag {t:#04x}"),
+            WireError::Malformed(m) => write!(f, "malformed payload: {m}"),
+            WireError::FrameTooLarge { len, max } => {
+                write!(f, "frame of {len} B exceeds the {max} B limit")
+            }
+            WireError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+// ---- framing ------------------------------------------------------------
+
+/// Write one `len || payload` frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8], max: usize) -> Result<(), WireError> {
+    if payload.len() > max {
+        return Err(WireError::FrameTooLarge { len: payload.len(), max });
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, enforcing `max` before the body is allocated.
+pub fn read_frame(r: &mut impl Read, max: usize) -> Result<Vec<u8>, WireError> {
+    let mut hdr = [0u8; FRAME_HEADER];
+    r.read_exact(&mut hdr)?;
+    let len = u32::from_be_bytes(hdr) as usize;
+    if len > max {
+        return Err(WireError::FrameTooLarge { len, max });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+// ---- primitive readers --------------------------------------------------
+
+/// Bounds-checked reader over a decoded payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(WireError::Malformed(format!("bool byte {b}"))),
+        }
+    }
+
+    /// Element counts are validated against the remaining bytes (one byte
+    /// per element minimum) so a hostile count cannot drive a huge
+    /// allocation out of a small frame.
+    fn count(&mut self, min_elem_bytes: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem_bytes.max(1)) > self.buf.len() - self.pos {
+            return Err(WireError::Truncated);
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("string is not UTF-8".into()))
+    }
+
+    fn res(&mut self) -> Result<Res, WireError> {
+        let m = self.count(8)?;
+        let mut v = Vec::with_capacity(m);
+        for _ in 0..m {
+            v.push(self.f64()?);
+        }
+        Ok(Res(v))
+    }
+}
+
+// ---- primitive writers --------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_be_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_res(out: &mut Vec<u8>, r: &Res) {
+    out.extend_from_slice(&(r.0.len() as u32).to_be_bytes());
+    for &x in &r.0 {
+        out.extend_from_slice(&x.to_bits().to_be_bytes());
+    }
+}
+
+fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_bits().to_be_bytes());
+}
+
+// ---- shared composite types ---------------------------------------------
+
+fn engine_tag(e: Engine) -> u8 {
+    match e {
+        Engine::MxNet => 0,
+        Engine::TensorFlow => 1,
+        Engine::Petuum => 2,
+        Engine::MpiCaffe => 3,
+    }
+}
+
+fn engine_of(tag: u8) -> Result<Engine, WireError> {
+    Ok(match tag {
+        0 => Engine::MxNet,
+        1 => Engine::TensorFlow,
+        2 => Engine::Petuum,
+        3 => Engine::MpiCaffe,
+        t => return Err(WireError::Malformed(format!("engine tag {t}"))),
+    })
+}
+
+fn state_tag(s: AppState) -> u8 {
+    match s {
+        AppState::Pending => 0,
+        AppState::Running => 1,
+        AppState::Checkpointing => 2,
+        AppState::Killed => 3,
+        AppState::Resuming => 4,
+        AppState::Degraded => 5,
+        AppState::Recovering => 6,
+        AppState::Completed => 7,
+        AppState::Failed => 8,
+    }
+}
+
+fn state_of(tag: u8) -> Result<AppState, WireError> {
+    Ok(match tag {
+        0 => AppState::Pending,
+        1 => AppState::Running,
+        2 => AppState::Checkpointing,
+        3 => AppState::Killed,
+        4 => AppState::Resuming,
+        5 => AppState::Degraded,
+        6 => AppState::Recovering,
+        7 => AppState::Completed,
+        8 => AppState::Failed,
+        t => return Err(WireError::Malformed(format!("app-state tag {t}"))),
+    })
+}
+
+fn put_spec(out: &mut Vec<u8>, s: &AppSpec) {
+    out.push(engine_tag(s.executor));
+    put_res(out, &s.demand);
+    out.extend_from_slice(&s.weight.to_be_bytes());
+    out.extend_from_slice(&s.n_max.to_be_bytes());
+    out.extend_from_slice(&s.n_min.to_be_bytes());
+    put_str(out, &s.cmd[0]);
+    put_str(out, &s.cmd[1]);
+}
+
+fn spec(c: &mut Cur) -> Result<AppSpec, WireError> {
+    Ok(AppSpec {
+        executor: engine_of(c.u8()?)?,
+        demand: c.res()?,
+        weight: c.u32()?,
+        n_max: c.u32()?,
+        n_min: c.u32()?,
+        cmd: [c.str()?, c.str()?],
+    })
+}
+
+fn put_report(out: &mut Vec<u8>, r: &SlaveReport) {
+    put_str(out, &r.name);
+    put_res(out, &r.capacity);
+    put_res(out, &r.available);
+    out.extend_from_slice(&(r.containers.len() as u32).to_be_bytes());
+    for (id, n) in &r.containers {
+        out.extend_from_slice(&id.0.to_be_bytes());
+        out.extend_from_slice(&n.to_be_bytes());
+    }
+}
+
+fn report(c: &mut Cur) -> Result<SlaveReport, WireError> {
+    let name = c.str()?;
+    let capacity = c.res()?;
+    let available = c.res()?;
+    let n = c.count(12)?;
+    let mut containers = BTreeMap::new();
+    for _ in 0..n {
+        let id = AppId(c.u64()?);
+        containers.insert(id, c.u32()?);
+    }
+    Ok(SlaveReport { name, capacity, available, containers })
+}
+
+fn put_directive(out: &mut Vec<u8>, d: &Directive) {
+    match d {
+        Directive::Create { app, demand, count } => {
+            out.push(0);
+            out.extend_from_slice(&app.0.to_be_bytes());
+            put_res(out, demand);
+            out.extend_from_slice(&count.to_be_bytes());
+        }
+        Directive::Destroy { app, count } => {
+            out.push(1);
+            out.extend_from_slice(&app.0.to_be_bytes());
+            out.extend_from_slice(&count.to_be_bytes());
+        }
+        Directive::DestroyAll { app } => {
+            out.push(2);
+            out.extend_from_slice(&app.0.to_be_bytes());
+        }
+    }
+}
+
+fn directive(c: &mut Cur) -> Result<Directive, WireError> {
+    Ok(match c.u8()? {
+        0 => Directive::Create { app: AppId(c.u64()?), demand: c.res()?, count: c.u32()? },
+        1 => Directive::Destroy { app: AppId(c.u64()?), count: c.u32()? },
+        2 => Directive::DestroyAll { app: AppId(c.u64()?) },
+        t => return Err(WireError::Malformed(format!("directive tag {t}"))),
+    })
+}
+
+// ---- requests -----------------------------------------------------------
+
+const REQ_HELLO: u8 = 0x01;
+const REQ_SUBMIT: u8 = 0x02;
+const REQ_COMPLETE: u8 = 0x03;
+const REQ_HEARTBEAT: u8 = 0x04;
+const REQ_CREATE: u8 = 0x05;
+const REQ_DESTROY: u8 = 0x06;
+const REQ_CHECKPOINT: u8 = 0x07;
+const REQ_ADVANCE: u8 = 0x08;
+const REQ_REALLOCATE: u8 = 0x09;
+const REQ_EXPIRE: u8 = 0x0a;
+const REQ_FAIL: u8 = 0x0b;
+const REQ_RECOVER: u8 = 0x0c;
+const REQ_QUERY: u8 = 0x0d;
+const REQ_SHUTDOWN: u8 = 0x0e;
+
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32);
+    match req {
+        Request::Hello { major, minor } => {
+            out.push(REQ_HELLO);
+            out.extend_from_slice(&major.to_be_bytes());
+            out.extend_from_slice(&minor.to_be_bytes());
+        }
+        Request::Submit { spec } => {
+            out.push(REQ_SUBMIT);
+            put_spec(&mut out, spec);
+        }
+        Request::Complete { app } => {
+            out.push(REQ_COMPLETE);
+            out.extend_from_slice(&app.0.to_be_bytes());
+        }
+        Request::Heartbeat { server, now_hours, report } => {
+            out.push(REQ_HEARTBEAT);
+            out.extend_from_slice(&server.to_be_bytes());
+            put_f64(&mut out, *now_hours);
+            match report {
+                None => out.push(0),
+                Some(r) => {
+                    out.push(1);
+                    put_report(&mut out, r);
+                }
+            }
+        }
+        Request::CreateContainers { server, app, demand, count } => {
+            out.push(REQ_CREATE);
+            out.extend_from_slice(&server.to_be_bytes());
+            out.extend_from_slice(&app.0.to_be_bytes());
+            put_res(&mut out, demand);
+            out.extend_from_slice(&count.to_be_bytes());
+        }
+        Request::Destroy { server, app, count } => {
+            out.push(REQ_DESTROY);
+            out.extend_from_slice(&server.to_be_bytes());
+            out.extend_from_slice(&app.0.to_be_bytes());
+            match count {
+                None => out.push(0),
+                Some(n) => {
+                    out.push(1);
+                    out.extend_from_slice(&n.to_be_bytes());
+                }
+            }
+        }
+        Request::CheckpointApp { app } => {
+            out.push(REQ_CHECKPOINT);
+            out.extend_from_slice(&app.0.to_be_bytes());
+        }
+        Request::AdvanceSteps { app, steps } => {
+            out.push(REQ_ADVANCE);
+            out.extend_from_slice(&app.0.to_be_bytes());
+            out.extend_from_slice(&steps.to_be_bytes());
+        }
+        Request::Reallocate => out.push(REQ_REALLOCATE),
+        Request::ExpireLeases { now_hours } => {
+            out.push(REQ_EXPIRE);
+            put_f64(&mut out, *now_hours);
+        }
+        Request::FailServer { server } => {
+            out.push(REQ_FAIL);
+            out.extend_from_slice(&server.to_be_bytes());
+        }
+        Request::RecoverServer { server, now_hours } => {
+            out.push(REQ_RECOVER);
+            out.extend_from_slice(&server.to_be_bytes());
+            put_f64(&mut out, *now_hours);
+        }
+        Request::QueryState { app } => {
+            out.push(REQ_QUERY);
+            match app {
+                None => out.push(0),
+                Some(id) => {
+                    out.push(1);
+                    out.extend_from_slice(&id.0.to_be_bytes());
+                }
+            }
+        }
+        Request::Shutdown => out.push(REQ_SHUTDOWN),
+    }
+    out
+}
+
+pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
+    let mut c = Cur::new(payload);
+    let req = match c.u8()? {
+        REQ_HELLO => Request::Hello { major: c.u16()?, minor: c.u16()? },
+        REQ_SUBMIT => Request::Submit { spec: spec(&mut c)? },
+        REQ_COMPLETE => Request::Complete { app: AppId(c.u64()?) },
+        REQ_HEARTBEAT => {
+            let server = c.u32()?;
+            let now_hours = c.f64()?;
+            let report = if c.bool()? { Some(report(&mut c)?) } else { None };
+            Request::Heartbeat { server, now_hours, report }
+        }
+        REQ_CREATE => Request::CreateContainers {
+            server: c.u32()?,
+            app: AppId(c.u64()?),
+            demand: c.res()?,
+            count: c.u32()?,
+        },
+        REQ_DESTROY => {
+            let server = c.u32()?;
+            let app = AppId(c.u64()?);
+            let count = if c.bool()? { Some(c.u32()?) } else { None };
+            Request::Destroy { server, app, count }
+        }
+        REQ_CHECKPOINT => Request::CheckpointApp { app: AppId(c.u64()?) },
+        REQ_ADVANCE => Request::AdvanceSteps { app: AppId(c.u64()?), steps: c.u64()? },
+        REQ_REALLOCATE => Request::Reallocate,
+        REQ_EXPIRE => Request::ExpireLeases { now_hours: c.f64()? },
+        REQ_FAIL => Request::FailServer { server: c.u32()? },
+        REQ_RECOVER => Request::RecoverServer { server: c.u32()?, now_hours: c.f64()? },
+        REQ_QUERY => {
+            let app = if c.bool()? { Some(AppId(c.u64()?)) } else { None };
+            Request::QueryState { app }
+        }
+        REQ_SHUTDOWN => Request::Shutdown,
+        t => return Err(WireError::UnknownRequestTag(t)),
+    };
+    Ok(req)
+}
+
+// ---- responses ----------------------------------------------------------
+
+const RSP_HELLO_ACK: u8 = 0x81;
+const RSP_OK: u8 = 0x82;
+const RSP_SUBMITTED: u8 = 0x83;
+const RSP_HEARTBEAT_ACK: u8 = 0x84;
+const RSP_EXPIRED: u8 = 0x85;
+const RSP_AFFECTED: u8 = 0x86;
+const RSP_STATE: u8 = 0x87;
+const RSP_ERROR: u8 = 0x88;
+
+pub fn encode_response(rsp: &Response) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32);
+    match rsp {
+        Response::HelloAck { major, minor } => {
+            out.push(RSP_HELLO_ACK);
+            out.extend_from_slice(&major.to_be_bytes());
+            out.extend_from_slice(&minor.to_be_bytes());
+        }
+        Response::Ok => out.push(RSP_OK),
+        Response::Submitted { app } => {
+            out.push(RSP_SUBMITTED);
+            out.extend_from_slice(&app.0.to_be_bytes());
+        }
+        Response::HeartbeatAck { alive, directives } => {
+            out.push(RSP_HEARTBEAT_ACK);
+            out.push(u8::from(*alive));
+            out.extend_from_slice(&(directives.len() as u32).to_be_bytes());
+            for d in directives {
+                put_directive(&mut out, d);
+            }
+        }
+        Response::Expired { dead } => {
+            out.push(RSP_EXPIRED);
+            out.extend_from_slice(&(dead.len() as u32).to_be_bytes());
+            for j in dead {
+                out.extend_from_slice(&j.to_be_bytes());
+            }
+        }
+        Response::Affected { apps } => {
+            out.push(RSP_AFFECTED);
+            out.extend_from_slice(&(apps.len() as u32).to_be_bytes());
+            for a in apps {
+                out.extend_from_slice(&a.0.to_be_bytes());
+            }
+        }
+        Response::State(v) => {
+            out.push(RSP_STATE);
+            out.extend_from_slice(&v.clock.to_be_bytes());
+            out.extend_from_slice(&v.alive_servers.to_be_bytes());
+            out.extend_from_slice(&v.total_servers.to_be_bytes());
+            out.extend_from_slice(&v.active_apps.to_be_bytes());
+            out.extend_from_slice(&v.total_adjustments.to_be_bytes());
+            out.extend_from_slice(&v.total_recoveries.to_be_bytes());
+            put_f64(&mut out, v.utilization);
+            out.extend_from_slice(&(v.apps.len() as u32).to_be_bytes());
+            for a in &v.apps {
+                out.extend_from_slice(&a.id.0.to_be_bytes());
+                out.push(state_tag(a.state));
+                out.extend_from_slice(&a.containers.to_be_bytes());
+                out.extend_from_slice(&a.steps_done.to_be_bytes());
+                out.extend_from_slice(&a.ckpt_step.to_be_bytes());
+                out.extend_from_slice(&a.adjustments.to_be_bytes());
+                out.extend_from_slice(&a.recoveries.to_be_bytes());
+            }
+        }
+        Response::Error(e) => {
+            out.push(RSP_ERROR);
+            out.extend_from_slice(&e.code.as_u16().to_be_bytes());
+            put_str(&mut out, &e.detail);
+        }
+    }
+    out
+}
+
+pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
+    let mut c = Cur::new(payload);
+    let rsp = match c.u8()? {
+        RSP_HELLO_ACK => Response::HelloAck { major: c.u16()?, minor: c.u16()? },
+        RSP_OK => Response::Ok,
+        RSP_SUBMITTED => Response::Submitted { app: AppId(c.u64()?) },
+        RSP_HEARTBEAT_ACK => {
+            let alive = c.bool()?;
+            let n = c.count(9)?;
+            let mut directives = Vec::with_capacity(n);
+            for _ in 0..n {
+                directives.push(directive(&mut c)?);
+            }
+            Response::HeartbeatAck { alive, directives }
+        }
+        RSP_EXPIRED => {
+            let n = c.count(4)?;
+            let mut dead = Vec::with_capacity(n);
+            for _ in 0..n {
+                dead.push(c.u32()?);
+            }
+            Response::Expired { dead }
+        }
+        RSP_AFFECTED => {
+            let n = c.count(8)?;
+            let mut apps = Vec::with_capacity(n);
+            for _ in 0..n {
+                apps.push(AppId(c.u64()?));
+            }
+            Response::Affected { apps }
+        }
+        RSP_STATE => {
+            let clock = c.u64()?;
+            let alive_servers = c.u32()?;
+            let total_servers = c.u32()?;
+            let active_apps = c.u32()?;
+            let total_adjustments = c.u32()?;
+            let total_recoveries = c.u32()?;
+            let utilization = c.f64()?;
+            let n = c.count(37)?;
+            let mut apps = Vec::with_capacity(n);
+            for _ in 0..n {
+                apps.push(AppView {
+                    id: AppId(c.u64()?),
+                    state: state_of(c.u8()?)?,
+                    containers: c.u32()?,
+                    steps_done: c.u64()?,
+                    ckpt_step: c.u64()?,
+                    adjustments: c.u32()?,
+                    recoveries: c.u32()?,
+                });
+            }
+            Response::State(StateView {
+                clock,
+                alive_servers,
+                total_servers,
+                active_apps,
+                total_adjustments,
+                total_recoveries,
+                utilization,
+                apps,
+            })
+        }
+        RSP_ERROR => Response::Error(ProtoError {
+            code: ErrorCode::from_u16(c.u16()?),
+            detail: c.str()?,
+        }),
+        t => return Err(WireError::UnknownResponseTag(t)),
+    };
+    Ok(rsp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_requests() -> Vec<Request> {
+        let spec = AppSpec {
+            executor: Engine::MpiCaffe,
+            demand: Res::cpu_gpu_ram(1.0, 1.0, 8.0),
+            weight: 2,
+            n_max: 5,
+            n_min: 1,
+            cmd: ["lr".into(), "lr --resume".into()],
+        };
+        let report = SlaveReport {
+            name: "slave03".into(),
+            capacity: Res::cpu_gpu_ram(12.0, 0.0, 128.0),
+            available: Res::cpu_gpu_ram(8.0, 0.0, 96.0),
+            containers: [(AppId(1), 2), (AppId(9), 1)].into_iter().collect(),
+        };
+        vec![
+            Request::Hello { major: 1, minor: 0 },
+            Request::Submit { spec },
+            Request::Complete { app: AppId(7) },
+            Request::Heartbeat { server: 3, now_hours: 2.25, report: Some(report) },
+            Request::Heartbeat { server: 0, now_hours: f64::NAN, report: None },
+            Request::CreateContainers {
+                server: 1,
+                app: AppId(4),
+                demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+                count: 3,
+            },
+            Request::Destroy { server: 1, app: AppId(4), count: Some(2) },
+            Request::Destroy { server: 1, app: AppId(4), count: None },
+            Request::CheckpointApp { app: AppId(4) },
+            Request::AdvanceSteps { app: AppId(4), steps: 1_000_000 },
+            Request::Reallocate,
+            Request::ExpireLeases { now_hours: 17.5 },
+            Request::FailServer { server: 19 },
+            Request::RecoverServer { server: 19, now_hours: 18.0 },
+            Request::QueryState { app: None },
+            Request::QueryState { app: Some(AppId(2)) },
+            Request::Shutdown,
+        ]
+    }
+
+    fn sample_responses() -> Vec<Response> {
+        vec![
+            Response::HelloAck { major: 1, minor: 0 },
+            Response::Ok,
+            Response::Submitted { app: AppId(11) },
+            Response::HeartbeatAck {
+                alive: true,
+                directives: vec![
+                    Directive::Create {
+                        app: AppId(1),
+                        demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+                        count: 4,
+                    },
+                    Directive::Destroy { app: AppId(2), count: 1 },
+                    Directive::DestroyAll { app: AppId(3) },
+                ],
+            },
+            Response::HeartbeatAck { alive: false, directives: vec![] },
+            Response::Expired { dead: vec![0, 5] },
+            Response::Affected { apps: vec![AppId(1), AppId(2)] },
+            Response::State(StateView {
+                clock: 42,
+                alive_servers: 3,
+                total_servers: 4,
+                active_apps: 2,
+                total_adjustments: 5,
+                total_recoveries: 1,
+                utilization: 1.875,
+                apps: vec![AppView {
+                    id: AppId(1),
+                    state: AppState::Recovering,
+                    containers: 6,
+                    steps_done: 1000,
+                    ckpt_step: 900,
+                    adjustments: 2,
+                    recoveries: 1,
+                }],
+            }),
+            Response::Error(ProtoError::new(ErrorCode::UnknownApp, "app9 not found")),
+        ]
+    }
+
+    /// NaN != NaN, so request equality is checked through the debug form.
+    #[test]
+    fn requests_roundtrip() {
+        for req in sample_requests() {
+            let buf = encode_request(&req);
+            let back = decode_request(&buf).unwrap();
+            assert_eq!(format!("{back:?}"), format!("{req:?}"));
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        for rsp in sample_responses() {
+            let buf = encode_response(&rsp);
+            assert_eq!(decode_response(&buf).unwrap(), rsp);
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_extension_room() {
+        // a same-major peer may append fields; decoders must not reject
+        let mut buf = encode_request(&Request::Reallocate);
+        buf.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(decode_request(&buf).unwrap(), Request::Reallocate);
+    }
+
+    #[test]
+    fn unknown_tags_are_typed() {
+        assert!(matches!(
+            decode_request(&[0x7f]),
+            Err(WireError::UnknownRequestTag(0x7f))
+        ));
+        assert!(matches!(
+            decode_response(&[0x03]),
+            Err(WireError::UnknownResponseTag(0x03))
+        ));
+        assert!(matches!(decode_request(&[]), Err(WireError::Truncated)));
+    }
+
+    /// Every truncation of every sample message must produce a typed
+    /// error, never a panic or a bogus success that consumed garbage.
+    #[test]
+    fn truncations_never_panic() {
+        for req in sample_requests() {
+            let buf = encode_request(&req);
+            for cut in 0..buf.len() {
+                let _ = decode_request(&buf[..cut]);
+            }
+        }
+        for rsp in sample_responses() {
+            let buf = encode_response(&rsp);
+            for cut in 0..buf.len() {
+                let _ = decode_response(&buf[..cut]);
+            }
+        }
+    }
+
+    /// Deterministic byte fuzz: random payloads decode to a typed error
+    /// or a value — never a panic, never an oversized allocation.
+    #[test]
+    fn random_bytes_never_panic() {
+        let mut rng = Rng::new(0xd0e);
+        for _ in 0..2000 {
+            let len = rng.below(64) as usize;
+            let buf: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = decode_request(&buf);
+            let _ = decode_response(&buf);
+        }
+    }
+
+    #[test]
+    fn hostile_counts_rejected() {
+        // Heartbeat with a report whose container count claims 2^31
+        // entries but supplies none: must fail Truncated, not allocate.
+        let mut buf = vec![REQ_HEARTBEAT];
+        buf.extend_from_slice(&0u32.to_be_bytes());
+        buf.extend_from_slice(&1.0f64.to_bits().to_be_bytes());
+        buf.push(1); // Some(report)
+        buf.extend_from_slice(&2u32.to_be_bytes()); // name len 2
+        buf.extend_from_slice(b"s0");
+        buf.extend_from_slice(&0u32.to_be_bytes()); // capacity m=0
+        buf.extend_from_slice(&0u32.to_be_bytes()); // available m=0
+        buf.extend_from_slice(&0x8000_0000u32.to_be_bytes()); // container count
+        assert!(matches!(decode_request(&buf), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn framing_roundtrip_and_limits() {
+        let payload = encode_request(&Request::QueryState { app: None });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload, 1024).unwrap();
+        assert_eq!(buf.len(), FRAME_HEADER + payload.len());
+        let mut rd = &buf[..];
+        assert_eq!(read_frame(&mut rd, 1024).unwrap(), payload);
+
+        // oversize refused on both sides
+        assert!(matches!(
+            write_frame(&mut Vec::new(), &[0u8; 100], 64),
+            Err(WireError::FrameTooLarge { .. })
+        ));
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(1_000_000u32).to_be_bytes());
+        let mut rd = &huge[..];
+        assert!(matches!(
+            read_frame(&mut rd, 64),
+            Err(WireError::FrameTooLarge { len: 1_000_000, max: 64 })
+        ));
+
+        // truncated stream: typed io error, no hang on in-memory readers
+        let mut partial = Vec::new();
+        partial.extend_from_slice(&(10u32).to_be_bytes());
+        partial.extend_from_slice(&[1, 2, 3]);
+        let mut rd = &partial[..];
+        assert!(matches!(read_frame(&mut rd, 64), Err(WireError::Io(_))));
+    }
+}

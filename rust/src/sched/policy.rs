@@ -76,12 +76,18 @@ pub trait CmsPolicy {
         0.0
     }
 
-    /// Out-of-band capacity change (a server died or came back,
-    /// `crate::fault`): any solve state derived from the old capacity
-    /// vector — snapshot cache, warm-start incumbent — must be dropped.
-    /// Both backends (live master and DES) call this at the same points so
-    /// stateful policies stay decision-identical across them.  Default:
-    /// no-op (the baselines are stateless).
+    /// Out-of-band capacity change: any solve state derived from the old
+    /// capacity vector — snapshot cache, warm-start incumbent — must be
+    /// dropped.  Three dispatched control-plane events drive this
+    /// (`crate::proto`, DESIGN.md §9): a server died (lease expiry /
+    /// `FailServer`), a server came back (`RecoverServer`), or a
+    /// heartbeat's `SlaveReport` announced a different hardware capacity
+    /// than the master's book (the slave is authoritative; the master
+    /// adopts it and re-solves).  Both backends (live master and DES)
+    /// call this at the same points so stateful policies stay
+    /// decision-identical across them — and `tests/transport_parity.rs`
+    /// extends that parity across transports.  Default: no-op (the
+    /// baselines are stateless).
     fn on_capacity_change(&mut self) {}
 
     /// Multiplier on application progress under this CMS, in (0, 1].

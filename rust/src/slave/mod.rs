@@ -34,7 +34,7 @@ pub struct Container {
 /// `DormMaster::heartbeat` renews the liveness lease without
 /// materializing a report — so today this type is the wire-format
 /// scaffolding, not a consumed message.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SlaveReport {
     pub name: String,
     pub capacity: Res,
@@ -79,6 +79,24 @@ impl DormSlave {
 
     pub fn capacity(&self) -> &Res {
         &self.capacity
+    }
+
+    /// Adopt a new capacity vector (control-plane capacity event: the
+    /// slave is authoritative about its own hardware).  The resource
+    /// dimensionality is fixed for the cluster's lifetime; shrinking
+    /// below current usage is allowed — the master re-solves and the
+    /// overcommit drains as containers are destroyed.
+    pub fn set_capacity(&mut self, capacity: Res) -> Result<()> {
+        if capacity.m() != self.capacity.m() {
+            bail!(
+                "slave {}: capacity has {} resource types, cluster uses {}",
+                self.name,
+                capacity.m(),
+                self.capacity.m()
+            );
+        }
+        self.capacity = capacity;
+        Ok(())
     }
 
     /// Create `count` containers for `app`; all-or-nothing.

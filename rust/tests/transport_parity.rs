@@ -1,0 +1,175 @@
+//! Golden transport parity: the API redesign's key invariant.
+//!
+//! `LocalTransport` (direct dispatch into an in-process `DormMaster`) and
+//! `TcpTransport` (length-prefixed frames over loopback to a served
+//! master) must be *indistinguishable* to a client: the same scripted
+//! request sequence — submissions, progress, checkpoints, heartbeats,
+//! lease expiry, capacity events, recovery, completions, and typed
+//! errors — must produce identical response values AND identical
+//! observable master state after every single request.  If either
+//! transport grows private semantics (stamping, reordering, lossy
+//! encoding, divergent error mapping), this breaks.
+//!
+//! Protocol notes: all times in the script are finite and explicit — the
+//! TCP server only substitutes wall clock for non-finite times, so the
+//! script stays deterministic on both transports.
+
+use dorm::app::{AppId, AppSpec, CheckpointStore, Engine};
+use dorm::config::{ClusterConfig, DormConfig, FaultConfig, NetConfig};
+use dorm::master::DormMaster;
+use dorm::net::{serve, ControlPlane, LocalTransport, TcpTransport};
+use dorm::proto::{ErrorCode, Request, Response};
+use dorm::resources::Res;
+use dorm::slave::SlaveReport;
+
+fn store(tag: &str) -> CheckpointStore {
+    let dir = std::env::temp_dir().join(format!("dorm_tparity_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    CheckpointStore::new(dir).unwrap()
+}
+
+fn master(tag: &str) -> DormMaster {
+    DormMaster::new(
+        &ClusterConfig::uniform(3, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+        DormConfig { theta1: 0.3, theta2: 0.34 },
+        store(tag),
+    )
+    .with_fault(&FaultConfig { lease_timeout_hours: 1.0, ..Default::default() })
+}
+
+fn spec(cpu: f64, ram: f64, w: u32, lo: u32, hi: u32) -> AppSpec {
+    AppSpec {
+        executor: Engine::MxNet,
+        demand: Res::cpu_gpu_ram(cpu, 0.0, ram),
+        weight: w,
+        n_max: hi,
+        n_min: lo,
+        cmd: ["parity".into(), "parity".into()],
+    }
+}
+
+/// An empty-book report matching the master's view of server `j` — what
+/// a freshly started remote slave would send.
+fn empty_report(j: usize) -> SlaveReport {
+    SlaveReport {
+        name: format!("slave{j:02}"),
+        capacity: Res::cpu_gpu_ram(12.0, 0.0, 64.0),
+        available: Res::cpu_gpu_ram(12.0, 0.0, 64.0),
+        containers: Default::default(),
+    }
+}
+
+/// The scripted workload: happy paths, fault paths, capacity events and
+/// typed-error paths, all with explicit times.
+fn script() -> Vec<Request> {
+    vec![
+        // a second in-band handshake must answer identically everywhere
+        Request::Hello { major: dorm::proto::PROTO_MAJOR, minor: dorm::proto::PROTO_MINOR },
+        Request::Submit { spec: spec(2.0, 8.0, 1, 1, 24) }, // app1: spans cluster
+        Request::Submit { spec: spec(2.0, 6.0, 2, 1, 24) }, // app2: forces adjustment
+        Request::AdvanceSteps { app: AppId(1), steps: 100 },
+        Request::CheckpointApp { app: AppId(1) },
+        Request::AdvanceSteps { app: AppId(1), steps: 40 },
+        // servers 1 and 2 report at t=2; server 0 has gone silent
+        Request::Heartbeat { server: 1, now_hours: 2.0, report: None },
+        Request::Heartbeat { server: 2, now_hours: 2.0, report: Some(empty_report(2)) },
+        Request::ExpireLeases { now_hours: 3.0 }, // kills server 0
+        // capacity event: server 1 shrinks; engine caches must drop and
+        // the re-solve must land identically on both transports
+        Request::Heartbeat {
+            server: 1,
+            now_hours: 3.1,
+            report: Some(SlaveReport {
+                capacity: Res::cpu_gpu_ram(10.0, 0.0, 64.0),
+                available: Res::cpu_gpu_ram(10.0, 0.0, 64.0),
+                ..empty_report(1)
+            }),
+        },
+        Request::RecoverServer { server: 0, now_hours: 4.0 },
+        // typed errors must be value-identical end to end
+        Request::Complete { app: AppId(99) },
+        Request::Heartbeat { server: 9, now_hours: 4.1, report: None },
+        Request::Submit { spec: spec(2.0, 8.0, 1, 0, 4) }, // n_min 0: invalid
+        Request::FailServer { server: 77 },
+        Request::Complete { app: AppId(2) },
+        Request::CheckpointApp { app: AppId(2) }, // terminal: InvalidState
+        Request::Reallocate,
+        Request::Complete { app: AppId(1) },
+        Request::QueryState { app: Some(AppId(1)) },
+    ]
+}
+
+/// Run the script, recording each request's response plus the full state
+/// view after it — the (decision, observable-state) sequence.
+fn run_script(t: &mut dyn ControlPlane) -> Vec<(Response, Response)> {
+    script()
+        .into_iter()
+        .map(|req| {
+            let rsp = t.call(req).expect("transport must not fail mid-script");
+            let view = t.call(Request::QueryState { app: None }).expect("query");
+            (rsp, view)
+        })
+        .collect()
+}
+
+#[test]
+fn local_and_tcp_transports_replay_identical_sequences() {
+    // ---- local side -----------------------------------------------------
+    let mut local = LocalTransport::new(master("local"));
+    let local_seq = run_script(&mut local);
+
+    // ---- TCP side: same master config served over loopback --------------
+    let net = NetConfig {
+        bind_addr: "127.0.0.1:0".into(),
+        io_timeout_ms: 10_000,
+        ..NetConfig::default()
+    };
+    let handle = serve(master("tcp"), &net).unwrap();
+    let mut tcp = TcpTransport::connect(&handle.addr().to_string(), &net).unwrap();
+    let tcp_seq = run_script(&mut tcp);
+    handle.stop();
+
+    // ---- the invariant --------------------------------------------------
+    assert_eq!(local_seq.len(), tcp_seq.len());
+    for (i, (l, t)) in local_seq.iter().zip(&tcp_seq).enumerate() {
+        assert_eq!(l.0, t.0, "response {i} diverged (request {:?})", script()[i]);
+        assert_eq!(l.1, t.1, "state after request {i} diverged ({:?})", script()[i]);
+    }
+
+    // ---- sanity: the script exercised the interesting paths -------------
+    let rsp = |i: usize| &local_seq[i].0;
+    assert_eq!(rsp(1), &Response::Submitted { app: AppId(1) });
+    assert_eq!(rsp(2), &Response::Submitted { app: AppId(2) });
+    assert_eq!(rsp(8), &Response::Expired { dead: vec![0] }, "silent server 0 expired");
+    match rsp(9) {
+        Response::HeartbeatAck { alive, .. } => assert!(*alive, "server 1 lives"),
+        other => panic!("capacity-event heartbeat answered {other:?}"),
+    }
+    for (i, code) in [
+        (11, ErrorCode::UnknownApp),
+        (12, ErrorCode::UnknownServer),
+        (13, ErrorCode::InvalidSpec),
+        (14, ErrorCode::UnknownServer),
+        (16, ErrorCode::InvalidState),
+    ] {
+        match rsp(i) {
+            Response::Error(e) => assert_eq!(e.code, code, "request {i}"),
+            other => panic!("request {i} answered {other:?}, wanted {code:?}"),
+        }
+    }
+    // the fault path actually ran: app1 lost the 40 post-checkpoint steps
+    // and recovered; the capacity event forced at least one more re-solve
+    let final_view = match &local_seq.last().unwrap().1 {
+        Response::State(v) => v,
+        other => panic!("query answered {other:?}"),
+    };
+    assert_eq!(final_view.active_apps, 0, "script drains fully");
+    assert!(final_view.total_recoveries >= 1, "server death recovery ran");
+    assert!(final_view.total_adjustments >= 1, "second arrival adjusted app1");
+    let app1 = match rsp(19) {
+        Response::State(v) => v.apps[0].clone(),
+        other => panic!("filtered query answered {other:?}"),
+    };
+    assert_eq!(app1.id, AppId(1));
+    assert_eq!(app1.steps_done, 100, "rolled back to the checkpoint");
+}

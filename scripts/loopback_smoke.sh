@@ -1,0 +1,101 @@
+#!/usr/bin/env bash
+# Loopback smoke test for the two-process control plane (DESIGN.md §9):
+# start `dorm master` and one `dorm slave` as real processes on
+# 127.0.0.1, drive a submit → resize → complete cycle with `dorm ctl`,
+# and assert a clean shutdown.  Run from the repo root after
+# `cargo build --release`; exits non-zero on any failed step.
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/dorm}
+PORT=${PORT:-46011}
+ADDR=127.0.0.1:$PORT
+STORE=$(mktemp -d)
+LOG=$(mktemp -d)
+MASTER_PID=
+SLAVE_PID=
+
+cleanup() {
+  [ -n "$SLAVE_PID" ] && kill "$SLAVE_PID" 2>/dev/null || true
+  [ -n "$MASTER_PID" ] && kill "$MASTER_PID" 2>/dev/null || true
+  rm -rf "$STORE" "$LOG"
+}
+trap cleanup EXIT
+
+fail() {
+  echo "SMOKE FAIL: $1" >&2
+  echo "--- master log ---" >&2; cat "$LOG/master.log" >&2 || true
+  echo "--- slave log ---" >&2; cat "$LOG/slave.log" >&2 || true
+  exit 1
+}
+
+# one control-plane request (the master is confirmed listening below
+# before the first call, so no connect retries are needed)
+ctl() {
+  "$BIN" ctl --connect "$ADDR" "$@"
+}
+
+echo "== starting master ($ADDR, 2 slaves) and one slave agent"
+# θ = 0.5/0.5: generous adjustment budget so the resize step below is a
+# guaranteed shrink (same configuration the master unit tests pin)
+"$BIN" master --bind "$ADDR" --slaves 2 --theta1 0.5 --theta2 0.5 \
+  --store "$STORE" >"$LOG/master.log" 2>&1 &
+MASTER_PID=$!
+for _ in $(seq 1 50); do
+  grep -q "listening" "$LOG/master.log" 2>/dev/null && break
+  kill -0 "$MASTER_PID" 2>/dev/null || fail "master died during startup"
+  sleep 0.1
+done
+grep -q "listening" "$LOG/master.log" || fail "master never started listening"
+
+"$BIN" slave --connect "$ADDR" --index 0 --period-ms 100 >"$LOG/slave.log" 2>&1 &
+SLAVE_PID=$!
+
+echo "== submit: lone app takes the whole 2-server cluster"
+OUT=$(ctl submit --cpu 2 --ram 8 --nmax 12) || fail "submit app1: $OUT"
+echo "$OUT" | grep -q "submitted app1" || fail "unexpected submit output: $OUT"
+ctl query | grep -q "app1 Running containers=12" \
+  || fail "app1 should hold 12 containers: $(ctl query)"
+
+echo "== resize: second submission shrinks the first"
+OUT=$(ctl submit --cpu 2 --ram 8 --nmax 12) || fail "submit app2: $OUT"
+echo "$OUT" | grep -q "submitted app2" || fail "unexpected submit output: $OUT"
+Q=$(ctl query)
+echo "$Q" | grep -q "app2 Running" || fail "app2 not admitted: $Q"
+echo "$Q" | grep -q "app1 Running containers=12" \
+  && fail "app1 failed to shrink: $Q" || true
+
+echo "== slave agent converges on the master book"
+CONVERGED=
+for _ in $(seq 1 50); do
+  if grep -q "applied" "$LOG/slave.log" 2>/dev/null; then CONVERGED=1; break; fi
+  sleep 0.1
+done
+[ -n "$CONVERGED" ] || fail "slave never applied reconciliation directives"
+
+echo "== complete both; cluster drains"
+ctl complete --app 1 | grep -q ok || fail "complete app1"
+ctl complete --app 2 | grep -q ok || fail "complete app2"
+ctl query | grep -q "active=0" || fail "apps did not drain: $(ctl query)"
+
+echo "== shutdown: master exits cleanly, slave notices and exits"
+ctl shutdown | grep -q ok || fail "shutdown not acknowledged"
+for _ in $(seq 1 100); do
+  kill -0 "$MASTER_PID" 2>/dev/null || break
+  sleep 0.1
+done
+if kill -0 "$MASTER_PID" 2>/dev/null; then
+  fail "master still running after shutdown"
+fi
+wait "$MASTER_PID" 2>/dev/null || fail "master exited non-zero"
+MASTER_PID=
+# the slave exits on its own once its heartbeats start failing
+for _ in $(seq 1 100); do
+  kill -0 "$SLAVE_PID" 2>/dev/null || break
+  sleep 0.1
+done
+if kill -0 "$SLAVE_PID" 2>/dev/null; then
+  fail "slave still running after master shutdown"
+fi
+SLAVE_PID=
+
+echo "SMOKE PASS: submit -> resize -> complete -> shutdown all clean"
