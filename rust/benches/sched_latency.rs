@@ -1,21 +1,32 @@
 //! §II-C reproduction: per-task scheduling latency of task-level two-level
 //! sharing (Mesos-like) vs Dorm's local task placement — plus the
 //! allocation-engine incremental re-solve path (snapshot cache +
-//! warm-started solves) that keeps Dorm's per-event decision cost low.
+//! warm-started solves, delta placement, amortized admission) that keeps
+//! Dorm's per-event decision cost low.
 //!
 //! Paper measurement: "in a 100-node Mesos cluster ... the average
 //! scheduling latency per task is about 430 ms"; Dorm places tasks on the
 //! local TaskExecutor (§III-D) with no central round-trip.
+//!
+//! The **churn sweep** (DESIGN.md §10) scales a saturated cluster with a
+//! standing deferred backlog up to 1000 apps × 500 servers and replays the
+//! same completion/arrival churn through the legacy decision path
+//! (per-prefix clones + full re-pack) and the incremental path (floor-
+//! skipped admission + delta packing), reporting per-event decision
+//! latency and moved containers.  Set `DORM_SCHED_SCALE=ci` for the
+//! reduced CI sweep and `DORM_BENCH_JSON=<path>` to emit the machine-
+//! readable `BENCH_sched.json` (scripts/bench_sched.sh wires both).
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use dorm::app::AppId;
 use dorm::baselines::tasklevel::{dorm_local_placement_ms, TaskLevelModel};
 use dorm::config::DormConfig;
-use dorm::optimizer::OptApp;
+use dorm::optimizer::{Decision, OptApp};
 use dorm::report;
 use dorm::resources::Res;
 use dorm::sched::{AllocationEngine, EngineApp};
@@ -154,8 +165,251 @@ fn engine_resolve_bench() {
     );
 }
 
+/// One churn scenario's measurements for one decision path.
+struct ChurnRun {
+    cold_us: f64,
+    samples_us: Vec<f64>,
+    moved_containers: u64,
+    /// Per-event decided counts (for old-vs-new parity checking).
+    count_seqs: Vec<BTreeMap<AppId, u32>>,
+    delta_packs: u64,
+    full_repacks: u64,
+    admit_skips: u64,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() as f64 * q) as usize).min(sorted.len() - 1);
+    sorted[i]
+}
+
+/// Synthetic churn app mix: three container shapes on ⟨16 CPU, 64 GB⟩
+/// servers, floors sized so a saturated cluster keeps a deferred backlog
+/// (the admission loop's worst case).
+fn churn_app(id: u64, submit: f64) -> EngineApp {
+    const SHAPES: [(f64, f64, u32); 3] =
+        [(1.0, 4.0, 24), (2.0, 8.0, 16), (3.0, 12.0, 8)];
+    let (cpu, ram, n_max) = SHAPES[(id % 3) as usize];
+    EngineApp {
+        opt: OptApp {
+            id: AppId(id),
+            demand: Res::cpu_gpu_ram(cpu, 0.0, ram),
+            weight: 1.0,
+            n_min: 4,
+            n_max,
+            prev: None,
+            current: BTreeMap::new(),
+        },
+        submit,
+    }
+}
+
+/// Apply a decision back onto the snapshot, as the master/DES would.
+fn enforce(apps: &mut [EngineApp], d: &Decision) {
+    for e in apps.iter_mut() {
+        match d.counts.get(&e.opt.id) {
+            Some(&c) if c > 0 => {
+                e.opt.prev = Some(c);
+                e.opt.current = d
+                    .placement
+                    .assignment
+                    .get(&e.opt.id)
+                    .cloned()
+                    .unwrap_or_default();
+            }
+            _ => {
+                e.opt.prev = None;
+                e.opt.current = BTreeMap::new();
+            }
+        }
+    }
+}
+
+/// Run the scripted churn (completion + arrival per event) through one
+/// engine configuration and measure per-event decision latency.
+fn churn_run(napps: usize, nservers: usize, events: usize, incremental: bool) -> ChurnRun {
+    let caps: Vec<Res> = (0..nservers)
+        .map(|_| Res::cpu_gpu_ram(16.0, 0.0, 64.0))
+        .collect();
+    // backlog: a few more apps than the floors admit, so every event
+    // exercises the deferral loop
+    let backlog = 6usize;
+    let mut apps: Vec<EngineApp> = (0..napps + backlog)
+        .map(|i| churn_app(i as u64, i as f64))
+        .collect();
+    let mut next_id = (napps + backlog) as u64;
+
+    let mut eng = AllocationEngine::new(DormConfig::DORM3);
+    eng.set_incremental(incremental);
+
+    let t0 = Instant::now();
+    let d = eng.decide(&apps, &caps).expect("cold churn snapshot solvable");
+    let cold_us = t0.elapsed().as_secs_f64() * 1e6;
+    enforce(&mut apps, &d);
+
+    let mut run = ChurnRun {
+        cold_us,
+        samples_us: Vec::with_capacity(events),
+        moved_containers: 0,
+        count_seqs: Vec::with_capacity(events),
+        delta_packs: 0,
+        full_repacks: 0,
+        admit_skips: 0,
+    };
+    for _ in 0..events {
+        // complete the oldest running app, submit a fresh one
+        if let Some(pos) = apps.iter().position(|e| e.opt.prev.is_some()) {
+            apps.remove(pos);
+        }
+        apps.push(churn_app(next_id, next_id as f64));
+        next_id += 1;
+
+        let t0 = Instant::now();
+        let d = eng.decide(&apps, &caps).expect("churn snapshot solvable");
+        run.samples_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        run.moved_containers += d.stats.moved_containers;
+        run.count_seqs.push(d.counts.clone());
+        enforce(&mut apps, &d);
+    }
+    let s = eng.stats();
+    run.delta_packs = s.delta_packs;
+    run.full_repacks = s.full_repacks;
+    run.admit_skips = s.admit_prefixes_skipped;
+    run
+}
+
+/// Scales for the churn sweep: (apps, servers, churn events).
+fn churn_scales() -> Vec<(usize, usize, usize)> {
+    match std::env::var("DORM_SCHED_SCALE").as_deref() {
+        Ok("ci") => vec![(60, 30, 12), (200, 100, 8)],
+        _ => vec![(50, 20, 16), (200, 100, 10), (1000, 500, 6)],
+    }
+}
+
+/// The tentpole measurement: old-vs-new decision path over the churn
+/// workload, per scale; optionally emitted as BENCH_sched.json.
+fn churn_sweep() {
+    harness::banner("incremental decision path — churn sweep (old vs new)");
+    let scales = churn_scales();
+    let mut rows = Vec::new();
+    let mut json_scales = Vec::new();
+    for &(napps, nservers, events) in &scales {
+        let old = churn_run(napps, nservers, events, false);
+        let new = churn_run(napps, nservers, events, true);
+
+        let mut old_sorted = old.samples_us.clone();
+        old_sorted.sort_by(|a, b| a.total_cmp(b));
+        let mut new_sorted = new.samples_us.clone();
+        new_sorted.sort_by(|a, b| a.total_cmp(b));
+        let (op50, op99) = (percentile(&old_sorted, 0.5), percentile(&old_sorted, 0.99));
+        let (np50, np99) = (percentile(&new_sorted, 0.5), percentile(&new_sorted, 0.99));
+        let speedup = op50 / np50.max(0.01);
+
+        // count parity is pinned at unit level
+        // (sched::engine::tests::legacy_and_incremental_paths_agree and the
+        // place_delta≡place property test); here it is reported — at full
+        // saturation the delta packer may legitimately fit a placement the
+        // from-scratch re-pack fragments on, which shifts counts upward
+        let counts_match = old.count_seqs == new.count_seqs;
+        if !counts_match {
+            println!(
+                "  NOTE: counts diverged at {napps}x{nservers} \
+                 (delta packing admitted a placement the re-pack could not)"
+            );
+        }
+        assert!(new.delta_packs >= 1, "delta path must run in the churn phase");
+        assert_eq!(old.delta_packs, 0, "legacy path must never delta-pack");
+        if counts_match && new.full_repacks == 0 {
+            // same decisions and every event delta-packed: the delta path
+            // moves exactly Σ|Δnᵢ| containers, the netted re-pack at least
+            // that.  (A fallback event re-packs against the incremental
+            // run's own placement history, so the comparison only holds
+            // when no fallback fired.)
+            assert!(
+                new.moved_containers <= old.moved_containers,
+                "delta packing may not move more containers ({} > {})",
+                new.moved_containers,
+                old.moved_containers
+            );
+        }
+
+        rows.push(vec![
+            format!("{napps}x{nservers}"),
+            format!("{events}"),
+            format!("{:.0}", op50),
+            format!("{:.0}", np50),
+            format!("{speedup:.1}x"),
+            format!("{:.0}", op99),
+            format!("{:.0}", np99),
+            old.moved_containers.to_string(),
+            new.moved_containers.to_string(),
+        ]);
+        json_scales.push(format!(
+            concat!(
+                "    {{\"apps\": {}, \"servers\": {}, \"events\": {},\n",
+                "     \"old\": {{\"cold_us\": {:.1}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, ",
+                "\"moved_containers\": {}}},\n",
+                "     \"new\": {{\"cold_us\": {:.1}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, ",
+                "\"moved_containers\": {}, \"delta_packs\": {}, \"full_repacks\": {}, ",
+                "\"admit_prefixes_skipped\": {}}},\n",
+                "     \"speedup_p50\": {:.2}, \"counts_match\": {}}}"
+            ),
+            napps,
+            nservers,
+            events,
+            old.cold_us,
+            op50,
+            op99,
+            old.moved_containers,
+            new.cold_us,
+            np50,
+            np99,
+            new.moved_containers,
+            new.delta_packs,
+            new.full_repacks,
+            new.admit_skips,
+            speedup,
+            counts_match,
+        ));
+        println!(
+            "  {napps}x{nservers}: old p50 {:.0} us -> new p50 {:.0} us ({speedup:.1}x), \
+             moved {} -> {}, {} prefixes skipped",
+            op50, np50, old.moved_containers, new.moved_containers, new.admit_skips
+        );
+    }
+    println!(
+        "{}",
+        report::table(
+            &[
+                "apps x servers",
+                "events",
+                "old p50 (us)",
+                "new p50 (us)",
+                "speedup",
+                "old p99",
+                "new p99",
+                "old moved",
+                "new moved",
+            ],
+            &rows
+        )
+    );
+
+    if let Ok(path) = std::env::var("DORM_BENCH_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"sched_latency_churn\",\n  \"scales\": [\n{}\n  ]\n}}\n",
+            json_scales.join(",\n")
+        );
+        std::fs::write(&path, json).expect("write BENCH json");
+        println!("  wrote {path}");
+    }
+}
+
 fn main() {
     engine_resolve_bench();
+    churn_sweep();
 
     harness::banner("§II-C — task-level scheduling latency vs cluster size");
     let mut rng = Rng::new(7);

@@ -12,6 +12,7 @@
 //! count.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::app::Engine;
 use crate::cluster::{place, PlacementInput, ServerId};
@@ -111,7 +112,7 @@ impl CmsPolicy for IaasPolicy {
             }
         }
 
-        Some(AllocationUpdate { assignment, adjusted: vec![] })
+        Some(AllocationUpdate { assignment: Arc::new(assignment), adjusted: vec![] })
     }
 }
 

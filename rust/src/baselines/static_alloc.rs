@@ -6,6 +6,7 @@
 //! static sharing" behaviour §II-C attributes to existing CMSs.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::cluster::{place, PlacementInput, ServerId};
 use crate::sched::{AllocationUpdate, CmsPolicy, SchedCtx};
@@ -75,7 +76,7 @@ impl CmsPolicy for StaticPolicy {
             // app that fits (others keep waiting), so continue scanning.
         }
 
-        Some(AllocationUpdate { assignment, adjusted: vec![] })
+        Some(AllocationUpdate { assignment: Arc::new(assignment), adjusted: vec![] })
     }
 }
 

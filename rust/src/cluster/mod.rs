@@ -9,7 +9,7 @@
 
 mod placement;
 
-pub use placement::{place, Placement, PlacementInput};
+pub use placement::{place, place_delta, Assignment, PackState, Placement, PlacementInput};
 
 use std::collections::BTreeMap;
 

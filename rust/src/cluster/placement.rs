@@ -8,13 +8,36 @@
 //! paper scale (uniform containers, 20 servers) packs whatever the
 //! aggregate-capacity check admits; when it cannot, the optimizer retries
 //! with reduced counts (see [`crate::optimizer`]).
+//!
+//! Two entry points (DESIGN.md §10):
+//!
+//! * [`place`] — the full round: movers release everything and are
+//!   re-packed best-fit-decreasing.  Best fit runs over a slack-ordered
+//!   server heap ([`fill_best_fit`]) instead of a per-container linear
+//!   scan, so packing c containers onto s servers costs ~O(c log s).
+//! * [`place_delta`] — the incremental round: a persistent [`PackState`]
+//!   carries the per-server free-capacity vector across solves, shrinking
+//!   apps release containers in place, growing apps add containers without
+//!   disturbing their existing row, and only when a grow cannot fit does
+//!   the round fall back to the full BFD re-pack.  This is the hot path of
+//!   the allocation engine's per-event decision loop.
+//!
+//! Both paths emit *net* `destroy`/`create` deltas: an (app, server) pair
+//! whose container count ends where it started never appears in either
+//! list, so the Eq. 3 adjusted set is not overstated by movers that land
+//! back on the exact same servers.
 
-use std::collections::BTreeMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+use std::sync::Arc;
 
 use crate::app::AppId;
 use crate::resources::Res;
 
 use super::ServerId;
+
+/// Final xᵢⱼ: one row of (server → container count) per application.
+pub type Assignment = BTreeMap<AppId, BTreeMap<ServerId, u32>>;
 
 /// One application's placement request.
 #[derive(Clone, Debug)]
@@ -30,12 +53,15 @@ pub struct PlacementInput {
 /// Result: per-app server assignment plus the create/destroy delta.
 #[derive(Clone, Debug, Default)]
 pub struct Placement {
-    /// Final xᵢⱼ.
-    pub assignment: BTreeMap<AppId, BTreeMap<ServerId, u32>>,
-    /// Containers to destroy, per app per server (before creates).
+    /// Final xᵢⱼ (shared so cached decisions hand it out without copying).
+    pub assignment: Arc<Assignment>,
+    /// Net containers to destroy, per app per server (before creates).
     pub destroy: Vec<(AppId, ServerId, u32)>,
-    /// Containers to create, per app per server.
+    /// Net containers to create, per app per server.
     pub create: Vec<(AppId, ServerId, u32)>,
+    /// True when the delta packer produced this placement without a full
+    /// BFD re-pack (see [`place_delta`]).
+    pub delta_path: bool,
 }
 
 impl Placement {
@@ -51,6 +77,101 @@ impl Placement {
         apps.dedup();
         apps
     }
+
+    /// Containers this placement physically moves (Σ destroys + Σ creates)
+    /// — the churn the delta packer exists to minimize.
+    pub fn moved_containers(&self) -> u64 {
+        self.destroy
+            .iter()
+            .chain(self.create.iter())
+            .map(|&(_, _, c)| c as u64)
+            .sum()
+    }
+}
+
+/// Best-fit key for placing one `demand` container on free capacity `f`:
+/// the post-placement dominant-share slack, as ordered bits (slacks are
+/// non-negative, so the IEEE bit pattern orders like the float).
+fn slack_bits(f: &Res, demand: &Res, total_cap: &Res) -> u64 {
+    f.clone()
+        .saturating_sub(demand)
+        .dominant_share(total_cap)
+        .to_bits()
+}
+
+/// Place `count` identical `demand`-sized containers by repeated best fit
+/// (feasible server with the least post-placement dominant-share slack,
+/// lowest index on ties — byte-identical to a per-container linear scan)
+/// using a slack-ordered min-heap: build O(s), then O(log s) per
+/// container.  Heap entries are invalidated lazily: a popped entry whose
+/// key no longer matches the live free vector is re-keyed and re-pushed
+/// rather than the index being rebuilt, so callers may mutate `free`
+/// between fills without bookkeeping.  On failure `free` is rolled back
+/// (the fill is atomic).
+fn fill_best_fit(
+    demand: &Res,
+    count: u32,
+    free: &mut [Res],
+    total_cap: &Res,
+) -> Option<BTreeMap<ServerId, u32>> {
+    let mut assigned: BTreeMap<ServerId, u32> = BTreeMap::new();
+    if count == 0 {
+        return Some(assigned);
+    }
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = free
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| demand.fits_in(f))
+        .map(|(j, f)| Reverse((slack_bits(f, demand, total_cap), j)))
+        .collect();
+    for _ in 0..count {
+        let j = loop {
+            let Some(Reverse((bits, j))) = heap.pop() else {
+                // atomic: undo the partial fill before reporting failure
+                for (sid, cnt) in &assigned {
+                    free[sid.0] += &demand.times(*cnt);
+                }
+                return None;
+            };
+            if !demand.fits_in(&free[j]) {
+                continue; // stale: no longer feasible, drop lazily
+            }
+            let live = slack_bits(&free[j], demand, total_cap);
+            if live != bits {
+                heap.push(Reverse((live, j))); // stale: re-key lazily
+                continue;
+            }
+            break j;
+        };
+        free[j] -= demand;
+        *assigned.entry(ServerId(j)).or_insert(0) += 1;
+        if demand.fits_in(&free[j]) {
+            heap.push(Reverse((slack_bits(&free[j], demand, total_cap), j)));
+        }
+    }
+    Some(assigned)
+}
+
+/// Append the net per-server delta between `old` and `new` rows of `app`.
+fn net_deltas(
+    app: AppId,
+    old: &BTreeMap<ServerId, u32>,
+    new: &BTreeMap<ServerId, u32>,
+    destroy: &mut Vec<(AppId, ServerId, u32)>,
+    create: &mut Vec<(AppId, ServerId, u32)>,
+) {
+    for (&sid, &was) in old {
+        let now = new.get(&sid).copied().unwrap_or(0);
+        if was > now {
+            destroy.push((app, sid, was - now));
+        }
+    }
+    for (&sid, &now) in new {
+        let was = old.get(&sid).copied().unwrap_or(0);
+        if now > was {
+            create.push((app, sid, now - was));
+        }
+    }
 }
 
 /// Compute a placement for the given targets on servers with `capacity`.
@@ -58,13 +179,14 @@ impl Placement {
 /// Returns `None` if the targets cannot be packed (caller reduces counts
 /// and retries).  Unchanged apps (target == current total) keep their exact
 /// xᵢⱼ row; changed apps release all containers and are re-packed
-/// best-fit-decreasing.
+/// best-fit-decreasing (deltas are netted, so containers that land back on
+/// their original server are neither destroyed nor created).
 pub fn place(inputs: &[PlacementInput], capacities: &[Res]) -> Option<Placement> {
     let m = capacities.first().map(|c| c.m()).unwrap_or(0);
     let mut free: Vec<Res> = capacities.to_vec();
 
     // Phase 1: pin unchanged apps and subtract their usage.
-    let mut out = Placement::default();
+    let mut assignment: Assignment = BTreeMap::new();
     let mut movers: Vec<&PlacementInput> = Vec::new();
     for inp in inputs {
         let cur_total: u32 = inp.current.values().sum();
@@ -77,22 +199,15 @@ pub fn place(inputs: &[PlacementInput], capacities: &[Res]) -> Option<Placement>
                 }
                 free[sid.0] -= &need;
             }
-            out.assignment.insert(inp.app, inp.current.clone());
+            assignment.insert(inp.app, inp.current.clone());
         } else {
             movers.push(inp);
         }
     }
 
-    // Phase 2: movers release everything...
-    for inp in &movers {
-        for (&sid, &cnt) in &inp.current {
-            if cnt > 0 {
-                out.destroy.push((inp.app, sid, cnt));
-            }
-        }
-    }
-
-    // ...and are re-packed best-fit-decreasing by dominant demand.
+    // Phase 2: movers are re-packed best-fit-decreasing by dominant
+    // demand (their current containers were never charged to `free`, so
+    // releasing them is implicit).
     let total_cap = capacities.iter().fold(Res::zeros(m), |mut acc, c| {
         acc += c;
         acc
@@ -106,34 +221,355 @@ pub fn place(inputs: &[PlacementInput], capacities: &[Res]) -> Option<Placement>
 
     for &idx in &order {
         let inp = movers[idx];
-        let mut assigned: BTreeMap<ServerId, u32> = BTreeMap::new();
-        for _ in 0..inp.target {
-            // best fit: the feasible server with the least remaining
-            // dominant-share slack after placing (packs tightly).
-            let mut best: Option<(usize, f64)> = None;
-            for (j, f) in free.iter().enumerate() {
-                if inp.demand.fits_in(f) {
-                    let slack = f
-                        .clone()
-                        .saturating_sub(&inp.demand)
-                        .dominant_share(&total_cap);
-                    match best {
-                        Some((_, bs)) if bs <= slack => {}
-                        _ => best = Some((j, slack)),
-                    }
-                }
-            }
-            let j = best?.0;
-            free[j] -= &inp.demand;
-            *assigned.entry(ServerId(j)).or_insert(0) += 1;
-        }
-        for (&sid, &cnt) in &assigned {
-            out.create.push((inp.app, sid, cnt));
-        }
-        out.assignment.insert(inp.app, assigned);
+        let assigned = fill_best_fit(&inp.demand, inp.target, &mut free, &total_cap)?;
+        assignment.insert(inp.app, assigned);
     }
 
+    // Phase 3: net out the per-(app, server) deltas.
+    let mut out = Placement {
+        assignment: Arc::new(assignment),
+        ..Default::default()
+    };
+    for inp in &movers {
+        let new_row = &out.assignment[&inp.app];
+        net_deltas(inp.app, &inp.current, new_row, &mut out.destroy, &mut out.create);
+    }
     Some(out)
+}
+
+/// One tracked application inside [`PackState`].
+#[derive(Clone, Debug)]
+struct Tracked {
+    demand: Res,
+    row: BTreeMap<ServerId, u32>,
+}
+
+/// Exact free-vector resync cadence (guards against f64 drift from long
+/// chains of incremental +=/-=; see [`PackState`]).
+const RESYNC_EVERY: u32 = 64;
+
+/// Persistent state of the delta-aware packer: the per-server free-capacity
+/// vector and the last committed placement rows, carried across solves so
+/// consecutive placement rounds touch only the apps whose counts changed.
+///
+/// Owned by the caller running consecutive rounds (the allocation engine,
+/// one per backend).  The state self-heals: every [`place_delta`] call
+/// reconciles the tracked rows against the inputs' ground-truth `current`
+/// placements, so failed enforcement, fault recovery or an abandoned plan
+/// (the optimizer's reduce-counts retry) only cost a patch, never
+/// corruption.  Every [`RESYNC_EVERY`] commits the free vector is rebuilt
+/// exactly from the tracked rows to cancel float drift.
+#[derive(Clone, Debug, Default)]
+pub struct PackState {
+    ready: bool,
+    /// Bit signature of the capacity vector the state was built against —
+    /// any change (server death/recovery, reported capacity) forces a
+    /// rebuild.
+    caps_bits: Vec<Vec<u64>>,
+    /// capacity − Σ tracked rows, per server.
+    free: Vec<Res>,
+    tracked: BTreeMap<AppId, Tracked>,
+    since_sync: u32,
+}
+
+impl PackState {
+    /// Drop everything; the next [`place_delta`] rebuilds from its inputs.
+    pub fn invalidate(&mut self) {
+        self.ready = false;
+        self.caps_bits.clear();
+        self.free.clear();
+        self.tracked.clear();
+        self.since_sync = 0;
+    }
+
+    /// True once the state carries a committed free vector.
+    pub fn is_warm(&self) -> bool {
+        self.ready
+    }
+
+    /// Rebuild from scratch: free = capacities − Σ inputs' current rows.
+    /// `None` if some current row exceeds capacity (corrupted input, the
+    /// same contract as [`place`]).
+    fn rebuild(
+        &mut self,
+        inputs: &[PlacementInput],
+        capacities: &[Res],
+        caps_bits: Vec<Vec<u64>>,
+    ) -> Option<()> {
+        self.invalidate();
+        self.free = capacities.to_vec();
+        for inp in inputs {
+            if inp.current.is_empty() {
+                continue;
+            }
+            for (&sid, &cnt) in &inp.current {
+                let need = inp.demand.times(cnt);
+                if sid.0 >= self.free.len() || !need.fits_in(&self.free[sid.0]) {
+                    self.invalidate();
+                    return None;
+                }
+                self.free[sid.0] -= &need;
+            }
+            self.tracked.insert(
+                inp.app,
+                Tracked { demand: inp.demand.clone(), row: inp.current.clone() },
+            );
+        }
+        self.caps_bits = caps_bits;
+        self.ready = true;
+        Some(())
+    }
+
+    /// Patch the state to match the inputs' ground truth: departed apps
+    /// release their rows, apps whose current row or demand diverged from
+    /// the tracked copy are re-charged.  `None` on anomaly (caller
+    /// rebuilds).
+    fn reconcile(&mut self, inputs: &[PlacementInput]) -> Option<()> {
+        let live: BTreeSet<AppId> = inputs.iter().map(|i| i.app).collect();
+        let departed: Vec<AppId> = self
+            .tracked
+            .keys()
+            .filter(|&a| !live.contains(a))
+            .copied()
+            .collect();
+        for app in departed {
+            let t = self.tracked.remove(&app).expect("key just listed");
+            for (&sid, &cnt) in &t.row {
+                self.free[sid.0] += &t.demand.times(cnt);
+            }
+        }
+        for inp in inputs {
+            let unchanged = self
+                .tracked
+                .get(&inp.app)
+                .is_some_and(|t| t.row == inp.current && t.demand == inp.demand);
+            if unchanged {
+                continue;
+            }
+            if let Some(t) = self.tracked.remove(&inp.app) {
+                for (&sid, &cnt) in &t.row {
+                    self.free[sid.0] += &t.demand.times(cnt);
+                }
+            }
+            if inp.current.is_empty() {
+                continue;
+            }
+            for (&sid, &cnt) in &inp.current {
+                let need = inp.demand.times(cnt);
+                if sid.0 >= self.free.len() || !need.fits_in(&self.free[sid.0]) {
+                    return None;
+                }
+                self.free[sid.0] -= &need;
+            }
+            self.tracked.insert(
+                inp.app,
+                Tracked { demand: inp.demand.clone(), row: inp.current.clone() },
+            );
+        }
+        Some(())
+    }
+
+    /// Adopt a full re-pack's result as the new committed state.
+    fn adopt(&mut self, p: &Placement, inputs: &[PlacementInput], capacities: &[Res]) {
+        let caps_bits = caps_sig(capacities);
+        self.invalidate();
+        self.free = capacities.to_vec();
+        for inp in inputs {
+            let Some(row) = p.assignment.get(&inp.app) else { continue };
+            if row.is_empty() {
+                continue;
+            }
+            for (&sid, &cnt) in row {
+                self.free[sid.0] -= &inp.demand.times(cnt);
+            }
+            self.tracked.insert(
+                inp.app,
+                Tracked { demand: inp.demand.clone(), row: row.clone() },
+            );
+        }
+        self.caps_bits = caps_bits;
+        self.ready = true;
+    }
+
+    /// Exact recomputation of the free vector from the tracked rows.
+    fn resync_free(&mut self, capacities: &[Res]) {
+        self.free = capacities.to_vec();
+        for t in self.tracked.values() {
+            for (&sid, &cnt) in &t.row {
+                self.free[sid.0] -= &t.demand.times(cnt);
+            }
+        }
+        self.since_sync = 0;
+    }
+}
+
+fn caps_sig(capacities: &[Res]) -> Vec<Vec<u64>> {
+    capacities
+        .iter()
+        .map(|c| c.0.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// Full-re-pack escape hatch shared by every delta failure mode: run
+/// [`place`], adopt its result into the state on success, mark the state
+/// cold on failure (the next call rebuilds from ground truth).
+fn fallback_full(
+    inputs: &[PlacementInput],
+    capacities: &[Res],
+    state: &mut PackState,
+) -> Option<Placement> {
+    match place(inputs, capacities) {
+        Some(full) => {
+            state.adopt(&full, inputs, capacities);
+            Some(full)
+        }
+        None => {
+            state.ready = false;
+            None
+        }
+    }
+}
+
+/// Delta-aware placement round: the same contract as [`place`], but moving
+/// *only* apps whose container count changed.
+///
+/// * unchanged apps (target == current total) are never touched — they do
+///   not appear in `destroy`/`create` and their row is carried verbatim;
+/// * shrinking apps release `current − target` containers **in place**,
+///   cheapest first (rows on the slackest servers go first, keeping tight
+///   servers tightly packed);
+/// * growing apps add `target − current` containers via the slack-indexed
+///   best fit without disturbing their existing row;
+/// * if any grow cannot fit, the round **falls back** to the full
+///   [`place`] BFD re-pack (reported via [`Placement::delta_path`] =
+///   false); if that also fails, `None` — exactly the full path's
+///   contract, so callers retry with reduced counts either way.
+///
+/// Shrinks strictly precede grows, so capacity released by one app is
+/// available to every grower in the same round.
+pub fn place_delta(
+    inputs: &[PlacementInput],
+    capacities: &[Res],
+    state: &mut PackState,
+) -> Option<Placement> {
+    let m = capacities.first().map(|c| c.m()).unwrap_or(0);
+    let caps_bits = caps_sig(capacities);
+    let total_cap = capacities.iter().fold(Res::zeros(m), |mut acc, c| {
+        acc += c;
+        acc
+    });
+
+    // Re-base the persistent state on reality.  A rebuild can only fail on
+    // current rows that exceed capacity — `place` ignores mover rows, so
+    // give it the final word rather than failing outright.
+    if !state.ready || state.caps_bits != caps_bits {
+        if state.rebuild(inputs, capacities, caps_bits).is_none() {
+            return fallback_full(inputs, capacities, state);
+        }
+    } else if state.reconcile(inputs).is_none() {
+        // reconcile anomaly (e.g. out-of-band moves that no longer fit the
+        // incremental books): one exact rebuild decides corrupt-vs-fine
+        if state.rebuild(inputs, capacities, caps_bits).is_none() {
+            return fallback_full(inputs, capacities, state);
+        }
+    }
+
+    let mut destroy: Vec<(AppId, ServerId, u32)> = Vec::new();
+    let mut create: Vec<(AppId, ServerId, u32)> = Vec::new();
+    let mut grows: Vec<(usize, u32)> = Vec::new(); // (input idx, current total)
+
+    // Shrinks first: released capacity serves every grower below.
+    for (idx, inp) in inputs.iter().enumerate() {
+        let cur: u32 = inp.current.values().sum();
+        if inp.target < cur {
+            // the reconcile above pinned tracked row == inp.current, so the
+            // current row is the authoritative source to release from
+            let mut rows: Vec<(ServerId, u32)> =
+                inp.current.iter().map(|(&s, &c)| (s, c)).collect();
+            // release where servers are slackest (tie: lowest id) — the
+            // cheapest containers to give up for packing quality
+            rows.sort_by(|a, b| {
+                let sa = state.free[a.0 .0].dominant_share(&total_cap);
+                let sb = state.free[b.0 .0].dominant_share(&total_cap);
+                sb.total_cmp(&sa).then(a.0 .0.cmp(&b.0 .0))
+            });
+            let t = state
+                .tracked
+                .get_mut(&inp.app)
+                .expect("reconciled: shrinking app has a tracked row");
+            let mut need = cur - inp.target;
+            for (sid, have) in rows {
+                if need == 0 {
+                    break;
+                }
+                let take = need.min(have);
+                let left = have - take;
+                if left == 0 {
+                    t.row.remove(&sid);
+                } else {
+                    t.row.insert(sid, left);
+                }
+                state.free[sid.0] += &inp.demand.times(take);
+                destroy.push((inp.app, sid, take));
+                need -= take;
+            }
+            debug_assert_eq!(need, 0, "tracked row must cover the shrink");
+            if inp.target == 0 {
+                state.tracked.remove(&inp.app);
+            }
+        } else if inp.target > cur {
+            grows.push((idx, cur));
+        }
+    }
+
+    // Grows best-fit-decreasing by dominant demand (the full path's order).
+    grows.sort_by(|&(a, _), &(b, _)| {
+        let da = inputs[a].demand.dominant_share(&total_cap);
+        let db = inputs[b].demand.dominant_share(&total_cap);
+        db.total_cmp(&da).then(a.cmp(&b))
+    });
+    for (idx, cur) in grows {
+        let inp = &inputs[idx];
+        match fill_best_fit(&inp.demand, inp.target - cur, &mut state.free, &total_cap) {
+            Some(extra) => {
+                let t = state.tracked.entry(inp.app).or_insert_with(|| Tracked {
+                    demand: inp.demand.clone(),
+                    row: BTreeMap::new(),
+                });
+                for (&sid, &cnt) in &extra {
+                    *t.row.entry(sid).or_insert(0) += cnt;
+                    create.push((inp.app, sid, cnt));
+                }
+            }
+            None => {
+                // Delta packing failed — full BFD re-pack fallback.  The
+                // in-place shrinks above are an abandoned plan; the next
+                // call's reconcile patches them back from ground truth.
+                return fallback_full(inputs, capacities, state);
+            }
+        }
+    }
+
+    // Commit: snapshot the full assignment for the decision.
+    let mut assignment: Assignment = BTreeMap::new();
+    for inp in inputs {
+        let row = state
+            .tracked
+            .get(&inp.app)
+            .map(|t| t.row.clone())
+            .unwrap_or_default();
+        assignment.insert(inp.app, row);
+    }
+    state.since_sync += 1;
+    if state.since_sync >= RESYNC_EVERY {
+        state.resync_free(capacities);
+    }
+    Some(Placement {
+        assignment: Arc::new(assignment),
+        destroy,
+        create,
+        delta_path: true,
+    })
 }
 
 #[cfg(test)]
@@ -151,6 +587,25 @@ mod tests {
                 .iter()
                 .map(|&(j, c)| (ServerId(j), c))
                 .collect(),
+        }
+    }
+
+    /// Per-server usage of `p` must fit `caps`, and every app must hold
+    /// exactly its target.
+    fn assert_valid(p: &Placement, inputs: &[PlacementInput], caps: &[Res]) {
+        let m = caps.first().map(|c| c.m()).unwrap_or(0);
+        for (j, cap) in caps.iter().enumerate() {
+            let mut used = Res::zeros(m);
+            for inpt in inputs {
+                if let Some(cnt) = p.assignment[&inpt.app].get(&ServerId(j)) {
+                    used += &inpt.demand.times(*cnt);
+                }
+            }
+            assert!(used.fits_in(cap), "server {j} over capacity: {used:?}");
+        }
+        for inpt in inputs {
+            let got: u32 = p.assignment[&inpt.app].values().sum();
+            assert_eq!(got, inpt.target, "{:?} wrong total", inpt.app);
         }
     }
 
@@ -179,8 +634,26 @@ mod tests {
         .unwrap();
         assert_eq!(p.assignment[&AppId(1)][&ServerId(0)], 2);
         assert!(p.adjusted_apps() == vec![AppId(2)]);
-        // app2 released its old container and re-packed
-        assert!(p.destroy.contains(&(AppId(2), ServerId(1), 1)));
+        // the delta is netted: app2's re-pack keeps its container on
+        // server 1, so only the two new containers appear — no
+        // destroy+create pair for the position that did not change
+        assert!(p.destroy.is_empty(), "no-op deltas must be netted: {:?}", p.destroy);
+        let created: u32 = p.create.iter().map(|&(_, _, c)| c).sum();
+        assert_eq!(created, 2);
+        assert_eq!(p.assignment[&AppId(2)][&ServerId(1)], 1, "kept container stays");
+    }
+
+    #[test]
+    fn mover_landing_in_place_emits_no_deltas() {
+        // app shrinks 3 -> 3? no: unchanged-count apps are pinned.  The
+        // netting case: a mover whose re-pack lands exactly where it was.
+        // One app alone, count changes 2 -> 2 is pinned, so use 2 -> 3 on
+        // one server: destroy must be empty and create only the extra one.
+        let caps = vec![Res(vec![8.0])];
+        let p = place(&[inp(1, Res(vec![1.0]), 3, &[(0, 2)])], &caps).unwrap();
+        assert!(p.destroy.is_empty(), "{:?}", p.destroy);
+        assert_eq!(p.create, vec![(AppId(1), ServerId(0), 1)]);
+        assert_eq!(p.moved_containers(), 1);
     }
 
     #[test]
@@ -222,6 +695,104 @@ mod tests {
     }
 
     #[test]
+    fn delta_grow_keeps_existing_row() {
+        let caps = vec![Res(vec![4.0]), Res(vec![4.0])];
+        let mut st = PackState::default();
+        let inputs = [inp(1, Res(vec![1.0]), 3, &[(0, 2)])];
+        let p = place_delta(&inputs, &caps, &mut st).unwrap();
+        assert!(p.delta_path);
+        assert!(st.is_warm());
+        assert!(p.destroy.is_empty());
+        assert_eq!(p.moved_containers(), 1, "grow moves only the new container");
+        assert_eq!(p.assignment[&AppId(1)][&ServerId(0)], 3, "grows in place");
+        assert_valid(&p, &inputs, &caps);
+    }
+
+    #[test]
+    fn delta_shrink_releases_cheapest_in_place() {
+        // app holds 2+2 across both servers; server 1 also hosts a pinned
+        // neighbour, so server 0 is slacker — the shrink must release there
+        let caps = vec![Res(vec![4.0]), Res(vec![4.0])];
+        let mut st = PackState::default();
+        let inputs = [
+            inp(1, Res(vec![1.0]), 2, &[(0, 2), (1, 2)]),
+            inp(2, Res(vec![2.0]), 1, &[(1, 1)]), // pinned neighbour
+        ];
+        let p = place_delta(&inputs, &caps, &mut st).unwrap();
+        assert!(p.delta_path);
+        assert!(p.create.is_empty(), "shrink creates nothing");
+        assert_eq!(p.destroy, vec![(AppId(1), ServerId(0), 2)]);
+        assert_eq!(p.assignment[&AppId(1)].get(&ServerId(0)), None);
+        assert_eq!(p.assignment[&AppId(1)][&ServerId(1)], 2);
+        assert_valid(&p, &inputs, &caps);
+    }
+
+    #[test]
+    fn delta_falls_back_to_full_repack_on_fragmentation() {
+        // B's scattered row {s0:1, s1:1} blocks A's 4-wide container; the
+        // delta grow cannot fit it, but the full re-pack consolidates B
+        // onto s1+s2 and frees s0.
+        let caps = vec![Res(vec![4.0]), Res(vec![4.0]), Res(vec![2.0])];
+        let mut st = PackState::default();
+        let inputs = [
+            inp(1, Res(vec![4.0]), 1, &[]),             // A: new, needs 4
+            inp(2, Res(vec![2.0]), 3, &[(0, 1), (1, 1)]), // B: grows 2 -> 3
+        ];
+        let p = place_delta(&inputs, &caps, &mut st).unwrap();
+        assert!(!p.delta_path, "must report the full re-pack fallback");
+        assert_valid(&p, &inputs, &caps);
+        // the state adopted the re-pack: a repeat call is a clean no-op
+        let inputs2 = [
+            inp(1, Res(vec![4.0]), 1, &[(0, 1)]),
+            {
+                let mut i = inp(2, Res(vec![2.0]), 3, &[]);
+                i.current = p.assignment[&AppId(2)].clone();
+                i
+            },
+        ];
+        let p2 = place_delta(&inputs2, &caps, &mut st).unwrap();
+        assert!(p2.delta_path);
+        assert_eq!(p2.moved_containers(), 0, "nothing changed, nothing moves");
+    }
+
+    #[test]
+    fn delta_departed_app_releases_capacity() {
+        let caps = vec![Res(vec![4.0])];
+        let mut st = PackState::default();
+        let round1 = [
+            inp(1, Res(vec![2.0]), 2, &[(0, 2)]),
+            inp(2, Res(vec![1.0]), 0, &[]),
+        ];
+        place_delta(&round1, &caps, &mut st).unwrap();
+        // app 1 completed; app 2 can now take the whole server
+        let round2 = [inp(2, Res(vec![1.0]), 4, &[])];
+        let p = place_delta(&round2, &caps, &mut st).unwrap();
+        assert!(p.delta_path);
+        assert_eq!(p.assignment[&AppId(2)][&ServerId(0)], 4);
+    }
+
+    #[test]
+    fn delta_capacity_change_forces_rebuild() {
+        let mut st = PackState::default();
+        let inputs = [inp(1, Res(vec![1.0]), 2, &[])];
+        place_delta(&inputs, &[Res(vec![4.0])], &mut st).unwrap();
+        // the cluster shrank: the state must rebuild, not reuse stale free
+        let p = place_delta(
+            &[inp(1, Res(vec![1.0]), 2, &[(0, 2)])],
+            &[Res(vec![2.0])],
+            &mut st,
+        )
+        .unwrap();
+        assert_eq!(p.moved_containers(), 0);
+        assert!(place_delta(
+            &[inp(1, Res(vec![1.0]), 3, &[(0, 2)])],
+            &[Res(vec![2.0])],
+            &mut st,
+        )
+        .is_none());
+    }
+
+    #[test]
     fn prop_placement_respects_capacity() {
         prop::check(150, |rng: &mut Rng| {
             let m = 2;
@@ -258,6 +829,186 @@ mod tests {
                         return Err(format!("{:?}: got {got} wanted {}", inpt.app, inpt.target));
                     }
                 }
+            }
+            Ok(())
+        });
+    }
+
+    /// The satellite property: `place_delta` ≡ `place` on feasibility and
+    /// capacity invariants; pinned apps never appear in destroy/create;
+    /// the delta path never moves more containers than the full re-pack.
+    #[test]
+    fn prop_delta_matches_full_repack() {
+        prop::check(150, |rng: &mut Rng| {
+            let m = 2;
+            let nsrv = rng.range_u64(1, 6) as usize;
+            let caps: Vec<Res> = (0..nsrv)
+                .map(|_| Res((0..m).map(|_| rng.range_f64(6.0, 20.0)).collect()))
+                .collect();
+            let napps = rng.range_u64(1, 6) as usize;
+            // round 1 (cold): establishes a committed placement
+            let round1: Vec<PlacementInput> = (0..napps)
+                .map(|i| PlacementInput {
+                    app: AppId(i as u64),
+                    demand: Res((0..m).map(|_| rng.range_f64(0.5, 3.0)).collect()),
+                    target: rng.range_u64(0, 5) as u32,
+                    current: BTreeMap::new(),
+                })
+                .collect();
+            let Some(base) = place(&round1, &caps) else {
+                return Ok(());
+            };
+            // round 2: grow/shrink/keep each app at random, from the
+            // committed placement
+            let round2: Vec<PlacementInput> = round1
+                .iter()
+                .map(|i| {
+                    let cur = base.assignment[&i.app].clone();
+                    let cur_total: u32 = cur.values().sum();
+                    let target = match rng.below(4) {
+                        0 => cur_total,                               // pinned
+                        1 => cur_total.saturating_sub(rng.range_u64(1, 3) as u32),
+                        _ => cur_total + rng.range_u64(0, 4) as u32, // grow
+                    };
+                    PlacementInput {
+                        app: i.app,
+                        demand: i.demand.clone(),
+                        target,
+                        current: cur,
+                    }
+                })
+                .collect();
+
+            let full = place(&round2, &caps);
+            let mut st = PackState::default();
+            let _ = place_delta(&round1, &caps, &mut st); // warm the state
+            let delta = place_delta(&round2, &caps, &mut st);
+
+            match (full, delta) {
+                (Some(f), Some(d)) => {
+                    // both feasible: validate capacity + exact targets
+                    for p in [&f, &d] {
+                        for (j, cap) in caps.iter().enumerate() {
+                            let mut used = Res::zeros(m);
+                            for i in &round2 {
+                                if let Some(c) = p.assignment[&i.app].get(&ServerId(j)) {
+                                    used += &i.demand.times(*c);
+                                }
+                            }
+                            if !used.fits_in(cap) {
+                                return Err(format!("server {j} over capacity"));
+                            }
+                        }
+                        for i in &round2 {
+                            let got: u32 = p.assignment[&i.app].values().sum();
+                            if got != i.target {
+                                return Err(format!("{:?} wrong total", i.app));
+                            }
+                        }
+                    }
+                    // pinned apps never show up in either delta list
+                    for i in &round2 {
+                        let cur_total: u32 = i.current.values().sum();
+                        if i.target == cur_total {
+                            let touched = d
+                                .destroy
+                                .iter()
+                                .chain(d.create.iter())
+                                .any(|&(a, _, _)| a == i.app);
+                            if touched {
+                                return Err(format!("pinned {:?} moved", i.app));
+                            }
+                            if d.assignment[&i.app] != i.current {
+                                return Err(format!("pinned {:?} row changed", i.app));
+                            }
+                        }
+                    }
+                    // delta packing never moves more than the full re-pack
+                    if d.delta_path && d.moved_containers() > f.moved_containers() {
+                        return Err(format!(
+                            "delta moved {} > full {}",
+                            d.moved_containers(),
+                            f.moved_containers()
+                        ));
+                    }
+                    Ok(())
+                }
+                (None, Some(d)) if d.delta_path => {
+                    // a genuine delta win (in-place rows dodge the
+                    // fragmentation that killed the re-pack): still must
+                    // be capacity-feasible at the exact targets
+                    for (j, cap) in caps.iter().enumerate() {
+                        let mut used = Res::zeros(m);
+                        for i in &round2 {
+                            if let Some(c) = d.assignment[&i.app].get(&ServerId(j)) {
+                                used += &i.demand.times(*c);
+                            }
+                        }
+                        if !used.fits_in(cap) {
+                            return Err(format!("delta-win server {j} over capacity"));
+                        }
+                    }
+                    Ok(())
+                }
+                (None, Some(_)) => Err("fallback succeeded where full place failed".into()),
+                (Some(_), None) => {
+                    Err("delta failed where full place succeeded (fallback broken)".into())
+                }
+                (None, None) => Ok(()),
+            }
+        });
+    }
+
+    /// The indexed fill must be byte-identical to the reference
+    /// per-container linear scan it replaced.
+    #[test]
+    fn prop_indexed_fill_matches_linear_scan() {
+        fn linear_fill(
+            demand: &Res,
+            count: u32,
+            free: &mut [Res],
+            total_cap: &Res,
+        ) -> Option<BTreeMap<ServerId, u32>> {
+            let mut assigned: BTreeMap<ServerId, u32> = BTreeMap::new();
+            for _ in 0..count {
+                let mut best: Option<(usize, f64)> = None;
+                for (j, f) in free.iter().enumerate() {
+                    if demand.fits_in(f) {
+                        let slack = f
+                            .clone()
+                            .saturating_sub(demand)
+                            .dominant_share(total_cap);
+                        match best {
+                            Some((_, bs)) if bs <= slack => {}
+                            _ => best = Some((j, slack)),
+                        }
+                    }
+                }
+                let j = best?.0;
+                free[j] -= demand;
+                *assigned.entry(ServerId(j)).or_insert(0) += 1;
+            }
+            Some(assigned)
+        }
+
+        prop::check(200, |rng: &mut Rng| {
+            let m = rng.range_u64(1, 3) as usize;
+            let nsrv = rng.range_u64(1, 8) as usize;
+            let caps: Vec<Res> = (0..nsrv)
+                .map(|_| Res((0..m).map(|_| rng.range_f64(2.0, 16.0)).collect()))
+                .collect();
+            let total = caps.iter().fold(Res::zeros(m), |mut a, c| {
+                a += c;
+                a
+            });
+            let demand = Res((0..m).map(|_| rng.range_f64(0.5, 4.0)).collect());
+            let count = rng.range_u64(0, 12) as u32;
+            let mut free_a = caps.clone();
+            let mut free_b = caps.clone();
+            let a = fill_best_fit(&demand, count, &mut free_a, &total);
+            let b = linear_fill(&demand, count, &mut free_b, &total);
+            if a != b {
+                return Err(format!("indexed {a:?} != linear {b:?}"));
             }
             Ok(())
         });

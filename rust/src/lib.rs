@@ -30,7 +30,7 @@
 //! | [`solver`] | simplex LP + branch-and-bound MILP + heuristic |
 //! | [`optimizer`] | builds the paper's P2 from cluster state, solves it |
 //! | [`sched`] | shared allocation engine + policy interface (master ∩ sim), cached/warm-started re-solves |
-//! | [`cluster`] | servers, partitions, containers |
+//! | [`cluster`] | servers, partitions, containers; delta-aware packer + slack-indexed best fit (DESIGN.md §10) |
 //! | [`app`] | application 6-tuple, lifecycle, checkpoints |
 //! | [`master`] / [`slave`] | the Dorm control plane |
 //! | [`proto`] | versioned control-plane protocol: typed Request/Response + wire format |

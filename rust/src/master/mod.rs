@@ -754,6 +754,13 @@ impl DormMaster {
         self.slaves.iter().map(|s| s.count_for(id)).sum()
     }
 
+    /// Incremental-path telemetry of the scheduling policy (cache hits,
+    /// warm starts, delta packs, skipped admission prefixes) — `None` for
+    /// stateless baseline policies.  DESIGN.md §10.
+    pub fn scheduler_stats(&self) -> Option<crate::sched::EngineStats> {
+        self.policy.engine_stats()
+    }
+
     /// Current xᵢⱼ row for `id`.
     fn placement_of(&self, id: AppId) -> BTreeMap<ServerId, u32> {
         self.slaves
@@ -1042,6 +1049,10 @@ mod tests {
         assert_eq!(m.app_state(id), Some(AppState::Running));
         assert_eq!(m.containers_of(id), 12);
         assert!(m.utilization() > 0.0);
+        // the live master runs the same incremental engine as the DES
+        let stats = m.scheduler_stats().expect("Dorm policy has an engine");
+        assert!(stats.solves >= 1);
+        assert!(stats.delta_packs >= 1, "{stats:?}");
     }
 
     #[test]

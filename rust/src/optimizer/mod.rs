@@ -26,7 +26,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::app::AppId;
-use crate::cluster::{place, Placement, PlacementInput, ServerId};
+use crate::cluster::{place, place_delta, PackState, Placement, PlacementInput, ServerId};
 use crate::config::DormConfig;
 use crate::resources::Res;
 use crate::solver::heuristic::{
@@ -72,6 +72,12 @@ pub struct SolveStats {
     /// A previous solution seeded this solve as a feasible warm-start
     /// incumbent (extra heuristic anchor + branch-and-bound bound).
     pub warm_start: bool,
+    /// The placement round ran on the delta-aware packer without falling
+    /// back to a full BFD re-pack (see [`crate::cluster::place_delta`]).
+    pub delta_path: bool,
+    /// Containers the placement physically moves (Σ destroys + creates) —
+    /// the adjustment churn this decision costs.
+    pub moved_containers: u64,
 }
 
 /// The optimizer's output: new counts + concrete placement + the Eq. 1/2/4
@@ -225,26 +231,64 @@ impl Optimizer {
         capacities: &[Res],
         warm: Option<&BTreeMap<AppId, u32>>,
     ) -> Option<Decision> {
+        self.allocate_incremental(apps, capacities, warm, None)
+    }
+
+    /// The incremental hot path: as [`Optimizer::allocate_warm`], but when
+    /// `pack` is given the placement round runs the delta-aware packer
+    /// against that persistent state ([`crate::cluster::place_delta`])
+    /// instead of a from-scratch re-pack, and the placement-input buffer is
+    /// built once and reused across the reduce-counts retries.
+    pub fn allocate_incremental(
+        &self,
+        apps: &[OptApp],
+        capacities: &[Res],
+        warm: Option<&BTreeMap<AppId, u32>>,
+        mut pack: Option<&mut PackState>,
+    ) -> Option<Decision> {
         let m = capacities.first().map(|c| c.m()).unwrap_or(0);
         let cap = capacities.iter().fold(Res::zeros(m), |mut acc, c| {
             acc += c;
             acc
         });
-        let (mut counts, stats) = self.solve_counts_warm(apps, &cap, warm)?;
+        let (mut counts, mut stats) = self.solve_counts_warm(apps, &cap, warm)?;
         let p = self.count_problem(apps, &cap);
 
+        // placement inputs are built once; only the targets change across
+        // the reduce-counts retries below
+        let mut inputs: Vec<PlacementInput> = apps
+            .iter()
+            .zip(&counts)
+            .map(|(a, &c)| PlacementInput {
+                app: a.id,
+                demand: a.demand.clone(),
+                target: c,
+                current: a.current.clone(),
+            })
+            .collect();
+
+        // Once a delta attempt fails, its internal full-re-pack fallback has
+        // also failed and the pack state is cold — plain `place` for the
+        // remaining retries of this call, so the reduce-counts storm costs
+        // one packing pass per retry (same as the legacy loop), not two.
+        let mut use_delta = pack.is_some();
         for _attempt in 0..256 {
-            let inputs: Vec<PlacementInput> = apps
-                .iter()
-                .zip(&counts)
-                .map(|(a, &c)| PlacementInput {
-                    app: a.id,
-                    demand: a.demand.clone(),
-                    target: c,
-                    current: a.current.clone(),
-                })
-                .collect();
-            if let Some(placement) = place(&inputs, capacities) {
+            for (inp, &c) in inputs.iter_mut().zip(&counts) {
+                inp.target = c;
+            }
+            let placed = if use_delta {
+                let state = pack.as_deref_mut().expect("use_delta implies pack");
+                let p = place_delta(&inputs, capacities, state);
+                if p.is_none() {
+                    use_delta = false;
+                }
+                p
+            } else {
+                place(&inputs, capacities)
+            };
+            if let Some(placement) = placed {
+                stats.delta_path = placement.delta_path;
+                stats.moved_containers = placement.moved_containers();
                 let counts_map: BTreeMap<AppId, u32> = apps
                     .iter()
                     .zip(&counts)

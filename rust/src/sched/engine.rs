@@ -12,24 +12,35 @@
 //! 3. solve the count-aggregated P2 through [`Optimizer`] and return the
 //!    [`Decision`] (counts + placement + adjusted set).
 //!
-//! Incremental re-solve state, per engine:
+//! Incremental re-solve state, per engine (DESIGN.md §10):
 //!
 //! * **snapshot cache** — the paper rebuilds and solves P2 on every event,
 //!   but consecutive events frequently present an identical (apps,
-//!   capacity) snapshot (metric samples, no-op completions of deferred
-//!   apps, replayed events).  The engine keys the last decision by the
-//!   exact bit pattern of its inputs and returns it without solving when
-//!   the key matches ([`SolveStats::cache_hit`]).
-//! * **warm start** — the previous solution's counts are fed to the next
-//!   solve as an incumbent: the heuristic anchors a candidate pipeline on
-//!   them and branch-and-bound starts with their objective as its pruning
-//!   bound ([`SolveStats::warm_start`]), instead of only the per-call
-//!   heuristic incumbent.  `benches/sched_latency.rs` and
-//!   `benches/solver_micro.rs` quantify both paths.
+//!   capacity) snapshot.  A cheap 64-bit FNV pre-key is folded over the
+//!   snapshot first; only when it matches the cached entry is the exact
+//!   bit-level comparison run — directly against the live snapshot, so
+//!   neither path allocates a [`SnapshotKey`] (it is built once per
+//!   *solve*, never per probe).  Hits return the cached [`Decision`]
+//!   behind an [`Arc`] — O(1), no deep clone ([`SolveStats::cache_hit`]).
+//! * **warm start** — the previous solution's counts seed the next solve
+//!   as an incumbent ([`SolveStats::warm_start`]).
+//! * **amortized admission** — the FIFO deferral loop solves over
+//!   *slices* of one running+pending buffer (no per-prefix cloning), and
+//!   an aggregate-capacity floor check binary-searches the longest
+//!   admissible prefix up front, skipping the solves the old loop would
+//!   have run and failed ([`EngineStats::admit_prefixes_skipped`]).
+//! * **delta placement** — a persistent [`PackState`] rides along so the
+//!   placement round moves only the apps whose counts changed
+//!   ([`SolveStats::delta_path`], [`SolveStats::moved_containers`]).
+//!
+//! `benches/sched_latency.rs` measures the old-vs-new decision path over
+//! a churn workload up to 1000 apps × 500 servers.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::app::AppId;
+use crate::cluster::PackState;
 use crate::config::DormConfig;
 use crate::optimizer::{Decision, OptApp, Optimizer, SolveMode};
 use crate::resources::Res;
@@ -63,7 +74,8 @@ impl EngineApp {
     }
 }
 
-/// Engine-lifetime telemetry (cache + warm-start effectiveness).
+/// Engine-lifetime telemetry (cache + warm-start + incremental-path
+/// effectiveness).
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     /// Decisions served by actually solving.
@@ -72,11 +84,22 @@ pub struct EngineStats {
     pub cache_hits: u64,
     /// Solves where the previous solution seeded a feasible incumbent.
     pub warm_start_hits: u64,
+    /// Admission prefixes skipped by the aggregate-capacity floor check
+    /// (each is a full solve the unamortized loop would have run and
+    /// watched fail).
+    pub admit_prefixes_skipped: u64,
+    /// Decisions whose placement ran on the delta packer.
+    pub delta_packs: u64,
+    /// Decisions whose placement needed (or was configured as) a full
+    /// BFD re-pack.
+    pub full_repacks: u64,
 }
 
 /// Exact-input key for the snapshot cache: every field the solve depends
 /// on, with floats compared by bit pattern (NaN-safe, no tolerance —
-/// a near-identical snapshot must re-solve).
+/// a near-identical snapshot must re-solve).  Built once per solve when
+/// the cache entry is stored; probes compare field-by-field against the
+/// live snapshot instead of constructing a key.
 #[derive(Clone, Debug, PartialEq, Eq)]
 struct SnapshotKey {
     apps: Vec<AppKey>,
@@ -116,9 +139,114 @@ fn snapshot_key(apps: &[&EngineApp], capacities: &[Res]) -> SnapshotKey {
     }
 }
 
+#[inline]
+fn fnv_mix(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x100_0000_01b3)
+}
+
+/// Cheap 64-bit FNV-1a fold over exactly the fields [`snapshot_key`]
+/// records — the allocation-free cache pre-key.
+fn snapshot_prehash(apps: &[&EngineApp], capacities: &[Res]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = fnv_mix(h, apps.len() as u64);
+    for e in apps {
+        h = fnv_mix(h, e.opt.id.0);
+        for v in &e.opt.demand.0 {
+            h = fnv_mix(h, v.to_bits());
+        }
+        h = fnv_mix(h, e.opt.weight.to_bits());
+        h = fnv_mix(h, e.opt.n_min as u64);
+        h = fnv_mix(h, e.opt.n_max as u64);
+        h = fnv_mix(h, e.opt.prev.map(|p| p as u64 + 1).unwrap_or(0));
+        h = fnv_mix(h, e.opt.current.len() as u64);
+        for (s, &c) in &e.opt.current {
+            h = fnv_mix(h, s.0 as u64);
+            h = fnv_mix(h, c as u64);
+        }
+    }
+    h = fnv_mix(h, capacities.len() as u64);
+    for cap in capacities {
+        for v in &cap.0 {
+            h = fnv_mix(h, v.to_bits());
+        }
+    }
+    h
+}
+
+/// Exact comparison of a stored key against the live snapshot — no
+/// allocation, early-out on first mismatch.
+fn key_matches(key: &SnapshotKey, apps: &[&EngineApp], capacities: &[Res]) -> bool {
+    key.apps.len() == apps.len()
+        && key.caps.len() == capacities.len()
+        && key.apps.iter().zip(apps).all(|(k, e)| {
+            k.id == e.opt.id.0
+                && k.n_min == e.opt.n_min
+                && k.n_max == e.opt.n_max
+                && k.prev == e.opt.prev
+                && k.weight == e.opt.weight.to_bits()
+                && k.demand.len() == e.opt.demand.0.len()
+                && k.demand
+                    .iter()
+                    .zip(&e.opt.demand.0)
+                    .all(|(b, v)| *b == v.to_bits())
+                && k.current.len() == e.opt.current.len()
+                && k.current
+                    .iter()
+                    .zip(&e.opt.current)
+                    .all(|(kc, (s, &c))| kc.0 == s.0 && kc.1 == c)
+        })
+        && key.caps.iter().zip(capacities).all(|(kb, c)| {
+            kb.len() == c.0.len() && kb.iter().zip(&c.0).all(|(b, v)| *b == v.to_bits())
+        })
+}
+
+/// Largest pending-prefix length whose aggregate `n_min` floors — running
+/// floors included — fit total capacity, found by binary search over the
+/// (monotone) cumulative floor demand.  `None` when even the running
+/// floors alone cannot fit: no prefix is solvable (every solver path
+/// requires counts ≥ n_min within aggregate capacity), so the caller
+/// returns "keep existing allocations" without solving at all.
+fn feasible_floor_prefix(
+    running: &[OptApp],
+    pending: &[OptApp],
+    capacities: &[Res],
+) -> Option<usize> {
+    let m = capacities.first().map(|c| c.m()).unwrap_or(0);
+    let cap = capacities.iter().fold(Res::zeros(m), |mut acc, c| {
+        acc += c;
+        acc
+    });
+    let mut need = Res::zeros(m);
+    for a in running {
+        need += &a.demand.times(a.n_min);
+    }
+    if !need.fits_in(&cap) {
+        return None;
+    }
+    let mut cum: Vec<Res> = Vec::with_capacity(pending.len());
+    for a in pending {
+        need += &a.demand.times(a.n_min);
+        cum.push(need.clone());
+    }
+    // invariant: admitting `lo` floors fits; floors grow monotonically
+    let (mut lo, mut hi) = (0usize, pending.len());
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if cum[mid - 1].fits_in(&cap) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    Some(lo)
+}
+
 struct CacheEntry {
+    prehash: u64,
     key: SnapshotKey,
-    decision: Decision,
+    /// Cached with `stats.cache_hit` already set, so hits are a pure
+    /// `Arc::clone`.
+    decision: Arc<Decision>,
 }
 
 /// The shared Dorm decision loop (see module docs).
@@ -128,6 +256,13 @@ pub struct AllocationEngine {
     /// Counts of the last enforced decision, per app — the warm-start
     /// incumbent for the next solve.
     prev_counts: BTreeMap<AppId, u32>,
+    /// Persistent delta-packer state (free vectors + committed rows).
+    pack: PackState,
+    /// Incremental hot path on (default).  Off = the pre-incremental
+    /// decision loop — per-prefix buffer clones, no floor skip, full
+    /// re-pack placement — kept so `benches/sched_latency.rs` can measure
+    /// old-vs-new on the same workload.
+    incremental: bool,
     stats: EngineStats,
 }
 
@@ -141,6 +276,8 @@ impl AllocationEngine {
             optimizer: Optimizer::with_mode(cfg, mode),
             cache: None,
             prev_counts: BTreeMap::new(),
+            pack: PackState::default(),
+            incremental: true,
             stats: EngineStats::default(),
         }
     }
@@ -153,17 +290,33 @@ impl AllocationEngine {
         &self.stats
     }
 
-    /// Drop the cached solution and warm-start state (e.g. after an
-    /// out-of-band capacity change the caller knows invalidates them).
+    /// Toggle the incremental hot path (delta placement + amortized
+    /// admission).  For benchmarking the legacy path; production callers
+    /// leave it on.
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental = on;
+        if !on {
+            self.pack.invalidate();
+        }
+    }
+
+    pub fn incremental(&self) -> bool {
+        self.incremental
+    }
+
+    /// Drop the cached solution, warm-start state and delta-packer books
+    /// (e.g. after an out-of-band capacity change the caller knows
+    /// invalidates them).
     pub fn invalidate(&mut self) {
         self.cache = None;
         self.prev_counts.clear();
+        self.pack.invalidate();
     }
 
     /// The shared loop: admission ordering, newest-first deferral, solve.
     /// `None` = no feasible allocation even with every pending app deferred
     /// — the backend keeps existing partitions (§IV-B).
-    pub fn decide(&mut self, apps: &[EngineApp], capacities: &[Res]) -> Option<Decision> {
+    pub fn decide(&mut self, apps: &[EngineApp], capacities: &[Res]) -> Option<Arc<Decision>> {
         // carried apps first (input order), then pending FIFO by submit
         let running: Vec<&EngineApp> =
             apps.iter().filter(|e| e.opt.prev.is_some()).collect();
@@ -175,36 +328,98 @@ impl AllocationEngine {
 
         let ordered: Vec<&EngineApp> =
             running.iter().chain(pending.iter()).copied().collect();
-        let key = snapshot_key(&ordered, capacities);
+        let prehash = snapshot_prehash(&ordered, capacities);
         if let Some(entry) = &self.cache {
-            if entry.key == key {
+            if entry.prehash == prehash && key_matches(&entry.key, &ordered, capacities) {
                 self.stats.cache_hits += 1;
-                let mut d = entry.decision.clone();
-                d.stats.cache_hit = true;
-                return Some(d);
+                return Some(Arc::clone(&entry.decision));
             }
         }
 
         self.stats.solves += 1;
-        let running_opts: Vec<OptApp> =
-            running.iter().map(|e| e.opt.clone()).collect();
-        let pending_opts: Vec<OptApp> =
-            pending.iter().map(|e| e.opt.clone()).collect();
         // snapshot the incumbent (cheap: one count per app) so the borrow
         // doesn't conflict with updating it on success
         let warm_counts = self.prev_counts.clone();
         let warm = (!warm_counts.is_empty()).then_some(&warm_counts);
 
-        // admit as many pending apps (FIFO) as stay feasible
+        let decision = if self.incremental {
+            self.decide_incremental(&running, &pending, capacities, warm)
+        } else {
+            self.decide_legacy(&running, &pending, capacities, warm)
+        };
+
+        let d = decision?;
+        if d.stats.warm_start {
+            self.stats.warm_start_hits += 1;
+        }
+        if d.stats.delta_path {
+            self.stats.delta_packs += 1;
+        } else {
+            self.stats.full_repacks += 1;
+        }
+        self.prev_counts = d.counts.clone();
+        let mut hit = d.clone();
+        hit.stats.cache_hit = true;
+        self.cache = Some(CacheEntry {
+            prehash,
+            key: snapshot_key(&ordered, capacities),
+            decision: Arc::new(hit),
+        });
+        Some(Arc::new(d))
+    }
+
+    /// Amortized admission: one running+pending buffer, slice per prefix,
+    /// floor-infeasible prefixes skipped by binary search, delta placement.
+    fn decide_incremental(
+        &mut self,
+        running: &[&EngineApp],
+        pending: &[&EngineApp],
+        capacities: &[Res],
+        warm: Option<&BTreeMap<AppId, u32>>,
+    ) -> Option<Decision> {
+        let mut all_opts: Vec<OptApp> = Vec::with_capacity(running.len() + pending.len());
+        all_opts.extend(running.iter().map(|e| e.opt.clone()));
+        let n_running = all_opts.len();
+        all_opts.extend(pending.iter().map(|e| e.opt.clone()));
+
+        let start = feasible_floor_prefix(
+            &all_opts[..n_running],
+            &all_opts[n_running..],
+            capacities,
+        )?;
+        self.stats.admit_prefixes_skipped += (pending.len() - start) as u64;
+
+        for admit in (0..=start).rev() {
+            let try_apps = &all_opts[..n_running + admit];
+            if let Some(d) = self.optimizer.allocate_incremental(
+                try_apps,
+                capacities,
+                warm,
+                Some(&mut self.pack),
+            ) {
+                return Some(d);
+            }
+        }
+        None
+    }
+
+    /// The pre-incremental loop, kept verbatim for old-vs-new benching:
+    /// clones the buffers per prefix, solves every prefix, full re-pack.
+    fn decide_legacy(
+        &mut self,
+        running: &[&EngineApp],
+        pending: &[&EngineApp],
+        capacities: &[Res],
+        warm: Option<&BTreeMap<AppId, u32>>,
+    ) -> Option<Decision> {
+        let running_opts: Vec<OptApp> =
+            running.iter().map(|e| e.opt.clone()).collect();
+        let pending_opts: Vec<OptApp> =
+            pending.iter().map(|e| e.opt.clone()).collect();
         for admit in (0..=pending_opts.len()).rev() {
             let mut try_apps = running_opts.clone();
             try_apps.extend(pending_opts[..admit].iter().cloned());
             if let Some(d) = self.optimizer.allocate_warm(&try_apps, capacities, warm) {
-                if d.stats.warm_start {
-                    self.stats.warm_start_hits += 1;
-                }
-                self.prev_counts = d.counts.clone();
-                self.cache = Some(CacheEntry { key, decision: d.clone() });
                 return Some(d);
             }
         }
@@ -242,16 +457,22 @@ impl CmsPolicy for DormPolicy {
         let apps: Vec<EngineApp> = ctx.apps.values().map(EngineApp::from_sched).collect();
         let d = self.engine.decide(&apps, ctx.capacities)?;
         Some(AllocationUpdate {
-            assignment: d.placement.assignment,
-            adjusted: d.adjusted,
+            // Arc clone: cache hits hand out the assignment in O(1)
+            assignment: d.placement.assignment.clone(),
+            adjusted: d.adjusted.clone(),
         })
     }
 
-    /// A server died or recovered (`crate::fault`): the cached decision and
-    /// the warm-start incumbent were solved against a capacity vector that
-    /// no longer exists — drop both so the next decide() is a cold solve.
+    /// A server died or recovered (`crate::fault`): the cached decision,
+    /// the warm-start incumbent and the delta-packer free vectors were
+    /// solved against a capacity vector that no longer exists — drop them
+    /// so the next decide() is a cold solve.
     fn on_capacity_change(&mut self) {
         self.engine.invalidate();
+    }
+
+    fn engine_stats(&self) -> Option<EngineStats> {
+        Some(self.engine.stats().clone())
     }
 }
 
@@ -296,6 +517,9 @@ mod tests {
         assert_eq!(d1.counts, d2.counts);
         assert_eq!(eng.stats().solves, 1);
         assert_eq!(eng.stats().cache_hits, 1);
+        // hits share one decision: no deep clone happened
+        let d3 = eng.decide(&apps, &capacities).unwrap();
+        assert!(Arc::ptr_eq(&d2, &d3), "cache hits must share the Arc");
     }
 
     #[test]
@@ -327,6 +551,77 @@ mod tests {
         let d = eng.decide(&[newer.clone(), old.clone()], &capacities).unwrap();
         assert!(d.counts.contains_key(&AppId(1)), "older app admitted");
         assert!(!d.counts.contains_key(&AppId(2)), "newest deferred first");
+        // the floor check skipped the admit-both prefix without solving it
+        assert_eq!(eng.stats().admit_prefixes_skipped, 1);
+    }
+
+    #[test]
+    fn legacy_and_incremental_paths_agree() {
+        // same scripted sequence through both paths: identical counts
+        let capacities = caps(2, 12.0, 12.0);
+        let events: Vec<Vec<EngineApp>> = vec![
+            vec![eapp(1, 2.0, 2.0, 1, 8, 0, 0.0)],
+            vec![eapp(1, 2.0, 2.0, 1, 8, 6, 0.0), eapp(2, 2.0, 2.0, 2, 8, 0, 1.0)],
+            vec![
+                eapp(1, 2.0, 2.0, 1, 8, 4, 0.0),
+                eapp(2, 2.0, 2.0, 2, 8, 2, 1.0),
+                eapp(3, 3.0, 1.0, 3, 8, 0, 2.0),
+            ],
+        ];
+        let mut inc = AllocationEngine::new(DormConfig { theta1: 1.0, theta2: 1.0 });
+        let mut leg = AllocationEngine::new(DormConfig { theta1: 1.0, theta2: 1.0 });
+        leg.set_incremental(false);
+        for ev in &events {
+            let a = inc.decide(ev, &capacities).map(|d| d.counts.clone());
+            let b = leg.decide(ev, &capacities).map(|d| d.counts.clone());
+            assert_eq!(a, b, "paths diverged on {ev:?}");
+        }
+        assert!(inc.stats().delta_packs >= 1, "delta path must have run");
+        assert_eq!(leg.stats().delta_packs, 0, "legacy path never delta-packs");
+    }
+
+    #[test]
+    fn key_probe_matches_key_construction() {
+        // key_matches/snapshot_prehash must stay field-equivalent to
+        // snapshot_key: a solve-relevant field added to the key but missed
+        // by the probe would silently serve stale cached decisions — this
+        // test breaks instead.
+        let a = eapp(1, 2.0, 8.0, 1, 10, 3, 0.5);
+        let b = eapp(2, 1.0, 4.0, 2, 6, 0, 1.5);
+        let capacities = caps(3, 12.0, 64.0);
+        let apps: Vec<&EngineApp> = vec![&a, &b];
+        let key = snapshot_key(&apps, &capacities);
+        assert!(key_matches(&key, &apps, &capacities));
+
+        let mut variants: Vec<EngineApp> = Vec::new();
+        for f in [
+            (|v: &mut EngineApp| v.opt.id = AppId(9)) as fn(&mut EngineApp),
+            |v| v.opt.demand = Res(vec![2.0, 9.0]),
+            |v| v.opt.weight = 2.0,
+            |v| v.opt.n_min = 2,
+            |v| v.opt.n_max = 11,
+            |v| v.opt.prev = Some(4),
+            |v| v.opt.current = [(ServerId(1), 3)].into_iter().collect(),
+        ] {
+            let mut v = a.clone();
+            f(&mut v);
+            variants.push(v);
+        }
+        for v in &variants {
+            let mutated: Vec<&EngineApp> = vec![v, &b];
+            assert!(
+                !key_matches(&key, &mutated, &capacities),
+                "probe missed a field change: {v:?}"
+            );
+            assert_ne!(snapshot_key(&mutated, &capacities), key);
+            assert_ne!(
+                snapshot_prehash(&mutated, &capacities),
+                snapshot_prehash(&apps, &capacities),
+                "pre-key missed a field change: {v:?}"
+            );
+        }
+        assert!(!key_matches(&key, &apps, &caps(3, 12.0, 65.0)));
+        assert!(!key_matches(&key, &apps, &caps(2, 12.0, 64.0)));
     }
 
     #[test]

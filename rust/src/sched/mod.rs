@@ -15,10 +15,13 @@
 //! * [`AllocationEngine`] — Dorm's shared decision loop: FIFO admission
 //!   with newest-first deferral on infeasibility (§IV-B), solve via
 //!   [`crate::optimizer::Optimizer`], emit the delta.  It also owns the
-//!   incremental re-solve state: an (apps, capacity) snapshot cache that
-//!   skips the solve entirely when nothing changed since the last event,
-//!   and the previous solution counts fed to the solvers as a warm-start
-//!   incumbent (cache hits / incumbent reuse are reported through
+//!   incremental re-solve state (DESIGN.md §10): an (apps, capacity)
+//!   snapshot cache (64-bit pre-key + allocation-free exact compare,
+//!   hits served behind an `Arc`), the previous solution counts fed to
+//!   the solvers as a warm-start incumbent, the persistent
+//!   [`crate::cluster::PackState`] driving delta-aware placement, and an
+//!   amortized admission loop that solves prefix slices of one buffer
+//!   and skips floor-infeasible prefixes outright (reported through
 //!   [`crate::optimizer::SolveStats`] and [`EngineStats`]).
 //! * [`DormPolicy`] — the paper's system as a [`CmsPolicy`]: a thin
 //!   adapter over [`AllocationEngine`].

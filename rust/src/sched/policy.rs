@@ -2,10 +2,13 @@
 //! (a backend-neutral snapshot) and what it returns (a full assignment).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::app::{AppId, Engine};
-use crate::cluster::ServerId;
+use crate::cluster::{Assignment, ServerId};
 use crate::resources::Res;
+
+use super::EngineStats;
 
 /// One application as a policy sees it — the fields every backend (live
 /// master, DES) can provide, and everything any policy needs.
@@ -53,9 +56,12 @@ pub struct SchedCtx<'a> {
 /// A policy's decision: the complete next assignment for every active app
 /// (apps omitted keep zero containers), plus which carried-over apps were
 /// adjusted (checkpointed + killed + resumed at the new scale).
+///
+/// The assignment is shared ([`Arc`]) so stateful policies serving cached
+/// decisions hand it out in O(1); backends only read it.
 #[derive(Clone, Debug, Default)]
 pub struct AllocationUpdate {
-    pub assignment: BTreeMap<AppId, BTreeMap<ServerId, u32>>,
+    pub assignment: Arc<Assignment>,
     pub adjusted: Vec<AppId>,
 }
 
@@ -96,5 +102,13 @@ pub trait CmsPolicy {
     /// shaving throughput even though placements match the static policy.
     fn progress_factor(&self) -> f64 {
         1.0
+    }
+
+    /// Incremental-path telemetry, when the policy runs an
+    /// [`crate::sched::AllocationEngine`] (cache hits, warm starts, delta
+    /// packs…).  Backends surface it for observability; the stateless
+    /// baselines return `None`.
+    fn engine_stats(&self) -> Option<EngineStats> {
+        None
     }
 }

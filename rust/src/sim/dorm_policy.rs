@@ -98,5 +98,7 @@ mod tests {
         // ... and once carried state exists the previous solution seeds
         // each re-solve
         assert!(stats.warm_start_hits >= 1, "{stats:?}");
+        // the placement rounds ran on the incremental delta packer
+        assert!(stats.delta_packs >= 1, "{stats:?}");
     }
 }

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Scheduler-latency smoke (DESIGN.md §10): run the sched_latency bench's
+# churn sweep — legacy vs incremental decision path over a saturated
+# cluster with a deferred backlog — and emit BENCH_sched.json (per-scale
+# p50/p99 decision latency + moved-container counts) so the perf
+# trajectory is tracked from PR 4 forward.
+#
+# Usage, from the repo root:
+#   bash scripts/bench_sched.sh          # reduced CI sweep (fast)
+#   bash scripts/bench_sched.sh full     # full sweep incl. 1000 apps x 500 servers
+#
+# The bench itself asserts old≡new decision parity at the small scales,
+# that the delta packer actually ran, and that it never moves more
+# containers than the full re-pack — so this doubles as a functional
+# check of the incremental path.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+MODE="${1:-ci}"
+case "$MODE" in
+  ci)   export DORM_SCHED_SCALE=ci ;;
+  full) export DORM_SCHED_SCALE=full ;;
+  *)    echo "usage: $0 [ci|full]" >&2; exit 2 ;;
+esac
+
+export DORM_BENCH_JSON="${DORM_BENCH_JSON:-$PWD/BENCH_sched.json}"
+
+cargo bench --manifest-path rust/Cargo.toml --bench sched_latency
+
+echo
+echo "== BENCH_sched.json"
+cat "$DORM_BENCH_JSON"
