@@ -32,7 +32,7 @@ pub struct Checkpoint {
     pub params: Vec<f32>,
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;
@@ -224,6 +224,73 @@ impl CheckpointStore {
     /// path; standalone cleanup must go through `prune`.
     pub fn prune_after_save(&self, app: AppId, keep: usize, just_wrote: &Path) -> Result<usize> {
         Self::prune_files(&self.files_of(app)?, keep, Some(just_wrote))
+    }
+
+    // ---- master self-checkpoints (HA, `crate::master::ha`) --------------
+    //
+    // The store also parks the *master's own* state: full snapshots named
+    // `master.ep{epoch}.seq{seq}.mckpt` (zero-padded so lexicographic ==
+    // (epoch, seq) order) plus one append-only `master.wal` of the
+    // mutating requests since the newest snapshot.  The byte format lives
+    // in `crate::master::ha`; this layer only does atomic file plumbing,
+    // mirroring the per-app checkpoint discipline above.
+
+    fn master_path(&self, epoch: u64, seq: u64) -> PathBuf {
+        self.dir.join(format!("master.ep{epoch:010}.seq{seq:012}.mckpt"))
+    }
+
+    /// Atomically persist one master snapshot (tmp + fsync + rename, same
+    /// crash discipline as [`CheckpointStore::save`]).
+    pub fn save_master(&self, bytes: &[u8], epoch: u64, seq: u64) -> Result<PathBuf> {
+        let final_path = self.master_path(epoch, seq);
+        let tmp = final_path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &final_path)?;
+        Ok(final_path)
+    }
+
+    /// All master snapshot files, ascending by (epoch, seq).
+    pub fn master_files(&self) -> Result<Vec<PathBuf>> {
+        let mut out: Vec<PathBuf> = std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map_or(false, |n| n.starts_with("master.ep") && n.ends_with(".mckpt"))
+            })
+            .collect();
+        out.sort();
+        Ok(out)
+    }
+
+    /// Retention for master snapshots: keep the newest `keep` files
+    /// (clamped to ≥ 1).  Saves are atomic, so the newest file is whole by
+    /// construction; digest validation (and fallback past a bit-rotted
+    /// newest) happens at load time in `crate::master::ha`.
+    pub fn prune_master(&self, keep: usize) -> Result<usize> {
+        let files = self.master_files()?;
+        let keep = keep.max(1);
+        if files.len() <= keep {
+            return Ok(0);
+        }
+        let cut = files.len() - keep;
+        let mut removed = 0;
+        for p in &files[..cut] {
+            std::fs::remove_file(p)?;
+            removed += 1;
+        }
+        Ok(removed)
+    }
+
+    /// The master write-ahead log (delta records between full snapshots).
+    pub fn wal_path(&self) -> PathBuf {
+        self.dir.join("master.wal")
     }
 
     /// Remove all checkpoints for a completed app.

@@ -2,7 +2,7 @@
 //! state machine driven by the adjustment protocol (§III-C-2), and the
 //! checkpoint store that makes kill/resume safe.
 
-mod checkpoint;
+pub(crate) mod checkpoint;
 mod spec;
 
 pub use checkpoint::{Checkpoint, CheckpointStore};

@@ -87,6 +87,8 @@ COMMANDS:
                --mtbfs LIST      comma-separated MTBF hours (default 2,4,8,16,32)
                --mttr H          mean repair time in hours (default 0.5)
                --ckpt H          periodic checkpoint cadence hours (0 = on adjustment only)
+               --master-fail H   kill the CMS master at hour H (0 = never)
+               --takeover H      standby takeover latency in hours (default 0.05)
                --csv             also write reports/churn_<system>.csv
   fig1       print the Fig. 1 duration-CDF model
   train      train a model through the full Dorm stack (needs artifacts/)
@@ -96,7 +98,7 @@ COMMANDS:
                --lr X            learning rate (default 0.1)
   latency    task-level scheduling-latency analysis (§II-C, 430 ms claim)
                --nodes N         cluster size (default 100)
-  master     serve the control plane over TCP (DESIGN.md §9)
+  master     serve the control plane over TCP (DESIGN.md §9, §11)
                --bind ADDR       listen address (default 127.0.0.1:4600)
                --slaves N        cluster size (default 2)
                --cpu/--gpu/--ram per-slave capacity (default 12/0/64)
@@ -105,19 +107,42 @@ COMMANDS:
                --sweep-ms T      lease sweep period (default 250 when
                                  --lease-ms > 0, else off)
                --store DIR       checkpoint dir (default net_checkpoints)
+               --ha              self-checkpoint the master through the
+                                 store; on restart, resume from the
+                                 newest snapshot at a fresh epoch
+                                 ([ha] config section)
+               --standby         watch a primary instead of serving; on
+                                 its lease lapse, promote the checkpointed
+                                 state at epoch+1 and serve it
+               --watch ADDR      primary address a standby probes
+               --master-lease-ms T  standby declares the primary dead
+                                 after T ms without a good probe
+               --probe-ms T      standby probe period (default 250)
+               --snapshot-every N  full master snapshot every N mutating
+                                 events, WAL in between (default 64)
+               --epoch N         start at an explicit epoch (testing /
+                                 deposed-primary simulation)
              master/slave/ctl all also take:
-               --config FILE     TOML file; its [net] section sets the
-                                 frame limit / timeouts / heartbeat period
+               --config FILE     TOML file; its [net]/[ha] sections set
+                                 frame limit / timeouts / failover knobs
                --frame-kib N     frame-size limit override, KiB
                --io-timeout-ms T mid-frame stall timeout override
   slave      run one DormSlave as a separate process
-               --connect ADDR    master address (default 127.0.0.1:4600)
+               --connect LIST    master candidates, comma-separated in
+                                 dial order (default: [ha].candidates
+                                 from --config, else 127.0.0.1:4600);
+                                 re-dials across a failover, refuses a
+                                 deposed (stale-epoch) master's directives
                --index J         server ordinate in the cluster (default 0)
                --period-ms T     heartbeat period (default:
                                  [net].heartbeat_period_ms = 500)
                --cpu/--gpu/--ram local capacity (default 12/0/64)
   ctl        one control-plane request against a running master
-               --connect ADDR    master address (default 127.0.0.1:4600)
+               --connect LIST    master candidates, comma-separated
+                                 (default: [ha].candidates from
+                                 --config, else 127.0.0.1:4600)
+               --min-epoch N     refuse masters serving an epoch < N
+                                 (fences a deposed primary's writes)
                ops: submit [--cpu C --gpu G --ram R --weight W
                             --nmin N --nmax N]   | complete --app N
                     query [--app N] | advance --app N --steps S

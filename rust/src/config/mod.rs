@@ -11,4 +11,6 @@ mod parse;
 mod schema;
 
 pub use parse::{parse_kv_file, parse_toml, TomlDoc, Value};
-pub use schema::{ClusterConfig, DormConfig, FaultConfig, NetConfig, ServerConfig, SimConfig};
+pub use schema::{
+    ClusterConfig, DormConfig, FaultConfig, HaConfig, NetConfig, ServerConfig, SimConfig,
+};

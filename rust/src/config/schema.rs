@@ -132,6 +132,12 @@ pub struct FaultConfig {
     pub ckpt_retain: usize,
     /// Failure-trace RNG seed.
     pub seed: u64,
+    /// Inject a *master* failure at this hour (0 = no master outage) —
+    /// the DES defers every allocation decision from then until the
+    /// standby takeover completes (DESIGN.md §11).
+    pub master_fail_at_hours: f64,
+    /// How long the standby takeover takes (lease detection + restore).
+    pub master_takeover_hours: f64,
 }
 
 impl Default for FaultConfig {
@@ -146,6 +152,8 @@ impl Default for FaultConfig {
             ckpt_period_hours: 0.0,
             ckpt_retain: 3,
             seed: 23,
+            master_fail_at_hours: 0.0,
+            master_takeover_hours: 0.05,
         }
     }
 }
@@ -166,6 +174,10 @@ impl FaultConfig {
                 .f64_or("fault", "ckpt_period_hours", d.ckpt_period_hours),
             ckpt_retain: doc.u32_or("fault", "ckpt_retain", d.ckpt_retain as u32) as usize,
             seed: doc.f64_or("fault", "seed", d.seed as f64) as u64,
+            master_fail_at_hours: doc
+                .f64_or("fault", "master_fail_at_hours", d.master_fail_at_hours),
+            master_takeover_hours: doc
+                .f64_or("fault", "master_takeover_hours", d.master_takeover_hours),
         };
         if c.mtbf_hours <= 0.0 {
             bail!("[fault].mtbf_hours must be > 0, got {}", c.mtbf_hours);
@@ -187,6 +199,18 @@ impl FaultConfig {
         }
         if c.ckpt_retain == 0 {
             bail!("[fault].ckpt_retain must be >= 1 (never drop the newest)");
+        }
+        if c.master_fail_at_hours < 0.0 {
+            bail!(
+                "[fault].master_fail_at_hours must be >= 0, got {}",
+                c.master_fail_at_hours
+            );
+        }
+        if c.master_takeover_hours < 0.0 {
+            bail!(
+                "[fault].master_takeover_hours must be >= 0, got {}",
+                c.master_takeover_hours
+            );
         }
         Ok(c)
     }
@@ -211,6 +235,13 @@ pub struct NetConfig {
     /// never expires leases on its own; a client must send
     /// ExpireLeases).  Pair with `[fault].lease_timeout_hours`.
     pub lease_sweep_ms: u64,
+    /// `FailoverTransport`: candidate-sweep rounds per call before the
+    /// control plane is declared gone.  Together with
+    /// `redial_backoff_ms` this must cover a standby takeover window
+    /// (`[ha].master_lease_ms` plus restore time).
+    pub redial_rounds: u64,
+    /// `FailoverTransport`: pause between candidate sweeps, milliseconds.
+    pub redial_backoff_ms: u64,
 }
 
 impl Default for NetConfig {
@@ -221,6 +252,9 @@ impl Default for NetConfig {
             heartbeat_period_ms: 500,
             io_timeout_ms: 5000,
             lease_sweep_ms: 0,
+            // 24 x 250 ms = a 6 s takeover ride-out by default
+            redial_rounds: 24,
+            redial_backoff_ms: 250,
         }
     }
 }
@@ -240,6 +274,10 @@ impl NetConfig {
                 as u64,
             io_timeout_ms: doc.u32_or("net", "io_timeout_ms", d.io_timeout_ms as u32) as u64,
             lease_sweep_ms: doc.u32_or("net", "lease_sweep_ms", d.lease_sweep_ms as u32) as u64,
+            redial_rounds: doc.u32_or("net", "redial_rounds", d.redial_rounds as u32) as u64,
+            redial_backoff_ms: doc
+                .u32_or("net", "redial_backoff_ms", d.redial_backoff_ms as u32)
+                as u64,
         };
         // the smallest legal frame must fit a handshake/error response;
         // 64 B is already absurdly tight but still functional
@@ -251,6 +289,95 @@ impl NetConfig {
         }
         if c.bind_addr.is_empty() {
             bail!("[net].bind_addr must be non-empty");
+        }
+        if c.redial_rounds == 0 {
+            bail!("[net].redial_rounds must be >= 1");
+        }
+        Ok(c)
+    }
+}
+
+/// Master high-availability knobs (`crate::master::ha` + `crate::net::standby`,
+/// DESIGN.md §11): the candidate master addresses clients re-dial, the
+/// lease a standby holds over the primary, and the self-checkpoint
+/// cadence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HaConfig {
+    /// Arm master self-checkpointing (`dorm master --ha` forces it on).
+    pub enabled: bool,
+    /// Master addresses in dial order (primary first, then standbys).
+    /// Clients (`dorm slave`, `dorm ctl`) walk this list on connection
+    /// loss; empty = single-master, no failover.
+    pub candidates: Vec<String>,
+    /// A standby declares the primary dead after this long without a
+    /// successful probe.
+    pub master_lease_ms: u64,
+    /// Standby probe cadence.
+    pub probe_period_ms: u64,
+    /// Full master snapshot every N mutating dispatches (WAL in between).
+    pub snapshot_every: u64,
+    /// Master snapshot files retained (≥ 1; older ones pruned).
+    pub snapshots_retain: usize,
+}
+
+impl Default for HaConfig {
+    fn default() -> Self {
+        HaConfig {
+            enabled: false,
+            candidates: Vec::new(),
+            master_lease_ms: 2000,
+            probe_period_ms: 250,
+            snapshot_every: 64,
+            snapshots_retain: 3,
+        }
+    }
+}
+
+impl HaConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = HaConfig::default();
+        let candidates = match doc.get("ha", "candidates") {
+            None => d.candidates,
+            Some(v) => {
+                let Some(items) = v.as_array() else {
+                    bail!("[ha].candidates must be an array of addresses");
+                };
+                let mut out = Vec::with_capacity(items.len());
+                for item in items {
+                    match item.as_str() {
+                        Some(s) if !s.is_empty() => out.push(s.to_string()),
+                        _ => bail!("[ha].candidates entries must be non-empty strings"),
+                    }
+                }
+                out
+            }
+        };
+        let c = HaConfig {
+            enabled: doc
+                .get("ha", "enabled")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.enabled),
+            candidates,
+            master_lease_ms: doc.u32_or("ha", "master_lease_ms", d.master_lease_ms as u32)
+                as u64,
+            probe_period_ms: doc.u32_or("ha", "probe_period_ms", d.probe_period_ms as u32)
+                as u64,
+            snapshot_every: doc.u32_or("ha", "snapshot_every", d.snapshot_every as u32) as u64,
+            snapshots_retain: doc
+                .u32_or("ha", "snapshots_retain", d.snapshots_retain as u32)
+                as usize,
+        };
+        if c.master_lease_ms == 0 {
+            bail!("[ha].master_lease_ms must be >= 1");
+        }
+        if c.probe_period_ms == 0 {
+            bail!("[ha].probe_period_ms must be >= 1");
+        }
+        if c.snapshot_every == 0 {
+            bail!("[ha].snapshot_every must be >= 1");
+        }
+        if c.snapshots_retain == 0 {
+            bail!("[ha].snapshots_retain must be >= 1 (never drop the newest)");
         }
         Ok(c)
     }
@@ -388,6 +515,58 @@ mod tests {
         ] {
             let doc = parse_toml(bad).unwrap();
             assert!(NetConfig::from_doc(&doc).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn ha_section_parses_and_validates() {
+        let doc = parse_toml(
+            "[ha]\nenabled = true\n\
+             candidates = [\"127.0.0.1:4600\", \"127.0.0.1:4601\"]\n\
+             master_lease_ms = 1500\nprobe_period_ms = 100\n\
+             snapshot_every = 16\nsnapshots_retain = 2\n",
+        )
+        .unwrap();
+        let c = HaConfig::from_doc(&doc).unwrap();
+        assert!(c.enabled);
+        assert_eq!(c.candidates, vec!["127.0.0.1:4600", "127.0.0.1:4601"]);
+        assert_eq!(c.master_lease_ms, 1500);
+        assert_eq!(c.probe_period_ms, 100);
+        assert_eq!(c.snapshot_every, 16);
+        assert_eq!(c.snapshots_retain, 2);
+
+        // defaults when the section is absent
+        let empty = parse_toml("").unwrap();
+        assert_eq!(HaConfig::from_doc(&empty).unwrap(), HaConfig::default());
+
+        for bad in [
+            "[ha]\nmaster_lease_ms = 0\n",
+            "[ha]\nprobe_period_ms = 0\n",
+            "[ha]\nsnapshot_every = 0\n",
+            "[ha]\nsnapshots_retain = 0\n",
+            "[ha]\ncandidates = \"not-an-array\"\n",
+            "[ha]\ncandidates = [\"\"]\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(HaConfig::from_doc(&doc).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn fault_master_outage_knobs_parse() {
+        let doc = parse_toml(
+            "[fault]\nmaster_fail_at_hours = 2.5\nmaster_takeover_hours = 0.1\n",
+        )
+        .unwrap();
+        let c = FaultConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.master_fail_at_hours, 2.5);
+        assert_eq!(c.master_takeover_hours, 0.1);
+        for bad in [
+            "[fault]\nmaster_fail_at_hours = -1\n",
+            "[fault]\nmaster_takeover_hours = -0.5\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(FaultConfig::from_doc(&doc).is_err(), "{bad:?} accepted");
         }
     }
 

@@ -30,6 +30,10 @@ pub struct ChurnPoint {
     /// Mean sampled useful-progress rate (work-units/hour).
     pub mean_goodput: f64,
     pub completed: usize,
+    /// Allocation decisions deferred by a master outage (0 when
+    /// `[fault].master_fail_at_hours` is off) — the takeover's "lost
+    /// adjustments" cost, DESIGN.md §11.
+    pub deferred_allocs: usize,
 }
 
 impl ChurnPoint {
@@ -44,6 +48,7 @@ impl ChurnPoint {
             mean_recovery_hours: m.mean_recovery_hours(),
             mean_goodput: m.goodput.mean_over(0.0, horizon),
             completed: run.outcome.completed,
+            deferred_allocs: run.outcome.deferred_allocations,
         }
     }
 }
@@ -67,7 +72,11 @@ fn systems(n_servers: usize) -> Vec<Box<dyn CmsPolicy>> {
 /// checkpoint cadence); each sweep point overrides the MTBF and forces
 /// `enabled`.  Every system sees the same workload and the same failure
 /// trace per MTBF; the paper's original no-churn world is recoverable by
-/// adding a very large MTBF to the sweep.
+/// adding a very large MTBF to the sweep.  When
+/// `base.master_fail_at_hours > 0` the trace additionally kills the CMS
+/// master at that hour, with the standby takeover completing
+/// `master_takeover_hours` later — so Fig-style experiments can quantify
+/// takeover latency and lost adjustments (DESIGN.md §11).
 pub fn churn_sweep(
     base: &FaultConfig,
     seed: u64,
@@ -75,12 +84,19 @@ pub fn churn_sweep(
     napps: usize,
     mtbfs: &[f64],
 ) -> Vec<ChurnPoint> {
+    use crate::fault::FailureEvent;
     let mut out = Vec::new();
     for &mtbf in mtbfs {
         let mut exp = Experiment::scaled(seed, horizon_hours, napps);
         let n_servers = exp.cluster.servers.len();
         let cfg = FaultConfig { enabled: true, mtbf_hours: mtbf, ..base.clone() };
-        let trace = exp.apply_fault(&cfg);
+        let mut trace = exp.apply_fault(&cfg);
+        if base.master_fail_at_hours > 0.0 {
+            trace.push(FailureEvent::master_kill(base.master_fail_at_hours));
+            trace.push(FailureEvent::master_recover(
+                base.master_fail_at_hours + base.master_takeover_hours,
+            ));
+        }
         for mut policy in systems(n_servers) {
             let run = exp.run_with_faults(policy.as_mut(), &trace);
             out.push(ChurnPoint::from_run(&run, mtbf, horizon_hours));
@@ -103,6 +119,7 @@ pub fn churn_table(points: &[ChurnPoint]) -> String {
                 format!("{:.3}", p.mean_recovery_hours),
                 format!("{:.1}", p.mean_goodput),
                 format!("{}", p.completed),
+                format!("{}", p.deferred_allocs),
             ]
         })
         .collect();
@@ -116,6 +133,7 @@ pub fn churn_table(points: &[ChurnPoint]) -> String {
             "recovery_h",
             "goodput",
             "completed",
+            "deferred",
         ],
         &rows,
     )
@@ -136,6 +154,7 @@ pub fn churn_csv_columns(
         ("mean_recovery_hours", rows.iter().map(|p| p.mean_recovery_hours).collect()),
         ("mean_goodput", rows.iter().map(|p| p.mean_goodput).collect()),
         ("completed", rows.iter().map(|p| p.completed as f64).collect()),
+        ("deferred_allocs", rows.iter().map(|p| p.deferred_allocs as f64).collect()),
     ]
 }
 
@@ -183,5 +202,28 @@ mod tests {
         assert!(table.contains("mtbf_h"));
         let cols = churn_csv_columns(&points, "static");
         assert_eq!(cols[0].1.len(), 2);
+        // no master outage configured: nothing deferred anywhere
+        assert!(points.iter().all(|p| p.deferred_allocs == 0));
+    }
+
+    /// With a master outage injected mid-run, every system records the
+    /// allocation work it had to defer until the standby took over.
+    #[test]
+    fn master_outage_sweeps_report_deferred_allocations() {
+        let base = FaultConfig {
+            mttr_hours: 0.25,
+            ckpt_period_hours: 0.5,
+            seed: 11,
+            master_fail_at_hours: 1.0,
+            master_takeover_hours: 1.0,
+            ..Default::default()
+        };
+        let points = churn_sweep(&base, 11, 4.0, 6, &[1.0]);
+        assert_eq!(points.len(), 7, "7 systems x 1 MTBF");
+        assert!(
+            points.iter().any(|p| p.deferred_allocs > 0),
+            "a 1 h outage over a 4 h run must defer something: {points:?}"
+        );
+        assert!(churn_table(&points).contains("deferred"));
     }
 }

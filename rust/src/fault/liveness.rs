@@ -88,6 +88,20 @@ impl LeaseTable {
     pub fn timeout(&self) -> f64 {
         self.timeout
     }
+
+    /// Decompose into `(timeout, renewed, alive)` — the serializable parts
+    /// a master checkpoint persists (`crate::master::ha`).
+    pub fn to_parts(&self) -> (f64, Vec<f64>, Vec<bool>) {
+        (self.timeout, self.renewed.clone(), self.alive.clone())
+    }
+
+    /// Rebuild a table from its serialized parts (inverse of
+    /// [`LeaseTable::to_parts`]).  The two vectors must be the same length.
+    pub fn from_parts(timeout: f64, renewed: Vec<f64>, alive: Vec<bool>) -> Self {
+        assert!(timeout > 0.0, "lease timeout must be positive");
+        assert_eq!(renewed.len(), alive.len(), "lease parts length mismatch");
+        LeaseTable { timeout, renewed, alive }
+    }
 }
 
 #[cfg(test)]

@@ -9,13 +9,29 @@
 
 use crate::util::Rng;
 
-/// A server goes down or comes back.
+/// A server goes down or comes back — or the *master* does (control-plane
+/// failover, DESIGN.md §11).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FailureKind {
     /// The server dies: capacity and containers are lost.
     Kill,
     /// The server rejoins with its original capacity (empty).
     Recover,
+    /// The CMS master dies.  Running partitions keep computing (§III-D:
+    /// apps launch tasks locally), but no allocation decisions happen
+    /// until a standby takes over.
+    MasterKill,
+    /// A standby master finished taking over; deferred allocation work
+    /// (arrivals, completions, failures seen during the outage) is
+    /// reconciled in one catch-up solve.
+    MasterRecover,
+}
+
+impl FailureKind {
+    /// Does this event name a specific server (vs the master)?
+    pub fn is_server_event(self) -> bool {
+        matches!(self, FailureKind::Kill | FailureKind::Recover)
+    }
 }
 
 /// One churn event in a trace.
@@ -23,7 +39,8 @@ pub enum FailureKind {
 pub struct FailureEvent {
     /// Hours from run start.
     pub time: f64,
-    /// Server index (`crate::cluster::ServerId` ordinate).
+    /// Server index (`crate::cluster::ServerId` ordinate); meaningless
+    /// (`usize::MAX`) for master events.
     pub server: usize,
     pub kind: FailureKind,
 }
@@ -35,6 +52,16 @@ impl FailureEvent {
 
     pub fn recover(time: f64, server: usize) -> Self {
         FailureEvent { time, server, kind: FailureKind::Recover }
+    }
+
+    /// The CMS master dies at `time`.
+    pub fn master_kill(time: f64) -> Self {
+        FailureEvent { time, server: usize::MAX, kind: FailureKind::MasterKill }
+    }
+
+    /// A standby finishes taking over at `time`.
+    pub fn master_recover(time: f64) -> Self {
+        FailureEvent { time, server: usize::MAX, kind: FailureKind::MasterRecover }
     }
 }
 
@@ -74,7 +101,10 @@ impl FailureModel {
             FailureModel::None => Vec::new(),
             FailureModel::Scripted(events) => events
                 .iter()
-                .filter(|e| e.server < n_servers && e.time <= horizon_hours)
+                .filter(|e| {
+                    e.time <= horizon_hours
+                        && (!e.kind.is_server_event() || e.server < n_servers)
+                })
                 .cloned()
                 .collect(),
             FailureModel::Exponential { mtbf_hours, mttr_hours, seed } => {

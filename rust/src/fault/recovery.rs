@@ -37,6 +37,12 @@ impl RecoveryLog {
         Self::default()
     }
 
+    /// Rebuild a log from serialized records (master checkpoint restore,
+    /// `crate::master::ha`).
+    pub fn from_records(records: Vec<RecoveryRecord>) -> Self {
+        RecoveryLog { records }
+    }
+
     /// A server death took `app` down.
     pub fn failed(&mut self, app: AppId, server: usize, failed_at: f64, lost_work: f64) {
         self.records.push(RecoveryRecord {

@@ -32,10 +32,10 @@
 //! | [`sched`] | shared allocation engine + policy interface (master ∩ sim), cached/warm-started re-solves |
 //! | [`cluster`] | servers, partitions, containers; delta-aware packer + slack-indexed best fit (DESIGN.md §10) |
 //! | [`app`] | application 6-tuple, lifecycle, checkpoints |
-//! | [`master`] / [`slave`] | the Dorm control plane |
-//! | [`proto`] | versioned control-plane protocol: typed Request/Response + wire format |
-//! | [`net`] | transports: in-process dispatch, TCP server/client, slave agent loop |
-//! | [`fault`] | server liveness (leases), failure injection, checkpoint-driven recovery, churn experiment |
+//! | [`master`] / [`slave`] | the Dorm control plane; `master::ha` = master self-checkpoints + WAL + epoch-fenced takeover (DESIGN.md §11) |
+//! | [`proto`] | versioned control-plane protocol: typed Request/Response + wire format, epoch-stamped responses |
+//! | [`net`] | transports: in-process dispatch, TCP server/client, failover client (candidate re-dial + stale-epoch fencing), slave agent loop, standby watcher |
+//! | [`fault`] | server liveness (leases), failure injection (server + master outages), checkpoint-driven recovery, churn experiment |
 //! | [`ps`] | BSP parameter-server runtime (the "MxNet" stand-in) |
 //! | [`runtime`] | PJRT executor service for `artifacts/*.hlo.txt` |
 //! | [`sim`] | discrete-event simulator (Figs 6–9) |

@@ -97,6 +97,8 @@ fn cmd_churn(cli: &Cli) -> Result<()> {
         mttr_hours: cli.f64_flag("mttr", defaults.mttr_hours)?,
         ckpt_period_hours: cli.f64_flag("ckpt", defaults.ckpt_period_hours)?,
         seed,
+        master_fail_at_hours: cli.f64_flag("master-fail", defaults.master_fail_at_hours)?,
+        master_takeover_hours: cli.f64_flag("takeover", defaults.master_takeover_hours)?,
         ..defaults
     };
     let mtbfs: Vec<f64> = cli
@@ -218,11 +220,82 @@ fn net_from_cli(cli: &Cli) -> Result<dorm::config::NetConfig> {
     Ok(net)
 }
 
+/// Resolve the `[ha]` configuration (master failover, DESIGN.md §11):
+/// `--config FILE` or defaults, then the flag overrides.  `--ha` and
+/// `--standby` both force HA on.
+fn ha_from_cli(cli: &Cli) -> Result<dorm::config::HaConfig> {
+    use dorm::config::{parse_toml, HaConfig};
+    let mut ha = match cli.flags.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?;
+            HaConfig::from_doc(&parse_toml(&text)?)?
+        }
+        None => HaConfig::default(),
+    };
+    if cli.bool_flag("ha") || cli.bool_flag("standby") {
+        ha.enabled = true;
+    }
+    if cli.flags.contains_key("snapshot-every") {
+        ha.snapshot_every = cli.u64_flag("snapshot-every", ha.snapshot_every)?;
+        if ha.snapshot_every == 0 {
+            anyhow::bail!("--snapshot-every must be >= 1");
+        }
+    }
+    if cli.flags.contains_key("master-lease-ms") {
+        ha.master_lease_ms = cli.u64_flag("master-lease-ms", ha.master_lease_ms)?;
+        if ha.master_lease_ms == 0 {
+            anyhow::bail!("--master-lease-ms must be >= 1");
+        }
+    }
+    if cli.flags.contains_key("probe-ms") {
+        ha.probe_period_ms = cli.u64_flag("probe-ms", ha.probe_period_ms)?;
+        if ha.probe_period_ms == 0 {
+            anyhow::bail!("--probe-ms must be >= 1");
+        }
+    }
+    Ok(ha)
+}
+
+/// Split a `--connect` value into the candidate list `FailoverTransport`
+/// walks ("addr" or "addr1,addr2,...").
+fn candidates_of(addr: &str) -> Result<Vec<String>> {
+    let out: Vec<String> = addr
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    if out.is_empty() {
+        anyhow::bail!("--connect needs at least one address");
+    }
+    Ok(out)
+}
+
+/// The master candidate list a client (`dorm slave` / `dorm ctl`) walks:
+/// an explicit `--connect` wins, else `[ha].candidates` from `--config`,
+/// else the default single master.
+fn client_candidates(cli: &Cli) -> Result<Vec<String>> {
+    if let Some(addr) = cli.flags.get("connect") {
+        return candidates_of(addr);
+    }
+    let ha = ha_from_cli(cli)?;
+    if !ha.candidates.is_empty() {
+        return Ok(ha.candidates);
+    }
+    candidates_of("127.0.0.1:4600")
+}
+
 /// `dorm master`: serve the control plane over TCP until a `ctl shutdown`
-/// arrives (the two-process demo in README.md; DESIGN.md §9).
+/// arrives (the two-process demo in README.md; DESIGN.md §9).  With
+/// `--ha` the master self-checkpoints (and resumes from its newest
+/// snapshot on restart); with `--standby` the process instead watches a
+/// primary and promotes itself at `epoch + 1` when the primary's lease
+/// lapses (DESIGN.md §11).
 fn cmd_master(cli: &Cli) -> Result<()> {
     use dorm::config::{ClusterConfig, DormConfig, FaultConfig};
     use dorm::master::DormMaster;
+    use dorm::net::StandbyOpts;
     use dorm::proto::{PROTO_MAJOR, PROTO_MINOR};
     use dorm::resources::Res;
 
@@ -241,20 +314,87 @@ fn cmd_master(cli: &Cli) -> Result<()> {
     net.bind_addr = cli.str_flag("bind", &net.bind_addr);
     net.lease_sweep_ms =
         cli.u64_flag("sweep-ms", if lease_ms > 0 { 250 } else { net.lease_sweep_ms })?;
+    let ha = ha_from_cli(cli)?;
     let store = CheckpointStore::new(cli.str_flag("store", "net_checkpoints"))?;
-    let mut master = DormMaster::new(&ClusterConfig::uniform(slaves, cap), dorm_cfg, store);
-    if lease_ms > 0 {
-        master = master.with_fault(&FaultConfig {
-            lease_timeout_hours: lease_ms as f64 / 3_600_000.0,
-            ..FaultConfig::default()
-        });
+
+    if cli.bool_flag("standby") {
+        let opts = StandbyOpts {
+            watch: cli.str_flag("watch", "127.0.0.1:4600"),
+            master_lease: std::time::Duration::from_millis(ha.master_lease_ms),
+            probe_period: std::time::Duration::from_millis(ha.probe_period_ms),
+            snapshot_every: ha.snapshot_every,
+            snapshots_retain: ha.snapshots_retain,
+        };
+        println!(
+            "dorm master (standby): watching {} (lease {} ms); will serve on {}",
+            opts.watch, ha.master_lease_ms, net.bind_addr
+        );
+        // blocks until the primary's lease lapses, then promotes + serves
+        let handle = dorm::net::run_standby(store, &net, &opts)?;
+        let epoch = handle.master().lock().map(|m| m.epoch()).unwrap_or(0);
+        println!(
+            "dorm master (standby): promoted to epoch {epoch}; listening on {}",
+            handle.addr()
+        );
+        handle.wait();
+        println!("dorm master: shutdown complete");
+        return Ok(());
     }
+
+    let resumed = if ha.enabled { dorm::master::ha::load_master(&store)? } else { None };
+    let mut promote_on_resume = false;
+    let (mut master, start_seq) = match resumed {
+        Some((m, seq)) => {
+            println!(
+                "dorm master: resumed from checkpoint (epoch {}, clock {}, {} app(s)); \
+                 cluster flags ignored",
+                m.epoch(),
+                m.state_view(None).clock,
+                m.active_apps()
+            );
+            // a restart cannot know whether a standby promoted while it
+            // was down; resuming at the snapshot's epoch could collide
+            // with a live promoted master at the *same* term — the one
+            // split-brain shape epoch fencing cannot arbitrate.  Taking a
+            // fresh term (promote below, once HA is armed) keeps the two
+            // distinguishable: clients converge on the higher epoch and
+            // the loser's writes are refused.  Promotion also re-anchors
+            // the restored lease timestamps into this process's clock.
+            promote_on_resume = true;
+            (m, seq)
+        }
+        None => {
+            let mut m =
+                DormMaster::new(&ClusterConfig::uniform(slaves, cap), dorm_cfg, store.clone());
+            if lease_ms > 0 {
+                m = m.with_fault(&FaultConfig {
+                    lease_timeout_hours: lease_ms as f64 / 3_600_000.0,
+                    ..FaultConfig::default()
+                });
+            }
+            if cli.flags.contains_key("epoch") {
+                // failure injection: resurrect a "deposed primary" at an
+                // old term (the failover smoke drives the fencing with it)
+                m = m.with_epoch(cli.u64_flag("epoch", 1)?);
+            }
+            (m, 0)
+        }
+    };
+    if ha.enabled {
+        master = master.with_ha(ha.snapshot_every, ha.snapshots_retain, start_seq)?;
+    }
+    if promote_on_resume {
+        let epoch = master.promote()?;
+        println!("dorm master: resumed as a fresh term, now serving epoch {epoch}");
+    }
+    let epoch = master.epoch();
     let handle = dorm::net::serve(master, &net)?;
     println!(
-        "dorm master listening on {} (proto v{PROTO_MAJOR}.{PROTO_MINOR}, {slaves} slaves, \
-         lease timeout {})",
+        "dorm master listening on {} (proto v{PROTO_MAJOR}.{PROTO_MINOR}, epoch {epoch}, \
+         {slaves} slaves, lease timeout {}, ha {})",
         handle.addr(),
         if lease_ms > 0 { format!("{lease_ms} ms") } else { "off".into() },
+        if ha.enabled { "on" } else { "off" },
     );
     handle.wait();
     println!("dorm master: shutdown complete");
@@ -263,12 +403,15 @@ fn cmd_master(cli: &Cli) -> Result<()> {
 
 /// `dorm slave`: one per-server agent as its own process, heartbeating
 /// its report and applying the master's reconciliation directives.
+/// `--connect` takes a comma-separated candidate list (primary first,
+/// standbys after): the agent re-dials the list across a master failover
+/// and refuses directives from a deposed (stale-epoch) primary.
 fn cmd_slave(cli: &Cli) -> Result<()> {
-    use dorm::net::{SlaveAgent, TcpTransport};
+    use dorm::net::{FailoverTransport, SlaveAgent};
     use dorm::resources::Res;
     use dorm::slave::DormSlave;
 
-    let addr = cli.str_flag("connect", "127.0.0.1:4600");
+    let candidates = client_candidates(cli)?;
     let index = cli.u64_flag("index", 0)? as u32;
     let net = net_from_cli(cli)?;
     // --period-ms overrides the [net].heartbeat_period_ms config knob
@@ -279,23 +422,29 @@ fn cmd_slave(cli: &Cli) -> Result<()> {
         cli.f64_flag("ram", 64.0)?,
     );
     let name = cli.str_flag("name", &format!("slave{index:02}"));
-    let transport = TcpTransport::connect(&addr, &net)?;
+    let transport = FailoverTransport::connect(candidates.clone(), &net)?;
     let mut agent = SlaveAgent::new(DormSlave::new(name.clone(), cap), index, transport);
-    println!("dorm slave {name} (server {index}) connected to {addr}, beating every {period} ms");
+    println!(
+        "dorm slave {name} (server {index}) connected via {candidates:?}, \
+         beating every {period} ms"
+    );
     let beats = agent.run(std::time::Duration::from_millis(period))?;
     println!("dorm slave {name}: master gone after {beats} beats; exiting");
     Ok(())
 }
 
 /// `dorm ctl`: issue one typed request against a running master and
-/// print the response (the scriptable harness the CI smoke test drives).
+/// print the response (the scriptable harness the CI smoke tests drive).
+/// `--connect` takes a comma-separated candidate list; `--min-epoch N`
+/// refuses to talk to any master serving an epoch below N — the fencing
+/// rule that keeps a deposed primary from accepting writes it can no
+/// longer own (DESIGN.md §11).
 fn cmd_ctl(cli: &Cli) -> Result<()> {
     use dorm::app::{AppSpec, Engine};
-    use dorm::net::{ControlPlane, TcpTransport};
+    use dorm::net::{ControlPlane, FailoverTransport};
     use dorm::proto::{Request, Response};
     use dorm::resources::Res;
 
-    let addr = cli.str_flag("connect", "127.0.0.1:4600");
     let op = cli
         .positional
         .first()
@@ -339,7 +488,17 @@ fn cmd_ctl(cli: &Cli) -> Result<()> {
         other => anyhow::bail!("unknown ctl op {other:?} (see `dorm help`)"),
     };
     let net = net_from_cli(cli)?;
-    let mut t = TcpTransport::connect(&addr, &net)?;
+    let mut t = FailoverTransport::connect(client_candidates(cli)?, &net)?;
+    let min_epoch = cli.u64_flag("min-epoch", 0)?;
+    if min_epoch > 0 {
+        let seen = t.fence();
+        if seen < min_epoch {
+            anyhow::bail!(
+                "stale epoch: master serves epoch {seen}, --min-epoch {min_epoch} \
+                 required (deposed primary refused)"
+            );
+        }
+    }
     match t.call(req)? {
         Response::Submitted { app } => println!("submitted app{}", app.0),
         Response::Ok => println!("ok"),
@@ -349,7 +508,9 @@ fn cmd_ctl(cli: &Cli) -> Result<()> {
         }
         Response::State(v) => {
             println!(
-                "clock={} servers={}/{} active={} adjustments={} recoveries={} util={:.3}",
+                "epoch={} clock={} servers={}/{} active={} adjustments={} recoveries={} \
+                 util={:.3}",
+                v.epoch,
                 v.clock,
                 v.alive_servers,
                 v.total_servers,

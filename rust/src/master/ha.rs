@@ -1,0 +1,762 @@
+//! Master high availability: durable self-checkpoints, WAL replay, and
+//! epoch-fenced takeover (DESIGN.md §11).
+//!
+//! The paper's §III-C protocol checkpoints *applications* through reliable
+//! storage; this module applies the same discipline to the CMS master
+//! itself, closing the single-point-of-control gap.  Three pieces:
+//!
+//! * [`MasterCheckpoint`] — the full serialized master: apps and their
+//!   [`super::ManagedApp`] phases, the event clock and counters, the slave
+//!   books (per-slave container groups, so even admin-created containers
+//!   with non-spec demands survive), the lease table, the
+//!   [`RecoveryLog`], the Dorm θ thresholds (to rebuild the policy), and a
+//!   books digest that cross-checks the rebuilt placement state.  The
+//!   byte format reuses the wire primitives ([`wire::Cur`]) and the
+//!   digest-guarded, atomic-rename discipline of the app checkpoints.
+//! * **WAL** — between full snapshots, every mutating [`Request`] is
+//!   appended (in its existing wire encoding) to `master.wal`, each
+//!   record digest-guarded and stamped with `(epoch, seq)`.  Replay is
+//!   deterministic because `DormMaster::dispatch` is; the only handlers
+//!   that *read* the checkpoint store (`FailServer`, `ExpireLeases`) are
+//!   barriers that force a fresh snapshot instead, so replay never races
+//!   the store's file state.
+//! * [`load_master`] — newest digest-valid snapshot (corrupt ones are
+//!   skipped, falling back to the previous good file, mirroring the app
+//!   checkpoint fallback) plus the WAL tail at the *same epoch*.  Records
+//!   from an older epoch are refused: a deposed primary that kept
+//!   appending after a standby promoted (and re-snapshotted at
+//!   `epoch + 1`) cannot leak its writes back into history.
+//!
+//! What is **not** replicated: trainers and the compute service (a
+//! restored master starts with bookkeeping apps — recovery re-attaches
+//! compute exactly like the artifacts-less masters the control-plane
+//! tests drive), engine caches (dropped and rebuilt on first solve), and
+//! in-flight requests (clients re-send; `FailoverTransport` re-dials).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+use anyhow::{bail, Context, Result};
+
+use crate::app::checkpoint::fnv1a;
+use crate::app::{AppId, AppSpec, AppState, CheckpointStore};
+use crate::config::DormConfig;
+use crate::fault::{LeaseTable, RecoveryLog, RecoveryRecord};
+use crate::optimizer::SolveMode;
+use crate::proto::wire::{self, Cur};
+use crate::proto::Request;
+use crate::resources::Res;
+use crate::sched::{CmsPolicy, DormPolicy};
+use crate::slave::DormSlave;
+
+use super::{DormMaster, ManagedApp};
+
+const MAGIC: &[u8; 8] = b"DORMMSTR";
+const VERSION: u32 = 1;
+
+/// How [`DormMaster::dispatch`] journals one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HaAction {
+    /// Read-only or connection-scoped: nothing to persist.
+    Skip,
+    /// Mutating and store-oblivious: append to the WAL (amortized).
+    Append,
+    /// Mutating and store-*reading* (`fail_servers` probes app
+    /// checkpoints): force a full snapshot so a later replay never sees a
+    /// different store than the original handling did.
+    Barrier,
+}
+
+impl HaAction {
+    pub fn of(req: &Request) -> HaAction {
+        match req {
+            Request::Hello { .. } | Request::QueryState { .. } | Request::Shutdown => {
+                HaAction::Skip
+            }
+            Request::FailServer { .. } | Request::ExpireLeases { .. } => HaAction::Barrier,
+            _ => HaAction::Append,
+        }
+    }
+}
+
+// ---- the full snapshot --------------------------------------------------
+
+/// One slave's serialized book.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlaveSnap {
+    pub name: String,
+    pub capacity: Res,
+    pub alive: bool,
+    /// Lease renewal timestamp (the snapshotting master's clock domain).
+    pub renewed: f64,
+    /// Containers grouped by `(app, demand)`, insertion-ordered.
+    pub groups: Vec<(AppId, Res, u32)>,
+}
+
+/// One managed app's serialized phase.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppSnap {
+    pub id: AppId,
+    pub spec: AppSpec,
+    pub state: AppState,
+    pub adjustments: u32,
+    pub recoveries: u32,
+    pub steps_done: u64,
+    pub ckpt_step: u64,
+    pub ckpt_restorable: bool,
+}
+
+/// The versioned, digest-guarded serialization of a whole [`DormMaster`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MasterCheckpoint {
+    pub epoch: u64,
+    /// WAL sequence number this snapshot covers: replay applies only
+    /// records with the same epoch and a larger seq.
+    pub seq: u64,
+    pub clock: u64,
+    pub next_id: u64,
+    pub total_adjustments: u32,
+    pub total_recoveries: u32,
+    pub theta1: f64,
+    pub theta2: f64,
+    pub ckpt_retain: u32,
+    pub lease_timeout: f64,
+    pub slaves: Vec<SlaveSnap>,
+    pub apps: Vec<AppSnap>,
+    pub log: Vec<RecoveryRecord>,
+    /// FNV over the canonical slave-book encoding; [`restore`] recomputes
+    /// it from the rebuilt books and refuses a mismatch (a serialization
+    /// or rebuild bug must fail loudly, not mis-place containers).
+    pub books_digest: u64,
+}
+
+/// Canonical encoding of the slave books for [`MasterCheckpoint::books_digest`].
+fn encode_books(slaves: &[SlaveSnap]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for s in slaves {
+        wire::put_str(&mut out, &s.name);
+        for (app, demand, count) in &s.groups {
+            out.extend_from_slice(&app.0.to_be_bytes());
+            wire::put_res(&mut out, demand);
+            out.extend_from_slice(&count.to_be_bytes());
+        }
+    }
+    out
+}
+
+impl MasterCheckpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(256);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_be_bytes());
+        out.extend_from_slice(&self.epoch.to_be_bytes());
+        out.extend_from_slice(&self.seq.to_be_bytes());
+        out.extend_from_slice(&self.clock.to_be_bytes());
+        out.extend_from_slice(&self.next_id.to_be_bytes());
+        out.extend_from_slice(&self.total_adjustments.to_be_bytes());
+        out.extend_from_slice(&self.total_recoveries.to_be_bytes());
+        wire::put_f64(&mut out, self.theta1);
+        wire::put_f64(&mut out, self.theta2);
+        out.extend_from_slice(&self.ckpt_retain.to_be_bytes());
+        wire::put_f64(&mut out, self.lease_timeout);
+        out.extend_from_slice(&(self.slaves.len() as u32).to_be_bytes());
+        for s in &self.slaves {
+            wire::put_str(&mut out, &s.name);
+            wire::put_res(&mut out, &s.capacity);
+            out.push(u8::from(s.alive));
+            wire::put_f64(&mut out, s.renewed);
+            out.extend_from_slice(&(s.groups.len() as u32).to_be_bytes());
+            for (app, demand, count) in &s.groups {
+                out.extend_from_slice(&app.0.to_be_bytes());
+                wire::put_res(&mut out, demand);
+                out.extend_from_slice(&count.to_be_bytes());
+            }
+        }
+        out.extend_from_slice(&(self.apps.len() as u32).to_be_bytes());
+        for a in &self.apps {
+            out.extend_from_slice(&a.id.0.to_be_bytes());
+            wire::put_spec(&mut out, &a.spec);
+            out.push(wire::state_tag(a.state));
+            out.extend_from_slice(&a.adjustments.to_be_bytes());
+            out.extend_from_slice(&a.recoveries.to_be_bytes());
+            out.extend_from_slice(&a.steps_done.to_be_bytes());
+            out.extend_from_slice(&a.ckpt_step.to_be_bytes());
+            out.push(u8::from(a.ckpt_restorable));
+        }
+        out.extend_from_slice(&(self.log.len() as u32).to_be_bytes());
+        for r in &self.log {
+            out.extend_from_slice(&r.app.0.to_be_bytes());
+            out.extend_from_slice(&(r.server as u64).to_be_bytes());
+            wire::put_f64(&mut out, r.failed_at);
+            wire::put_f64(&mut out, r.lost_work);
+            match r.resumed_at {
+                None => out.push(0),
+                Some(t) => {
+                    out.push(1);
+                    wire::put_f64(&mut out, t);
+                }
+            }
+            out.extend_from_slice(&r.resumed_scale.to_be_bytes());
+        }
+        out.extend_from_slice(&self.books_digest.to_be_bytes());
+        let digest = fnv1a(&out);
+        out.extend_from_slice(&digest.to_le_bytes());
+        out
+    }
+
+    /// Parse + verify the trailing digest (same guard as the app format).
+    pub fn from_bytes(bytes: &[u8]) -> Result<MasterCheckpoint> {
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            bail!("master checkpoint truncated ({} bytes)", bytes.len());
+        }
+        let (body, digest_bytes) = bytes.split_at(bytes.len() - 8);
+        let expect = u64::from_le_bytes(digest_bytes.try_into().unwrap());
+        if fnv1a(body) != expect {
+            bail!("master checkpoint digest mismatch (corrupt file)");
+        }
+        let mut c = Cur::new(body);
+        if c.take(8)? != MAGIC {
+            bail!("bad master checkpoint magic");
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            bail!("unsupported master checkpoint version {version}");
+        }
+        let epoch = c.u64()?;
+        let seq = c.u64()?;
+        let clock = c.u64()?;
+        let next_id = c.u64()?;
+        let total_adjustments = c.u32()?;
+        let total_recoveries = c.u32()?;
+        let theta1 = c.f64()?;
+        let theta2 = c.f64()?;
+        let ckpt_retain = c.u32()?;
+        let lease_timeout = c.f64()?;
+        let n_slaves = c.count(1)?;
+        let mut slaves = Vec::with_capacity(n_slaves);
+        for _ in 0..n_slaves {
+            let name = c.str()?;
+            let capacity = c.res()?;
+            let alive = c.bool()?;
+            let renewed = c.f64()?;
+            let n_groups = c.count(16)?;
+            let mut groups = Vec::with_capacity(n_groups);
+            for _ in 0..n_groups {
+                groups.push((AppId(c.u64()?), c.res()?, c.u32()?));
+            }
+            slaves.push(SlaveSnap { name, capacity, alive, renewed, groups });
+        }
+        let n_apps = c.count(1)?;
+        let mut apps = Vec::with_capacity(n_apps);
+        for _ in 0..n_apps {
+            apps.push(AppSnap {
+                id: AppId(c.u64()?),
+                spec: wire::spec(&mut c)?,
+                state: wire::state_of(c.u8()?)?,
+                adjustments: c.u32()?,
+                recoveries: c.u32()?,
+                steps_done: c.u64()?,
+                ckpt_step: c.u64()?,
+                ckpt_restorable: c.bool()?,
+            });
+        }
+        let n_log = c.count(1)?;
+        let mut log = Vec::with_capacity(n_log);
+        for _ in 0..n_log {
+            log.push(RecoveryRecord {
+                app: AppId(c.u64()?),
+                server: c.u64()? as usize,
+                failed_at: c.f64()?,
+                lost_work: c.f64()?,
+                resumed_at: if c.bool()? { Some(c.f64()?) } else { None },
+                resumed_scale: c.u32()?,
+            });
+        }
+        let books_digest = c.u64()?;
+        Ok(MasterCheckpoint {
+            epoch,
+            seq,
+            clock,
+            next_id,
+            total_adjustments,
+            total_recoveries,
+            theta1,
+            theta2,
+            ckpt_retain,
+            lease_timeout,
+            slaves,
+            apps,
+            log,
+            books_digest,
+        })
+    }
+}
+
+/// Serialize the master's full state.  `seq` is stamped by
+/// [`HaLog::write_snapshot`].
+pub fn snapshot_state(m: &DormMaster) -> MasterCheckpoint {
+    let (lease_timeout, renewed, alive) = m.lease.to_parts();
+    let slaves: Vec<SlaveSnap> = m
+        .slaves
+        .iter()
+        .enumerate()
+        .map(|(j, s)| SlaveSnap {
+            name: s.name.clone(),
+            capacity: s.capacity().clone(),
+            alive: alive[j],
+            renewed: renewed[j],
+            groups: s.container_groups(),
+        })
+        .collect();
+    let books_digest = fnv1a(&encode_books(&slaves));
+    MasterCheckpoint {
+        epoch: m.epoch,
+        seq: 0,
+        clock: m.clock,
+        next_id: m.next_id,
+        total_adjustments: m.total_adjustments,
+        total_recoveries: m.total_recoveries,
+        theta1: m.dorm_cfg.theta1,
+        theta2: m.dorm_cfg.theta2,
+        ckpt_retain: m.ckpt_retain as u32,
+        lease_timeout,
+        slaves,
+        apps: m
+            .apps
+            .values()
+            .map(|a| AppSnap {
+                id: a.id,
+                spec: a.spec.clone(),
+                state: a.state,
+                adjustments: a.adjustments,
+                recoveries: a.recoveries,
+                steps_done: a.steps_done,
+                ckpt_step: a.ckpt_step,
+                ckpt_restorable: a.ckpt_restorable,
+            })
+            .collect(),
+        log: m.recovery_log.records().to_vec(),
+        books_digest,
+    }
+}
+
+/// Rebuild an equivalent master from a snapshot: the Dorm policy is
+/// reconstructed from the stored θ thresholds with empty caches (the
+/// engine re-derives them on the first solve), trainers/compute are not
+/// re-attached (module docs), and the rebuilt slave books are verified
+/// against the snapshot's digest.
+pub fn restore(ckpt: &MasterCheckpoint, store: CheckpointStore) -> Result<DormMaster> {
+    let cfg = DormConfig { theta1: ckpt.theta1, theta2: ckpt.theta2 };
+    restore_with_policy(
+        ckpt,
+        Box::new(DormPolicy::with_mode(cfg, SolveMode::Heuristic)),
+        store,
+    )
+}
+
+/// [`restore`] with an explicit policy (tests, baseline-driven masters).
+pub fn restore_with_policy(
+    ckpt: &MasterCheckpoint,
+    mut policy: Box<dyn CmsPolicy>,
+    store: CheckpointStore,
+) -> Result<DormMaster> {
+    let mut slaves = Vec::with_capacity(ckpt.slaves.len());
+    let mut renewed = Vec::with_capacity(ckpt.slaves.len());
+    let mut alive = Vec::with_capacity(ckpt.slaves.len());
+    for snap in &ckpt.slaves {
+        let mut s = DormSlave::new(snap.name.clone(), snap.capacity.clone());
+        for (app, demand, count) in &snap.groups {
+            s.create(*app, demand, *count)
+                .with_context(|| format!("rebuilding book of {}", snap.name))?;
+        }
+        renewed.push(snap.renewed);
+        alive.push(snap.alive);
+        slaves.push(s);
+    }
+    // cross-check: the rebuilt books must hash to what was snapshotted
+    let rebuilt: Vec<SlaveSnap> = slaves
+        .iter()
+        .enumerate()
+        .map(|(j, s)| SlaveSnap {
+            name: s.name.clone(),
+            capacity: s.capacity().clone(),
+            alive: alive[j],
+            renewed: renewed[j],
+            groups: s.container_groups(),
+        })
+        .collect();
+    if fnv1a(&encode_books(&rebuilt)) != ckpt.books_digest {
+        bail!("restored slave books do not match the snapshot's placement digest");
+    }
+    let mut apps = BTreeMap::new();
+    for a in &ckpt.apps {
+        apps.insert(
+            a.id,
+            ManagedApp {
+                id: a.id,
+                spec: a.spec.clone(),
+                state: a.state,
+                model: None,
+                trainer: None,
+                adjustments: a.adjustments,
+                recoveries: a.recoveries,
+                steps_done: a.steps_done,
+                ckpt_step: a.ckpt_step,
+                ckpt_restorable: a.ckpt_restorable,
+            },
+        );
+    }
+    // the policy's capacity-derived caches (if it carried any) predate
+    // this cluster state; both backends drop them on restore
+    policy.on_capacity_change();
+    Ok(DormMaster {
+        slaves,
+        policy,
+        store,
+        compute: None,
+        apps,
+        next_id: ckpt.next_id,
+        clock: ckpt.clock,
+        total_adjustments: ckpt.total_adjustments,
+        total_recoveries: ckpt.total_recoveries,
+        lease: LeaseTable::from_parts(ckpt.lease_timeout, renewed, alive),
+        recovery_log: RecoveryLog::from_records(ckpt.log.clone()),
+        ckpt_retain: ckpt.ckpt_retain as usize,
+        epoch: ckpt.epoch,
+        dorm_cfg: DormConfig { theta1: ckpt.theta1, theta2: ckpt.theta2 },
+        ha: None,
+    })
+}
+
+// ---- the write-ahead log ------------------------------------------------
+
+/// One WAL entry: a mutating request at `(epoch, seq)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalRecord {
+    pub epoch: u64,
+    pub seq: u64,
+    pub bytes: Vec<u8>,
+}
+
+const WAL_HEADER: usize = 8 + 8 + 4; // epoch, seq, len
+
+fn encode_wal_record(epoch: u64, seq: u64, bytes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(WAL_HEADER + bytes.len() + 8);
+    out.extend_from_slice(&epoch.to_be_bytes());
+    out.extend_from_slice(&seq.to_be_bytes());
+    out.extend_from_slice(&(bytes.len() as u32).to_be_bytes());
+    out.extend_from_slice(bytes);
+    let digest = fnv1a(&out);
+    out.extend_from_slice(&digest.to_le_bytes());
+    out
+}
+
+/// Read every intact record; a torn or corrupt tail (e.g. a `kill -9`
+/// mid-append) truncates the replay there instead of failing the load —
+/// exactly the "in-flight requests are lost" contract of takeover.
+pub fn read_wal(store: &CheckpointStore) -> Result<Vec<WalRecord>> {
+    let path = store.wal_path();
+    let buf = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while buf.len() - pos >= WAL_HEADER + 8 {
+        let epoch = u64::from_be_bytes(buf[pos..pos + 8].try_into().unwrap());
+        let seq = u64::from_be_bytes(buf[pos + 8..pos + 16].try_into().unwrap());
+        let len = u32::from_be_bytes(buf[pos + 16..pos + 20].try_into().unwrap()) as usize;
+        let end = pos + WAL_HEADER + len;
+        if end + 8 > buf.len() {
+            log::warn!("WAL record at offset {pos} torn; stopping replay");
+            break;
+        }
+        let expect = u64::from_le_bytes(buf[end..end + 8].try_into().unwrap());
+        if fnv1a(&buf[pos..end]) != expect {
+            log::warn!("WAL record at offset {pos} corrupt; stopping replay");
+            break;
+        }
+        out.push(WalRecord {
+            epoch,
+            seq,
+            bytes: buf[pos + WAL_HEADER..end].to_vec(),
+        });
+        pos = end + 8;
+    }
+    Ok(out)
+}
+
+/// The master's self-checkpointing state (armed via `DormMaster::with_ha`).
+pub(crate) struct HaLog {
+    store: CheckpointStore,
+    snapshot_every: u64,
+    retain: usize,
+    seq: u64,
+    /// WAL records appended since the last full snapshot.
+    pending: u64,
+}
+
+impl HaLog {
+    pub(crate) fn new(
+        store: CheckpointStore,
+        snapshot_every: u64,
+        retain: usize,
+        start_seq: u64,
+    ) -> Self {
+        HaLog {
+            store,
+            snapshot_every: snapshot_every.max(1),
+            retain: retain.max(1),
+            seq: start_seq,
+            pending: 0,
+        }
+    }
+
+    pub(crate) fn snapshot_every(&self) -> u64 {
+        self.snapshot_every
+    }
+
+    pub(crate) fn pending_records(&self) -> u64 {
+        self.pending
+    }
+
+    /// Advance the sequence for an event persisted via snapshot (barrier
+    /// or cadence rollover) rather than a WAL append.
+    pub(crate) fn bump_seq(&mut self) {
+        self.seq += 1;
+    }
+
+    /// Undo a [`HaLog::bump_seq`] whose persistence failed.  Leaving the
+    /// bump in place would open a permanent sequence gap: every later
+    /// append would be non-contiguous with the last good snapshot, so
+    /// recovery would refuse the *entire* tail instead of losing just the
+    /// one event whose write failed.
+    pub(crate) fn rollback_seq(&mut self) {
+        self.seq -= 1;
+    }
+
+    /// Append one mutating request to the WAL.  On failure the sequence
+    /// is rolled back (see [`HaLog::rollback_seq`]) so the journal stays
+    /// contiguous; the failed event alone is lost to recovery.
+    pub(crate) fn append(&mut self, epoch: u64, encoded_req: &[u8]) -> Result<()> {
+        self.seq += 1;
+        let rec = encode_wal_record(epoch, self.seq, encoded_req);
+        let result = (|| -> Result<()> {
+            let path = self.store.wal_path();
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            f.write_all(&rec)?;
+            Ok(())
+        })();
+        match result {
+            Ok(()) => {
+                self.pending += 1;
+                Ok(())
+            }
+            Err(e) => {
+                self.seq -= 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Persist a full snapshot at the current sequence, reset the WAL
+    /// (its records are now covered), and apply retention.
+    pub(crate) fn write_snapshot(&mut self, mut snap: MasterCheckpoint) -> Result<()> {
+        snap.seq = self.seq;
+        let bytes = snap.to_bytes();
+        self.store
+            .save_master(&bytes, snap.epoch, snap.seq)
+            .context("saving master snapshot")?;
+        std::fs::File::create(self.store.wal_path()).context("resetting master WAL")?;
+        self.pending = 0;
+        self.store.prune_master(self.retain)?;
+        Ok(())
+    }
+}
+
+/// Load the newest restorable master: newest digest-valid snapshot
+/// (corrupt/truncated files fall back to the previous good one) plus the
+/// same-epoch WAL tail replayed through `dispatch`.  Returns the restored
+/// master and the last applied sequence number (feed it back to
+/// `DormMaster::with_ha` so the journal continues), or `None` when the
+/// store holds no master snapshot at all.
+pub fn load_master(store: &CheckpointStore) -> Result<Option<(DormMaster, u64)>> {
+    let files = store.master_files()?;
+    let mut ckpt = None;
+    for p in files.iter().rev() {
+        match std::fs::read(p) {
+            Ok(bytes) => match MasterCheckpoint::from_bytes(&bytes) {
+                Ok(c) => {
+                    ckpt = Some(c);
+                    break;
+                }
+                Err(e) => log::warn!("skipping corrupt master snapshot {}: {e:#}", p.display()),
+            },
+            Err(e) => log::warn!("unreadable master snapshot {}: {e}", p.display()),
+        }
+    }
+    let Some(ckpt) = ckpt else { return Ok(None) };
+    let mut m = restore(&ckpt, store.clone())?;
+    let mut seq = ckpt.seq;
+    for rec in read_wal(store)? {
+        if rec.epoch != ckpt.epoch {
+            log::warn!(
+                "refusing WAL record seq {} from epoch {} (snapshot epoch {}): \
+                 deposed-primary write fenced off",
+                rec.seq,
+                rec.epoch,
+                ckpt.epoch
+            );
+            continue;
+        }
+        if rec.seq <= ckpt.seq {
+            continue; // already covered by the snapshot
+        }
+        if rec.seq != seq + 1 {
+            // the WAL continues from a *newer* snapshot than the one we
+            // could restore (fallback past a corrupt file): applying a
+            // non-contiguous suffix would fabricate a state that never
+            // existed — stop at the snapshot instead
+            log::warn!(
+                "WAL record seq {} is not contiguous with restored seq {seq}; \
+                 stopping replay at the snapshot",
+                rec.seq
+            );
+            break;
+        }
+        match wire::decode_request(&rec.bytes) {
+            Ok(req) => {
+                // replay is best-effort per record: a typed error response
+                // reproduces the original handling of that request
+                let _ = m.dispatch(req);
+                seq = rec.seq;
+            }
+            Err(e) => {
+                log::warn!("stopping WAL replay at undecodable record {}: {e}", rec.seq);
+                break;
+            }
+        }
+    }
+    Ok(Some((m, seq)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::Engine;
+    use crate::config::ClusterConfig;
+
+    fn store(tag: &str) -> CheckpointStore {
+        let d = std::env::temp_dir().join(format!("dorm_ha_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        CheckpointStore::new(d).unwrap()
+    }
+
+    fn spec(n_max: u32) -> AppSpec {
+        AppSpec {
+            executor: Engine::MxNet,
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+            weight: 1,
+            n_max,
+            n_min: 1,
+            cmd: ["lr".into(), "lr".into()],
+        }
+    }
+
+    fn sample_master(tag: &str) -> DormMaster {
+        let mut m = DormMaster::new(
+            &ClusterConfig::uniform(3, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+            DormConfig { theta1: 0.5, theta2: 0.5 },
+            store(tag),
+        );
+        m.submit(spec(12)).unwrap();
+        m.submit(spec(6)).unwrap();
+        m.advance_steps(AppId(1), 40).unwrap();
+        m
+    }
+
+    #[test]
+    fn snapshot_bytes_roundtrip() {
+        let m = sample_master("roundtrip");
+        let snap = snapshot_state(&m);
+        let back = MasterCheckpoint::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.epoch, 1);
+        assert_eq!(back.apps.len(), 2);
+        assert!(back.slaves.iter().any(|s| !s.groups.is_empty()));
+    }
+
+    #[test]
+    fn snapshot_corruption_detected_anywhere() {
+        let m = sample_master("corrupt");
+        let bytes = snapshot_state(&m).to_bytes();
+        for pos in [0, 9, 40, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0xFF;
+            assert!(
+                MasterCheckpoint::from_bytes(&bad).is_err(),
+                "corruption at {pos} undetected"
+            );
+        }
+        assert!(MasterCheckpoint::from_bytes(&bytes[..bytes.len() / 3]).is_err());
+    }
+
+    #[test]
+    fn restore_rebuilds_equivalent_state() {
+        let m = sample_master("restore");
+        let snap = snapshot_state(&m);
+        let r = restore(&snap, m.store().clone()).unwrap();
+        assert_eq!(r.state_view(None), m.state_view(None));
+        assert_eq!(r.epoch(), m.epoch());
+        for (a, b) in m.slaves.iter().zip(&r.slaves) {
+            assert_eq!(a.inventory(), b.inventory(), "{} book differs", a.name);
+            assert_eq!(a.used(), b.used());
+        }
+    }
+
+    #[test]
+    fn books_digest_mismatch_refused() {
+        let m = sample_master("digest");
+        let mut snap = snapshot_state(&m);
+        snap.books_digest ^= 1;
+        let err = restore(&snap, m.store().clone()).unwrap_err();
+        assert!(err.to_string().contains("placement digest"), "{err:#}");
+    }
+
+    #[test]
+    fn wal_records_roundtrip_and_torn_tail_truncates() {
+        let s = store("wal");
+        let mut log = HaLog::new(s.clone(), 1000, 3, 0);
+        let reqs = [
+            Request::AdvanceSteps { app: AppId(1), steps: 5 },
+            Request::Reallocate,
+            Request::Complete { app: AppId(2) },
+        ];
+        for r in &reqs {
+            log.append(7, &wire::encode_request(r)).unwrap();
+        }
+        let recs = read_wal(&s).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].epoch, 7);
+        assert_eq!(recs.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![1, 2, 3]);
+        for (rec, req) in recs.iter().zip(&reqs) {
+            assert_eq!(&wire::decode_request(&rec.bytes).unwrap(), req);
+        }
+        // tear the last record: earlier records still replay
+        let path = s.wal_path();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let recs = read_wal(&s).unwrap();
+        assert_eq!(recs.len(), 2, "torn tail truncates, does not fail");
+        // flip a byte inside record 1's body: replay stops before it
+        let mut bad = bytes.clone();
+        bad[WAL_HEADER + 2] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_wal(&s).unwrap().is_empty());
+    }
+}

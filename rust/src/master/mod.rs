@@ -29,6 +29,18 @@
 //! entries without trainers (progress advances via
 //! [`DormMaster::advance_steps`], checkpoints persist the step cursor),
 //! which is what the control-plane tests use.
+//!
+//! High availability ([`ha`], DESIGN.md §11): a master armed with
+//! [`DormMaster::with_ha`] self-checkpoints through the same
+//! [`CheckpointStore`] its apps use — a full [`ha::MasterCheckpoint`]
+//! every N mutating dispatches, an append-only WAL of the mutating
+//! [`Request`]s in between — so a `--standby` process can rebuild an
+//! equivalent master with [`ha::load_master`] and take over at
+//! `epoch + 1` ([`DormMaster::promote`]).  Every response carries the
+//! serving epoch; slaves and `dorm ctl` refuse a deposed (lower-epoch)
+//! primary's writes.
+
+pub mod ha;
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -128,6 +140,15 @@ pub struct DormMaster {
     recovery_log: RecoveryLog,
     /// Checkpoint retention: newest N per app (`FaultConfig::ckpt_retain`).
     ckpt_retain: usize,
+    /// Epoch (term) number: bumped by a standby takeover ([`Self::promote`]);
+    /// carried on every response so peers can fence off a deposed primary.
+    epoch: u64,
+    /// Dorm thresholds this master was built with (persisted in the master
+    /// checkpoint so a standby can rebuild the same policy; the defaults
+    /// when the master runs an arbitrary [`CmsPolicy`]).
+    dorm_cfg: DormConfig,
+    /// Self-checkpointing state when HA is armed ([`Self::with_ha`]).
+    ha: Option<ha::HaLog>,
 }
 
 impl DormMaster {
@@ -138,11 +159,13 @@ impl DormMaster {
         dorm: DormConfig,
         store: CheckpointStore,
     ) -> Self {
-        Self::with_policy(
+        let mut m = Self::with_policy(
             cluster,
             Box::new(DormPolicy::with_mode(dorm, SolveMode::Heuristic)),
             store,
-        )
+        );
+        m.dorm_cfg = dorm;
+        m
     }
 
     /// A master driven by an arbitrary [`CmsPolicy`] — the same objects the
@@ -172,6 +195,9 @@ impl DormMaster {
             lease: LeaseTable::new(n, f64::INFINITY),
             recovery_log: RecoveryLog::new(),
             ckpt_retain: FaultConfig::default().ckpt_retain,
+            epoch: 1,
+            dorm_cfg: DormConfig { theta1: 0.1, theta2: 0.1 },
+            ha: None,
         }
     }
 
@@ -188,6 +214,103 @@ impl DormMaster {
         self
     }
 
+    // ---- high availability (`ha`, DESIGN.md §11) ------------------------
+
+    /// This master's epoch (term) number.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Start at an explicit epoch (failure injection / testing — e.g. the
+    /// failover smoke resurrects a "deposed primary" at the old term).
+    pub fn with_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch.max(1);
+        self
+    }
+
+    /// Arm self-checkpointing: a full [`ha::MasterCheckpoint`] is written
+    /// now (so a standby always has a base), then after every
+    /// `snapshot_every`-th mutating dispatch, with an append-only WAL of
+    /// the mutating requests in between; `retain` bounds the snapshot
+    /// files kept.  `start_seq` continues the sequence of a restored
+    /// master (0 for a fresh one).
+    pub fn with_ha(mut self, snapshot_every: u64, retain: usize, start_seq: u64) -> Result<Self> {
+        self.ha = Some(ha::HaLog::new(self.store.clone(), snapshot_every, retain, start_seq));
+        self.force_snapshot()?;
+        Ok(self)
+    }
+
+    /// Standby takeover: bump the epoch, re-anchor alive leases into the
+    /// new process's clock domain (time 0 — its wall clock starts at
+    /// serve time; keeping the deposed primary's timestamps would defer
+    /// expiry arbitrarily), and persist a snapshot at the new epoch so
+    /// the deposed primary's stale WAL appends are fenced off on any
+    /// later recovery.  Returns the new epoch.
+    pub fn promote(&mut self) -> Result<u64> {
+        self.epoch += 1;
+        self.reanchor_leases();
+        // the restored policy's caches (if any) predate the takeover
+        self.policy.on_capacity_change();
+        self.force_snapshot()?;
+        Ok(self.epoch)
+    }
+
+    /// Re-anchor every alive lease at time 0 — the start of *this*
+    /// process's clock domain (the TCP server stamps sweep times from its
+    /// own `Instant`).  Any restored master that starts serving in a new
+    /// process needs this, with or without an epoch bump: restored
+    /// renewal timestamps live in the dead process's clock, where they
+    /// read as far in the future and would defer dead-slave detection by
+    /// up to the old process's whole uptime.  [`Self::promote`] calls it;
+    /// the `--ha` crash-restart resume path calls it directly.  Faithful
+    /// same-process restores (tests) deliberately skip it.
+    pub fn reanchor_leases(&mut self) {
+        for j in 0..self.slaves.len() {
+            if self.lease.is_alive(j) {
+                self.lease.mark_alive(j, 0.0);
+            }
+        }
+    }
+
+    /// Write a full master snapshot immediately (no-op without HA).
+    pub fn force_snapshot(&mut self) -> Result<()> {
+        if self.ha.is_none() {
+            return Ok(());
+        }
+        let snap = ha::snapshot_state(self);
+        let log = self.ha.as_mut().expect("checked above");
+        log.write_snapshot(snap)
+    }
+
+    /// WAL/snapshot bookkeeping after one mutating dispatch: barrier
+    /// requests (the ones whose handling *reads* the checkpoint store, so
+    /// replay later would see different files) force a full snapshot;
+    /// everything else appends to the WAL until the cadence rolls over.
+    /// HA persistence failures are logged, never surfaced to the peer —
+    /// serving degraded beats refusing work.
+    fn ha_commit(&mut self, encoded_req: Vec<u8>, barrier: bool) {
+        let epoch = self.epoch;
+        let need_snapshot = match self.ha.as_ref() {
+            None => return,
+            Some(log) => barrier || log.pending_records() + 1 >= log.snapshot_every(),
+        };
+        let result = if need_snapshot {
+            self.ha.as_mut().expect("armed").bump_seq();
+            let r = self.force_snapshot();
+            if r.is_err() {
+                // keep the journal contiguous: only this event is lost to
+                // recovery, not everything appended after it
+                self.ha.as_mut().expect("armed").rollback_seq();
+            }
+            r
+        } else {
+            self.ha.as_mut().expect("armed").append(epoch, &encoded_req)
+        };
+        if let Err(e) = result {
+            log::warn!("HA persistence failed (serving continues): {e:#}");
+        }
+    }
+
     // ---- the control-plane API (`crate::proto`, DESIGN.md §9) -----------
 
     /// The single control-plane entry point: every master↔slave and
@@ -198,7 +321,41 @@ impl DormMaster {
     /// the messages travel.  Infallible by design — failures become
     /// [`Response::Error`] with a typed [`ErrorCode`], so a remote peer
     /// always gets a decodable answer.
+    ///
+    /// When HA is armed ([`Self::with_ha`]), every mutating request is
+    /// journaled *after* handling — success or typed error alike, since a
+    /// replay reproduces the same deterministic outcome either way —
+    /// through [`Self::ha_commit`] (WAL append, amortized full snapshots).
     pub fn dispatch(&mut self, req: Request) -> Response {
+        let action = if self.ha.is_some() { ha::HaAction::of(&req) } else { ha::HaAction::Skip };
+        let encoded = match action {
+            ha::HaAction::Append => Some(proto::wire::encode_request(&req)),
+            _ => None,
+        };
+        let rsp = self.dispatch_inner(req);
+        match (action, &rsp) {
+            (ha::HaAction::Skip, _) => {}
+            // the routine lease sweep: nothing expired, nothing mutated —
+            // snapshotting 4x/s on an idle cluster would defeat the WAL
+            // amortization (a sweep that *did* kill servers falls through
+            // to the barrier below)
+            (ha::HaAction::Barrier, Response::Expired { dead }) if dead.is_empty() => {}
+            // barrier requests refused before their handler ran (unknown
+            // server, non-finite time) mutated nothing; an Internal error
+            // can follow a partial mutation, so it still snapshots.  An
+            // empty Affected is NOT exempt: a server can die hosting zero
+            // apps and that death must be durable.
+            (ha::HaAction::Barrier, Response::Error(e))
+                if e.code != ErrorCode::Internal => {}
+            (ha::HaAction::Append, _) => {
+                self.ha_commit(encoded.expect("encoded above"), false)
+            }
+            (ha::HaAction::Barrier, _) => self.ha_commit(Vec::new(), true),
+        }
+        rsp
+    }
+
+    fn dispatch_inner(&mut self, req: Request) -> Response {
         match req {
             Request::Hello { major, minor } => match proto::negotiate(major, minor) {
                 Ok(()) => Response::HelloAck {
@@ -386,6 +543,7 @@ impl DormMaster {
     pub fn state_view(&self, filter: Option<AppId>) -> StateView {
         StateView {
             clock: self.clock,
+            epoch: self.epoch,
             alive_servers: self.lease.n_alive() as u32,
             total_servers: self.slaves.len() as u32,
             active_apps: self.active_apps() as u32,

@@ -27,6 +27,10 @@ pub struct HeartbeatOutcome {
     pub directives: usize,
     /// Directives that applied cleanly to the local book.
     pub applied: usize,
+    /// The answering master's epoch was *older* than one this agent has
+    /// already obeyed: it is a deposed primary, and every directive it
+    /// sent was refused (split-brain fencing, DESIGN.md §11).
+    pub fenced: bool,
 }
 
 /// Per-server agent: local container book + transport to the master.
@@ -34,22 +38,34 @@ pub struct SlaveAgent<T: ControlPlane> {
     local: DormSlave,
     server: u32,
     transport: T,
+    /// Highest master epoch this agent has ever obeyed — the fence a
+    /// deposed primary's directives are checked against.
+    max_epoch: u64,
 }
 
 impl<T: ControlPlane> SlaveAgent<T> {
     pub fn new(local: DormSlave, server: u32, transport: T) -> Self {
-        SlaveAgent { local, server, transport }
+        SlaveAgent { local, server, transport, max_epoch: 0 }
     }
 
     pub fn local(&self) -> &DormSlave {
         &self.local
     }
 
+    /// Highest master epoch obeyed so far (0 = none reported yet).
+    pub fn max_epoch(&self) -> u64 {
+        self.max_epoch
+    }
+
     /// One heartbeat round at `now_hours` (non-finite = let the TCP
     /// server stamp the arrival).  Transport failures are `Err` — the
     /// caller decides whether to retry or exit; a directive that fails
     /// to apply is logged and *not* fatal, because the next report shows
-    /// the master the true book and reconciliation heals it.
+    /// the master the true book and reconciliation heals it.  An answer
+    /// from a master whose epoch is below the agent's fence applies
+    /// *nothing* (`fenced` in the outcome): after a standby takeover the
+    /// deposed primary's book is history, and obeying it would fork the
+    /// cluster state.
     pub fn step(&mut self, now_hours: f64) -> Result<HeartbeatOutcome> {
         let report = self.local.report();
         let rsp = self.transport.call(Request::Heartbeat {
@@ -60,6 +76,24 @@ impl<T: ControlPlane> SlaveAgent<T> {
         match rsp {
             Response::HeartbeatAck { alive, directives } => {
                 let total = directives.len();
+                match self.transport.last_epoch() {
+                    Some(e) if e < self.max_epoch => {
+                        log::warn!(
+                            "slave {}: refusing {total} directive(s) from deposed master \
+                             at epoch {e} (fence {})",
+                            self.local.name,
+                            self.max_epoch
+                        );
+                        return Ok(HeartbeatOutcome {
+                            alive,
+                            directives: total,
+                            applied: 0,
+                            fenced: true,
+                        });
+                    }
+                    Some(e) => self.max_epoch = e,
+                    None => {}
+                }
                 let mut applied = 0;
                 for d in directives {
                     match self.apply(d) {
@@ -70,7 +104,7 @@ impl<T: ControlPlane> SlaveAgent<T> {
                         ),
                     }
                 }
-                Ok(HeartbeatOutcome { alive, directives: total, applied })
+                Ok(HeartbeatOutcome { alive, directives: total, applied, fenced: false })
             }
             // a typed rejection travels as ProtoError so callers can tell
             // "the master refused us" from "the master is gone"
@@ -126,6 +160,14 @@ impl<T: ControlPlane> SlaveAgent<T> {
                 }
             };
             beats += 1;
+            if out.fenced {
+                log::warn!(
+                    "slave {}: beat answered by a deposed master (fence epoch {}); \
+                     nothing applied",
+                    self.local.name,
+                    self.max_epoch
+                );
+            }
             if out.directives > 0 {
                 log::info!(
                     "slave {}: applied {}/{} directives; book now {:?}",
@@ -135,7 +177,10 @@ impl<T: ControlPlane> SlaveAgent<T> {
                     self.local.inventory()
                 );
             }
-            if !out.alive {
+            // a fenced (deposed) master's liveness verdict is as stale as
+            // its directives: reacting to its alive=false with a
+            // RecoverServer would hand the refused master a write
+            if !out.alive && !out.fenced {
                 log::warn!("slave {}: master declared us dead; rejoining", self.local.name);
                 if let Err(e) = self.rejoin(f64::NAN) {
                     // same split as step(): a typed refusal is operator

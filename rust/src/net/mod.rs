@@ -13,14 +13,23 @@
 //! * [`TcpTransport`] — std-only TCP client: length-prefixed frames
 //!   ([`crate::proto::wire`]), version handshake on connect, typed error
 //!   responses end-to-end.
+//! * [`FailoverTransport`] — TCP with a *candidate list*: re-dials the
+//!   candidates on connection loss (riding out a standby takeover) and
+//!   fences off deposed primaries by refusing any master whose epoch is
+//!   lower than the highest one observed (DESIGN.md §11).
 //! * [`serve`] ([`server`]) — the master side of TCP: accept loop,
 //!   per-connection handshake enforcement, arrival-time stamping, lease
-//!   sweeping.  [`SlaveAgent`] ([`agent`]) is the standalone slave event
+//!   sweeping, and the serving epoch trailed on every response.
+//!   [`SlaveAgent`] ([`agent`]) is the standalone slave event
 //!   loop that heartbeats over any transport and applies the master's
 //!   reconciliation directives to its local container book.
+//! * [`run_standby`] ([`standby`]) — the `dorm master --standby` body:
+//!   watch the primary with the same lease discipline slaves live under,
+//!   and on expiry promote the checkpointed master state at `epoch + 1`.
 
 mod agent;
 mod server;
+mod standby;
 
 use std::net::TcpStream;
 use std::time::Duration;
@@ -29,6 +38,7 @@ use anyhow::{bail, Context, Result};
 
 pub use agent::{HeartbeatOutcome, SlaveAgent};
 pub use server::{serve, ServerHandle};
+pub use standby::{run_standby, StandbyOpts};
 
 use crate::config::NetConfig;
 use crate::master::DormMaster;
@@ -40,6 +50,15 @@ use crate::proto::{wire, Request, Response, PROTO_MAJOR, PROTO_MINOR};
 /// [`Response::Error`] so both transports surface identical values.
 pub trait ControlPlane {
     fn call(&mut self, req: Request) -> Result<Response>;
+
+    /// The serving master's epoch (term) as last observed on this
+    /// transport, if it reported one.  Callers ([`SlaveAgent`],
+    /// [`FailoverTransport`], `dorm ctl`) compare it against the highest
+    /// epoch they have ever seen to fence off a deposed primary
+    /// (DESIGN.md §11).  `None` = the peer predates epochs (proto v1.0).
+    fn last_epoch(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// Direct dispatch into an owned master — the zero-cost transport the
@@ -70,6 +89,10 @@ impl ControlPlane for LocalTransport {
     fn call(&mut self, req: Request) -> Result<Response> {
         Ok(self.master.dispatch(req))
     }
+
+    fn last_epoch(&self) -> Option<u64> {
+        Some(self.master.epoch())
+    }
 }
 
 /// Std-only TCP client: length-prefixed frames plus the version handshake
@@ -77,18 +100,54 @@ impl ControlPlane for LocalTransport {
 pub struct TcpTransport {
     stream: TcpStream,
     max_frame: usize,
+    /// Epoch the peer stamped on its last response (`None` until the
+    /// handshake completes or for an epoch-less v1.0 peer).
+    peer_epoch: Option<u64>,
 }
 
 impl TcpTransport {
     /// Connect and handshake.  `cfg` supplies the frame-size limit and IO
-    /// timeout (`io_timeout_ms = 0` blocks forever).
+    /// timeout (`io_timeout_ms = 0` blocks forever).  The handshake
+    /// records the master's epoch ([`TcpTransport::last_epoch`]).
     pub fn connect(addr: &str, cfg: &NetConfig) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Self::handshake(stream, addr, cfg)
+    }
+
+    /// As [`TcpTransport::connect`], but the TCP connect itself is bounded
+    /// by `timeout`.  `TcpStream::connect` only returns fast when the peer
+    /// actively refuses (the `kill -9` case); a powered-off host or a
+    /// blackholed network leaves it in SYN retries for minutes, which
+    /// would stall a standby's death detection or a client's candidate
+    /// walk far past any configured lease.
+    pub fn connect_with_timeout(addr: &str, cfg: &NetConfig, timeout: Duration) -> Result<Self> {
+        use std::net::ToSocketAddrs;
+        let mut last: Option<std::io::Error> = None;
+        let mut stream = None;
+        for sa in addr.to_socket_addrs().with_context(|| format!("resolve {addr}"))? {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        let Some(stream) = stream else {
+            let e = last.unwrap_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::AddrNotAvailable, "no addresses resolved")
+            });
+            return Err(anyhow::Error::new(e).context(format!("connect {addr}")));
+        };
+        Self::handshake(stream, addr, cfg)
+    }
+
+    fn handshake(stream: TcpStream, addr: &str, cfg: &NetConfig) -> Result<Self> {
         stream.set_nodelay(true).ok();
         let timeout = (cfg.io_timeout_ms > 0).then(|| Duration::from_millis(cfg.io_timeout_ms));
         stream.set_read_timeout(timeout)?;
         stream.set_write_timeout(timeout)?;
-        let mut t = TcpTransport { stream, max_frame: cfg.max_frame_bytes };
+        let mut t = TcpTransport { stream, max_frame: cfg.max_frame_bytes, peer_epoch: None };
         match t.call(Request::Hello { major: PROTO_MAJOR, minor: PROTO_MINOR })? {
             Response::HelloAck { .. } => Ok(t),
             Response::Error(e) => bail!("handshake rejected by {addr}: {e}"),
@@ -104,7 +163,142 @@ impl ControlPlane for TcpTransport {
             .context("send request frame")?;
         let payload = wire::read_frame(&mut self.stream, self.max_frame)
             .context("receive response frame")?;
-        let rsp = wire::decode_response(&payload).context("decode response")?;
+        let (rsp, epoch) = wire::decode_response_ep(&payload).context("decode response")?;
+        if epoch.is_some() {
+            self.peer_epoch = epoch;
+        }
         Ok(rsp)
+    }
+
+    fn last_epoch(&self) -> Option<u64> {
+        self.peer_epoch
+    }
+}
+
+/// A client that re-dials a candidate list of masters and fences off
+/// deposed ones (DESIGN.md §11): on any transport failure it drops the
+/// connection and walks the candidates again — with bounded backoff, so
+/// a standby takeover window (primary dead, standby not yet serving) is
+/// ridden out — and it remembers the highest epoch it has ever observed,
+/// refusing to talk to a master that answers with a lower one.
+///
+/// Retry caveat: a request re-sent after an ambiguous failure (the
+/// connection died after the master may have applied it) can be applied
+/// twice; non-idempotent callers (Submit) must reconcile via QueryState —
+/// the failover smoke's "modulo in-flight requests" contract.
+pub struct FailoverTransport {
+    candidates: Vec<String>,
+    cfg: NetConfig,
+    current: Option<TcpTransport>,
+    /// Highest epoch ever observed — the fence.
+    fence: u64,
+}
+
+impl FailoverTransport {
+    /// Try each candidate once; error if none is reachable right now.
+    /// (`cfg.redial_rounds` × `cfg.redial_backoff_ms` bounds later
+    /// re-dials inside [`FailoverTransport::call`].)
+    pub fn connect(candidates: Vec<String>, cfg: &NetConfig) -> Result<Self> {
+        if candidates.is_empty() {
+            bail!("failover transport needs at least one candidate address");
+        }
+        let mut t = FailoverTransport {
+            candidates,
+            cfg: cfg.clone(),
+            current: None,
+            fence: 0,
+        };
+        t.current = t.dial();
+        if t.current.is_none() {
+            bail!("no master reachable among {:?}", t.candidates);
+        }
+        Ok(t)
+    }
+
+    /// The highest epoch observed so far (0 = none yet).
+    pub fn fence(&self) -> u64 {
+        self.fence
+    }
+
+    /// Walk the candidate list once; skip stale-epoch masters.  Each
+    /// connect attempt is bounded (a blackholed candidate must not stall
+    /// the walk past the redial budget; see
+    /// [`TcpTransport::connect_with_timeout`]).
+    fn dial(&mut self) -> Option<TcpTransport> {
+        let connect_timeout = Duration::from_millis(if self.cfg.io_timeout_ms > 0 {
+            self.cfg.io_timeout_ms
+        } else {
+            5000
+        });
+        for addr in &self.candidates {
+            match TcpTransport::connect_with_timeout(addr, &self.cfg, connect_timeout) {
+                Ok(t) => {
+                    if let Some(e) = t.last_epoch() {
+                        if e < self.fence {
+                            log::warn!(
+                                "master {addr} serves epoch {e} < fence {}; skipping \
+                                 deposed primary",
+                                self.fence
+                            );
+                            continue;
+                        }
+                        self.fence = e;
+                    }
+                    log::info!("connected to master {addr}");
+                    return Some(t);
+                }
+                Err(e) => log::debug!("candidate {addr} unreachable: {e:#}"),
+            }
+        }
+        None
+    }
+}
+
+impl ControlPlane for FailoverTransport {
+    fn call(&mut self, req: Request) -> Result<Response> {
+        let rounds = self.cfg.redial_rounds.max(1);
+        let backoff = Duration::from_millis(self.cfg.redial_backoff_ms.max(1));
+        for round in 0..rounds {
+            let conn = match self.current.take() {
+                Some(t) => Some(t),
+                None => self.dial(),
+            };
+            if let Some(mut t) = conn {
+                match t.call(req.clone()) {
+                    Ok(rsp) => {
+                        if let Some(e) = t.last_epoch() {
+                            if e < self.fence {
+                                // mid-connection demotion cannot happen on a
+                                // sane master; treat as a stale peer and move on
+                                log::warn!("master answered with stale epoch {e}; re-dialing");
+                                continue; // t dropped: connection abandoned
+                            }
+                            self.fence = e;
+                        }
+                        self.current = Some(t);
+                        return Ok(rsp);
+                    }
+                    Err(e) => {
+                        log::info!("master connection lost ({e:#}); re-dialing candidates");
+                        continue; // t dropped
+                    }
+                }
+            }
+            if round + 1 < rounds {
+                std::thread::sleep(backoff);
+            }
+        }
+        // deliberately NOT a ProtoError: exhaustion means "the control
+        // plane is gone", which agents treat as a clean drain, not as a
+        // typed rejection by a live master
+        bail!(
+            "no master reachable among {:?} after {rounds} rounds (fence epoch {})",
+            self.candidates,
+            self.fence
+        )
+    }
+
+    fn last_epoch(&self) -> Option<u64> {
+        (self.fence > 0).then_some(self.fence)
     }
 }

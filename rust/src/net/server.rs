@@ -90,19 +90,19 @@ pub fn serve(master: DormMaster, cfg: &NetConfig) -> Result<ServerHandle> {
     listener.set_nonblocking(true)?;
     let master = Arc::new(Mutex::new(master));
     let stop = Arc::new(AtomicBool::new(false));
-    let epoch = Instant::now();
+    let wall_epoch = Instant::now();
 
     let accept = {
         let master = Arc::clone(&master);
         let stop = Arc::clone(&stop);
         let cfg = cfg.clone();
-        std::thread::spawn(move || accept_loop(listener, master, stop, cfg, epoch))
+        std::thread::spawn(move || accept_loop(listener, master, stop, cfg, wall_epoch))
     };
     Ok(ServerHandle { addr, master, stop, accept: Some(accept) })
 }
 
-fn hours_since(epoch: Instant) -> f64 {
-    epoch.elapsed().as_secs_f64() / 3600.0
+fn hours_since(wall_epoch: Instant) -> f64 {
+    wall_epoch.elapsed().as_secs_f64() / 3600.0
 }
 
 fn lock_master(m: &Mutex<DormMaster>) -> std::sync::MutexGuard<'_, DormMaster> {
@@ -116,7 +116,7 @@ fn accept_loop(
     master: Arc<Mutex<DormMaster>>,
     stop: Arc<AtomicBool>,
     cfg: NetConfig,
-    epoch: Instant,
+    wall_epoch: Instant,
 ) {
     let sweep_every = (cfg.lease_sweep_ms > 0).then(|| Duration::from_millis(cfg.lease_sweep_ms));
     let mut last_sweep = Instant::now();
@@ -130,13 +130,13 @@ fn accept_loop(
                 let master = Arc::clone(&master);
                 let stop = Arc::clone(&stop);
                 let cfg = cfg.clone();
-                std::thread::spawn(move || handle_conn(stream, master, stop, cfg, epoch));
+                std::thread::spawn(move || handle_conn(stream, master, stop, cfg, wall_epoch));
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
                 if let Some(period) = sweep_every {
                     if last_sweep.elapsed() >= period {
                         last_sweep = Instant::now();
-                        let now = hours_since(epoch);
+                        let now = hours_since(wall_epoch);
                         let rsp = lock_master(&master)
                             .dispatch(Request::ExpireLeases { now_hours: now });
                         if let Response::Expired { dead } = rsp {
@@ -157,27 +157,28 @@ fn accept_loop(
 }
 
 /// Substitute the server's wall clock for "stamp at arrival" markers.
-fn stamp(req: Request, epoch: Instant) -> Request {
+fn stamp(req: Request, wall_epoch: Instant) -> Request {
     match req {
         Request::Heartbeat { server, now_hours, report } if !now_hours.is_finite() => {
-            Request::Heartbeat { server, now_hours: hours_since(epoch), report }
+            Request::Heartbeat { server, now_hours: hours_since(wall_epoch), report }
         }
         Request::ExpireLeases { now_hours } if !now_hours.is_finite() => {
-            Request::ExpireLeases { now_hours: hours_since(epoch) }
+            Request::ExpireLeases { now_hours: hours_since(wall_epoch) }
         }
         Request::RecoverServer { server, now_hours } if !now_hours.is_finite() => {
-            Request::RecoverServer { server, now_hours: hours_since(epoch) }
+            Request::RecoverServer { server, now_hours: hours_since(wall_epoch) }
         }
         other => other,
     }
 }
 
-/// Write one response frame.  A response that would itself exceed the
-/// frame limit (e.g. a `StateView` over a very large app population) is
-/// replaced by an in-band typed error rather than silently dropping the
-/// connection — errors are answers here too.
-fn send(stream: &mut TcpStream, rsp: &Response, max: usize) -> bool {
-    let mut payload = wire::encode_response(rsp);
+/// Write one response frame, trailed by the serving master's `epoch`
+/// (proto v1.1 split-brain fencing).  A response that would itself exceed
+/// the frame limit (e.g. a `StateView` over a very large app population)
+/// is replaced by an in-band typed error rather than silently dropping
+/// the connection — errors are answers here too.
+fn send(stream: &mut TcpStream, rsp: &Response, max: usize, epoch: u64) -> bool {
+    let mut payload = wire::encode_response_ep(rsp, epoch);
     if payload.len() > max {
         // progressively shorter details so the substitute itself fits
         // even a pathologically small (but legal, >= 64 B) frame limit
@@ -187,10 +188,10 @@ fn send(stream: &mut TcpStream, rsp: &Response, max: usize) -> bool {
             payload.len()
         );
         for detail in [full.as_str(), "response too large", ""] {
-            let sub = wire::encode_response(&Response::Error(ProtoError::new(
-                ErrorCode::FrameTooLarge,
-                detail,
-            )));
+            let sub = wire::encode_response_ep(
+                &Response::Error(ProtoError::new(ErrorCode::FrameTooLarge, detail)),
+                epoch,
+            );
             if sub.len() <= max {
                 payload = sub;
                 break;
@@ -249,7 +250,7 @@ fn handle_conn(
     master: Arc<Mutex<DormMaster>>,
     stop: Arc<AtomicBool>,
     cfg: NetConfig,
-    epoch: Instant,
+    wall_epoch: Instant,
 ) {
     stream.set_nodelay(true).ok();
     // the listener is nonblocking and some platforms let accepted sockets
@@ -269,6 +270,9 @@ fn handle_conn(
     }
     let max = cfg.max_frame_bytes;
     let mut negotiated = false;
+    // the serving epoch, refreshed after every dispatch (it changes only
+    // on promotion, but the cache spares a lock on pre-dispatch errors)
+    let mut cur_epoch = lock_master(&master).epoch();
     loop {
         if stop.load(Ordering::SeqCst) {
             return;
@@ -286,7 +290,7 @@ fn handle_conn(
                 ErrorCode::FrameTooLarge,
                 format!("frame of {len} B exceeds the {max} B limit"),
             );
-            send(&mut stream, &Response::Error(e), max);
+            send(&mut stream, &Response::Error(e), max, cur_epoch);
             return;
         }
         // body: a silent peer mid-frame is stalled — reap, never hang
@@ -304,14 +308,14 @@ fn handle_conn(
                     format!("request tag {t:#04x} is not known to protocol v{}.{}",
                         crate::proto::PROTO_MAJOR, crate::proto::PROTO_MINOR),
                 );
-                if !send(&mut stream, &Response::Error(e), max) {
+                if !send(&mut stream, &Response::Error(e), max, cur_epoch) {
                     return;
                 }
                 continue;
             }
             Err(e) => {
                 let e = ProtoError::new(ErrorCode::MalformedFrame, e);
-                if !send(&mut stream, &Response::Error(e), max) {
+                if !send(&mut stream, &Response::Error(e), max, cur_epoch) {
                     return;
                 }
                 continue;
@@ -320,9 +324,14 @@ fn handle_conn(
         if !negotiated {
             match req {
                 Request::Hello { .. } => {
-                    let rsp = lock_master(&master).dispatch(req);
+                    let rsp = {
+                        let mut m = lock_master(&master);
+                        let r = m.dispatch(req);
+                        cur_epoch = m.epoch();
+                        r
+                    };
                     let ok = matches!(rsp, Response::HelloAck { .. });
-                    if !send(&mut stream, &rsp, max) || !ok {
+                    if !send(&mut stream, &rsp, max, cur_epoch) || !ok {
                         return; // version rejected: typed error then close
                     }
                     negotiated = true;
@@ -333,14 +342,19 @@ fn handle_conn(
                         ErrorCode::HandshakeRequired,
                         "first frame on a connection must be Hello",
                     );
-                    send(&mut stream, &Response::Error(e), max);
+                    send(&mut stream, &Response::Error(e), max, cur_epoch);
                     return;
                 }
             }
         }
         let shutdown = req == Request::Shutdown;
-        let rsp = lock_master(&master).dispatch(stamp(req, epoch));
-        let sent = send(&mut stream, &rsp, max);
+        let rsp = {
+            let mut m = lock_master(&master);
+            let r = m.dispatch(stamp(req, wall_epoch));
+            cur_epoch = m.epoch();
+            r
+        };
+        let sent = send(&mut stream, &rsp, max, cur_epoch);
         if shutdown {
             stop.store(true, Ordering::SeqCst);
             return;

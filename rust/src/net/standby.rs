@@ -1,0 +1,138 @@
+//! The `dorm master --standby` body: watch the primary, promote on death.
+//!
+//! A standby is a process holding nothing but a probe loop and the shared
+//! [`CheckpointStore`] directory (the paper's "reliable storage system" —
+//! the same place app checkpoints live).  It watches the primary with the
+//! exact lease discipline slaves live under ([`crate::fault::LeaseTable`]
+//! semantics, one entry): every successful probe renews the lease, and
+//! when the lease has not been renewed for `master_lease`, the primary is
+//! declared dead.  Takeover then is:
+//!
+//! 1. [`crate::master::ha::load_master`] — newest digest-valid
+//!    [`MasterCheckpoint`](crate::master::ha::MasterCheckpoint) plus the
+//!    same-epoch WAL tail;
+//! 2. re-arm self-checkpointing (`with_ha`, continuing the sequence);
+//! 3. [`DormMaster::promote`] — `epoch + 1`, leases re-anchored into this
+//!    process's clock domain, a fresh snapshot at the new epoch fencing
+//!    off any stale WAL appends from the deposed primary;
+//! 4. serve on this process's bind address.  Slaves and `dorm ctl`
+//!    re-dial the candidate list ([`super::FailoverTransport`]) and
+//!    reconcile their books against the restored desired state through
+//!    the ordinary heartbeat exchange.
+//!
+//! Split-brain: a deposed primary that is merely *partitioned* (not dead)
+//! keeps serving its old epoch, but every write path is fenced — slaves
+//! refuse its directives, `ctl --min-epoch` refuses to submit to it, and
+//! its WAL appends are refused at the next recovery.  What this PR does
+//! not provide is consensus on *who* promotes (one standby assumed; see
+//! ROADMAP follow-ups).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::app::CheckpointStore;
+use crate::config::NetConfig;
+use crate::master::ha;
+use crate::proto::Request;
+
+use super::{serve, ControlPlane, ServerHandle, TcpTransport};
+
+/// Standby behaviour knobs (`[ha]` config + `dorm master --standby` flags).
+#[derive(Clone, Debug)]
+pub struct StandbyOpts {
+    /// Primary address to watch.
+    pub watch: String,
+    /// Declare the primary dead after this long without a good probe.
+    pub master_lease: Duration,
+    /// Probe cadence.
+    pub probe_period: Duration,
+    /// Self-checkpoint cadence once promoted (`DormMaster::with_ha`).
+    pub snapshot_every: u64,
+    /// Master snapshot files retained.
+    pub snapshots_retain: usize,
+}
+
+/// One probe: connect + handshake (the handshake already proves the
+/// master serves and reports its epoch).  The TCP connect is bounded by
+/// `connect_timeout`: a powered-off or blackholed primary must fail the
+/// probe within the lease window, not sit in SYN retries for minutes.
+fn probe(addr: &str, cfg: &NetConfig, connect_timeout: Duration) -> Result<u64> {
+    let mut t = TcpTransport::connect_with_timeout(addr, cfg, connect_timeout)?;
+    // a cheap read keeps the probe honest beyond the TCP accept
+    t.call(Request::QueryState { app: None })?;
+    Ok(t.last_epoch().unwrap_or(0))
+}
+
+/// Watch the primary until its lease lapses, then promote the
+/// checkpointed master state and serve it on `net.bind_addr`.  Blocks for
+/// the whole watch phase; returns the serving handle once promoted.
+pub fn run_standby(
+    store: CheckpointStore,
+    net: &NetConfig,
+    opts: &StandbyOpts,
+) -> Result<ServerHandle> {
+    // probes must not hang past the lease window on a half-dead primary
+    // (io_timeout 0 = block forever is capped at the lease here)
+    let lease_ms = (opts.master_lease.as_millis() as u64).max(1);
+    let probe_cfg = NetConfig {
+        io_timeout_ms: if net.io_timeout_ms == 0 {
+            lease_ms
+        } else {
+            net.io_timeout_ms.min(lease_ms)
+        },
+        ..net.clone()
+    };
+    log::info!(
+        "standby: watching {} (lease {:?}, probing every {:?})",
+        opts.watch,
+        opts.master_lease,
+        opts.probe_period
+    );
+    let connect_timeout = Duration::from_millis(probe_cfg.io_timeout_ms.max(1));
+    let mut renewed = Instant::now();
+    let mut last_epoch = 0u64;
+    loop {
+        match probe(&opts.watch, &probe_cfg, connect_timeout) {
+            Ok(epoch) => {
+                renewed = Instant::now();
+                if epoch != last_epoch {
+                    log::info!("standby: primary {} serves epoch {epoch}", opts.watch);
+                    last_epoch = epoch;
+                }
+            }
+            Err(e) => {
+                let silent = renewed.elapsed();
+                log::debug!("standby: probe failed ({e:#}); silent for {silent:?}");
+                if silent >= opts.master_lease {
+                    log::warn!(
+                        "standby: primary {} lease lapsed ({silent:?} > {:?}); taking over",
+                        opts.watch,
+                        opts.master_lease
+                    );
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(opts.probe_period);
+    }
+
+    let Some((master, seq)) = ha::load_master(&store)
+        .with_context(|| format!("loading master state from {}", store.dir().display()))?
+    else {
+        bail!(
+            "no master snapshot in {} — the primary must run with HA enabled \
+             (`dorm master --ha`) for a standby to take over",
+            store.dir().display()
+        );
+    };
+    let mut master = master.with_ha(opts.snapshot_every, opts.snapshots_retain, seq)?;
+    let epoch = master.promote()?;
+    let view = master.state_view(None);
+    log::info!(
+        "standby: restored clock {} / {} app(s); promoted to epoch {epoch}",
+        view.clock,
+        view.apps.len()
+    );
+    serve(master, net)
+}

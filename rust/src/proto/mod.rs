@@ -39,7 +39,11 @@ use crate::slave::SlaveReport;
 /// Protocol major version: incompatible wire or semantics changes.
 pub const PROTO_MAJOR: u16 = 1;
 /// Protocol minor version: backward-compatible additions within a major.
-pub const PROTO_MINOR: u16 = 0;
+/// v1.1 added the master epoch (term) number: every response frame is
+/// trailed by the serving master's epoch ([`wire::encode_response_ep`])
+/// and [`StateView`] carries it, which is what lets slaves and `dorm ctl`
+/// fence off a deposed primary after a standby takeover (DESIGN.md §11).
+pub const PROTO_MINOR: u16 = 1;
 
 /// Version handshake rule: same major, minor no newer than ours (a newer
 /// minor may legally send request tags we cannot decode, so it is refused
@@ -160,6 +164,10 @@ pub enum ErrorCode {
     InvalidArgument,
     /// Anything else; `detail` has the underlying error chain.
     Internal,
+    /// The answering master's epoch is older than one the caller has
+    /// already seen: it is a deposed primary and its writes must be
+    /// refused (split-brain fencing, DESIGN.md §11).
+    StaleEpoch,
 }
 
 impl ErrorCode {
@@ -176,6 +184,7 @@ impl ErrorCode {
             ErrorCode::InvalidState => 9,
             ErrorCode::InvalidArgument => 10,
             ErrorCode::Internal => 11,
+            ErrorCode::StaleEpoch => 12,
         }
     }
 
@@ -193,6 +202,7 @@ impl ErrorCode {
             8 => ErrorCode::InvalidSpec,
             9 => ErrorCode::InvalidState,
             10 => ErrorCode::InvalidArgument,
+            12 => ErrorCode::StaleEpoch,
             _ => ErrorCode::Internal,
         }
     }
@@ -226,6 +236,10 @@ impl std::error::Error for ProtoError {}
 pub struct StateView {
     /// Master event clock (one tick per mutating control-plane event).
     pub clock: u64,
+    /// Serving master's epoch (term).  A standby takeover serves the same
+    /// logical state at `epoch + 1`; views from different epochs must not
+    /// be treated as one history.
+    pub epoch: u64,
     pub alive_servers: u32,
     pub total_servers: u32,
     pub active_apps: u32,
@@ -278,6 +292,7 @@ mod tests {
             ErrorCode::InvalidState,
             ErrorCode::InvalidArgument,
             ErrorCode::Internal,
+            ErrorCode::StaleEpoch,
         ] {
             assert_eq!(ErrorCode::from_u16(code.as_u16()), code);
         }

@@ -102,18 +102,20 @@ pub fn read_frame(r: &mut impl Read, max: usize) -> Result<Vec<u8>, WireError> {
 
 // ---- primitive readers --------------------------------------------------
 
-/// Bounds-checked reader over a decoded payload.
-struct Cur<'a> {
+/// Bounds-checked reader over a decoded payload.  `pub(crate)` so the
+/// master self-checkpoint format (`crate::master::ha`) reuses the same
+/// hostile-input discipline instead of re-deriving it.
+pub(crate) struct Cur<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Cur<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Cur { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         if self.pos + n > self.buf.len() {
             return Err(WireError::Truncated);
         }
@@ -122,27 +124,32 @@ impl<'a> Cur<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, WireError> {
+    /// Bytes not yet consumed (trailing extension room).
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u16(&mut self) -> Result<u16, WireError> {
+    pub(crate) fn u16(&mut self) -> Result<u16, WireError> {
         Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
     }
 
-    fn u32(&mut self) -> Result<u32, WireError> {
+    pub(crate) fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, WireError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> Result<f64, WireError> {
+    pub(crate) fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_bits(self.u64()?))
     }
 
-    fn bool(&mut self) -> Result<bool, WireError> {
+    pub(crate) fn bool(&mut self) -> Result<bool, WireError> {
         match self.u8()? {
             0 => Ok(false),
             1 => Ok(true),
@@ -153,7 +160,7 @@ impl<'a> Cur<'a> {
     /// Element counts are validated against the remaining bytes (one byte
     /// per element minimum) so a hostile count cannot drive a huge
     /// allocation out of a small frame.
-    fn count(&mut self, min_elem_bytes: usize) -> Result<usize, WireError> {
+    pub(crate) fn count(&mut self, min_elem_bytes: usize) -> Result<usize, WireError> {
         let n = self.u32()? as usize;
         if n.saturating_mul(min_elem_bytes.max(1)) > self.buf.len() - self.pos {
             return Err(WireError::Truncated);
@@ -161,14 +168,14 @@ impl<'a> Cur<'a> {
         Ok(n)
     }
 
-    fn str(&mut self) -> Result<String, WireError> {
+    pub(crate) fn str(&mut self) -> Result<String, WireError> {
         let n = self.count(1)?;
         let bytes = self.take(n)?;
         String::from_utf8(bytes.to_vec())
             .map_err(|_| WireError::Malformed("string is not UTF-8".into()))
     }
 
-    fn res(&mut self) -> Result<Res, WireError> {
+    pub(crate) fn res(&mut self) -> Result<Res, WireError> {
         let m = self.count(8)?;
         let mut v = Vec::with_capacity(m);
         for _ in 0..m {
@@ -180,19 +187,19 @@ impl<'a> Cur<'a> {
 
 // ---- primitive writers --------------------------------------------------
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(&(s.len() as u32).to_be_bytes());
     out.extend_from_slice(s.as_bytes());
 }
 
-fn put_res(out: &mut Vec<u8>, r: &Res) {
+pub(crate) fn put_res(out: &mut Vec<u8>, r: &Res) {
     out.extend_from_slice(&(r.0.len() as u32).to_be_bytes());
     for &x in &r.0 {
         out.extend_from_slice(&x.to_bits().to_be_bytes());
     }
 }
 
-fn put_f64(out: &mut Vec<u8>, x: f64) {
+pub(crate) fn put_f64(out: &mut Vec<u8>, x: f64) {
     out.extend_from_slice(&x.to_bits().to_be_bytes());
 }
 
@@ -217,7 +224,7 @@ fn engine_of(tag: u8) -> Result<Engine, WireError> {
     })
 }
 
-fn state_tag(s: AppState) -> u8 {
+pub(crate) fn state_tag(s: AppState) -> u8 {
     match s {
         AppState::Pending => 0,
         AppState::Running => 1,
@@ -231,7 +238,7 @@ fn state_tag(s: AppState) -> u8 {
     }
 }
 
-fn state_of(tag: u8) -> Result<AppState, WireError> {
+pub(crate) fn state_of(tag: u8) -> Result<AppState, WireError> {
     Ok(match tag {
         0 => AppState::Pending,
         1 => AppState::Running,
@@ -246,7 +253,7 @@ fn state_of(tag: u8) -> Result<AppState, WireError> {
     })
 }
 
-fn put_spec(out: &mut Vec<u8>, s: &AppSpec) {
+pub(crate) fn put_spec(out: &mut Vec<u8>, s: &AppSpec) {
     out.push(engine_tag(s.executor));
     put_res(out, &s.demand);
     out.extend_from_slice(&s.weight.to_be_bytes());
@@ -256,7 +263,7 @@ fn put_spec(out: &mut Vec<u8>, s: &AppSpec) {
     put_str(out, &s.cmd[1]);
 }
 
-fn spec(c: &mut Cur) -> Result<AppSpec, WireError> {
+pub(crate) fn spec(c: &mut Cur) -> Result<AppSpec, WireError> {
     Ok(AppSpec {
         executor: engine_of(c.u8()?)?,
         demand: c.res()?,
@@ -527,6 +534,9 @@ pub fn encode_response(rsp: &Response) -> Vec<u8> {
                 out.extend_from_slice(&a.adjustments.to_be_bytes());
                 out.extend_from_slice(&a.recoveries.to_be_bytes());
             }
+            // v1.1 addition, deliberately *trailing* (after every v1.0
+            // field) so an epoch-less v1.0 decoder still parses the body
+            out.extend_from_slice(&v.epoch.to_be_bytes());
         }
         Response::Error(e) => {
             out.push(RSP_ERROR);
@@ -537,8 +547,30 @@ pub fn encode_response(rsp: &Response) -> Vec<u8> {
     out
 }
 
-pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
+/// Encode a response with the serving master's epoch (term) appended as a
+/// trailing field — v1.1's same-major extension (DESIGN.md §11).  A v1.0
+/// decoder ignores the trailing bytes; a v1.1 peer reads the epoch and
+/// uses it for split-brain fencing.
+pub fn encode_response_ep(rsp: &Response, epoch: u64) -> Vec<u8> {
+    let mut out = encode_response(rsp);
+    out.extend_from_slice(&epoch.to_be_bytes());
+    out
+}
+
+/// Decode a response plus the optional trailing epoch.  `None` means the
+/// peer is an epoch-less v1.0 master.
+pub fn decode_response_ep(payload: &[u8]) -> Result<(Response, Option<u64>), WireError> {
     let mut c = Cur::new(payload);
+    let rsp = decode_response_cur(&mut c)?;
+    let epoch = if c.remaining() >= 8 { Some(c.u64()?) } else { None };
+    Ok((rsp, epoch))
+}
+
+pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
+    decode_response_cur(&mut Cur::new(payload))
+}
+
+fn decode_response_cur(c: &mut Cur) -> Result<Response, WireError> {
     let rsp = match c.u8()? {
         RSP_HELLO_ACK => Response::HelloAck { major: c.u16()?, minor: c.u16()? },
         RSP_OK => Response::Ok,
@@ -548,7 +580,7 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
             let n = c.count(9)?;
             let mut directives = Vec::with_capacity(n);
             for _ in 0..n {
-                directives.push(directive(&mut c)?);
+                directives.push(directive(c)?);
             }
             Response::HeartbeatAck { alive, directives }
         }
@@ -589,8 +621,12 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
                     recoveries: c.u32()?,
                 });
             }
+            // trailing v1.1 field: absent from a v1.0 master's body, in
+            // which case the epoch is simply unknown (0 = pre-epoch)
+            let epoch = if c.remaining() >= 8 { c.u64()? } else { 0 };
             Response::State(StateView {
                 clock,
+                epoch,
                 alive_servers,
                 total_servers,
                 active_apps,
@@ -677,6 +713,7 @@ mod tests {
             Response::Affected { apps: vec![AppId(1), AppId(2)] },
             Response::State(StateView {
                 clock: 42,
+                epoch: 3,
                 alive_servers: 3,
                 total_servers: 4,
                 active_apps: 2,
@@ -721,6 +758,24 @@ mod tests {
         let mut buf = encode_request(&Request::Reallocate);
         buf.extend_from_slice(&[1, 2, 3]);
         assert_eq!(decode_request(&buf).unwrap(), Request::Reallocate);
+    }
+
+    /// The epoch envelope is exactly such a trailing extension: epoch-aware
+    /// decoders read it, epoch-less ones ignore it, and every response
+    /// variant carries it unchanged.
+    #[test]
+    fn epoch_envelope_roundtrips_on_every_response() {
+        for rsp in sample_responses() {
+            let buf = encode_response_ep(&rsp, 7);
+            let (back, epoch) = decode_response_ep(&buf).unwrap();
+            assert_eq!(back, rsp);
+            assert_eq!(epoch, Some(7));
+            // a v1.0-style decoder sees the same response, no epoch
+            assert_eq!(decode_response(&buf).unwrap(), rsp);
+        }
+        // an epoch-less frame decodes with None (v1.0 master)
+        let bare = encode_response(&Response::Ok);
+        assert_eq!(decode_response_ep(&bare).unwrap(), (Response::Ok, None));
     }
 
     #[test]

@@ -115,6 +115,13 @@ enum Event {
     ServerRecover(usize),
     /// Periodic checkpoint tick ([`PerfModel::ckpt_period_hours`]).
     CkptTick,
+    /// The CMS master dies (DESIGN.md §11): partitions keep computing
+    /// (§III-D — apps launch tasks locally), checkpoints keep landing on
+    /// reliable storage, but every allocation decision is deferred.
+    MasterFail,
+    /// The standby finished taking over: one catch-up solve reconciles
+    /// everything deferred during the outage.
+    MasterRecover,
 }
 
 /// Everything a run produces.
@@ -124,6 +131,12 @@ pub struct SimOutcome {
     pub apps: BTreeMap<AppId, SimApp>,
     /// Completed fraction.
     pub completed: usize,
+    /// Allocation decisions deferred by master outages (arrivals,
+    /// completions, server churn seen while no master was serving) —
+    /// the "lost adjustments" a takeover costs.
+    pub deferred_allocations: usize,
+    /// Total hours with no serving master.
+    pub master_outage_hours: f64,
 }
 
 /// Run `policy` over `workload` on `cluster_cfg` for `sim.horizon_hours`
@@ -160,6 +173,14 @@ pub fn run_sim_faulty(
     let mut done: BTreeMap<AppId, SimApp> = BTreeMap::new();
     let mut total_adjusted = 0u32;
     let mut lost_work = 0.0f64;
+    // master-failover bookkeeping (DESIGN.md §11): while no master serves,
+    // allocation decisions are deferred — not lost — and reconciled by one
+    // catch-up solve at takeover, mirroring the live standby promotion
+    let mut master_up = true;
+    let mut master_down_at = 0.0f64;
+    let mut master_outage_hours = 0.0f64;
+    let mut deferred_allocations = 0usize;
+    let mut pending_realloc = false;
 
     for (i, w) in workload.iter().enumerate() {
         if w.submit_hours <= sim.horizon_hours {
@@ -168,13 +189,19 @@ pub fn run_sim_faulty(
     }
     q.schedule(0.0, Event::Sample);
     for f in faults {
-        if f.server < cluster.servers.len() && f.time <= sim.horizon_hours {
-            let ev = match f.kind {
-                FailureKind::Kill => Event::ServerFail(f.server),
-                FailureKind::Recover => Event::ServerRecover(f.server),
-            };
-            q.schedule(f.time, ev);
+        if f.time > sim.horizon_hours {
+            continue;
         }
+        if f.kind.is_server_event() && f.server >= cluster.servers.len() {
+            continue;
+        }
+        let ev = match f.kind {
+            FailureKind::Kill => Event::ServerFail(f.server),
+            FailureKind::Recover => Event::ServerRecover(f.server),
+            FailureKind::MasterKill => Event::MasterFail,
+            FailureKind::MasterRecover => Event::MasterRecover,
+        };
+        q.schedule(f.time, ev);
     }
     if pm.ckpt_period_hours > 0.0 {
         q.schedule(pm.ckpt_period_hours, Event::CkptTick);
@@ -215,8 +242,13 @@ pub fn run_sim_faulty(
                 };
                 cluster.register_app(id, app.demand.clone());
                 apps.insert(id, app);
-                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
-                           &mut metrics, &mut total_adjusted);
+                if master_up {
+                    reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                               &mut metrics, &mut total_adjusted);
+                } else {
+                    deferred_allocations += 1;
+                    pending_realloc = true;
+                }
                 sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
             }
             Event::Completion { app: id, version } => {
@@ -242,8 +274,13 @@ pub fn run_sim_faulty(
                 let finished = apps.remove(&id).unwrap();
                 cluster.remove_app(id);
                 done.insert(id, finished);
-                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
-                           &mut metrics, &mut total_adjusted);
+                if master_up {
+                    reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                               &mut metrics, &mut total_adjusted);
+                } else {
+                    deferred_allocations += 1;
+                    pending_realloc = true;
+                }
                 sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
             }
             Event::Sample => {
@@ -299,8 +336,15 @@ pub fn run_sim_faulty(
                 }
                 cluster.servers[j].capacity = Res::zeros(saved_caps[j].m());
                 policy.on_capacity_change();
-                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
-                           &mut metrics, &mut total_adjusted);
+                // the teardown above is slave-local (the machine is gone
+                // either way); only the *decision* needs a live master
+                if master_up {
+                    reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                               &mut metrics, &mut total_adjusted);
+                } else {
+                    deferred_allocations += 1;
+                    pending_realloc = true;
+                }
                 sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
             }
             Event::ServerRecover(j) => {
@@ -313,9 +357,36 @@ pub fn run_sim_faulty(
                 lease.mark_alive(j, now);
                 cluster.servers[j].capacity = saved_caps[j].clone();
                 policy.on_capacity_change();
-                reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
-                           &mut metrics, &mut total_adjusted);
+                if master_up {
+                    reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                               &mut metrics, &mut total_adjusted);
+                } else {
+                    deferred_allocations += 1;
+                    pending_realloc = true;
+                }
                 sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
+            }
+            Event::MasterFail => {
+                if master_up {
+                    master_up = false;
+                    master_down_at = now;
+                }
+            }
+            Event::MasterRecover => {
+                if !master_up {
+                    master_up = true;
+                    master_outage_hours += now - master_down_at;
+                    if pending_realloc {
+                        // the promoted standby's catch-up solve: engine
+                        // caches are stale across the restore
+                        pending_realloc = false;
+                        policy.on_capacity_change();
+                        reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                                   &mut metrics, &mut total_adjusted);
+                        sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work,
+                               pm, pf);
+                    }
+                }
             }
             Event::CkptTick => {
                 for app in apps.values_mut() {
@@ -332,12 +403,17 @@ pub fn run_sim_faulty(
         }
     }
 
+    // a master still down at horizon end charges the tail of the outage
+    if !master_up {
+        master_outage_hours += sim.horizon_hours - master_down_at;
+    }
+
     // merge remaining active apps into the report
     let completed = done.len();
     for (id, app) in apps {
         done.insert(id, app);
     }
-    SimOutcome { metrics, apps: done, completed }
+    SimOutcome { metrics, apps: done, completed, deferred_allocations, master_outage_hours }
 }
 
 /// Ask the policy for a new assignment and apply it.
@@ -614,6 +690,36 @@ mod tests {
             let dur = out.metrics.completions[0].1;
             assert!((dur - 1.0).abs() < 1e-6, "{dur}");
         }
+    }
+
+    /// Master dies at 0.4 h, standby takes over at 1.0 h: the MF app
+    /// arriving at 0.5 h (mid-outage) gets no allocation until the
+    /// catch-up solve, so its duration stretches by exactly the wait;
+    /// the already-running LR app is untouched (§III-D: partitions keep
+    /// computing without a master).
+    #[test]
+    fn master_outage_defers_allocations_until_takeover() {
+        let (rows, wl) = tiny_workload();
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 12.0, ..Default::default() };
+        let pm = PerfModel::default();
+        let faults = vec![FailureEvent::master_kill(0.4), FailureEvent::master_recover(1.0)];
+        let mut pol = StaticPolicy::new();
+        let out = run_sim_faulty(&mut pol, &rows, &wl, &cfg, &sim, &pm, &faults);
+        assert_eq!(out.completed, 2);
+        assert!(out.deferred_allocations >= 1, "MF arrival must be deferred");
+        assert!((out.master_outage_hours - 0.6).abs() < 1e-9);
+        let lr_dur = out.metrics.completions.iter().find(|(t, _)| t == "LR").unwrap().1;
+        assert!((lr_dur - 2.0).abs() < 1e-6, "running app untouched: {lr_dur}");
+        // MF submitted at 0.5, allocated at the 1.0 takeover: 3 h of work
+        // finish at 4.0, a 3.5 h duration — the 0.5 h takeover tax
+        let mf_dur = out.metrics.completions.iter().find(|(t, _)| t == "MF").unwrap().1;
+        assert!((mf_dur - 3.5).abs() < 1e-6, "deferred app pays the wait: {mf_dur}");
+        // no outage, no tax: same trace minus the master events
+        let mut pol = StaticPolicy::new();
+        let base = run_sim_faulty(&mut pol, &rows, &wl, &cfg, &sim, &pm, &[]);
+        assert_eq!(base.deferred_allocations, 0);
+        assert_eq!(base.master_outage_hours, 0.0);
     }
 
     /// A death and recovery with no apps on the dead server must not

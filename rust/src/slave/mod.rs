@@ -153,6 +153,22 @@ impl DormSlave {
         self.containers.iter().filter(|c| c.app == app).count() as u32
     }
 
+    /// Containers grouped by `(app, demand)`, insertion-ordered — the
+    /// serializable form of this slave's book (`crate::master::ha`).
+    /// Grouping by demand too (not just app) keeps admin-created
+    /// containers with non-spec demands faithful across a checkpoint
+    /// restore; [`DormSlave::create`] rebuilds each group exactly.
+    pub fn container_groups(&self) -> Vec<(AppId, Res, u32)> {
+        let mut out: Vec<(AppId, Res, u32)> = Vec::new();
+        for c in &self.containers {
+            match out.iter_mut().find(|(a, d, _)| *a == c.app && *d == c.demand) {
+                Some((_, _, n)) => *n += 1,
+                None => out.push((c.app, c.demand.clone(), 1)),
+            }
+        }
+        out
+    }
+
     /// Containers per app (the xᵢⱼ column this slave holds).
     pub fn inventory(&self) -> BTreeMap<AppId, u32> {
         let mut out = BTreeMap::new();

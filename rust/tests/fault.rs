@@ -187,6 +187,9 @@ fn master_and_sim_replay_identical_recovery_sequences() {
         let ev = match f.kind {
             dorm::fault::FailureKind::Kill => Ev::Kill(f.server),
             dorm::fault::FailureKind::Recover => Ev::Recover(f.server),
+            // this parity trace scripts server churn only; master outages
+            // have their own coverage in sim::runner + tests/ha.rs
+            other => unreachable!("unexpected {other:?} in server-churn trace"),
         };
         events.push((f.time, ev));
     }

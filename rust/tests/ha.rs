@@ -1,0 +1,347 @@
+//! Master-failover integration tests (DESIGN.md §11), socket-free:
+//!
+//! * checkpoint round-trip equivalence — a dispatch trace on the original
+//!   master and on its restored twin produces identical observable state;
+//! * corrupt / truncated master snapshots fall back to the previous good
+//!   one (mirroring the PR 2 app-checkpoint fallback tests);
+//! * epoch fencing — a slave agent that has obeyed an epoch-2 master
+//!   refuses a deposed epoch-1 master's directives; a deposed primary's
+//!   WAL appends are refused at recovery time.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use dorm::app::{AppId, AppSpec, CheckpointStore, Engine};
+use dorm::config::{ClusterConfig, DormConfig};
+use dorm::master::{ha, DormMaster};
+use dorm::net::{ControlPlane, LocalTransport, SlaveAgent};
+use dorm::proto::{Request, Response};
+use dorm::resources::Res;
+use dorm::slave::DormSlave;
+
+fn store(tag: &str) -> CheckpointStore {
+    let d = std::env::temp_dir().join(format!("dorm_ha_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    CheckpointStore::new(d).unwrap()
+}
+
+fn spec(cpu: f64, n_min: u32, n_max: u32) -> AppSpec {
+    AppSpec {
+        executor: Engine::MxNet,
+        demand: Res::cpu_gpu_ram(cpu, 0.0, 8.0),
+        weight: 1,
+        n_max,
+        n_min,
+        cmd: ["lr".into(), "lr".into()],
+    }
+}
+
+fn master_with_store(s: CheckpointStore) -> DormMaster {
+    DormMaster::new(
+        &ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+        DormConfig { theta1: 0.5, theta2: 0.5 },
+        s,
+    )
+}
+
+/// Drive one mixed mutating trace through `dispatch` (submissions,
+/// progress, checkpoints, a completion, heartbeats, a server death and
+/// recovery — every HA action class: Append and Barrier).
+fn drive_trace(m: &mut DormMaster) -> Vec<AppId> {
+    let mut ids = Vec::new();
+    for sp in [spec(2.0, 1, 12), spec(2.0, 1, 8), spec(3.0, 1, 4)] {
+        match m.dispatch(Request::Submit { spec: sp }) {
+            Response::Submitted { app } => ids.push(app),
+            other => panic!("submit answered {other:?}"),
+        }
+    }
+    assert_eq!(m.dispatch(Request::AdvanceSteps { app: ids[0], steps: 120 }), Response::Ok);
+    assert_eq!(m.dispatch(Request::CheckpointApp { app: ids[0] }), Response::Ok);
+    assert_eq!(m.dispatch(Request::AdvanceSteps { app: ids[0], steps: 30 }), Response::Ok);
+    assert_eq!(m.dispatch(Request::Complete { app: ids[2] }), Response::Ok);
+    for j in 0..2 {
+        let rsp = m.dispatch(Request::Heartbeat { server: j, now_hours: 1.0, report: None });
+        assert!(matches!(rsp, Response::HeartbeatAck { .. }), "{rsp:?}");
+    }
+    // a barrier event: fail_server reads the store, so it snapshots
+    match m.dispatch(Request::FailServer { server: 3 }) {
+        Response::Affected { .. } => {}
+        other => panic!("fail answered {other:?}"),
+    }
+    assert_eq!(
+        m.dispatch(Request::RecoverServer { server: 3, now_hours: 2.0 }),
+        Response::Ok
+    );
+    ids
+}
+
+/// The ISSUE's round-trip pin: drive a trace on an HA-armed master,
+/// rebuild a twin with `load_master`, then drive an *identical further
+/// trace* on both — the observable state must stay equal step for step.
+#[test]
+fn checkpoint_roundtrip_dispatch_equivalence() {
+    let s = store("equiv");
+    let mut original = master_with_store(s.clone()).with_ha(4, 8, 0).unwrap();
+    let ids = drive_trace(&mut original);
+
+    let (mut restored, seq) = ha::load_master(&s).unwrap().expect("snapshot exists");
+    assert!(seq >= 1, "mutating events must have advanced the journal");
+    assert_eq!(restored.state_view(None), original.state_view(None));
+    assert_eq!(restored.epoch(), original.epoch(), "restore does not bump the epoch");
+
+    // a slave reporting the pre-restore book is already converged: the
+    // restored desired state matches what the cluster is actually running
+    let report = original.slaves[0].report();
+    let (alive, directives) = restored
+        .heartbeat_report(0, 3.0, Some(&report))
+        .unwrap();
+    assert!(alive);
+    assert!(directives.is_empty(), "restored book must be converged: {directives:?}");
+
+    // identical further traffic on both masters: lockstep equality.
+    // (The new app's n_max exactly fills the free capacity — 12 + 8 of
+    // 24 container slots held — so the optimum is unique and the
+    // original's warm-start state cannot pick a different-but-equal
+    // placement than the restored master's cold solve.)
+    for m in [&mut original, &mut restored] {
+        match m.dispatch(Request::Submit { spec: spec(2.0, 1, 4) }) {
+            Response::Submitted { .. } => {}
+            other => panic!("submit answered {other:?}"),
+        }
+        assert_eq!(m.dispatch(Request::AdvanceSteps { app: ids[1], steps: 9 }), Response::Ok);
+        assert_eq!(m.dispatch(Request::Reallocate), Response::Ok);
+    }
+    assert_eq!(restored.state_view(None), original.state_view(None));
+    for (a, b) in original.slaves.iter().zip(&restored.slaves) {
+        assert_eq!(a.inventory(), b.inventory(), "{} book differs", a.name);
+    }
+}
+
+/// Everything after the seed snapshot rides the WAL (cadence never
+/// reached): the tail must replay to the same state.
+#[test]
+fn wal_tail_replays_to_identical_state() {
+    let s = store("wal_tail");
+    let mut m = master_with_store(s.clone()).with_ha(10_000, 3, 0).unwrap();
+    let id = match m.dispatch(Request::Submit { spec: spec(2.0, 1, 10) }) {
+        Response::Submitted { app } => app,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(m.dispatch(Request::AdvanceSteps { app: id, steps: 77 }), Response::Ok);
+    assert_eq!(m.dispatch(Request::CheckpointApp { app: id }), Response::Ok);
+    // only the seed snapshot exists; the three events live in the WAL
+    assert_eq!(s.master_files().unwrap().len(), 1);
+    assert!(!ha::read_wal(&s).unwrap().is_empty());
+
+    let (restored, seq) = ha::load_master(&s).unwrap().expect("snapshot exists");
+    assert_eq!(seq, 3, "three mutating events replayed");
+    assert_eq!(restored.state_view(None), m.state_view(None));
+    assert_eq!(restored.steps_of(id), 77);
+}
+
+/// A corrupt (bit-flipped) or truncated newest master snapshot must fall
+/// back to the previous good one, not fail the takeover.
+#[test]
+fn corrupt_master_snapshot_falls_back_to_previous_good() {
+    let s = store("fallback");
+    // snapshot_every = 1: every mutating dispatch writes a full snapshot
+    let mut m = master_with_store(s.clone()).with_ha(1, 8, 0).unwrap();
+    match m.dispatch(Request::Submit { spec: spec(2.0, 1, 12) }) {
+        Response::Submitted { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    let view_one_app = m.state_view(None);
+    match m.dispatch(Request::Submit { spec: spec(2.0, 1, 8) }) {
+        Response::Submitted { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    let files = s.master_files().unwrap();
+    assert!(files.len() >= 3, "seed + one per submit: {files:?}");
+
+    // bit-flip the newest snapshot
+    let newest = files.last().unwrap();
+    let mut bytes = std::fs::read(newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(newest, &bytes).unwrap();
+
+    let (restored, _) = ha::load_master(&s).unwrap().expect("fallback snapshot");
+    assert_eq!(
+        restored.state_view(None),
+        view_one_app,
+        "fallback must serve the previous good snapshot's state"
+    );
+
+    // truncate it instead: same fallback
+    std::fs::write(newest, &bytes[..bytes.len() / 3]).unwrap();
+    let (restored, _) = ha::load_master(&s).unwrap().expect("fallback snapshot");
+    assert_eq!(restored.state_view(None), view_one_app);
+}
+
+/// Falling back past a corrupt newest snapshot must NOT splice the
+/// surviving WAL tail (which continues from the *corrupt* snapshot's
+/// sequence) onto the older state — that would fabricate a history that
+/// never existed.  Replay stops at the first non-contiguous record.
+#[test]
+fn fallback_refuses_non_contiguous_wal_tail() {
+    let s = store("gap");
+    // cadence 2: odd events ride the WAL, even events snapshot + reset it
+    let mut m = master_with_store(s.clone()).with_ha(2, 8, 0).unwrap();
+    // seq 1 rides the WAL
+    let id = match m.dispatch(Request::Submit { spec: spec(2.0, 1, 12) }) {
+        Response::Submitted { app } => app,
+        other => panic!("{other:?}"),
+    };
+    let advance = |m: &mut DormMaster| {
+        assert_eq!(m.dispatch(Request::AdvanceSteps { app: id, steps: 10 }), Response::Ok);
+    };
+    advance(&mut m); // seq 2: snapshot (cadence rollover)
+    let view_at_snapshot = m.state_view(None);
+    advance(&mut m); // seq 3: WAL
+    advance(&mut m); // seq 4: snapshot (resets the WAL)
+    advance(&mut m); // seq 5: WAL
+
+    // corrupt the seq-4 snapshot: restore falls back to seq 2, and the
+    // WAL's seq-5 record (contiguous only with seq 4) must be refused
+    let files = s.master_files().unwrap();
+    let newest = files.last().unwrap();
+    let mut bytes = std::fs::read(newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(newest, &bytes).unwrap();
+
+    let (restored, seq) = ha::load_master(&s).unwrap().expect("fallback snapshot");
+    assert_eq!(seq, 2, "replay must stop at the restored snapshot");
+    assert_eq!(restored.state_view(None), view_at_snapshot);
+    assert_eq!(restored.steps_of(id), 10, "the seq-5 advance must not apply over seq-2 state");
+}
+
+/// Promotion is the only epoch bump: same state, term + 1, and the
+/// promoted master re-snapshots so recovery starts from the new epoch.
+#[test]
+fn promote_bumps_epoch_and_persists_it() {
+    let s = store("promote");
+    let mut m = master_with_store(s.clone()).with_ha(64, 4, 0).unwrap();
+    drive_trace(&mut m);
+    let before = m.state_view(None);
+    let (mut standby, seq) = ha::load_master(&s).unwrap().unwrap();
+    standby = standby.with_ha(64, 4, seq).unwrap();
+    let new_epoch = standby.promote().unwrap();
+    assert_eq!(new_epoch, before.epoch + 1);
+    let mut after = standby.state_view(None);
+    assert_eq!(after.epoch, before.epoch + 1);
+    after.epoch = before.epoch;
+    assert_eq!(after, before, "promotion changes the term, not the state");
+    // the new epoch is durable: a later recovery restores epoch + 1
+    let (recovered, _) = ha::load_master(&s).unwrap().unwrap();
+    assert_eq!(recovered.epoch(), new_epoch);
+}
+
+/// A transport that routes to one of two in-process masters — the
+/// socket-free stand-in for "the slave dialed the wrong (deposed)
+/// master after a takeover".
+struct FlipTransport {
+    old_primary: LocalTransport,
+    new_primary: LocalTransport,
+    use_new: Rc<Cell<bool>>,
+}
+
+impl ControlPlane for FlipTransport {
+    fn call(&mut self, req: Request) -> anyhow::Result<Response> {
+        if self.use_new.get() {
+            self.new_primary.call(req)
+        } else {
+            self.old_primary.call(req)
+        }
+    }
+
+    fn last_epoch(&self) -> Option<u64> {
+        if self.use_new.get() {
+            self.new_primary.last_epoch()
+        } else {
+            self.old_primary.last_epoch()
+        }
+    }
+}
+
+/// The ISSUE's fencing unit: two masters, and the lower epoch's
+/// directives are rejected wholesale by a slave that has already obeyed
+/// the higher epoch.
+#[test]
+fn deposed_masters_directives_are_fenced() {
+    // the new primary (epoch 2) wants 12 containers of app1 on its books
+    let mut new_primary = master_with_store(store("fence_new")).with_epoch(2);
+    let id = new_primary.submit(spec(2.0, 1, 12)).unwrap();
+    assert_eq!(new_primary.containers_of(id), 12);
+    // the deposed primary (epoch 1) manages nothing: its reconciliation
+    // would order the slave to destroy everything it holds
+    let old_primary = master_with_store(store("fence_old"));
+    assert_eq!(old_primary.epoch(), 1);
+
+    let use_new = Rc::new(Cell::new(true));
+    let transport = FlipTransport {
+        old_primary: LocalTransport::new(old_primary),
+        new_primary: LocalTransport::new(new_primary),
+        use_new: Rc::clone(&use_new),
+    };
+    let local = DormSlave::new("slave00", Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+    let mut agent = SlaveAgent::new(local, 0, transport);
+
+    // obey the epoch-2 master: the book converges on its desired state
+    let out = agent.step(1.0).unwrap();
+    assert!(!out.fenced);
+    assert!(out.applied >= 1);
+    assert_eq!(agent.max_epoch(), 2);
+    let held = agent.local().count_for(id);
+    assert!(held > 0, "epoch-2 placement landed");
+
+    // now the slave reaches the deposed epoch-1 master instead
+    use_new.set(false);
+    let out = agent.step(2.0).unwrap();
+    assert!(out.fenced, "stale-epoch answer must be fenced");
+    assert!(out.directives >= 1, "the deposed master did try to issue writes");
+    assert_eq!(out.applied, 0, "none of them may apply");
+    assert_eq!(agent.local().count_for(id), held, "book untouched");
+    assert_eq!(agent.max_epoch(), 2, "fence holds");
+
+    // back on the real primary: business as usual
+    use_new.set(true);
+    let out = agent.step(3.0).unwrap();
+    assert!(!out.fenced);
+}
+
+/// Store-level fencing: WAL records a deposed primary appends after the
+/// standby promoted (and re-snapshotted at epoch + 1) are refused by the
+/// next recovery.
+#[test]
+fn deposed_primary_wal_appends_are_refused() {
+    let s = store("deposed_wal");
+    // primary at epoch 1, everything in the WAL after the seed snapshot
+    let mut deposed = master_with_store(s.clone()).with_ha(10_000, 8, 0).unwrap();
+    match deposed.dispatch(Request::Submit { spec: spec(2.0, 1, 12) }) {
+        Response::Submitted { .. } => {}
+        other => panic!("{other:?}"),
+    }
+
+    // standby takes over: restore (replays app1), re-arm, promote
+    let (standby, seq) = ha::load_master(&s).unwrap().unwrap();
+    let mut standby = standby.with_ha(10_000, 8, seq).unwrap();
+    standby.promote().unwrap();
+    assert_eq!(standby.epoch(), 2);
+    assert_eq!(standby.active_apps(), 1);
+    let promoted_view = standby.state_view(None);
+
+    // the deposed primary, unaware, keeps writing at epoch 1
+    match deposed.dispatch(Request::Submit { spec: spec(2.0, 1, 4) }) {
+        Response::Submitted { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(deposed.active_apps(), 2, "the deposed fork diverged locally");
+    assert!(!ha::read_wal(&s).unwrap().is_empty(), "its append landed in the WAL");
+
+    // recovery sees the epoch-2 snapshot and refuses the epoch-1 record
+    let (recovered, _) = ha::load_master(&s).unwrap().unwrap();
+    assert_eq!(recovered.epoch(), 2);
+    assert_eq!(recovered.active_apps(), 1, "deposed write fenced out of history");
+    assert_eq!(recovered.state_view(None), promoted_view);
+}

@@ -1,0 +1,79 @@
+#!/usr/bin/env bash
+# Bench regression gate: diff a fresh BENCH_sched.json (emitted by
+# `scripts/bench_sched.sh`) against the checked-in baseline in
+# BENCH_baseline/, failing on a >25% latency regression of the
+# incremental decision path at any sweep point.
+#
+# Usage, from the repo root:
+#   bash scripts/check_bench.sh                 # compare (CI gate)
+#   bash scripts/check_bench.sh --update        # bless the fresh numbers
+#
+# Knobs: DORM_BENCH_JSON (fresh file, default ./BENCH_sched.json),
+#        DORM_BENCH_TOLERANCE (ratio, default 1.25).
+#
+# The baseline records new.p50_us per (apps, servers) scale.  p50 is the
+# gated statistic — p99 on shared CI runners is too noisy to gate on and
+# is reported for information only.  Sweep points present in only one of
+# the two files are reported and skipped, so changing the sweep scales
+# does not wedge the gate (refresh the baseline in the same PR instead).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FRESH="${DORM_BENCH_JSON:-$PWD/BENCH_sched.json}"
+BASELINE="BENCH_baseline/BENCH_sched.json"
+
+if [ "${1:-}" = "--update" ]; then
+  [ -f "$FRESH" ] || { echo "no fresh $FRESH to bless; run scripts/bench_sched.sh first" >&2; exit 2; }
+  mkdir -p BENCH_baseline
+  cp "$FRESH" "$BASELINE"
+  echo "blessed $FRESH -> $BASELINE"
+  exit 0
+fi
+
+[ -f "$FRESH" ] || { echo "fresh $FRESH missing; run scripts/bench_sched.sh first" >&2; exit 2; }
+[ -f "$BASELINE" ] || { echo "baseline $BASELINE missing" >&2; exit 2; }
+
+python3 - "$FRESH" "$BASELINE" "${DORM_BENCH_TOLERANCE:-1.25}" <<'PY'
+import json, sys
+
+fresh_path, base_path, tol = sys.argv[1], sys.argv[2], float(sys.argv[3])
+fresh = json.load(open(fresh_path))
+base = json.load(open(base_path))
+
+def points(doc):
+    return {(s["apps"], s["servers"]): s for s in doc.get("scales", [])}
+
+fp, bp = points(fresh), points(base)
+failures, compared = [], 0
+for key in sorted(fp):
+    if key not in bp:
+        print(f"  note: scale {key[0]}x{key[1]} has no baseline; skipped")
+        continue
+    compared += 1
+    got = fp[key]["new"]["p50_us"]
+    ref = bp[key]["new"]["p50_us"]
+    ratio = got / ref if ref > 0 else float("inf")
+    verdict = "OK" if ratio <= tol else "REGRESSION"
+    print(f"  {key[0]}x{key[1]}: new p50 {got:.1f} us vs baseline {ref:.1f} us "
+          f"({ratio:.2f}x, tolerance {tol:.2f}x) {verdict}")
+    p99g, p99r = fp[key]["new"].get("p99_us"), bp[key]["new"].get("p99_us")
+    if p99g is not None and p99r is not None and p99r > 0:
+        print(f"      (p99 {p99g:.1f} vs {p99r:.1f} us, informational)")
+    if ratio > tol:
+        failures.append(key)
+for key in sorted(set(bp) - set(fp)):
+    print(f"  note: baseline scale {key[0]}x{key[1]} not in fresh run; skipped")
+
+if compared == 0:
+    print("no comparable sweep points between fresh and baseline", file=sys.stderr)
+    sys.exit(2)
+if failures:
+    scales = ", ".join(f"{a}x{s}" for a, s in failures)
+    print(f"bench gate FAILED at {scales}: p50 latency regressed past "
+          f"{tol:.2f}x the baseline.", file=sys.stderr)
+    print("If the regression is intended (or the baseline is stale), refresh it:\n"
+          "  bash scripts/bench_sched.sh ci && bash scripts/check_bench.sh --update",
+          file=sys.stderr)
+    sys.exit(1)
+print("bench gate passed")
+PY

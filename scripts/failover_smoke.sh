@@ -1,0 +1,170 @@
+#!/usr/bin/env bash
+# Failover smoke test for the master HA subsystem (DESIGN.md §11):
+# start an HA primary + a standby + one slave as real processes on
+# 127.0.0.1, drive a workload through `dorm ctl`, `kill -9` the primary
+# mid-workload, and assert that
+#   * the standby promotes itself within the master lease,
+#   * the slave re-dials the candidate list and stays converged,
+#   * the post-takeover StateView matches the pre-kill view (same apps,
+#     steps, checkpoints) at epoch+1, and
+#   * a write routed to a deposed-epoch master is refused.
+# Run from the repo root after `cargo build --release`; exits non-zero on
+# any failed step.
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/dorm}
+PORT_A=${PORT_A:-46021}   # primary
+PORT_B=${PORT_B:-46022}   # standby
+PORT_C=${PORT_C:-46023}   # "deposed primary" stand-in (old epoch)
+ADDR_A=127.0.0.1:$PORT_A
+ADDR_B=127.0.0.1:$PORT_B
+ADDR_C=127.0.0.1:$PORT_C
+STORE=$(mktemp -d)        # the shared "reliable storage system"
+STORE_C=$(mktemp -d)
+LOG=$(mktemp -d)
+PRIMARY_PID=
+STANDBY_PID=
+SLAVE_PID=
+DEPOSED_PID=
+
+cleanup() {
+  for pid in "$SLAVE_PID" "$PRIMARY_PID" "$STANDBY_PID" "$DEPOSED_PID"; do
+    [ -n "$pid" ] && kill "$pid" 2>/dev/null || true
+  done
+  rm -rf "$STORE" "$STORE_C" "$LOG"
+}
+trap cleanup EXIT
+
+fail() {
+  echo "FAILOVER SMOKE FAIL: $1" >&2
+  for f in primary standby slave deposed; do
+    echo "--- $f log ---" >&2; cat "$LOG/$f.log" >&2 2>/dev/null || true
+  done
+  exit 1
+}
+
+# one control-plane request against the candidate list (ctl itself
+# re-dials candidates and fences stale epochs)
+ctl() {
+  "$BIN" ctl --connect "$ADDR_A,$ADDR_B" "$@"
+}
+
+wait_for() { # wait_for <file> <pattern> <tries> <what>
+  for _ in $(seq 1 "$3"); do
+    grep -q "$2" "$1" 2>/dev/null && return 0
+    sleep 0.1
+  done
+  fail "$4"
+}
+
+echo "== starting HA primary ($ADDR_A, 1 slave, snapshots every 4 events)"
+"$BIN" master --bind "$ADDR_A" --slaves 1 --theta1 0.5 --theta2 0.5 \
+  --store "$STORE" --ha --snapshot-every 4 >"$LOG/primary.log" 2>&1 &
+PRIMARY_PID=$!
+wait_for "$LOG/primary.log" "listening" 50 "primary never started listening"
+grep -q "epoch 1" "$LOG/primary.log" || fail "primary should serve epoch 1"
+
+echo "== starting standby ($ADDR_B, watching $ADDR_A, lease 1500 ms)"
+"$BIN" master --standby --bind "$ADDR_B" --watch "$ADDR_A" --store "$STORE" \
+  --master-lease-ms 1500 --probe-ms 150 --snapshot-every 4 \
+  >"$LOG/standby.log" 2>&1 &
+STANDBY_PID=$!
+wait_for "$LOG/standby.log" "watching" 50 "standby never started watching"
+
+echo "== starting slave agent with candidate list [$ADDR_A, $ADDR_B]"
+"$BIN" slave --connect "$ADDR_A,$ADDR_B" --index 0 --period-ms 150 \
+  >"$LOG/slave.log" 2>&1 &
+SLAVE_PID=$!
+
+echo "== drive workload: two apps, progress, a checkpoint past step 120"
+ctl submit --cpu 2 --ram 8 --nmax 4 | grep -q "submitted app1" || fail "submit app1"
+ctl submit --cpu 2 --ram 8 --nmax 2 | grep -q "submitted app2" || fail "submit app2"
+ctl advance --app 1 --steps 120 | grep -q ok || fail "advance app1"
+ctl checkpoint --app 1 | grep -q ok || fail "checkpoint app1"
+ctl advance --app 1 --steps 30 | grep -q ok || fail "advance app1 past ckpt"
+wait_for "$LOG/slave.log" "applied" 50 "slave never applied reconciliation directives"
+
+PRE=$(ctl query)
+echo "$PRE" | grep -q "epoch=1" || fail "pre-kill view should be epoch 1: $PRE"
+echo "$PRE" | grep -q "app1 Running containers=4 steps=150 ckpt=120" \
+  || fail "unexpected pre-kill app1 state: $PRE"
+echo "$PRE" | grep -q "app2 Running containers=2" \
+  || fail "unexpected pre-kill app2 state: $PRE"
+
+echo "== kill -9 the primary mid-workload"
+kill -9 "$PRIMARY_PID" || fail "could not kill primary"
+PRIMARY_PID=
+
+echo "== standby must promote within the lease"
+wait_for "$LOG/standby.log" "promoted to epoch 2" 300 \
+  "standby never promoted (lease 1500 ms)"
+
+echo "== clients re-dial: post-takeover view matches pre-kill at epoch 2"
+POST=
+for _ in $(seq 1 100); do
+  if POST=$("$BIN" ctl --connect "$ADDR_A,$ADDR_B" query 2>/dev/null); then
+    break
+  fi
+  sleep 0.1
+done
+[ -n "$POST" ] || fail "no master reachable after takeover"
+echo "$POST" | grep -q "epoch=2" || fail "post-takeover view should be epoch 2: $POST"
+echo "$POST" | grep -q "app1 Running containers=4 steps=150 ckpt=120" \
+  || fail "app1 state lost across takeover: $POST"
+echo "$POST" | grep -q "app2 Running containers=2" \
+  || fail "app2 state lost across takeover: $POST"
+
+echo "== slave re-dials the standby and keeps reconciling"
+wait_for "$LOG/slave.log" "connected to master $ADDR_B" 100 \
+  "slave never re-dialed the standby"
+# a post-takeover submit must flow through the promoted master to the
+# slave's book (complete app2 first so the new app gets fresh creates)
+ctl complete --app 2 | grep -q ok || fail "complete app2 via standby"
+ctl submit --cpu 2 --ram 8 --nmax 2 | grep -q "submitted app3" \
+  || fail "submit app3 via standby"
+for _ in $(seq 1 50); do
+  if ctl query | grep -q "app3 Running containers=2"; then break; fi
+  sleep 0.1
+done
+ctl query | grep -q "app3 Running containers=2" \
+  || fail "post-takeover submit did not run: $(ctl query)"
+
+echo "== a deposed-epoch master's writes are refused"
+"$BIN" master --bind "$ADDR_C" --slaves 1 --epoch 1 --store "$STORE_C" \
+  >"$LOG/deposed.log" 2>&1 &
+DEPOSED_PID=$!
+wait_for "$LOG/deposed.log" "listening" 50 "deposed stand-in never started"
+set +e
+DEPOSED_OUT=$("$BIN" ctl --connect "$ADDR_C" --min-epoch 2 submit --cpu 2 --ram 8 2>&1)
+DEPOSED_RC=$?
+set -e
+[ "$DEPOSED_RC" -ne 0 ] || fail "write to deposed epoch-1 master was accepted"
+echo "$DEPOSED_OUT" | grep -qi "stale epoch" \
+  || fail "expected a stale-epoch refusal, got: $DEPOSED_OUT"
+# the same fence lets the promoted master through
+"$BIN" ctl --connect "$ADDR_B" --min-epoch 2 query >/dev/null \
+  || fail "epoch-2 master wrongly fenced"
+
+echo "== shutdown: promoted master + deposed stand-in exit, slave drains"
+"$BIN" ctl --connect "$ADDR_B" shutdown | grep -q ok || fail "standby shutdown"
+"$BIN" ctl --connect "$ADDR_C" shutdown | grep -q ok || fail "deposed shutdown"
+for _ in $(seq 1 100); do
+  kill -0 "$STANDBY_PID" 2>/dev/null || break
+  sleep 0.1
+done
+if kill -0 "$STANDBY_PID" 2>/dev/null; then
+  fail "promoted master still running"
+fi
+STANDBY_PID=
+DEPOSED_PID=
+# the slave exits once every candidate stays unreachable
+for _ in $(seq 1 200); do
+  kill -0 "$SLAVE_PID" 2>/dev/null || break
+  sleep 0.1
+done
+if kill -0 "$SLAVE_PID" 2>/dev/null; then
+  fail "slave still running after masters left"
+fi
+SLAVE_PID=
+
+echo "FAILOVER SMOKE PASS: kill -9 -> promote(epoch 2) -> re-dial -> fence all clean"
