@@ -55,11 +55,13 @@ fn requests(m: &DormMaster) -> Vec<(&'static str, Request)> {
             server: 0,
             now_hours: 1.0,
             report: None,
+            acks: vec![],
         }),
         ("heartbeat + SlaveReport", Request::Heartbeat {
             server: 0,
             now_hours: 1.0,
             report: Some(report),
+            acks: vec![],
         }),
         ("query state (full view)", Request::QueryState { app: None }),
     ]

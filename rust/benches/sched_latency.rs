@@ -23,13 +23,15 @@ mod harness;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use dorm::app::AppId;
+use dorm::app::{AppId, Engine};
 use dorm::baselines::tasklevel::{dorm_local_placement_ms, TaskLevelModel};
-use dorm::config::DormConfig;
+use dorm::config::{CellsConfig, DormConfig};
 use dorm::optimizer::{Decision, OptApp};
 use dorm::report;
 use dorm::resources::Res;
-use dorm::sched::{AllocationEngine, EngineApp};
+use dorm::sched::{
+    AllocationEngine, AllocationUpdate, CellScheduler, CmsPolicy, EngineApp, SchedApp, SchedCtx,
+};
 use dorm::util::Rng;
 use dorm::workload::table2_rows;
 
@@ -289,8 +291,8 @@ fn churn_scales() -> Vec<(usize, usize, usize)> {
 }
 
 /// The tentpole measurement: old-vs-new decision path over the churn
-/// workload, per scale; optionally emitted as BENCH_sched.json.
-fn churn_sweep() {
+/// workload, per scale; returns the JSON fragments for BENCH_sched.json.
+fn churn_sweep() -> Vec<String> {
     harness::banner("incremental decision path — churn sweep (old vs new)");
     let scales = churn_scales();
     let mut rows = Vec::new();
@@ -397,19 +399,170 @@ fn churn_sweep() {
         )
     );
 
-    if let Ok(path) = std::env::var("DORM_BENCH_JSON") {
-        let json = format!(
-            "{{\n  \"bench\": \"sched_latency_churn\",\n  \"scales\": [\n{}\n  ]\n}}\n",
-            json_scales.join(",\n")
-        );
-        std::fs::write(&path, json).expect("write BENCH json");
-        println!("  wrote {path}");
+    json_scales
+}
+
+// ---- sharded scheduler: cells x apps sweep (DESIGN.md §12) --------------
+
+/// Churn app in the policy-level shape the [`CellScheduler`] consumes.
+fn cells_app(id: u64, submit: f64) -> SchedApp {
+    const SHAPES: [(f64, f64, u32); 3] =
+        [(1.0, 4.0, 24), (2.0, 8.0, 16), (3.0, 12.0, 8)];
+    let (cpu, ram, n_max) = SHAPES[(id % 3) as usize];
+    SchedApp {
+        id: AppId(id),
+        demand: Res::cpu_gpu_ram(cpu, 0.0, ram),
+        weight: 1.0,
+        n_min: 4,
+        n_max,
+        containers: 0,
+        placement: std::collections::BTreeMap::new(),
+        submit,
+        baseline_n: 8,
+        engine: Engine::MxNet,
     }
+}
+
+/// Write a policy decision back onto the app map, as the backends do.
+fn apply_update(apps: &mut BTreeMap<AppId, SchedApp>, u: &AllocationUpdate) {
+    for a in apps.values_mut() {
+        match u.assignment.get(&a.id) {
+            Some(row) => {
+                a.placement = row.clone();
+                a.containers = row.values().sum();
+            }
+            None => {
+                a.placement.clear();
+                a.containers = 0;
+            }
+        }
+    }
+}
+
+/// One sharded churn run: per-event `on_change` latency through the full
+/// route/solve/gather pipeline at `cells` cells.
+fn cells_run(cells: usize, napps: usize, nservers: usize, events: usize) -> (f64, Vec<f64>) {
+    let caps: Vec<Res> = (0..nservers)
+        .map(|_| Res::cpu_gpu_ram(16.0, 0.0, 64.0))
+        .collect();
+    let mut pol = CellScheduler::new(
+        DormConfig::DORM3,
+        CellsConfig { count: cells, rebalance_every: 4, imbalance_threshold: 1.5 },
+        nservers,
+    );
+    let mut apps: BTreeMap<AppId, SchedApp> = (0..napps as u64)
+        .map(|i| (AppId(i), cells_app(i, i as f64)))
+        .collect();
+    let mut next_id = napps as u64;
+    let mut clock = napps as f64;
+
+    let t0 = Instant::now();
+    let upd = pol.on_change(&SchedCtx { now: clock, apps: &apps, capacities: &caps });
+    let cold_us = t0.elapsed().as_secs_f64() * 1e6;
+    if let Some(u) = &upd {
+        apply_update(&mut apps, u);
+    }
+
+    let mut samples = Vec::with_capacity(events);
+    for _ in 0..events {
+        // complete the oldest running app, submit a fresh one
+        if let Some(id) = apps.iter().find(|(_, a)| a.containers > 0).map(|(&id, _)| id) {
+            apps.remove(&id);
+        }
+        clock += 1.0;
+        apps.insert(AppId(next_id), cells_app(next_id, clock));
+        next_id += 1;
+
+        let t0 = Instant::now();
+        let upd = pol.on_change(&SchedCtx { now: clock, apps: &apps, capacities: &caps });
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        if let Some(u) = &upd {
+            apply_update(&mut apps, u);
+        }
+    }
+    (cold_us, samples)
+}
+
+/// Scales for the cells sweep: (apps, servers, churn events); every scale
+/// runs at 1/2/4/8 cells on the same cluster.
+fn cells_scales() -> Vec<(usize, usize, usize)> {
+    match std::env::var("DORM_SCHED_SCALE").as_deref() {
+        Ok("ci") => vec![(96, 32, 8)],
+        _ => vec![(96, 32, 8), (240, 64, 6)],
+    }
+}
+
+/// Sharded-vs-single decide latency at equal total load; returns the
+/// JSON fragments for the "cells" array of BENCH_sched.json.
+fn cells_sweep() -> Vec<String> {
+    harness::banner("sharded scheduler — cells x apps sweep (fixed cluster)");
+    const CELL_COUNTS: [usize; 4] = [1, 2, 4, 8];
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    for &(napps, nservers, events) in &cells_scales() {
+        let mut p50_by_cells = Vec::new();
+        for &cells in &CELL_COUNTS {
+            let (cold_us, mut samples) = cells_run(cells, napps, nservers, events);
+            samples.sort_by(|a, b| a.total_cmp(b));
+            let (p50, p99) = (percentile(&samples, 0.5), percentile(&samples, 0.99));
+            p50_by_cells.push((cells, p50));
+            rows.push(vec![
+                format!("{napps}x{nservers}"),
+                format!("{cells}"),
+                format!("{:.0}", cold_us),
+                format!("{:.0}", p50),
+                format!("{:.0}", p99),
+            ]);
+            json.push(format!(
+                concat!(
+                    "    {{\"cells\": {}, \"apps\": {}, \"servers\": {}, \"events\": {},\n",
+                    "     \"cold_us\": {:.1}, \"p50_us\": {:.1}, \"p99_us\": {:.1}}}"
+                ),
+                cells, napps, nservers, events, cold_us, p50, p99,
+            ));
+            println!(
+                "  {napps}x{nservers} @ {cells} cell(s): cold {:.0} us, \
+                 p50 {:.0} us, p99 {:.0} us",
+                cold_us, p50, p99
+            );
+        }
+        // the point of sharding: at equal total load, parallel quarter-size
+        // solves must not cost more per event than the single engine (the
+        // 1.25 slack absorbs scatter/gather + thread-scope overhead on a
+        // noisy CI box; the checked-in BENCH_baseline ceilings pin the
+        // absolute numbers)
+        let p50_1 = p50_by_cells[0].1;
+        let p50_4 = p50_by_cells[2].1;
+        assert!(
+            p50_4 <= p50_1.max(50.0) * 1.25,
+            "{napps}x{nservers}: 4-cell p50 {p50_4:.0} us regresses single-cell \
+             p50 {p50_1:.0} us by more than 25%"
+        );
+    }
+    println!(
+        "{}",
+        report::table(
+            &["apps x servers", "cells", "cold (us)", "p50 (us)", "p99 (us)"],
+            &rows
+        )
+    );
+    json
 }
 
 fn main() {
     engine_resolve_bench();
-    churn_sweep();
+    let churn_json = churn_sweep();
+    let cells_json = cells_sweep();
+    if let Ok(path) = std::env::var("DORM_BENCH_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"sched_latency_churn\",\n  \"scales\": [\n{}\n  ],\n  \
+             \"cells\": [\n{}\n  ]\n}}\n",
+            churn_json.join(",\n"),
+            cells_json.join(",\n")
+        );
+        std::fs::write(&path, json).expect("write BENCH json");
+        println!("  wrote {path}");
+    }
 
     harness::banner("§II-C — task-level scheduling latency vs cluster size");
     let mut rng = Rng::new(7);

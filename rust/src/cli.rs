@@ -103,6 +103,9 @@ COMMANDS:
                --slaves N        cluster size (default 2)
                --cpu/--gpu/--ram per-slave capacity (default 12/0/64)
                --theta1/--theta2 Dorm thresholds (default 0.1/0.1)
+               --cells N         shard the scheduler into N cells solving
+                                 in parallel ([cells] config section;
+                                 default 1 = the single engine)
                --lease-ms T      lease timeout; 0 = never expire (default 0)
                --sweep-ms T      lease sweep period (default 250 when
                                  --lease-ms > 0, else off)
@@ -133,7 +136,12 @@ COMMANDS:
                                  from --config, else 127.0.0.1:4600);
                                  re-dials across a failover, refuses a
                                  deposed (stale-epoch) master's directives
-               --index J         server ordinate in the cluster (default 0)
+               --index J         preassigned server ordinate; omit it to
+                                 join via the Register RPC (the master
+                                 picks a free seat; duplicate live names
+                                 are refused with a typed error)
+               --name S          slave name (default slave<J> with
+                                 --index, slave-<pid> when registering)
                --period-ms T     heartbeat period (default:
                                  [net].heartbeat_period_ms = 500)
                --cpu/--gpu/--ram local capacity (default 12/0/64)

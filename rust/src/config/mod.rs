@@ -12,5 +12,6 @@ mod schema;
 
 pub use parse::{parse_kv_file, parse_toml, TomlDoc, Value};
 pub use schema::{
-    ClusterConfig, DormConfig, FaultConfig, HaConfig, NetConfig, ServerConfig, SimConfig,
+    CellsConfig, ClusterConfig, DormConfig, FaultConfig, HaConfig, NetConfig, ServerConfig,
+    SimConfig,
 };

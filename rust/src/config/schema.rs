@@ -216,6 +216,57 @@ impl FaultConfig {
     }
 }
 
+/// Cell-sharding knobs (`crate::sched::cells`, DESIGN.md §12): how many
+/// independently-solved cells the servers are partitioned into, and when
+/// the root router migrates apps to re-level them.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellsConfig {
+    /// Number of cells (≥ 1).  1 = the unsharded single-engine path,
+    /// bit-identical to a plain `DormPolicy` (`tests/cells.rs`).
+    pub count: usize,
+    /// Consider rebalancing every N scheduling events (≥ 1).
+    pub rebalance_every: u64,
+    /// Rebalance when max/min cell dominant-share utilization exceeds
+    /// this ratio (≥ 1.0; higher = more tolerance, less churn).
+    pub imbalance_threshold: f64,
+}
+
+impl Default for CellsConfig {
+    fn default() -> Self {
+        CellsConfig {
+            count: 1,
+            rebalance_every: 32,
+            imbalance_threshold: 1.5,
+        }
+    }
+}
+
+impl CellsConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = CellsConfig::default();
+        let c = CellsConfig {
+            count: doc.u32_or("cells", "count", d.count as u32) as usize,
+            rebalance_every: doc.u32_or("cells", "rebalance_every", d.rebalance_every as u32)
+                as u64,
+            imbalance_threshold: doc
+                .f64_or("cells", "imbalance_threshold", d.imbalance_threshold),
+        };
+        if c.count == 0 {
+            bail!("[cells].count must be >= 1");
+        }
+        if c.rebalance_every == 0 {
+            bail!("[cells].rebalance_every must be >= 1");
+        }
+        if !(c.imbalance_threshold.is_finite() && c.imbalance_threshold >= 1.0) {
+            bail!(
+                "[cells].imbalance_threshold must be a finite ratio >= 1.0, got {}",
+                c.imbalance_threshold
+            );
+        }
+        Ok(c)
+    }
+}
+
 /// Networked control-plane knobs (`crate::net`, DESIGN.md §9): where the
 /// master listens, the frame-size limit both sides enforce, and the two
 /// cadences of the live loop (slave heartbeats, master lease sweeps).
@@ -458,6 +509,33 @@ mod tests {
         assert_eq!(DormConfig::from_doc(&ok).unwrap(), DormConfig::DORM1);
         let bad = parse_toml("[dorm]\ntheta1 = 1.5\n").unwrap();
         assert!(DormConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn cells_section_parses_and_validates() {
+        let doc = parse_toml(
+            "[cells]\ncount = 4\nrebalance_every = 16\nimbalance_threshold = 2.0\n",
+        )
+        .unwrap();
+        let c = CellsConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.count, 4);
+        assert_eq!(c.rebalance_every, 16);
+        assert_eq!(c.imbalance_threshold, 2.0);
+
+        // defaults when the section is absent
+        let empty = parse_toml("").unwrap();
+        assert_eq!(CellsConfig::from_doc(&empty).unwrap(), CellsConfig::default());
+        assert_eq!(CellsConfig::default().count, 1, "unsharded by default");
+
+        // invalid values rejected
+        for bad in [
+            "[cells]\ncount = 0\n",
+            "[cells]\nrebalance_every = 0\n",
+            "[cells]\nimbalance_threshold = 0.5\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(CellsConfig::from_doc(&doc).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

@@ -60,6 +60,14 @@ impl LeaseTable {
         self.alive[server]
     }
 
+    /// The whole liveness column at once.  Sweep-style consumers (the
+    /// master's utilization/reallocation paths, the cell router's capacity
+    /// masking) index this slice directly instead of issuing one
+    /// [`LeaseTable::is_alive`] probe per server per pass.
+    pub fn alive_mask(&self) -> &[bool] {
+        &self.alive
+    }
+
     /// Latest renewal timestamp across alive servers — the table's best
     /// estimate of "now" when the caller has no clock of its own (e.g.
     /// re-anchoring a recovered server's lease so it does not instantly
@@ -142,6 +150,17 @@ mod tests {
         assert_eq!(t.latest_renewal(), 4.0);
         t.mark_alive(2, t.latest_renewal());
         assert!(t.expired(4.5).is_empty());
+    }
+
+    #[test]
+    fn alive_mask_mirrors_per_server_probes() {
+        let mut t = LeaseTable::new(4, 1.0);
+        t.mark_dead(1);
+        t.mark_dead(3);
+        assert_eq!(t.alive_mask(), &[true, false, true, false]);
+        for j in 0..t.len() {
+            assert_eq!(t.alive_mask()[j], t.is_alive(j));
+        }
     }
 
     #[test]

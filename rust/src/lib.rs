@@ -29,7 +29,7 @@
 //! | [`drf`] | dominant-resource-fairness progressive filling (ŝᵢ) |
 //! | [`solver`] | simplex LP + branch-and-bound MILP + heuristic |
 //! | [`optimizer`] | builds the paper's P2 from cluster state, solves it |
-//! | [`sched`] | shared allocation engine + policy interface (master ∩ sim), cached/warm-started re-solves |
+//! | [`sched`] | shared allocation engine + policy interface (master ∩ sim), cached/warm-started re-solves; `sched::cells` = sharded multi-cell scheduler, parallel per-cell solves behind a scatter/gather root (DESIGN.md §12) |
 //! | [`cluster`] | servers, partitions, containers; delta-aware packer + slack-indexed best fit (DESIGN.md §10) |
 //! | [`app`] | application 6-tuple, lifecycle, checkpoints |
 //! | [`master`] / [`slave`] | the Dorm control plane; `master::ha` = master self-checkpoints + WAL + epoch-fenced takeover (DESIGN.md §11) |

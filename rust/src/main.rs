@@ -257,6 +257,27 @@ fn ha_from_cli(cli: &Cli) -> Result<dorm::config::HaConfig> {
     Ok(ha)
 }
 
+/// Resolve the `[cells]` configuration (sharded scheduler, DESIGN.md
+/// §12): `--config FILE` or defaults, then the `--cells` count override.
+fn cells_from_cli(cli: &Cli) -> Result<dorm::config::CellsConfig> {
+    use dorm::config::{parse_toml, CellsConfig};
+    let mut cells = match cli.flags.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?;
+            CellsConfig::from_doc(&parse_toml(&text)?)?
+        }
+        None => CellsConfig::default(),
+    };
+    if cli.flags.contains_key("cells") {
+        cells.count = cli.u64_flag("cells", cells.count as u64)? as usize;
+        if cells.count == 0 {
+            anyhow::bail!("--cells must be >= 1");
+        }
+    }
+    Ok(cells)
+}
+
 /// Split a `--connect` value into the candidate list `FailoverTransport`
 /// walks ("addr" or "addr1,addr2,...").
 fn candidates_of(addr: &str) -> Result<Vec<String>> {
@@ -364,8 +385,20 @@ fn cmd_master(cli: &Cli) -> Result<()> {
             (m, seq)
         }
         None => {
-            let mut m =
-                DormMaster::new(&ClusterConfig::uniform(slaves, cap), dorm_cfg, store.clone());
+            let cells = cells_from_cli(cli)?;
+            let cluster = ClusterConfig::uniform(slaves, cap);
+            let mut m = if cells.count > 1 {
+                println!(
+                    "dorm master: sharded into {} cells (rebalance every {} events, \
+                     imbalance threshold {})",
+                    cells.count.min(slaves.max(1)),
+                    cells.rebalance_every,
+                    cells.imbalance_threshold
+                );
+                DormMaster::with_cells(&cluster, dorm_cfg, &cells, store.clone())
+            } else {
+                DormMaster::new(&cluster, dorm_cfg, store.clone())
+            };
             if lease_ms > 0 {
                 m = m.with_fault(&FaultConfig {
                     lease_timeout_hours: lease_ms as f64 / 3_600_000.0,
@@ -412,7 +445,6 @@ fn cmd_slave(cli: &Cli) -> Result<()> {
     use dorm::slave::DormSlave;
 
     let candidates = client_candidates(cli)?;
-    let index = cli.u64_flag("index", 0)? as u32;
     let net = net_from_cli(cli)?;
     // --period-ms overrides the [net].heartbeat_period_ms config knob
     let period = cli.u64_flag("period-ms", net.heartbeat_period_ms)?;
@@ -421,9 +453,19 @@ fn cmd_slave(cli: &Cli) -> Result<()> {
         cli.f64_flag("gpu", 0.0)?,
         cli.f64_flag("ram", 64.0)?,
     );
-    let name = cli.str_flag("name", &format!("slave{index:02}"));
     let transport = FailoverTransport::connect(candidates.clone(), &net)?;
-    let mut agent = SlaveAgent::new(DormSlave::new(name.clone(), cap), index, transport);
+    // with --index the ordinate is preassigned (the original flow, and
+    // the fallback for masters predating proto v1.2); without it the
+    // master picks a free seat via the Register RPC
+    let mut agent = if cli.flags.contains_key("index") {
+        let index = cli.u64_flag("index", 0)? as u32;
+        let name = cli.str_flag("name", &format!("slave{index:02}"));
+        SlaveAgent::new(DormSlave::new(name, cap), index, transport)
+    } else {
+        let name = cli.str_flag("name", &format!("slave-{}", std::process::id()));
+        SlaveAgent::register(DormSlave::new(name, cap), transport)?
+    };
+    let (name, index) = (agent.local().name.clone(), agent.server());
     println!(
         "dorm slave {name} (server {index}) connected via {candidates:?}, \
          beating every {period} ms"

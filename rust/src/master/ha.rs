@@ -46,13 +46,16 @@ use crate::optimizer::SolveMode;
 use crate::proto::wire::{self, Cur};
 use crate::proto::Request;
 use crate::resources::Res;
-use crate::sched::{CmsPolicy, DormPolicy};
+use crate::sched::{CellScheduler, CellsSnapshot, CmsPolicy, DormPolicy};
 use crate::slave::DormSlave;
 
 use super::{DormMaster, ManagedApp};
 
 const MAGIC: &[u8; 8] = b"DORMMSTR";
-const VERSION: u32 = 1;
+/// v2 appended the registration bits and the sharded scheduler's cell map
+/// (routing pins + partition parameters); v1 files still load, with no
+/// registrations and an unsharded policy.
+const VERSION: u32 = 2;
 
 /// How [`DormMaster::dispatch`] journals one request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -124,6 +127,12 @@ pub struct MasterCheckpoint {
     pub slaves: Vec<SlaveSnap>,
     pub apps: Vec<AppSnap>,
     pub log: Vec<RecoveryRecord>,
+    /// Which seats were claimed through the Register RPC (v2; `--index`
+    /// slaves never set their bit).  Same length as `slaves`.
+    pub registered: Vec<bool>,
+    /// The sharded scheduler's cell map, when the snapshotting master ran
+    /// one (v2).  `None` restores a plain single-engine policy.
+    pub cells: Option<CellsSnapshot>,
     /// FNV over the canonical slave-book encoding; [`restore`] recomputes
     /// it from the rebuilt books and refuses a mismatch (a serialization
     /// or rebuild bug must fail loudly, not mis-place containers).
@@ -198,6 +207,25 @@ impl MasterCheckpoint {
             }
             out.extend_from_slice(&r.resumed_scale.to_be_bytes());
         }
+        // v2: registration bits + optional cell map, ahead of the digest
+        out.extend_from_slice(&(self.registered.len() as u32).to_be_bytes());
+        for &r in &self.registered {
+            out.push(u8::from(r));
+        }
+        match &self.cells {
+            None => out.push(0),
+            Some(cs) => {
+                out.push(1);
+                out.extend_from_slice(&cs.count.to_be_bytes());
+                out.extend_from_slice(&cs.rebalance_every.to_be_bytes());
+                wire::put_f64(&mut out, cs.imbalance_threshold);
+                out.extend_from_slice(&(cs.routes.len() as u32).to_be_bytes());
+                for (app, cell) in &cs.routes {
+                    out.extend_from_slice(&app.0.to_be_bytes());
+                    out.extend_from_slice(&cell.to_be_bytes());
+                }
+            }
+        }
         out.extend_from_slice(&self.books_digest.to_be_bytes());
         let digest = fnv1a(&out);
         out.extend_from_slice(&digest.to_le_bytes());
@@ -219,7 +247,7 @@ impl MasterCheckpoint {
             bail!("bad master checkpoint magic");
         }
         let version = c.u32()?;
-        if version != VERSION {
+        if version == 0 || version > VERSION {
             bail!("unsupported master checkpoint version {version}");
         }
         let epoch = c.u64()?;
@@ -272,6 +300,30 @@ impl MasterCheckpoint {
                 resumed_scale: c.u32()?,
             });
         }
+        let (registered, cells) = if version >= 2 {
+            let n_reg = c.count(1)?;
+            let mut registered = Vec::with_capacity(n_reg);
+            for _ in 0..n_reg {
+                registered.push(c.bool()?);
+            }
+            let cells = if c.bool()? {
+                let count = c.u32()?;
+                let rebalance_every = c.u64()?;
+                let imbalance_threshold = c.f64()?;
+                let n_routes = c.count(12)?;
+                let mut routes = Vec::with_capacity(n_routes);
+                for _ in 0..n_routes {
+                    routes.push((AppId(c.u64()?), c.u32()?));
+                }
+                Some(CellsSnapshot { count, rebalance_every, imbalance_threshold, routes })
+            } else {
+                None
+            };
+            (registered, cells)
+        } else {
+            // v1 predates both the Register RPC and the sharded scheduler
+            (vec![false; n_slaves], None)
+        };
         let books_digest = c.u64()?;
         Ok(MasterCheckpoint {
             epoch,
@@ -287,6 +339,8 @@ impl MasterCheckpoint {
             slaves,
             apps,
             log,
+            registered,
+            cells,
             books_digest,
         })
     }
@@ -336,6 +390,8 @@ pub fn snapshot_state(m: &DormMaster) -> MasterCheckpoint {
             })
             .collect(),
         log: m.recovery_log.records().to_vec(),
+        registered: m.registered.clone(),
+        cells: m.policy.cells_snapshot(),
         books_digest,
     }
 }
@@ -347,11 +403,13 @@ pub fn snapshot_state(m: &DormMaster) -> MasterCheckpoint {
 /// against the snapshot's digest.
 pub fn restore(ckpt: &MasterCheckpoint, store: CheckpointStore) -> Result<DormMaster> {
     let cfg = DormConfig { theta1: ckpt.theta1, theta2: ckpt.theta2 };
-    restore_with_policy(
-        ckpt,
-        Box::new(DormPolicy::with_mode(cfg, SolveMode::Heuristic)),
-        store,
-    )
+    let policy: Box<dyn CmsPolicy> = match &ckpt.cells {
+        // the snapshotting master ran sharded: rebuild the same partition
+        // and routing pins so takeover keeps every app in its cell
+        Some(cs) => Box::new(CellScheduler::from_snapshot(cfg, cs, ckpt.slaves.len())),
+        None => Box::new(DormPolicy::with_mode(cfg, SolveMode::Heuristic)),
+    };
+    restore_with_policy(ckpt, policy, store)
 }
 
 /// [`restore`] with an explicit policy (tests, baseline-driven masters).
@@ -409,6 +467,8 @@ pub fn restore_with_policy(
     // the policy's capacity-derived caches (if it carried any) predate
     // this cluster state; both backends drop them on restore
     policy.on_capacity_change();
+    let mut registered = ckpt.registered.clone();
+    registered.resize(ckpt.slaves.len(), false);
     Ok(DormMaster {
         slaves,
         policy,
@@ -420,6 +480,9 @@ pub fn restore_with_policy(
         total_adjustments: ckpt.total_adjustments,
         total_recoveries: ckpt.total_recoveries,
         lease: LeaseTable::from_parts(ckpt.lease_timeout, renewed, alive),
+        registered,
+        directive_acks: 0,
+        directive_nacks: 0,
         recovery_log: RecoveryLog::from_records(ckpt.log.clone()),
         ckpt_retain: ckpt.ckpt_retain as usize,
         epoch: ckpt.epoch,
@@ -689,6 +752,45 @@ mod tests {
         assert_eq!(back.epoch, 1);
         assert_eq!(back.apps.len(), 2);
         assert!(back.slaves.iter().any(|s| !s.groups.is_empty()));
+    }
+
+    #[test]
+    fn cell_map_and_registrations_survive_failover() {
+        let cells = crate::config::CellsConfig {
+            count: 2,
+            rebalance_every: 8,
+            imbalance_threshold: 1.5,
+        };
+        let mut m = DormMaster::with_cells(
+            &ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+            DormConfig { theta1: 0.5, theta2: 0.5 },
+            &cells,
+            store("cellmap"),
+        );
+        m.submit(spec(4)).unwrap();
+        m.submit(spec(4)).unwrap();
+        m.submit(spec(4)).unwrap();
+        match m.dispatch(Request::Register {
+            name: "joiner".into(),
+            capacity: Res::cpu_gpu_ram(12.0, 0.0, 64.0),
+        }) {
+            crate::proto::Response::Registered { .. } => {}
+            other => panic!("register failed: {other:?}"),
+        }
+        let snap = snapshot_state(&m);
+        let cs = snap.cells.as_ref().expect("sharded master snapshots its cell map");
+        assert_eq!(cs.count, 2);
+        assert_eq!(cs.routes.len(), 3, "every live app keeps its routing pin");
+        assert_eq!(snap.registered.iter().filter(|&&r| r).count(), 1);
+        let back = MasterCheckpoint::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back, snap);
+        let mut r = restore(&snap, m.store().clone()).unwrap();
+        assert_eq!(r.state_view(None), m.state_view(None));
+        assert_eq!(r.policy.cells_snapshot().as_ref(), Some(cs), "routing pins survive");
+        // views are rebuilt by the first post-takeover scheduling event
+        r.dispatch(Request::Reallocate);
+        let views = r.cell_views().expect("restored master is still sharded");
+        assert_eq!(views.len(), 2);
     }
 
     #[test]

@@ -49,16 +49,19 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::app::{AppId, AppSpec, AppState, Checkpoint, CheckpointStore};
 use crate::cluster::ServerId;
-use crate::config::{ClusterConfig, DormConfig, FaultConfig};
+use crate::config::{CellsConfig, ClusterConfig, DormConfig, FaultConfig};
 use crate::fault::{LeaseTable, RecoveryLog};
 use crate::optimizer::SolveMode;
 use crate::proto::{
-    self, AppView, Directive, ErrorCode, ProtoError, Request, Response, StateView,
+    self, AppView, Directive, DirectiveAck, ErrorCode, ProtoError, Request, Response,
+    StateView,
 };
 use crate::ps::{Trainer, TrainerConfig};
 use crate::resources::Res;
 use crate::runtime::{ComputeHandle, Manifest};
-use crate::sched::{AllocationUpdate, CmsPolicy, DormPolicy, SchedApp, SchedCtx};
+use crate::sched::{
+    AllocationUpdate, CellScheduler, CellView, CmsPolicy, DormPolicy, SchedApp, SchedCtx,
+};
 use crate::slave::{DormSlave, SlaveReport};
 
 /// One application under management.
@@ -137,6 +140,14 @@ pub struct DormMaster {
     /// Completed failure-recovery cycles across all apps.
     pub total_recoveries: u32,
     lease: LeaseTable,
+    /// Per-seat registration bit ([`Request::Register`]).  A `--index`
+    /// slave heartbeating a preassigned ordinate never registers — the
+    /// bit only guards self-registered seats against duplicate joins.
+    registered: Vec<bool>,
+    /// Directive outcomes batch-acked on heartbeats (v1.2 telemetry).
+    pub directive_acks: u64,
+    /// Acks whose directive the slave tried and failed to apply.
+    pub directive_nacks: u64,
     recovery_log: RecoveryLog,
     /// Checkpoint retention: newest N per app (`FaultConfig::ckpt_retain`).
     ckpt_retain: usize,
@@ -168,6 +179,32 @@ impl DormMaster {
         m
     }
 
+    /// A master running the sharded scheduler (`[cells]` config,
+    /// DESIGN.md §12): the servers are partitioned into cells solved in
+    /// parallel, behind the same [`CmsPolicy`] seam.  With `count = 1`
+    /// this is decision-identical to [`Self::new`] (`tests/cells.rs`).
+    pub fn with_cells(
+        cluster: &ClusterConfig,
+        dorm: DormConfig,
+        cells: &CellsConfig,
+        store: CheckpointStore,
+    ) -> Self {
+        let n = cluster.servers.len();
+        let mut m = Self::with_policy(
+            cluster,
+            Box::new(CellScheduler::new(dorm, *cells, n)),
+            store,
+        );
+        m.dorm_cfg = dorm;
+        m
+    }
+
+    /// Per-cell observability when the policy shards the cluster
+    /// (`None` under an unsharded policy).
+    pub fn cell_views(&self) -> Option<Vec<CellView>> {
+        self.policy.cell_views()
+    }
+
     /// A master driven by an arbitrary [`CmsPolicy`] — the same objects the
     /// simulator runs (Dorm, static/Swarm, Mesos app-level, IaaS, ...).
     pub fn with_policy(
@@ -193,6 +230,9 @@ impl DormMaster {
             // leases never expire until a [fault] config opts in; failures
             // can still be forced through fail_server
             lease: LeaseTable::new(n, f64::INFINITY),
+            registered: vec![false; n],
+            directive_acks: 0,
+            directive_nacks: 0,
             recovery_log: RecoveryLog::new(),
             ckpt_retain: FaultConfig::default().ckpt_retain,
             epoch: 1,
@@ -389,7 +429,7 @@ impl DormMaster {
                     Err(e) => err(ErrorCode::Internal, e),
                 },
             },
-            Request::Heartbeat { server, now_hours, report } => {
+            Request::Heartbeat { server, now_hours, report, acks } => {
                 let Some(j) = self.known_server(server) else {
                     return err(ErrorCode::UnknownServer, format!("unknown server {server}"));
                 };
@@ -400,11 +440,13 @@ impl DormMaster {
                          (only the TCP server stamps arrival times)",
                     );
                 }
+                self.note_acks(j, &acks);
                 match self.heartbeat_report(j, now_hours, report.as_ref()) {
                     Ok((alive, directives)) => Response::HeartbeatAck { alive, directives },
                     Err(e) => err(ErrorCode::Internal, e),
                 }
             }
+            Request::Register { name, capacity } => self.register(&name, capacity),
             Request::CreateContainers { server, app, demand, count } => {
                 let Some(j) = self.known_server(server) else {
                     return err(ErrorCode::UnknownServer, format!("unknown server {server}"));
@@ -688,6 +730,103 @@ impl DormMaster {
         Ok((alive, Vec::new()))
     }
 
+    /// Count a heartbeat's batched [`DirectiveAck`]s (v1.2).  Acks are
+    /// telemetry — reconciliation already self-heals lost or failed
+    /// directives — so consuming the batch is counters plus a log line
+    /// per failure, not bookkeeping the protocol depends on.
+    fn note_acks(&mut self, server: usize, acks: &[DirectiveAck]) {
+        for a in acks {
+            if a.applied {
+                self.directive_acks += 1;
+            } else {
+                self.directive_nacks += 1;
+                log::warn!(
+                    "server {server} failed to apply {:?} directive for {}; \
+                     reconciliation will re-issue",
+                    a.kind,
+                    a.app
+                );
+            }
+        }
+    }
+
+    /// [`Request::Register`]: a slave joins by name instead of a
+    /// preassigned `--index` ordinate.
+    ///
+    /// * Name already in the book: re-join.  If that seat is registered
+    ///   *and* alive the join is refused ([`ErrorCode::AlreadyRegistered`]
+    ///   — a duplicate slave process; the live holder keeps the seat); a
+    ///   dead seat is recovered first (empty, original capacity), then a
+    ///   sane differing `capacity` is adopted as a capacity event.
+    /// * Unknown name: the first unregistered seat is renamed to the
+    ///   joiner and adopts its capacity (validated like any wire-side
+    ///   demand: right arity, finite, non-negative, non-zero).
+    /// * Every seat registered: the cluster is full
+    ///   ([`ErrorCode::InvalidState`]).
+    fn register(&mut self, name: &str, capacity: Res) -> Response {
+        if let Some(j) = self.slaves.iter().position(|s| s.name == name) {
+            if self.registered[j] && self.lease.is_alive(j) {
+                return err(
+                    ErrorCode::AlreadyRegistered,
+                    format!("{name} is already registered as server {j} and alive"),
+                );
+            }
+            // re-join: a crashed-and-restarted slave reclaims its seat
+            if !self.lease.is_alive(j) {
+                if let Err(e) = self.recover_server(j) {
+                    return err(ErrorCode::Internal, e);
+                }
+            }
+            if capacity != *self.slaves[j].capacity() {
+                if let Some(rsp) = self.check_demand(&capacity, ErrorCode::InvalidArgument) {
+                    return rsp;
+                }
+                if let Err(e) = self.slaves[j].set_capacity(capacity) {
+                    return err(ErrorCode::InvalidState, e);
+                }
+                self.clock += 1;
+                self.policy.on_capacity_change();
+                if let Err(e) = self.reallocate() {
+                    return err(ErrorCode::Internal, e);
+                }
+            }
+            self.registered[j] = true;
+            return Response::Registered { server: j as u32 };
+        }
+        let Some(j) = (0..self.slaves.len()).find(|&j| !self.registered[j]) else {
+            return err(
+                ErrorCode::InvalidState,
+                format!("cluster full: all {} seats registered", self.slaves.len()),
+            );
+        };
+        if let Some(rsp) = self.check_demand(&capacity, ErrorCode::InvalidArgument) {
+            return rsp;
+        }
+        self.slaves[j].name = name.to_string();
+        let adopt = capacity != *self.slaves[j].capacity();
+        if adopt {
+            if let Err(e) = self.slaves[j].set_capacity(capacity) {
+                return err(ErrorCode::InvalidState, e);
+            }
+        }
+        self.registered[j] = true;
+        if !self.lease.is_alive(j) {
+            if let Err(e) = self.recover_server(j) {
+                return err(ErrorCode::Internal, e);
+            }
+        } else {
+            self.lease.renew(j, self.lease.latest_renewal());
+        }
+        if adopt {
+            self.clock += 1;
+            self.policy.on_capacity_change();
+            if let Err(e) = self.reallocate() {
+                return err(ErrorCode::Internal, e);
+            }
+        }
+        Response::Registered { server: j as u32 }
+    }
+
     /// Diff the master's book for `server` against a remote slave's
     /// reported xᵢⱼ column; the directives transform the remote book
     /// into the master's.  Pure function of current state — idempotent,
@@ -932,15 +1071,16 @@ impl DormMaster {
     }
 
     /// Eq. 1 over the slaves' double-entry books (dead servers' capacity
-    /// has left the cluster).
+    /// has left the cluster).  One pass against the lease table's whole
+    /// liveness column rather than a per-server probe.
     pub fn utilization(&self) -> f64 {
         let m = self.slaves.first().map(|s| s.capacity().m()).unwrap_or(0);
         let (used, cap) = self
             .slaves
             .iter()
-            .enumerate()
-            .filter(|(j, _)| self.lease.is_alive(*j))
-            .fold((Res::zeros(m), Res::zeros(m)), |(mut u, mut c), (_, s)| {
+            .zip(self.lease.alive_mask())
+            .filter(|(_, &alive)| alive)
+            .fold((Res::zeros(m), Res::zeros(m)), |(mut u, mut c), (s, _)| {
                 u += &s.used();
                 c += s.capacity();
                 (u, c)
@@ -954,13 +1094,16 @@ impl DormMaster {
     /// the simulator's event handler.
     pub fn reallocate(&mut self) -> Result<()> {
         // a dead server contributes zero capacity but keeps its ServerId
-        // ordinate, so placements elsewhere stay stable
+        // ordinate, so placements elsewhere stay stable.  One sweep over
+        // the liveness column builds the whole vector — a lease-expiry
+        // batch that killed servers in several cells feeds every cell
+        // through this single snapshot/dispatch.
         let capacities: Vec<Res> = self
             .slaves
             .iter()
-            .enumerate()
-            .map(|(j, s)| {
-                if self.lease.is_alive(j) {
+            .zip(self.lease.alive_mask())
+            .map(|(s, &alive)| {
+                if alive {
                     s.capacity().clone()
                 } else {
                     Res::zeros(s.capacity().m())
@@ -1453,7 +1596,12 @@ mod tests {
         assert!(m.heartbeat(4, 1.0).is_err(), "only servers 0..4 exist");
         assert!(m.heartbeat_report(99, 1.0, None).is_err());
         // ... and the dispatch surface types the refusal
-        match m.dispatch(Request::Heartbeat { server: 4, now_hours: 1.0, report: None }) {
+        match m.dispatch(Request::Heartbeat {
+            server: 4,
+            now_hours: 1.0,
+            report: None,
+            acks: vec![],
+        }) {
             Response::Error(e) => assert_eq!(e.code, ErrorCode::UnknownServer),
             other => panic!("expected a typed error, got {other:?}"),
         }
@@ -1463,6 +1611,7 @@ mod tests {
             server: 0,
             now_hours: f64::NAN,
             report: None,
+            acks: vec![],
         }) {
             Response::Error(e) => assert_eq!(e.code, ErrorCode::InvalidArgument),
             other => panic!("expected a typed error, got {other:?}"),
@@ -1575,5 +1724,112 @@ mod tests {
         m.recover_server(0).unwrap();
         assert_eq!(m.app_state(a), Some(AppState::Running));
         assert!(m.containers_of(a) >= 4);
+    }
+
+    #[test]
+    fn register_seats_slaves_and_refuses_live_duplicates() {
+        let mut m = master("register");
+        let cap = Res::cpu_gpu_ram(12.0, 0.0, 64.0);
+        // a new name takes the first unregistered seat
+        let j = match m.dispatch(Request::Register {
+            name: "rack1-a".into(),
+            capacity: cap.clone(),
+        }) {
+            Response::Registered { server } => server as usize,
+            other => panic!("expected Registered, got {other:?}"),
+        };
+        assert_eq!(j, 0);
+        assert_eq!(m.slaves[0].name, "rack1-a");
+        // a second process claiming the same live name is refused
+        match m.dispatch(Request::Register { name: "rack1-a".into(), capacity: cap.clone() }) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::AlreadyRegistered),
+            other => panic!("expected AlreadyRegistered, got {other:?}"),
+        }
+        // distinct names fill distinct seats
+        match m.dispatch(Request::Register { name: "rack1-b".into(), capacity: cap.clone() }) {
+            Response::Registered { server } => assert_eq!(server, 1),
+            other => panic!("expected Registered, got {other:?}"),
+        }
+        // a dead registered seat can be reclaimed by its own name (restart)
+        m.fail_server(0).unwrap();
+        match m.dispatch(Request::Register { name: "rack1-a".into(), capacity: cap }) {
+            Response::Registered { server } => assert_eq!(server, 0),
+            other => panic!("expected rejoin, got {other:?}"),
+        }
+        assert!(m.is_server_alive(0), "rejoin recovers the dead seat");
+    }
+
+    #[test]
+    fn register_validates_capacity_and_cluster_bound() {
+        let mut m = master("register_bounds");
+        // wrong arity refused before it can poison the solver
+        match m.dispatch(Request::Register {
+            name: "bad".into(),
+            capacity: Res(vec![1.0]),
+        }) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::InvalidArgument),
+            other => panic!("expected InvalidArgument, got {other:?}"),
+        }
+        // fill all four seats, then the cluster is full
+        for i in 0..4 {
+            let rsp = m.dispatch(Request::Register {
+                name: format!("s{i}-new"),
+                capacity: Res::cpu_gpu_ram(12.0, 0.0, 64.0),
+            });
+            assert!(matches!(rsp, Response::Registered { .. }), "{rsp:?}");
+        }
+        match m.dispatch(Request::Register {
+            name: "fifth".into(),
+            capacity: Res::cpu_gpu_ram(12.0, 0.0, 64.0),
+        }) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::InvalidState),
+            other => panic!("expected InvalidState, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn heartbeat_acks_are_counted_not_depended_on() {
+        use crate::proto::AckKind;
+        let mut m = master("acks");
+        let id = m.submit(spec(2.0, 0.0, 8.0, 1, 1, 4)).unwrap();
+        let rsp = m.dispatch(Request::Heartbeat {
+            server: 0,
+            now_hours: 1.0,
+            report: None,
+            acks: vec![
+                DirectiveAck { app: id, kind: AckKind::Create, applied: true },
+                DirectiveAck { app: id, kind: AckKind::Create, applied: true },
+                DirectiveAck { app: id, kind: AckKind::Destroy, applied: false },
+            ],
+        });
+        assert!(matches!(rsp, Response::HeartbeatAck { alive: true, .. }), "{rsp:?}");
+        assert_eq!(m.directive_acks, 2);
+        assert_eq!(m.directive_nacks, 1);
+        // the nack changed nothing in the book — reconciliation heals it
+        assert_eq!(m.containers_of(id), 4);
+    }
+
+    #[test]
+    fn with_cells_masters_allocate_like_plain_masters() {
+        let cluster = ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+        let dorm = DormConfig { theta1: 0.5, theta2: 0.5 };
+        let cells = CellsConfig { count: 2, rebalance_every: 8, imbalance_threshold: 1.5 };
+        let mut sharded = DormMaster::with_cells(&cluster, dorm, &cells, store("cells_m"));
+        let mut plain = DormMaster::new(&cluster, dorm, store("cells_p"));
+        let mut ids = Vec::new();
+        // sized with slack so every app reaches n_max under either layout
+        // (at an exact-fit point per-app totals could legally differ)
+        for _ in 0..4 {
+            let s = spec(2.0, 0.0, 8.0, 1, 2, 5);
+            ids.push((sharded.submit(s.clone()).unwrap(), plain.submit(s).unwrap()));
+        }
+        for (a, b) in &ids {
+            // same totals per app (placements may differ across cells)
+            assert_eq!(sharded.containers_of(*a), plain.containers_of(*b));
+        }
+        let views = sharded.cell_views().expect("sharded master exposes cells");
+        assert_eq!(views.len(), 2);
+        assert_eq!(views.iter().map(|v| v.apps).sum::<u32>(), 4);
+        assert!(plain.cell_views().is_none(), "unsharded policy has no cells");
     }
 }

@@ -6,16 +6,20 @@
 //! reconciliation [`Directive`]s to the local book — so the remote book
 //! converges on the master's desired state even across lost acks, agent
 //! restarts, or a master that re-solved while the packet was in flight.
-//! If the master says the server is dead (leases expired while the link
-//! was down), the agent re-registers with [`Request::RecoverServer`] and
-//! rejoins empty, exactly like a repaired machine.
+//! Directive outcomes are *batched*: each beat carries the whole vector
+//! of [`DirectiveAck`]s accumulated since the last successful heartbeat
+//! (proto v1.2), so acknowledging N directives costs zero extra round
+//! trips instead of N.  If the master says the server is dead (leases
+//! expired while the link was down), the agent re-registers with
+//! [`Request::RecoverServer`] and rejoins empty, exactly like a repaired
+//! machine.
 
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::net::ControlPlane;
-use crate::proto::{Directive, Request, Response};
+use crate::proto::{AckKind, Directive, DirectiveAck, Request, Response};
 use crate::slave::DormSlave;
 
 /// What one heartbeat round did.
@@ -41,15 +45,44 @@ pub struct SlaveAgent<T: ControlPlane> {
     /// Highest master epoch this agent has ever obeyed — the fence a
     /// deposed primary's directives are checked against.
     max_epoch: u64,
+    /// Directive outcomes not yet delivered: shipped as one batch on the
+    /// next heartbeat, restored intact when the transport drops the beat.
+    pending_acks: Vec<DirectiveAck>,
 }
 
 impl<T: ControlPlane> SlaveAgent<T> {
     pub fn new(local: DormSlave, server: u32, transport: T) -> Self {
-        SlaveAgent { local, server, transport, max_epoch: 0 }
+        SlaveAgent { local, server, transport, max_epoch: 0, pending_acks: Vec::new() }
+    }
+
+    /// Join without a preassigned ordinate: the master picks a free seat
+    /// via the Register RPC (proto v1.2) and this agent heartbeats as
+    /// that server from then on.  A typed refusal (duplicate live name,
+    /// full cluster, bad capacity) propagates as `Err` — the `--index`
+    /// flag remains the manual fallback.
+    pub fn register(local: DormSlave, mut transport: T) -> Result<Self> {
+        let rsp = transport.call(Request::Register {
+            name: local.name.clone(),
+            capacity: local.capacity().clone(),
+        })?;
+        match rsp {
+            Response::Registered { server } => {
+                log::info!("slave {}: registered as server {server}", local.name);
+                Ok(SlaveAgent::new(local, server, transport))
+            }
+            Response::Error(e) => Err(anyhow::Error::new(e).context("registration rejected")),
+            other => bail!("unexpected register response: {other:?}"),
+        }
     }
 
     pub fn local(&self) -> &DormSlave {
         &self.local
+    }
+
+    /// The server ordinate this agent heartbeats as (preassigned via
+    /// `--index`, or master-chosen through [`SlaveAgent::register`]).
+    pub fn server(&self) -> u32 {
+        self.server
     }
 
     /// Highest master epoch obeyed so far (0 = none reported yet).
@@ -68,11 +101,20 @@ impl<T: ControlPlane> SlaveAgent<T> {
     /// cluster state.
     pub fn step(&mut self, now_hours: f64) -> Result<HeartbeatOutcome> {
         let report = self.local.report();
-        let rsp = self.transport.call(Request::Heartbeat {
+        let acks = std::mem::take(&mut self.pending_acks);
+        let rsp = match self.transport.call(Request::Heartbeat {
             server: self.server,
             now_hours,
             report: Some(report),
-        })?;
+            acks: acks.clone(),
+        }) {
+            Ok(rsp) => rsp,
+            Err(e) => {
+                // the batch never reached the master; carry it forward
+                self.pending_acks = acks;
+                return Err(e);
+            }
+        };
         match rsp {
             Response::HeartbeatAck { alive, directives } => {
                 let total = directives.len();
@@ -96,13 +138,25 @@ impl<T: ControlPlane> SlaveAgent<T> {
                 }
                 let mut applied = 0;
                 for d in directives {
-                    match self.apply(d) {
-                        Ok(()) => applied += 1,
-                        Err(e) => log::warn!(
-                            "slave {}: directive failed ({e:#}); reconciling next beat",
-                            self.local.name
-                        ),
-                    }
+                    let (app, kind) = match &d {
+                        Directive::Create { app, .. } => (*app, AckKind::Create),
+                        Directive::Destroy { app, .. } => (*app, AckKind::Destroy),
+                        Directive::DestroyAll { app } => (*app, AckKind::DestroyAll),
+                    };
+                    let ok = match self.apply(d) {
+                        Ok(()) => {
+                            applied += 1;
+                            true
+                        }
+                        Err(e) => {
+                            log::warn!(
+                                "slave {}: directive failed ({e:#}); reconciling next beat",
+                                self.local.name
+                            );
+                            false
+                        }
+                    };
+                    self.pending_acks.push(DirectiveAck { app, kind, applied: ok });
                 }
                 Ok(HeartbeatOutcome { alive, directives: total, applied, fenced: false })
             }
@@ -280,6 +334,50 @@ mod tests {
         assert!(out.alive);
         assert!(out.applied >= 1, "regrown placement lands on this server");
         assert!(agent.local().count_for(id) > 0);
+    }
+
+    /// Directive outcomes batch onto the *next* heartbeat — one round
+    /// trip carries them all, and the master's counters tick up.
+    #[test]
+    fn acks_batch_onto_the_next_beat() {
+        let mut m = master("acks");
+        m.submit(spec(12)).unwrap();
+        let local = DormSlave::new("slave00", Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+        let mut agent = SlaveAgent::new(local, 0, LocalTransport::new(m));
+
+        let out = agent.step(1.0).unwrap();
+        assert_eq!(out.applied, 1);
+        assert_eq!(agent.transport.master().directive_acks, 0, "ack rides the NEXT beat");
+        assert_eq!(agent.pending_acks.len(), 1);
+
+        agent.step(2.0).unwrap();
+        assert_eq!(agent.transport.master().directive_acks, 1);
+        assert_eq!(agent.transport.master().directive_nacks, 0);
+        assert!(agent.pending_acks.is_empty(), "delivered batch is dropped");
+    }
+
+    /// `register()` joins without a preassigned `--index`; heartbeats on
+    /// the assigned seat work immediately, and a duplicate live name is
+    /// a typed refusal.
+    #[test]
+    fn register_assigns_a_seat_and_refuses_live_duplicates() {
+        let m = master("register");
+        let local = DormSlave::new("joiner-a", Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+        let mut agent = SlaveAgent::register(local, LocalTransport::new(m)).unwrap();
+        assert!(agent.step(1.0).unwrap().alive);
+        let rsp = agent
+            .transport
+            .call(Request::Register {
+                name: "joiner-a".into(),
+                capacity: Res::cpu_gpu_ram(12.0, 0.0, 64.0),
+            })
+            .unwrap();
+        match rsp {
+            Response::Error(e) => {
+                assert_eq!(e.code, crate::proto::ErrorCode::AlreadyRegistered)
+            }
+            other => panic!("duplicate register must be refused, got {other:?}"),
+        }
     }
 
     /// AppId(…) placed by a stale master decision the agent never saw:

@@ -159,8 +159,8 @@ fn accept_loop(
 /// Substitute the server's wall clock for "stamp at arrival" markers.
 fn stamp(req: Request, wall_epoch: Instant) -> Request {
     match req {
-        Request::Heartbeat { server, now_hours, report } if !now_hours.is_finite() => {
-            Request::Heartbeat { server, now_hours: hours_since(wall_epoch), report }
+        Request::Heartbeat { server, now_hours, report, acks } if !now_hours.is_finite() => {
+            Request::Heartbeat { server, now_hours: hours_since(wall_epoch), report, acks }
         }
         Request::ExpireLeases { now_hours } if !now_hours.is_finite() => {
             Request::ExpireLeases { now_hours: hours_since(wall_epoch) }

@@ -43,7 +43,14 @@ pub const PROTO_MAJOR: u16 = 1;
 /// trailed by the serving master's epoch ([`wire::encode_response_ep`])
 /// and [`StateView`] carries it, which is what lets slaves and `dorm ctl`
 /// fence off a deposed primary after a standby takeover (DESIGN.md §11).
-pub const PROTO_MINOR: u16 = 1;
+/// v1.2 added slave self-registration ([`Request::Register`] /
+/// [`Response::Registered`], so a slave can join without a preassigned
+/// `--index` ordinate) and batched directive acknowledgements: a
+/// [`Request::Heartbeat`] carries the [`DirectiveAck`]s for every
+/// directive applied since the previous beat, replacing one ack
+/// round-trip per directive.  Both ride the trailing extension room of
+/// existing frames, so a v1.1 peer still decodes v1.2 traffic.
+pub const PROTO_MINOR: u16 = 2;
 
 /// Version handshake rule: same major, minor no newer than ours (a newer
 /// minor may legally send request tags we cannot decode, so it is refused
@@ -72,12 +79,22 @@ pub enum Request {
     /// Slave liveness + (optionally) its xᵢⱼ column.  `now_hours` is the
     /// sender's clock; over TCP a non-finite value means "stamp at
     /// arrival" and the server substitutes its own wall clock (a slave
-    /// must not have to agree with the master about time).
+    /// must not have to agree with the master about time).  `acks`
+    /// reports, in one batch, the fate of every directive the slave
+    /// applied since its previous beat (v1.2; empty from older peers).
     Heartbeat {
         server: u32,
         now_hours: f64,
         report: Option<SlaveReport>,
+        acks: Vec<DirectiveAck>,
     },
+    /// A slave joins by name, without a preassigned ordinate (v1.2).  The
+    /// master matches `name` against its server book (or seats the slave
+    /// at the first unregistered ordinate, adopting `capacity`) and
+    /// answers [`Response::Registered`] with the ordinate to heartbeat
+    /// as.  Re-registering a name whose seat is alive is refused with
+    /// [`ErrorCode::AlreadyRegistered`].
+    Register { name: String, capacity: Res },
     /// Admin/testing: place containers on a server's book directly.
     CreateContainers {
         server: u32,
@@ -125,6 +142,8 @@ pub enum Response {
         alive: bool,
         directives: Vec<Directive>,
     },
+    /// Registration accepted: heartbeat as this server ordinate (v1.2).
+    Registered { server: u32 },
     /// Servers newly declared dead by [`Request::ExpireLeases`].
     Expired { dead: Vec<u32> },
     /// Apps degraded by [`Request::FailServer`].
@@ -139,6 +158,27 @@ pub enum Directive {
     Create { app: AppId, demand: Res, count: u32 },
     Destroy { app: AppId, count: u32 },
     DestroyAll { app: AppId },
+}
+
+/// Which kind of [`Directive`] a [`DirectiveAck`] answers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AckKind {
+    Create,
+    Destroy,
+    DestroyAll,
+}
+
+/// One directive's outcome, batched onto the *next* heartbeat (v1.2).
+/// The protocol stays correct without acks — reconciliation re-derives
+/// any lost directive on the following beat — so acks are telemetry the
+/// master counts, not a delivery guarantee it depends on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DirectiveAck {
+    pub app: AppId,
+    pub kind: AckKind,
+    /// `false`: the slave tried and failed (e.g. local capacity check);
+    /// the master's reconcile loop will re-issue or correct course.
+    pub applied: bool,
 }
 
 /// Typed error category; the wire carries the code, `detail` is advisory.
@@ -168,6 +208,10 @@ pub enum ErrorCode {
     /// already seen: it is a deposed primary and its writes must be
     /// refused (split-brain fencing, DESIGN.md §11).
     StaleEpoch,
+    /// [`Request::Register`] for a name whose seat is already registered
+    /// and alive — almost always a duplicate slave process; the live
+    /// holder keeps its seat.
+    AlreadyRegistered,
 }
 
 impl ErrorCode {
@@ -185,6 +229,7 @@ impl ErrorCode {
             ErrorCode::InvalidArgument => 10,
             ErrorCode::Internal => 11,
             ErrorCode::StaleEpoch => 12,
+            ErrorCode::AlreadyRegistered => 13,
         }
     }
 
@@ -203,6 +248,7 @@ impl ErrorCode {
             9 => ErrorCode::InvalidState,
             10 => ErrorCode::InvalidArgument,
             12 => ErrorCode::StaleEpoch,
+            13 => ErrorCode::AlreadyRegistered,
             _ => ErrorCode::Internal,
         }
     }
@@ -293,6 +339,7 @@ mod tests {
             ErrorCode::InvalidArgument,
             ErrorCode::Internal,
             ErrorCode::StaleEpoch,
+            ErrorCode::AlreadyRegistered,
         ] {
             assert_eq!(ErrorCode::from_u16(code.as_u16()), code);
         }

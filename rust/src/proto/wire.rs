@@ -27,7 +27,8 @@ use std::io::{Read, Write};
 
 use crate::app::{AppId, AppSpec, AppState, Engine};
 use crate::proto::{
-    AppView, Directive, ErrorCode, ProtoError, Request, Response, StateView,
+    AckKind, AppView, Directive, DirectiveAck, ErrorCode, ProtoError, Request, Response,
+    StateView,
 };
 use crate::resources::Res;
 use crate::slave::SlaveReport;
@@ -327,6 +328,29 @@ fn directive(c: &mut Cur) -> Result<Directive, WireError> {
     })
 }
 
+/// Fixed-width ack element: kind byte, app id, applied byte (v1.2).
+const ACK_BYTES: usize = 10;
+
+fn put_ack(out: &mut Vec<u8>, a: &DirectiveAck) {
+    out.push(match a.kind {
+        AckKind::Create => 0,
+        AckKind::Destroy => 1,
+        AckKind::DestroyAll => 2,
+    });
+    out.extend_from_slice(&a.app.0.to_be_bytes());
+    out.push(u8::from(a.applied));
+}
+
+fn ack(c: &mut Cur) -> Result<DirectiveAck, WireError> {
+    let kind = match c.u8()? {
+        0 => AckKind::Create,
+        1 => AckKind::Destroy,
+        2 => AckKind::DestroyAll,
+        t => return Err(WireError::Malformed(format!("ack kind {t}"))),
+    };
+    Ok(DirectiveAck { kind, app: AppId(c.u64()?), applied: c.bool()? })
+}
+
 // ---- requests -----------------------------------------------------------
 
 const REQ_HELLO: u8 = 0x01;
@@ -343,6 +367,7 @@ const REQ_FAIL: u8 = 0x0b;
 const REQ_RECOVER: u8 = 0x0c;
 const REQ_QUERY: u8 = 0x0d;
 const REQ_SHUTDOWN: u8 = 0x0e;
+const REQ_REGISTER: u8 = 0x0f;
 
 pub fn encode_request(req: &Request) -> Vec<u8> {
     let mut out = Vec::with_capacity(32);
@@ -360,7 +385,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             out.push(REQ_COMPLETE);
             out.extend_from_slice(&app.0.to_be_bytes());
         }
-        Request::Heartbeat { server, now_hours, report } => {
+        Request::Heartbeat { server, now_hours, report, acks } => {
             out.push(REQ_HEARTBEAT);
             out.extend_from_slice(&server.to_be_bytes());
             put_f64(&mut out, *now_hours);
@@ -370,6 +395,12 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
                     out.push(1);
                     put_report(&mut out, r);
                 }
+            }
+            // v1.2 batched directive acks, deliberately trailing (after
+            // every v1.1 field) so an ack-less decoder still parses
+            out.extend_from_slice(&(acks.len() as u32).to_be_bytes());
+            for a in acks {
+                put_ack(&mut out, a);
             }
         }
         Request::CreateContainers { server, app, demand, count } => {
@@ -425,6 +456,11 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             }
         }
         Request::Shutdown => out.push(REQ_SHUTDOWN),
+        Request::Register { name, capacity } => {
+            out.push(REQ_REGISTER);
+            put_str(&mut out, name);
+            put_res(&mut out, capacity);
+        }
     }
     out
 }
@@ -439,7 +475,19 @@ pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
             let server = c.u32()?;
             let now_hours = c.f64()?;
             let report = if c.bool()? { Some(report(&mut c)?) } else { None };
-            Request::Heartbeat { server, now_hours, report }
+            // trailing v1.2 field: absent from a v1.1 peer's frame, in
+            // which case the batch is simply empty
+            let acks = if c.remaining() >= 4 {
+                let n = c.count(ACK_BYTES)?;
+                let mut acks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    acks.push(ack(&mut c)?);
+                }
+                acks
+            } else {
+                Vec::new()
+            };
+            Request::Heartbeat { server, now_hours, report, acks }
         }
         REQ_CREATE => Request::CreateContainers {
             server: c.u32()?,
@@ -464,6 +512,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
             Request::QueryState { app }
         }
         REQ_SHUTDOWN => Request::Shutdown,
+        REQ_REGISTER => Request::Register { name: c.str()?, capacity: c.res()? },
         t => return Err(WireError::UnknownRequestTag(t)),
     };
     Ok(req)
@@ -479,6 +528,7 @@ const RSP_EXPIRED: u8 = 0x85;
 const RSP_AFFECTED: u8 = 0x86;
 const RSP_STATE: u8 = 0x87;
 const RSP_ERROR: u8 = 0x88;
+const RSP_REGISTERED: u8 = 0x89;
 
 pub fn encode_response(rsp: &Response) -> Vec<u8> {
     let mut out = Vec::with_capacity(32);
@@ -542,6 +592,10 @@ pub fn encode_response(rsp: &Response) -> Vec<u8> {
             out.push(RSP_ERROR);
             out.extend_from_slice(&e.code.as_u16().to_be_bytes());
             put_str(&mut out, &e.detail);
+        }
+        Response::Registered { server } => {
+            out.push(RSP_REGISTERED);
+            out.extend_from_slice(&server.to_be_bytes());
         }
     }
     out
@@ -640,6 +694,7 @@ fn decode_response_cur(c: &mut Cur) -> Result<Response, WireError> {
             code: ErrorCode::from_u16(c.u16()?),
             detail: c.str()?,
         }),
+        RSP_REGISTERED => Response::Registered { server: c.u32()? },
         t => return Err(WireError::UnknownResponseTag(t)),
     };
     Ok(rsp)
@@ -669,8 +724,22 @@ mod tests {
             Request::Hello { major: 1, minor: 0 },
             Request::Submit { spec },
             Request::Complete { app: AppId(7) },
-            Request::Heartbeat { server: 3, now_hours: 2.25, report: Some(report) },
-            Request::Heartbeat { server: 0, now_hours: f64::NAN, report: None },
+            Request::Heartbeat {
+                server: 3,
+                now_hours: 2.25,
+                report: Some(report),
+                acks: vec![
+                    DirectiveAck { app: AppId(1), kind: AckKind::Create, applied: true },
+                    DirectiveAck { app: AppId(9), kind: AckKind::Destroy, applied: false },
+                    DirectiveAck { app: AppId(2), kind: AckKind::DestroyAll, applied: true },
+                ],
+            },
+            Request::Heartbeat {
+                server: 0,
+                now_hours: f64::NAN,
+                report: None,
+                acks: vec![],
+            },
             Request::CreateContainers {
                 server: 1,
                 app: AppId(4),
@@ -688,6 +757,10 @@ mod tests {
             Request::QueryState { app: None },
             Request::QueryState { app: Some(AppId(2)) },
             Request::Shutdown,
+            Request::Register {
+                name: "slave07".into(),
+                capacity: Res::cpu_gpu_ram(16.0, 2.0, 128.0),
+            },
         ]
     }
 
@@ -731,6 +804,7 @@ mod tests {
                 }],
             }),
             Response::Error(ProtoError::new(ErrorCode::UnknownApp, "app9 not found")),
+            Response::Registered { server: 7 },
         ]
     }
 
@@ -819,6 +893,25 @@ mod tests {
             let buf: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
             let _ = decode_request(&buf);
             let _ = decode_response(&buf);
+        }
+    }
+
+    /// A v1.1 peer's heartbeat has no trailing ack section; it must still
+    /// decode, with an empty batch (the same-major evolution rule the
+    /// epoch envelope uses, applied to a request).
+    #[test]
+    fn ackless_heartbeat_decodes_as_empty_batch() {
+        let mut buf = vec![REQ_HEARTBEAT];
+        buf.extend_from_slice(&3u32.to_be_bytes());
+        buf.extend_from_slice(&2.5f64.to_bits().to_be_bytes());
+        buf.push(0); // report: None — and the v1.1 frame ends here
+        match decode_request(&buf).unwrap() {
+            Request::Heartbeat { server, report, acks, .. } => {
+                assert_eq!(server, 3);
+                assert!(report.is_none());
+                assert!(acks.is_empty());
+            }
+            other => panic!("decoded {other:?}"),
         }
     }
 

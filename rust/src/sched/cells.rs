@@ -1,0 +1,687 @@
+//! Sharded multi-cell scheduling: parallel per-cell solves behind a
+//! scatter/gather root (DESIGN.md §12).
+//!
+//! One [`super::AllocationEngine`] is the scalability ceiling: every
+//! arrival/completion funnels through one sequential decide path, so
+//! aggregate cluster size is bounded by one core's solve rate.
+//! [`CellScheduler`] removes that ceiling without touching any backend:
+//!
+//! * **Partitioning** — the server ordinals `[0, n)` are split into
+//!   `count` contiguous cells; each cell owns its own engine (snapshot
+//!   cache, warm start, delta [`crate::cluster::PackState`]) and solves
+//!   only its slice of the capacity vector.
+//! * **Routing** — every app is pinned to one cell.  New arrivals go to
+//!   the cell with the lowest projected dominant-share utilization after
+//!   admitting the app's floor (`n_min` containers); ties break by a
+//!   hash of the app id (deterministic — no RNG, replay-identical); a
+//!   saturated best cell spills over to the next candidate.
+//! * **Scatter/gather** — per event, each cell's routed apps are remapped
+//!   into cell-local [`crate::cluster::ServerId`]s and solved *in
+//!   parallel on scoped worker threads*; the per-cell assignments are
+//!   shifted back and merged into one [`AllocationUpdate`], so the
+//!   master, the DES, `ctl`, and every baseline see the exact
+//!   single-view shape they always did.  A cell with no feasible
+//!   solution keeps its current in-cell allocations (the §IV-B rule,
+//!   applied per cell); only if *every* cell is infeasible does the
+//!   whole event return `None`.
+//! * **Rebalancing** — every `rebalance_every` events, if max/min cell
+//!   dominant-share utilization exceeds `imbalance_threshold`, the
+//!   cheapest-to-move apps (fewest containers) migrate from the hottest
+//!   to the coolest cell.  A migrated app is presented to its new cell
+//!   as pending (it re-enters through the normal admission path and the
+//!   existing delta-placement machinery) and is reported in `adjusted`,
+//!   so the backend checkpoint+kills it before its containers move —
+//!   rebalance can never overcommit a server, because each cell only
+//!   ever places within its own slice.
+//!
+//! `count = 1` short-circuits to the exact [`super::DormPolicy`] code
+//! path — no routing, no threads — and `tests/cells.rs` pins the
+//! allocation sequences bit-identical.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::app::checkpoint::fnv1a;
+use crate::app::AppId;
+use crate::cluster::{Assignment, ServerId};
+use crate::config::{CellsConfig, DormConfig};
+use crate::optimizer::SolveMode;
+use crate::resources::Res;
+
+use super::engine::{AllocationEngine, EngineApp, EngineStats};
+use super::policy::{AllocationUpdate, CmsPolicy, SchedApp, SchedCtx};
+
+/// One cell's observable state, refreshed on every scheduling event.
+/// `tests/cells.rs` asserts the gathered totals (capacity, usage, app
+/// counts) equal the sum of these per-cell views.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellView {
+    pub cell: usize,
+    /// Owned server ordinals: `[lo, hi)` in cluster-global numbering.
+    pub lo: usize,
+    pub hi: usize,
+    /// Aggregate capacity of the cell's (alive) servers.
+    pub capacity: Res,
+    /// Aggregate usage of the apps routed here (demand × containers).
+    pub used: Res,
+    /// Apps routed to this cell.
+    pub apps: u32,
+    /// Dominant-share utilization: max over resource types of used/cap.
+    pub dominant_share: f64,
+}
+
+/// The persistent half of a [`CellScheduler`] — what the master's HA
+/// checkpoint carries so a standby rebuilds the same routing
+/// (`crate::master::ha`).  Engine caches are deliberately absent: they
+/// re-derive on the first solve, like every other restored policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellsSnapshot {
+    pub count: u32,
+    pub rebalance_every: u64,
+    pub imbalance_threshold: f64,
+    /// `(app, cell)` routing pins, ascending by app id.
+    pub routes: Vec<(AppId, u32)>,
+}
+
+struct Cell {
+    lo: usize,
+    hi: usize,
+    engine: AllocationEngine,
+}
+
+/// The scatter/gather root: a [`CmsPolicy`] that shards the cluster into
+/// independently-(and concurrently-)solved cells.
+pub struct CellScheduler {
+    cells: Vec<Cell>,
+    /// app → cell index pin.  Routed once on arrival, moved only by
+    /// rebalancing, pruned on departure.
+    routes: BTreeMap<AppId, usize>,
+    cfg: CellsConfig,
+    /// Scheduling events seen (the rebalance cadence counter).
+    events: u64,
+    views: Vec<CellView>,
+    label: String,
+}
+
+/// Deterministic routing tiebreak: a stable per-app hash.
+fn app_hash(id: AppId) -> u64 {
+    fnv1a(&id.0.to_be_bytes())
+}
+
+impl CellScheduler {
+    /// Partition `n_servers` into `cfg.count` contiguous cells (clamped
+    /// to at most one cell per server) running the given θ thresholds.
+    pub fn new(dorm: DormConfig, cfg: CellsConfig, n_servers: usize) -> Self {
+        let count = cfg.count.max(1).min(n_servers.max(1));
+        let cells: Vec<Cell> = (0..count)
+            .map(|k| Cell {
+                lo: k * n_servers / count,
+                hi: (k + 1) * n_servers / count,
+                engine: AllocationEngine::with_mode(dorm, SolveMode::Heuristic),
+            })
+            .collect();
+        CellScheduler {
+            label: format!(
+                "cells({count}x dorm(t1={},t2={}))",
+                dorm.theta1, dorm.theta2
+            ),
+            cells,
+            routes: BTreeMap::new(),
+            cfg: CellsConfig { count, ..cfg },
+            events: 0,
+            views: Vec::new(),
+        }
+    }
+
+    /// Rebuild from a checkpointed [`CellsSnapshot`] (HA restore):
+    /// same partitioning, restored routing pins, cold engines.
+    pub fn from_snapshot(dorm: DormConfig, snap: &CellsSnapshot, n_servers: usize) -> Self {
+        let cfg = CellsConfig {
+            count: snap.count as usize,
+            rebalance_every: snap.rebalance_every,
+            imbalance_threshold: snap.imbalance_threshold,
+        };
+        let mut s = Self::new(dorm, cfg, n_servers);
+        let count = s.cells.len();
+        s.routes = snap
+            .routes
+            .iter()
+            .map(|&(id, k)| (id, (k as usize).min(count - 1)))
+            .collect();
+        s
+    }
+
+    pub fn cell_count(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Scheduling events consumed so far (one per backend `on_change` —
+    /// a whole lease sweep that kills several servers still counts 1).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// The current routing pins, ascending by app id.
+    pub fn routes(&self) -> Vec<(AppId, u32)> {
+        self.routes.iter().map(|(&id, &k)| (id, k as u32)).collect()
+    }
+
+    fn snapshot(&self) -> CellsSnapshot {
+        CellsSnapshot {
+            count: self.cells.len() as u32,
+            rebalance_every: self.cfg.rebalance_every,
+            imbalance_threshold: self.cfg.imbalance_threshold,
+            routes: self.routes(),
+        }
+    }
+
+    /// Per-cell aggregate (capacity, usage, app count) from the live
+    /// snapshot — the basis for routing, rebalancing and [`CellView`]s.
+    fn aggregates(&self, ctx: &SchedCtx) -> (Vec<Res>, Vec<Res>, Vec<u32>) {
+        let m = ctx.capacities.first().map(Res::m).unwrap_or(0);
+        let mut caps = vec![Res::zeros(m); self.cells.len()];
+        let mut used = vec![Res::zeros(m); self.cells.len()];
+        let mut napps = vec![0u32; self.cells.len()];
+        for (k, cell) in self.cells.iter().enumerate() {
+            for c in &ctx.capacities[cell.lo..cell.hi.min(ctx.capacities.len())] {
+                caps[k] += c;
+            }
+        }
+        for a in ctx.apps.values() {
+            let Some(&k) = self.routes.get(&a.id) else { continue };
+            used[k] += &a.demand.times(a.containers);
+            napps[k] += 1;
+        }
+        (caps, used, napps)
+    }
+
+    fn refresh_views(&mut self, caps: &[Res], used: &[Res], napps: &[u32]) {
+        self.views = self
+            .cells
+            .iter()
+            .enumerate()
+            .map(|(k, c)| CellView {
+                cell: k,
+                lo: c.lo,
+                hi: c.hi,
+                capacity: caps[k].clone(),
+                used: used[k].clone(),
+                apps: napps[k],
+                dominant_share: used[k].dominant_share(&caps[k]),
+            })
+            .collect();
+    }
+
+    /// Pin every unrouted app: best-fit by projected dominant share after
+    /// the app's floor, hashed-id tiebreak, spillover past saturated
+    /// cells, hashed fallback when nothing fits (the cell's engine then
+    /// defers the app exactly like a saturated single engine would).
+    fn route_new_apps(&mut self, ctx: &SchedCtx, caps: &[Res], used: &mut [Res]) {
+        let n = self.cells.len();
+        for a in ctx.apps.values() {
+            if self.routes.contains_key(&a.id) {
+                continue;
+            }
+            let floor = a.demand.times(a.n_min.max(1));
+            let h = (app_hash(a.id) % n as u64) as usize;
+            // candidate order: ascending projected share, ties rotated by
+            // the app hash so equal cells don't all collect the same apps
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&x, &y| {
+                let sx = used[x].clone().add_ref(&floor).dominant_share(&caps[x]);
+                let sy = used[y].clone().add_ref(&floor).dominant_share(&caps[y]);
+                sx.total_cmp(&sy).then(((x + n - h) % n).cmp(&((y + n - h) % n)))
+            });
+            let pick = order
+                .iter()
+                .copied()
+                .find(|&k| floor.fits_in(&caps[k].saturating_sub(&used[k])))
+                .unwrap_or(h);
+            self.routes.insert(a.id, pick);
+            // count the floor so same-event arrivals spread out
+            used[pick] += &floor;
+        }
+    }
+
+    /// Move the cheapest apps from the hottest to the coolest cell when
+    /// the dominant-share imbalance exceeds the configured ratio.
+    /// Returns the migrated apps (the backend must checkpoint+kill them:
+    /// they are appended to the gathered `adjusted` set).
+    fn rebalance(&mut self, ctx: &SchedCtx, caps: &[Res], used: &mut [Res]) -> Vec<AppId> {
+        /// Bound on migrations per rebalance tick: re-leveling is
+        /// incremental by design — each migration checkpoint+kills an
+        /// app, so a tick must not churn a whole cell at once.
+        const MAX_MOVES: usize = 4;
+        let mut migrated = Vec::new();
+        if self.cells.len() < 2 || self.events % self.cfg.rebalance_every != 0 {
+            return migrated;
+        }
+        for _ in 0..MAX_MOVES {
+            let share = |k: usize| used[k].dominant_share(&caps[k]);
+            let usable: Vec<usize> =
+                (0..self.cells.len()).filter(|&k| !caps[k].is_zero()).collect();
+            let Some(&hot) = usable.iter().max_by(|&&a, &&b| share(a).total_cmp(&share(b)))
+            else {
+                break;
+            };
+            let Some(&cool) = usable.iter().min_by(|&&a, &&b| share(a).total_cmp(&share(b)))
+            else {
+                break;
+            };
+            if hot == cool || share(hot) <= self.cfg.imbalance_threshold * share(cool).max(1e-9)
+            {
+                break;
+            }
+            // cheapest-to-move first: fewest containers, ties by id
+            let mut movable: Vec<&SchedApp> = ctx
+                .apps
+                .values()
+                .filter(|a| self.routes.get(&a.id) == Some(&hot))
+                .collect();
+            movable.sort_by(|a, b| a.containers.cmp(&b.containers).then(a.id.cmp(&b.id)));
+            let moved = movable.iter().find(|a| {
+                let floor = a.demand.times(a.n_min.max(1));
+                floor.fits_in(&caps[cool].saturating_sub(&used[cool]))
+            });
+            let Some(app) = moved else { break };
+            let floor = app.demand.times(app.n_min.max(1));
+            used[hot] = used[hot].saturating_sub(&app.demand.times(app.containers));
+            used[cool] += &floor;
+            self.routes.insert(app.id, cool);
+            migrated.push(app.id);
+        }
+        migrated
+    }
+
+    /// Remap one app into its cell's local server numbering.  An app
+    /// whose placement lies outside the cell (it just migrated) comes out
+    /// pending — it re-enters through the cell's normal admission path.
+    fn scatter_one(a: &SchedApp, lo: usize, hi: usize) -> EngineApp {
+        let placement: BTreeMap<ServerId, u32> = a
+            .placement
+            .iter()
+            .filter(|(sid, _)| sid.0 >= lo && sid.0 < hi)
+            .map(|(sid, &c)| (ServerId(sid.0 - lo), c))
+            .collect();
+        let mut local = a.clone();
+        local.containers = placement.values().sum();
+        local.placement = placement;
+        EngineApp::from_sched(&local)
+    }
+
+    /// Solve every cell over its slice — cell 0 on the calling thread,
+    /// the rest on scoped worker threads — and return the per-cell
+    /// decisions' (assignment, adjusted) pairs shifted back to global
+    /// server ids, or `None` per cell when that cell was infeasible.
+    #[allow(clippy::type_complexity)]
+    fn solve_cells(
+        &mut self,
+        inputs: &[Vec<EngineApp>],
+        capacities: &[Res],
+    ) -> Vec<Option<(Arc<Assignment>, Vec<AppId>)>> {
+        let (first, rest) = self.cells.split_first_mut().expect("at least one cell");
+        let decisions = std::thread::scope(|s| {
+            let handles: Vec<_> = rest
+                .iter_mut()
+                .zip(inputs[1..].iter())
+                .map(|(cell, apps)| {
+                    let caps = &capacities[cell.lo..cell.hi];
+                    let engine = &mut cell.engine;
+                    s.spawn(move || engine.decide(apps, caps))
+                })
+                .collect();
+            let mut out =
+                vec![first.engine.decide(&inputs[0], &capacities[first.lo..first.hi])];
+            for h in handles {
+                out.push(h.join().expect("cell solver thread panicked"));
+            }
+            out
+        });
+        decisions
+            .into_iter()
+            .map(|d| d.map(|d| (d.placement.assignment.clone(), d.adjusted.clone())))
+            .collect()
+    }
+}
+
+/// `Res + &Res` without an owned intermediate on the right — routing
+/// projects floors in a tight loop.
+trait AddRef {
+    fn add_ref(self, rhs: &Res) -> Res;
+}
+
+impl AddRef for Res {
+    fn add_ref(mut self, rhs: &Res) -> Res {
+        self += rhs;
+        self
+    }
+}
+
+impl CmsPolicy for CellScheduler {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn on_change(&mut self, ctx: &SchedCtx) -> Option<AllocationUpdate> {
+        self.events += 1;
+        self.routes.retain(|id, _| ctx.apps.contains_key(id));
+
+        if self.cells.len() == 1 {
+            // the unsharded fast path: exactly DormPolicy::on_change —
+            // no routing, no threads, pinned bit-identical by
+            // tests/cells.rs
+            for a in ctx.apps.values() {
+                self.routes.entry(a.id).or_insert(0);
+            }
+            let (caps, used, napps) = self.aggregates(ctx);
+            self.refresh_views(&caps, &used, &napps);
+            let apps: Vec<EngineApp> = ctx.apps.values().map(EngineApp::from_sched).collect();
+            let d = self.cells[0].engine.decide(&apps, ctx.capacities)?;
+            return Some(AllocationUpdate {
+                assignment: d.placement.assignment.clone(),
+                adjusted: d.adjusted.clone(),
+            });
+        }
+
+        let (caps, mut used, _) = self.aggregates(ctx);
+        self.route_new_apps(ctx, &caps, &mut used);
+        let migrated = self.rebalance(ctx, &caps, &mut used);
+
+        // scatter: per-cell app lists in cell-local server numbering
+        let mut inputs: Vec<Vec<EngineApp>> = vec![Vec::new(); self.cells.len()];
+        for a in ctx.apps.values() {
+            let k = *self.routes.get(&a.id).expect("routed above");
+            let (lo, hi) = (self.cells[k].lo, self.cells[k].hi);
+            inputs[k].push(Self::scatter_one(a, lo, hi));
+        }
+
+        let results = self.solve_cells(&inputs, ctx.capacities);
+
+        // views reflect the routing this event actually solved with
+        let (caps, used, napps) = self.aggregates(ctx);
+        self.refresh_views(&caps, &used, &napps);
+
+        if results.iter().all(Option::is_none) {
+            return None; // §IV-B: keep every current allocation
+        }
+
+        // gather: shift per-cell assignments back to global server ids;
+        // an infeasible cell keeps its apps' current *in-cell* placements
+        // (rows outside the cell belong to a migration source and must
+        // drain, or another cell would double-book the space)
+        let mut assignment = Assignment::new();
+        let mut adjusted: Vec<AppId> = Vec::new();
+        for (k, res) in results.into_iter().enumerate() {
+            let (lo, hi) = (self.cells[k].lo, self.cells[k].hi);
+            match res {
+                Some((cell_assignment, cell_adjusted)) => {
+                    for (id, row) in cell_assignment.iter() {
+                        let shifted: BTreeMap<ServerId, u32> = row
+                            .iter()
+                            .map(|(sid, &c)| (ServerId(sid.0 + lo), c))
+                            .collect();
+                        assignment.insert(*id, shifted);
+                    }
+                    adjusted.extend(cell_adjusted);
+                }
+                None => {
+                    for a in ctx.apps.values() {
+                        if self.routes.get(&a.id) != Some(&k) {
+                            continue;
+                        }
+                        let kept: BTreeMap<ServerId, u32> = a
+                            .placement
+                            .iter()
+                            .filter(|(sid, _)| sid.0 >= lo && sid.0 < hi)
+                            .map(|(sid, &c)| (*sid, c))
+                            .collect();
+                        if !kept.is_empty() {
+                            assignment.insert(a.id, kept);
+                        }
+                    }
+                }
+            }
+        }
+        for id in migrated {
+            // the backend checkpoint+kills migrated apps before their
+            // containers move cells (skipped when the whole event was
+            // infeasible above — then nothing moved)
+            if !adjusted.contains(&id) {
+                adjusted.push(id);
+            }
+        }
+        Some(AllocationUpdate { assignment: Arc::new(assignment), adjusted })
+    }
+
+    /// Capacity changed somewhere: every cell's cached solve state was
+    /// derived from a slice of the old vector — drop them all (the sweep
+    /// that killed servers across cells still costs one dispatch, one
+    /// scatter/gather round).
+    fn on_capacity_change(&mut self) {
+        for c in &mut self.cells {
+            c.engine.invalidate();
+        }
+    }
+
+    /// Aggregated over all cells.
+    fn engine_stats(&self) -> Option<EngineStats> {
+        let mut total = EngineStats::default();
+        for c in &self.cells {
+            let s = c.engine.stats();
+            total.solves += s.solves;
+            total.cache_hits += s.cache_hits;
+            total.warm_start_hits += s.warm_start_hits;
+            total.admit_prefixes_skipped += s.admit_prefixes_skipped;
+            total.delta_packs += s.delta_packs;
+            total.full_repacks += s.full_repacks;
+        }
+        Some(total)
+    }
+
+    fn cell_views(&self) -> Option<Vec<CellView>> {
+        Some(self.views.clone())
+    }
+
+    fn cells_snapshot(&self) -> Option<CellsSnapshot> {
+        Some(self.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::Engine;
+
+    fn cfg() -> DormConfig {
+        DormConfig { theta1: 0.5, theta2: 0.5 }
+    }
+
+    fn cells_cfg(count: usize) -> CellsConfig {
+        CellsConfig { count, rebalance_every: 4, imbalance_threshold: 1.2 }
+    }
+
+    fn caps(n: usize) -> Vec<Res> {
+        (0..n).map(|_| Res::cpu_gpu_ram(12.0, 0.0, 64.0)).collect()
+    }
+
+    fn app(id: u64, n_min: u32, n_max: u32) -> SchedApp {
+        SchedApp {
+            id: AppId(id),
+            demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+            weight: 1.0,
+            n_min,
+            n_max,
+            containers: 0,
+            placement: BTreeMap::new(),
+            submit: id as f64,
+            baseline_n: n_max,
+            engine: Engine::MxNet,
+        }
+    }
+
+    /// Drive one event and write the decision back into the snapshot,
+    /// the way a backend enforces an update.
+    fn drive(
+        pol: &mut CellScheduler,
+        apps: &mut BTreeMap<AppId, SchedApp>,
+        capacities: &[Res],
+        now: f64,
+    ) -> Option<AllocationUpdate> {
+        let update = {
+            let ctx = SchedCtx { now, apps, capacities };
+            pol.on_change(&ctx)
+        };
+        if let Some(u) = &update {
+            for a in apps.values_mut() {
+                let row = u.assignment.get(&a.id).cloned().unwrap_or_default();
+                a.containers = row.values().sum();
+                a.placement = row;
+            }
+        }
+        update
+    }
+
+    #[test]
+    fn partition_covers_all_servers_without_overlap() {
+        for (n, count) in [(4, 2), (10, 3), (7, 4), (3, 8), (1, 1)] {
+            let s = CellScheduler::new(cfg(), cells_cfg(count), n);
+            assert_eq!(s.cells[0].lo, 0);
+            assert_eq!(s.cells.last().unwrap().hi, n);
+            for w in s.cells.windows(2) {
+                assert_eq!(w[0].hi, w[1].lo, "contiguous, non-overlapping");
+            }
+            assert!(s.cell_count() <= n, "never more cells than servers");
+        }
+    }
+
+    #[test]
+    fn apps_spread_across_cells_and_views_total() {
+        let n = 4;
+        let mut pol = CellScheduler::new(cfg(), cells_cfg(2), n);
+        let mut apps = BTreeMap::new();
+        for id in 1..=4u64 {
+            apps.insert(AppId(id), app(id, 2, 6));
+            let u = drive(&mut pol, &mut apps, &caps(n), id as f64).expect("feasible");
+            assert!(u.assignment.values().all(|row| !row.is_empty()));
+        }
+        let views = pol.cell_views().unwrap();
+        assert_eq!(views.len(), 2);
+        assert!(views.iter().all(|v| v.apps > 0), "both cells got apps: {views:?}");
+        let apps_total: u32 = views.iter().map(|v| v.apps).sum();
+        assert_eq!(apps_total, 4);
+        let cap_total: f64 = views.iter().map(|v| v.capacity[0]).sum();
+        assert_eq!(cap_total, 12.0 * n as f64);
+        // every placement stays inside its cell's slice
+        for (id, &k) in &pol.routes {
+            let (lo, hi) = (pol.cells[k].lo, pol.cells[k].hi);
+            for sid in apps[id].placement.keys() {
+                assert!(sid.0 >= lo && sid.0 < hi, "{id} leaked out of cell {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_cell_matches_dorm_policy_exactly() {
+        use super::super::DormPolicy;
+        let n = 4;
+        let mut sharded = CellScheduler::new(cfg(), cells_cfg(1), n);
+        let mut plain = DormPolicy::with_mode(cfg(), SolveMode::Heuristic);
+        let mut a1 = BTreeMap::new();
+        let mut a2 = BTreeMap::new();
+        for id in 1..=5u64 {
+            a1.insert(AppId(id), app(id, 1, 8));
+            a2.insert(AppId(id), app(id, 1, 8));
+            let u1 = drive(&mut sharded, &mut a1, &caps(n), id as f64);
+            let u2 = {
+                let ctx = SchedCtx { now: id as f64, apps: &a2, capacities: &caps(n) };
+                plain.on_change(&ctx)
+            };
+            match (&u1, &u2) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.assignment, y.assignment, "event {id}");
+                    assert_eq!(x.adjusted, y.adjusted, "event {id}");
+                }
+                (None, None) => {}
+                other => panic!("decisions diverged at event {id}: {other:?}"),
+            }
+            if let Some(u) = &u2 {
+                for a in a2.values_mut() {
+                    let row = u.assignment.get(&a.id).cloned().unwrap_or_default();
+                    a.containers = row.values().sum();
+                    a.placement = row;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_migrates_and_reports_adjusted() {
+        let n = 4;
+        // rebalance on every event, hair-trigger threshold
+        let mut pol = CellScheduler::new(
+            cfg(),
+            CellsConfig { count: 2, rebalance_every: 1, imbalance_threshold: 1.01 },
+            n,
+        );
+        let mut apps = BTreeMap::new();
+        // pin 3 apps into cell 0 by hand to force imbalance
+        for id in 1..=3u64 {
+            apps.insert(AppId(id), app(id, 2, 4));
+            pol.routes.insert(AppId(id), 0);
+        }
+        let u = drive(&mut pol, &mut apps, &caps(n), 1.0).expect("feasible");
+        assert!(
+            pol.routes.values().any(|&k| k == 1),
+            "imbalance must trigger a migration: {:?}",
+            pol.routes
+        );
+        // whatever migrated was reported adjusted (checkpoint+kill)
+        let moved: Vec<AppId> =
+            pol.routes.iter().filter(|(_, &k)| k == 1).map(|(&id, _)| id).collect();
+        for id in &moved {
+            // a migrated app that was actually re-placed must be adjusted
+            if u.assignment.get(id).is_some_and(|r| !r.is_empty()) {
+                assert!(u.adjusted.contains(id), "{id} moved cells without adjustment");
+            }
+        }
+    }
+
+    #[test]
+    fn routes_prune_on_departure_and_snapshot_roundtrips() {
+        let n = 4;
+        let mut pol = CellScheduler::new(cfg(), cells_cfg(2), n);
+        let mut apps = BTreeMap::new();
+        for id in 1..=4u64 {
+            apps.insert(AppId(id), app(id, 1, 4));
+        }
+        drive(&mut pol, &mut apps, &caps(n), 1.0);
+        apps.remove(&AppId(2));
+        drive(&mut pol, &mut apps, &caps(n), 2.0);
+        assert!(!pol.routes.contains_key(&AppId(2)), "departed app unpinned");
+
+        let snap = pol.cells_snapshot().unwrap();
+        assert_eq!(snap.count, 2);
+        let rebuilt = CellScheduler::from_snapshot(cfg(), &snap, n);
+        assert_eq!(rebuilt.routes(), pol.routes());
+        assert_eq!(rebuilt.snapshot(), snap);
+    }
+
+    #[test]
+    fn dead_cell_defers_to_live_cells() {
+        let n = 4;
+        let mut pol = CellScheduler::new(cfg(), cells_cfg(2), n);
+        // cell 1's servers are dead (zero capacity)
+        let mut capacities = caps(n);
+        capacities[2] = Res::zeros(3);
+        capacities[3] = Res::zeros(3);
+        let mut apps = BTreeMap::new();
+        for id in 1..=3u64 {
+            apps.insert(AppId(id), app(id, 1, 4));
+            drive(&mut pol, &mut apps, &capacities, id as f64);
+        }
+        for (id, &k) in &pol.routes {
+            assert_eq!(k, 0, "{id} routed into the dead cell");
+        }
+        assert!(apps.values().all(|a| a.containers > 0), "all admitted on the live half");
+    }
+}

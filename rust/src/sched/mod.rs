@@ -25,9 +25,15 @@
 //!   [`crate::optimizer::SolveStats`] and [`EngineStats`]).
 //! * [`DormPolicy`] — the paper's system as a [`CmsPolicy`]: a thin
 //!   adapter over [`AllocationEngine`].
+//! * [`CellScheduler`] — the sharded root (DESIGN.md §12): partitions the
+//!   servers into cells, each with its own [`AllocationEngine`], solves
+//!   them in parallel on scoped threads, and scatter/gathers the per-cell
+//!   decisions back into the single-view shape both backends expect.
 
+mod cells;
 mod engine;
 mod policy;
 
+pub use cells::{CellScheduler, CellView, CellsSnapshot};
 pub use engine::{AllocationEngine, DormPolicy, EngineApp, EngineStats};
 pub use policy::{AllocationUpdate, CmsPolicy, SchedApp, SchedCtx};

@@ -8,7 +8,7 @@ use crate::app::{AppId, Engine};
 use crate::cluster::{Assignment, ServerId};
 use crate::resources::Res;
 
-use super::EngineStats;
+use super::{CellView, CellsSnapshot, EngineStats};
 
 /// One application as a policy sees it — the fields every backend (live
 /// master, DES) can provide, and everything any policy needs.
@@ -68,7 +68,11 @@ pub struct AllocationUpdate {
 /// A cluster-management policy.  Implementations decide assignments only;
 /// enforcement (container create/destroy, checkpoint/kill/resume) belongs
 /// to the backend driving the policy.
-pub trait CmsPolicy {
+///
+/// `Send` because the network server hands the master (and the boxed
+/// policy inside it) to connection threads, and the sharded
+/// [`super::CellScheduler`] solves cells on scoped worker threads.
+pub trait CmsPolicy: Send {
     fn name(&self) -> String;
 
     /// Called after every arrival and completion. `None` = keep current
@@ -109,6 +113,19 @@ pub trait CmsPolicy {
     /// packs…).  Backends surface it for observability; the stateless
     /// baselines return `None`.
     fn engine_stats(&self) -> Option<EngineStats> {
+        None
+    }
+
+    /// Per-cell observability when the policy shards the cluster
+    /// ([`super::CellScheduler`]).  Unsharded policies return `None`.
+    fn cell_views(&self) -> Option<Vec<CellView>> {
+        None
+    }
+
+    /// The persistent cell map (routing pins + partition parameters) the
+    /// master's HA checkpoint carries so a standby rebuilds the same
+    /// sharding.  Unsharded policies return `None`.
+    fn cells_snapshot(&self) -> Option<CellsSnapshot> {
         None
     }
 }

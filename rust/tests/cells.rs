@@ -1,0 +1,312 @@
+//! Sharded-scheduler invariants (DESIGN.md §12).
+//!
+//! Three guarantees pin the `sched::cells` layer to the single-engine
+//! semantics it wraps:
+//!
+//! 1. **cells = 1 parity** — a one-cell `CellScheduler` replays a
+//!    scripted fault workload (kills + recoveries mid-run) with the
+//!    *identical allocation sequence* to the plain `DormPolicy`.  The
+//!    fast path is the old code path; this test breaks if it drifts.
+//! 2. **scatter/gather totals** — for any cell count, the gathered
+//!    per-cell [`CellView`]s sum to the cluster totals (capacity, usage,
+//!    app count) a single view would report.
+//! 3. **rebalance safety** — an aggressively-rebalancing configuration
+//!    (every event, threshold 1.0) never produces a placement that
+//!    overflows any server's capacity.
+
+use std::collections::BTreeMap;
+
+use dorm::app::{AppId, AppSpec, CheckpointStore, Engine};
+use dorm::config::{CellsConfig, ClusterConfig, DormConfig, SimConfig};
+use dorm::fault::FailureEvent;
+use dorm::master::DormMaster;
+use dorm::proto::Request;
+use dorm::resources::Res;
+use dorm::sched::{AllocationUpdate, CellScheduler, CmsPolicy, DormPolicy, SchedCtx};
+use dorm::sim::{run_sim_faulty, PerfModel};
+use dorm::util::prop;
+use dorm::workload::{Table2Row, WorkloadApp};
+
+const CFG: DormConfig = DormConfig { theta1: 0.3, theta2: 0.34 };
+
+fn store(tag: &str) -> CheckpointStore {
+    let d = std::env::temp_dir().join(format!("dorm_cells_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    CheckpointStore::new(d).unwrap()
+}
+
+fn spec(cpu: f64, ram: f64, weight: u32, n_min: u32, n_max: u32) -> AppSpec {
+    AppSpec {
+        executor: Engine::MxNet,
+        demand: Res::cpu_gpu_ram(cpu, 0.0, ram),
+        weight,
+        n_max,
+        n_min,
+        cmd: ["cells".into(), "cells".into()],
+    }
+}
+
+// ---- 1. cells=1 parity on a scripted fault workload ---------------------
+
+/// Wraps a policy and records every event's decided container counts
+/// (mirrors tests/parity.rs, but forwards the capacity-change hook so the
+/// fault trace exercises cache invalidation identically on both sides).
+struct Recording {
+    inner: Box<dyn CmsPolicy>,
+    log: Vec<BTreeMap<AppId, u32>>,
+}
+
+impl CmsPolicy for Recording {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn on_change(&mut self, ctx: &SchedCtx) -> Option<AllocationUpdate> {
+        let update = self.inner.on_change(ctx);
+        let counts: BTreeMap<AppId, u32> = ctx
+            .apps
+            .values()
+            .map(|a| {
+                let c = match &update {
+                    Some(u) => u
+                        .assignment
+                        .get(&a.id)
+                        .map(|row| row.values().sum())
+                        .unwrap_or(0),
+                    None => a.containers,
+                };
+                (a.id, c)
+            })
+            .collect();
+        self.log.push(counts);
+        update
+    }
+
+    fn on_capacity_change(&mut self) {
+        self.inner.on_capacity_change();
+    }
+
+    fn admission_latency_hours(&self) -> f64 {
+        self.inner.admission_latency_hours()
+    }
+
+    fn progress_factor(&self) -> f64 {
+        self.inner.progress_factor()
+    }
+}
+
+/// Drive the scripted fault workload through `policy`, returning the
+/// per-event allocation log.
+fn fault_run(policy: Box<dyn CmsPolicy>) -> Vec<BTreeMap<AppId, u32>> {
+    let shapes = [
+        (2.0, 8.0, 1, 1, 24, 0.0, 1.0),
+        (2.0, 6.0, 2, 1, 24, 0.3, 2.0),
+        (4.0, 6.0, 1, 1, 8, 0.7, 1.5),
+        (2.0, 8.0, 1, 1, 24, 4.0, 1.0),
+    ];
+    let rows: Vec<Table2Row> = shapes
+        .iter()
+        .map(|&(cpu, ram, weight, n_min, n_max, _, dur)| Table2Row {
+            engine: Engine::MxNet,
+            dataset: "synthetic",
+            model: "cells",
+            demand: Res::cpu_gpu_ram(cpu, 0.0, ram),
+            weight,
+            n_max,
+            n_min,
+            num: 1,
+            baseline_containers: 8,
+            duration_median_hours: dur,
+        })
+        .collect();
+    let workload: Vec<WorkloadApp> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(.., submit, dur))| WorkloadApp {
+            row: i,
+            tag: format!("app{i}"),
+            submit_hours: submit,
+            duration_at_baseline_hours: dur,
+            baseline_n: 8,
+        })
+        .collect();
+    // two kill/recover pairs straddling the arrivals: capacity shrinks,
+    // apps are displaced and re-placed, then capacity returns
+    let faults = [
+        FailureEvent::kill(1.0, 1),
+        FailureEvent::recover(2.0, 1),
+        FailureEvent::kill(3.0, 3),
+        FailureEvent::recover(4.5, 3),
+    ];
+    let cluster = ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+    let sim = SimConfig { horizon_hours: 24.0, ..Default::default() };
+    let mut pol = Recording { inner: policy, log: Vec::new() };
+    let out = run_sim_faulty(
+        &mut pol,
+        &rows,
+        &workload,
+        &cluster,
+        &sim,
+        &PerfModel::default(),
+        &faults,
+    );
+    assert_eq!(out.completed, shapes.len(), "fault trace must fully drain");
+    pol.log
+}
+
+#[test]
+fn one_cell_replays_fault_workload_identically_to_single_engine() {
+    let single = fault_run(Box::new(DormPolicy::new(CFG)));
+    let one_cell = fault_run(Box::new(CellScheduler::new(
+        CFG,
+        CellsConfig { count: 1, ..CellsConfig::default() },
+        4,
+    )));
+    assert_eq!(
+        single.len(),
+        one_cell.len(),
+        "both backends must see the same event count"
+    );
+    for (ev, (a, b)) in single.iter().zip(&one_cell).enumerate() {
+        assert_eq!(a, b, "allocation diverged at event {ev}");
+    }
+}
+
+/// Multi-cell smoke on the same trace: a 2-cell scheduler must also fully
+/// drain the fault workload (allocations may differ from the single
+/// engine — only liveness is pinned here; `fault_run` asserts the drain).
+#[test]
+fn two_cells_drain_the_fault_workload() {
+    fault_run(Box::new(CellScheduler::new(
+        CFG,
+        CellsConfig { count: 2, ..CellsConfig::default() },
+        4,
+    )));
+}
+
+// ---- 2. gathered views sum to the single-view totals --------------------
+
+#[test]
+fn gathered_cell_views_total_to_cluster_state() {
+    let case = std::sync::atomic::AtomicU64::new(0);
+    prop::check(25, |rng| {
+        let tag = case.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let n_servers = rng.range_u64(2, 8) as usize;
+        let count = rng.range_u64(1, 4) as usize;
+        let cap = Res::cpu_gpu_ram(16.0, 0.0, 64.0);
+        let cells = CellsConfig {
+            count,
+            rebalance_every: rng.range_u64(1, 6),
+            imbalance_threshold: 1.0 + rng.f64(),
+        };
+        let mut m = DormMaster::with_cells(
+            &ClusterConfig::uniform(n_servers, cap.clone()),
+            CFG,
+            &cells,
+            store(&format!("views{tag}")),
+        );
+        // integer-valued demands keep the f64 totals exactly summable
+        let napps = rng.range_u64(1, 6);
+        let mut demands: BTreeMap<AppId, Res> = BTreeMap::new();
+        for _ in 0..napps {
+            let d = Res::cpu_gpu_ram(
+                rng.range_u64(1, 3) as f64,
+                0.0,
+                rng.range_u64(2, 8) as f64,
+            );
+            let id = m
+                .submit(AppSpec {
+                    executor: Engine::MxNet,
+                    demand: d.clone(),
+                    weight: rng.range_u64(1, 3) as u32,
+                    n_max: rng.range_u64(2, 8) as u32,
+                    n_min: 1,
+                    cmd: ["cells".into(), "cells".into()],
+                })
+                .map_err(|e| format!("submit refused: {e:#}"))?;
+            demands.insert(id, d);
+        }
+        // one no-op event so the views reflect the *applied* allocation
+        // (views are captured at decision time, one event behind)
+        m.dispatch(Request::Reallocate);
+        let views = m.cell_views().expect("sharded master exposes views");
+        if views.len() != count.min(n_servers) {
+            return Err(format!("{} views for {count} cells", views.len()));
+        }
+        let mut cap_total = Res::zeros(3);
+        let mut used_total = Res::zeros(3);
+        let mut apps_total = 0u32;
+        for v in &views {
+            cap_total += &v.capacity;
+            used_total += &v.used;
+            apps_total += v.apps;
+        }
+        let want_cap = cap.times(n_servers as u32);
+        if cap_total != want_cap {
+            return Err(format!("capacity {cap_total:?} != {want_cap:?}"));
+        }
+        if apps_total as u64 != napps {
+            return Err(format!("{apps_total} routed apps != {napps} submitted"));
+        }
+        let mut want_used = Res::zeros(3);
+        for (&id, d) in &demands {
+            want_used += &d.times(m.containers_of(id));
+        }
+        if used_total != want_used {
+            return Err(format!("usage {used_total:?} != {want_used:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ---- 3. rebalance never overflows a server ------------------------------
+
+#[test]
+fn aggressive_rebalance_never_violates_capacity() {
+    let case = std::sync::atomic::AtomicU64::new(0);
+    prop::check(10, |rng| {
+        let tag = case.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let n_servers = 8;
+        let cells = CellsConfig {
+            count: rng.range_u64(2, 4) as usize,
+            rebalance_every: 1,     // consider migrating on every event
+            imbalance_threshold: 1.0, // any imbalance triggers it
+        };
+        let mut m = DormMaster::with_cells(
+            &ClusterConfig::uniform(n_servers, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+            CFG,
+            &cells,
+            store(&format!("rebal{tag}")),
+        );
+        let mut live: Vec<AppId> = Vec::new();
+        for _ in 0..30 {
+            if live.is_empty() || rng.f64() < 0.7 {
+                let id = m
+                    .submit(spec(
+                        rng.range_u64(1, 3) as f64,
+                        rng.range_u64(2, 8) as f64,
+                        1,
+                        1,
+                        rng.range_u64(2, 12) as u32,
+                    ))
+                    .map_err(|e| format!("submit refused: {e:#}"))?;
+                live.push(id);
+            } else {
+                let i = rng.below(live.len() as u64) as usize;
+                let id = live.swap_remove(i);
+                m.complete(id).map_err(|e| format!("complete failed: {e:#}"))?;
+            }
+            for s in &m.slaves {
+                if !s.used().fits_in(s.capacity()) {
+                    return Err(format!(
+                        "server {} overflows: used {:?} capacity {:?}",
+                        s.name,
+                        s.used(),
+                        s.capacity()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -60,7 +60,12 @@ fn drive_trace(m: &mut DormMaster) -> Vec<AppId> {
     assert_eq!(m.dispatch(Request::AdvanceSteps { app: ids[0], steps: 30 }), Response::Ok);
     assert_eq!(m.dispatch(Request::Complete { app: ids[2] }), Response::Ok);
     for j in 0..2 {
-        let rsp = m.dispatch(Request::Heartbeat { server: j, now_hours: 1.0, report: None });
+        let rsp = m.dispatch(Request::Heartbeat {
+            server: j,
+            now_hours: 1.0,
+            report: None,
+            acks: vec![],
+        });
         assert!(matches!(rsp, Response::HeartbeatAck { .. }), "{rsp:?}");
     }
     // a barrier event: fail_server reads the store, so it snapshots

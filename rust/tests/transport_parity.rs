@@ -71,8 +71,8 @@ fn script() -> Vec<Request> {
         Request::CheckpointApp { app: AppId(1) },
         Request::AdvanceSteps { app: AppId(1), steps: 40 },
         // servers 1 and 2 report at t=2; server 0 has gone silent
-        Request::Heartbeat { server: 1, now_hours: 2.0, report: None },
-        Request::Heartbeat { server: 2, now_hours: 2.0, report: Some(empty_report(2)) },
+        Request::Heartbeat { server: 1, now_hours: 2.0, report: None, acks: vec![] },
+        Request::Heartbeat { server: 2, now_hours: 2.0, report: Some(empty_report(2)), acks: vec![] },
         Request::ExpireLeases { now_hours: 3.0 }, // kills server 0
         // capacity event: server 1 shrinks; engine caches must drop and
         // the re-solve must land identically on both transports
@@ -84,11 +84,12 @@ fn script() -> Vec<Request> {
                 available: Res::cpu_gpu_ram(10.0, 0.0, 64.0),
                 ..empty_report(1)
             }),
+            acks: vec![],
         },
         Request::RecoverServer { server: 0, now_hours: 4.0 },
         // typed errors must be value-identical end to end
         Request::Complete { app: AppId(99) },
-        Request::Heartbeat { server: 9, now_hours: 4.1, report: None },
+        Request::Heartbeat { server: 9, now_hours: 4.1, report: None, acks: vec![] },
         Request::Submit { spec: spec(2.0, 8.0, 1, 0, 4) }, // n_min 0: invalid
         Request::FailServer { server: 77 },
         Request::Complete { app: AppId(2) },

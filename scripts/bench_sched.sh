@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# Scheduler-latency smoke (DESIGN.md §10): run the sched_latency bench's
-# churn sweep — legacy vs incremental decision path over a saturated
-# cluster with a deferred backlog — and emit BENCH_sched.json (per-scale
-# p50/p99 decision latency + moved-container counts) so the perf
-# trajectory is tracked from PR 4 forward.
+# Scheduler-latency smoke (DESIGN.md §10, §12): run the sched_latency
+# bench's churn sweep — legacy vs incremental decision path over a
+# saturated cluster with a deferred backlog — plus the sharded-scheduler
+# cells x apps sweep (1/2/4/8 cells at a fixed cluster size), and emit
+# BENCH_sched.json (per-scale p50/p99 decision latency + moved-container
+# counts) so the perf trajectory is tracked from PR 4 forward.
 #
 # Usage, from the repo root:
 #   bash scripts/bench_sched.sh          # reduced CI sweep (fast)

@@ -11,11 +11,13 @@
 # Knobs: DORM_BENCH_JSON (fresh file, default ./BENCH_sched.json),
 #        DORM_BENCH_TOLERANCE (ratio, default 1.25).
 #
-# The baseline records new.p50_us per (apps, servers) scale.  p50 is the
-# gated statistic — p99 on shared CI runners is too noisy to gate on and
-# is reported for information only.  Sweep points present in only one of
-# the two files are reported and skipped, so changing the sweep scales
-# does not wedge the gate (refresh the baseline in the same PR instead).
+# The baseline records new.p50_us per (apps, servers) scale, plus p50_us
+# per (cells, apps, servers) point of the sharded-scheduler sweep.  p50
+# is the gated statistic — p99 on shared CI runners is too noisy to gate
+# on and is reported for information only.  Sweep points present in only
+# one of the two files are reported and skipped, so changing the sweep
+# scales does not wedge the gate (refresh the baseline in the same PR
+# instead).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -63,6 +65,28 @@ for key in sorted(fp):
         failures.append(key)
 for key in sorted(set(bp) - set(fp)):
     print(f"  note: baseline scale {key[0]}x{key[1]} not in fresh run; skipped")
+
+def cell_points(doc):
+    return {(s["cells"], s["apps"], s["servers"]): s for s in doc.get("cells", [])}
+
+fc, bc = cell_points(fresh), cell_points(base)
+for key in sorted(fc):
+    cells, apps, servers = key
+    label = f"{apps}x{servers}@{cells}c"
+    if key not in bc:
+        print(f"  note: cells point {label} has no baseline; skipped")
+        continue
+    compared += 1
+    got = fc[key]["p50_us"]
+    ref = bc[key]["p50_us"]
+    ratio = got / ref if ref > 0 else float("inf")
+    verdict = "OK" if ratio <= tol else "REGRESSION"
+    print(f"  {label}: p50 {got:.1f} us vs baseline {ref:.1f} us "
+          f"({ratio:.2f}x, tolerance {tol:.2f}x) {verdict}")
+    if ratio > tol:
+        failures.append((f"{apps}@{cells}c", servers))
+for key in sorted(set(bc) - set(fc)):
+    print(f"  note: baseline cells point {key[1]}x{key[2]}@{key[0]}c not in fresh run; skipped")
 
 if compared == 0:
     print("no comparable sweep points between fresh and baseline", file=sys.stderr)
