@@ -1,0 +1,212 @@
+//! Trace-replay throughput (DESIGN.md §13): how fast recorded arrivals
+//! move through the two replay paths.
+//!
+//! * **DES streaming throughput** — closed-loop replay of a generated
+//!   trace through the simulator behind the bounded [`TraceSource`]
+//!   buffer; reports arrivals/sec of wall time and the buffer high-water
+//!   mark (the O(buffer) guarantee, asserted here too).
+//! * **Live rate sweep** — the `dorm replay --mode sweep` measurement:
+//!   offered arrivals/sec ramped against a fresh in-process master until
+//!   admission saturates, reporting scaling efficiency and per-phase
+//!   submit latency percentiles.
+//!
+//! Set `DORM_SCHED_SCALE=ci` for the reduced sweep and
+//! `DORM_BENCH_JSON=<path>` to splice a `"replay"` series into
+//! `BENCH_sched.json` (`scripts/bench_sched.sh` wires both; the
+//! `sched_latency` bench runs first and writes the file whole, this bench
+//! re-reads it and replaces only its own series).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use anyhow::Result;
+use dorm::app::{CheckpointStore, Engine};
+use dorm::baselines::StaticPolicy;
+use dorm::config::{ClusterConfig, DormConfig, SimConfig};
+use dorm::master::DormMaster;
+use dorm::net::{ControlPlane, LocalTransport};
+use dorm::report;
+use dorm::resources::Res;
+use dorm::sim::PerfModel;
+use dorm::workload::trace::{rate_sweep, replay_des, RatePoint, ReplayOpts, TraceRecord};
+
+fn ci_scale() -> bool {
+    matches!(std::env::var("DORM_SCHED_SCALE").as_deref(), Ok("ci"))
+}
+
+/// Uniform tiny jobs: replay throughput is about the event loop and the
+/// control plane, not about how long the recorded jobs trained for.
+fn flat_records(n: usize) -> Vec<TraceRecord> {
+    (0..n)
+        .map(|i| TraceRecord {
+            submit_hours: 0.0,
+            tag: format!("j{i}"),
+            engine: Engine::MxNet,
+            demand: Res::cpu_gpu_ram(1.0, 0.0, 1.0),
+            weight: 1.0,
+            n_min: 1,
+            n_max: 1,
+            baseline_n: 1,
+            duration_hours: 0.001,
+            priority: None,
+            user: None,
+        })
+        .collect()
+}
+
+fn des_throughput() -> f64 {
+    harness::banner("DES streaming throughput — closed-loop replay");
+    let n: usize = if ci_scale() { 20_000 } else { 100_000 };
+    let rate_per_hour = 50_000.0;
+    let cluster = ClusterConfig::uniform(4, Res::cpu_gpu_ram(16.0, 0.0, 64.0));
+    let sim = SimConfig {
+        horizon_hours: n as f64 / rate_per_hour + 1.0,
+        sample_period_min: 60.0,
+        ..Default::default()
+    };
+    let mut pol = StaticPolicy::new();
+    let buffer = 256;
+    let t0 = Instant::now();
+    let rep = replay_des(
+        &mut pol,
+        flat_records(n).into_iter().map(Ok),
+        ReplayOpts { buffer, rate_per_hour, ..Default::default() },
+        &cluster,
+        &sim,
+        &PerfModel::default(),
+    )
+    .expect("clean generated trace");
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.records_read, n as u64);
+    assert!(rep.max_buffered <= buffer, "O(buffer) guarantee: {}", rep.max_buffered);
+    let per_sec = n as f64 / wall.max(1e-9);
+    println!(
+        "  {n} arrivals in {wall:.2} s -> {per_sec:.0} arrivals/s \
+         (buffer high-water {} of {buffer}, {} completed)",
+        rep.max_buffered, rep.outcome.completed
+    );
+    per_sec
+}
+
+fn bench_store(tag: &str) -> CheckpointStore {
+    let d = std::env::temp_dir().join(format!("dorm_replay_bench_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    CheckpointStore::new(d).expect("temp checkpoint store")
+}
+
+fn live_sweep() -> Vec<RatePoint> {
+    harness::banner("live rate sweep — offered arrivals/sec vs admission");
+    let (rates, per_rate): (Vec<f64>, usize) = if ci_scale() {
+        (vec![200.0, 1_000.0, 5_000.0], 60)
+    } else {
+        (vec![100.0, 400.0, 1_600.0, 6_400.0, 25_600.0], 200)
+    };
+    let cluster = ClusterConfig::uniform(8, Res::cpu_gpu_ram(16.0, 0.0, 64.0));
+    let mut n = 0usize;
+    let mut mk = || -> Result<Box<dyn ControlPlane>> {
+        n += 1;
+        let store = bench_store(&format!("r{n}"));
+        Ok(Box::new(LocalTransport::new(DormMaster::new(
+            &cluster,
+            DormConfig::DORM3,
+            store,
+        ))))
+    };
+    let pool = flat_records(per_rate);
+    let mut recs = |_rate: f64| pool.clone();
+    let points = rate_sweep(&mut mk, &mut recs, &rates, 16, 0.0).expect("sweep");
+
+    let mut rows = Vec::new();
+    for p in &points {
+        assert!(p.efficiency > 0.0 && p.efficiency <= 1.0, "{p:?}");
+        assert!(p.p99_submit_us >= p.p50_submit_us, "{p:?}");
+        rows.push(vec![
+            format!("{:.0}", p.offered_per_sec),
+            format!("{:.0}", p.achieved_per_sec),
+            format!("{:.2}", p.efficiency),
+            format!("{:.0}", p.p50_submit_us),
+            format!("{:.0}", p.p99_submit_us),
+            p.rejected.to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["offered/s", "achieved/s", "efficiency", "p50 submit (us)", "p99", "rejected"],
+            &rows
+        )
+    );
+    // the lowest offered rate must be comfortably sustainable on any box
+    assert!(
+        points[0].efficiency > 0.3,
+        "master cannot keep up with {} arrivals/s: {:?}",
+        points[0].offered_per_sec,
+        points[0]
+    );
+    let knee = points.iter().find(|p| p.efficiency < 0.9);
+    match knee {
+        Some(p) => println!("  admission knee: efficiency {:.2} at {:.0}/s", p.efficiency, p.offered_per_sec),
+        None => println!("  no saturation up to {:.0}/s", points.last().unwrap().offered_per_sec),
+    }
+    points
+}
+
+/// Splice the `"replay"` series into the `BENCH_sched.json` the
+/// `sched_latency` bench already wrote (or start a fresh document).
+fn write_json(path: &str, des_per_sec: f64, points: &[RatePoint]) {
+    let mut text = std::fs::read_to_string(path)
+        .unwrap_or_else(|_| "{\n  \"bench\": \"sched_latency_churn\"\n}\n".to_string());
+    if let Some(i) = text.find(",\n  \"replay\"") {
+        // a previous replay splice: drop it and close the object again
+        text.truncate(i);
+        text.push_str("\n}\n");
+    }
+    let end = match text.rfind('}') {
+        Some(e) => e,
+        None => {
+            eprintln!("  {path} is not a JSON object; skipping splice");
+            return;
+        }
+    };
+    let mut out = text[..end].trim_end().to_string();
+    let frags: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                concat!(
+                    "    {{\"rate_per_sec\": {:.1}, \"achieved_per_sec\": {:.1}, ",
+                    "\"efficiency\": {:.3}, \"p50_submit_us\": {:.1}, ",
+                    "\"p99_submit_us\": {:.1}, \"rejected\": {}}}"
+                ),
+                p.offered_per_sec,
+                p.achieved_per_sec,
+                p.efficiency,
+                p.p50_submit_us,
+                p.p99_submit_us,
+                p.rejected
+            )
+        })
+        .collect();
+    out.push_str(&format!(
+        ",\n  \"replay\": {{\n    \"des_arrivals_per_sec\": {:.1},\n    \"rates\": [\n{}\n    ]\n  }}\n}}\n",
+        des_per_sec,
+        frags.join(",\n")
+    ));
+    std::fs::write(path, out).expect("write BENCH json");
+    println!("  spliced replay series into {path}");
+}
+
+fn main() {
+    let des_per_sec = des_throughput();
+    let points = live_sweep();
+    if let Ok(path) = std::env::var("DORM_BENCH_JSON") {
+        write_json(&path, des_per_sec, &points);
+    }
+    harness::paper_row(
+        "trace replay (streaming, O(buffer) memory)",
+        "n/a (new in this repo)",
+        &format!("{des_per_sec:.0} DES arrivals/s"),
+    );
+}

@@ -90,6 +90,33 @@ COMMANDS:
                --master-fail H   kill the CMS master at hour H (0 = never)
                --takeover H      standby takeover latency in hours (default 0.05)
                --csv             also write reports/churn_<system>.csv
+  replay     stream a job-arrival trace through the DES or a live master
+             (DESIGN.md §13; never materializes the trace)
+               --trace FILE      trace CSV (dorm / alibaba-like / borg-like
+                                 layout, detected from the header); or
+               --gen N           synthesize an N-arrival trace instead
+               --seed N          seed for --gen (default 17)
+               --mode M          des | live | sweep (default des)
+               --buffer N        streaming look-ahead, records (default 4096)
+               --time-scale X    open-loop timestamp multiplier (default 1)
+               --rate R          closed-loop arrivals per simulated hour
+                                 (0 = open loop; default 0)
+               --horizon H       DES horizon hours (default 24)
+               --slaves N        DES/live cluster size (default 20)
+               --cpu/--gpu/--ram per-slave capacity (default 12/0.25/128)
+               --connect LIST    live/sweep: TCP master candidates; omit to
+                                 run against an in-process master
+               --window N        live in-flight window (default 64)
+               --ms-per-hour T   live wall pacing, ms per replayed hour
+                                 (default 0 = as fast as admitted)
+               --max-apps N      live: stop after N submissions (0 = all)
+               --rates LIST      sweep: offered arrivals/sec, comma-
+                                 separated (default 50,100,200,400,800)
+               --apps-per-rate N sweep: submissions per rate (default 200)
+               --export FILE     write the (generated) trace as CSV and exit
+               --csv             write reports/replay_*.csv series
+               --config FILE     TOML file; [trace] section sets the
+                                 defaults for the flags above
   fig1       print the Fig. 1 duration-CDF model
   train      train a model through the full Dorm stack (needs artifacts/)
                --model NAME      lr | mf | tfm | tfm_e2e (default lr)

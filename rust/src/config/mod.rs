@@ -13,5 +13,5 @@ mod schema;
 pub use parse::{parse_kv_file, parse_toml, TomlDoc, Value};
 pub use schema::{
     CellsConfig, ClusterConfig, DormConfig, FaultConfig, HaConfig, NetConfig, ServerConfig,
-    SimConfig,
+    SimConfig, TraceConfig,
 };

@@ -471,6 +471,87 @@ impl SimConfig {
     }
 }
 
+/// `[trace]` — trace replay (`dorm replay`, DESIGN.md §13).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// Bounded look-ahead of the streaming replay driver, records.
+    pub buffer: usize,
+    /// Open-loop timestamp multiplier (0.5 = replay 2× faster).
+    pub time_scale: f64,
+    /// Closed-loop sustained arrival rate per simulated hour
+    /// (0 = open loop, use recorded timestamps).
+    pub rate_per_hour: f64,
+    /// Clamp on widths taken from trace instance-count columns.
+    pub max_width: u32,
+    /// Width used when a foreign schema has no instance-count column.
+    pub default_width: u32,
+    /// Live replay wall-clock pacing, milliseconds of real time per
+    /// replayed hour (0 = as fast as the master admits).
+    pub ms_per_hour: f64,
+    /// Live replay in-flight window: past this many active apps the
+    /// oldest is completed before the next submit.
+    pub window: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            buffer: 4096,
+            time_scale: 1.0,
+            rate_per_hour: 0.0,
+            max_width: 32,
+            default_width: 8,
+            ms_per_hour: 0.0,
+            window: 64,
+        }
+    }
+}
+
+impl TraceConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = TraceConfig::default();
+        let c = TraceConfig {
+            buffer: doc.u32_or("trace", "buffer", d.buffer as u32) as usize,
+            time_scale: doc.f64_or("trace", "time_scale", d.time_scale),
+            rate_per_hour: doc.f64_or("trace", "rate_per_hour", d.rate_per_hour),
+            max_width: doc.u32_or("trace", "max_width", d.max_width),
+            default_width: doc.u32_or("trace", "default_width", d.default_width),
+            ms_per_hour: doc.f64_or("trace", "ms_per_hour", d.ms_per_hour),
+            window: doc.u32_or("trace", "window", d.window as u32) as usize,
+        };
+        if c.buffer == 0 {
+            bail!("[trace].buffer must be >= 1");
+        }
+        if !(c.time_scale > 0.0 && c.time_scale.is_finite()) {
+            bail!("[trace].time_scale must be finite and > 0");
+        }
+        if !(c.rate_per_hour >= 0.0 && c.rate_per_hour.is_finite()) {
+            bail!("[trace].rate_per_hour must be finite and >= 0");
+        }
+        if c.max_width == 0 || c.default_width == 0 {
+            bail!("[trace].max_width and default_width must be >= 1");
+        }
+        if c.default_width > c.max_width {
+            bail!("[trace].default_width must not exceed max_width");
+        }
+        if !(c.ms_per_hour >= 0.0 && c.ms_per_hour.is_finite()) {
+            bail!("[trace].ms_per_hour must be finite and >= 0");
+        }
+        if c.window == 0 {
+            bail!("[trace].window must be >= 1");
+        }
+        Ok(c)
+    }
+
+    /// The schema-layer view of these knobs.
+    pub fn schema_defaults(&self) -> crate::workload::trace::SchemaDefaults {
+        crate::workload::trace::SchemaDefaults {
+            max_width: self.max_width,
+            default_width: self.default_width,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -509,6 +590,39 @@ mod tests {
         assert_eq!(DormConfig::from_doc(&ok).unwrap(), DormConfig::DORM1);
         let bad = parse_toml("[dorm]\ntheta1 = 1.5\n").unwrap();
         assert!(DormConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn trace_section_parses_and_validates() {
+        let doc = parse_toml(
+            "[trace]\nbuffer = 512\ntime_scale = 0.5\nrate_per_hour = 1000\n\
+             max_width = 16\nwindow = 32\n",
+        )
+        .unwrap();
+        let c = TraceConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.buffer, 512);
+        assert_eq!(c.time_scale, 0.5);
+        assert_eq!(c.rate_per_hour, 1000.0);
+        assert_eq!(c.max_width, 16);
+        assert_eq!(c.window, 32);
+        assert_eq!(c.schema_defaults().max_width, 16);
+
+        // defaults when the section is absent
+        let empty = parse_toml("").unwrap();
+        assert_eq!(TraceConfig::from_doc(&empty).unwrap(), TraceConfig::default());
+
+        // invalid values rejected
+        for bad in [
+            "[trace]\nbuffer = 0\n",
+            "[trace]\ntime_scale = 0\n",
+            "[trace]\nrate_per_hour = -5\n",
+            "[trace]\nmax_width = 0\n",
+            "[trace]\ndefault_width = 64\nmax_width = 32\n",
+            "[trace]\nwindow = 0\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(TraceConfig::from_doc(&doc).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@
 //! | [`ps`] | BSP parameter-server runtime (the "MxNet" stand-in) |
 //! | [`runtime`] | PJRT executor service for `artifacts/*.hlo.txt` |
 //! | [`sim`] | discrete-event simulator (Figs 6–9) |
-//! | [`workload`] | Table II + Fig 1 workload models |
+//! | [`workload`] | Table II + Fig 1 workload models; `workload::trace` streams recorded traces through the DES and the live master (DESIGN.md §13) |
 //! | [`baselines`] | static (Swarm) and two-level (Mesos) comparators |
 //! | [`metrics`] | utilization / fairness-loss / adjustment time series |
 //! | [`config`] | TOML-subset config system (no serde in this image) |

@@ -30,6 +30,7 @@ fn main() {
     };
     let result = match cli.command.as_str() {
         "simulate" => cmd_simulate(&cli),
+        "replay" => cmd_replay(&cli),
         "churn" => cmd_churn(&cli),
         "fig1" => cmd_fig1(),
         "train" => cmd_train(&cli),
@@ -81,6 +82,294 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
             fairness_reduction(d, baseline, horizon),
             mean_speedup(d, baseline),
         );
+    }
+    Ok(())
+}
+
+/// Resolve the `[trace]` configuration (trace replay, DESIGN.md §13):
+/// `--config FILE` or defaults, then the flag overrides.
+fn trace_from_cli(cli: &Cli) -> Result<dorm::config::TraceConfig> {
+    use dorm::config::{parse_toml, TraceConfig};
+    let mut tc = match cli.flags.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?;
+            TraceConfig::from_doc(&parse_toml(&text)?)?
+        }
+        None => TraceConfig::default(),
+    };
+    if cli.flags.contains_key("buffer") {
+        tc.buffer = cli.u64_flag("buffer", tc.buffer as u64)? as usize;
+        if tc.buffer == 0 {
+            anyhow::bail!("--buffer must be >= 1");
+        }
+    }
+    if cli.flags.contains_key("time-scale") {
+        tc.time_scale = cli.f64_flag("time-scale", tc.time_scale)?;
+        if !(tc.time_scale > 0.0 && tc.time_scale.is_finite()) {
+            anyhow::bail!("--time-scale must be finite and > 0");
+        }
+    }
+    if cli.flags.contains_key("rate") {
+        tc.rate_per_hour = cli.f64_flag("rate", tc.rate_per_hour)?;
+        if !(tc.rate_per_hour >= 0.0 && tc.rate_per_hour.is_finite()) {
+            anyhow::bail!("--rate must be finite and >= 0");
+        }
+    }
+    if cli.flags.contains_key("window") {
+        tc.window = cli.u64_flag("window", tc.window as u64)? as usize;
+        if tc.window == 0 {
+            anyhow::bail!("--window must be >= 1");
+        }
+    }
+    if cli.flags.contains_key("ms-per-hour") {
+        tc.ms_per_hour = cli.f64_flag("ms-per-hour", tc.ms_per_hour)?;
+        if !(tc.ms_per_hour >= 0.0 && tc.ms_per_hour.is_finite()) {
+            anyhow::bail!("--ms-per-hour must be finite and >= 0");
+        }
+    }
+    Ok(tc)
+}
+
+/// `dorm replay`: stream a recorded (or generated) job-arrival trace
+/// through the DES or a live master without materializing it
+/// (DESIGN.md §13).  The trace source is either `--trace FILE` (schema
+/// detected from the CSV header) or `--gen N` (synthesized on the fly
+/// from the seeded [`dorm::workload::WorkloadSpec`] stream — the same
+/// seed reproduces the same trace everywhere).
+fn cmd_replay(cli: &Cli) -> Result<()> {
+    use dorm::config::{ClusterConfig, DormConfig, SimConfig};
+    use dorm::master::DormMaster;
+    use dorm::net::{ControlPlane, FailoverTransport, LocalTransport};
+    use dorm::resources::Res;
+    use dorm::sim::{DormPolicy, PerfModel};
+    use dorm::workload::trace::{
+        rate_sweep, record_line, record_of, replay_des, replay_live, LiveOpts, RatePoint,
+        ReplayOpts, TraceError, TraceReader, TraceRecord, DORM_HEADER,
+    };
+    use dorm::workload::WorkloadSpec;
+    use std::io::{BufRead, BufReader, Write};
+
+    let tc = trace_from_cli(cli)?;
+    let seed = cli.u64_flag("seed", 17)?;
+    let mode = cli.str_flag("mode", "des");
+    let opts = ReplayOpts::from_config(&tc);
+
+    // the record stream: file (never slurped) or generated (never stored)
+    let spec = WorkloadSpec::paper(seed);
+    let records: Box<dyn Iterator<Item = std::result::Result<TraceRecord, TraceError>>> =
+        match (cli.flags.get("trace"), cli.flags.get("gen")) {
+            (Some(_), Some(_)) => anyhow::bail!("--trace and --gen are mutually exclusive"),
+            (Some(path), None) => {
+                let f = std::fs::File::open(path)
+                    .map_err(|e| anyhow::anyhow!("--trace {path}: {e}"))?;
+                let reader: Box<dyn BufRead> = Box::new(BufReader::new(f));
+                let tr = TraceReader::with_defaults(reader, tc.schema_defaults())?;
+                println!("trace {path}: {} schema", tr.schema().name());
+                Box::new(tr)
+            }
+            (None, Some(_)) => {
+                let n = cli.u64_flag("gen", 0)? as usize;
+                if n == 0 {
+                    anyhow::bail!("--gen wants a positive arrival count");
+                }
+                let rows = spec.rows();
+                println!("generating {n} arrivals from seed {seed} (streamed)");
+                Box::new(spec.stream().take(n).map(move |w| Ok(record_of(&rows, &w))))
+            }
+            (None, None) => anyhow::bail!("replay needs --trace FILE or --gen N"),
+        };
+
+    // --export: write the stream out in the native schema and stop
+    if let Some(path) = cli.flags.get("export") {
+        let f = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("--export {path}: {e}"))?;
+        let mut out = std::io::BufWriter::new(f);
+        writeln!(out, "{DORM_HEADER}")?;
+        let mut n = 0u64;
+        for rec in records {
+            writeln!(out, "{}", record_line(&rec?))?;
+            n += 1;
+        }
+        out.flush()?;
+        println!("wrote {n} records to {path}");
+        return Ok(());
+    }
+
+    let slaves = cli.u64_flag("slaves", 20)? as usize;
+    let cap = Res::cpu_gpu_ram(
+        cli.f64_flag("cpu", 12.0)?,
+        cli.f64_flag("gpu", 0.25)?,
+        cli.f64_flag("ram", 128.0)?,
+    );
+    let cluster = ClusterConfig::uniform(slaves, cap);
+
+    match mode.as_str() {
+        "des" => {
+            let sim = SimConfig {
+                horizon_hours: cli.f64_flag("horizon", 24.0)?,
+                seed,
+                ..Default::default()
+            };
+            let pm = PerfModel::default();
+            let mut policy = DormPolicy::new(DormConfig::DORM3);
+            let rep = replay_des(&mut policy, records, opts, &cluster, &sim, &pm)?;
+            println!(
+                "des replay: {} records read, {} arrivals in horizon, {} completed",
+                rep.records_read, rep.outcome.arrivals, rep.outcome.completed
+            );
+            println!(
+                "streaming: max {} records buffered (cap {}), mean util {:.2}",
+                rep.max_buffered,
+                tc.buffer,
+                rep.outcome.metrics.utilization.mean_over(0.0, sim.horizon_hours)
+            );
+            if cli.bool_flag("csv") {
+                let u = &rep.outcome.metrics.utilization.points;
+                let cols: [(&str, Vec<f64>); 2] = [
+                    ("t_hours", u.iter().map(|&(t, _)| t).collect::<Vec<_>>()),
+                    ("utilization", u.iter().map(|&(_, v)| v).collect::<Vec<_>>()),
+                ];
+                let path = report::write_csv("replay_des.csv", &cols)?;
+                println!("wrote {}", path.display());
+            }
+        }
+        "live" => {
+            let live = LiveOpts {
+                ms_per_hour: tc.ms_per_hour,
+                window: tc.window,
+                max_apps: cli.u64_flag("max-apps", 0)?,
+            };
+            let mut transport: Box<dyn ControlPlane> = match cli.flags.get("connect") {
+                Some(addr) => Box::new(FailoverTransport::connect(
+                    candidates_of(addr)?,
+                    &net_from_cli(cli)?,
+                )?),
+                None => {
+                    let dir = std::env::temp_dir()
+                        .join(format!("dorm_replay_{}", std::process::id()));
+                    let _ = std::fs::remove_dir_all(&dir);
+                    Box::new(LocalTransport::new(DormMaster::new(
+                        &cluster,
+                        DormConfig::DORM3,
+                        CheckpointStore::new(dir)?,
+                    )))
+                }
+            };
+            let rep = replay_live(&mut *transport, records, opts, &live)?;
+            println!(
+                "live replay: {} submitted, {} completed, {} rejected in {:.2?}",
+                rep.submitted, rep.completed, rep.rejected, rep.wall
+            );
+            println!(
+                "submit p50 {:.3} ms / p99 {:.3} ms; complete p50 {:.3} ms / p99 {:.3} ms",
+                rep.metrics.submit_p50_ms(),
+                rep.metrics.submit_p99_ms(),
+                rep.metrics.complete_p50_ms(),
+                rep.metrics.complete_p99_ms()
+            );
+            println!("streaming: max {} records buffered (cap {})", rep.max_buffered, tc.buffer);
+            if cli.bool_flag("csv") {
+                let s = &rep.metrics.submit_ms.points;
+                let cols: [(&str, Vec<f64>); 2] = [
+                    ("t_hours", s.iter().map(|&(t, _)| t).collect::<Vec<_>>()),
+                    ("submit_ms", s.iter().map(|&(_, v)| v).collect::<Vec<_>>()),
+                ];
+                let path = report::write_csv("replay_live.csv", &cols)?;
+                println!("wrote {}", path.display());
+            }
+        }
+        "sweep" => {
+            let rates: Vec<f64> = cli
+                .str_flag("rates", "50,100,200,400,800")
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("--rates wants numbers, got {s:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let apps_per_rate = cli.u64_flag("apps-per-rate", 200)? as usize;
+            // --gen / --trace pick the *shape* of the swept jobs; the sweep
+            // regenerates a fresh stream per rate so every point sees the
+            // same work (a file trace is drained once, then reused).
+            let pool: Vec<TraceRecord> = {
+                let mut v = Vec::with_capacity(apps_per_rate);
+                for rec in records.take(apps_per_rate) {
+                    v.push(rec?);
+                }
+                v
+            };
+            if pool.is_empty() {
+                anyhow::bail!("sweep has no records to submit");
+            }
+            let connect = cli.flags.get("connect").cloned();
+            let net = net_from_cli(cli)?;
+            let dir =
+                std::env::temp_dir().join(format!("dorm_sweep_{}", std::process::id()));
+            let mut fresh = 0u32;
+            let mut mk = || -> Result<Box<dyn ControlPlane>> {
+                match &connect {
+                    Some(addr) => {
+                        Ok(Box::new(FailoverTransport::connect(candidates_of(addr)?, &net)?))
+                    }
+                    None => {
+                        fresh += 1;
+                        let d = dir.join(format!("r{fresh}"));
+                        let _ = std::fs::remove_dir_all(&d);
+                        Ok(Box::new(LocalTransport::new(DormMaster::new(
+                            &cluster,
+                            DormConfig::DORM3,
+                            CheckpointStore::new(d)?,
+                        ))))
+                    }
+                }
+            };
+            let mut recs = |_rate: f64| pool.clone();
+            println!(
+                "rate sweep: {} jobs per rate, window {}, rates {rates:?}/s",
+                pool.len(),
+                tc.window
+            );
+            let points = rate_sweep(&mut mk, &mut recs, &rates, tc.window, 0.5)?;
+            let rows: Vec<Vec<String>> = points
+                .iter()
+                .map(|p: &RatePoint| {
+                    vec![
+                        format!("{:.0}", p.offered_per_sec),
+                        format!("{:.0}", p.achieved_per_sec),
+                        format!("{:.3}", p.efficiency),
+                        format!("{:.1}", p.p50_submit_us),
+                        format!("{:.1}", p.p99_submit_us),
+                        format!("{}", p.rejected),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                report::table(
+                    &["offered/s", "achieved/s", "efficiency", "p50 us", "p99 us", "rejected"],
+                    &rows
+                )
+            );
+            if let Some(knee) = points.iter().find(|p| p.efficiency < 0.9) {
+                println!("admission saturates near {:.0}/s", knee.offered_per_sec);
+            } else {
+                println!("no saturation within the swept rates");
+            }
+            if cli.bool_flag("csv") {
+                let cols: [(&str, Vec<f64>); 5] = [
+                    ("offered_per_sec", points.iter().map(|p| p.offered_per_sec).collect()),
+                    ("achieved_per_sec", points.iter().map(|p| p.achieved_per_sec).collect()),
+                    ("efficiency", points.iter().map(|p| p.efficiency).collect()),
+                    ("p50_submit_us", points.iter().map(|p| p.p50_submit_us).collect()),
+                    ("p99_submit_us", points.iter().map(|p| p.p99_submit_us).collect()),
+                ];
+                let path = report::write_csv("replay_sweep.csv", &cols)?;
+                println!("wrote {}", path.display());
+            }
+        }
+        other => anyhow::bail!("unknown --mode {other:?} (des | live | sweep)"),
     }
     Ok(())
 }

@@ -130,6 +130,61 @@ impl RunMetrics {
     }
 }
 
+/// Per-phase latency and scaling series from a trace replay against a
+/// live master (`dorm replay --mode live|sweep`, DESIGN.md §13).  Time
+/// axis is replayed trace hours; values are wall-clock measurements of
+/// the control plane.
+#[derive(Clone, Debug)]
+pub struct ReplayMetrics {
+    /// Submit RPC round-trip, milliseconds, one point per arrival.
+    pub submit_ms: Series,
+    /// Complete RPC round-trip, milliseconds, one point per retirement.
+    pub complete_ms: Series,
+    /// Scaling efficiency (achieved/offered rate) — one point per swept
+    /// rate, time axis = offered arrivals/sec.
+    pub efficiency: Series,
+}
+
+impl ReplayMetrics {
+    pub fn new() -> Self {
+        ReplayMetrics {
+            submit_ms: Series::new("replay.submit_ms"),
+            complete_ms: Series::new("replay.complete_ms"),
+            efficiency: Series::new("replay.efficiency"),
+        }
+    }
+
+    fn phase_percentile(s: &Series, p: f64) -> f64 {
+        let vals: Vec<f64> = s.points.iter().map(|&(_, v)| v).collect();
+        if vals.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&vals, p)
+    }
+
+    pub fn submit_p50_ms(&self) -> f64 {
+        Self::phase_percentile(&self.submit_ms, 50.0)
+    }
+
+    pub fn submit_p99_ms(&self) -> f64 {
+        Self::phase_percentile(&self.submit_ms, 99.0)
+    }
+
+    pub fn complete_p50_ms(&self) -> f64 {
+        Self::phase_percentile(&self.complete_ms, 50.0)
+    }
+
+    pub fn complete_p99_ms(&self) -> f64 {
+        Self::phase_percentile(&self.complete_ms, 99.0)
+    }
+}
+
+impl Default for ReplayMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +219,18 @@ mod tests {
         let r = s.resample(0.0, 10.0, 3);
         assert_eq!(r[0].1, 0.0);
         assert_eq!(r[1].1, 7.0);
+    }
+
+    #[test]
+    fn replay_metrics_percentiles() {
+        let mut m = ReplayMetrics::new();
+        for i in 0..100 {
+            m.submit_ms.push(i as f64, (i + 1) as f64);
+        }
+        assert!((m.submit_p50_ms() - 50.0).abs() <= 1.0, "{}", m.submit_p50_ms());
+        assert!(m.submit_p99_ms() >= 99.0, "{}", m.submit_p99_ms());
+        // empty phases don't panic
+        assert_eq!(m.complete_p50_ms(), 0.0);
     }
 
     #[test]

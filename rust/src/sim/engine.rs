@@ -82,6 +82,16 @@ impl<E: PartialEq> EventQueue<E> {
         Some(s)
     }
 
+    /// Time of the earliest scheduled event without popping it.  The
+    /// runner uses this to interleave externally-sourced arrivals (held
+    /// *outside* the heap, see `runner::ArrivalSource`) at exactly the
+    /// priority pre-scheduled arrivals would have had: an arrival due at
+    /// or before the head event runs first, matching the FIFO-seq order
+    /// of a queue whose arrivals were all scheduled up front.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.time)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -114,6 +124,19 @@ mod tests {
         assert_eq!(q.pop().unwrap().event, "first");
         assert_eq!(q.pop().unwrap().event, "second");
         assert_eq!(q.pop().unwrap().event, "third");
+    }
+
+    #[test]
+    fn peek_matches_pop_order() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        assert_eq!(q.peek_time(), Some(1.0));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(3.0));
+        q.pop();
+        assert_eq!(q.peek_time(), None);
     }
 
     #[test]

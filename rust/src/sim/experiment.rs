@@ -7,8 +7,7 @@ use crate::baselines::StaticPolicy;
 use crate::config::{ClusterConfig, DormConfig, SimConfig};
 use crate::metrics::RunMetrics;
 use crate::util::stats;
-use crate::util::Rng;
-use crate::workload::{table2_rows, WorkloadApp, WorkloadGen};
+use crate::workload::{table2_rows, WorkloadApp, WorkloadSpec};
 
 use crate::sched::CmsPolicy;
 
@@ -39,13 +38,25 @@ pub struct Experiment {
 impl Experiment {
     /// Paper defaults: 20 slaves, 24 h, 50 apps, Poisson(20 min).
     pub fn paper(seed: u64) -> Self {
-        let gen = WorkloadGen::default();
-        let mut rng = Rng::new(seed);
+        Self::from_spec(&WorkloadSpec::paper(seed))
+    }
+
+    /// Build from an explicit [`WorkloadSpec`] — the single seed behind
+    /// the DES run, the churn sweep and the trace export, so the exact
+    /// workload of any experiment is reproducible (and exportable as a
+    /// trace) from `spec.seed` alone.  `Experiment::paper(seed)` is
+    /// `from_spec(&WorkloadSpec::paper(seed))` and keeps its historical
+    /// draw order (`workload::spec` pins this).
+    pub fn from_spec(spec: &WorkloadSpec) -> Self {
         Experiment {
             cluster: ClusterConfig::paper_testbed(),
-            sim: SimConfig { seed, ..Default::default() },
+            sim: SimConfig {
+                seed: spec.seed,
+                mean_interarrival_min: spec.mean_interarrival_min,
+                ..Default::default()
+            },
             pm: PerfModel::default(),
-            workload: gen.generate(&mut rng),
+            workload: spec.generate(),
         }
     }
 

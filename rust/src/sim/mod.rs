@@ -24,7 +24,10 @@ pub use dorm_policy::DormPolicy;
 pub use engine::{EventQueue, SimTime};
 pub use experiment::{fairness_reduction, headline_over_seeds, matched_speedups, mean_speedup, speedup_by_tag, utilization_ratio, Experiment, SystemRun};
 pub use perf_model::PerfModel;
-pub use runner::{run_sim, run_sim_faulty, SimApp, SimOutcome};
+pub use runner::{
+    run_sim, run_sim_faulty, run_sim_stream, run_sim_stream_traced, ArrivalSource, SimApp,
+    SimArrival, SimOutcome, SliceSource,
+};
 // The policy interface moved to the shared scheduling core; re-exported
 // here so simulation-facing callers keep one import path.
 pub use crate::sched::{AllocationUpdate, CmsPolicy, SchedApp, SchedCtx};

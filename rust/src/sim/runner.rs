@@ -10,6 +10,17 @@
 //! capacity invariants are checked on every event (`debug_assert` +
 //! explicit check in tests).
 //!
+//! **Arrivals are pulled, not pre-scheduled** (DESIGN.md §13): the run
+//! loop draws [`SimArrival`]s one at a time from an [`ArrivalSource`] and
+//! holds exactly one pending arrival *outside* the event heap, processing
+//! it whenever it is due at or before the heap's next event.  Among equal
+//! times this gives arrivals the same priority a heap full of
+//! pre-scheduled arrivals (lowest sequence numbers) used to give them, so
+//! a streaming source — e.g. a trace file read line-by-line through
+//! [`crate::workload::trace`] — replays event-for-event identically to a
+//! fully materialized workload slice, while the runner itself holds O(1)
+//! arrival state however long the trace is.
+//!
 //! Failure injection (`crate::fault`, DESIGN.md §8): [`run_sim_faulty`]
 //! additionally replays a churn trace.  A server death zeroes its
 //! capacity, tears down every partition it hosted (BSP cannot continue
@@ -24,7 +35,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::app::AppId;
+use crate::app::{AppId, Engine};
 use crate::cluster::ClusterState;
 use crate::config::{ClusterConfig, SimConfig};
 use crate::drf::{drf_allocate, fairness_loss, DrfApp};
@@ -41,8 +52,10 @@ use super::perf_model::PerfModel;
 #[derive(Clone, Debug)]
 pub struct SimApp {
     pub id: AppId,
-    pub row: usize,
     pub tag: String,
+    /// Requested DCS engine (carried on the arrival; the IaaS baseline
+    /// partitions servers by it).
+    pub engine: Engine,
     pub demand: Res,
     pub weight: f64,
     pub n_min: u32,
@@ -104,9 +117,77 @@ impl SimApp {
     }
 }
 
+/// One arrival, fully self-describing: everything the runner needs to
+/// admit the app travels on the record itself (no side table of
+/// [`Table2Row`]s), which is what lets recorded traces with arbitrary
+/// demand vectors drive the same loop as the synthesized workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimArrival {
+    /// Short tag like "LR" / "VGG-16" (Fig. 9a grouping).
+    pub tag: String,
+    pub engine: Engine,
+    /// Per-container demand vector.
+    pub demand: Res,
+    pub weight: f64,
+    pub n_min: u32,
+    pub n_max: u32,
+    /// Static count the baseline policies pin this app at.
+    pub baseline_n: u32,
+    /// Submission time, hours from experiment start.  Sources must yield
+    /// non-decreasing times (enforced by `debug_assert` in the run loop;
+    /// the trace reader turns violations into typed errors upstream).
+    pub submit_hours: f64,
+    /// Duration at `baseline_n` containers; the perf model converts it to
+    /// total work via its speedup curve.
+    pub duration_at_baseline_hours: f64,
+}
+
+/// A pull-based stream of arrivals in non-decreasing submission order.
+/// Implementations range from a materialized slice ([`SliceSource`]) to a
+/// bounded-buffer trace reader that never holds the full trace
+/// ([`crate::workload::trace::TraceSource`]).
+pub trait ArrivalSource {
+    /// The next arrival, or `None` when the stream is exhausted (or has
+    /// failed — streaming sources report the error out-of-band after the
+    /// run, since the DES cannot unwind mid-flight).
+    fn next_arrival(&mut self) -> Option<SimArrival>;
+}
+
+/// [`ArrivalSource`] over a materialized `(rows, workload)` pair — the
+/// adapter that keeps [`run_sim`]/[`run_sim_faulty`] signatures intact.
+pub struct SliceSource<'a> {
+    rows: &'a [Table2Row],
+    workload: &'a [WorkloadApp],
+    next: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(rows: &'a [Table2Row], workload: &'a [WorkloadApp]) -> Self {
+        SliceSource { rows, workload, next: 0 }
+    }
+}
+
+impl ArrivalSource for SliceSource<'_> {
+    fn next_arrival(&mut self) -> Option<SimArrival> {
+        let w = self.workload.get(self.next)?;
+        self.next += 1;
+        let row = &self.rows[w.row];
+        Some(SimArrival {
+            tag: w.tag.clone(),
+            engine: row.engine,
+            demand: row.demand.clone(),
+            weight: row.weight as f64,
+            n_min: row.n_min,
+            n_max: row.n_max,
+            baseline_n: w.baseline_n,
+            submit_hours: w.submit_hours,
+            duration_at_baseline_hours: w.duration_at_baseline_hours,
+        })
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 enum Event {
-    Arrival(usize),
     Completion { app: AppId, version: u64 },
     Sample,
     /// Server dies: capacity + hosted partitions lost (`crate::fault`).
@@ -131,6 +212,9 @@ pub struct SimOutcome {
     pub apps: BTreeMap<AppId, SimApp>,
     /// Completed fraction.
     pub completed: usize,
+    /// Arrivals actually admitted into the run (those with
+    /// `submit <= horizon`); the app-id space is `0..arrivals`.
+    pub arrivals: usize,
     /// Allocation decisions deferred by master outages (arrivals,
     /// completions, server churn seen while no master was serving) —
     /// the "lost adjustments" a takeover costs.
@@ -162,6 +246,52 @@ pub fn run_sim_faulty(
     pm: &PerfModel,
     faults: &[FailureEvent],
 ) -> SimOutcome {
+    let mut source = SliceSource::new(rows, workload);
+    run_core(policy, &mut source, cluster_cfg, sim, pm, faults, None)
+}
+
+/// Run `policy` over an arbitrary [`ArrivalSource`] — the entry point the
+/// trace-replay driver uses (`dorm replay --mode des`).
+pub fn run_sim_stream(
+    policy: &mut dyn CmsPolicy,
+    source: &mut dyn ArrivalSource,
+    cluster_cfg: &ClusterConfig,
+    sim: &SimConfig,
+    pm: &PerfModel,
+    faults: &[FailureEvent],
+) -> SimOutcome {
+    run_core(policy, source, cluster_cfg, sim, pm, faults, None)
+}
+
+/// [`run_sim_stream`] that additionally records one line per processed
+/// DES event (`"<time>|<kind>|<detail>"`).  The streaming-vs-materialized
+/// parity property (`tests/trace.rs`) compares these logs byte-for-byte —
+/// the strongest observable statement that two sources drove the exact
+/// same event sequence.  Costs O(events) memory; test/diagnostic use only.
+pub fn run_sim_stream_traced(
+    policy: &mut dyn CmsPolicy,
+    source: &mut dyn ArrivalSource,
+    cluster_cfg: &ClusterConfig,
+    sim: &SimConfig,
+    pm: &PerfModel,
+    faults: &[FailureEvent],
+) -> (SimOutcome, Vec<String>) {
+    let mut log = Vec::new();
+    let out = run_core(policy, source, cluster_cfg, sim, pm, faults, Some(&mut log));
+    (out, log)
+}
+
+/// The single event loop behind every `run_sim*` entry point.
+#[allow(clippy::too_many_arguments)]
+fn run_core(
+    policy: &mut dyn CmsPolicy,
+    source: &mut dyn ArrivalSource,
+    cluster_cfg: &ClusterConfig,
+    sim: &SimConfig,
+    pm: &PerfModel,
+    faults: &[FailureEvent],
+    mut log: Option<&mut Vec<String>>,
+) -> SimOutcome {
     let mut cluster = ClusterState::new(cluster_cfg);
     let saved_caps: Vec<Res> = cluster.servers.iter().map(|s| s.capacity.clone()).collect();
     // the DES drives deaths by injected events, not missed heartbeats
@@ -182,11 +312,6 @@ pub fn run_sim_faulty(
     let mut deferred_allocations = 0usize;
     let mut pending_realloc = false;
 
-    for (i, w) in workload.iter().enumerate() {
-        if w.submit_hours <= sim.horizon_hours {
-            q.schedule(w.submit_hours, Event::Arrival(i));
-        }
-    }
     q.schedule(0.0, Event::Sample);
     for f in faults {
         if f.time > sim.horizon_hours {
@@ -207,50 +332,100 @@ pub fn run_sim_faulty(
         q.schedule(pm.ckpt_period_hours, Event::CkptTick);
     }
 
-    while let Some(ev) = q.pop() {
+    // exactly one pending arrival lives outside the heap (module docs)
+    let mut pending: Option<SimArrival> = source.next_arrival();
+    let mut arrivals = 0usize;
+    let mut last_submit = f64::NEG_INFINITY;
+
+    loop {
+        // among equal times the pending arrival runs before any heap
+        // event — the priority pre-scheduled arrivals used to get from
+        // their low FIFO sequence numbers
+        while let Some(arr) = pending.take() {
+            let due = match q.peek_time() {
+                Some(t) => arr.submit_hours <= t,
+                None => true,
+            };
+            if !due {
+                pending = Some(arr);
+                break;
+            }
+            if arr.submit_hours > sim.horizon_hours {
+                // monotone source: every later arrival is out too
+                break;
+            }
+            debug_assert!(
+                arr.submit_hours >= last_submit,
+                "arrival source went backwards: {} < {last_submit}",
+                arr.submit_hours
+            );
+            last_submit = last_submit.max(arr.submit_hours);
+            let now = arr.submit_hours;
+            let id = AppId(arrivals as u64);
+            arrivals += 1;
+            if let Some(l) = log.as_deref_mut() {
+                l.push(format!(
+                    "{now:.9}|arrival|{}|{}|{}|{:?}",
+                    id.0, arr.tag, arr.baseline_n, arr.demand.0
+                ));
+            }
+            let app = SimApp {
+                id,
+                tag: arr.tag,
+                engine: arr.engine,
+                demand: arr.demand,
+                weight: arr.weight,
+                n_min: arr.n_min,
+                n_max: arr.n_max,
+                baseline_n: arr.baseline_n,
+                submit: now,
+                work_total: pm.work_for(arr.duration_at_baseline_hours, arr.baseline_n),
+                work_remaining: pm.work_for(arr.duration_at_baseline_hours, arr.baseline_n),
+                containers: 0,
+                last_settle: now,
+                paused_until: now + policy.admission_latency_hours(),
+                kills: 0,
+                ckpt_work: 0.0,
+                failed_at: None,
+                recovery_due: None,
+                recoveries: 0,
+                version: 0,
+                completed_at: None,
+            };
+            cluster.register_app(id, app.demand.clone());
+            apps.insert(id, app);
+            if master_up {
+                reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                           &mut metrics, &mut total_adjusted);
+            } else {
+                deferred_allocations += 1;
+                pending_realloc = true;
+            }
+            sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
+            pending = source.next_arrival();
+        }
+        let Some(ev) = q.pop() else {
+            break;
+        };
         let now = ev.time;
         if now > sim.horizon_hours {
             break;
         }
-        match ev.event {
-            Event::Arrival(idx) => {
-                let w = &workload[idx];
-                let row = &rows[w.row];
-                let id = AppId(idx as u64);
-                let app = SimApp {
-                    id,
-                    row: w.row,
-                    tag: w.tag.clone(),
-                    demand: row.demand.clone(),
-                    weight: row.weight as f64,
-                    n_min: row.n_min,
-                    n_max: row.n_max,
-                    baseline_n: w.baseline_n,
-                    submit: now,
-                    work_total: pm.work_for(w.duration_at_baseline_hours, w.baseline_n),
-                    work_remaining: pm.work_for(w.duration_at_baseline_hours, w.baseline_n),
-                    containers: 0,
-                    last_settle: now,
-                    paused_until: now + policy.admission_latency_hours(),
-                    kills: 0,
-                    ckpt_work: 0.0,
-                    failed_at: None,
-                    recovery_due: None,
-                    recoveries: 0,
-                    version: 0,
-                    completed_at: None,
-                };
-                cluster.register_app(id, app.demand.clone());
-                apps.insert(id, app);
-                if master_up {
-                    reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
-                               &mut metrics, &mut total_adjusted);
-                } else {
-                    deferred_allocations += 1;
-                    pending_realloc = true;
+        if let Some(l) = log.as_deref_mut() {
+            let line = match &ev.event {
+                Event::Completion { app, version } => {
+                    format!("{now:.9}|completion|{}|{version}", app.0)
                 }
-                sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work, pm, pf);
-            }
+                Event::Sample => format!("{now:.9}|sample"),
+                Event::ServerFail(j) => format!("{now:.9}|server_fail|{j}"),
+                Event::ServerRecover(j) => format!("{now:.9}|server_recover|{j}"),
+                Event::CkptTick => format!("{now:.9}|ckpt_tick"),
+                Event::MasterFail => format!("{now:.9}|master_fail"),
+                Event::MasterRecover => format!("{now:.9}|master_recover"),
+            };
+            l.push(line);
+        }
+        match ev.event {
             Event::Completion { app: id, version } => {
                 let Some(app) = apps.get_mut(&id) else { continue };
                 if app.version != version {
@@ -275,7 +450,7 @@ pub fn run_sim_faulty(
                 cluster.remove_app(id);
                 done.insert(id, finished);
                 if master_up {
-                    reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                    reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm, pf,
                                &mut metrics, &mut total_adjusted);
                 } else {
                     deferred_allocations += 1;
@@ -339,7 +514,7 @@ pub fn run_sim_faulty(
                 // the teardown above is slave-local (the machine is gone
                 // either way); only the *decision* needs a live master
                 if master_up {
-                    reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                    reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm, pf,
                                &mut metrics, &mut total_adjusted);
                 } else {
                     deferred_allocations += 1;
@@ -358,7 +533,7 @@ pub fn run_sim_faulty(
                 cluster.servers[j].capacity = saved_caps[j].clone();
                 policy.on_capacity_change();
                 if master_up {
-                    reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                    reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm, pf,
                                &mut metrics, &mut total_adjusted);
                 } else {
                     deferred_allocations += 1;
@@ -381,7 +556,7 @@ pub fn run_sim_faulty(
                         // caches are stale across the restore
                         pending_realloc = false;
                         policy.on_capacity_change();
-                        reallocate(policy, rows, &mut apps, &mut cluster, &mut q, now, pm, pf,
+                        reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm, pf,
                                    &mut metrics, &mut total_adjusted);
                         sample(&mut metrics, now, &apps, &cluster, total_adjusted, lost_work,
                                pm, pf);
@@ -413,14 +588,20 @@ pub fn run_sim_faulty(
     for (id, app) in apps {
         done.insert(id, app);
     }
-    SimOutcome { metrics, apps: done, completed, deferred_allocations, master_outage_hours }
+    SimOutcome {
+        metrics,
+        apps: done,
+        completed,
+        arrivals,
+        deferred_allocations,
+        master_outage_hours,
+    }
 }
 
 /// Ask the policy for a new assignment and apply it.
 #[allow(clippy::too_many_arguments)]
 fn reallocate(
     policy: &mut dyn CmsPolicy,
-    rows: &[Table2Row],
     apps: &mut BTreeMap<AppId, SimApp>,
     cluster: &mut ClusterState,
     q: &mut EventQueue<Event>,
@@ -450,7 +631,7 @@ fn reallocate(
                     placement: cluster.placement_of(*id),
                     submit: a.submit,
                     baseline_n: a.baseline_n,
-                    engine: rows[a.row].engine,
+                    engine: a.engine,
                 },
             )
         })
@@ -619,6 +800,7 @@ mod tests {
         let mut pol = StaticPolicy::new();
         let out = run_sim(&mut pol, &rows, &wl, &cfg, &sim, &pm);
         assert_eq!(out.completed, 2);
+        assert_eq!(out.arrivals, 2);
         // static baseline runs each app at exactly its baseline count ->
         // duration equals the sampled duration
         let lr_dur = out.metrics.completions.iter()
@@ -644,6 +826,54 @@ mod tests {
 
     fn pm_fast() -> PerfModel {
         PerfModel::default()
+    }
+
+    /// The refactor's load-bearing invariant: running the same workload
+    /// through the slice adapter twice — once via [`run_sim`], once via
+    /// the traced stream entry point — produces identical outcomes, and
+    /// arrivals beyond the horizon neither run nor shift app ids.
+    #[test]
+    fn slice_source_and_run_sim_agree() {
+        let rows = table2_rows();
+        let gen = WorkloadGen::default();
+        let mut rng = Rng::new(9);
+        let wl = gen.generate(&mut rng);
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 6.0, ..Default::default() };
+        let pm = PerfModel::default();
+        let mut p1 = StaticPolicy::new();
+        let a = run_sim(&mut p1, &rows, &wl, &cfg, &sim, &pm);
+        let mut p2 = StaticPolicy::new();
+        let mut src = SliceSource::new(&rows, &wl);
+        let (b, log) = run_sim_stream_traced(&mut p2, &mut src, &cfg, &sim, &pm, &[]);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert!(a.arrivals <= wl.len());
+        assert!(a.arrivals >= 1);
+        assert_eq!(a.metrics.utilization.points, b.metrics.utilization.points);
+        assert_eq!(a.metrics.completions, b.metrics.completions);
+        assert!(!log.is_empty());
+        // ids are dense over the admitted prefix
+        for i in 0..a.arrivals {
+            assert!(b.apps.contains_key(&AppId(i as u64)));
+        }
+    }
+
+    /// Equal-time tie order: an arrival at exactly t=0 must run before
+    /// the Sample event at t=0 (pre-refactor, its lower heap sequence
+    /// guaranteed this; now the held-out pending arrival does).
+    #[test]
+    fn arrival_beats_sample_at_equal_time() {
+        let (rows, wl) = tiny_workload();
+        let cfg = ClusterConfig::paper_testbed();
+        let sim = SimConfig { horizon_hours: 4.0, ..Default::default() };
+        let pm = PerfModel::default();
+        let mut pol = StaticPolicy::new();
+        let mut src = SliceSource::new(&rows, &wl);
+        let (_, log) = run_sim_stream_traced(&mut pol, &mut src, &cfg, &sim, &pm, &[]);
+        let first_arrival = log.iter().position(|l| l.contains("|arrival|")).unwrap();
+        let first_sample = log.iter().position(|l| l.contains("|sample")).unwrap();
+        assert!(first_arrival < first_sample, "{log:?}");
     }
 
     /// Single app on a 2-server cluster, periodic checkpoints every 0.5 h,

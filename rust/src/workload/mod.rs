@@ -4,7 +4,10 @@
 //! published CDF shapes are what we reproduce).
 
 mod durations;
+mod spec;
 mod table2;
+pub mod trace;
 
 pub use durations::{app_duration_hours, task_duration_secs, DurationModel};
+pub use spec::{WorkloadSpec, WorkloadStream};
 pub use table2::{table2_rows, Table2Row, WorkloadApp, WorkloadGen};

@@ -1,0 +1,578 @@
+//! The streaming replay driver: feed a trace through the DES or a live
+//! master without ever materializing it.
+//!
+//! * [`TraceSource`] — a bounded-buffer [`ArrivalSource`] over any record
+//!   iterator.  It reads at most `buffer` records ahead (chunked refill),
+//!   tracks its high-water mark ([`TraceSource::max_buffered`], the
+//!   O(buffer) guarantee the tests assert), and applies the replay-time
+//!   transform: open-loop (recorded timestamps × `time_scale`) or
+//!   closed-loop (a sustained `rate_per_hour`, recorded times ignored).
+//! * [`replay_des`] — drive a [`CmsPolicy`] in the DES from a streaming
+//!   source; a trace error surfaces as a typed failure after the clean
+//!   prefix has run.
+//! * [`replay_live`] — drive a live master through any
+//!   [`ControlPlane`] (in-process or TCP), submitting per the replayed
+//!   clock and completing jobs as their recorded durations elapse,
+//!   recording per-phase (submit/complete) RPC latency series.
+//! * [`rate_sweep`] — ramp offered arrivals/sec against fresh masters
+//!   until admission saturates; emits the scaling-efficiency series the
+//!   `replay` bench gates.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::app::{AppId, AppSpec};
+use crate::config::TraceConfig;
+use crate::metrics::ReplayMetrics;
+use crate::net::ControlPlane;
+use crate::proto::{Request, Response};
+use crate::sched::CmsPolicy;
+use crate::sim::{run_sim_stream, ArrivalSource, SimArrival, SimOutcome};
+use crate::util::stats;
+
+use super::schema::{TraceError, TraceRecord};
+
+/// Replay-time knobs (a subset of the `[trace]` config section).
+#[derive(Clone, Debug)]
+pub struct ReplayOpts {
+    /// Bounded look-ahead buffer, records (>= 1).
+    pub buffer: usize,
+    /// Open-loop: multiply recorded timestamps (0.5 = replay 2× faster).
+    pub time_scale: f64,
+    /// Closed-loop: > 0 replaces recorded times with a sustained rate of
+    /// `rate_per_hour` arrivals per simulated hour.
+    pub rate_per_hour: f64,
+}
+
+impl Default for ReplayOpts {
+    fn default() -> Self {
+        ReplayOpts { buffer: 4096, time_scale: 1.0, rate_per_hour: 0.0 }
+    }
+}
+
+impl ReplayOpts {
+    pub fn from_config(cfg: &TraceConfig) -> Self {
+        ReplayOpts {
+            buffer: cfg.buffer,
+            time_scale: cfg.time_scale,
+            rate_per_hour: cfg.rate_per_hour,
+        }
+    }
+}
+
+/// Bounded-buffer streaming adapter: record iterator → [`ArrivalSource`].
+pub struct TraceSource<I: Iterator<Item = Result<TraceRecord, TraceError>>> {
+    inner: I,
+    buf: VecDeque<SimArrival>,
+    opts: ReplayOpts,
+    max_buffered: usize,
+    records_read: u64,
+    error: Option<TraceError>,
+    exhausted: bool,
+}
+
+impl<I: Iterator<Item = Result<TraceRecord, TraceError>>> TraceSource<I> {
+    pub fn new(inner: I, opts: ReplayOpts) -> Self {
+        TraceSource {
+            inner,
+            buf: VecDeque::new(),
+            opts: ReplayOpts { buffer: opts.buffer.max(1), ..opts },
+            max_buffered: 0,
+            records_read: 0,
+            error: None,
+            exhausted: false,
+        }
+    }
+
+    /// Chunked refill: one pass pulls up to `buffer` records, so the
+    /// underlying reader sees batched sequential reads while the driver
+    /// never holds more than `buffer` arrivals.
+    fn refill(&mut self) {
+        if self.exhausted {
+            return;
+        }
+        while self.buf.len() < self.opts.buffer {
+            match self.inner.next() {
+                Some(Ok(rec)) => {
+                    let mut arr = rec.to_arrival();
+                    self.records_read += 1;
+                    arr.submit_hours = if self.opts.rate_per_hour > 0.0 {
+                        // closed loop: sustained rate, recorded times ignored
+                        (self.records_read - 1) as f64 / self.opts.rate_per_hour
+                    } else {
+                        arr.submit_hours * self.opts.time_scale
+                    };
+                    self.buf.push_back(arr);
+                }
+                Some(Err(e)) => {
+                    self.error = Some(e);
+                    self.exhausted = true;
+                    break;
+                }
+                None => {
+                    self.exhausted = true;
+                    break;
+                }
+            }
+        }
+        self.max_buffered = self.max_buffered.max(self.buf.len());
+    }
+
+    /// High-water mark of buffered arrivals — by construction
+    /// `<= buffer`, however long the trace (the streaming guarantee).
+    pub fn max_buffered(&self) -> usize {
+        self.max_buffered
+    }
+
+    pub fn records_read(&self) -> u64 {
+        self.records_read
+    }
+
+    /// The error that fused the stream, if any (checked after a run).
+    pub fn error(&self) -> Option<&TraceError> {
+        self.error.as_ref()
+    }
+}
+
+impl<I: Iterator<Item = Result<TraceRecord, TraceError>>> ArrivalSource for TraceSource<I> {
+    fn next_arrival(&mut self) -> Option<SimArrival> {
+        if self.buf.is_empty() {
+            self.refill();
+        }
+        self.buf.pop_front()
+    }
+}
+
+/// What a DES replay produced.
+pub struct DesReplayReport {
+    pub outcome: SimOutcome,
+    pub records_read: u64,
+    pub max_buffered: usize,
+}
+
+/// Stream `records` through the DES under `policy`.  Trace errors are
+/// typed failures: the clean prefix runs, then the error is reported
+/// (with how far the replay got) instead of a partial result.
+pub fn replay_des(
+    policy: &mut dyn CmsPolicy,
+    records: impl Iterator<Item = Result<TraceRecord, TraceError>>,
+    opts: ReplayOpts,
+    cluster: &crate::config::ClusterConfig,
+    sim: &crate::config::SimConfig,
+    pm: &crate::sim::PerfModel,
+) -> Result<DesReplayReport> {
+    let mut source = TraceSource::new(records, opts);
+    let outcome = run_sim_stream(policy, &mut source, cluster, sim, pm, &[]);
+    if let Some(e) = source.error() {
+        bail!("trace failed after {} records: {e}", source.records_read());
+    }
+    Ok(DesReplayReport {
+        outcome,
+        records_read: source.records_read(),
+        max_buffered: source.max_buffered(),
+    })
+}
+
+/// Live-replay knobs.
+#[derive(Clone, Debug)]
+pub struct LiveOpts {
+    /// Wall-clock pacing: milliseconds of real time per replayed hour
+    /// (0 = as fast as the master admits).
+    pub ms_per_hour: f64,
+    /// In-flight window: submitting past this many active apps first
+    /// completes the oldest — keeps the master's solve set (and the
+    /// replay's memory) bounded on arbitrarily long traces.
+    pub window: usize,
+    /// Stop after this many submissions (0 = the whole trace).
+    pub max_apps: u64,
+}
+
+impl Default for LiveOpts {
+    fn default() -> Self {
+        LiveOpts { ms_per_hour: 0.0, window: 64, max_apps: 0 }
+    }
+}
+
+impl LiveOpts {
+    pub fn from_config(cfg: &TraceConfig) -> Self {
+        LiveOpts { ms_per_hour: cfg.ms_per_hour, window: cfg.window, max_apps: 0 }
+    }
+}
+
+/// What a live replay produced.
+pub struct LiveReplayReport {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Submissions the master refused (admission saturation / invalid).
+    pub rejected: u64,
+    pub records_read: u64,
+    pub max_buffered: usize,
+    /// Per-phase RPC latency + efficiency series.
+    pub metrics: ReplayMetrics,
+    pub wall: Duration,
+}
+
+/// Replay a record stream against a live master through `transport`,
+/// open- or closed-loop per `opts`: submit each arrival at its replayed
+/// time, complete it once its recorded duration has elapsed on the
+/// replayed clock.  Widths the master assigns do not feed back into the
+/// replayed durations (the DES owns that model); the live path measures
+/// the *control plane* — admission latency, completion latency, and how
+/// submission rate scales — on real RPCs.
+pub fn replay_live(
+    transport: &mut dyn ControlPlane,
+    records: impl Iterator<Item = Result<TraceRecord, TraceError>>,
+    opts: ReplayOpts,
+    live: &LiveOpts,
+) -> Result<LiveReplayReport> {
+    let mut source = TraceSource::new(records, opts);
+    let mut metrics = ReplayMetrics::new();
+    let mut submitted = 0u64;
+    let mut completed = 0u64;
+    let mut rejected = 0u64;
+    // in-flight apps keyed by (completion-time bits, app id): f64 bit
+    // order == numeric order for the non-negative times the reader admits
+    let mut inflight: BTreeMap<(u64, u64), AppId> = BTreeMap::new();
+    let t0 = Instant::now();
+
+    fn complete_one(
+        transport: &mut dyn ControlPlane,
+        id: AppId,
+        at_hours: f64,
+        metrics: &mut ReplayMetrics,
+        completed: &mut u64,
+    ) -> Result<()> {
+        let s = Instant::now();
+        let resp = transport.call(Request::Complete { app: id })?;
+        let ms = s.elapsed().as_secs_f64() * 1e3;
+        if matches!(resp, Response::Ok) {
+            *completed += 1;
+        }
+        metrics.complete_ms.push(at_hours, ms);
+        Ok(())
+    }
+
+    while let Some(arr) = source.next_arrival() {
+        if live.max_apps > 0 && submitted >= live.max_apps {
+            break;
+        }
+        let v_hours = arr.submit_hours;
+        // retire everything whose replayed duration has elapsed
+        while let Some((&key, &id)) = inflight.iter().next() {
+            let due = f64::from_bits(key.0);
+            if due > v_hours && inflight.len() < live.window.max(1) {
+                break;
+            }
+            inflight.remove(&key);
+            complete_one(&mut *transport, id, v_hours, &mut metrics, &mut completed)?;
+        }
+        // wall pacing (open-loop live replay at a chosen speed)
+        if live.ms_per_hour > 0.0 {
+            let due = Duration::from_secs_f64(v_hours * live.ms_per_hour / 1e3);
+            let elapsed = t0.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+        }
+        let spec = AppSpec {
+            executor: arr.engine,
+            demand: arr.demand.clone(),
+            weight: (arr.weight.round() as u32).max(1),
+            n_min: arr.n_min.max(1),
+            n_max: arr.n_max.max(arr.n_min.max(1)),
+            cmd: [arr.tag.clone(), arr.tag.clone()],
+        };
+        let s = Instant::now();
+        let resp = transport.call(Request::Submit { spec })?;
+        let ms = s.elapsed().as_secs_f64() * 1e3;
+        metrics.submit_ms.push(v_hours, ms);
+        submitted += 1;
+        match resp {
+            Response::Submitted { app } => {
+                let done_at = v_hours + arr.duration_at_baseline_hours;
+                inflight.insert((done_at.to_bits(), app.0), app);
+            }
+            _ => rejected += 1,
+        }
+    }
+    if let Some(e) = source.error() {
+        bail!("trace failed after {} records: {e}", source.records_read());
+    }
+    // drain the tail
+    let tail_at = metrics.submit_ms.points.last().map(|&(t, _)| t).unwrap_or(0.0);
+    let leftover: Vec<_> = std::mem::take(&mut inflight).into_iter().collect();
+    for (_key, id) in leftover {
+        complete_one(&mut *transport, id, tail_at, &mut metrics, &mut completed)?;
+    }
+    Ok(LiveReplayReport {
+        submitted,
+        completed,
+        rejected,
+        records_read: source.records_read(),
+        max_buffered: source.max_buffered(),
+        metrics,
+        wall: t0.elapsed(),
+    })
+}
+
+/// One point of the sustained-rate sweep.
+#[derive(Clone, Debug)]
+pub struct RatePoint {
+    /// Offered arrivals per wall-second.
+    pub offered_per_sec: f64,
+    /// Arrivals the master actually absorbed per wall-second.
+    pub achieved_per_sec: f64,
+    /// achieved / offered, capped at 1 — the scaling-efficiency series.
+    pub efficiency: f64,
+    pub p50_submit_us: f64,
+    pub p99_submit_us: f64,
+    pub rejected: u64,
+}
+
+/// Ramp offered arrivals/sec until admission saturates: each rate gets a
+/// fresh master from `make_transport` and `apps_per_rate` closed-loop
+/// submissions paced at the offered rate (a sliding `window` keeps the
+/// active set steady-state).  Saturation = the first rate whose
+/// efficiency drops below `stop_below` (the sweep stops one point after,
+/// so the knee is visible); `stop_below <= 0` sweeps every rate.
+pub fn rate_sweep(
+    make_transport: &mut dyn FnMut() -> Result<Box<dyn ControlPlane>>,
+    records_for_rate: &mut dyn FnMut(f64) -> Vec<TraceRecord>,
+    rates: &[f64],
+    window: usize,
+    stop_below: f64,
+) -> Result<Vec<RatePoint>> {
+    let mut out = Vec::new();
+    for &rate in rates {
+        let mut transport = make_transport()?;
+        let records = records_for_rate(rate);
+        let n = records.len() as u64;
+        let mut submit_us: Vec<f64> = Vec::with_capacity(records.len());
+        let mut inflight: VecDeque<AppId> = VecDeque::new();
+        let mut rejected = 0u64;
+        let t0 = Instant::now();
+        for (i, rec) in records.into_iter().enumerate() {
+            // open-loop offered clock: arrival i is due at i/rate seconds
+            let due = Duration::from_secs_f64(i as f64 / rate);
+            let elapsed = t0.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+            let arr = rec.to_arrival();
+            let spec = AppSpec {
+                executor: arr.engine,
+                demand: arr.demand.clone(),
+                weight: (arr.weight.round() as u32).max(1),
+                n_min: arr.n_min.max(1),
+                n_max: arr.n_max.max(arr.n_min.max(1)),
+                cmd: [arr.tag.clone(), arr.tag.clone()],
+            };
+            let s = Instant::now();
+            let resp = transport.call(Request::Submit { spec })?;
+            submit_us.push(s.elapsed().as_secs_f64() * 1e6);
+            match resp {
+                Response::Submitted { app } => inflight.push_back(app),
+                _ => rejected += 1,
+            }
+            while inflight.len() > window.max(1) {
+                let app = inflight.pop_front().unwrap();
+                transport.call(Request::Complete { app })?;
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+        let achieved = n as f64 / elapsed;
+        let efficiency = (achieved / rate).min(1.0);
+        let (p50, p99) = if submit_us.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (stats::percentile(&submit_us, 50.0), stats::percentile(&submit_us, 99.0))
+        };
+        out.push(RatePoint {
+            offered_per_sec: rate,
+            achieved_per_sec: achieved,
+            efficiency,
+            p50_submit_us: p50,
+            p99_submit_us: p99,
+            rejected,
+        });
+        if stop_below > 0.0 && efficiency < stop_below {
+            break; // admission saturated: the ramp has found the knee
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::CheckpointStore;
+    use crate::baselines::StaticPolicy;
+    use crate::config::{ClusterConfig, DormConfig, SimConfig};
+    use crate::master::DormMaster;
+    use crate::net::LocalTransport;
+    use crate::resources::Res;
+    use crate::sim::PerfModel;
+
+    fn mk_records(n: usize, gap_hours: f64, dur_hours: f64) -> Vec<TraceRecord> {
+        (0..n)
+            .map(|i| TraceRecord {
+                submit_hours: i as f64 * gap_hours,
+                tag: format!("j{i}"),
+                engine: crate::app::Engine::MxNet,
+                demand: Res::cpu_gpu_ram(1.0, 0.0, 1.0),
+                weight: 1.0,
+                n_min: 1,
+                n_max: 1,
+                baseline_n: 1,
+                duration_hours: dur_hours,
+                priority: None,
+                user: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn source_buffer_is_bounded_and_complete() {
+        let recs = mk_records(1000, 0.001, 0.01);
+        let mut src = TraceSource::new(
+            recs.clone().into_iter().map(Ok),
+            ReplayOpts { buffer: 16, ..Default::default() },
+        );
+        let mut n = 0;
+        while let Some(a) = src.next_arrival() {
+            assert_eq!(a.tag, format!("j{n}"));
+            n += 1;
+        }
+        assert_eq!(n, 1000);
+        assert_eq!(src.records_read(), 1000);
+        assert!(src.max_buffered() <= 16, "{}", src.max_buffered());
+        assert!(src.error().is_none());
+    }
+
+    #[test]
+    fn closed_loop_respaces_arrivals() {
+        let recs = mk_records(10, 1.0, 0.01); // recorded: 1 h apart
+        let mut src = TraceSource::new(
+            recs.into_iter().map(Ok),
+            ReplayOpts { rate_per_hour: 100.0, ..Default::default() },
+        );
+        let mut times = Vec::new();
+        while let Some(a) = src.next_arrival() {
+            times.push(a.submit_hours);
+        }
+        for (i, t) in times.iter().enumerate() {
+            assert!((t - i as f64 / 100.0).abs() < 1e-12, "{times:?}");
+        }
+    }
+
+    #[test]
+    fn open_loop_time_scale_compresses() {
+        let recs = mk_records(3, 2.0, 0.01);
+        let mut src = TraceSource::new(
+            recs.into_iter().map(Ok),
+            ReplayOpts { time_scale: 0.5, ..Default::default() },
+        );
+        assert_eq!(src.next_arrival().unwrap().submit_hours, 0.0);
+        assert_eq!(src.next_arrival().unwrap().submit_hours, 1.0);
+        assert_eq!(src.next_arrival().unwrap().submit_hours, 2.0);
+    }
+
+    #[test]
+    fn replay_des_runs_and_reports_errors() {
+        let cluster = ClusterConfig::uniform(4, Res::cpu_gpu_ram(8.0, 0.0, 32.0));
+        let sim = SimConfig { horizon_hours: 2.0, ..Default::default() };
+        let pm = PerfModel::default();
+        let mut pol = StaticPolicy::new();
+        let recs = mk_records(20, 0.01, 0.05);
+        let rep = replay_des(
+            &mut pol,
+            recs.into_iter().map(Ok),
+            ReplayOpts { buffer: 4, ..Default::default() },
+            &cluster,
+            &sim,
+            &pm,
+        )
+        .unwrap();
+        assert_eq!(rep.records_read, 20);
+        assert!(rep.max_buffered <= 4);
+        assert_eq!(rep.outcome.arrivals, 20);
+        assert!(rep.outcome.completed > 0);
+        // an error mid-stream surfaces typed, after the clean prefix
+        let mut pol = StaticPolicy::new();
+        let recs = mk_records(5, 0.01, 0.05);
+        let bad = recs
+            .into_iter()
+            .map(Ok)
+            .chain(std::iter::once(Err(TraceError::NonMonotone {
+                line: 7,
+                prev_hours: 1.0,
+                now_hours: 0.0,
+            })));
+        let err = replay_des(
+            &mut pol,
+            bad,
+            ReplayOpts::default(),
+            &cluster,
+            &sim,
+            &pm,
+        )
+        .err()
+        .expect("bad trace must fail the replay");
+        assert!(err.to_string().contains("after 5 records"), "{err}");
+        assert!(err.to_string().contains("backwards"), "{err}");
+    }
+
+    fn local_master(slaves: usize, tag: &str) -> LocalTransport {
+        let d = std::env::temp_dir().join(format!("dorm_replay_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        let cluster = ClusterConfig::uniform(slaves, Res::cpu_gpu_ram(16.0, 0.0, 64.0));
+        let store = CheckpointStore::new(d).unwrap();
+        LocalTransport::new(DormMaster::new(&cluster, DormConfig::DORM3, store))
+    }
+
+    #[test]
+    fn live_replay_submits_and_completes() {
+        let mut t = local_master(4, "live");
+        let recs = mk_records(12, 0.05, 0.1);
+        let rep = replay_live(
+            &mut t,
+            recs.into_iter().map(Ok),
+            ReplayOpts { buffer: 4, ..Default::default() },
+            &LiveOpts { window: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.submitted, 12);
+        assert_eq!(rep.completed, 12, "window + drain must complete everything");
+        assert_eq!(rep.rejected, 0);
+        assert!(rep.max_buffered <= 4);
+        assert_eq!(rep.metrics.submit_ms.points.len(), 12);
+        assert!(rep.metrics.submit_p50_ms() >= 0.0);
+        // nothing left active on the master
+        let Response::State(v) =
+            t.call(Request::QueryState { app: None }).unwrap()
+        else {
+            panic!("state");
+        };
+        assert_eq!(v.active_apps, 0);
+    }
+
+    #[test]
+    fn rate_sweep_reports_efficiency_per_rate() {
+        let mut mk =
+            || -> Result<Box<dyn ControlPlane>> { Ok(Box::new(local_master(4, "sweep"))) };
+        let mut recs = |_rate: f64| mk_records(30, 0.0, 0.1);
+        // absurdly high offered rates saturate; efficiency stays (0, 1]
+        let points = rate_sweep(&mut mk, &mut recs, &[50.0, 1e9], 8, 0.0).unwrap();
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            assert!(p.efficiency > 0.0 && p.efficiency <= 1.0, "{p:?}");
+            assert!(p.p50_submit_us >= 0.0);
+            assert!(p.p99_submit_us >= p.p50_submit_us);
+        }
+        // an offered rate of 1e9/s cannot be achieved: the sweep reports
+        // the saturation honestly
+        assert!(points[1].efficiency < 1.0, "{points:?}");
+    }
+}

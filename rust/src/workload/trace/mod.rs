@@ -1,0 +1,38 @@
+//! Trace-driven workloads (DESIGN.md §13): parse recorded job-arrival
+//! traces and stream them — without ever materializing them — through the
+//! DES ([`driver::replay_des`]) or a live master over the control plane
+//! ([`driver::replay_live`], [`driver::rate_sweep`]).
+//!
+//! Layering:
+//!
+//! * [`schema`] — [`TraceRecord`] + the schema-adapter layer mapping
+//!   foreign CSV column layouts (Alibaba-like, Borg-like) and the native
+//!   export layout onto one internal record, with typed [`TraceError`]s
+//!   for every malformed input.
+//! * [`reader`] — [`TraceReader`], a line-at-a-time iterator of validated
+//!   records over any `BufRead` (file, socket, in-memory buffer).
+//! * [`export`] — write synthesized workloads back out in the native
+//!   schema, losslessly (`dorm replay --export`).
+//! * [`driver`] — the bounded-buffer [`TraceSource`] adapter into the
+//!   simulator's `ArrivalSource` seam plus the replay entry points the
+//!   `dorm replay` verb calls.
+//!
+//! Memory discipline: every stage is an iterator; the only buffering
+//! between a trace file and the DES/master is [`TraceSource`]'s bounded
+//! look-ahead (`[trace] buffer`), whose high-water mark is asserted in
+//! `tests/trace.rs` against a 100k-arrival trace.
+
+pub mod driver;
+pub mod export;
+pub mod reader;
+pub mod schema;
+
+pub use driver::{
+    rate_sweep, replay_des, replay_live, DesReplayReport, LiveOpts, LiveReplayReport,
+    RatePoint, ReplayOpts, TraceSource,
+};
+pub use export::{export_workload, record_line, record_of, write_records, DORM_HEADER};
+pub use reader::TraceReader;
+pub use schema::{
+    SchemaAdapter, SchemaDefaults, TraceError, TraceRecord, TraceSchema, BORG_MACHINE,
+};

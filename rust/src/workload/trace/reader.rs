@@ -1,0 +1,183 @@
+//! Streaming trace reader: an iterator of validated [`TraceRecord`]s over
+//! any `BufRead`, holding one line in memory at a time.
+//!
+//! The reader owns the stateful validation the per-line adapter cannot do:
+//! monotone submission times across records.  Blank lines and `#` comments
+//! are skipped.  The first error fuses the iterator (a trace is a totally
+//! ordered replay log — there is no meaningful "skip the bad record and
+//! continue").
+
+use std::io::BufRead;
+
+use super::schema::{SchemaAdapter, SchemaDefaults, TraceError, TraceRecord, TraceSchema};
+
+/// Line-by-line reader; `Iterator<Item = Result<TraceRecord, TraceError>>`.
+pub struct TraceReader<R: BufRead> {
+    input: R,
+    adapter: SchemaAdapter,
+    line_no: usize,
+    last_submit: f64,
+    /// Fused after the first error or EOF.
+    done: bool,
+    buf: String,
+}
+
+impl<R: BufRead> TraceReader<R> {
+    /// Read the header line, detect the schema, resolve columns.
+    pub fn new(input: R) -> Result<Self, TraceError> {
+        Self::with_defaults(input, SchemaDefaults::default())
+    }
+
+    /// [`TraceReader::new`] with explicit width defaults (the `[trace]`
+    /// config section maps onto these).
+    pub fn with_defaults(mut input: R, defaults: SchemaDefaults) -> Result<Self, TraceError> {
+        let mut buf = String::new();
+        let mut line_no = 0usize;
+        // the header is the first non-blank, non-comment line
+        let header = loop {
+            buf.clear();
+            let n = input
+                .read_line(&mut buf)
+                .map_err(|e| TraceError::Io(e.to_string()))?;
+            if n == 0 {
+                return Err(TraceError::EmptyTrace);
+            }
+            line_no += 1;
+            let t = buf.trim();
+            if !t.is_empty() && !t.starts_with('#') {
+                break t.to_string();
+            }
+        };
+        let adapter = SchemaAdapter::detect(&header, defaults)?;
+        Ok(TraceReader {
+            input,
+            adapter,
+            line_no,
+            last_submit: f64::NEG_INFINITY,
+            done: false,
+            buf: String::new(),
+        })
+    }
+
+    pub fn schema(&self) -> TraceSchema {
+        self.adapter.schema()
+    }
+}
+
+impl<R: BufRead> Iterator for TraceReader<R> {
+    type Item = Result<TraceRecord, TraceError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        loop {
+            self.buf.clear();
+            let n = match self.input.read_line(&mut self.buf) {
+                Ok(n) => n,
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(TraceError::Io(e.to_string())));
+                }
+            };
+            if n == 0 {
+                self.done = true;
+                return None;
+            }
+            self.line_no += 1;
+            let t = self.buf.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let rec = match self.adapter.parse_line(self.line_no, t) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+            };
+            if rec.submit_hours < self.last_submit {
+                self.done = true;
+                return Some(Err(TraceError::NonMonotone {
+                    line: self.line_no,
+                    prev_hours: self.last_submit,
+                    now_hours: rec.submit_hours,
+                }));
+            }
+            self.last_submit = rec.submit_hours;
+            return Some(Ok(rec));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const DORM: &str = "\
+# a comment, then the header
+submit_hours,model,engine,cpus,gpus,ram_gb,weight,n_min,n_max,baseline_n,duration_hours
+0.0,LR,MxNet,2,0,8,1,1,32,8,1.5
+
+0.25,MF,TensorFlow,2,0,6,2,1,32,8,0.75
+";
+
+    #[test]
+    fn reads_native_trace_with_comments_and_blanks() {
+        let mut r = TraceReader::new(Cursor::new(DORM)).unwrap();
+        assert_eq!(r.schema(), TraceSchema::Dorm);
+        let a = r.next().unwrap().unwrap();
+        assert_eq!(a.tag, "LR");
+        assert_eq!(a.submit_hours, 0.0);
+        assert_eq!(a.baseline_n, 8);
+        let b = r.next().unwrap().unwrap();
+        assert_eq!(b.tag, "MF");
+        assert!((b.duration_hours - 0.75).abs() < 1e-12);
+        assert!(r.next().is_none());
+        assert!(r.next().is_none(), "fused after EOF");
+    }
+
+    #[test]
+    fn empty_input_is_typed() {
+        assert_eq!(TraceReader::new(Cursor::new("")).err(), Some(TraceError::EmptyTrace));
+        assert_eq!(
+            TraceReader::new(Cursor::new("# only comments\n\n")).err(),
+            Some(TraceError::EmptyTrace)
+        );
+    }
+
+    #[test]
+    fn non_monotone_times_fuse_the_stream() {
+        let text = "start_time,job_name,plan_cpu,plan_mem,duration\n\
+                    3600, a, 100, 4, 60\n\
+                    1800, b, 100, 4, 60\n\
+                    7200, c, 100, 4, 60\n";
+        let mut r = TraceReader::new(Cursor::new(text)).unwrap();
+        assert!(r.next().unwrap().is_ok());
+        let e = r.next().unwrap().unwrap_err();
+        assert_eq!(e, TraceError::NonMonotone { line: 3, prev_hours: 1.0, now_hours: 0.5 });
+        assert!(r.next().is_none(), "errors fuse the reader");
+    }
+
+    #[test]
+    fn bad_row_fuses_the_stream() {
+        let text = "start_time,job_name,plan_cpu,plan_mem,duration\n\
+                    0, a, 100, 4, 60\n\
+                    10, b, 100, 4\n";
+        let mut r = TraceReader::new(Cursor::new(text)).unwrap();
+        assert!(r.next().unwrap().is_ok());
+        assert!(matches!(r.next().unwrap().unwrap_err(), TraceError::ShortRow { .. }));
+        assert!(r.next().is_none());
+    }
+
+    #[test]
+    fn equal_times_are_fine() {
+        let text = "start_time,job_name,plan_cpu,plan_mem,duration\n\
+                    0, a, 100, 4, 60\n\
+                    0, b, 100, 4, 60\n";
+        let r = TraceReader::new(Cursor::new(text)).unwrap();
+        let recs: Result<Vec<_>, _> = r.collect();
+        assert_eq!(recs.unwrap().len(), 2);
+    }
+}

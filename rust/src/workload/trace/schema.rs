@@ -1,0 +1,562 @@
+//! Trace records, typed parse errors, and the schema-adapter layer that
+//! maps foreign CSV column layouts onto [`TraceRecord`].
+//!
+//! Three layouts are recognized, detected from the header line:
+//!
+//! * **dorm** — the native export schema (`submit_hours,model,engine,…`),
+//!   lossless round-trip with [`super::export`].
+//! * **alibaba** — an Alibaba-cluster-trace-like job table
+//!   (`start_time` seconds, `plan_cpu` in centi-cores, `plan_mem` GB,
+//!   `inst_num` instances, `duration` seconds).
+//! * **borg** — a Google-Borg-like task-events layout (`time` in
+//!   microseconds, `cpu_request`/`memory_request` as fractions of one
+//!   nominal machine, `priority`, `instances`, `runtime` seconds).
+//!
+//! Columns are resolved *by name*, not position, so reordered or
+//! extra columns in a foreign trace are fine; a missing required column
+//! is a typed [`TraceError::MissingColumn`].  Every field is validated on
+//! parse — NaN, negative demand, non-positive duration and non-monotone
+//! timestamps are all typed errors, never panics (`tests/trace.rs`
+//! feeds the hostile cases).
+
+use crate::app::Engine;
+use crate::resources::Res;
+use crate::sim::SimArrival;
+
+/// Nominal machine the Borg-like normalized requests are scaled by:
+/// ⟨cores, GPUs, RAM GB⟩.  Borg traces publish requests as fractions of
+/// the largest machine; any consistent scale works for replay since the
+/// cluster config is chosen to match.
+pub const BORG_MACHINE: [f64; 3] = [64.0, 0.0, 256.0];
+
+/// One parsed job-arrival record, schema-independent.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Submission time, hours from trace start (non-negative, finite,
+    /// non-decreasing across a trace).
+    pub submit_hours: f64,
+    /// Job tag (model name / job id) — metrics grouping only.
+    pub tag: String,
+    pub engine: Engine,
+    /// Per-container demand vector ⟨CPUs, GPUs, RAM GB⟩.
+    pub demand: Res,
+    pub weight: f64,
+    pub n_min: u32,
+    pub n_max: u32,
+    /// Container count the static baselines pin this job at.
+    pub baseline_n: u32,
+    /// Duration at `baseline_n` containers, hours (positive, finite).
+    pub duration_hours: f64,
+    /// Scheduling priority, where the source trace has one (borg).
+    pub priority: Option<u32>,
+    /// Submitting user, where the source trace has one.
+    pub user: Option<String>,
+}
+
+impl TraceRecord {
+    /// The self-describing arrival the DES consumes.
+    pub fn to_arrival(&self) -> SimArrival {
+        SimArrival {
+            tag: self.tag.clone(),
+            engine: self.engine,
+            demand: self.demand.clone(),
+            weight: self.weight,
+            n_min: self.n_min,
+            n_max: self.n_max,
+            baseline_n: self.baseline_n,
+            submit_hours: self.submit_hours,
+            duration_at_baseline_hours: self.duration_hours,
+        }
+    }
+}
+
+/// Typed trace-parse failures.  `PartialEq` so tests can assert the exact
+/// variant; `Display`/`Error` so they thread through `anyhow` unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceError {
+    /// Underlying reader failed (message of the `io::Error`).
+    Io(String),
+    /// The input had no header line at all.
+    EmptyTrace,
+    /// The header matched none of the known layouts.
+    UnknownSchema { header: String },
+    /// A required column for the detected schema is absent.
+    MissingColumn { schema: &'static str, column: &'static str },
+    /// A data row has fewer fields than the header promised.
+    ShortRow { line: usize, want: usize, got: usize },
+    /// A field failed to parse or failed validation (NaN, negative
+    /// demand, zero duration, unknown engine, …).
+    BadField { line: usize, column: &'static str, value: String, reason: &'static str },
+    /// Submission times went backwards.
+    NonMonotone { line: usize, prev_hours: f64, now_hours: f64 },
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Io(e) => write!(f, "trace read failed: {e}"),
+            TraceError::EmptyTrace => write!(f, "empty trace: no header line"),
+            TraceError::UnknownSchema { header } => write!(
+                f,
+                "unrecognized trace schema (header {header:?}); expected a dorm \
+                 (submit_hours,…), alibaba-like (plan_cpu,…) or borg-like \
+                 (cpu_request,…) layout"
+            ),
+            TraceError::MissingColumn { schema, column } => {
+                write!(f, "{schema} trace is missing required column {column:?}")
+            }
+            TraceError::ShortRow { line, want, got } => {
+                write!(f, "line {line}: expected {want} fields, got {got}")
+            }
+            TraceError::BadField { line, column, value, reason } => {
+                write!(f, "line {line}: bad {column} {value:?}: {reason}")
+            }
+            TraceError::NonMonotone { line, prev_hours, now_hours } => write!(
+                f,
+                "line {line}: submission time went backwards ({now_hours} h after \
+                 {prev_hours} h); traces must be sorted by submit time"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// The recognized column layouts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceSchema {
+    Dorm,
+    Alibaba,
+    Borg,
+}
+
+impl TraceSchema {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceSchema::Dorm => "dorm",
+            TraceSchema::Alibaba => "alibaba",
+            TraceSchema::Borg => "borg",
+        }
+    }
+}
+
+/// Width/weight defaults applied where a foreign schema has no matching
+/// column (see [`crate::config::TraceConfig`] for the `[trace]` knobs).
+#[derive(Clone, Debug)]
+pub struct SchemaDefaults {
+    /// Clamp on widths taken from trace columns (`inst_num`/`instances`).
+    pub max_width: u32,
+    /// Width used when the trace has no instance-count column.
+    pub default_width: u32,
+}
+
+impl Default for SchemaDefaults {
+    fn default() -> Self {
+        SchemaDefaults { max_width: 32, default_width: 8 }
+    }
+}
+
+/// A resolved header: which physical column each logical field lives in.
+#[derive(Clone, Debug)]
+pub struct SchemaAdapter {
+    schema: TraceSchema,
+    ncols: usize,
+    defaults: SchemaDefaults,
+    // logical field -> column index (None = optional column absent)
+    submit: usize,
+    tag: usize,
+    cpu: usize,
+    mem: usize,
+    duration: usize,
+    gpu: Option<usize>,
+    width: Option<usize>,
+    engine: Option<usize>,
+    weight: Option<usize>,
+    n_min: Option<usize>,
+    baseline: Option<usize>,
+    priority: Option<usize>,
+    user: Option<usize>,
+}
+
+fn split_csv(line: &str) -> Vec<&str> {
+    line.split(',').map(str::trim).collect()
+}
+
+impl SchemaAdapter {
+    /// Detect the layout from a header line and resolve its columns.
+    pub fn detect(header: &str, defaults: SchemaDefaults) -> Result<Self, TraceError> {
+        let cols = split_csv(header);
+        let find = |name: &str| cols.iter().position(|c| c.eq_ignore_ascii_case(name));
+        let schema = if find("submit_hours").is_some() {
+            TraceSchema::Dorm
+        } else if find("plan_cpu").is_some() {
+            TraceSchema::Alibaba
+        } else if find("cpu_request").is_some() {
+            TraceSchema::Borg
+        } else {
+            return Err(TraceError::UnknownSchema { header: header.to_string() });
+        };
+        let need = |name: &'static str| {
+            find(name).ok_or(TraceError::MissingColumn { schema: schema.name(), column: name })
+        };
+        let adapter = match schema {
+            TraceSchema::Dorm => SchemaAdapter {
+                schema,
+                ncols: cols.len(),
+                defaults,
+                submit: need("submit_hours")?,
+                tag: need("model")?,
+                cpu: need("cpus")?,
+                mem: need("ram_gb")?,
+                duration: need("duration_hours")?,
+                gpu: Some(need("gpus")?),
+                width: Some(need("n_max")?),
+                engine: Some(need("engine")?),
+                weight: Some(need("weight")?),
+                n_min: Some(need("n_min")?),
+                baseline: Some(need("baseline_n")?),
+                priority: find("priority"),
+                user: find("user"),
+            },
+            TraceSchema::Alibaba => SchemaAdapter {
+                schema,
+                ncols: cols.len(),
+                defaults,
+                submit: need("start_time")?,
+                tag: need("job_name")?,
+                cpu: need("plan_cpu")?,
+                mem: need("plan_mem")?,
+                duration: need("duration")?,
+                gpu: find("plan_gpu"),
+                width: find("inst_num"),
+                engine: None,
+                weight: None,
+                n_min: None,
+                baseline: None,
+                priority: None,
+                user: find("user"),
+            },
+            TraceSchema::Borg => SchemaAdapter {
+                schema,
+                ncols: cols.len(),
+                defaults,
+                submit: need("time")?,
+                tag: need("job_id")?,
+                cpu: need("cpu_request")?,
+                mem: need("memory_request")?,
+                duration: need("runtime")?,
+                gpu: find("gpu_request"),
+                width: find("instances"),
+                engine: None,
+                weight: None,
+                n_min: None,
+                baseline: None,
+                priority: find("priority"),
+                user: find("user"),
+            },
+        };
+        Ok(adapter)
+    }
+
+    pub fn schema(&self) -> TraceSchema {
+        self.schema
+    }
+
+    /// Parse one data row into a validated [`TraceRecord`].
+    pub fn parse_line(&self, line_no: usize, line: &str) -> Result<TraceRecord, TraceError> {
+        let fields = split_csv(line);
+        if fields.len() < self.ncols {
+            return Err(TraceError::ShortRow {
+                line: line_no,
+                want: self.ncols,
+                got: fields.len(),
+            });
+        }
+        let num = |idx: usize, column: &'static str| -> Result<f64, TraceError> {
+            let raw = fields[idx];
+            let v: f64 = raw.parse().map_err(|_| TraceError::BadField {
+                line: line_no,
+                column,
+                value: raw.to_string(),
+                reason: "not a number",
+            })?;
+            if !v.is_finite() {
+                return Err(TraceError::BadField {
+                    line: line_no,
+                    column,
+                    value: raw.to_string(),
+                    reason: "not finite",
+                });
+            }
+            Ok(v)
+        };
+        let non_neg = |idx: usize, column: &'static str| -> Result<f64, TraceError> {
+            let v = num(idx, column)?;
+            if v < 0.0 {
+                return Err(TraceError::BadField {
+                    line: line_no,
+                    column,
+                    value: fields[idx].to_string(),
+                    reason: "must be >= 0",
+                });
+            }
+            Ok(v)
+        };
+        let width_of = |v: f64, column: &'static str| -> Result<u32, TraceError> {
+            if v < 1.0 || v > u32::MAX as f64 {
+                return Err(TraceError::BadField {
+                    line: line_no,
+                    column,
+                    value: format!("{v}"),
+                    reason: "must be a count >= 1",
+                });
+            }
+            Ok((v as u32).min(self.defaults.max_width).max(1))
+        };
+
+        // timing: native hours; alibaba seconds; borg microseconds
+        let raw_submit = non_neg(self.submit, "submit time")?;
+        let submit_hours = match self.schema {
+            TraceSchema::Dorm => raw_submit,
+            TraceSchema::Alibaba => raw_submit / 3_600.0,
+            TraceSchema::Borg => raw_submit / 3.6e9,
+        };
+        let raw_duration = num(self.duration, "duration")?;
+        let duration_hours = match self.schema {
+            TraceSchema::Dorm => raw_duration,
+            TraceSchema::Alibaba | TraceSchema::Borg => raw_duration / 3_600.0,
+        };
+        if duration_hours <= 0.0 {
+            return Err(TraceError::BadField {
+                line: line_no,
+                column: "duration",
+                value: fields[self.duration].to_string(),
+                reason: "must be > 0",
+            });
+        }
+
+        // demand: native absolute; alibaba centi-cores + GB; borg
+        // machine-fractions scaled by BORG_MACHINE
+        let raw_cpu = non_neg(self.cpu, "cpu demand")?;
+        let raw_mem = non_neg(self.mem, "memory demand")?;
+        let raw_gpu = match self.gpu {
+            Some(idx) => non_neg(idx, "gpu demand")?,
+            None => 0.0,
+        };
+        let demand = match self.schema {
+            TraceSchema::Dorm => Res::cpu_gpu_ram(raw_cpu, raw_gpu, raw_mem),
+            TraceSchema::Alibaba => Res::cpu_gpu_ram(raw_cpu / 100.0, raw_gpu, raw_mem),
+            TraceSchema::Borg => Res::cpu_gpu_ram(
+                raw_cpu * BORG_MACHINE[0],
+                raw_gpu * BORG_MACHINE[1].max(1.0),
+                raw_mem * BORG_MACHINE[2],
+            ),
+        };
+        if demand.is_zero() {
+            return Err(TraceError::BadField {
+                line: line_no,
+                column: "cpu demand",
+                value: fields[self.cpu].to_string(),
+                reason: "demand vector is all zero",
+            });
+        }
+
+        let n_max = match self.width {
+            Some(idx) => width_of(num(idx, "instance count")?, "instance count")?,
+            None => self.defaults.default_width,
+        };
+        let n_min = match self.n_min {
+            Some(idx) => width_of(num(idx, "n_min")?, "n_min")?,
+            None => 1,
+        };
+        if n_min > n_max {
+            return Err(TraceError::BadField {
+                line: line_no,
+                column: "n_min",
+                value: format!("{n_min}"),
+                reason: "n_min exceeds n_max",
+            });
+        }
+        let baseline_n = match self.baseline {
+            Some(idx) => width_of(num(idx, "baseline_n")?, "baseline_n")?,
+            None => n_max,
+        };
+        let priority = match self.priority {
+            Some(idx) => {
+                let v = non_neg(idx, "priority")?;
+                Some(v as u32)
+            }
+            None => None,
+        };
+        // weight: native column; borg derives from priority bands; else 1
+        let weight = match self.weight {
+            Some(idx) => {
+                let w = num(idx, "weight")?;
+                if w <= 0.0 {
+                    return Err(TraceError::BadField {
+                        line: line_no,
+                        column: "weight",
+                        value: fields[idx].to_string(),
+                        reason: "must be > 0",
+                    });
+                }
+                w
+            }
+            None => match priority {
+                Some(p) => 1.0 + (p / 4) as f64,
+                None => 1.0,
+            },
+        };
+        let engine = match self.engine {
+            Some(idx) => Engine::parse(fields[idx]).map_err(|_| TraceError::BadField {
+                line: line_no,
+                column: "engine",
+                value: fields[idx].to_string(),
+                reason: "unknown engine",
+            })?,
+            None => Engine::MxNet,
+        };
+        let user = self.user.map(|idx| fields[idx].to_string());
+
+        Ok(TraceRecord {
+            submit_hours,
+            tag: fields[self.tag].to_string(),
+            engine,
+            demand,
+            weight,
+            n_min,
+            n_max,
+            baseline_n,
+            duration_hours,
+            priority,
+            user,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_all_three_schemas() {
+        let d = SchemaAdapter::detect(
+            "submit_hours,model,engine,cpus,gpus,ram_gb,weight,n_min,n_max,baseline_n,duration_hours",
+            SchemaDefaults::default(),
+        )
+        .unwrap();
+        assert_eq!(d.schema(), TraceSchema::Dorm);
+        let a = SchemaAdapter::detect(
+            "start_time,job_name,inst_num,plan_cpu,plan_mem,plan_gpu,duration",
+            SchemaDefaults::default(),
+        )
+        .unwrap();
+        assert_eq!(a.schema(), TraceSchema::Alibaba);
+        let b = SchemaAdapter::detect(
+            "time,job_id,priority,cpu_request,memory_request,instances,runtime",
+            SchemaDefaults::default(),
+        )
+        .unwrap();
+        assert_eq!(b.schema(), TraceSchema::Borg);
+        let e = SchemaAdapter::detect("a,b,c", SchemaDefaults::default()).unwrap_err();
+        assert!(matches!(e, TraceError::UnknownSchema { .. }));
+    }
+
+    #[test]
+    fn column_order_does_not_matter() {
+        // same columns, shuffled order
+        let a = SchemaAdapter::detect(
+            "plan_mem,duration,job_name,plan_cpu,start_time",
+            SchemaDefaults::default(),
+        )
+        .unwrap();
+        let r = a.parse_line(2, "8, 7200, j1, 400, 0").unwrap();
+        assert_eq!(r.demand, Res::cpu_gpu_ram(4.0, 0.0, 8.0));
+        assert!((r.duration_hours - 2.0).abs() < 1e-12);
+        assert_eq!(r.tag, "j1");
+    }
+
+    #[test]
+    fn missing_required_column_is_typed() {
+        let e = SchemaAdapter::detect(
+            "start_time,job_name,plan_cpu,duration", // no plan_mem
+            SchemaDefaults::default(),
+        )
+        .unwrap_err();
+        assert_eq!(
+            e,
+            TraceError::MissingColumn { schema: "alibaba", column: "plan_mem" }
+        );
+    }
+
+    #[test]
+    fn alibaba_units_convert() {
+        let a = SchemaAdapter::detect(
+            "start_time,job_name,inst_num,plan_cpu,plan_mem,duration",
+            SchemaDefaults::default(),
+        )
+        .unwrap();
+        let r = a.parse_line(2, "7200, job-7, 4, 200, 16, 1800").unwrap();
+        assert!((r.submit_hours - 2.0).abs() < 1e-12);
+        assert_eq!(r.demand, Res::cpu_gpu_ram(2.0, 0.0, 16.0));
+        assert_eq!(r.n_max, 4);
+        assert_eq!(r.baseline_n, 4);
+        assert!((r.duration_hours - 0.5).abs() < 1e-12);
+        assert_eq!(r.engine, Engine::MxNet);
+        assert!((r.weight - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn borg_units_and_priority_weight() {
+        let b = SchemaAdapter::detect(
+            "time,job_id,priority,cpu_request,memory_request,instances,runtime",
+            SchemaDefaults::default(),
+        )
+        .unwrap();
+        let r = b.parse_line(2, "3600000000, 42, 9, 0.0625, 0.03125, 2, 360").unwrap();
+        assert!((r.submit_hours - 1.0).abs() < 1e-9);
+        assert_eq!(r.demand, Res::cpu_gpu_ram(4.0, 0.0, 8.0));
+        assert_eq!(r.priority, Some(9));
+        assert!((r.weight - 3.0).abs() < 1e-12, "priority 9 -> band 2 -> weight 3");
+        assert_eq!(r.n_max, 2);
+        assert!((r.duration_hours - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hostile_fields_are_typed_not_panics() {
+        let a = SchemaAdapter::detect(
+            "start_time,job_name,plan_cpu,plan_mem,duration",
+            SchemaDefaults::default(),
+        )
+        .unwrap();
+        // NaN demand
+        let e = a.parse_line(3, "0, j, NaN, 8, 60").unwrap_err();
+        assert!(matches!(e, TraceError::BadField { column: "cpu demand", reason: "not finite", .. }), "{e:?}");
+        // negative demand
+        let e = a.parse_line(3, "0, j, -100, 8, 60").unwrap_err();
+        assert!(matches!(e, TraceError::BadField { reason: "must be >= 0", .. }));
+        // zero duration
+        let e = a.parse_line(3, "0, j, 100, 8, 0").unwrap_err();
+        assert!(matches!(e, TraceError::BadField { column: "duration", .. }));
+        // short row
+        let e = a.parse_line(3, "0, j, 100").unwrap_err();
+        assert_eq!(e, TraceError::ShortRow { line: 3, want: 5, got: 3 });
+        // unparsable number
+        let e = a.parse_line(3, "soon, j, 100, 8, 60").unwrap_err();
+        assert!(matches!(e, TraceError::BadField { reason: "not a number", .. }));
+        // all-zero demand vector
+        let e = a.parse_line(3, "0, j, 0, 0, 60").unwrap_err();
+        assert!(matches!(e, TraceError::BadField { reason: "demand vector is all zero", .. }));
+    }
+
+    #[test]
+    fn width_clamped_by_defaults() {
+        let a = SchemaAdapter::detect(
+            "start_time,job_name,inst_num,plan_cpu,plan_mem,duration",
+            SchemaDefaults { max_width: 16, default_width: 8 },
+        )
+        .unwrap();
+        let r = a.parse_line(2, "0, j, 4000, 100, 1, 60").unwrap();
+        assert_eq!(r.n_max, 16);
+    }
+}

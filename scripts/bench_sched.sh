@@ -14,6 +14,11 @@
 # that the delta packer actually ran, and that it never moves more
 # containers than the full re-pack — so this doubles as a functional
 # check of the incremental path.
+#
+# The replay_rate bench runs second (DESIGN.md §13): DES streaming
+# throughput behind the bounded trace buffer plus the live rate sweep
+# against fresh in-process masters; it splices its "replay" series into
+# the same BENCH_sched.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -27,6 +32,7 @@ esac
 export DORM_BENCH_JSON="${DORM_BENCH_JSON:-$PWD/BENCH_sched.json}"
 
 cargo bench --manifest-path rust/Cargo.toml --bench sched_latency
+cargo bench --manifest-path rust/Cargo.toml --bench replay_rate
 
 echo
 echo "== BENCH_sched.json"

@@ -12,9 +12,12 @@
 #        DORM_BENCH_TOLERANCE (ratio, default 1.25).
 #
 # The baseline records new.p50_us per (apps, servers) scale, plus p50_us
-# per (cells, apps, servers) point of the sharded-scheduler sweep.  p50
-# is the gated statistic — p99 on shared CI runners is too noisy to gate
-# on and is reported for information only.  Sweep points present in only
+# per (cells, apps, servers) point of the sharded-scheduler sweep, plus
+# p50_submit_us and efficiency per offered rate of the trace-replay sweep
+# (the "replay" series from benches/replay_rate.rs).  p50 is the gated
+# statistic — p99 on shared CI runners is too noisy to gate on and is
+# reported for information only; replay efficiency is gated on an
+# absolute 0.25 slide rather than a ratio.  Sweep points present in only
 # one of the two files are reported and skipped, so changing the sweep
 # scales does not wedge the gate (refresh the baseline in the same PR
 # instead).
@@ -66,6 +69,34 @@ for key in sorted(fp):
 for key in sorted(set(bp) - set(fp)):
     print(f"  note: baseline scale {key[0]}x{key[1]} not in fresh run; skipped")
 
+def replay_points(doc):
+    return {p["rate_per_sec"]: p for p in doc.get("replay", {}).get("rates", [])}
+
+fr, br = replay_points(fresh), replay_points(base)
+for rate in sorted(fr):
+    label = f"replay@{rate:.0f}/s"
+    if rate not in br:
+        print(f"  note: {label} has no baseline; skipped")
+        continue
+    compared += 1
+    got, ref = fr[rate]["p50_submit_us"], br[rate]["p50_submit_us"]
+    ratio = got / ref if ref > 0 else float("inf")
+    verdict = "OK" if ratio <= tol else "REGRESSION"
+    print(f"  {label}: submit p50 {got:.1f} us vs baseline {ref:.1f} us "
+          f"({ratio:.2f}x, tolerance {tol:.2f}x) {verdict}")
+    if ratio > tol:
+        failures.append((label, 0))
+    # efficiency is a floor, not a latency: gate on an absolute slide so
+    # noise near 1.0 never trips it, a saturation collapse always does
+    eg, er = fr[rate]["efficiency"], br[rate]["efficiency"]
+    if eg < er - 0.25:
+        print(f"  {label}: efficiency {eg:.3f} collapsed vs baseline {er:.3f} REGRESSION")
+        failures.append((f"{label}-efficiency", 0))
+    else:
+        print(f"      (efficiency {eg:.3f} vs baseline {er:.3f})")
+for rate in sorted(set(br) - set(fr)):
+    print(f"  note: baseline replay rate {rate:.0f}/s not in fresh run; skipped")
+
 def cell_points(doc):
     return {(s["cells"], s["apps"], s["servers"]): s for s in doc.get("cells", [])}
 
@@ -92,7 +123,7 @@ if compared == 0:
     print("no comparable sweep points between fresh and baseline", file=sys.stderr)
     sys.exit(2)
 if failures:
-    scales = ", ".join(f"{a}x{s}" for a, s in failures)
+    scales = ", ".join(f"{a}x{s}" if s else str(a) for a, s in failures)
     print(f"bench gate FAILED at {scales}: p50 latency regressed past "
           f"{tol:.2f}x the baseline.", file=sys.stderr)
     print("If the regression is intended (or the baseline is stale), refresh it:\n"

@@ -1,0 +1,97 @@
+#!/usr/bin/env bash
+# Trace-replay smoke (DESIGN.md §13): exercise every `dorm replay` path
+# end to end — schema-detected DES replay of the shipped sample traces,
+# a generate -> export -> re-read round trip with a tight streaming
+# buffer, a live replay against a real TCP master, and a one-point rate
+# sweep.  Run from the repo root after `cargo build --release`; exits
+# non-zero on any failed step.
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/dorm}
+PORT=${PORT:-46013}
+ADDR=127.0.0.1:$PORT
+STORE=$(mktemp -d)
+LOG=$(mktemp -d)
+MASTER_PID=
+
+cleanup() {
+  [ -n "$MASTER_PID" ] && kill "$MASTER_PID" 2>/dev/null || true
+  rm -rf "$STORE" "$LOG"
+}
+trap cleanup EXIT
+
+fail() {
+  echo "SMOKE FAIL: $1" >&2
+  for f in "$LOG"/*.log; do
+    [ -f "$f" ] || continue
+    echo "--- $f ---" >&2; cat "$f" >&2
+  done
+  exit 1
+}
+
+echo "== DES replay of the shipped sample traces (schema detection)"
+OUT=$("$BIN" replay --trace examples/traces/table2_sample.csv --mode des) \
+  || fail "sample des replay exited non-zero: $OUT"
+echo "$OUT" | grep -q "dorm schema" || fail "native schema not detected: $OUT"
+echo "$OUT" | grep -q "16 records read" || fail "expected 16 records: $OUT"
+echo "$OUT" | grep -Eq "[1-9][0-9]* completed" || fail "nothing completed: $OUT"
+
+OUT=$("$BIN" replay --trace examples/traces/alibaba_mini.csv --mode des) \
+  || fail "alibaba des replay exited non-zero: $OUT"
+echo "$OUT" | grep -q "alibaba schema" || fail "alibaba schema not detected: $OUT"
+echo "$OUT" | grep -q "8 records read" || fail "expected 8 records: $OUT"
+
+echo "== generate -> export -> re-read round trip, tight buffer"
+TRACE="$LOG/gen.csv"
+OUT=$("$BIN" replay --gen 40 --seed 17 --export "$TRACE") || fail "export: $OUT"
+echo "$OUT" | grep -q "wrote 40 records" || fail "export count: $OUT"
+OUT=$("$BIN" replay --trace "$TRACE" --mode des --buffer 8) \
+  || fail "re-read des replay: $OUT"
+echo "$OUT" | grep -q "dorm schema" || fail "exported trace must be native: $OUT"
+echo "$OUT" | grep -q "40 records read" || fail "expected 40 records back: $OUT"
+# the O(buffer) guarantee, as printed: "streaming: max N records buffered (cap 8)"
+MAXBUF=$(echo "$OUT" | sed -n 's/.*streaming: max \([0-9]*\) records buffered.*/\1/p')
+[ -n "$MAXBUF" ] || fail "no streaming line in: $OUT"
+[ "$MAXBUF" -le 8 ] || fail "buffer cap violated: $MAXBUF > 8"
+
+echo "== hostile trace is a typed error, not a panic"
+printf 'start_time,job_name,plan_cpu,plan_mem,duration\n0,a,100,4,60\n10,b,NaN,4,60\n' \
+  > "$LOG/bad.csv"
+if OUT=$("$BIN" replay --trace "$LOG/bad.csv" --mode des 2>&1); then
+  fail "hostile trace accepted: $OUT"
+fi
+echo "$OUT" | grep -q "after 1 records" || fail "no typed trace error: $OUT"
+
+echo "== live replay against a real TCP master"
+"$BIN" master --bind "$ADDR" --slaves 8 --cpu 16 --gpu 2 --ram 64 \
+  --store "$STORE" >"$LOG/master.log" 2>&1 &
+MASTER_PID=$!
+for _ in $(seq 1 50); do
+  grep -q "listening" "$LOG/master.log" 2>/dev/null && break
+  kill -0 "$MASTER_PID" 2>/dev/null || fail "master died during startup"
+  sleep 0.1
+done
+grep -q "listening" "$LOG/master.log" || fail "master never started listening"
+
+OUT=$("$BIN" replay --gen 30 --seed 17 --mode live --connect "$ADDR" --window 8) \
+  || fail "live replay: $OUT"
+echo "$OUT" | grep -q "30 submitted" || fail "expected 30 submissions: $OUT"
+echo "$OUT" | grep -q "30 completed" || fail "window + drain must complete all 30: $OUT"
+echo "$OUT" | grep -q " 0 rejected" || fail "master rejected submissions: $OUT"
+
+"$BIN" ctl --connect "$ADDR" shutdown | grep -q ok || fail "shutdown not acknowledged"
+for _ in $(seq 1 100); do
+  kill -0 "$MASTER_PID" 2>/dev/null || break
+  sleep 0.1
+done
+kill -0 "$MASTER_PID" 2>/dev/null && fail "master still running after shutdown"
+wait "$MASTER_PID" 2>/dev/null || fail "master exited non-zero"
+MASTER_PID=
+
+echo "== one-point rate sweep (in-process master)"
+OUT=$("$BIN" replay --gen 20 --seed 17 --mode sweep --rates 200 \
+  --apps-per-rate 20 --window 8) || fail "rate sweep: $OUT"
+echo "$OUT" | grep -q "rate sweep: 20 jobs per rate" || fail "sweep header: $OUT"
+echo "$OUT" | grep -q "offered/s" || fail "sweep table missing: $OUT"
+
+echo "SMOKE PASS: des + export round-trip + live + sweep all clean"
