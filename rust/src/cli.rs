@@ -90,6 +90,17 @@ COMMANDS:
                --master-fail H   kill the CMS master at hour H (0 = never)
                --takeover H      standby takeover latency in hours (default 0.05)
                --csv             also write reports/churn_<system>.csv
+               --domains         correlated failure-domain sweep instead
+                                 (DESIGN.md §14): whole racks die in one
+                                 batch; Dorm runs risk-blind AND risk-
+                                 aware (online MTBF estimator steering
+                                 placement); writes churn_domains_*.csv
+               --domain-mtbfs L  domain MTBF hours to sweep (default 2,4,8,16)
+               --domain-size N   servers per rack (default 4)
+               --domain-mttr H   rack repair time hours (default 1)
+               --hot-factor X    rack 0 fails X times more often (default 4)
+               --server-mtbf H   independent per-server MTBF alongside the
+                                 rack outages (default 1e9 = off)
   replay     stream a job-arrival trace through the DES or a live master
              (DESIGN.md §13; never materializes the trace)
                --trace FILE      trace CSV (dorm / alibaba-like / borg-like
@@ -133,6 +144,10 @@ COMMANDS:
                --cells N         shard the scheduler into N cells solving
                                  in parallel ([cells] config section;
                                  default 1 = the single engine)
+               --racks R         name the slaves rackK-sJ in R contiguous
+                                 blocks and enable risk-aware (domain-
+                                 spread) placement over the derived rack
+                                 topology (DESIGN.md §14; default off)
                --lease-ms T      lease timeout; 0 = never expire (default 0)
                --sweep-ms T      lease sweep period (default 250 when
                                  --lease-ms > 0, else off)

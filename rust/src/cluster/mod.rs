@@ -9,7 +9,10 @@
 
 mod placement;
 
-pub use placement::{place, place_delta, Assignment, PackState, Placement, PlacementInput};
+pub use placement::{
+    place, place_delta, place_spread, Assignment, PackState, Placement, PlacementInput,
+    SpreadCtx,
+};
 
 use std::collections::BTreeMap;
 

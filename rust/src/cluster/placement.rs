@@ -99,6 +99,53 @@ fn slack_bits(f: &Res, demand: &Res, total_cap: &Res) -> u64 {
         .to_bits()
 }
 
+/// Failure-domain context for risk-aware placement (DESIGN.md §14): which
+/// rack each server lives in and how risky the online
+/// [`crate::fault::MtbfEstimator`] currently believes each rack is.
+///
+/// Strictly a **tie-break**: servers are still chosen by least
+/// post-placement dominant-share slack first, so allocation totals (the
+/// optimizer's nᵢ) are untouched — only *which* equal-slack server wins
+/// changes.  At equal slack the fill prefers (a) the server in the
+/// lowest-risk domain, then (b) the domain holding the fewest of this
+/// app's containers placed so far in this fill (spread), then (c) the
+/// lowest server index — so with no risk evidence and a single domain the
+/// order reduces exactly to today's `(slack, index)`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpreadCtx {
+    /// Failure-domain (rack) index per server ordinate.
+    pub domain_of: Vec<usize>,
+    /// Estimated failure rate per domain (higher = riskier; 0 = no
+    /// evidence).
+    pub risk: Vec<f64>,
+}
+
+impl SpreadCtx {
+    fn domain(&self, j: usize) -> usize {
+        self.domain_of.get(j).copied().unwrap_or(0)
+    }
+
+    /// Risk of server `j`'s domain as ordered bits (rates are
+    /// non-negative, so IEEE bits order like the float).
+    fn risk_bits(&self, j: usize) -> u64 {
+        self.risk
+            .get(self.domain(j))
+            .copied()
+            .unwrap_or(0.0)
+            .max(0.0)
+            .to_bits()
+    }
+
+    fn n_domains(&self) -> usize {
+        self.domain_of
+            .iter()
+            .map(|&d| d + 1)
+            .max()
+            .unwrap_or(0)
+            .max(self.risk.len())
+    }
+}
+
 /// Place `count` identical `demand`-sized containers by repeated best fit
 /// (feasible server with the least post-placement dominant-share slack,
 /// lowest index on ties — byte-identical to a per-container linear scan)
@@ -108,45 +155,71 @@ fn slack_bits(f: &Res, demand: &Res, total_cap: &Res) -> u64 {
 /// rather than the index being rebuilt, so callers may mutate `free`
 /// between fills without bookkeeping.  On failure `free` is rolled back
 /// (the fill is atomic).
+///
+/// With a [`SpreadCtx`] the heap key grows two middle components —
+/// `(slack, domain risk, app containers already in domain, index)` — so
+/// equal-slack ties resolve away from at-risk domains and toward domain
+/// spread; without one both components are constant 0 and the order is
+/// exactly the historical `(slack, index)`.
 fn fill_best_fit(
     demand: &Res,
     count: u32,
     free: &mut [Res],
     total_cap: &Res,
+    spread: Option<&SpreadCtx>,
 ) -> Option<BTreeMap<ServerId, u32>> {
     let mut assigned: BTreeMap<ServerId, u32> = BTreeMap::new();
     if count == 0 {
         return Some(assigned);
     }
-    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = free
+    // containers of *this* fill placed per domain so far (spread term)
+    let mut domain_used: Vec<u32> = vec![0; spread.map(|s| s.n_domains()).unwrap_or(0)];
+    let key = |f: &Res, j: usize, domain_used: &[u32]| -> (u64, u64, u32, usize) {
+        let (risk, used) = match spread {
+            Some(s) => (
+                s.risk_bits(j),
+                domain_used.get(s.domain(j)).copied().unwrap_or(0),
+            ),
+            None => (0, 0),
+        };
+        (slack_bits(f, demand, total_cap), risk, used, j)
+    };
+    let mut heap: BinaryHeap<Reverse<(u64, u64, u32, usize)>> = free
         .iter()
         .enumerate()
         .filter(|(_, f)| demand.fits_in(f))
-        .map(|(j, f)| Reverse((slack_bits(f, demand, total_cap), j)))
+        .map(|(j, f)| Reverse(key(f, j, &domain_used)))
         .collect();
     for _ in 0..count {
         let j = loop {
-            let Some(Reverse((bits, j))) = heap.pop() else {
+            let Some(Reverse(k)) = heap.pop() else {
                 // atomic: undo the partial fill before reporting failure
                 for (sid, cnt) in &assigned {
                     free[sid.0] += &demand.times(*cnt);
                 }
                 return None;
             };
+            let j = k.3;
             if !demand.fits_in(&free[j]) {
                 continue; // stale: no longer feasible, drop lazily
             }
-            let live = slack_bits(&free[j], demand, total_cap);
-            if live != bits {
-                heap.push(Reverse((live, j))); // stale: re-key lazily
+            let live = key(&free[j], j, &domain_used);
+            if live != k {
+                heap.push(Reverse(live)); // stale: re-key lazily
                 continue;
             }
             break j;
         };
         free[j] -= demand;
+        if let Some(s) = spread {
+            let d = s.domain(j);
+            if d < domain_used.len() {
+                domain_used[d] += 1;
+            }
+        }
         *assigned.entry(ServerId(j)).or_insert(0) += 1;
         if demand.fits_in(&free[j]) {
-            heap.push(Reverse((slack_bits(&free[j], demand, total_cap), j)));
+            heap.push(Reverse(key(&free[j], j, &domain_used)));
         }
     }
     Some(assigned)
@@ -182,6 +255,18 @@ fn net_deltas(
 /// best-fit-decreasing (deltas are netted, so containers that land back on
 /// their original server are neither destroyed nor created).
 pub fn place(inputs: &[PlacementInput], capacities: &[Res]) -> Option<Placement> {
+    place_spread(inputs, capacities, None)
+}
+
+/// [`place`] with a failure-domain tie-break: identical contract and
+/// identical per-app totals, but equal-slack choices prefer low-risk
+/// domains and domain spread (see [`SpreadCtx`]).  `spread = None` is
+/// byte-identical to [`place`].
+pub fn place_spread(
+    inputs: &[PlacementInput],
+    capacities: &[Res],
+    spread: Option<&SpreadCtx>,
+) -> Option<Placement> {
     let m = capacities.first().map(|c| c.m()).unwrap_or(0);
     let mut free: Vec<Res> = capacities.to_vec();
 
@@ -221,7 +306,7 @@ pub fn place(inputs: &[PlacementInput], capacities: &[Res]) -> Option<Placement>
 
     for &idx in &order {
         let inp = movers[idx];
-        let assigned = fill_best_fit(&inp.demand, inp.target, &mut free, &total_cap)?;
+        let assigned = fill_best_fit(&inp.demand, inp.target, &mut free, &total_cap, spread)?;
         assignment.insert(inp.app, assigned);
     }
 
@@ -270,16 +355,35 @@ pub struct PackState {
     free: Vec<Res>,
     tracked: BTreeMap<AppId, Tracked>,
     since_sync: u32,
+    /// Failure-domain tie-break context; orthogonal to the packing books
+    /// (survives [`PackState::invalidate`] — risk knowledge outlives a
+    /// capacity change, which is exactly when it matters).
+    spread: Option<SpreadCtx>,
 }
 
 impl PackState {
     /// Drop everything; the next [`place_delta`] rebuilds from its inputs.
+    /// The [`SpreadCtx`] is deliberately kept: it describes the world, not
+    /// the books.
     pub fn invalidate(&mut self) {
         self.ready = false;
         self.caps_bits.clear();
         self.free.clear();
         self.tracked.clear();
         self.since_sync = 0;
+    }
+
+    /// Install (or clear) the failure-domain tie-break context used by
+    /// every subsequent [`place_delta`] fill and full-re-pack fallback.
+    /// Does not invalidate the packing state — the tie-break only affects
+    /// future equal-slack choices.
+    pub fn set_spread(&mut self, spread: Option<SpreadCtx>) {
+        self.spread = spread;
+    }
+
+    /// The installed failure-domain context, if any.
+    pub fn spread(&self) -> Option<&SpreadCtx> {
+        self.spread.as_ref()
     }
 
     /// True once the state carries a committed free vector.
@@ -418,7 +522,8 @@ fn fallback_full(
     capacities: &[Res],
     state: &mut PackState,
 ) -> Option<Placement> {
-    match place(inputs, capacities) {
+    let spread = state.spread.clone();
+    match place_spread(inputs, capacities, spread.as_ref()) {
         Some(full) => {
             state.adopt(&full, inputs, capacities);
             Some(full)
@@ -528,9 +633,16 @@ pub fn place_delta(
         let db = inputs[b].demand.dominant_share(&total_cap);
         db.total_cmp(&da).then(a.cmp(&b))
     });
+    let spread = state.spread.clone();
     for (idx, cur) in grows {
         let inp = &inputs[idx];
-        match fill_best_fit(&inp.demand, inp.target - cur, &mut state.free, &total_cap) {
+        match fill_best_fit(
+            &inp.demand,
+            inp.target - cur,
+            &mut state.free,
+            &total_cap,
+            spread.as_ref(),
+        ) {
             Some(extra) => {
                 let t = state.tracked.entry(inp.app).or_insert_with(|| Tracked {
                     demand: inp.demand.clone(),
@@ -959,6 +1071,139 @@ mod tests {
         });
     }
 
+    #[test]
+    fn spread_prefers_low_risk_domain_at_equal_slack() {
+        // four empty identical servers: every choice is an equal-slack tie.
+        // Risk-blind best fit takes the lowest index (server 0); the
+        // spread tie-break must steer to the zero-risk domain instead.
+        let caps = vec![Res(vec![4.0]); 4];
+        let ctx = SpreadCtx { domain_of: vec![0, 0, 1, 1], risk: vec![1.0, 0.0] };
+        let inputs = [inp(1, Res(vec![3.0]), 1, &[])];
+        let blind = place(&inputs, &caps).unwrap();
+        assert_eq!(blind.assignment[&AppId(1)][&ServerId(0)], 1);
+        let aware = place_spread(&inputs, &caps, Some(&ctx)).unwrap();
+        assert_eq!(aware.assignment[&AppId(1)].get(&ServerId(0)), None);
+        assert_eq!(aware.assignment[&AppId(1)][&ServerId(2)], 1);
+        // totals identical either way
+        let t: u32 = aware.assignment[&AppId(1)].values().sum();
+        assert_eq!(t, 1);
+    }
+
+    #[test]
+    fn spread_distributes_an_app_across_domains_at_equal_risk() {
+        // demand 3 on capacity 4: one container per server, so the second
+        // container always faces an equal-slack tie among empty servers.
+        // Risk-blind packs {s0, s1} (lowest indices, same rack); the
+        // spread term must put the second container in the other rack.
+        let caps = vec![Res(vec![4.0]); 4];
+        let ctx = SpreadCtx { domain_of: vec![0, 0, 1, 1], risk: vec![0.0, 0.0] };
+        let inputs = [inp(1, Res(vec![3.0]), 2, &[])];
+        let blind = place(&inputs, &caps).unwrap();
+        assert_eq!(blind.assignment[&AppId(1)][&ServerId(0)], 1);
+        assert_eq!(blind.assignment[&AppId(1)][&ServerId(1)], 1);
+        let aware = place_spread(&inputs, &caps, Some(&ctx)).unwrap();
+        assert_eq!(aware.assignment[&AppId(1)][&ServerId(0)], 1);
+        assert_eq!(aware.assignment[&AppId(1)][&ServerId(2)], 1, "spread to rack 1");
+    }
+
+    #[test]
+    fn zero_risk_single_domain_spread_is_byte_identical() {
+        // degenerate context (one domain, no risk evidence): the key
+        // reduces to (slack, index) and the assignment must be identical
+        let caps = vec![Res(vec![6.0]), Res(vec![4.0]), Res(vec![8.0])];
+        let ctx = SpreadCtx { domain_of: vec![0, 0, 0], risk: vec![0.0] };
+        let inputs = [
+            inp(1, Res(vec![2.0]), 3, &[]),
+            inp(2, Res(vec![1.0]), 5, &[]),
+            inp(3, Res(vec![3.0]), 2, &[]),
+        ];
+        let blind = place(&inputs, &caps).unwrap();
+        let aware = place_spread(&inputs, &caps, Some(&ctx)).unwrap();
+        assert_eq!(blind.assignment, aware.assignment);
+        assert_eq!(blind.destroy, aware.destroy);
+        assert_eq!(blind.create, aware.create);
+    }
+
+    #[test]
+    fn delta_state_spread_survives_invalidation_and_steers_grows() {
+        let caps = vec![Res(vec![4.0]); 4];
+        let mut st = PackState::default();
+        st.set_spread(Some(SpreadCtx {
+            domain_of: vec![0, 0, 1, 1],
+            risk: vec![1.0, 0.0],
+        }));
+        st.invalidate();
+        assert!(st.spread().is_some(), "risk context outlives the books");
+        let inputs = [inp(1, Res(vec![3.0]), 1, &[])];
+        let p = place_delta(&inputs, &caps, &mut st).unwrap();
+        assert_eq!(p.assignment[&AppId(1)][&ServerId(2)], 1, "grow avoids risky rack");
+    }
+
+    /// The acceptance-criteria differential property: a spread context
+    /// changes only container *placement*, never allocation totals or
+    /// feasibility, vs. today's risk-blind solver.  Run at m = 1, where
+    /// equal slack ⇔ equal free capacity, so equal-slack servers are
+    /// provably interchangeable and the claim is exact (multi-dim cases
+    /// are pinned by the deterministic tests above).
+    #[test]
+    fn prop_spread_changes_placement_never_totals() {
+        prop::check(150, |rng: &mut Rng| {
+            let nsrv = rng.range_u64(1, 8) as usize;
+            let caps: Vec<Res> = (0..nsrv)
+                .map(|_| Res(vec![rng.range_f64(4.0, 20.0)]))
+                .collect();
+            let napps = rng.range_u64(1, 6) as usize;
+            let inputs: Vec<PlacementInput> = (0..napps)
+                .map(|i| PlacementInput {
+                    app: AppId(i as u64),
+                    demand: Res(vec![rng.range_f64(0.5, 4.0)]),
+                    target: rng.range_u64(0, 6) as u32,
+                    current: BTreeMap::new(),
+                })
+                .collect();
+            let n_domains = rng.range_u64(1, 4) as usize;
+            let ctx = SpreadCtx {
+                domain_of: (0..nsrv).map(|j| j % n_domains).collect(),
+                risk: (0..n_domains).map(|_| rng.range_f64(0.0, 1.0)).collect(),
+            };
+            let blind = place(&inputs, &caps);
+            let aware = place_spread(&inputs, &caps, Some(&ctx));
+            match (blind, aware) {
+                (None, None) => Ok(()),
+                (Some(b), Some(a)) => {
+                    for i in &inputs {
+                        let tb: u32 = b.assignment[&i.app].values().sum();
+                        let ta: u32 = a.assignment[&i.app].values().sum();
+                        if tb != ta {
+                            return Err(format!(
+                                "{:?}: blind total {tb} != aware total {ta}",
+                                i.app
+                            ));
+                        }
+                    }
+                    // aware must still respect capacity
+                    for (j, cap) in caps.iter().enumerate() {
+                        let mut used = Res::zeros(1);
+                        for i in &inputs {
+                            if let Some(c) = a.assignment[&i.app].get(&ServerId(j)) {
+                                used += &i.demand.times(*c);
+                            }
+                        }
+                        if !used.fits_in(cap) {
+                            return Err(format!("aware server {j} over capacity"));
+                        }
+                    }
+                    Ok(())
+                }
+                (b, a) => Err(format!(
+                    "feasibility diverged: blind {} aware {}",
+                    b.is_some(),
+                    a.is_some()
+                )),
+            }
+        });
+    }
+
     /// The indexed fill must be byte-identical to the reference
     /// per-container linear scan it replaced.
     #[test]
@@ -1005,7 +1250,7 @@ mod tests {
             let count = rng.range_u64(0, 12) as u32;
             let mut free_a = caps.clone();
             let mut free_b = caps.clone();
-            let a = fill_best_fit(&demand, count, &mut free_a, &total);
+            let a = fill_best_fit(&demand, count, &mut free_a, &total, None);
             let b = linear_fill(&demand, count, &mut free_b, &total);
             if a != b {
                 return Err(format!("indexed {a:?} != linear {b:?}"));

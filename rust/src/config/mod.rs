@@ -12,6 +12,6 @@ mod schema;
 
 pub use parse::{parse_kv_file, parse_toml, TomlDoc, Value};
 pub use schema::{
-    CellsConfig, ClusterConfig, DormConfig, FaultConfig, HaConfig, NetConfig, ServerConfig,
-    SimConfig, TraceConfig,
+    CellsConfig, ClusterConfig, DomainsConfig, DormConfig, FaultConfig, HaConfig, NetConfig,
+    ServerConfig, SimConfig, TraceConfig,
 };

@@ -113,6 +113,78 @@ impl DormConfig {
     }
 }
 
+/// Failure-domain knobs (`[fault.domains]`, `crate::fault::domains`,
+/// DESIGN.md §14): the correlated-outage model and the topology the online
+/// MTBF estimator ranks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DomainsConfig {
+    /// Draw correlated whole-rack outages (on top of `[fault]` churn).
+    pub enabled: bool,
+    /// Servers per rack (contiguous grouping; ≥ 1).
+    pub domain_size: usize,
+    /// Mean time between whole-rack outages, hours, per rack.
+    pub domain_mtbf_hours: f64,
+    /// Mean rack repair time, hours.
+    pub domain_mttr_hours: f64,
+    /// Rack 0 fails this many times more often than the rest (≥ 1;
+    /// 1 = homogeneous racks).  Heterogeneous reliability is what the
+    /// online estimator learns and risk-aware placement exploits.
+    pub hot_factor: f64,
+    /// Consecutive racks per power domain (≥ 1).
+    pub racks_per_power: usize,
+    /// Apply the estimator's risk ranking to placement (the
+    /// `SpreadCtx` tie-break + cell-routing penalty); off = risk-blind
+    /// placement under the same correlated trace.
+    pub risk_aware: bool,
+}
+
+impl Default for DomainsConfig {
+    fn default() -> Self {
+        DomainsConfig {
+            enabled: false,
+            domain_size: 4,
+            domain_mtbf_hours: 2000.0,
+            domain_mttr_hours: 1.0,
+            hot_factor: 1.0,
+            racks_per_power: 2,
+            risk_aware: true,
+        }
+    }
+}
+
+impl DomainsConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        use crate::fault::model::{require_at_least, require_non_negative, require_positive};
+        let d = DomainsConfig::default();
+        let c = DomainsConfig {
+            enabled: doc
+                .get("fault.domains", "enabled")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.enabled),
+            domain_size: doc.u32_or("fault.domains", "domain_size", d.domain_size as u32)
+                as usize,
+            domain_mtbf_hours: doc
+                .f64_or("fault.domains", "domain_mtbf_hours", d.domain_mtbf_hours),
+            domain_mttr_hours: doc
+                .f64_or("fault.domains", "domain_mttr_hours", d.domain_mttr_hours),
+            hot_factor: doc.f64_or("fault.domains", "hot_factor", d.hot_factor),
+            racks_per_power: doc
+                .u32_or("fault.domains", "racks_per_power", d.racks_per_power as u32)
+                as usize,
+            risk_aware: doc
+                .get("fault.domains", "risk_aware")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.risk_aware),
+        };
+        require_at_least("[fault.domains].domain_size", c.domain_size as f64, 1.0)?;
+        require_positive("[fault.domains].domain_mtbf_hours", c.domain_mtbf_hours)?;
+        require_non_negative("[fault.domains].domain_mttr_hours", c.domain_mttr_hours)?;
+        require_at_least("[fault.domains].hot_factor", c.hot_factor, 1.0)?;
+        require_at_least("[fault.domains].racks_per_power", c.racks_per_power as f64, 1.0)?;
+        Ok(c)
+    }
+}
+
 /// Fault-tolerance knobs (`crate::fault`, DESIGN.md §8): liveness leases,
 /// checkpoint cadence/retention, and the failure-injection model.
 #[derive(Clone, Debug, PartialEq)]
@@ -138,6 +210,8 @@ pub struct FaultConfig {
     pub master_fail_at_hours: f64,
     /// How long the standby takeover takes (lease detection + restore).
     pub master_takeover_hours: f64,
+    /// Correlated failure-domain model (`[fault.domains]`).
+    pub domains: DomainsConfig,
 }
 
 impl Default for FaultConfig {
@@ -154,6 +228,7 @@ impl Default for FaultConfig {
             seed: 23,
             master_fail_at_hours: 0.0,
             master_takeover_hours: 0.05,
+            domains: DomainsConfig::default(),
         }
     }
 }
@@ -178,40 +253,18 @@ impl FaultConfig {
                 .f64_or("fault", "master_fail_at_hours", d.master_fail_at_hours),
             master_takeover_hours: doc
                 .f64_or("fault", "master_takeover_hours", d.master_takeover_hours),
+            domains: DomainsConfig::from_doc(doc)?,
         };
-        if c.mtbf_hours <= 0.0 {
-            bail!("[fault].mtbf_hours must be > 0, got {}", c.mtbf_hours);
-        }
-        if c.mttr_hours < 0.0 {
-            bail!("[fault].mttr_hours must be >= 0, got {}", c.mttr_hours);
-        }
-        if c.lease_timeout_hours <= 0.0 {
-            bail!(
-                "[fault].lease_timeout_hours must be > 0, got {}",
-                c.lease_timeout_hours
-            );
-        }
-        if c.ckpt_period_hours < 0.0 {
-            bail!(
-                "[fault].ckpt_period_hours must be >= 0, got {}",
-                c.ckpt_period_hours
-            );
-        }
-        if c.ckpt_retain == 0 {
-            bail!("[fault].ckpt_retain must be >= 1 (never drop the newest)");
-        }
-        if c.master_fail_at_hours < 0.0 {
-            bail!(
-                "[fault].master_fail_at_hours must be >= 0, got {}",
-                c.master_fail_at_hours
-            );
-        }
-        if c.master_takeover_hours < 0.0 {
-            bail!(
-                "[fault].master_takeover_hours must be >= 0, got {}",
-                c.master_takeover_hours
-            );
-        }
+        // typed [`crate::fault::FaultError`]s (not asserts/anyhow strings),
+        // so a hostile `[fault]` section fails cleanly from the CLI
+        use crate::fault::model::{require_at_least, require_non_negative, require_positive};
+        require_positive("[fault].mtbf_hours", c.mtbf_hours)?;
+        require_non_negative("[fault].mttr_hours", c.mttr_hours)?;
+        require_positive("[fault].lease_timeout_hours", c.lease_timeout_hours)?;
+        require_non_negative("[fault].ckpt_period_hours", c.ckpt_period_hours)?;
+        require_at_least("[fault].ckpt_retain", c.ckpt_retain as f64, 1.0)?;
+        require_non_negative("[fault].master_fail_at_hours", c.master_fail_at_hours)?;
+        require_non_negative("[fault].master_takeover_hours", c.master_takeover_hours)?;
         Ok(c)
     }
 }
@@ -759,6 +812,47 @@ mod tests {
         ] {
             let doc = parse_toml(bad).unwrap();
             assert!(FaultConfig::from_doc(&doc).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn fault_domains_section_parses_and_validates() {
+        let doc = parse_toml(
+            "[fault]\nenabled = true\n[fault.domains]\nenabled = true\n\
+             domain_size = 4\ndomain_mtbf_hours = 12\ndomain_mttr_hours = 0.5\n\
+             hot_factor = 4\nracks_per_power = 2\nrisk_aware = false\n",
+        )
+        .unwrap();
+        let c = FaultConfig::from_doc(&doc).unwrap();
+        assert!(c.domains.enabled);
+        assert_eq!(c.domains.domain_size, 4);
+        assert_eq!(c.domains.domain_mtbf_hours, 12.0);
+        assert_eq!(c.domains.domain_mttr_hours, 0.5);
+        assert_eq!(c.domains.hot_factor, 4.0);
+        assert_eq!(c.domains.racks_per_power, 2);
+        assert!(!c.domains.risk_aware);
+
+        // defaults when the subsection is absent (and risk-aware by default)
+        let empty = parse_toml("").unwrap();
+        let d = FaultConfig::from_doc(&empty).unwrap();
+        assert_eq!(d.domains, DomainsConfig::default());
+        assert!(!d.domains.enabled);
+        assert!(d.domains.risk_aware);
+
+        // invalid values surface as typed FaultError, not a panic
+        for bad in [
+            "[fault.domains]\ndomain_size = 0\n",
+            "[fault.domains]\ndomain_mtbf_hours = 0\n",
+            "[fault.domains]\ndomain_mttr_hours = -1\n",
+            "[fault.domains]\nhot_factor = 0.5\n",
+            "[fault.domains]\nracks_per_power = 0\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            let err = FaultConfig::from_doc(&doc).unwrap_err();
+            assert!(
+                err.downcast_ref::<crate::fault::FaultError>().is_some(),
+                "{bad:?}: not a FaultError: {err}"
+            );
         }
     }
 

@@ -7,9 +7,21 @@
 //! mean recovery time and goodput through [`crate::metrics`].  Exposed on
 //! the CLI as `dorm churn`; `report::write_csv` emits per-system series
 //! for external plotting.
+//!
+//! [`correlated_sweep`] is the failure-domain variant (DESIGN.md §14):
+//! whole racks die in one batch under
+//! [`crate::fault::FailureModel::Correlated`], with rack 0 `hot_factor`×
+//! less reliable than the rest, and each Dorm config
+//! runs twice — risk-blind and risk-aware
+//! ([`DormPolicy::enable_risk_aware`]) — so the sweep measures what the
+//! online MTBF estimator's placement steering is worth in lost work,
+//! recovery time and goodput.
+
+use anyhow::Result;
 
 use crate::baselines::{IaasPolicy, MesosAppLevelPolicy, StaticPolicy, TaskLevelPolicy};
 use crate::config::{DormConfig, FaultConfig};
+use crate::fault::DomainTopology;
 use crate::report;
 use crate::sched::CmsPolicy;
 use crate::sim::{DormPolicy, Experiment, SystemRun};
@@ -83,14 +95,14 @@ pub fn churn_sweep(
     horizon_hours: f64,
     napps: usize,
     mtbfs: &[f64],
-) -> Vec<ChurnPoint> {
+) -> Result<Vec<ChurnPoint>> {
     use crate::fault::FailureEvent;
     let mut out = Vec::new();
     for &mtbf in mtbfs {
         let mut exp = Experiment::scaled(seed, horizon_hours, napps);
         let n_servers = exp.cluster.servers.len();
         let cfg = FaultConfig { enabled: true, mtbf_hours: mtbf, ..base.clone() };
-        let mut trace = exp.apply_fault(&cfg);
+        let mut trace = exp.apply_fault(&cfg)?;
         if base.master_fail_at_hours > 0.0 {
             trace.push(FailureEvent::master_kill(base.master_fail_at_hours));
             trace.push(FailureEvent::master_recover(
@@ -102,7 +114,143 @@ pub fn churn_sweep(
             out.push(ChurnPoint::from_run(&run, mtbf, horizon_hours));
         }
     }
-    out
+    Ok(out)
+}
+
+/// One (system, domain MTBF) cell of the correlated-outage sweep.
+#[derive(Clone, Debug)]
+pub struct CorrelatedPoint {
+    pub system: String,
+    /// Whether this run steered placement with the online estimator.
+    pub risk_aware: bool,
+    pub domain_mtbf_hours: f64,
+    pub domain_size: usize,
+    pub mean_utilization: f64,
+    /// Cumulative work-hours discarded by rack/server deaths.
+    pub lost_work: f64,
+    /// Mean hours from outage to the affected app running again.
+    pub mean_recovery_hours: f64,
+    pub mean_goodput: f64,
+    pub completed: usize,
+}
+
+impl CorrelatedPoint {
+    fn from_run(run: &SystemRun, cfg: &FaultConfig, horizon: f64) -> Self {
+        let m = run.metrics();
+        CorrelatedPoint {
+            system: run.label.clone(),
+            risk_aware: run.label.ends_with("+risk"),
+            domain_mtbf_hours: cfg.domains.domain_mtbf_hours,
+            domain_size: cfg.domains.domain_size,
+            mean_utilization: m.utilization.mean_over(0.0, horizon),
+            lost_work: m.lost_work.last().unwrap_or(0.0),
+            mean_recovery_hours: m.mean_recovery_hours(),
+            mean_goodput: m.goodput.mean_over(0.0, horizon),
+            completed: run.outcome.completed,
+        }
+    }
+}
+
+/// Sweep the *domain* MTBF under
+/// [`crate::fault::FailureModel::Correlated`] (DESIGN.md
+/// §14): whole racks of `base.domains.domain_size` servers die in one
+/// batch, with rack 0 `hot_factor`× less reliable.  Every Dorm θ config
+/// runs twice over the identical workload and failure trace — risk-blind,
+/// and risk-aware with a fresh online [`crate::fault::MtbfEstimator`] —
+/// and the four baselines run blind, so the risk-aware/risk-blind delta
+/// in lost work, recovery time and goodput is attributable to placement
+/// steering alone.
+pub fn correlated_sweep(
+    base: &FaultConfig,
+    seed: u64,
+    horizon_hours: f64,
+    napps: usize,
+    domain_mtbfs: &[f64],
+) -> Result<Vec<CorrelatedPoint>> {
+    let mut out = Vec::new();
+    for &mtbf in domain_mtbfs {
+        let mut exp = Experiment::scaled(seed, horizon_hours, napps);
+        let n_servers = exp.cluster.servers.len();
+        let mut cfg = FaultConfig { enabled: true, ..base.clone() };
+        cfg.domains.enabled = true;
+        cfg.domains.domain_mtbf_hours = mtbf;
+        let trace = exp.apply_fault(&cfg)?;
+        let topo = DomainTopology::grouped(
+            n_servers,
+            cfg.domains.domain_size,
+            cfg.domains.racks_per_power,
+        );
+        for dorm in [DormConfig::DORM1, DormConfig::DORM2, DormConfig::DORM3] {
+            for aware in [false, true] {
+                let mut policy = DormPolicy::new(dorm);
+                if aware {
+                    policy.enable_risk_aware(topo.clone());
+                }
+                let run = exp.run_with_faults(&mut policy, &trace);
+                out.push(CorrelatedPoint::from_run(&run, &cfg, horizon_hours));
+            }
+        }
+        let baselines: Vec<Box<dyn CmsPolicy>> = vec![
+            Box::new(StaticPolicy::new()),
+            Box::new(MesosAppLevelPolicy::new()),
+            Box::new(IaasPolicy::proportional(n_servers)),
+            Box::new(TaskLevelPolicy::new()),
+        ];
+        for mut policy in baselines {
+            let run = exp.run_with_faults(policy.as_mut(), &trace);
+            out.push(CorrelatedPoint::from_run(&run, &cfg, horizon_hours));
+        }
+    }
+    Ok(out)
+}
+
+/// ASCII table of a correlated sweep, one row per (system, domain MTBF).
+pub fn correlated_table(points: &[CorrelatedPoint]) -> String {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.system.clone(),
+                format!("{:.1}", p.domain_mtbf_hours),
+                format!("{}", p.domain_size),
+                format!("{:.3}", p.mean_utilization),
+                format!("{:.2}", p.lost_work),
+                format!("{:.3}", p.mean_recovery_hours),
+                format!("{:.1}", p.mean_goodput),
+                format!("{}", p.completed),
+            ]
+        })
+        .collect();
+    report::table(
+        &[
+            "system",
+            "dom_mtbf_h",
+            "dom_size",
+            "mean util",
+            "lost work",
+            "recovery_h",
+            "goodput",
+            "completed",
+        ],
+        &rows,
+    )
+}
+
+/// Per-system CSV columns of a correlated sweep for
+/// [`crate::report::write_csv`].
+pub fn correlated_csv_columns(
+    points: &[CorrelatedPoint],
+    system: &str,
+) -> Vec<(&'static str, Vec<f64>)> {
+    let rows: Vec<&CorrelatedPoint> = points.iter().filter(|p| p.system == system).collect();
+    vec![
+        ("domain_mtbf_hours", rows.iter().map(|p| p.domain_mtbf_hours).collect()),
+        ("mean_utilization", rows.iter().map(|p| p.mean_utilization).collect()),
+        ("lost_work", rows.iter().map(|p| p.lost_work).collect()),
+        ("mean_recovery_hours", rows.iter().map(|p| p.mean_recovery_hours).collect()),
+        ("mean_goodput", rows.iter().map(|p| p.mean_goodput).collect()),
+        ("completed", rows.iter().map(|p| p.completed as f64).collect()),
+    ]
 }
 
 /// ASCII table of a sweep, one row per (system, MTBF).
@@ -184,7 +332,7 @@ mod tests {
             seed: 11,
             ..Default::default()
         };
-        let points = churn_sweep(&base, 11, 4.0, 6, &[1.0, 16.0]);
+        let points = churn_sweep(&base, 11, 4.0, 6, &[1.0, 16.0]).unwrap();
         let labels = churn_systems(&points);
         for want in ["dorm(t1=0.2,t2=0.1)", "static", "mesos-app", "iaas", "task-level"] {
             assert!(
@@ -218,12 +366,163 @@ mod tests {
             master_takeover_hours: 1.0,
             ..Default::default()
         };
-        let points = churn_sweep(&base, 11, 4.0, 6, &[1.0]);
+        let points = churn_sweep(&base, 11, 4.0, 6, &[1.0]).unwrap();
         assert_eq!(points.len(), 7, "7 systems x 1 MTBF");
         assert!(
             points.iter().any(|p| p.deferred_allocs > 0),
             "a 1 h outage over a 4 h run must defer something: {points:?}"
         );
         assert!(churn_table(&points).contains("deferred"));
+    }
+
+    /// A bad base config surfaces the typed [`crate::fault::FaultError`]
+    /// through the sweep instead of panicking (satellite of DESIGN.md §14).
+    #[test]
+    fn sweeps_surface_typed_errors_for_bad_configs() {
+        let base = FaultConfig { mttr_hours: -1.0, ..Default::default() };
+        let err = churn_sweep(&base, 1, 1.0, 2, &[4.0]).unwrap_err();
+        assert!(err.downcast_ref::<crate::fault::FaultError>().is_some(), "{err}");
+        let mut base = FaultConfig::default();
+        base.domains.hot_factor = 0.0;
+        let err = correlated_sweep(&base, 1, 1.0, 2, &[4.0]).unwrap_err();
+        assert!(err.downcast_ref::<crate::fault::FaultError>().is_some(), "{err}");
+    }
+
+    /// Structural smoke of the correlated sweep: every Dorm config appears
+    /// risk-blind *and* risk-aware over the identical trace, the four
+    /// baselines run blind, and every point carries finite fault metrics.
+    #[test]
+    fn correlated_sweep_runs_aware_and_blind_over_one_trace() {
+        let mut base = FaultConfig {
+            mttr_hours: 0.25,
+            ckpt_period_hours: 0.5,
+            seed: 7,
+            // effectively no independent churn: isolate the rack outages
+            mtbf_hours: 1e9,
+            ..Default::default()
+        };
+        base.domains.domain_size = 4;
+        base.domains.domain_mttr_hours = 0.25;
+        base.domains.hot_factor = 4.0;
+        let points = correlated_sweep(&base, 7, 4.0, 6, &[2.0]).unwrap();
+        assert_eq!(points.len(), 3 * 2 + 4, "3 Dorm configs x {{blind,aware}} + 4 baselines");
+        assert_eq!(points.iter().filter(|p| p.risk_aware).count(), 3);
+        for p in &points {
+            assert_eq!(p.risk_aware, p.system.ends_with("+risk"), "{}", p.system);
+            assert_eq!(p.domain_mtbf_hours, 2.0);
+            assert_eq!(p.domain_size, 4);
+            assert!(p.mean_utilization.is_finite() && p.mean_utilization >= 0.0);
+            assert!(p.lost_work.is_finite() && p.lost_work >= 0.0);
+            assert!(p.mean_recovery_hours.is_finite() && p.mean_recovery_hours >= 0.0);
+            assert!(p.mean_goodput.is_finite());
+        }
+        let table = correlated_table(&points);
+        assert!(table.contains("dom_mtbf_h") && table.contains("+risk"));
+        let aware = points.iter().find(|p| p.risk_aware).unwrap();
+        let cols = correlated_csv_columns(&points, &aware.system);
+        assert_eq!(cols[0].0, "domain_mtbf_hours");
+        assert_eq!(cols[0].1.len(), 1);
+    }
+
+    /// The §14 headline, pinned deterministically: two racks of four
+    /// one-container servers, rack 0 suffering scripted whole-rack outages
+    /// at t = 1 h and t = 3 h.  Both systems lose the first outage's work
+    /// (the first app is already running when rack 0 first dies), but the
+    /// app arriving *between* the outages lands on rack 0 under risk-blind
+    /// placement (lowest-index tie-break) and on rack 1 under risk-aware
+    /// placement (the estimator holds a rack-0 failure observation per
+    /// member by then) — so the second outage costs the blind system more
+    /// lost work, an extra recovery cycle, and a longer completion.
+    #[test]
+    fn risk_aware_strictly_dominates_risk_blind_on_scripted_rack_outages() {
+        use crate::app::Engine;
+        use crate::config::{ClusterConfig, SimConfig};
+        use crate::fault::FailureEvent;
+        use crate::resources::Res;
+        use crate::sim::{run_sim_faulty, PerfModel};
+        use crate::workload::{Table2Row, WorkloadApp};
+
+        // each server fits exactly one 8-CPU container
+        let rows = vec![Table2Row {
+            engine: Engine::MxNet,
+            dataset: "synthetic",
+            model: "WIDE",
+            demand: Res::cpu_gpu_ram(8.0, 0.0, 16.0),
+            weight: 1,
+            n_max: 2,
+            n_min: 1,
+            num: 2,
+            baseline_containers: 2,
+            duration_median_hours: 4.0,
+        }];
+        let wl = vec![
+            WorkloadApp {
+                row: 0,
+                tag: "WIDE".into(),
+                submit_hours: 0.0,
+                duration_at_baseline_hours: 4.0,
+                baseline_n: 2,
+            },
+            WorkloadApp {
+                row: 0,
+                tag: "WIDE".into(),
+                submit_hours: 2.0,
+                duration_at_baseline_hours: 4.0,
+                baseline_n: 2,
+            },
+        ];
+        let cluster = ClusterConfig::uniform(8, Res::cpu_gpu_ram(12.0, 0.0, 64.0));
+        let sim = SimConfig { horizon_hours: 12.0, ..Default::default() };
+        let pm = PerfModel { ckpt_period_hours: 0.25, ..Default::default() };
+        // rack 0 = servers 0..4, killed as whole-rack batches
+        let mut faults = Vec::new();
+        for &t in &[1.0, 3.0] {
+            for j in 0..4usize {
+                faults.push(FailureEvent::kill(t, j));
+                faults.push(FailureEvent::recover(t + 0.4, j));
+            }
+        }
+        faults.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.server.cmp(&b.server)));
+
+        let run = |aware: bool| {
+            let mut pol = DormPolicy::new(DormConfig::DORM1);
+            if aware {
+                pol.enable_risk_aware(DomainTopology::grouped(8, 4, 1));
+            }
+            run_sim_faulty(&mut pol, &rows, &wl, &cluster, &sim, &pm, &faults)
+        };
+        let blind = run(false);
+        let aware = run(true);
+        assert_eq!(blind.completed, 2, "blind run must finish both apps");
+        assert_eq!(aware.completed, 2, "aware run must finish both apps");
+
+        let lost = |o: &crate::sim::SimOutcome| o.metrics.lost_work.last().unwrap_or(0.0);
+        assert!(
+            lost(&aware) < lost(&blind),
+            "risk-aware must lose strictly less work: aware {} vs blind {}",
+            lost(&aware),
+            lost(&blind)
+        );
+        let recoveries = |o: &crate::sim::SimOutcome| -> u32 {
+            o.apps.values().map(|a| a.recoveries).sum()
+        };
+        assert!(
+            recoveries(&aware) < recoveries(&blind),
+            "the second outage must not touch the risk-aware run: aware {} vs blind {}",
+            recoveries(&aware),
+            recoveries(&blind)
+        );
+        // the app submitted between the outages (AppId 1) finishes sooner
+        // when placed off the hot rack
+        let dur = |o: &crate::sim::SimOutcome| {
+            let a = &o.apps[&crate::app::AppId(1)];
+            a.completed_at.unwrap() - a.submit
+        };
+        assert!(
+            dur(&aware) < dur(&blind),
+            "aware {} vs blind {}",
+            dur(&aware),
+            dur(&blind)
+        );
     }
 }

@@ -1,0 +1,326 @@
+//! Failure domains: a two-level server topology (rack → power domain) and
+//! an online MTBF estimator over it.
+//!
+//! The paper's evaluation (§V) assumes independent server failures, but
+//! real clusters lose whole racks and power domains at once — precisely
+//! when checkpoint-driven recovery matters most.  This module gives the
+//! rest of the crate one vocabulary for that correlation:
+//!
+//! * [`DomainTopology`] — maps every server ordinate into a rack, and
+//!   every rack into a power domain.  Built either from a
+//!   `[fault.domains]` config section (contiguous racks of `domain_size`
+//!   servers) or derived from registered slave names like `rack1-a`
+//!   (the prefix before the last `-` is the rack).
+//! * [`MtbfEstimator`] — observed failures/repairs per server and per
+//!   rack, updated online from heartbeat lease expiries and
+//!   `FailServer`/`RecoverServer` events on the live master, and from
+//!   `ServerFail`/`ServerRecover` events in the DES.  Its per-rack
+//!   failure-rate estimates ([`MtbfEstimator::rack_risks`]) feed the
+//!   risk-aware placement tie-break
+//!   ([`crate::cluster::SpreadCtx`]) and the cell-routing penalty
+//!   ([`crate::sched::CellScheduler`]).
+
+/// Two-level failure-domain map: server → rack → power domain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DomainTopology {
+    /// Rack index per server ordinate.
+    rack_of: Vec<usize>,
+    /// Power-domain index per rack.
+    power_of_rack: Vec<usize>,
+    /// Rack display names (config/derived; synthesized for grouped maps).
+    rack_names: Vec<String>,
+}
+
+impl DomainTopology {
+    /// Contiguous racks of `domain_size` servers; every `racks_per_power`
+    /// consecutive racks share a power domain.  `domain_size == 0` is
+    /// treated as 1 (each server its own rack).
+    pub fn grouped(n_servers: usize, domain_size: usize, racks_per_power: usize) -> Self {
+        let size = domain_size.max(1);
+        let rpp = racks_per_power.max(1);
+        let rack_of: Vec<usize> = (0..n_servers).map(|j| j / size).collect();
+        let n_racks = rack_of.last().map(|&r| r + 1).unwrap_or(0);
+        DomainTopology {
+            rack_of,
+            power_of_rack: (0..n_racks).map(|r| r / rpp).collect(),
+            rack_names: (0..n_racks).map(|r| format!("rack{r}")).collect(),
+        }
+    }
+
+    /// Derive racks from slave names: the prefix before the *last* `-` is
+    /// the rack (`rack1-a` and `rack1-b` share `rack1`); a name without a
+    /// `-` is its own rack.  Racks are numbered in first-appearance order
+    /// and grouped into power domains `racks_per_power` at a time.
+    pub fn from_names<S: AsRef<str>>(names: &[S], racks_per_power: usize) -> Self {
+        let rpp = racks_per_power.max(1);
+        let mut rack_names: Vec<String> = Vec::new();
+        let mut rack_of = Vec::with_capacity(names.len());
+        for name in names {
+            let n = name.as_ref();
+            let rack = n.rsplit_once('-').map(|(pre, _)| pre).unwrap_or(n);
+            let idx = match rack_names.iter().position(|r| r == rack) {
+                Some(i) => i,
+                None => {
+                    rack_names.push(rack.to_string());
+                    rack_names.len() - 1
+                }
+            };
+            rack_of.push(idx);
+        }
+        let n_racks = rack_names.len();
+        DomainTopology {
+            rack_of,
+            power_of_rack: (0..n_racks).map(|r| r / rpp).collect(),
+            rack_names,
+        }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.rack_of.len()
+    }
+
+    pub fn n_racks(&self) -> usize {
+        self.rack_names.len()
+    }
+
+    pub fn n_power_domains(&self) -> usize {
+        self.power_of_rack.iter().map(|&p| p + 1).max().unwrap_or(0)
+    }
+
+    /// Rack index of server `j`.
+    pub fn rack_of(&self, j: usize) -> usize {
+        self.rack_of[j]
+    }
+
+    /// Power-domain index of server `j`.
+    pub fn power_of_server(&self, j: usize) -> usize {
+        self.power_of_rack[self.rack_of[j]]
+    }
+
+    pub fn rack_name(&self, r: usize) -> &str {
+        &self.rack_names[r]
+    }
+
+    /// Server ordinates belonging to rack `r`.
+    pub fn rack_members(&self, r: usize) -> Vec<usize> {
+        (0..self.rack_of.len()).filter(|&j| self.rack_of[j] == r).collect()
+    }
+
+    /// The server → rack map as a slice (what [`crate::cluster::SpreadCtx`]
+    /// consumes).
+    pub fn rack_map(&self) -> &[usize] {
+        &self.rack_of
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct ServerObs {
+    /// Down right now (as far as the observer knows).
+    down: bool,
+    /// Start of the current up/down stretch.
+    since: f64,
+    /// Accumulated observed up-time before `since`.
+    up_hours: f64,
+    failures: u32,
+    repairs: u32,
+}
+
+/// Online per-server / per-rack MTBF estimation from observed failure and
+/// repair events.  Time units are whatever the backend clock uses (hours
+/// in the DES, the event counter on the live master) — the estimates are
+/// rates *relative to that clock*, which is all the risk ranking needs.
+#[derive(Clone, Debug)]
+pub struct MtbfEstimator {
+    topo: DomainTopology,
+    server: Vec<ServerObs>,
+    /// Failure events charged to each rack (every member death counts —
+    /// a whole-rack outage of k servers is k observations of the rack
+    /// being a bad place to live).
+    rack_failures: Vec<u32>,
+}
+
+impl MtbfEstimator {
+    /// All servers assumed up since time 0.
+    pub fn new(topo: DomainTopology) -> Self {
+        let n = topo.n_servers();
+        let racks = topo.n_racks();
+        MtbfEstimator {
+            topo,
+            server: vec![ServerObs::default(); n],
+            rack_failures: vec![0; racks],
+        }
+    }
+
+    pub fn topology(&self) -> &DomainTopology {
+        &self.topo
+    }
+
+    /// Server `j` observed dead at `now` (lease expiry, `FailServer`,
+    /// DES `ServerFail`).  Idempotent while already down.
+    pub fn observe_failure(&mut self, j: usize, now: f64) {
+        let Some(obs) = self.server.get_mut(j) else { return };
+        if obs.down {
+            return;
+        }
+        obs.up_hours += (now - obs.since).max(0.0);
+        obs.down = true;
+        obs.since = now;
+        obs.failures += 1;
+        self.rack_failures[self.topo.rack_of(j)] += 1;
+    }
+
+    /// Server `j` observed back at `now` (`RecoverServer`, re-register,
+    /// DES `ServerRecover`).  Idempotent while already up.
+    pub fn observe_repair(&mut self, j: usize, now: f64) {
+        let Some(obs) = self.server.get_mut(j) else { return };
+        if !obs.down {
+            return;
+        }
+        obs.down = false;
+        obs.since = now;
+        obs.repairs += 1;
+    }
+
+    fn observed_up_hours(&self, j: usize, now: f64) -> f64 {
+        let obs = &self.server[j];
+        let tail = if obs.down { 0.0 } else { (now - obs.since).max(0.0) };
+        obs.up_hours + tail
+    }
+
+    /// Observed per-server MTBF: up-time through `now` over failures seen.
+    /// `None` until the first failure (no evidence yet).
+    pub fn server_mtbf(&self, j: usize, now: f64) -> Option<f64> {
+        let obs = self.server.get(j)?;
+        (obs.failures > 0).then(|| self.observed_up_hours(j, now) / obs.failures as f64)
+    }
+
+    /// Observed per-rack MTBF: aggregate member up-time over failures
+    /// charged to the rack.  `None` until the rack's first failure.
+    pub fn rack_mtbf(&self, r: usize, now: f64) -> Option<f64> {
+        if r >= self.rack_failures.len() || self.rack_failures[r] == 0 {
+            return None;
+        }
+        let up: f64 = self
+            .topo
+            .rack_members(r)
+            .iter()
+            .map(|&j| self.observed_up_hours(j, now))
+            .sum();
+        Some(up / self.rack_failures[r] as f64)
+    }
+
+    /// Estimated failure rate of rack `r` (failures per observed member
+    /// up-hour); 0 until evidence exists.  Higher = riskier.
+    pub fn rack_risk(&self, r: usize, now: f64) -> f64 {
+        match self.rack_mtbf(r, now) {
+            Some(mtbf) if mtbf > 0.0 => 1.0 / mtbf,
+            Some(_) => f64::MAX,
+            None => 0.0,
+        }
+    }
+
+    /// Per-rack risk vector (index = rack), the shape
+    /// [`crate::cluster::SpreadCtx`] and the cell router consume.
+    pub fn rack_risks(&self, now: f64) -> Vec<f64> {
+        (0..self.topo.n_racks()).map(|r| self.rack_risk(r, now)).collect()
+    }
+
+    /// Per-rack risk ranked by observed failure *counts* (index = rack).
+    /// Unlike [`MtbfEstimator::rack_risks`], this does not divide by
+    /// observed up-time, so it is independent of the backend's clock units
+    /// (simulated hours in the DES, the event counter on the live master)
+    /// — all racks share the same observation window, so counts rank
+    /// failure rates identically on both backends.  This is the vector
+    /// [`crate::sched::DormPolicy`] feeds into placement, which is what
+    /// keeps risk-aware master↔sim decisions byte-identical.
+    pub fn rack_risks_by_count(&self) -> Vec<f64> {
+        self.rack_failures.iter().map(|&c| c as f64).collect()
+    }
+
+    pub fn server_failures(&self, j: usize) -> u32 {
+        self.server.get(j).map(|o| o.failures).unwrap_or(0)
+    }
+
+    pub fn rack_failure_count(&self, r: usize) -> u32 {
+        self.rack_failures.get(r).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_topology_partitions_contiguously() {
+        let t = DomainTopology::grouped(10, 4, 2);
+        assert_eq!(t.n_servers(), 10);
+        assert_eq!(t.n_racks(), 3);
+        assert_eq!(t.rack_map(), &[0, 0, 0, 0, 1, 1, 1, 1, 2, 2]);
+        assert_eq!(t.rack_members(1), vec![4, 5, 6, 7]);
+        // racks 0,1 share power domain 0; rack 2 is alone in domain 1
+        assert_eq!(t.power_of_server(0), 0);
+        assert_eq!(t.power_of_server(7), 0);
+        assert_eq!(t.power_of_server(9), 1);
+        assert_eq!(t.n_power_domains(), 2);
+        // degenerate sizes clamp instead of panicking
+        assert_eq!(DomainTopology::grouped(3, 0, 0).n_racks(), 3);
+        assert_eq!(DomainTopology::grouped(0, 4, 2).n_racks(), 0);
+    }
+
+    #[test]
+    fn names_derive_racks_by_last_dash_prefix() {
+        let names = ["rack1-a", "rack1-b", "rack2-a", "lonely", "rack1-c"];
+        let t = DomainTopology::from_names(&names, 2);
+        assert_eq!(t.n_racks(), 3);
+        assert_eq!(t.rack_map(), &[0, 0, 1, 2, 0]);
+        assert_eq!(t.rack_name(0), "rack1");
+        assert_eq!(t.rack_name(1), "rack2");
+        assert_eq!(t.rack_name(2), "lonely");
+        // a multi-dash name splits on the LAST dash
+        let t2 = DomainTopology::from_names(&["eu-west-a", "eu-west-b"], 1);
+        assert_eq!(t2.n_racks(), 1);
+        assert_eq!(t2.rack_name(0), "eu-west");
+    }
+
+    #[test]
+    fn estimator_tracks_observed_mtbf_per_server_and_rack() {
+        let t = DomainTopology::grouped(4, 2, 1);
+        let mut e = MtbfEstimator::new(t);
+        // nothing observed: no evidence, zero risk
+        assert_eq!(e.server_mtbf(0, 10.0), None);
+        assert_eq!(e.rack_risk(0, 10.0), 0.0);
+
+        e.observe_failure(0, 2.0);
+        e.observe_repair(0, 2.5);
+        e.observe_failure(0, 4.5); // up 2.0 + 2.0 = 4.0 h over 2 failures
+        assert_eq!(e.server_mtbf(0, 4.5), Some(2.0));
+        assert_eq!(e.server_failures(0), 2);
+
+        // rack 0 = servers {0,1}: member 1 contributes up-time, no failures
+        let mtbf = e.rack_mtbf(0, 4.5).unwrap();
+        assert!((mtbf - (4.0 + 4.5) / 2.0).abs() < 1e-9, "{mtbf}");
+        assert!(e.rack_risk(0, 4.5) > 0.0);
+        assert_eq!(e.rack_risk(1, 4.5), 0.0, "quiet rack stays zero-risk");
+        let risks = e.rack_risks(4.5);
+        assert_eq!(risks.len(), 2);
+        assert!(risks[0] > risks[1]);
+    }
+
+    #[test]
+    fn estimator_is_idempotent_under_double_events() {
+        let t = DomainTopology::grouped(2, 1, 1);
+        let mut e = MtbfEstimator::new(t);
+        e.observe_failure(0, 1.0);
+        e.observe_failure(0, 1.5); // already down: ignored
+        assert_eq!(e.server_failures(0), 1);
+        e.observe_repair(0, 2.0);
+        e.observe_repair(0, 2.5); // already up: ignored
+        e.observe_failure(0, 3.0);
+        assert_eq!(e.server_failures(0), 2);
+        // up-time: [0,1] + [2,3] = 2h over 2 failures
+        assert_eq!(e.server_mtbf(0, 3.0), Some(1.0));
+        // out-of-range servers are ignored, not a panic
+        e.observe_failure(99, 1.0);
+        e.observe_repair(99, 2.0);
+    }
+}

@@ -1,10 +1,10 @@
-//! Fault tolerance and failure injection (DESIGN.md §8).
+//! Fault tolerance and failure injection (DESIGN.md §8, §14).
 //!
 //! The paper assumes servers never fail; a production-scale CMS cannot.
 //! This subsystem treats machine churn as a normal input to the
 //! utilization–fairness optimizer, reusing the §III-C-2 adjustment
 //! primitive (checkpoint → kill → resume) as the recovery mechanism.  It
-//! has three parts, shared by the live [`crate::master::DormMaster`] and
+//! has four parts, shared by the live [`crate::master::DormMaster`] and
 //! the DES ([`crate::sim::run_sim_faulty`]) so recovery decisions are
 //! backend-identical (`tests/fault.rs` pins the parity):
 //!
@@ -19,20 +19,33 @@
 //!   scale; work since the last checkpoint (steps on the live master,
 //!   work-hours in the DES) is recorded in a [`RecoveryLog`].
 //! * [`model`] — failure injection: per-server exponential MTBF/MTTR
-//!   traces (deterministic via [`crate::util::Rng`]) or scripted traces,
-//!   fed into the simulator's event queue — or replayed against the live
-//!   master through `DormMaster::fail_server`/`recover_server`.
+//!   traces, correlated whole-rack outages layered on that churn
+//!   ([`FailureModel::Correlated`]), or scripted traces — fed into the
+//!   simulator's event queue, or replayed against the live master through
+//!   `DormMaster::fail_server`/`recover_server`.  Parameters validate to
+//!   typed [`FaultError`]s instead of panicking.
+//! * [`domains`] — the two-level failure-domain topology (rack → power
+//!   domain) and the online [`MtbfEstimator`] whose per-rack risk
+//!   estimates drive risk-aware placement (the
+//!   [`crate::cluster::SpreadCtx`] tie-break) and cell routing.
 //!
 //! [`churn`] packages the evaluation: Dorm and all four baselines swept
-//! over MTBF, reporting utilization, fairness loss, lost work, recovery
-//! time and goodput through [`crate::metrics`]/[`crate::report`].
+//! over MTBF — plus the correlated-outage sweep (domain size × domain
+//! MTBF, risk-aware vs. risk-blind) — reporting utilization, fairness
+//! loss, lost work, recovery time and goodput through
+//! [`crate::metrics`]/[`crate::report`].
 
 pub mod churn;
+pub mod domains;
 pub mod liveness;
 pub mod model;
 pub mod recovery;
 
-pub use churn::{churn_csv_columns, churn_sweep, churn_systems, churn_table, ChurnPoint};
+pub use churn::{
+    churn_csv_columns, churn_sweep, churn_systems, churn_table, correlated_csv_columns,
+    correlated_sweep, correlated_table, ChurnPoint, CorrelatedPoint,
+};
+pub use domains::{DomainTopology, MtbfEstimator};
 pub use liveness::LeaseTable;
-pub use model::{FailureEvent, FailureKind, FailureModel};
+pub use model::{FailureEvent, FailureKind, FailureModel, FaultError};
 pub use recovery::{RecoveryLog, RecoveryRecord};

@@ -1,13 +1,76 @@
 //! Failure injection: when and which servers die and come back.
 //!
-//! Two generators behind one interface: per-server exponential MTBF/MTTR
+//! Three generators behind one interface: per-server exponential MTBF/MTTR
 //! (the standard machine-churn model, deterministic via
-//! [`crate::util::Rng`]) and scripted traces (tests, replay, the
-//! master↔sim parity suite).  A trace is a time-sorted list of
-//! [`FailureEvent`]s the DES feeds into its event queue and a live-master
-//! harness replays through `fail_server`/`recover_server`.
+//! [`crate::util::Rng`]), correlated domain outages layered on top of that
+//! churn (whole racks die in one batch — [`FailureModel::Correlated`]),
+//! and scripted traces (tests, replay, the master↔sim parity suite).  A
+//! trace is a time-sorted list of [`FailureEvent`]s the DES feeds into its
+//! event queue and a live-master harness replays through
+//! `fail_server`/`recover_server` — same-timestamp kills ride the batched
+//! lease-expiry path on both backends (one re-solve per batch).
+//!
+//! Model parameters are validated with typed [`FaultError`]s (not
+//! asserts), so a hostile `[fault]` section fails cleanly from the CLI.
 
 use crate::util::Rng;
+
+/// A `[fault]`/`[fault.domains]` parameter violation — typed so config
+/// ingestion and trace generation fail cleanly instead of panicking.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultError {
+    /// The field must be strictly positive (and finite).
+    NonPositive { field: String, got: f64 },
+    /// The field must be non-negative (and finite).
+    Negative { field: String, got: f64 },
+    /// The field must be at least `min`.
+    BelowMin { field: String, got: f64, min: f64 },
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultError::NonPositive { field, got } => {
+                write!(f, "{field} must be > 0 and finite, got {got}")
+            }
+            FaultError::Negative { field, got } => {
+                write!(f, "{field} must be >= 0 and finite, got {got}")
+            }
+            FaultError::BelowMin { field, got, min } => {
+                write!(f, "{field} must be >= {min}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// `field > 0` and finite, or a typed error.
+pub(crate) fn require_positive(field: &str, got: f64) -> Result<(), FaultError> {
+    if got > 0.0 && got.is_finite() {
+        Ok(())
+    } else {
+        Err(FaultError::NonPositive { field: field.to_string(), got })
+    }
+}
+
+/// `field >= 0` and finite, or a typed error.
+pub(crate) fn require_non_negative(field: &str, got: f64) -> Result<(), FaultError> {
+    if got >= 0.0 && got.is_finite() {
+        Ok(())
+    } else {
+        Err(FaultError::Negative { field: field.to_string(), got })
+    }
+}
+
+/// `field >= min`, or a typed error.
+pub(crate) fn require_at_least(field: &str, got: f64, min: f64) -> Result<(), FaultError> {
+    if got >= min && got.is_finite() {
+        Ok(())
+    } else {
+        Err(FaultError::BelowMin { field: field.to_string(), got, min })
+    }
+}
 
 /// A server goes down or comes back — or the *master* does (control-plane
 /// failover, DESIGN.md §11).
@@ -75,16 +138,46 @@ pub enum FailureModel {
     /// draws from its own forked stream so traces are stable under
     /// cluster-size changes.
     Exponential { mtbf_hours: f64, mttr_hours: f64, seed: u64 },
+    /// Independent per-server churn *plus* correlated rack outages: the
+    /// servers are grouped into contiguous racks of `domain_size`, and
+    /// each rack alternates up-time ~ Exp(domain MTBF) and down-time ~
+    /// Exp(domain MTTR), every member dying (and later rejoining) at the
+    /// same timestamp — one batch through the master's lease-expiry path
+    /// and the DES's same-time fail handler.  Rack 0 fails `hot_factor`
+    /// times more often than the rest (heterogeneous domain reliability —
+    /// the flaky power feed every real cluster has), which is what gives
+    /// an online risk estimator something to learn.
+    Correlated {
+        server_mtbf_hours: f64,
+        server_mttr_hours: f64,
+        domain_size: usize,
+        domain_mtbf_hours: f64,
+        domain_mttr_hours: f64,
+        hot_factor: f64,
+        seed: u64,
+    },
     /// Replay exactly these events (times need not be sorted).
     Scripted(Vec<FailureEvent>),
 }
 
 impl FailureModel {
-    /// The model a `[fault]` config section asks for: exponential churn
-    /// when enabled, [`FailureModel::None`] otherwise.
+    /// The model a `[fault]` config section asks for: correlated churn
+    /// when `[fault.domains]` is enabled, plain exponential churn when
+    /// only `[fault]` is, [`FailureModel::None`] otherwise.
     pub fn from_config(cfg: &crate::config::FaultConfig) -> FailureModel {
         if !cfg.enabled {
             return FailureModel::None;
+        }
+        if cfg.domains.enabled {
+            return FailureModel::Correlated {
+                server_mtbf_hours: cfg.mtbf_hours,
+                server_mttr_hours: cfg.mttr_hours,
+                domain_size: cfg.domains.domain_size,
+                domain_mtbf_hours: cfg.domains.domain_mtbf_hours,
+                domain_mttr_hours: cfg.domains.domain_mttr_hours,
+                hot_factor: cfg.domains.hot_factor,
+                seed: cfg.seed,
+            };
         }
         FailureModel::Exponential {
             mtbf_hours: cfg.mtbf_hours,
@@ -93,10 +186,75 @@ impl FailureModel {
         }
     }
 
+    /// Validate the model's parameters (the checks that used to be
+    /// `assert!`s in [`FailureModel::trace`]).
+    pub fn validate(&self) -> Result<(), FaultError> {
+        match self {
+            FailureModel::None | FailureModel::Scripted(_) => Ok(()),
+            FailureModel::Exponential { mtbf_hours, mttr_hours, .. } => {
+                require_positive("[fault].mtbf_hours", *mtbf_hours)?;
+                require_non_negative("[fault].mttr_hours", *mttr_hours)
+            }
+            FailureModel::Correlated {
+                server_mtbf_hours,
+                server_mttr_hours,
+                domain_size,
+                domain_mtbf_hours,
+                domain_mttr_hours,
+                hot_factor,
+                ..
+            } => {
+                require_positive("[fault].mtbf_hours", *server_mtbf_hours)?;
+                require_non_negative("[fault].mttr_hours", *server_mttr_hours)?;
+                require_at_least("[fault.domains].domain_size", *domain_size as f64, 1.0)?;
+                require_positive("[fault.domains].domain_mtbf_hours", *domain_mtbf_hours)?;
+                require_non_negative(
+                    "[fault.domains].domain_mttr_hours",
+                    *domain_mttr_hours,
+                )?;
+                require_at_least("[fault.domains].hot_factor", *hot_factor, 1.0)
+            }
+        }
+    }
+
+    /// Independent per-server alternating kill/recover events — the
+    /// shared core of [`FailureModel::Exponential`] and the churn half of
+    /// [`FailureModel::Correlated`].
+    fn server_churn(
+        events: &mut Vec<FailureEvent>,
+        n_servers: usize,
+        horizon_hours: f64,
+        mtbf_hours: f64,
+        mttr_hours: f64,
+        seed: u64,
+    ) {
+        let mut base = Rng::new(seed ^ 0xFA17_70DE);
+        for server in 0..n_servers {
+            let mut rng = base.fork(server as u64 + 1);
+            let mut t = rng.exponential(mtbf_hours);
+            while t <= horizon_hours {
+                events.push(FailureEvent::kill(t, server));
+                t += rng.exponential(mttr_hours.max(1e-6));
+                if t > horizon_hours {
+                    break;
+                }
+                events.push(FailureEvent::recover(t, server));
+                t += rng.exponential(mtbf_hours);
+            }
+        }
+    }
+
     /// Materialize the trace for `n_servers` over `[0, horizon_hours]`,
-    /// sorted by (time, server).  Scripted events outside the horizon or
-    /// naming unknown servers are dropped.
-    pub fn trace(&self, n_servers: usize, horizon_hours: f64) -> Vec<FailureEvent> {
+    /// sorted by (time, server) — so a rack batch is a run of consecutive
+    /// same-time events.  Scripted events outside the horizon or naming
+    /// unknown servers are dropped.  Invalid parameters return a typed
+    /// [`FaultError`] instead of panicking.
+    pub fn trace(
+        &self,
+        n_servers: usize,
+        horizon_hours: f64,
+    ) -> Result<Vec<FailureEvent>, FaultError> {
+        self.validate()?;
         let mut out = match self {
             FailureModel::None => Vec::new(),
             FailureModel::Scripted(events) => events
@@ -108,28 +266,73 @@ impl FailureModel {
                 .cloned()
                 .collect(),
             FailureModel::Exponential { mtbf_hours, mttr_hours, seed } => {
-                assert!(*mtbf_hours > 0.0, "MTBF must be positive");
-                assert!(*mttr_hours >= 0.0, "MTTR must be non-negative");
-                let mut base = Rng::new(seed ^ 0xFA17_70DE);
                 let mut events = Vec::new();
-                for server in 0..n_servers {
-                    let mut rng = base.fork(server as u64 + 1);
-                    let mut t = rng.exponential(*mtbf_hours);
+                Self::server_churn(
+                    &mut events,
+                    n_servers,
+                    horizon_hours,
+                    *mtbf_hours,
+                    *mttr_hours,
+                    *seed,
+                );
+                events
+            }
+            FailureModel::Correlated {
+                server_mtbf_hours,
+                server_mttr_hours,
+                domain_size,
+                domain_mtbf_hours,
+                domain_mttr_hours,
+                hot_factor,
+                seed,
+            } => {
+                let mut events = Vec::new();
+                // same forks as Exponential: the independent component of
+                // a correlated trace matches the plain trace bit-for-bit,
+                // so sweeps compare like against like
+                Self::server_churn(
+                    &mut events,
+                    n_servers,
+                    horizon_hours,
+                    *server_mtbf_hours,
+                    *server_mttr_hours,
+                    *seed,
+                );
+                let topo = super::domains::DomainTopology::grouped(
+                    n_servers,
+                    *domain_size,
+                    usize::MAX,
+                );
+                let mut base = Rng::new(seed ^ 0xD0_3417_D00D);
+                for r in 0..topo.n_racks() {
+                    let members = topo.rack_members(r);
+                    // rack-index fork offset past the per-server streams
+                    let mut rng = base.fork(n_servers as u64 + r as u64 + 1);
+                    let eff_mtbf = if r == 0 {
+                        domain_mtbf_hours / hot_factor
+                    } else {
+                        *domain_mtbf_hours
+                    };
+                    let mut t = rng.exponential(eff_mtbf);
                     while t <= horizon_hours {
-                        events.push(FailureEvent::kill(t, server));
-                        t += rng.exponential(mttr_hours.max(1e-6));
-                        if t > horizon_hours {
+                        for &j in &members {
+                            events.push(FailureEvent::kill(t, j));
+                        }
+                        let back = t + rng.exponential(domain_mttr_hours.max(1e-6));
+                        if back > horizon_hours {
                             break;
                         }
-                        events.push(FailureEvent::recover(t, server));
-                        t += rng.exponential(*mtbf_hours);
+                        for &j in &members {
+                            events.push(FailureEvent::recover(back, j));
+                        }
+                        t = back + rng.exponential(eff_mtbf);
                     }
                 }
                 events
             }
         };
         out.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.server.cmp(&b.server)));
-        out
+        Ok(out)
     }
 }
 
@@ -140,8 +343,8 @@ mod tests {
     #[test]
     fn exponential_trace_is_deterministic_and_alternating() {
         let m = FailureModel::Exponential { mtbf_hours: 2.0, mttr_hours: 0.5, seed: 7 };
-        let a = m.trace(5, 100.0);
-        let b = m.trace(5, 100.0);
+        let a = m.trace(5, 100.0).unwrap();
+        let b = m.trace(5, 100.0).unwrap();
         assert_eq!(a, b, "same seed must replay identically");
         assert!(!a.is_empty(), "2h MTBF over 100h must produce failures");
         // per server: strictly alternating Kill / Recover, times increasing
@@ -164,7 +367,7 @@ mod tests {
     #[test]
     fn exponential_rates_roughly_match_mtbf() {
         let m = FailureModel::Exponential { mtbf_hours: 10.0, mttr_hours: 1.0, seed: 3 };
-        let trace = m.trace(20, 1000.0);
+        let trace = m.trace(20, 1000.0).unwrap();
         let kills = trace.iter().filter(|e| e.kind == FailureKind::Kill).count();
         // each server is up ~10/11 of the time -> ~91 kills per server per
         // 1000h/11h cycle; loose 2x bounds on the aggregate
@@ -179,7 +382,7 @@ mod tests {
     fn from_config_respects_the_enabled_switch() {
         use crate::config::FaultConfig;
         let off = FaultConfig::default();
-        assert!(FailureModel::from_config(&off).trace(8, 100.0).is_empty());
+        assert!(FailureModel::from_config(&off).trace(8, 100.0).unwrap().is_empty());
         let on = FaultConfig {
             enabled: true,
             mtbf_hours: 4.0,
@@ -187,13 +390,14 @@ mod tests {
             seed: 9,
             ..Default::default()
         };
-        let t = FailureModel::from_config(&on).trace(8, 100.0);
+        let t = FailureModel::from_config(&on).trace(8, 100.0).unwrap();
         assert!(!t.is_empty());
         // same knobs, same trace (seed flows through)
         assert_eq!(
             t,
             FailureModel::Exponential { mtbf_hours: 4.0, mttr_hours: 0.5, seed: 9 }
                 .trace(8, 100.0)
+                .unwrap()
         );
     }
 
@@ -205,8 +409,91 @@ mod tests {
             FailureEvent::kill(2.0, 9), // unknown server: dropped
             FailureEvent::kill(99.0, 0), // past horizon: dropped
         ]);
-        let t = m.trace(4, 10.0);
+        let t = m.trace(4, 10.0).unwrap();
         assert_eq!(t, vec![FailureEvent::kill(1.0, 1), FailureEvent::recover(5.0, 1)]);
-        assert!(FailureModel::None.trace(4, 10.0).is_empty());
+        assert!(FailureModel::None.trace(4, 10.0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn invalid_parameters_are_typed_errors_not_panics() {
+        let bad_mtbf = FailureModel::Exponential { mtbf_hours: 0.0, mttr_hours: 0.5, seed: 1 };
+        match bad_mtbf.trace(4, 10.0) {
+            Err(FaultError::NonPositive { field, got }) => {
+                assert_eq!(field, "[fault].mtbf_hours");
+                assert_eq!(got, 0.0);
+            }
+            other => panic!("expected NonPositive, got {other:?}"),
+        }
+        let bad_mttr = FailureModel::Exponential { mtbf_hours: 2.0, mttr_hours: -1.0, seed: 1 };
+        assert!(matches!(bad_mttr.trace(4, 10.0), Err(FaultError::Negative { .. })));
+        let bad_hot = FailureModel::Correlated {
+            server_mtbf_hours: 100.0,
+            server_mttr_hours: 0.5,
+            domain_size: 4,
+            domain_mtbf_hours: 8.0,
+            domain_mttr_hours: 0.5,
+            hot_factor: 0.5,
+            seed: 1,
+        };
+        assert!(matches!(bad_hot.trace(8, 10.0), Err(FaultError::BelowMin { .. })));
+        // the Display impl names the offending field
+        let msg = bad_hot.validate().unwrap_err().to_string();
+        assert!(msg.contains("[fault.domains].hot_factor"), "{msg}");
+    }
+
+    #[test]
+    fn correlated_trace_batches_whole_racks_at_one_timestamp() {
+        let m = FailureModel::Correlated {
+            server_mtbf_hours: 1e9, // effectively no independent churn
+            server_mttr_hours: 0.5,
+            domain_size: 4,
+            domain_mtbf_hours: 10.0,
+            domain_mttr_hours: 0.5,
+            hot_factor: 1.0,
+            seed: 11,
+        };
+        let t = m.trace(8, 200.0).unwrap();
+        assert!(!t.is_empty(), "10h domain MTBF over 200h must fire");
+        // every kill timestamp covers a whole rack: exactly 4 events,
+        // consecutive in the sorted trace, servers = one rack's members
+        let mut i = 0;
+        while i < t.len() {
+            let t0 = t[i].time;
+            let batch: Vec<&FailureEvent> =
+                t.iter().filter(|e| e.time == t0).collect();
+            assert_eq!(batch.len(), 4, "rack batch at {t0}");
+            let rack = batch[0].server / 4;
+            assert!(batch.iter().all(|e| e.server / 4 == rack));
+            assert!(batch.iter().all(|e| e.kind == batch[0].kind));
+            i += batch.len();
+        }
+        // determinism
+        assert_eq!(t, m.trace(8, 200.0).unwrap());
+    }
+
+    #[test]
+    fn hot_rack_fails_more_often_than_the_rest() {
+        let m = FailureModel::Correlated {
+            server_mtbf_hours: 1e9,
+            server_mttr_hours: 0.5,
+            domain_size: 4,
+            domain_mtbf_hours: 40.0,
+            domain_mttr_hours: 0.5,
+            hot_factor: 8.0,
+            seed: 5,
+        };
+        let t = m.trace(8, 2000.0).unwrap();
+        let kills_rack0 = t
+            .iter()
+            .filter(|e| e.kind == FailureKind::Kill && e.server < 4)
+            .count();
+        let kills_rack1 = t
+            .iter()
+            .filter(|e| e.kind == FailureKind::Kill && e.server >= 4)
+            .count();
+        assert!(
+            kills_rack0 > kills_rack1 * 2,
+            "hot rack must dominate: {kills_rack0} vs {kills_rack1}"
+        );
     }
 }

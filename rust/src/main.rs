@@ -376,12 +376,15 @@ fn cmd_replay(cli: &Cli) -> Result<()> {
 
 fn cmd_churn(cli: &Cli) -> Result<()> {
     use dorm::config::FaultConfig;
-    use dorm::fault::{churn_csv_columns, churn_sweep, churn_systems, churn_table};
+    use dorm::fault::{
+        churn_csv_columns, churn_sweep, churn_systems, churn_table, correlated_csv_columns,
+        correlated_sweep, correlated_table,
+    };
     let seed = cli.u64_flag("seed", 17)?;
     let horizon = cli.f64_flag("horizon", 8.0)?;
     let napps = cli.u64_flag("apps", 16)? as usize;
     let defaults = FaultConfig::default();
-    let fault = FaultConfig {
+    let mut fault = FaultConfig {
         enabled: true,
         mttr_hours: cli.f64_flag("mttr", defaults.mttr_hours)?,
         ckpt_period_hours: cli.f64_flag("ckpt", defaults.ckpt_period_hours)?,
@@ -390,30 +393,71 @@ fn cmd_churn(cli: &Cli) -> Result<()> {
         master_takeover_hours: cli.f64_flag("takeover", defaults.master_takeover_hours)?,
         ..defaults
     };
-    let mtbfs: Vec<f64> = cli
-        .str_flag("mtbfs", "2,4,8,16,32")
-        .split(',')
-        .map(|s| {
-            s.trim()
-                .parse::<f64>()
-                .map_err(|_| anyhow::anyhow!("--mtbfs wants numbers, got {s:?}"))
-        })
-        .collect::<Result<_>>()?;
+    let list_flag = |key: &str, default: &str| -> Result<Vec<f64>> {
+        cli.str_flag(key, default)
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--{key} wants numbers, got {s:?}"))
+            })
+            .collect()
+    };
+    let slugged = |system: &str| -> String {
+        system
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect()
+    };
+
+    if cli.bool_flag("domains") {
+        // correlated failure-domain sweep (DESIGN.md §14): whole racks die
+        // in one batch; sweep the *domain* MTBF, with independent per-
+        // server churn effectively off unless --server-mtbf lowers it
+        fault.domains.enabled = true;
+        fault.mtbf_hours = cli.f64_flag("server-mtbf", 1e9)?;
+        fault.domains.domain_size =
+            cli.u64_flag("domain-size", fault.domains.domain_size as u64)? as usize;
+        fault.domains.domain_mttr_hours =
+            cli.f64_flag("domain-mttr", fault.domains.domain_mttr_hours)?;
+        fault.domains.hot_factor = cli.f64_flag("hot-factor", 4.0)?;
+        let dmtbfs = list_flag("domain-mtbfs", "2,4,8,16")?;
+        println!(
+            "correlated churn sweep: {napps} apps / {horizon} h / racks of {} / \
+             rack 0 {}x hotter / domain MTTR {} h / domain MTBF {dmtbfs:?} (seed {seed})",
+            fault.domains.domain_size, fault.domains.hot_factor, fault.domains.domain_mttr_hours
+        );
+        let points = correlated_sweep(&fault, seed, horizon, napps, &dmtbfs)?;
+        println!("{}", correlated_table(&points));
+        if cli.bool_flag("csv") {
+            let mut systems: Vec<String> = Vec::new();
+            for p in &points {
+                if !systems.contains(&p.system) {
+                    systems.push(p.system.clone());
+                }
+            }
+            for system in systems {
+                let cols = correlated_csv_columns(&points, &system);
+                let path =
+                    report::write_csv(&format!("churn_domains_{}.csv", slugged(&system)), &cols)?;
+                println!("wrote {}", path.display());
+            }
+        }
+        return Ok(());
+    }
+
+    let mtbfs = list_flag("mtbfs", "2,4,8,16,32")?;
     println!(
         "churn sweep: {napps} apps / {horizon} h / MTTR {} h / ckpt every {} h / \
          MTBF {mtbfs:?} (seed {seed})",
         fault.mttr_hours, fault.ckpt_period_hours
     );
-    let points = churn_sweep(&fault, seed, horizon, napps, &mtbfs);
+    let points = churn_sweep(&fault, seed, horizon, napps, &mtbfs)?;
     println!("{}", churn_table(&points));
     if cli.bool_flag("csv") {
         for system in churn_systems(&points) {
             let cols = churn_csv_columns(&points, &system);
-            let slug: String = system
-                .chars()
-                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
-                .collect();
-            let path = report::write_csv(&format!("churn_{slug}.csv"), &cols)?;
+            let path = report::write_csv(&format!("churn_{}.csv", slugged(&system)), &cols)?;
             println!("wrote {}", path.display());
         }
     }
@@ -675,8 +719,29 @@ fn cmd_master(cli: &Cli) -> Result<()> {
         }
         None => {
             let cells = cells_from_cli(cli)?;
-            let cluster = ClusterConfig::uniform(slaves, cap);
-            let mut m = if cells.count > 1 {
+            let racks = cli.u64_flag("racks", 0)? as usize;
+            let cluster = if racks > 1 {
+                // correlated failure domains (DESIGN.md §14): name the
+                // slaves rackK-sJ in contiguous blocks so the master
+                // derives its rack topology from the server book itself
+                ClusterConfig {
+                    servers: (0..slaves)
+                        .map(|i| dorm::config::ServerConfig {
+                            name: format!("rack{}-s{i}", i * racks / slaves.max(1)),
+                            capacity: cap.clone(),
+                        })
+                        .collect(),
+                }
+            } else {
+                ClusterConfig::uniform(slaves, cap)
+            };
+            let mut m = if racks > 1 {
+                println!(
+                    "dorm master: {racks} racks over {slaves} slave(s); \
+                     risk-aware placement on"
+                );
+                DormMaster::with_risk_aware(&cluster, dorm_cfg, 2, store.clone())
+            } else if cells.count > 1 {
                 println!(
                     "dorm master: sharded into {} cells (rebalance every {} events, \
                      imbalance threshold {})",

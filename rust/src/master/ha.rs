@@ -33,7 +33,7 @@
 //! tests drive), engine caches (dropped and rebuilt on first solve), and
 //! in-flight requests (clients re-send; `FailoverTransport` re-dials).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::Write;
 
 use anyhow::{bail, Context, Result};
@@ -488,6 +488,9 @@ pub fn restore_with_policy(
         epoch: ckpt.epoch,
         dorm_cfg: DormConfig { theta1: ckpt.theta1, theta2: ckpt.theta2 },
         ha: None,
+        // retry-dedupe memory is not snapshotted; [`load_master`]'s WAL
+        // replay repopulates it for every journaled rid-stamped request
+        dedupe: VecDeque::new(),
     })
 }
 
@@ -692,11 +695,13 @@ pub fn load_master(store: &CheckpointStore) -> Result<Option<(DormMaster, u64)>>
             );
             break;
         }
-        match wire::decode_request(&rec.bytes) {
-            Ok(req) => {
+        match wire::decode_request_rid(&rec.bytes) {
+            Ok((req, rid)) => {
                 // replay is best-effort per record: a typed error response
-                // reproduces the original handling of that request
-                let _ = m.dispatch(req);
+                // reproduces the original handling of that request.  The
+                // rid (if journaled) re-enters the dedupe memory, so a
+                // client retrying across the takeover still hits the cache
+                let _ = m.dispatch_rid(req, rid);
                 seq = rec.seq;
             }
             Err(e) => {
@@ -860,5 +865,34 @@ mod tests {
         bad[WAL_HEADER + 2] ^= 0xFF;
         std::fs::write(&path, &bad).unwrap();
         assert!(read_wal(&s).unwrap().is_empty());
+    }
+
+    /// A takeover master must keep refusing double-applies for retry ids
+    /// it already answered: the WAL carries each mutation's rid (v1.3) and
+    /// replay repopulates the dedupe memory.
+    #[test]
+    fn wal_replay_rebuilds_retry_dedupe() {
+        let s = store("dedupe_replay");
+        let mut m = DormMaster::new(
+            &ClusterConfig::uniform(3, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+            DormConfig { theta1: 0.5, theta2: 0.5 },
+            s.clone(),
+        )
+        .with_ha(1000, 3, 0)
+        .unwrap();
+        let app = match m.dispatch_rid(Request::Submit { spec: spec(6) }, Some(99)) {
+            crate::proto::Response::Submitted { app } => app,
+            other => panic!("submit answered {other:?}"),
+        };
+        drop(m);
+        let (mut r, _) = load_master(&s).unwrap().expect("journaled master reloads");
+        assert_eq!(r.state_view(None).active_apps, 1);
+        // the client re-dials the standby and re-sends the same frame
+        assert_eq!(
+            r.dispatch_rid(Request::Submit { spec: spec(6) }, Some(99)),
+            crate::proto::Response::Submitted { app },
+            "replayed WAL must remember rid 99"
+        );
+        assert_eq!(r.state_view(None).active_apps, 1, "retry double-applied after takeover");
     }
 }

@@ -42,7 +42,7 @@
 
 pub mod ha;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -50,7 +50,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::app::{AppId, AppSpec, AppState, Checkpoint, CheckpointStore};
 use crate::cluster::ServerId;
 use crate::config::{CellsConfig, ClusterConfig, DormConfig, FaultConfig};
-use crate::fault::{LeaseTable, RecoveryLog};
+use crate::fault::{DomainTopology, LeaseTable, RecoveryLog};
 use crate::optimizer::SolveMode;
 use crate::proto::{
     self, AppView, Directive, DirectiveAck, ErrorCode, ProtoError, Request, Response,
@@ -121,6 +121,12 @@ fn err(code: ErrorCode, detail: impl fmt::Display) -> Response {
     Response::Error(ProtoError::new(code, detail))
 }
 
+/// Retry-dedupe memory: how many `(retry id → response)` pairs the master
+/// remembers (v1.3).  Sized for the re-send window of a failover re-dial
+/// (one in-flight mutation per client, a handful of clients), not as a
+/// general idempotency ledger.
+const DEDUPE_CAP: usize = 64;
+
 /// The central manager.
 pub struct DormMaster {
     pub slaves: Vec<DormSlave>,
@@ -160,6 +166,11 @@ pub struct DormMaster {
     dorm_cfg: DormConfig,
     /// Self-checkpointing state when HA is armed ([`Self::with_ha`]).
     ha: Option<ha::HaLog>,
+    /// Recent `(retry id → response)` pairs ([`Self::dispatch_rid`], v1.3):
+    /// a re-sent `Submit`/`Complete` carrying a seen id gets the cached
+    /// response instead of a second application.  Rebuilt from WAL replay
+    /// on an HA restore (the journal records requests *with* their rid).
+    dedupe: VecDeque<(u64, Response)>,
 }
 
 impl DormMaster {
@@ -175,6 +186,30 @@ impl DormMaster {
             Box::new(DormPolicy::with_mode(dorm, SolveMode::Heuristic)),
             store,
         );
+        m.dorm_cfg = dorm;
+        m
+    }
+
+    /// As [`Self::new`], with risk-aware placement armed (DESIGN.md §14):
+    /// failure domains are derived from the configured slave names
+    /// (`rack1-a`/`rack1-b` share rack `rack1`), and an online
+    /// [`crate::fault::MtbfEstimator`] — fed by lease expiries,
+    /// `FailServer`/`RecoverServer` events and forced failures — steers
+    /// equal-slack placement ties away from racks with observed failures.
+    /// Allocation *totals* are untouched (the risk term is a tie-break
+    /// inside [`crate::cluster::SpreadCtx`]), so the P2 solve is
+    /// decision-identical to [`Self::new`]; only container placement moves.
+    pub fn with_risk_aware(
+        cluster: &ClusterConfig,
+        dorm: DormConfig,
+        racks_per_power: usize,
+        store: CheckpointStore,
+    ) -> Self {
+        let names: Vec<&str> = cluster.servers.iter().map(|s| s.name.as_str()).collect();
+        let topo = DomainTopology::from_names(&names, racks_per_power);
+        let mut policy = DormPolicy::with_mode(dorm, SolveMode::Heuristic);
+        policy.enable_risk_aware(topo);
+        let mut m = Self::with_policy(cluster, Box::new(policy), store);
         m.dorm_cfg = dorm;
         m
     }
@@ -238,6 +273,7 @@ impl DormMaster {
             epoch: 1,
             dorm_cfg: DormConfig { theta1: 0.1, theta2: 0.1 },
             ha: None,
+            dedupe: VecDeque::new(),
         }
     }
 
@@ -367,9 +403,31 @@ impl DormMaster {
     /// replay reproduces the same deterministic outcome either way —
     /// through [`Self::ha_commit`] (WAL append, amortized full snapshots).
     pub fn dispatch(&mut self, req: Request) -> Response {
+        self.dispatch_rid(req, None)
+    }
+
+    /// [`Self::dispatch`] with an optional client retry id (v1.3).  A
+    /// `Submit`/`Complete` whose id was seen before returns the remembered
+    /// response *without re-running the handler or journaling* — the
+    /// idempotency guard that keeps a `FailoverTransport` re-send across a
+    /// takeover re-dial from double-applying the mutation.  Other request
+    /// kinds ignore the id (mirroring the wire format, which only stamps
+    /// the two re-sendable mutations).  When HA is armed, the journal
+    /// records the request *with* its rid, so a restored master rebuilds
+    /// the same dedupe memory from WAL replay.
+    pub fn dispatch_rid(&mut self, req: Request, rid: Option<u64>) -> Response {
+        let rid = match req {
+            Request::Submit { .. } | Request::Complete { .. } => rid,
+            _ => None,
+        };
+        if let Some(id) = rid {
+            if let Some((_, cached)) = self.dedupe.iter().find(|(seen, _)| *seen == id) {
+                return cached.clone();
+            }
+        }
         let action = if self.ha.is_some() { ha::HaAction::of(&req) } else { ha::HaAction::Skip };
         let encoded = match action {
-            ha::HaAction::Append => Some(proto::wire::encode_request(&req)),
+            ha::HaAction::Append => Some(proto::wire::encode_request_rid(&req, rid)),
             _ => None,
         };
         let rsp = self.dispatch_inner(req);
@@ -391,6 +449,12 @@ impl DormMaster {
                 self.ha_commit(encoded.expect("encoded above"), false)
             }
             (ha::HaAction::Barrier, _) => self.ha_commit(Vec::new(), true),
+        }
+        if let Some(id) = rid {
+            if self.dedupe.len() >= DEDUPE_CAP {
+                self.dedupe.pop_front();
+            }
+            self.dedupe.push_back((id, rsp.clone()));
         }
         rsp
     }
@@ -894,20 +958,20 @@ impl DormMaster {
     fn fail_servers(&mut self, servers: &[usize]) -> Result<Vec<AppId>> {
         // (app, first dead server observed hosting it), insertion-ordered
         let mut victims: Vec<(AppId, usize)> = Vec::new();
-        let mut any_died = false;
+        let mut died: Vec<usize> = Vec::new();
         for &j in servers {
             if !self.lease.is_alive(j) {
                 continue;
             }
             self.lease.mark_dead(j);
-            any_died = true;
+            died.push(j);
             for id in self.slaves[j].inventory().keys() {
                 if !victims.iter().any(|&(v, _)| v == *id) {
                     victims.push((*id, j));
                 }
             }
         }
-        if !any_died {
+        if died.is_empty() {
             return Ok(Vec::new());
         }
         self.clock += 1;
@@ -943,8 +1007,14 @@ impl DormMaster {
             app.state = AppState::Degraded;
             self.recovery_log.failed(id, j, now, lost as f64);
         }
-        // the policy's cached solve state was derived from the old
-        // capacity vector — both backends drop it here (tests/fault.rs)
+        // feed the MTBF estimator (risk-aware policies; no-op default),
+        // then drop the policy's cached solve state — it was derived from
+        // the old capacity vector.  Both backends keep this exact order
+        // (failure observations, then one invalidation, then one re-solve
+        // for the whole batch — tests/fault.rs pins the parity).
+        for &j in &died {
+            self.policy.on_server_failed(ServerId(j), now);
+        }
         self.policy.on_capacity_change();
         self.reallocate()?;
         Ok(victims.into_iter().map(|(id, _)| id).collect())
@@ -973,6 +1043,10 @@ impl DormMaster {
         }
         self.clock += 1;
         self.lease.mark_alive(j, now);
+        // repair observation in the master's event-counter clock (the same
+        // "now" the failure observation used), then the usual invalidate +
+        // re-solve — mirroring the DES ServerRecover arm
+        self.policy.on_server_recovered(ServerId(j), self.clock as f64);
         self.policy.on_capacity_change();
         self.reallocate()?;
         Ok(())
@@ -1667,6 +1741,59 @@ mod tests {
         match m.dispatch(Request::Hello { major: proto::PROTO_MAJOR + 1, minor: 0 }) {
             Response::Error(e) => assert_eq!(e.code, ErrorCode::VersionMismatch),
             other => panic!("future major answered {other:?}"),
+        }
+    }
+
+    /// v1.3 retry dedupe: a re-sent `Submit`/`Complete` carrying a seen
+    /// retry id gets the cached response and mutates state exactly once —
+    /// the double-apply guard a `FailoverTransport` re-dial depends on.
+    #[test]
+    fn retry_ids_dedupe_resent_mutations() {
+        let mut m = master("dedupe");
+        let rsp =
+            m.dispatch_rid(Request::Submit { spec: spec(2.0, 0.0, 8.0, 1, 1, 8) }, Some(42));
+        let id = match rsp {
+            Response::Submitted { app } => app,
+            other => panic!("submit answered {other:?}"),
+        };
+        assert_eq!(m.state_view(None).active_apps, 1);
+        // the retry: same rid, cached response, still one app
+        let again =
+            m.dispatch_rid(Request::Submit { spec: spec(2.0, 0.0, 8.0, 1, 1, 8) }, Some(42));
+        assert_eq!(again, Response::Submitted { app: id });
+        assert_eq!(m.state_view(None).active_apps, 1, "retry must not double-apply");
+        // a different rid is a genuinely new submission
+        match m.dispatch_rid(Request::Submit { spec: spec(2.0, 0.0, 8.0, 1, 1, 8) }, Some(43)) {
+            Response::Submitted { app } => assert_ne!(app, id),
+            other => panic!("fresh submit answered {other:?}"),
+        }
+        assert_eq!(m.state_view(None).active_apps, 2);
+        // Complete retried: the cache answers Ok where a raw re-dispatch
+        // would answer InvalidState (already terminal)
+        assert_eq!(m.dispatch_rid(Request::Complete { app: id }, Some(44)), Response::Ok);
+        assert_eq!(
+            m.dispatch_rid(Request::Complete { app: id }, Some(44)),
+            Response::Ok,
+            "retried completion must hit the cache, not InvalidState"
+        );
+        assert_eq!(m.state_view(None).active_apps, 1);
+        // an UNstamped duplicate still sees the raw semantics
+        match m.dispatch(Request::Complete { app: id }) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::InvalidState),
+            other => panic!("unstamped duplicate answered {other:?}"),
+        }
+        // rid ignored on never-stamped kinds: two queries both answer
+        match m.dispatch_rid(Request::QueryState { app: None }, Some(45)) {
+            Response::State(_) => {}
+            other => panic!("query answered {other:?}"),
+        }
+        // the memory is bounded: old ids fall out after DEDUPE_CAP others
+        for k in 0..(DEDUPE_CAP as u64 + 1) {
+            let _ = m.dispatch_rid(Request::Complete { app: AppId(9999) }, Some(1000 + k));
+        }
+        match m.dispatch_rid(Request::Submit { spec: spec(2.0, 0.0, 8.0, 1, 1, 8) }, Some(42)) {
+            Response::Submitted { app } => assert_ne!(app, id, "evicted id re-applies"),
+            other => panic!("post-eviction submit answered {other:?}"),
         }
     }
 

@@ -156,9 +156,14 @@ impl TcpTransport {
     }
 }
 
-impl ControlPlane for TcpTransport {
-    fn call(&mut self, req: Request) -> Result<Response> {
-        let payload = wire::encode_request(&req);
+impl TcpTransport {
+    /// As [`ControlPlane::call`], but stamp `rid` as the request's v1.3
+    /// retry id (a trailing extension older masters simply ignore).  A
+    /// client that re-sends the same mutating frame with the same rid —
+    /// the [`FailoverTransport`] re-dial path — gets the master's cached
+    /// response instead of a second application.
+    pub fn call_rid(&mut self, req: Request, rid: Option<u64>) -> Result<Response> {
+        let payload = wire::encode_request_rid(&req, rid);
         wire::write_frame(&mut self.stream, &payload, self.max_frame)
             .context("send request frame")?;
         let payload = wire::read_frame(&mut self.stream, self.max_frame)
@@ -168,6 +173,12 @@ impl ControlPlane for TcpTransport {
             self.peer_epoch = epoch;
         }
         Ok(rsp)
+    }
+}
+
+impl ControlPlane for TcpTransport {
+    fn call(&mut self, req: Request) -> Result<Response> {
+        self.call_rid(req, None)
     }
 
     fn last_epoch(&self) -> Option<u64> {
@@ -182,16 +193,22 @@ impl ControlPlane for TcpTransport {
 /// ridden out — and it remembers the highest epoch it has ever observed,
 /// refusing to talk to a master that answers with a lower one.
 ///
-/// Retry caveat: a request re-sent after an ambiguous failure (the
-/// connection died after the master may have applied it) can be applied
-/// twice; non-idempotent callers (Submit) must reconcile via QueryState —
-/// the failover smoke's "modulo in-flight requests" contract.
+/// Retry semantics (v1.3): every logical `Submit`/`Complete` is stamped
+/// with one randomly-drawn retry id, *reused verbatim across re-dials* of
+/// the same call, so a master that already applied the first copy answers
+/// the re-sent frame from its dedupe cache instead of applying it twice.
+/// The residual ambiguity is a takeover that lost the WAL tail (or an id
+/// evicted from the bounded cache): those callers still reconcile via
+/// QueryState — the failover smoke's "modulo in-flight requests" contract.
 pub struct FailoverTransport {
     candidates: Vec<String>,
     cfg: NetConfig,
     current: Option<TcpTransport>,
     /// Highest epoch ever observed — the fence.
     fence: u64,
+    /// Retry-id stream, wall-clock seeded so two clients (or two runs of
+    /// one client) never share an id sequence.
+    rids: crate::util::Rng,
 }
 
 impl FailoverTransport {
@@ -202,11 +219,17 @@ impl FailoverTransport {
         if candidates.is_empty() {
             bail!("failover transport needs at least one candidate address");
         }
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+            ^ (std::process::id() as u64).rotate_left(32);
         let mut t = FailoverTransport {
             candidates,
             cfg: cfg.clone(),
             current: None,
             fence: 0,
+            rids: crate::util::Rng::new(seed),
         };
         t.current = t.dial();
         if t.current.is_none() {
@@ -256,6 +279,11 @@ impl FailoverTransport {
 
 impl ControlPlane for FailoverTransport {
     fn call(&mut self, req: Request) -> Result<Response> {
+        // one retry id per *logical* mutating call, drawn here and reused
+        // on every re-dial below — the id's sameness is what lets the
+        // master tell "the network re-sent it" from "a second submission"
+        let rid = matches!(req, Request::Submit { .. } | Request::Complete { .. })
+            .then(|| self.rids.next_u64());
         let rounds = self.cfg.redial_rounds.max(1);
         let backoff = Duration::from_millis(self.cfg.redial_backoff_ms.max(1));
         for round in 0..rounds {
@@ -264,7 +292,7 @@ impl ControlPlane for FailoverTransport {
                 None => self.dial(),
             };
             if let Some(mut t) = conn {
-                match t.call(req.clone()) {
+                match t.call_rid(req.clone(), rid) {
                     Ok(rsp) => {
                         if let Some(e) = t.last_epoch() {
                             if e < self.fence {

@@ -299,7 +299,7 @@ fn handle_conn(
             Ok(true) => {}
             _ => return,
         }
-        let req = match wire::decode_request(&payload) {
+        let (req, rid) = match wire::decode_request_rid(&payload) {
             Ok(r) => r,
             Err(wire::WireError::UnknownRequestTag(t)) => {
                 // a newer peer's message: typed refusal, connection lives
@@ -350,7 +350,10 @@ fn handle_conn(
         let shutdown = req == Request::Shutdown;
         let rsp = {
             let mut m = lock_master(&master);
-            let r = m.dispatch(stamp(req, wall_epoch));
+            // v1.3: the trailing retry id (when the client stamped one)
+            // makes a re-sent Submit/Complete answer from the dedupe
+            // cache instead of double-applying after a re-dial
+            let r = m.dispatch_rid(stamp(req, wall_epoch), rid);
             cur_epoch = m.epoch();
             r
         };

@@ -26,7 +26,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::app::AppId;
-use crate::cluster::{place, place_delta, PackState, Placement, PlacementInput, ServerId};
+use crate::cluster::{place_spread, place_delta, PackState, Placement, PlacementInput, ServerId};
 use crate::config::DormConfig;
 use crate::resources::Res;
 use crate::solver::heuristic::{
@@ -268,9 +268,13 @@ impl Optimizer {
             .collect();
 
         // Once a delta attempt fails, its internal full-re-pack fallback has
-        // also failed and the pack state is cold — plain `place` for the
-        // remaining retries of this call, so the reduce-counts storm costs
-        // one packing pass per retry (same as the legacy loop), not two.
+        // also failed and the pack state is cold — plain full packing for
+        // the remaining retries of this call, so the reduce-counts storm
+        // costs one packing pass per retry (same as the legacy loop), not
+        // two.  The pack's failure-domain tie-break context still applies
+        // on that path (risk-aware placement must not silently degrade to
+        // risk-blind mid-retry).
+        let spread_ctx = pack.as_deref().and_then(|s| s.spread().cloned());
         let mut use_delta = pack.is_some();
         for _attempt in 0..256 {
             for (inp, &c) in inputs.iter_mut().zip(&counts) {
@@ -284,7 +288,7 @@ impl Optimizer {
                 }
                 p
             } else {
-                place(&inputs, capacities)
+                place_spread(&inputs, capacities, spread_ctx.as_ref())
             };
             if let Some(placement) = placed {
                 stats.delta_path = placement.delta_path;

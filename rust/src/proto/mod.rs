@@ -50,7 +50,13 @@ pub const PROTO_MAJOR: u16 = 1;
 /// directive applied since the previous beat, replacing one ack
 /// round-trip per directive.  Both ride the trailing extension room of
 /// existing frames, so a v1.1 peer still decodes v1.2 traffic.
-pub const PROTO_MINOR: u16 = 2;
+/// v1.3 added retry ids: a client may stamp `Submit`/`Complete` with a
+/// generated id ([`wire::encode_request_rid`]); the master remembers the
+/// last few (id → response) pairs, so a `FailoverTransport` re-send across
+/// a takeover re-dial returns the cached response instead of double-
+/// applying the mutation.  The id rides the trailing extension room, so
+/// older peers interoperate unchanged.
+pub const PROTO_MINOR: u16 = 3;
 
 /// Version handshake rule: same major, minor no newer than ours (a newer
 /// minor may legally send request tags we cannot decode, so it is refused

@@ -465,8 +465,39 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
     out
 }
 
-pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
+/// Encode a request with a client-generated retry id appended as a
+/// trailing extension (v1.3).  Only the mutating requests a retrying
+/// client may legally re-send across a failover re-dial — `Submit` and
+/// `Complete` — are stamped; for everything else the bytes are exactly
+/// [`encode_request`] (idempotent requests need no dedupe, and `Heartbeat`
+/// already uses its trailing room for the ack batch).
+pub fn encode_request_rid(req: &Request, rid: Option<u64>) -> Vec<u8> {
+    let mut out = encode_request(req);
+    if let (Some(rid), Request::Submit { .. } | Request::Complete { .. }) = (rid, req) {
+        out.extend_from_slice(&rid.to_be_bytes());
+    }
+    out
+}
+
+/// Decode a request plus the optional trailing retry id.  `None` means a
+/// pre-v1.3 peer (or a request kind that is never stamped).
+pub fn decode_request_rid(payload: &[u8]) -> Result<(Request, Option<u64>), WireError> {
     let mut c = Cur::new(payload);
+    let req = decode_request_cur(&mut c)?;
+    let rid = match req {
+        Request::Submit { .. } | Request::Complete { .. } if c.remaining() >= 8 => {
+            Some(c.u64()?)
+        }
+        _ => None,
+    };
+    Ok((req, rid))
+}
+
+pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
+    decode_request_cur(&mut Cur::new(payload))
+}
+
+fn decode_request_cur(c: &mut Cur) -> Result<Request, WireError> {
     let req = match c.u8()? {
         REQ_HELLO => Request::Hello { major: c.u16()?, minor: c.u16()? },
         REQ_SUBMIT => Request::Submit { spec: spec(&mut c)? },
@@ -850,6 +881,43 @@ mod tests {
         // an epoch-less frame decodes with None (v1.0 master)
         let bare = encode_response(&Response::Ok);
         assert_eq!(decode_response_ep(&bare).unwrap(), (Response::Ok, None));
+    }
+
+    /// The retry id is a trailing extension on exactly the re-sendable
+    /// mutating requests: stamped frames round-trip it, bare frames decode
+    /// as `None` (pre-v1.3 peer), and never-stamped kinds ignore it.
+    #[test]
+    fn retry_id_roundtrips_on_mutating_requests() {
+        let submit = Request::Submit {
+            spec: AppSpec {
+                executor: Engine::MxNet,
+                demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+                weight: 1,
+                n_max: 4,
+                n_min: 1,
+                cmd: ["lr".into(), "lr".into()],
+            },
+        };
+        let complete = Request::Complete { app: AppId(3) };
+        for req in [&submit, &complete] {
+            let buf = encode_request_rid(req, Some(0xDEAD_BEEF));
+            let (back, rid) = decode_request_rid(&buf).unwrap();
+            assert_eq!(&back, req);
+            assert_eq!(rid, Some(0xDEAD_BEEF));
+            // a rid-less decoder still parses the request itself
+            assert_eq!(&decode_request(&buf).unwrap(), req);
+            // a rid-less frame decodes with None
+            let bare = encode_request(req);
+            assert_eq!(decode_request_rid(&bare).unwrap(), (req.clone(), None));
+        }
+        // non-stamped kinds: the rid argument is dropped on encode and
+        // trailing bytes are never misread as one on decode
+        let q = Request::QueryState { app: None };
+        let buf = encode_request_rid(&q, Some(7));
+        assert_eq!(buf, encode_request(&q));
+        let mut padded = encode_request(&Request::Reallocate);
+        padded.extend_from_slice(&7u64.to_be_bytes());
+        assert_eq!(decode_request_rid(&padded).unwrap(), (Request::Reallocate, None));
     }
 
     #[test]

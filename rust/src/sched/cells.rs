@@ -43,8 +43,9 @@ use std::sync::Arc;
 
 use crate::app::checkpoint::fnv1a;
 use crate::app::AppId;
-use crate::cluster::{Assignment, ServerId};
+use crate::cluster::{Assignment, ServerId, SpreadCtx};
 use crate::config::{CellsConfig, DormConfig};
+use crate::fault::{DomainTopology, MtbfEstimator};
 use crate::optimizer::SolveMode;
 use crate::resources::Res;
 
@@ -101,6 +102,11 @@ pub struct CellScheduler {
     events: u64,
     views: Vec<CellView>,
     label: String,
+    /// Online failure observer (risk-aware mode, DESIGN.md §14).
+    estimator: Option<MtbfEstimator>,
+    /// Cluster-global failure-domain context derived from the estimator;
+    /// sliced per cell into each engine and consulted by routing.
+    spread: Option<SpreadCtx>,
 }
 
 /// Deterministic routing tiebreak: a stable per-app hash.
@@ -130,7 +136,77 @@ impl CellScheduler {
             cfg: CellsConfig { count, ..cfg },
             events: 0,
             views: Vec::new(),
+            estimator: None,
+            spread: None,
         }
+    }
+
+    /// Risk-aware mode (DESIGN.md §14): own an online [`MtbfEstimator`]
+    /// over `topo`, slice its failure-domain context into every cell
+    /// engine's placement tie-break, and penalize routing into cells whose
+    /// headroom is concentrated in an at-risk domain.
+    pub fn enable_risk_aware(&mut self, topo: DomainTopology) {
+        self.label = format!("{}+risk", self.label);
+        self.estimator = Some(MtbfEstimator::new(topo));
+        self.refresh_risk();
+    }
+
+    /// The online estimator, when risk-aware mode is on.
+    pub fn estimator(&self) -> Option<&MtbfEstimator> {
+        self.estimator.as_ref()
+    }
+
+    /// Re-derive the global spread context from the estimator's counts and
+    /// push cell-local slices (global domain indices, cell-local server
+    /// ordinates) into every engine.
+    fn refresh_risk(&mut self) {
+        self.spread = self.estimator.as_ref().map(|est| SpreadCtx {
+            domain_of: est.topology().rack_map().to_vec(),
+            risk: est.rack_risks_by_count(),
+        });
+        for cell in &mut self.cells {
+            let sub = self.spread.as_ref().map(|s| SpreadCtx {
+                domain_of: s.domain_of
+                    [cell.lo.min(s.domain_of.len())..cell.hi.min(s.domain_of.len())]
+                    .to_vec(),
+                risk: s.risk.clone(),
+            });
+            cell.engine.set_spread(sub);
+        }
+    }
+
+    /// Routing risk per cell: how much of the cell's capacity sits in its
+    /// riskiest domain — `max_d (domain capacity in cell / cell capacity)
+    /// × risk[d]`.  All zeros without risk data (or evidence), keeping the
+    /// default routing order replay-identical.
+    fn cell_risks(&self, ctx: &SchedCtx) -> Vec<f64> {
+        let Some(s) = &self.spread else {
+            return vec![0.0; self.cells.len()];
+        };
+        let m = ctx.capacities.first().map(Res::m).unwrap_or(0);
+        self.cells
+            .iter()
+            .map(|cell| {
+                let hi = cell.hi.min(ctx.capacities.len());
+                let mut cell_cap = Res::zeros(m);
+                let mut dom_caps: BTreeMap<usize, Res> = BTreeMap::new();
+                for j in cell.lo..hi {
+                    cell_cap += &ctx.capacities[j];
+                    let d = s.domain_of.get(j).copied().unwrap_or(0);
+                    dom_caps
+                        .entry(d)
+                        .and_modify(|c| *c += &ctx.capacities[j])
+                        .or_insert_with(|| ctx.capacities[j].clone());
+                }
+                dom_caps
+                    .iter()
+                    .map(|(d, c)| {
+                        c.dominant_share(&cell_cap)
+                            * s.risk.get(*d).copied().unwrap_or(0.0)
+                    })
+                    .fold(0.0, f64::max)
+            })
+            .collect()
     }
 
     /// Rebuild from a checkpointed [`CellsSnapshot`] (HA restore):
@@ -218,19 +294,24 @@ impl CellScheduler {
     /// defers the app exactly like a saturated single engine would).
     fn route_new_apps(&mut self, ctx: &SchedCtx, caps: &[Res], used: &mut [Res]) {
         let n = self.cells.len();
+        let risks = self.cell_risks(ctx);
         for a in ctx.apps.values() {
             if self.routes.contains_key(&a.id) {
                 continue;
             }
             let floor = a.demand.times(a.n_min.max(1));
             let h = (app_hash(a.id) % n as u64) as usize;
-            // candidate order: ascending projected share, ties rotated by
+            // candidate order: ascending projected share, then ascending
+            // concentration risk (risk-aware mode; all zeros otherwise so
+            // historical routing is replay-identical), ties rotated by
             // the app hash so equal cells don't all collect the same apps
             let mut order: Vec<usize> = (0..n).collect();
             order.sort_by(|&x, &y| {
                 let sx = used[x].clone().add_ref(&floor).dominant_share(&caps[x]);
                 let sy = used[y].clone().add_ref(&floor).dominant_share(&caps[y]);
-                sx.total_cmp(&sy).then(((x + n - h) % n).cmp(&((y + n - h) % n)))
+                sx.total_cmp(&sy)
+                    .then(risks[x].total_cmp(&risks[y]))
+                    .then(((x + n - h) % n).cmp(&((y + n - h) % n)))
             });
             let pick = order
                 .iter()
@@ -463,6 +544,23 @@ impl CmsPolicy for CellScheduler {
         }
     }
 
+    /// Feed the outage into the estimator and re-slice the refreshed risk
+    /// context into every cell; the capacity-change invalidation that
+    /// always follows drops any cached solves built on the old context.
+    fn on_server_failed(&mut self, server: ServerId, now: f64) {
+        if let Some(est) = self.estimator.as_mut() {
+            est.observe_failure(server.0, now);
+            self.refresh_risk();
+        }
+    }
+
+    fn on_server_recovered(&mut self, server: ServerId, now: f64) {
+        if let Some(est) = self.estimator.as_mut() {
+            est.observe_repair(server.0, now);
+            self.refresh_risk();
+        }
+    }
+
     /// Aggregated over all cells.
     fn engine_stats(&self) -> Option<EngineStats> {
         let mut total = EngineStats::default();
@@ -664,6 +762,39 @@ mod tests {
         let rebuilt = CellScheduler::from_snapshot(cfg(), &snap, n);
         assert_eq!(rebuilt.routes(), pol.routes());
         assert_eq!(rebuilt.snapshot(), snap);
+    }
+
+    #[test]
+    fn risk_aware_routing_avoids_hot_rack_cell() {
+        use crate::fault::DomainTopology;
+        let n = 4;
+        // cells [0,2) and [2,4); racks {0,1} and {2,3} line up with them
+        let mut pol = CellScheduler::new(cfg(), cells_cfg(2), n);
+        pol.enable_risk_aware(DomainTopology::grouped(n, 2, 1));
+        assert!(pol.name().ends_with("+risk"));
+
+        // rack 0 (cell 0's servers) suffers an outage and comes back
+        pol.on_server_failed(ServerId(0), 1.0);
+        pol.on_server_failed(ServerId(1), 1.0);
+        pol.on_capacity_change();
+        pol.on_server_recovered(ServerId(0), 1.5);
+        pol.on_server_recovered(ServerId(1), 1.5);
+        pol.on_capacity_change();
+        let est = pol.estimator().expect("risk-aware");
+        assert_eq!(est.rack_failure_count(0), 2);
+        assert_eq!(est.rack_failure_count(1), 0);
+
+        // both cells have equal capacity and zero usage: the projected
+        // shares tie, and the risk term must steer the app to cell 1
+        let mut apps = BTreeMap::new();
+        apps.insert(AppId(1), app(1, 1, 2));
+        let u = drive(&mut pol, &mut apps, &caps(n), 2.0).expect("feasible");
+        assert_eq!(pol.routes.get(&AppId(1)), Some(&1), "routed into the hot rack");
+        let row = u.assignment.get(&AppId(1)).expect("placed");
+        assert!(
+            row.keys().all(|sid| sid.0 >= 2),
+            "containers must land on rack 1's servers: {row:?}"
+        );
     }
 
     #[test]

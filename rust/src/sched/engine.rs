@@ -40,8 +40,9 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::app::AppId;
-use crate::cluster::PackState;
+use crate::cluster::{PackState, ServerId, SpreadCtx};
 use crate::config::DormConfig;
+use crate::fault::{DomainTopology, MtbfEstimator};
 use crate::optimizer::{Decision, OptApp, Optimizer, SolveMode};
 use crate::resources::Res;
 
@@ -306,11 +307,27 @@ impl AllocationEngine {
 
     /// Drop the cached solution, warm-start state and delta-packer books
     /// (e.g. after an out-of-band capacity change the caller knows
-    /// invalidates them).
+    /// invalidates them).  The failure-domain spread context survives (it
+    /// describes the world, not the books).
     pub fn invalidate(&mut self) {
         self.cache = None;
         self.prev_counts.clear();
         self.pack.invalidate();
+    }
+
+    /// Install (or clear) the failure-domain tie-break context applied to
+    /// every subsequent incremental placement round.  Callers must pair a
+    /// *change* of context with [`AllocationEngine::invalidate`] — the
+    /// snapshot cache does not key on it (in this codebase the context
+    /// only changes on fail/recover events, which invalidate anyway).
+    /// The legacy (non-incremental) path ignores it.
+    pub fn set_spread(&mut self, spread: Option<SpreadCtx>) {
+        self.pack.set_spread(spread);
+    }
+
+    /// The installed failure-domain context, if any.
+    pub fn spread(&self) -> Option<&SpreadCtx> {
+        self.pack.spread()
     }
 
     /// The shared loop: admission ordering, newest-first deferral, solve.
@@ -433,6 +450,9 @@ impl AllocationEngine {
 pub struct DormPolicy {
     pub engine: AllocationEngine,
     label: String,
+    /// Online failure observer (risk-aware mode): feeds per-rack failure
+    /// counts into the engine's [`SpreadCtx`] on every fail/recover event.
+    estimator: Option<MtbfEstimator>,
 }
 
 impl DormPolicy {
@@ -444,7 +464,47 @@ impl DormPolicy {
         DormPolicy {
             label: format!("dorm(t1={},t2={})", cfg.theta1, cfg.theta2),
             engine: AllocationEngine::with_mode(cfg, mode),
+            estimator: None,
         }
+    }
+
+    /// Risk-aware mode (DESIGN.md §14): own an online
+    /// [`MtbfEstimator`] over `topo` and keep the engine's placement
+    /// tie-break pointed at its per-rack failure counts.  Counts (not
+    /// time-based rates) keep decisions identical across backends whose
+    /// clocks differ (DES hours vs. master event counter).
+    pub fn with_domains(cfg: DormConfig, topo: DomainTopology) -> Self {
+        let mut p = Self::new(cfg);
+        p.enable_risk_aware(topo);
+        p
+    }
+
+    /// Switch an existing policy into risk-aware mode (resets any prior
+    /// estimator state).
+    pub fn enable_risk_aware(&mut self, topo: DomainTopology) {
+        self.label = format!("{}+risk", self.label);
+        self.push_spread_from(&topo, &MtbfEstimator::new(topo.clone()));
+        self.estimator = Some(MtbfEstimator::new(topo));
+    }
+
+    /// The online estimator, when risk-aware mode is on.
+    pub fn estimator(&self) -> Option<&MtbfEstimator> {
+        self.estimator.as_ref()
+    }
+
+    fn push_spread_from(&mut self, topo: &DomainTopology, est: &MtbfEstimator) {
+        self.engine.set_spread(Some(SpreadCtx {
+            domain_of: topo.rack_map().to_vec(),
+            risk: est.rack_risks_by_count(),
+        }));
+    }
+
+    /// Re-derive the spread context from the estimator's current counts.
+    fn refresh_spread(&mut self) {
+        let Some(est) = self.estimator.take() else { return };
+        let topo = est.topology().clone();
+        self.push_spread_from(&topo, &est);
+        self.estimator = Some(est);
     }
 }
 
@@ -469,6 +529,24 @@ impl CmsPolicy for DormPolicy {
     /// so the next decide() is a cold solve.
     fn on_capacity_change(&mut self) {
         self.engine.invalidate();
+    }
+
+    /// Risk-aware mode: record the failure and refresh the placement
+    /// tie-break.  The backend's `on_capacity_change` follows immediately,
+    /// so the snapshot cache never serves a decision solved under the old
+    /// risk vector.
+    fn on_server_failed(&mut self, server: ServerId, now: f64) {
+        if let Some(est) = self.estimator.as_mut() {
+            est.observe_failure(server.0, now);
+            self.refresh_spread();
+        }
+    }
+
+    fn on_server_recovered(&mut self, server: ServerId, now: f64) {
+        if let Some(est) = self.estimator.as_mut() {
+            est.observe_repair(server.0, now);
+            self.refresh_spread();
+        }
     }
 
     fn engine_stats(&self) -> Option<EngineStats> {
@@ -622,6 +700,58 @@ mod tests {
         }
         assert!(!key_matches(&key, &apps, &caps(3, 12.0, 65.0)));
         assert!(!key_matches(&key, &apps, &caps(2, 12.0, 64.0)));
+    }
+
+    #[test]
+    fn risk_aware_policy_steers_ties_away_from_failed_rack() {
+        use super::super::policy::{CmsPolicy, SchedApp, SchedCtx};
+        use crate::app::Engine as DcsEngine;
+        use crate::cluster::ServerId;
+        use crate::fault::DomainTopology;
+
+        let capacities: Vec<Res> = (0..4).map(|_| Res(vec![4.0, 4.0])).collect();
+        let sched_app = |id: u64| SchedApp {
+            id: AppId(id),
+            demand: Res(vec![3.0, 3.0]), // one container per server
+            weight: 1.0,
+            n_min: 1,
+            n_max: 1,
+            containers: 0,
+            placement: BTreeMap::new(),
+            submit: 0.0,
+            baseline_n: 1,
+            engine: DcsEngine::MxNet,
+        };
+        let apps: BTreeMap<AppId, SchedApp> =
+            [(AppId(1), sched_app(1))].into_iter().collect();
+        let ctx = SchedCtx { now: 2.0, apps: &apps, capacities: &capacities };
+
+        // risk-blind: equal-slack tie goes to the lowest index (server 0)
+        let mut blind = DormPolicy::new(DormConfig { theta1: 1.0, theta2: 1.0 });
+        let ub = blind.on_change(&ctx).unwrap();
+        assert_eq!(ub.assignment[&AppId(1)][&ServerId(0)], 1);
+
+        // risk-aware: rack 0 = {s0, s1} observed failing once — the same
+        // tie must land in rack 1 instead
+        let mut aware = DormPolicy::with_domains(
+            DormConfig { theta1: 1.0, theta2: 1.0 },
+            DomainTopology::grouped(4, 2, 1),
+        );
+        assert!(aware.name().ends_with("+risk"));
+        aware.on_server_failed(ServerId(0), 1.0);
+        aware.on_server_failed(ServerId(1), 1.0);
+        aware.on_capacity_change();
+        aware.on_server_recovered(ServerId(0), 1.5);
+        aware.on_server_recovered(ServerId(1), 1.5);
+        aware.on_capacity_change();
+        assert_eq!(aware.estimator().unwrap().rack_failure_count(0), 2);
+        let ua = aware.on_change(&ctx).unwrap();
+        assert_eq!(ua.assignment[&AppId(1)].get(&ServerId(0)), None);
+        assert_eq!(ua.assignment[&AppId(1)][&ServerId(2)], 1, "tie steered to rack 1");
+        // totals are untouched by the tie-break
+        let tb: u32 = ub.assignment[&AppId(1)].values().sum();
+        let ta: u32 = ua.assignment[&AppId(1)].values().sum();
+        assert_eq!(tb, ta);
     }
 
     #[test]

@@ -24,11 +24,18 @@
 //!   and skips floor-infeasible prefixes outright (reported through
 //!   [`crate::optimizer::SolveStats`] and [`EngineStats`]).
 //! * [`DormPolicy`] — the paper's system as a [`CmsPolicy`]: a thin
-//!   adapter over [`AllocationEngine`].
+//!   adapter over [`AllocationEngine`].  With a failure-domain topology
+//!   ([`DormPolicy::enable_risk_aware`], DESIGN.md §14) it also owns an
+//!   online [`crate::fault::MtbfEstimator`] fed by the
+//!   [`CmsPolicy::on_server_failed`]/`on_server_recovered` hooks and
+//!   steers equal-slack placement ties toward low-risk domains — never
+//!   changing allocation totals, only which server a container lands on.
 //! * [`CellScheduler`] — the sharded root (DESIGN.md §12): partitions the
 //!   servers into cells, each with its own [`AllocationEngine`], solves
 //!   them in parallel on scoped threads, and scatter/gathers the per-cell
-//!   decisions back into the single-view shape both backends expect.
+//!   decisions back into the single-view shape both backends expect.  Its
+//!   risk-aware mode additionally penalizes routing new apps into cells
+//!   whose headroom is concentrated in a single at-risk domain.
 
 mod cells;
 mod engine;

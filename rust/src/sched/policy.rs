@@ -100,6 +100,19 @@ pub trait CmsPolicy: Send {
     /// baselines are stateless).
     fn on_capacity_change(&mut self) {}
 
+    /// A specific server was observed dead at `now` (lease expiry,
+    /// `FailServer`, DES `ServerFail`) — finer-grained than
+    /// [`CmsPolicy::on_capacity_change`], which always follows.  Risk-aware
+    /// policies feed this to their online [`crate::fault::MtbfEstimator`];
+    /// both backends call it at the same points (immediately before the
+    /// capacity-change invalidation) so stateful estimators stay
+    /// decision-identical across them.  Default: no-op.
+    fn on_server_failed(&mut self, _server: ServerId, _now: f64) {}
+
+    /// A specific server was observed back at `now` (`RecoverServer`,
+    /// re-register, DES `ServerRecover`).  Default: no-op.
+    fn on_server_recovered(&mut self, _server: ServerId, _now: f64) {}
+
     /// Multiplier on application progress under this CMS, in (0, 1].
     /// Below 1 models per-task scheduling overhead: task-level sharing
     /// (§II-C) pays the central manager's latency on every ~1.5 s task,

@@ -92,6 +92,20 @@ impl<E: PartialEq> EventQueue<E> {
         self.heap.peek().map(|s| s.time)
     }
 
+    /// Pop the head event only when `pred` accepts it.  The runner drains
+    /// same-time batches this way — a correlated rack outage schedules one
+    /// `ServerFail` per member at one timestamp, and the live master's
+    /// lease sweep expires those slaves as *one* batch with one re-solve,
+    /// so the DES must consume them in one handler pass to stay
+    /// decision-identical (`tests/fault.rs`).
+    pub fn pop_if(&mut self, pred: impl Fn(&Scheduled<E>) -> bool) -> Option<Scheduled<E>> {
+        if pred(self.heap.peek()?) {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -124,6 +138,20 @@ mod tests {
         assert_eq!(q.pop().unwrap().event, "first");
         assert_eq!(q.pop().unwrap().event, "second");
         assert_eq!(q.pop().unwrap().event, "third");
+    }
+
+    #[test]
+    fn pop_if_only_takes_matching_heads() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "a");
+        q.schedule(1.0, "b");
+        q.schedule(2.0, "c");
+        assert_eq!(q.pop().unwrap().event, "a");
+        // same-time sibling drains; the later event does not
+        assert_eq!(q.pop_if(|s| s.time == 1.0).unwrap().event, "b");
+        assert_eq!(q.pop_if(|s| s.time == 1.0), None);
+        assert_eq!(q.pop().unwrap().event, "c");
+        assert_eq!(q.pop_if(|_| true), None, "empty queue");
     }
 
     #[test]

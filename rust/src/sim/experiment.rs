@@ -83,11 +83,13 @@ impl Experiment {
     /// Apply a `[fault]` config to this experiment: set the periodic
     /// checkpoint cadence on the perf model and materialize the failure
     /// trace its model asks for (empty when `enabled = false`).  Feed the
-    /// returned trace to [`Experiment::run_with_faults`].
+    /// returned trace to [`Experiment::run_with_faults`].  Invalid fault
+    /// parameters surface as a typed [`crate::fault::FaultError`], never a
+    /// panic.
     pub fn apply_fault(
         &mut self,
         cfg: &crate::config::FaultConfig,
-    ) -> Vec<crate::fault::FailureEvent> {
+    ) -> Result<Vec<crate::fault::FailureEvent>, crate::fault::FaultError> {
         self.pm.ckpt_period_hours = cfg.ckpt_period_hours;
         crate::fault::FailureModel::from_config(cfg)
             .trace(self.cluster.servers.len(), self.sim.horizon_hours)

@@ -33,10 +33,10 @@
 //! checkpoint-on-adjustment plus an optional periodic cadence
 //! ([`PerfModel::ckpt_period_hours`]) decide how much work a death costs.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::app::{AppId, Engine};
-use crate::cluster::ClusterState;
+use crate::cluster::{ClusterState, ServerId};
 use crate::config::{ClusterConfig, SimConfig};
 use crate::drf::{drf_allocate, fairness_loss, DrfApp};
 use crate::fault::{FailureEvent, FailureKind, LeaseTable};
@@ -466,17 +466,41 @@ fn run_core(
                 }
             }
             Event::ServerFail(j) => {
-                if !lease.is_alive(j) {
-                    continue; // double kill in the trace
+                // Drain every same-time ServerFail into one batch: a
+                // correlated domain outage (DESIGN.md §14) kills a whole
+                // rack at one instant, and the live master's lease sweep
+                // expires those slaves as ONE batch — one rollback per
+                // victim app, one re-solve.  The DES must consume them in
+                // one pass to stay decision-identical (`tests/fault.rs`).
+                let mut batch = vec![j];
+                while let Some(s) =
+                    q.pop_if(|s| s.time == now && matches!(s.event, Event::ServerFail(_)))
+                {
+                    if let Event::ServerFail(k) = s.event {
+                        if let Some(l) = log.as_deref_mut() {
+                            l.push(format!("{now:.9}|server_fail|{k}"));
+                        }
+                        batch.push(k);
+                    }
+                }
+                batch.sort_unstable();
+                batch.dedup();
+                batch.retain(|&k| lease.is_alive(k)); // double kills in the trace
+                if batch.is_empty() {
+                    continue;
                 }
                 for app in apps.values_mut() {
                     app.settle(now, pm, pf);
                 }
-                lease.mark_dead(j);
-                // every partition with a container on j is broken: reclaim
-                // it everywhere and roll the app back to its checkpoint
-                let victims: Vec<AppId> =
-                    cluster.servers[j].containers.keys().copied().collect();
+                // every partition with a container on a dead server is
+                // broken: reclaim it everywhere and roll the app back to
+                // its checkpoint — once per app, however many servers of
+                // its footprint the batch took
+                let mut victims: BTreeSet<AppId> = BTreeSet::new();
+                for &k in &batch {
+                    lease.mark_dead(k);
+                    victims.extend(cluster.servers[k].containers.keys().copied());
+                }
                 for id in &victims {
                     let placement = cluster.placement_of(*id);
                     for (&sid, &cnt) in &placement {
@@ -509,7 +533,10 @@ fn run_core(
                     // re-placed (see reallocate); while down it simply
                     // holds no containers and makes no progress
                 }
-                cluster.servers[j].capacity = Res::zeros(saved_caps[j].m());
+                for &k in &batch {
+                    cluster.servers[k].capacity = Res::zeros(saved_caps[k].m());
+                    policy.on_server_failed(ServerId(k), now);
+                }
                 policy.on_capacity_change();
                 // the teardown above is slave-local (the machine is gone
                 // either way); only the *decision* needs a live master
@@ -531,6 +558,7 @@ fn run_core(
                 }
                 lease.mark_alive(j, now);
                 cluster.servers[j].capacity = saved_caps[j].clone();
+                policy.on_server_recovered(ServerId(j), now);
                 policy.on_capacity_change();
                 if master_up {
                     reallocate(policy, &mut apps, &mut cluster, &mut q, now, pm, pf,

@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 
 use dorm::app::{AppId, AppSpec, AppState, CheckpointStore, Engine};
-use dorm::config::{ClusterConfig, DormConfig, SimConfig};
+use dorm::config::{ClusterConfig, DormConfig, FaultConfig, SimConfig};
 use dorm::fault::{FailureEvent, FailureModel};
 use dorm::master::DormMaster;
 use dorm::resources::Res;
@@ -367,6 +367,191 @@ fn corrupt_checkpoint_rolls_recovery_back_to_previous_good() {
     assert_eq!(master.store().load_latest(a).unwrap().unwrap().step, 100);
 }
 
+/// Correlated outages (DESIGN.md §14): a scripted whole-rack trace — every
+/// server of the rack dying at the *same* timestamp — must replay as ONE
+/// batch on both backends.  The DES drains the simultaneous `ServerFail`
+/// events into a single capacity invalidation + re-solve, the live
+/// master's lease sweep expires the rack through the same batched
+/// `fail_servers` path, the two allocation sequences stay identical event
+/// for event, and the master charges each victim exactly the steps it ran
+/// past its last checkpoint.
+#[test]
+fn whole_rack_outage_is_one_batch_on_both_backends() {
+    let specs = trace();
+    // rack A = servers {0,1}, rack B = {2,3}; rack A dies at t=1.1 in one
+    // batch and rejoins (server by server) at t=2.5
+    let faults = vec![
+        FailureEvent::kill(1.1, 0),
+        FailureEvent::kill(1.1, 1),
+        FailureEvent::recover(2.5, 0),
+        FailureEvent::recover(2.5, 1),
+    ];
+
+    // ---- DES side -------------------------------------------------------
+    let rows: Vec<Table2Row> = specs
+        .iter()
+        .map(|s| Table2Row {
+            engine: Engine::MxNet,
+            dataset: "synthetic",
+            model: "fault",
+            demand: s.demand.clone(),
+            weight: s.weight,
+            n_max: s.n_max,
+            n_min: s.n_min,
+            num: 1,
+            baseline_containers: 8,
+            duration_median_hours: s.duration_at_baseline_hours,
+        })
+        .collect();
+    let workload: Vec<WorkloadApp> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| WorkloadApp {
+            row: i,
+            tag: format!("app{i}"),
+            submit_hours: s.submit_hours,
+            duration_at_baseline_hours: s.duration_at_baseline_hours,
+            baseline_n: 8,
+        })
+        .collect();
+    let sim = SimConfig { horizon_hours: 24.0, ..Default::default() };
+    let mut pol = Recording { inner: DormPolicy::new(CFG), log: Vec::new() };
+    let out = run_sim_faulty(
+        &mut pol,
+        &rows,
+        &workload,
+        &cluster(),
+        &sim,
+        &PerfModel::default(),
+        &faults,
+    );
+    assert_eq!(out.completed, specs.len(), "trace must fully drain");
+
+    // logical event order: the two t=1.1 kills are ONE event
+    #[derive(Debug, Clone, Copy)]
+    enum Rv {
+        Arrival(usize),
+        Completion(usize),
+        RackKill,
+        Recover(usize),
+    }
+    let mut events: Vec<(f64, Rv)> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.submit_hours, Rv::Arrival(i)))
+        .collect();
+    for (id, app) in &out.apps {
+        let t = app.completed_at.expect("all apps completed");
+        events.push((t, Rv::Completion(id.0 as usize)));
+    }
+    events.push((1.1, Rv::RackKill));
+    events.push((2.5, Rv::Recover(0)));
+    events.push((2.5, Rv::Recover(1)));
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    // 3 arrivals + 3 completions + 1 batched kill + 2 recoveries = 9
+    // decisions; separate per-server re-solves at t=1.1 would make it 10
+    assert_eq!(
+        pol.log.len(),
+        events.len(),
+        "a whole-rack kill must cost exactly one re-solve"
+    );
+    let sim_seq: Vec<Vec<u32>> = pol
+        .log
+        .iter()
+        .map(|m| {
+            (0..specs.len())
+                .map(|i| m.get(&AppId(i as u64)).copied().unwrap_or(0))
+                .collect()
+        })
+        .collect();
+
+    // ---- live-master side (lease expiry drives the batch) ---------------
+    let mut master = DormMaster::new(&cluster(), CFG, store("rack_batch"))
+        .with_fault(&FaultConfig { lease_timeout_hours: 1.0, ..Default::default() });
+    let mut ids: BTreeMap<usize, AppId> = BTreeMap::new();
+    let mut master_seq: Vec<Vec<u32>> = Vec::new();
+    // steps each app runs past its last checkpoint before the outage
+    let unsynced = |i: usize| 7 * (i as u64 + 1);
+    for &(_, ev) in &events {
+        match ev {
+            Rv::Arrival(i) => {
+                let s = &specs[i];
+                let id = master
+                    .submit(AppSpec {
+                        executor: Engine::MxNet,
+                        demand: s.demand.clone(),
+                        weight: s.weight,
+                        n_max: s.n_max,
+                        n_min: s.n_min,
+                        cmd: ["fault".into(), "fault".into()],
+                    })
+                    .unwrap();
+                ids.insert(i, id);
+            }
+            Rv::Completion(i) => {
+                master.complete(ids[&i]).unwrap();
+            }
+            Rv::RackKill => {
+                // known progress + an uncheckpointed tail per running app,
+                // so the lost-work accounting below is exact
+                for (&i, &id) in &ids {
+                    if master.app_state(id) == Some(AppState::Running) {
+                        master.advance_steps(id, 100).unwrap();
+                        master.checkpoint_app(id).unwrap();
+                        master.advance_steps(id, unsynced(i)).unwrap();
+                    }
+                }
+                // rack B renews; rack A has been silent since t=0
+                master.heartbeat(2, 1.0).unwrap();
+                master.heartbeat(3, 1.0).unwrap();
+                let dead = master.expire_leases(1.1).unwrap();
+                assert_eq!(dead, vec![0, 1], "rack A expires as one batch");
+            }
+            Rv::Recover(j) => {
+                master.recover_server_at(j, 2.5).unwrap();
+            }
+        }
+        master_seq.push(
+            (0..specs.len())
+                .map(|i| ids.get(&i).map(|&id| master.containers_of(id)).unwrap_or(0))
+                .collect(),
+        );
+    }
+
+    // ---- the invariants -------------------------------------------------
+    assert_eq!(
+        sim_seq, master_seq,
+        "whole-rack outage: master and DES allocation sequences diverged\n\
+         events: {events:?}"
+    );
+
+    let recs = master.recovery_log().records();
+    assert!(!recs.is_empty(), "the outage must break at least one app");
+    let t0 = recs[0].failed_at;
+    for r in recs {
+        assert_eq!(r.failed_at, t0, "one batch ⇒ one failure timestamp");
+        // master ids are 1-based submission order = workload index + 1
+        let i = (r.app.0 - 1) as usize;
+        assert_eq!(
+            r.lost_work,
+            unsynced(i) as f64,
+            "lost work must equal the steps since {:?}'s checkpoint",
+            r.app
+        );
+    }
+    // both backends agree on who the rack outage hit
+    let mut sim_victims: Vec<u64> = out
+        .apps
+        .values()
+        .filter(|a| a.recoveries > 0)
+        .map(|a| a.id.0)
+        .collect();
+    let mut master_victims: Vec<u64> = recs.iter().map(|r| r.app.0 - 1).collect();
+    sim_victims.sort_unstable();
+    master_victims.sort_unstable();
+    assert_eq!(master_victims, sim_victims, "same victims on both backends");
+}
+
 /// A scripted exponential model and the scripted trace drive the same
 /// machinery: the DES under generated churn keeps its invariants and
 /// emits the recovery metrics.
@@ -400,7 +585,7 @@ fn generated_churn_trace_drives_the_sim() {
         })
         .collect();
     let model = FailureModel::Exponential { mtbf_hours: 3.0, mttr_hours: 0.5, seed: 41 };
-    let faults = model.trace(4, 24.0);
+    let faults = model.trace(4, 24.0).unwrap();
     assert!(!faults.is_empty());
     let sim = SimConfig { horizon_hours: 24.0, ..Default::default() };
     let mut pol = DormPolicy::new(CFG);

@@ -1,0 +1,124 @@
+#!/usr/bin/env bash
+# Chaos smoke for correlated failure domains (DESIGN.md §14): one master
+# whose slaves are named across two racks (rack0: s0 s1, rack1: s2 s3),
+# four slave agents as real processes over TCP, then `kill -9` the whole
+# of rack0 at once and assert that
+#   * the lease expiry reaps BOTH rack0 servers as ONE batch,
+#   * the batch costs exactly one re-solve — each spanning app records
+#     exactly one recovery (rollback), not one per dead server, and
+#   * the surviving rack keeps making progress: steps advance past the
+#     restored checkpoint and a fresh submission schedules on rack1.
+# Run from the repo root after `cargo build --release`; exits non-zero on
+# any failed step.
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/dorm}
+PORT=${PORT:-46031}
+ADDR=127.0.0.1:$PORT
+STORE=$(mktemp -d)
+LOG=$(mktemp -d)
+MASTER_PID=
+SLAVE_PIDS=()
+
+cleanup() {
+  for pid in "${SLAVE_PIDS[@]:-}" "$MASTER_PID"; do
+    [ -n "$pid" ] && kill "$pid" 2>/dev/null || true
+  done
+  rm -rf "$STORE" "$LOG"
+}
+trap cleanup EXIT
+
+fail() {
+  echo "CHAOS SMOKE FAIL: $1" >&2
+  for f in master slave0 slave1 slave2 slave3; do
+    echo "--- $f log ---" >&2; cat "$LOG/$f.log" >&2 2>/dev/null || true
+  done
+  exit 1
+}
+
+ctl() {
+  "$BIN" ctl --connect "$ADDR" "$@"
+}
+
+wait_for() { # wait_for <file> <pattern> <tries> <what>
+  for _ in $(seq 1 "$3"); do
+    grep -q "$2" "$1" 2>/dev/null && return 0
+    sleep 0.1
+  done
+  fail "$4"
+}
+
+echo "== starting master: 4 slaves in 2 racks, lease 1000 ms, manual sweeps"
+"$BIN" master --bind "$ADDR" --slaves 4 --racks 2 --theta1 0.5 --theta2 0.5 \
+  --lease-ms 1000 --sweep-ms 0 --store "$STORE" >"$LOG/master.log" 2>&1 &
+MASTER_PID=$!
+wait_for "$LOG/master.log" "listening" 50 "master never started listening"
+grep -q "2 racks" "$LOG/master.log" \
+  || fail "master did not derive the rack topology (--racks 2)"
+
+echo "== starting 4 slave agents (rack0: 0 1, rack1: 2 3)"
+for i in 0 1 2 3; do
+  "$BIN" slave --connect "$ADDR" --index "$i" --period-ms 150 \
+    >"$LOG/slave$i.log" 2>&1 &
+  SLAVE_PIDS+=($!)
+done
+
+echo "== drive workload: app1 spans both racks, checkpoint at step 100"
+ctl submit --cpu 2 --ram 8 --nmax 8 | grep -q "submitted app1" || fail "submit app1"
+ctl advance --app 1 --steps 100 | grep -q ok || fail "advance app1"
+ctl checkpoint --app 1 | grep -q ok || fail "checkpoint app1"
+ctl advance --app 1 --steps 25 | grep -q ok || fail "advance app1 past ckpt"
+wait_for "$LOG/slave0.log" "applied" 100 "rack0 never applied directives"
+
+PRE=$(ctl query)
+echo "$PRE" | grep -q "servers=4/4" || fail "expected 4/4 alive pre-kill: $PRE"
+echo "$PRE" | grep -q "app1 Running containers=8 steps=125 ckpt=100" \
+  || fail "unexpected pre-kill app1 state: $PRE"
+
+echo "== kill -9 the whole of rack0 (slaves 0 and 1) at once"
+kill -9 "${SLAVE_PIDS[0]}" "${SLAVE_PIDS[1]}" || fail "could not kill rack0"
+SLAVE_PIDS[0]=
+SLAVE_PIDS[1]=
+
+echo "== one expiry sweep past the lease must reap BOTH as ONE batch"
+sleep 1.3   # lease is 1000 ms; rack1 keeps heartbeating every 150 ms
+EXP=$(ctl expire)
+echo "$EXP" | grep -q "expired servers \[0, 1\]" \
+  || fail "rack0 did not expire as one batch: $EXP"
+kill -0 "$MASTER_PID" 2>/dev/null || fail "master died during the rack outage"
+
+POST=$(ctl query)
+echo "$POST" | grep -q "servers=2/4" || fail "expected 2/4 alive post-kill: $POST"
+# one batch -> one whole-app rollback -> rec=1 exactly; two separate
+# expiries would have rolled app1 back (and re-solved) twice
+echo "$POST" | grep -Eq "app1 Running containers=[0-9]+ steps=100 ckpt=100 adj=[0-9]+ rec=1" \
+  || fail "whole-rack kill must cost exactly one rollback to ckpt 100: $POST"
+
+echo "== surviving rack progresses: advance past the restored checkpoint"
+ctl advance --app 1 --steps 10 | grep -q ok || fail "advance app1 post-kill"
+ctl query | grep -q "steps=110" || fail "app1 did not progress post-kill: $(ctl query)"
+
+echo "== a fresh submission schedules on the surviving rack"
+ctl submit --cpu 2 --ram 8 --nmax 2 | grep -q "submitted app2" || fail "submit app2"
+for _ in $(seq 1 50); do
+  if ctl query | grep -q "app2 Running containers=2"; then break; fi
+  sleep 0.1
+done
+ctl query | grep -q "app2 Running containers=2" \
+  || fail "post-kill submit did not run on rack1: $(ctl query)"
+
+echo "== shutdown: master exits, rack1 slaves drain"
+ctl shutdown | grep -q ok || fail "shutdown"
+for pid in "${SLAVE_PIDS[2]}" "${SLAVE_PIDS[3]}"; do
+  for _ in $(seq 1 200); do
+    kill -0 "$pid" 2>/dev/null || break
+    sleep 0.1
+  done
+  if kill -0 "$pid" 2>/dev/null; then
+    fail "rack1 slave $pid still running after the master left"
+  fi
+done
+SLAVE_PIDS=()
+MASTER_PID=
+
+echo "CHAOS SMOKE PASS: rack0 kill -9 -> one batch expiry -> one re-solve -> rack1 progresses"
