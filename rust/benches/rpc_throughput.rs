@@ -1,0 +1,126 @@
+//! Control-plane saturation throughput (DESIGN.md §15): M concurrent
+//! clients of submit/heartbeat/query traffic against the multiplexed
+//! server (`serve`) and the thread-per-connection baseline
+//! (`serve_legacy`), over loopback TCP.
+//!
+//! Where `rpc_roundtrip` times one client's unloaded round trip, this
+//! bench drives fan-in through [`dorm::net::loadgen`] (the same driver
+//! behind `dorm bench rpc-throughput`): every client loops the slave
+//! fleet's steady-state mix — mostly lease-only heartbeats, a
+//! `QueryState` every 16th call, an occasional submit/complete pair — as
+//! fast as the server answers, and the report is the *sustained*
+//! aggregate rate with client-observed p50/p99 round-trip latency.
+//!
+//! Knobs: `DORM_SCHED_SCALE=ci` for the reduced sweep (the CI smoke),
+//! `DORM_BENCH_JSON=<path>` to splice an `"rpc"` series into
+//! `BENCH_sched.json` (gated by `scripts/check_bench.sh`), and
+//! `DORM_RPC_ENFORCE=1` to hard-assert the headline claim — multiplexed
+//! at 64 clients sustains >= 4x the legacy req/s without a p99
+//! regression — which CI leaves to the baseline gate because shared
+//! runners are too noisy for a fixed multiplier.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use dorm::app::CheckpointStore;
+use dorm::config::{ClusterConfig, DormConfig, NetConfig};
+use dorm::master::DormMaster;
+use dorm::net::loadgen::{bench_spec, drive, splice_rpc_json, LoadReport, ServerKind};
+use dorm::resources::Res;
+
+const SERVERS: u32 = 64;
+
+fn ci_scale() -> bool {
+    matches!(std::env::var("DORM_SCHED_SCALE").as_deref(), Ok("ci"))
+}
+
+fn master(tag: &str) -> DormMaster {
+    let dir = std::env::temp_dir().join(format!("dorm_rpc_tput_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut m = DormMaster::new(
+        &ClusterConfig::uniform(SERVERS as usize, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+        DormConfig { theta1: 0.1, theta2: 0.1 },
+        CheckpointStore::new(dir).unwrap(),
+    );
+    // a live population so heartbeat reconciliation and QueryState have
+    // real work to answer with
+    for i in 0..8u32 {
+        m.submit(bench_spec(i)).unwrap();
+    }
+    m
+}
+
+/// One sweep point: serve fresh state, drive it, tear it down.
+fn point(kind: ServerKind, clients: usize, duration: Duration) -> (ServerKind, LoadReport) {
+    let net = NetConfig {
+        bind_addr: "127.0.0.1:0".into(),
+        io_timeout_ms: 10_000,
+        ..NetConfig::default()
+    };
+    let handle = kind
+        .serve(master(&format!("{}_{clients}", kind.label())), &net)
+        .expect("bind bench server");
+    let rep = drive(&handle, &net, SERVERS, clients, duration).expect("load drive");
+    handle.stop();
+    println!(
+        "  {:<6} @ {:>3} clients: {:>8.0} req/s ({:>8.0} hb/s fan-in)  \
+         p50 {:>7.1} us  p99 {:>8.1} us  ({} calls in {:.2} s)",
+        kind.label(),
+        rep.clients,
+        rep.req_per_sec,
+        rep.heartbeats_per_sec,
+        rep.p50_us,
+        rep.p99_us,
+        rep.calls,
+        rep.wall_secs
+    );
+    (kind, rep)
+}
+
+fn main() {
+    harness::banner("control-plane saturation throughput (legacy vs multiplexed)");
+    let duration = if ci_scale() { Duration::from_millis(1200) } else { Duration::from_secs(4) };
+    let fan = 64usize;
+
+    let mut points = Vec::new();
+    points.push(point(ServerKind::Legacy, fan, duration));
+    points.push(point(ServerKind::Mux, 8, duration));
+    points.push(point(ServerKind::Mux, fan, duration));
+    if !ci_scale() {
+        points.push(point(ServerKind::Mux, 256, duration));
+    }
+
+    let legacy =
+        &points.iter().find(|(k, p)| *k == ServerKind::Legacy && p.clients == fan).unwrap().1;
+    let mux = &points.iter().find(|(k, p)| *k == ServerKind::Mux && p.clients == fan).unwrap().1;
+    let speedup = mux.req_per_sec / legacy.req_per_sec.max(1e-9);
+
+    harness::banner("verdict");
+    harness::paper_row(
+        &format!("multiplexed vs thread-per-conn at {fan} clients"),
+        ">= 4x req/s, p99 no worse",
+        &format!("{speedup:.2}x req/s, p99 {:.0} vs {:.0} us", mux.p99_us, legacy.p99_us),
+    );
+    if std::env::var("DORM_RPC_ENFORCE").as_deref() == Ok("1") {
+        assert!(
+            speedup >= 4.0,
+            "multiplexed server sustained only {speedup:.2}x the legacy req/s at {fan} clients"
+        );
+        assert!(
+            mux.p99_us <= legacy.p99_us * 1.25,
+            "multiplexed p99 {:.1} us regressed past legacy {:.1} us",
+            mux.p99_us,
+            legacy.p99_us
+        );
+        println!("  DORM_RPC_ENFORCE: >= 4x with no p99 regression holds");
+    }
+
+    if let Ok(path) = std::env::var("DORM_BENCH_JSON") {
+        // same discipline as the replay_rate bench: this bench runs last
+        // and owns only its own series in the shared document
+        splice_rpc_json(&path, &points, speedup).expect("splice rpc series");
+        println!("  spliced rpc series into {path}");
+    }
+}

@@ -151,6 +151,15 @@ COMMANDS:
                --lease-ms T      lease timeout; 0 = never expire (default 0)
                --sweep-ms T      lease sweep period (default 250 when
                                  --lease-ms > 0, else off)
+               --workers N       multiplexed-server worker threads; 0 =
+                                 one per core, clamped to 8
+                                 ([net].workers)
+               --max-conns N     open-connection cap; dials past it get a
+                                 typed TooManyConnections reject
+                                 ([net].max_conns, default 1024)
+               --legacy-net      serve with the retained thread-per-
+                                 connection baseline instead of the
+                                 multiplexed worker pool (DESIGN.md §15)
                --store DIR       checkpoint dir (default net_checkpoints)
                --ha              self-checkpoint the master through the
                                  store; on restart, resume from the
@@ -169,7 +178,8 @@ COMMANDS:
                                  deposed-primary simulation)
              master/slave/ctl all also take:
                --config FILE     TOML file; its [net]/[ha] sections set
-                                 frame limit / timeouts / failover knobs
+                                 frame limit / timeouts / worker pool /
+                                 heartbeat coalescing / failover knobs
                --frame-kib N     frame-size limit override, KiB
                --io-timeout-ms T mid-frame stall timeout override
   slave      run one DormSlave as a separate process
@@ -198,6 +208,19 @@ COMMANDS:
                     query [--app N] | advance --app N --steps S
                     checkpoint --app N | expire | fail --server J
                     recover --server J | shutdown
+  bench      run a tracked benchmark from the installed binary
+               rpc-throughput    control-plane saturation sweep: drive
+                                 concurrent heartbeat/query/submit
+                                 clients against the legacy and the
+                                 multiplexed server, report sustained
+                                 req/s + p50/p99 (DESIGN.md §15)
+               --clients N       concurrent clients (default 64)
+               --servers N       cluster size = heartbeat ordinates
+                                 (default 64)
+               --seconds S       seconds per sweep point (default 2)
+               --json FILE       splice the measured `rpc` series into
+                                 FILE (BENCH_sched.json layout, gated by
+                                 scripts/check_bench.sh)
   help       this text
 ";
 

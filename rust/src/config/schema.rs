@@ -346,6 +346,19 @@ pub struct NetConfig {
     pub redial_rounds: u64,
     /// `FailoverTransport`: pause between candidate sweeps, milliseconds.
     pub redial_backoff_ms: u64,
+    /// Multiplexed-server worker threads (0 = auto: one per available
+    /// core, capped at 8).  Each worker owns a share of the open
+    /// connections and polls them round-robin, so N workers bound the
+    /// master-lock contention regardless of connection count.
+    pub workers: usize,
+    /// Maximum simultaneous connections the server will hold open.
+    /// Arrivals beyond the limit are answered with a typed
+    /// `TooManyConnections` error and closed, never silently dropped.
+    pub max_conns: usize,
+    /// Coalesce heartbeats that arrive within one poll tick into a
+    /// single lease-table update with at most one re-solve (DESIGN.md
+    /// §15).  Disable to force one dispatch per heartbeat.
+    pub coalesce_heartbeats: bool,
 }
 
 impl Default for NetConfig {
@@ -359,6 +372,9 @@ impl Default for NetConfig {
             // 24 x 250 ms = a 6 s takeover ride-out by default
             redial_rounds: 24,
             redial_backoff_ms: 250,
+            workers: 0,
+            max_conns: 1024,
+            coalesce_heartbeats: true,
         }
     }
 }
@@ -382,6 +398,12 @@ impl NetConfig {
             redial_backoff_ms: doc
                 .u32_or("net", "redial_backoff_ms", d.redial_backoff_ms as u32)
                 as u64,
+            workers: doc.u32_or("net", "workers", d.workers as u32) as usize,
+            max_conns: doc.u32_or("net", "max_conns", d.max_conns as u32) as usize,
+            coalesce_heartbeats: doc
+                .get("net", "coalesce_heartbeats")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.coalesce_heartbeats),
         };
         // the smallest legal frame must fit a handshake/error response;
         // 64 B is already absurdly tight but still functional
@@ -396,6 +418,9 @@ impl NetConfig {
         }
         if c.redial_rounds == 0 {
             bail!("[net].redial_rounds must be >= 1");
+        }
+        if c.max_conns == 0 {
+            bail!("[net].max_conns must be >= 1");
         }
         Ok(c)
     }
@@ -739,7 +764,8 @@ mod tests {
     fn net_section_parses_and_validates() {
         let doc = parse_toml(
             "[net]\nbind_addr = \"0.0.0.0:7000\"\nmax_frame_bytes = 4096\n\
-             heartbeat_period_ms = 100\nio_timeout_ms = 250\nlease_sweep_ms = 50\n",
+             heartbeat_period_ms = 100\nio_timeout_ms = 250\nlease_sweep_ms = 50\n\
+             workers = 4\nmax_conns = 128\ncoalesce_heartbeats = false\n",
         )
         .unwrap();
         let c = NetConfig::from_doc(&doc).unwrap();
@@ -748,6 +774,9 @@ mod tests {
         assert_eq!(c.heartbeat_period_ms, 100);
         assert_eq!(c.io_timeout_ms, 250);
         assert_eq!(c.lease_sweep_ms, 50);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.max_conns, 128);
+        assert!(!c.coalesce_heartbeats);
 
         // defaults when the section is absent
         let empty = parse_toml("").unwrap();
@@ -757,6 +786,7 @@ mod tests {
             "[net]\nmax_frame_bytes = 16\n",
             "[net]\nheartbeat_period_ms = 0\n",
             "[net]\nbind_addr = \"\"\n",
+            "[net]\nmax_conns = 0\n",
         ] {
             let doc = parse_toml(bad).unwrap();
             assert!(NetConfig::from_doc(&doc).is_err(), "{bad:?} accepted");

@@ -34,7 +34,7 @@
 //! | [`app`] | application 6-tuple, lifecycle, checkpoints |
 //! | [`master`] / [`slave`] | the Dorm control plane; `master::ha` = master self-checkpoints + WAL + epoch-fenced takeover (DESIGN.md §11) |
 //! | [`proto`] | versioned control-plane protocol: typed Request/Response + wire format, epoch-stamped responses |
-//! | [`net`] | transports: in-process dispatch, TCP server/client, failover client (candidate re-dial + stale-epoch fencing), slave agent loop, standby watcher |
+//! | [`net`] | transports: in-process dispatch, multiplexed TCP server (sharded worker pool, coalesced heartbeats; thread-per-connection `serve_legacy` baseline retained, DESIGN.md §15), TCP/failover clients (candidate re-dial + stale-epoch fencing), slave agent loop, standby watcher, closed-loop load generator |
 //! | [`fault`] | server liveness (leases), failure injection (server + master outages), checkpoint-driven recovery, churn experiments; `fault::domains` = rack/power failure-domain topology + online MTBF estimation feeding risk-aware placement (DESIGN.md §14) |
 //! | [`ps`] | BSP parameter-server runtime (the "MxNet" stand-in) |
 //! | [`runtime`] | PJRT executor service for `artifacts/*.hlo.txt` |

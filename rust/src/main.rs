@@ -38,6 +38,7 @@ fn main() {
         "master" => cmd_master(&cli),
         "slave" => cmd_slave(&cli),
         "ctl" => cmd_ctl(&cli),
+        "bench" => cmd_bench(&cli),
         other => {
             eprintln!("unknown command {other:?}\n\n{USAGE}");
             std::process::exit(2);
@@ -550,6 +551,16 @@ fn net_from_cli(cli: &Cli) -> Result<dorm::config::NetConfig> {
     if cli.flags.contains_key("io-timeout-ms") {
         net.io_timeout_ms = cli.u64_flag("io-timeout-ms", net.io_timeout_ms)?;
     }
+    if cli.flags.contains_key("workers") {
+        net.workers = cli.u64_flag("workers", net.workers as u64)? as usize;
+    }
+    if cli.flags.contains_key("max-conns") {
+        let n = cli.u64_flag("max-conns", net.max_conns as u64)?;
+        if n == 0 {
+            anyhow::bail!("--max-conns must be >= 1");
+        }
+        net.max_conns = n as usize;
+    }
     Ok(net)
 }
 
@@ -775,7 +786,13 @@ fn cmd_master(cli: &Cli) -> Result<()> {
         println!("dorm master: resumed as a fresh term, now serving epoch {epoch}");
     }
     let epoch = master.epoch();
-    let handle = dorm::net::serve(master, &net)?;
+    // --legacy-net keeps the thread-per-connection baseline reachable for
+    // A/B runs against the multiplexed default (DESIGN.md §15)
+    let handle = if cli.bool_flag("legacy-net") {
+        dorm::net::serve_legacy(master, &net)?
+    } else {
+        dorm::net::serve(master, &net)?
+    };
     println!(
         "dorm master listening on {} (proto v{PROTO_MAJOR}.{PROTO_MINOR}, epoch {epoch}, \
          {slaves} slaves, lease timeout {}, ha {})",
@@ -933,6 +950,90 @@ fn cmd_ctl(cli: &Cli) -> Result<()> {
             std::process::exit(1);
         }
         other => println!("{other:?}"),
+    }
+    Ok(())
+}
+
+/// `dorm bench rpc-throughput`: the control-plane saturation sweep from
+/// the installed binary — no cargo needed on the operator's box.  Drives
+/// `--clients` concurrent closed-loop clients (the slave fleet's
+/// steady-state packet mix) against a fresh thread-per-connection server
+/// and a fresh multiplexed server, and reports each point's sustained
+/// req/s with client-observed p50/p99.  `benches/rpc_throughput.rs`
+/// tracks the same driver ([`dorm::net::loadgen`]), so numbers printed
+/// here line up with the `rpc` series in `BENCH_sched.json`.
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    use dorm::config::{ClusterConfig, DormConfig};
+    use dorm::master::DormMaster;
+    use dorm::net::loadgen::{bench_spec, drive, splice_rpc_json, ServerKind};
+    use dorm::resources::Res;
+
+    let op = cli
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("bench needs an operation (see `dorm help`)"))?;
+    if op != "rpc-throughput" {
+        anyhow::bail!("unknown bench op {op:?} (rpc-throughput is the only one)");
+    }
+    let clients = cli.u64_flag("clients", 64)? as usize;
+    let servers = cli.u64_flag("servers", 64)? as u32;
+    let secs = cli.f64_flag("seconds", 2.0)?;
+    if clients == 0 || servers == 0 {
+        anyhow::bail!("--clients and --servers must be >= 1");
+    }
+    if !(secs > 0.0 && secs.is_finite()) {
+        anyhow::bail!("--seconds must be finite and > 0");
+    }
+    let duration = std::time::Duration::from_secs_f64(secs);
+    let mut net = net_from_cli(cli)?;
+    net.bind_addr = cli.str_flag("bind", "127.0.0.1:0");
+    if !cli.flags.contains_key("io-timeout-ms") {
+        // a saturated point holds clients mid-wait longer than the
+        // config default tolerates
+        net.io_timeout_ms = net.io_timeout_ms.max(10_000);
+    }
+
+    let fresh_master = |tag: &str| -> Result<DormMaster> {
+        let dir =
+            std::env::temp_dir().join(format!("dorm_bench_rpc_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut m = DormMaster::new(
+            &ClusterConfig::uniform(servers as usize, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+            DormConfig { theta1: 0.1, theta2: 0.1 },
+            CheckpointStore::new(dir)?,
+        );
+        for i in 0..8u32 {
+            m.submit(bench_spec(i))?;
+        }
+        Ok(m)
+    };
+
+    println!(
+        "rpc-throughput: {clients} clients x {secs} s per point, {servers} heartbeat ordinates"
+    );
+    let mut points = Vec::new();
+    for kind in [ServerKind::Legacy, ServerKind::Mux] {
+        let handle = kind.serve(fresh_master(kind.label())?, &net)?;
+        let rep = drive(&handle, &net, servers, clients, duration)?;
+        handle.stop();
+        println!(
+            "  {:<6} @ {:>3} clients: {:>8.0} req/s ({:>8.0} hb/s fan-in)  p50 {:>7.1} us  \
+             p99 {:>8.1} us",
+            kind.label(),
+            rep.clients,
+            rep.req_per_sec,
+            rep.heartbeats_per_sec,
+            rep.p50_us,
+            rep.p99_us
+        );
+        points.push((kind, rep));
+    }
+    let speedup = points[1].1.req_per_sec / points[0].1.req_per_sec.max(1e-9);
+    println!("multiplexed vs legacy at {clients} clients: {speedup:.2}x sustained req/s");
+    if let Some(path) = cli.flags.get("json") {
+        splice_rpc_json(path, &points, speedup)?;
+        println!("spliced rpc series into {path}");
     }
     Ok(())
 }

@@ -459,6 +459,120 @@ impl DormMaster {
         rsp
     }
 
+    /// Coalesced heartbeat processing for the multiplexed server
+    /// (DESIGN.md §15): drain a run of [`Request::Heartbeat`]s that
+    /// arrived within one poll tick into one lease-table pass with at
+    /// most one re-solve.  Per-beat observable semantics match
+    /// [`Self::dispatch`] — same validation and typed errors, same ack
+    /// counting, same `alive` verdict (taken before that beat's renewal,
+    /// in arrival order) and the same idempotent desired-state
+    /// reconciliation — but the per-beat `reallocate` collapses, so N
+    /// capacity events in one batch cost one solve instead of N.  A
+    /// non-heartbeat slipped into the batch falls back to plain
+    /// [`Self::dispatch`].  When HA is armed every beat is journaled in
+    /// arrival order exactly as sequential dispatch would, so WAL replay
+    /// converges on the same lease and capacity state.
+    pub fn dispatch_heartbeats(&mut self, beats: Vec<Request>) -> Vec<Response> {
+        if beats.len() <= 1 {
+            return beats.into_iter().map(|r| self.dispatch(r)).collect();
+        }
+        // what each beat still owes after the shared phases
+        enum Slot {
+            Done(Response),
+            Pending { j: usize, alive: bool, report: Option<SlaveReport>, adopted: bool },
+        }
+        let mut slots: Vec<Slot> = Vec::with_capacity(beats.len());
+        let mut need_resolve = false;
+        // phase 1: validate, count acks, take alive verdicts and renew
+        // leases in arrival order; adopt sane capacity changes but defer
+        // the shared re-solve
+        for req in beats {
+            let hb = match req {
+                hb @ Request::Heartbeat { .. } => hb,
+                other => {
+                    slots.push(Slot::Done(self.dispatch(other)));
+                    continue;
+                }
+            };
+            if self.ha.is_some() {
+                // Heartbeat is an Append action; journal it before the
+                // destructuring below consumes the fields
+                self.ha_commit(proto::wire::encode_request_rid(&hb, None), false);
+            }
+            let Request::Heartbeat { server, now_hours, report, acks } = hb else {
+                unreachable!("matched above")
+            };
+            let Some(j) = self.known_server(server) else {
+                slots.push(Slot::Done(err(
+                    ErrorCode::UnknownServer,
+                    format!("unknown server {server}"),
+                )));
+                continue;
+            };
+            if !now_hours.is_finite() {
+                slots.push(Slot::Done(err(
+                    ErrorCode::InvalidArgument,
+                    "heartbeat time must be finite by dispatch time \
+                     (only the TCP server stamps arrival times)",
+                )));
+                continue;
+            }
+            self.note_acks(j, &acks);
+            let alive = self.lease.is_alive(j);
+            self.lease.renew(j, now_hours);
+            let mut adopted = false;
+            if let Some(r) = &report {
+                let sane = r.capacity.m() == self.slaves[j].capacity().m()
+                    && r.capacity.0.iter().all(|c| c.is_finite() && *c >= 0.0);
+                if !sane {
+                    log::warn!(
+                        "server {j} reports unusable capacity {}; keeping {}",
+                        r.capacity,
+                        self.slaves[j].capacity()
+                    );
+                }
+                if alive && sane && r.capacity != *self.slaves[j].capacity() {
+                    log::info!(
+                        "server {j} reports capacity {} (book had {}); re-solving",
+                        r.capacity,
+                        self.slaves[j].capacity()
+                    );
+                    self.clock += 1;
+                    if let Err(e) = self.slaves[j].set_capacity(r.capacity.clone()) {
+                        slots.push(Slot::Done(err(ErrorCode::Internal, e)));
+                        continue;
+                    }
+                    self.policy.on_capacity_change();
+                    adopted = true;
+                    need_resolve = true;
+                }
+            }
+            slots.push(Slot::Pending { j, alive, report, adopted });
+        }
+        // phase 2: the coalesced re-solve — N capacity events, one solve
+        let resolve_err = if need_resolve {
+            self.reallocate().err().map(|e| format!("{e:#}"))
+        } else {
+            None
+        };
+        // phase 3: reconcile each beat against the settled book
+        slots
+            .into_iter()
+            .map(|slot| match slot {
+                Slot::Done(rsp) => rsp,
+                Slot::Pending { adopted: true, .. } if resolve_err.is_some() => {
+                    err(ErrorCode::Internal, resolve_err.as_deref().expect("checked"))
+                }
+                Slot::Pending { j, alive, report, .. } => {
+                    let directives = report
+                        .map(|r| self.reconcile(j, &r.containers))
+                        .unwrap_or_default();
+                    Response::HeartbeatAck { alive, directives }
+                }
+            })
+            .collect()
+    }
+
     fn dispatch_inner(&mut self, req: Request) -> Response {
         match req {
             Request::Hello { major, minor } => match proto::negotiate(major, minor) {
@@ -1464,6 +1578,60 @@ mod tests {
         assert!(m.submit(spec(2.0, 0.0, 8.0, 1, 0, 4)).is_err()); // n_min 0
         assert!(m.submit(spec(2.0, 0.0, 8.0, 0, 1, 4)).is_err()); // weight 0
         assert_eq!(m.active_apps(), 0);
+    }
+
+    #[test]
+    fn coalesced_heartbeats_one_resolve_per_batch() {
+        let mut m = master("coalesce");
+        m.submit(spec(2.0, 0.0, 8.0, 1, 1, 12)).unwrap();
+        let solves_before = m.scheduler_stats().unwrap().solves;
+        // converged reports for all four servers, two of them carrying a
+        // capacity event: the batch must adopt both through one solve
+        let beats: Vec<Request> = (0..4usize)
+            .map(|j| {
+                let mut report = m.slaves[j].report();
+                if j >= 2 {
+                    report.capacity = Res::cpu_gpu_ram(16.0, 0.0, 64.0);
+                }
+                Request::Heartbeat {
+                    server: j as u32,
+                    now_hours: 1.0,
+                    report: Some(report),
+                    acks: vec![],
+                }
+            })
+            .collect();
+        let rsps = m.dispatch_heartbeats(beats);
+        assert_eq!(rsps.len(), 4);
+        for r in &rsps {
+            assert!(matches!(r, Response::HeartbeatAck { alive: true, .. }), "{r:?}");
+        }
+        assert_eq!(*m.slaves[2].capacity(), Res::cpu_gpu_ram(16.0, 0.0, 64.0));
+        assert_eq!(*m.slaves[3].capacity(), Res::cpu_gpu_ram(16.0, 0.0, 64.0));
+        let solves_after = m.scheduler_stats().unwrap().solves;
+        assert_eq!(solves_after, solves_before + 1, "two capacity events, one solve");
+
+        // per-beat validation stays typed inside a batch
+        let rsps = m.dispatch_heartbeats(vec![
+            Request::Heartbeat { server: 99, now_hours: 1.1, report: None, acks: vec![] },
+            Request::Heartbeat { server: 0, now_hours: f64::NAN, report: None, acks: vec![] },
+            Request::Heartbeat { server: 0, now_hours: 1.1, report: None, acks: vec![] },
+        ]);
+        assert!(
+            matches!(&rsps[0], Response::Error(e) if e.code == ErrorCode::UnknownServer),
+            "{:?}",
+            rsps[0]
+        );
+        assert!(
+            matches!(&rsps[1], Response::Error(e) if e.code == ErrorCode::InvalidArgument),
+            "{:?}",
+            rsps[1]
+        );
+        assert!(
+            matches!(&rsps[2], Response::HeartbeatAck { alive: true, .. }),
+            "{:?}",
+            rsps[2]
+        );
     }
 
     #[test]

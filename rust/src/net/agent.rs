@@ -51,6 +51,7 @@ pub struct SlaveAgent<T: ControlPlane> {
 }
 
 impl<T: ControlPlane> SlaveAgent<T> {
+    /// Agent for a preassigned server ordinate (the `--index` path).
     pub fn new(local: DormSlave, server: u32, transport: T) -> Self {
         SlaveAgent { local, server, transport, max_epoch: 0, pending_acks: Vec::new() }
     }
@@ -75,6 +76,7 @@ impl<T: ControlPlane> SlaveAgent<T> {
         }
     }
 
+    /// The local container book this agent reports and reconciles.
     pub fn local(&self) -> &DormSlave {
         &self.local
     }

@@ -1,0 +1,305 @@
+//! Closed-loop load generator for the control plane (DESIGN.md §15).
+//!
+//! Drives M concurrent request-response clients over real loopback TCP —
+//! the slave fleet's steady-state packet mix: mostly lease-only
+//! heartbeats, a full `QueryState` every [`QUERY_STRIDE`]-th call, and an
+//! occasional submit/complete pair so the sweep is not a read-only
+//! fiction — each as fast as the server answers, and reports the
+//! *sustained* aggregate rate with client-observed latency percentiles.
+//! `dorm bench rpc-throughput` and `benches/rpc_throughput.rs` are both
+//! thin wrappers over [`drive`], so the CLI verb and the tracked bench
+//! series can never drift apart.
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::app::{AppSpec, Engine};
+use crate::config::NetConfig;
+use crate::master::DormMaster;
+use crate::net::{serve, serve_legacy, ControlPlane, ServerHandle, TcpTransport};
+use crate::proto::{Request, Response};
+use crate::resources::Res;
+
+/// Every `QUERY_STRIDE`-th call is a full `QueryState` (the largest
+/// response payload); the rest are heartbeats.
+pub const QUERY_STRIDE: u64 = 16;
+/// Client 0 replaces every `SUBMIT_STRIDE`-th call with a submit (paired
+/// with an immediate complete, so the app population stays fixed).
+pub const SUBMIT_STRIDE: u64 = 64;
+
+/// Which server implementation a load point drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerKind {
+    /// The original one-thread-per-connection blocking server
+    /// ([`serve_legacy`]) — the measured baseline.
+    Legacy,
+    /// The multiplexed worker-pool server ([`serve`]).
+    Mux,
+}
+
+impl ServerKind {
+    /// Stable label used in reports and the `BENCH_sched.json` series.
+    pub fn label(self) -> &'static str {
+        match self {
+            ServerKind::Legacy => "legacy",
+            ServerKind::Mux => "mux",
+        }
+    }
+
+    /// Bind and serve `master` with this implementation.
+    pub fn serve(self, master: DormMaster, net: &NetConfig) -> Result<ServerHandle> {
+        match self {
+            ServerKind::Legacy => serve_legacy(master, net),
+            ServerKind::Mux => serve(master, net),
+        }
+    }
+}
+
+/// One measured load point, aggregated over every client.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Concurrent clients driven.
+    pub clients: usize,
+    /// Wall seconds measured (barrier release to last client exit).
+    pub wall_secs: f64,
+    /// Completed round trips summed across all clients.
+    pub calls: u64,
+    /// Sustained aggregate request rate, calls per second.
+    pub req_per_sec: f64,
+    /// Heartbeats within `calls`, per second — the fan-in rate.
+    pub heartbeats_per_sec: f64,
+    /// Client-observed round-trip median, microseconds.
+    pub p50_us: f64,
+    /// Client-observed round-trip 99th percentile, microseconds.
+    pub p99_us: f64,
+}
+
+/// The app shape the occasional submit/complete pair uses — also the
+/// seed population a bench master starts with, so heartbeat
+/// reconciliation and `QueryState` have real work to answer with.
+pub fn bench_spec(i: u32) -> AppSpec {
+    AppSpec {
+        executor: Engine::MxNet,
+        demand: Res::cpu_gpu_ram(2.0, 0.0, 8.0),
+        weight: 1 + (i % 3),
+        n_max: 8,
+        n_min: 1,
+        cmd: ["lr".into(), "lr".into()],
+    }
+}
+
+/// Nearest-rank percentile of an already-sorted sample.
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Drive `clients` concurrent closed-loop clients against `handle` for
+/// `duration`.  `servers` bounds the heartbeat ordinates (client `c`
+/// beats as server `c % servers`, so every lease stays renewed).  Every
+/// response is checked: an in-band [`Response::Error`] fails the drive —
+/// a saturated server must degrade by latency, never by wrong answers.
+pub fn drive(
+    handle: &ServerHandle,
+    net: &NetConfig,
+    servers: u32,
+    clients: usize,
+    duration: Duration,
+) -> Result<LoadReport> {
+    if clients == 0 || servers == 0 {
+        bail!("need at least one client and one server ordinate");
+    }
+    let addr = handle.addr().to_string();
+    let start = Arc::new(Barrier::new(clients + 1));
+    let mut threads = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let addr = addr.clone();
+        let net = net.clone();
+        let start = Arc::clone(&start);
+        threads.push(std::thread::spawn(move || -> Result<(Vec<f64>, u64)> {
+            let mut t =
+                TcpTransport::connect(&addr, &net).with_context(|| format!("client {c} connect"))?;
+            let mut lat: Vec<f64> = Vec::with_capacity(4096);
+            let mut hb = 0u64;
+            start.wait();
+            let deadline = Instant::now() + duration;
+            let mut i = 0u64;
+            while Instant::now() < deadline {
+                let req = if i % QUERY_STRIDE == 0 {
+                    Request::QueryState { app: None }
+                } else if c == 0 && i % SUBMIT_STRIDE == 1 {
+                    Request::Submit { spec: bench_spec(i as u32) }
+                } else {
+                    hb += 1;
+                    // NAN = "stamp arrival at the server", the slave
+                    // agent's steady-state form
+                    Request::Heartbeat {
+                        server: c as u32 % servers,
+                        now_hours: f64::NAN,
+                        report: None,
+                        acks: vec![],
+                    }
+                };
+                let t0 = Instant::now();
+                let rsp = t.call(req)?;
+                lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                match rsp {
+                    Response::Error(e) => bail!("in-band error mid-drive: {e}"),
+                    Response::Submitted { app } => {
+                        let t0 = Instant::now();
+                        let done = t.call(Request::Complete { app })?;
+                        lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                        if let Response::Error(e) = done {
+                            bail!("complete refused mid-drive: {e}");
+                        }
+                        i += 1; // the pair counts as two calls
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            Ok((lat, hb))
+        }));
+    }
+
+    start.wait();
+    let t0 = Instant::now();
+    let mut lat: Vec<f64> = Vec::new();
+    let mut heartbeats = 0u64;
+    for th in threads {
+        let (l, hb) = th.join().map_err(|_| anyhow!("load client panicked"))??;
+        lat.extend(l);
+        heartbeats += hb;
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let calls = lat.len() as u64;
+    Ok(LoadReport {
+        clients,
+        wall_secs: wall,
+        calls,
+        req_per_sec: calls as f64 / wall,
+        heartbeats_per_sec: heartbeats as f64 / wall,
+        p50_us: pct(&lat, 0.50),
+        p99_us: pct(&lat, 0.99),
+    })
+}
+
+/// Splice the measured `"rpc"` series into the `BENCH_sched.json`-layout
+/// document at `path` (replacing any previous `"rpc"` key, or starting a
+/// fresh document when the file is absent).  `scripts/check_bench.sh`
+/// gates the result against `BENCH_baseline/`; `dorm bench
+/// rpc-throughput --json` and `benches/rpc_throughput.rs` both emit
+/// through here so the two can never drift apart.
+pub fn splice_rpc_json(
+    path: &str,
+    points: &[(ServerKind, LoadReport)],
+    speedup: f64,
+) -> Result<()> {
+    let mut text = std::fs::read_to_string(path)
+        .unwrap_or_else(|_| "{\n  \"bench\": \"sched_latency_churn\"\n}\n".to_string());
+    if let Some(i) = text.find(",\n  \"rpc\"") {
+        // a previous rpc splice: drop it and close the object again
+        text.truncate(i);
+        text.push_str("\n}\n");
+    }
+    let end = text.rfind('}').ok_or_else(|| anyhow!("{path} is not a JSON object"))?;
+    let mut out = text[..end].trim_end().to_string();
+    let frags: Vec<String> = points
+        .iter()
+        .map(|(kind, p)| {
+            format!(
+                concat!(
+                    "      {{\"server\": \"{}\", \"clients\": {}, ",
+                    "\"req_per_sec\": {:.1}, \"heartbeats_per_sec\": {:.1}, ",
+                    "\"p50_us\": {:.1}, \"p99_us\": {:.1}, \"calls\": {}}}"
+                ),
+                kind.label(),
+                p.clients,
+                p.req_per_sec,
+                p.heartbeats_per_sec,
+                p.p50_us,
+                p.p99_us,
+                p.calls
+            )
+        })
+        .collect();
+    out.push_str(&format!(
+        ",\n  \"rpc\": {{\n    \"speedup_mux_vs_legacy\": {speedup:.2},\n    \
+         \"points\": [\n{}\n    ]\n  }}\n}}\n",
+        frags.join(",\n")
+    ));
+    std::fs::write(path, out).with_context(|| format!("write {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::CheckpointStore;
+    use crate::config::{ClusterConfig, DormConfig};
+
+    fn master(tag: &str) -> DormMaster {
+        let dir = std::env::temp_dir().join(format!("dorm_loadgen_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut m = DormMaster::new(
+            &ClusterConfig::uniform(4, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+            DormConfig { theta1: 0.1, theta2: 0.1 },
+            CheckpointStore::new(dir).unwrap(),
+        );
+        m.submit(bench_spec(0)).unwrap();
+        m
+    }
+
+    fn net() -> NetConfig {
+        NetConfig { bind_addr: "127.0.0.1:0".into(), io_timeout_ms: 5_000, ..NetConfig::default() }
+    }
+
+    /// The JSON splice is idempotent: a second splice replaces the first
+    /// `"rpc"` series instead of appending a sibling key.
+    #[test]
+    fn rpc_json_splice_is_idempotent() {
+        let path = std::env::temp_dir()
+            .join(format!("dorm_rpc_splice_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let rep = LoadReport {
+            clients: 2,
+            wall_secs: 1.0,
+            calls: 10,
+            req_per_sec: 10.0,
+            heartbeats_per_sec: 8.0,
+            p50_us: 100.0,
+            p99_us: 200.0,
+        };
+        let pts = vec![(ServerKind::Legacy, rep.clone()), (ServerKind::Mux, rep)];
+        splice_rpc_json(&path, &pts, 1.5).unwrap();
+        splice_rpc_json(&path, &pts, 2.5).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.matches("\"rpc\"").count(), 1, "{text}");
+        assert!(text.contains("\"speedup_mux_vs_legacy\": 2.50"), "{text}");
+        assert_eq!(text.matches("\"server\": \"mux\"").count(), 1, "{text}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Both server kinds take a short concurrent drive: every response
+    /// well-formed, sane percentiles, non-zero sustained rate.
+    #[test]
+    fn loadgen_drives_both_server_kinds() {
+        for kind in [ServerKind::Legacy, ServerKind::Mux] {
+            let net = net();
+            let handle = kind.serve(master(kind.label()), &net).unwrap();
+            let rep = drive(&handle, &net, 4, 3, Duration::from_millis(200)).unwrap();
+            handle.stop();
+            assert!(rep.calls > 0, "{}: no calls completed", kind.label());
+            assert!(rep.req_per_sec > 0.0);
+            assert!(rep.p99_us >= rep.p50_us, "{rep:?}");
+            assert!(rep.heartbeats_per_sec > 0.0, "{rep:?}");
+        }
+    }
+}

@@ -17,17 +17,26 @@
 //!   candidates on connection loss (riding out a standby takeover) and
 //!   fences off deposed primaries by refusing any master whose epoch is
 //!   lower than the highest one observed (DESIGN.md §11).
-//! * [`serve`] ([`server`]) — the master side of TCP: accept loop,
-//!   per-connection handshake enforcement, arrival-time stamping, lease
-//!   sweeping, and the serving epoch trailed on every response.
-//!   [`SlaveAgent`] ([`agent`]) is the standalone slave event
-//!   loop that heartbeats over any transport and applies the master's
-//!   reconciliation directives to its local container book.
+//! * [`serve`] ([`server`]) — the master side of TCP: the *multiplexed*
+//!   server of DESIGN.md §15 (a worker pool owning non-blocking
+//!   connections, per-connection frame reassembly, per-tick batch
+//!   dispatch with coalesced heartbeats), plus per-connection handshake
+//!   enforcement, arrival-time stamping, lease sweeping, and the serving
+//!   epoch trailed on every response.  [`serve_legacy`] keeps the
+//!   original thread-per-connection server as the measured baseline and
+//!   parity reference, and [`loadgen`] is the closed-loop client fleet
+//!   that `dorm bench rpc-throughput` and `benches/rpc_throughput.rs`
+//!   both drive at the two of them.  [`SlaveAgent`] ([`agent`]) is the standalone
+//!   slave event loop that heartbeats over any transport and applies the
+//!   master's reconciliation directives to its local container book.
 //! * [`run_standby`] ([`standby`]) — the `dorm master --standby` body:
 //!   watch the primary with the same lease discipline slaves live under,
 //!   and on expiry promote the checkpointed master state at `epoch + 1`.
 
+#![deny(missing_docs)]
+
 mod agent;
+pub mod loadgen;
 mod server;
 mod standby;
 
@@ -37,7 +46,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 pub use agent::{HeartbeatOutcome, SlaveAgent};
-pub use server::{serve, ServerHandle};
+pub use server::{serve, serve_legacy, ServerHandle};
 pub use standby::{run_standby, StandbyOpts};
 
 use crate::config::NetConfig;
@@ -49,6 +58,9 @@ use crate::proto::{wire, Request, Response, PROTO_MAJOR, PROTO_MINOR};
 /// lost, frame undecodable); every semantic failure arrives in-band as
 /// [`Response::Error`] so both transports surface identical values.
 pub trait ControlPlane {
+    /// Send one request and block until its response arrives.  `Err`
+    /// means the transport itself failed; a live master's refusals come
+    /// back as `Ok(Response::Error(..))`.
     fn call(&mut self, req: Request) -> Result<Response>;
 
     /// The serving master's epoch (term) as last observed on this
@@ -68,18 +80,22 @@ pub struct LocalTransport {
 }
 
 impl LocalTransport {
+    /// Wrap an owned master so it can be driven through [`ControlPlane`].
     pub fn new(master: DormMaster) -> Self {
         LocalTransport { master }
     }
 
+    /// Inspect the wrapped master without dispatching.
     pub fn master(&self) -> &DormMaster {
         &self.master
     }
 
+    /// Mutate the wrapped master directly (test scaffolding).
     pub fn master_mut(&mut self) -> &mut DormMaster {
         &mut self.master
     }
 
+    /// Unwrap, handing the master back to the caller.
     pub fn into_master(self) -> DormMaster {
         self.master
     }

@@ -1,8 +1,20 @@
 //! The master side of the TCP control plane.
 //!
 //! [`serve`] binds a listener, moves the [`DormMaster`] behind a mutex,
-//! and runs an accept loop on a background thread; each connection gets
-//! its own handler thread.  Design points:
+//! and runs a *multiplexed* server (DESIGN.md §15): a blocking accept
+//! thread hands connections to a fixed pool of worker threads, each of
+//! which owns a share of the open connections as non-blocking sockets
+//! with per-connection frame-reassembly state.  A partial frame never
+//! blocks a worker — the worker simply moves on to its other
+//! connections — and all requests that completed within one poll tick
+//! are dispatched under a single master-lock acquisition, with runs of
+//! heartbeats coalesced through `DormMaster::dispatch_heartbeats` (one
+//! lease-table pass, at most one re-solve).  [`serve_legacy`] keeps the
+//! original thread-per-connection blocking-read server; the transport
+//! parity tests pin the two response-sequence-identical, and the
+//! `rpc_throughput` bench uses it as the saturation baseline.
+//!
+//! Shared design points (both servers):
 //!
 //! * **Handshake first.**  The first frame of every connection must be
 //!   [`Request::Hello`]; version mismatches and pre-handshake requests
@@ -11,21 +23,28 @@
 //!   payload produces a decodable [`Response::Error`] and the connection
 //!   *survives* (framing is intact — the whole frame was consumed).
 //!   Only unrecoverable conditions close it: an oversized frame (framing
-//!   cannot resync past an unread body), an IO error, or a read timeout
-//!   on a half-sent frame — so a stalled or malicious peer cannot wedge
-//!   a handler thread.
+//!   cannot resync past an unread body), an IO error, or a peer silent
+//!   for `io_timeout_ms` mid-frame — so a stalled or malicious peer
+//!   cannot wedge a worker.  A connection arriving past `[net].max_conns`
+//!   is answered with [`ErrorCode::TooManyConnections`] and closed.
 //! * **The server owns wall time.**  Heartbeats/expiries carrying a
 //!   non-finite `now_hours` are stamped with hours since server start —
 //!   one clock domain for the whole lease table, no cross-process clock
-//!   agreement needed.  When `NetConfig::lease_sweep_ms > 0` the accept
-//!   loop also drives [`Request::ExpireLeases`] itself, which is what
+//!   agreement needed.  When `NetConfig::lease_sweep_ms > 0` a dedicated
+//!   sweeper thread drives [`Request::ExpireLeases`], which is what
 //!   makes lease expiry reflect *real missed packets* in the two-process
 //!   demo.
+//! * **No artificial latency.**  Nothing in either accept path sleeps on
+//!   a timer: accept blocks in the kernel (a self-connection wakes it on
+//!   shutdown), an idle worker parks on a condvar, and a worker with a
+//!   single quiet connection parks in a blocking `peek` so a lone
+//!   client's round-trip costs no poll tick at all.
 
+use std::collections::VecDeque;
 use std::io::ErrorKind;
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -35,12 +54,91 @@ use crate::config::NetConfig;
 use crate::master::DormMaster;
 use crate::proto::{wire, ErrorCode, ProtoError, Request, Response};
 
-/// Running server: address, shared master, and the accept-thread handle.
+/// Worker poll quantum while it owns quiet connections: the wait starts
+/// here and backs off (doubling per idle pass) to [`POLL_TICK_MAX`], so
+/// a loaded worker never waits and a quiet one costs little CPU.
+const POLL_TICK_MIN_MS: u64 = 1;
+/// Upper bound of the idle back-off; also the advertised "one poll tick"
+/// bound on how long a stalled peer can delay another client's
+/// round-trip on the same worker.
+const POLL_TICK_MAX_MS: u64 = 16;
+/// Blocking-wait quantum (single-connection peek, legacy reads): long
+/// enough to cost nothing, short enough to observe `stop` promptly.
+const BLOCK_QUANTUM_MS: u64 = 100;
+/// Idle passes a worker burns (yielding, not sleeping) before it starts
+/// the timed back-off.  std has no readiness notification, so a worker
+/// that parked would eat a whole poll tick of latency on the next
+/// request; spinning briefly after each active burst covers the client
+/// turnaround gap of request-response traffic at microsecond cost.
+const SPIN_PASSES: u32 = 128;
+
+// ---- shared plumbing ----------------------------------------------------
+
+/// One worker's handoff queue: the accept thread pushes accepted
+/// sockets, the owning worker drains them into its connection set.
+struct WorkerQueue {
+    inbox: Mutex<Vec<TcpStream>>,
+    cv: Condvar,
+}
+
+/// State shared by the accept thread, the workers, and the sweeper.
+struct Shared {
+    stop: AtomicBool,
+    addr: SocketAddr,
+    /// The serving master's epoch, cached so pre-dispatch errors (bad
+    /// frames, connection rejections) can be stamped without a lock.
+    epoch: AtomicU64,
+    /// Open connections across all workers (`[net].max_conns` gate).
+    conns: AtomicUsize,
+    stop_mu: Mutex<()>,
+    stop_cv: Condvar,
+    workers: Vec<Arc<WorkerQueue>>,
+}
+
+impl Shared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Idempotently stop the server: set the flag, wake every parked
+    /// thread, and dial the listener once so the blocking accept
+    /// returns.
+    fn request_stop(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        {
+            let _g = self.stop_mu.lock().unwrap_or_else(|p| p.into_inner());
+            self.stop_cv.notify_all();
+        }
+        for w in &self.workers {
+            let _g = w.inbox.lock().unwrap_or_else(|p| p.into_inner());
+            w.cv.notify_all();
+        }
+        let _ = TcpStream::connect_timeout(&wake_addr(self.addr), Duration::from_millis(200));
+    }
+}
+
+/// Where a self-connection can reach our own listener: an unspecified
+/// bind address (`0.0.0.0` / `::`) is dialed via loopback.
+fn wake_addr(addr: SocketAddr) -> SocketAddr {
+    if addr.ip().is_unspecified() {
+        let ip = match addr.ip() {
+            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        };
+        SocketAddr::new(ip, addr.port())
+    } else {
+        addr
+    }
+}
+
+/// Running server: address, shared master, and the serving threads.
 pub struct ServerHandle {
     addr: SocketAddr,
     master: Arc<Mutex<DormMaster>>,
-    stop: Arc<AtomicBool>,
-    accept: Option<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -56,49 +154,30 @@ impl ServerHandle {
 
     /// Has a [`Request::Shutdown`] (or [`ServerHandle::stop`]) landed?
     pub fn is_stopped(&self) -> bool {
-        self.stop.load(Ordering::SeqCst)
+        self.shared.stopping()
     }
 
-    /// Ask the accept loop to exit without waiting for it.
+    /// Ask the serving threads to exit without waiting for them.
     pub fn stop(&self) {
-        self.stop.store(true, Ordering::SeqCst);
+        self.shared.request_stop();
     }
 
-    /// Block until the accept loop exits (a client sent Shutdown, or
+    /// Block until the serving threads exit (a client sent Shutdown, or
     /// [`ServerHandle::stop`] was called).
     pub fn wait(mut self) {
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
         }
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
+        self.shared.request_stop();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
         }
     }
-}
-
-/// Serve `master` on `cfg.bind_addr` until a shutdown request arrives.
-pub fn serve(master: DormMaster, cfg: &NetConfig) -> Result<ServerHandle> {
-    let listener = TcpListener::bind(&cfg.bind_addr)
-        .with_context(|| format!("bind {}", cfg.bind_addr))?;
-    let addr = listener.local_addr()?;
-    listener.set_nonblocking(true)?;
-    let master = Arc::new(Mutex::new(master));
-    let stop = Arc::new(AtomicBool::new(false));
-    let wall_epoch = Instant::now();
-
-    let accept = {
-        let master = Arc::clone(&master);
-        let stop = Arc::clone(&stop);
-        let cfg = cfg.clone();
-        std::thread::spawn(move || accept_loop(listener, master, stop, cfg, wall_epoch))
-    };
-    Ok(ServerHandle { addr, master, stop, accept: Some(accept) })
 }
 
 fn hours_since(wall_epoch: Instant) -> f64 {
@@ -109,51 +188,6 @@ fn lock_master(m: &Mutex<DormMaster>) -> std::sync::MutexGuard<'_, DormMaster> {
     // a handler that panicked mid-dispatch poisons the lock; the master's
     // state is still the best available, so serving beats aborting
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
-}
-
-fn accept_loop(
-    listener: TcpListener,
-    master: Arc<Mutex<DormMaster>>,
-    stop: Arc<AtomicBool>,
-    cfg: NetConfig,
-    wall_epoch: Instant,
-) {
-    let sweep_every = (cfg.lease_sweep_ms > 0).then(|| Duration::from_millis(cfg.lease_sweep_ms));
-    let mut last_sweep = Instant::now();
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            return;
-        }
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                log::debug!("control-plane connection from {peer}");
-                let master = Arc::clone(&master);
-                let stop = Arc::clone(&stop);
-                let cfg = cfg.clone();
-                std::thread::spawn(move || handle_conn(stream, master, stop, cfg, wall_epoch));
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                if let Some(period) = sweep_every {
-                    if last_sweep.elapsed() >= period {
-                        last_sweep = Instant::now();
-                        let now = hours_since(wall_epoch);
-                        let rsp = lock_master(&master)
-                            .dispatch(Request::ExpireLeases { now_hours: now });
-                        if let Response::Expired { dead } = rsp {
-                            if !dead.is_empty() {
-                                log::warn!("lease sweep at {now:.5} h: servers {dead:?} expired");
-                            }
-                        }
-                    }
-                }
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(e) => {
-                log::warn!("accept failed: {e}; retrying");
-                std::thread::sleep(Duration::from_millis(50));
-            }
-        }
-    }
 }
 
 /// Substitute the server's wall clock for "stamp at arrival" markers.
@@ -172,12 +206,12 @@ fn stamp(req: Request, wall_epoch: Instant) -> Request {
     }
 }
 
-/// Write one response frame, trailed by the serving master's `epoch`
-/// (proto v1.1 split-brain fencing).  A response that would itself exceed
-/// the frame limit (e.g. a `StateView` over a very large app population)
-/// is replaced by an in-band typed error rather than silently dropping
-/// the connection — errors are answers here too.
-fn send(stream: &mut TcpStream, rsp: &Response, max: usize, epoch: u64) -> bool {
+/// Encode one response trailed by the serving master's `epoch` (proto
+/// v1.1 split-brain fencing).  A response that would itself exceed the
+/// frame limit (e.g. a `StateView` over a very large app population) is
+/// replaced by an in-band typed error rather than silently dropping the
+/// connection — errors are answers here too.
+fn encode_fitting(rsp: &Response, max: usize, epoch: u64) -> Vec<u8> {
     let mut payload = wire::encode_response_ep(rsp, epoch);
     if payload.len() > max {
         // progressively shorter details so the substitute itself fits
@@ -198,15 +232,729 @@ fn send(stream: &mut TcpStream, rsp: &Response, max: usize, epoch: u64) -> bool 
             }
         }
     }
+    payload
+}
+
+/// Write one response frame on a blocking stream (legacy path and the
+/// connection-limit rejection).
+fn send(stream: &mut TcpStream, rsp: &Response, max: usize, epoch: u64) -> bool {
+    let payload = encode_fitting(rsp, max, epoch);
     wire::write_frame(stream, &payload, max).is_ok()
 }
 
-/// Read exactly `buf.len()` bytes in ~100 ms polls.  While no byte of
-/// `buf` has arrived and `idle_ok` holds, waiting is healthy (a control
-/// connection between commands) and continues indefinitely; once a frame
-/// is partially read — or for a frame body — a peer silent for `stall`
-/// is stalled and the read fails so the handler can reap the connection.
-/// Checks `stop` between polls.  `Ok(false)` = clean EOF before byte 0.
+// ---- the multiplexed server (DESIGN.md §15) -----------------------------
+
+/// Serve `master` on `cfg.bind_addr` until a shutdown request arrives.
+///
+/// The multiplexed server: `cfg.workers` handler threads (0 = one per
+/// available core, capped at 8) each own a share of the connections;
+/// partial frames never block a worker, completed requests are
+/// dispatched in per-tick batches under one lock, and runs of heartbeats
+/// coalesce into a single lease pass with at most one re-solve when
+/// `cfg.coalesce_heartbeats` holds.
+pub fn serve(master: DormMaster, cfg: &NetConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.bind_addr)
+        .with_context(|| format!("bind {}", cfg.bind_addr))?;
+    let addr = listener.local_addr()?;
+    let n = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).clamp(1, 8)
+    };
+    let wall_epoch = Instant::now();
+    let epoch0 = master.epoch();
+    let master = Arc::new(Mutex::new(master));
+    let shared = Arc::new(Shared {
+        stop: AtomicBool::new(false),
+        addr,
+        epoch: AtomicU64::new(epoch0),
+        conns: AtomicUsize::new(0),
+        stop_mu: Mutex::new(()),
+        stop_cv: Condvar::new(),
+        workers: (0..n)
+            .map(|_| Arc::new(WorkerQueue { inbox: Mutex::new(Vec::new()), cv: Condvar::new() }))
+            .collect(),
+    });
+
+    let mut threads = Vec::with_capacity(n + 2);
+    for idx in 0..n {
+        let master = Arc::clone(&master);
+        let shared = Arc::clone(&shared);
+        let cfg = cfg.clone();
+        threads.push(std::thread::spawn(move || {
+            worker_loop(idx, master, shared, cfg, wall_epoch)
+        }));
+    }
+    threads.push(spawn_sweeper(&master, &shared, cfg, wall_epoch));
+    {
+        let shared = Arc::clone(&shared);
+        let cfg = cfg.clone();
+        threads.push(std::thread::spawn(move || mux_accept_loop(listener, shared, cfg)));
+    }
+    Ok(ServerHandle { addr, master, shared, threads })
+}
+
+/// Lease sweeps move off the accept path onto their own thread (both
+/// servers): cadence-driven, woken early only by shutdown.
+fn spawn_sweeper(
+    master: &Arc<Mutex<DormMaster>>,
+    shared: &Arc<Shared>,
+    cfg: &NetConfig,
+    wall_epoch: Instant,
+) -> JoinHandle<()> {
+    let master = Arc::clone(master);
+    let shared = Arc::clone(shared);
+    let period = (cfg.lease_sweep_ms > 0).then(|| Duration::from_millis(cfg.lease_sweep_ms));
+    std::thread::spawn(move || {
+        let Some(period) = period else { return };
+        let mut last_sweep = Instant::now();
+        loop {
+            {
+                let g = shared.stop_mu.lock().unwrap_or_else(|p| p.into_inner());
+                drop(shared.stop_cv.wait_timeout(g, period));
+            }
+            if shared.stopping() {
+                return;
+            }
+            if last_sweep.elapsed() < period {
+                continue; // spurious or early wake
+            }
+            last_sweep = Instant::now();
+            let now = hours_since(wall_epoch);
+            let rsp = lock_master(&master).dispatch(Request::ExpireLeases { now_hours: now });
+            shared.epoch.store(lock_master(&master).epoch(), Ordering::SeqCst);
+            if let Response::Expired { dead } = rsp {
+                if !dead.is_empty() {
+                    log::warn!("lease sweep at {now:.5} h: servers {dead:?} expired");
+                }
+            }
+        }
+    })
+}
+
+/// Blocking accept loop: no timer sleeps anywhere.  Shutdown wakes it
+/// via a self-connection; transient accept errors back off on the stop
+/// condvar (interruptible, not a busy spin).
+fn mux_accept_loop(listener: TcpListener, shared: Arc<Shared>, cfg: NetConfig) {
+    let mut next = 0usize;
+    loop {
+        if shared.stopping() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if shared.stopping() {
+                    return; // the wake-up self-connection
+                }
+                if shared.conns.load(Ordering::SeqCst) >= cfg.max_conns {
+                    reject_over_limit(stream, &shared, &cfg);
+                    continue;
+                }
+                log::debug!("control-plane connection from {peer}");
+                shared.conns.fetch_add(1, Ordering::SeqCst);
+                let w = &shared.workers[next % shared.workers.len()];
+                next = next.wrapping_add(1);
+                let mut inbox = w.inbox.lock().unwrap_or_else(|p| p.into_inner());
+                inbox.push(stream);
+                w.cv.notify_all();
+            }
+            Err(e) => {
+                log::warn!("accept failed: {e}; backing off");
+                let g = shared.stop_mu.lock().unwrap_or_else(|p| p.into_inner());
+                drop(shared.stop_cv.wait_timeout(g, Duration::from_millis(50)));
+            }
+        }
+    }
+}
+
+/// Answer a connection past `[net].max_conns` with a typed error and
+/// close it — refused, never silently dropped.  The frame is tiny, so
+/// the bounded blocking write cannot stall the accept thread.
+fn reject_over_limit(mut stream: TcpStream, shared: &Shared, cfg: &NetConfig) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(1000)));
+    let e = ProtoError::new(
+        ErrorCode::TooManyConnections,
+        format!("connection limit [net].max_conns = {} reached; re-dial later", cfg.max_conns),
+    );
+    send(
+        &mut stream,
+        &Response::Error(e),
+        cfg.max_frame_bytes,
+        shared.epoch.load(Ordering::SeqCst),
+    );
+}
+
+/// What a decoded frame owes: an immediate answer (no master involved)
+/// or a dispatch through the master.
+enum Step {
+    Respond(Response),
+    Dispatch { req: Request, rid: Option<u64>, kind: ItemKind },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum ItemKind {
+    Normal,
+    Hello,
+    Shutdown,
+}
+
+/// One multiplexed connection: socket plus frame-reassembly and write
+/// buffering state, so a partial read or a slow reader never blocks the
+/// owning worker.
+struct Conn {
+    stream: TcpStream,
+    negotiated: bool,
+    /// A Hello is in this tick's dispatch batch; frames pipelined behind
+    /// it stay deferred until its verdict lands.
+    hello_pending: bool,
+    hdr: [u8; wire::FRAME_HEADER],
+    hdr_pos: usize,
+    body: Vec<u8>,
+    body_pos: usize,
+    reading_body: bool,
+    /// Complete frames pumped off the socket but not yet processed.
+    deferred: VecDeque<Vec<u8>>,
+    /// Declared length of an oversized frame, noted by the reader for
+    /// the pass to answer (fatal: framing cannot resync past it).
+    oversize: Option<usize>,
+    /// Pending response bytes not yet accepted by the socket.
+    out: Vec<u8>,
+    /// Stop reading (fatal frame or half-close); flush `out`, then die.
+    read_dead: bool,
+    close_after_flush: bool,
+    dead: bool,
+    quiet_since: Option<Instant>,
+    write_quiet: Option<Instant>,
+}
+
+impl Conn {
+    fn adopt(stream: TcpStream) -> Option<Conn> {
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true).ok()?;
+        Some(Conn {
+            stream,
+            negotiated: false,
+            hello_pending: false,
+            hdr: [0u8; wire::FRAME_HEADER],
+            hdr_pos: 0,
+            body: Vec::new(),
+            body_pos: 0,
+            reading_body: false,
+            deferred: VecDeque::new(),
+            oversize: None,
+            out: Vec::new(),
+            read_dead: false,
+            close_after_flush: false,
+            dead: false,
+            quiet_since: None,
+            write_quiet: None,
+        })
+    }
+
+    /// A frame is partially read (stall deadline applies); idle *between*
+    /// frames is healthy and may last indefinitely.
+    fn mid_frame(&self) -> bool {
+        self.hdr_pos > 0 || self.reading_body
+    }
+
+    /// Non-blocking write of whatever the socket will take.
+    fn flush(&mut self) -> bool {
+        use std::io::Write;
+        let mut progress = false;
+        while !self.out.is_empty() && !self.dead {
+            match self.stream.write(&self.out) {
+                Ok(0) => self.dead = true,
+                Ok(n) => {
+                    self.out.drain(..n);
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => self.dead = true,
+            }
+        }
+        if progress {
+            self.write_quiet = None;
+        }
+        if self.out.is_empty() && self.close_after_flush {
+            self.dead = true;
+        }
+        progress
+    }
+
+    /// Non-blocking read: reassemble as many complete frames as the
+    /// socket has bytes for, onto `deferred`.
+    fn pump(&mut self, max: usize) -> bool {
+        use std::io::Read;
+        let mut progress = false;
+        while !self.read_dead && !self.dead {
+            if self.reading_body {
+                if self.body_pos == self.body.len() {
+                    let frame = std::mem::take(&mut self.body);
+                    self.deferred.push_back(frame);
+                    self.reading_body = false;
+                    self.hdr_pos = 0;
+                    continue;
+                }
+                match self.stream.read(&mut self.body[self.body_pos..]) {
+                    Ok(0) => self.on_eof(),
+                    Ok(n) => {
+                        self.body_pos += n;
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => self.dead = true,
+                }
+            } else {
+                match self.stream.read(&mut self.hdr[self.hdr_pos..]) {
+                    Ok(0) => self.on_eof(),
+                    Ok(n) => {
+                        self.hdr_pos += n;
+                        progress = true;
+                        if self.hdr_pos == wire::FRAME_HEADER {
+                            let len = u32::from_be_bytes(self.hdr) as usize;
+                            if len > max {
+                                // fatal to framing: note for the pass to
+                                // answer, read nothing further
+                                self.oversize = Some(len);
+                                self.read_dead = true;
+                            } else {
+                                self.body = vec![0u8; len];
+                                self.body_pos = 0;
+                                self.reading_body = true;
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => self.dead = true,
+                }
+            }
+        }
+        if progress {
+            self.quiet_since = None;
+        }
+        progress
+    }
+
+    /// EOF: clean between frames with nothing owed; otherwise flush what
+    /// the peer is still owed (half-close), then close.
+    fn on_eof(&mut self) {
+        self.read_dead = true;
+        if self.out.is_empty() && self.deferred.is_empty() {
+            self.dead = true;
+        } else {
+            self.close_after_flush = true;
+        }
+    }
+
+    /// Append one framed response to the write buffer.
+    fn queue(&mut self, rsp: &Response, max: usize, epoch: u64) {
+        let payload = encode_fitting(rsp, max, epoch);
+        let _ = wire::write_frame(&mut self.out, &payload, max);
+    }
+
+    /// Decide what one complete frame owes (no master lock involved).
+    fn step(&mut self, frame: &[u8], wall_epoch: Instant) -> Step {
+        let (req, rid) = match wire::decode_request_rid(frame) {
+            Ok(r) => r,
+            Err(wire::WireError::UnknownRequestTag(t)) => {
+                // a newer peer's message: typed refusal, connection lives
+                return Step::Respond(Response::Error(ProtoError::new(
+                    ErrorCode::UnsupportedRequest,
+                    format!(
+                        "request tag {t:#04x} is not known to protocol v{}.{}",
+                        crate::proto::PROTO_MAJOR,
+                        crate::proto::PROTO_MINOR
+                    ),
+                )));
+            }
+            Err(e) => {
+                return Step::Respond(Response::Error(ProtoError::new(
+                    ErrorCode::MalformedFrame,
+                    e,
+                )));
+            }
+        };
+        if !self.negotiated {
+            if let Request::Hello { .. } = req {
+                self.hello_pending = true;
+                return Step::Dispatch { req, rid, kind: ItemKind::Hello };
+            }
+            self.read_dead = true;
+            self.close_after_flush = true;
+            return Step::Respond(Response::Error(ProtoError::new(
+                ErrorCode::HandshakeRequired,
+                "first frame on a connection must be Hello",
+            )));
+        }
+        if req == Request::Shutdown {
+            self.read_dead = true;
+            return Step::Dispatch { req, rid, kind: ItemKind::Shutdown };
+        }
+        Step::Dispatch { req: stamp(req, wall_epoch), rid, kind: ItemKind::Normal }
+    }
+}
+
+/// One dispatch batch entry: which connection it answers, and how the
+/// response is interpreted.
+struct Item {
+    conn: usize,
+    kind: ItemKind,
+    req: Request,
+    rid: Option<u64>,
+}
+
+/// Dispatch one tick's batch under a single master-lock acquisition,
+/// coalescing maximal runs of heartbeats (arrival order preserved).
+fn dispatch_batch(
+    master: &Mutex<DormMaster>,
+    shared: &Shared,
+    items: &mut Vec<Item>,
+    coalesce: bool,
+) -> Vec<Response> {
+    let mut m = lock_master(master);
+    let mut rsps: Vec<Response> = Vec::with_capacity(items.len());
+    let mut run: Vec<Request> = Vec::new();
+    for item in items.drain(..) {
+        let is_beat = matches!(item.req, Request::Heartbeat { .. });
+        if coalesce && is_beat && item.kind == ItemKind::Normal {
+            run.push(item.req);
+            continue;
+        }
+        if !run.is_empty() {
+            rsps.extend(m.dispatch_heartbeats(std::mem::take(&mut run)));
+        }
+        // v1.3: the trailing retry id (when the client stamped one)
+        // makes a re-sent Submit/Complete answer from the dedupe cache
+        // instead of double-applying after a re-dial
+        rsps.push(m.dispatch_rid(item.req, item.rid));
+    }
+    if !run.is_empty() {
+        rsps.extend(m.dispatch_heartbeats(run));
+    }
+    shared.epoch.store(m.epoch(), Ordering::SeqCst);
+    rsps
+}
+
+/// The worker: drain the inbox, poll owned connections, batch-dispatch,
+/// write answers, reap the dead — then park until there is reason to
+/// wake (condvar when idle, bounded back-off tick while owning quiet
+/// connections, blocking peek when owning exactly one).
+fn worker_loop(
+    idx: usize,
+    master: Arc<Mutex<DormMaster>>,
+    shared: Arc<Shared>,
+    cfg: NetConfig,
+    wall_epoch: Instant,
+) {
+    let me = Arc::clone(&shared.workers[idx]);
+    let stall = (cfg.io_timeout_ms > 0).then(|| Duration::from_millis(cfg.io_timeout_ms));
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut idle_streak = 0u32;
+    loop {
+        // adopt new connections
+        {
+            let mut inbox = me.inbox.lock().unwrap_or_else(|p| p.into_inner());
+            for stream in inbox.drain(..) {
+                match Conn::adopt(stream) {
+                    Some(c) => conns.push(c),
+                    None => {
+                        shared.conns.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+        }
+        if shared.stopping() {
+            shutdown_flush(&mut conns, stall);
+            shared.conns.fetch_sub(conns.len(), Ordering::SeqCst);
+            let mut inbox = me.inbox.lock().unwrap_or_else(|p| p.into_inner());
+            shared.conns.fetch_sub(inbox.drain(..).count(), Ordering::SeqCst);
+            return;
+        }
+        let did = pass(&mut conns, &master, &shared, &cfg, wall_epoch, stall);
+        // reap and release seats
+        let before = conns.len();
+        conns.retain(|c| !c.dead);
+        let reaped = before - conns.len();
+        if reaped > 0 {
+            shared.conns.fetch_sub(reaped, Ordering::SeqCst);
+        }
+        if did || reaped > 0 {
+            idle_streak = 0;
+            continue;
+        }
+        idle_streak = idle_streak.saturating_add(1);
+        if conns.is_empty() {
+            // no connections: true zero-CPU park until handoff or stop
+            let mut inbox = me.inbox.lock().unwrap_or_else(|p| p.into_inner());
+            while inbox.is_empty() && !shared.stopping() {
+                inbox = me.cv.wait(inbox).unwrap_or_else(|p| p.into_inner());
+            }
+            idle_streak = 0;
+            continue;
+        }
+        let lone_quiet = conns.len() == 1
+            && conns[0].out.is_empty()
+            && conns[0].deferred.is_empty()
+            && !conns[0].read_dead;
+        if lone_quiet {
+            // one quiet connection: a blocking peek waits in the kernel,
+            // so a lone client's round-trip costs no poll tick
+            blocking_peek(&mut conns[0]);
+        } else if idle_streak <= SPIN_PASSES {
+            // spin-then-park: stay hot across the client turnaround gap
+            std::thread::yield_now();
+        } else {
+            let shift = (idle_streak - SPIN_PASSES).min(4);
+            let tick = Duration::from_millis((POLL_TICK_MIN_MS << shift).min(POLL_TICK_MAX_MS));
+            let inbox = me.inbox.lock().unwrap_or_else(|p| p.into_inner());
+            if inbox.is_empty() && !shared.stopping() {
+                drop(me.cv.wait_timeout(inbox, tick));
+            }
+        }
+    }
+}
+
+/// Kernel-blocking wait for the single-connection fast path: `peek`
+/// returns the moment a byte (or EOF) arrives, bounded by
+/// [`BLOCK_QUANTUM_MS`] so stop/inbox changes are still observed.
+fn blocking_peek(c: &mut Conn) {
+    let blocking_ok = c.stream.set_nonblocking(false).is_ok()
+        && c.stream.set_read_timeout(Some(Duration::from_millis(BLOCK_QUANTUM_MS))).is_ok();
+    if !blocking_ok {
+        c.dead = true;
+        return;
+    }
+    let mut probe = [0u8; 1];
+    let r = c.stream.peek(&mut probe);
+    if c.stream.set_nonblocking(true).is_err() {
+        c.dead = true;
+        return;
+    }
+    match r {
+        Ok(0) => c.on_eof(),
+        Ok(_) => {}
+        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+        Err(e) if e.kind() == ErrorKind::Interrupted => {}
+        Err(_) => c.dead = true,
+    }
+}
+
+/// One poll pass over a worker's connections: flush, pump, process
+/// frames, batch-dispatch, answer, enforce stall deadlines.
+fn pass(
+    conns: &mut [Conn],
+    master: &Mutex<DormMaster>,
+    shared: &Shared,
+    cfg: &NetConfig,
+    wall_epoch: Instant,
+    stall: Option<Duration>,
+) -> bool {
+    let max = cfg.max_frame_bytes;
+    let mut did = false;
+    let mut batch: Vec<Item> = Vec::new();
+    let cached_epoch = shared.epoch.load(Ordering::SeqCst);
+    for (ci, c) in conns.iter_mut().enumerate() {
+        if c.dead {
+            continue;
+        }
+        did |= c.flush();
+        did |= c.pump(max);
+        while let Some(frame) = c.deferred.pop_front() {
+            did = true;
+            if c.read_dead && c.close_after_flush {
+                continue; // discard frames pipelined past a fatal one
+            }
+            if c.hello_pending {
+                // the Hello's verdict decides this frame's fate next tick
+                c.deferred.push_front(frame);
+                break;
+            }
+            match c.step(&frame, wall_epoch) {
+                Step::Respond(rsp) => c.queue(&rsp, max, cached_epoch),
+                Step::Dispatch { req, rid, kind } => {
+                    // at most one dispatch per connection per tick, so
+                    // answers stay in request order even when a client
+                    // pipelines dispatched and immediately-answered
+                    // frames; batching happens *across* connections
+                    batch.push(Item { conn: ci, kind, req, rid });
+                    break;
+                }
+            }
+        }
+    }
+    if !batch.is_empty() {
+        did = true;
+        let kinds: Vec<(usize, ItemKind)> = batch.iter().map(|i| (i.conn, i.kind)).collect();
+        let rsps = dispatch_batch(master, shared, &mut batch, cfg.coalesce_heartbeats);
+        let epoch = shared.epoch.load(Ordering::SeqCst);
+        let mut shutdown = false;
+        for ((ci, kind), rsp) in kinds.into_iter().zip(rsps) {
+            let c = &mut conns[ci];
+            match kind {
+                ItemKind::Hello => {
+                    c.hello_pending = false;
+                    if matches!(rsp, Response::HelloAck { .. }) {
+                        c.negotiated = true;
+                    } else {
+                        // version rejected: typed error then close
+                        c.read_dead = true;
+                        c.close_after_flush = true;
+                        c.deferred.clear();
+                    }
+                }
+                ItemKind::Shutdown => {
+                    c.close_after_flush = true;
+                    shutdown = true;
+                }
+                ItemKind::Normal => {}
+            }
+            c.queue(&rsp, max, epoch);
+        }
+        if shutdown {
+            shared.request_stop();
+        }
+    }
+    for c in conns.iter_mut() {
+        if c.dead {
+            continue;
+        }
+        if c.deferred.is_empty() && !c.hello_pending {
+            if let Some(len) = c.oversize.take() {
+                // framing cannot resync past an unread body: answer
+                // (after every earlier frame's response), then close
+                let e = ProtoError::new(
+                    ErrorCode::FrameTooLarge,
+                    format!("frame of {len} B exceeds the {max} B limit"),
+                );
+                c.queue(&Response::Error(e), max, shared.epoch.load(Ordering::SeqCst));
+                c.close_after_flush = true;
+                did = true;
+            }
+        }
+        c.flush();
+        if let Some(stall) = stall {
+            // a peer silent mid-frame, or one not draining its answers,
+            // is stalled: reap so it cannot pin a connection seat
+            if c.mid_frame() || !c.out.is_empty() {
+                let since = *c.quiet_since.get_or_insert_with(Instant::now);
+                let wsince = *c.write_quiet.get_or_insert_with(Instant::now);
+                if since.elapsed() >= stall || wsince.elapsed() >= stall {
+                    c.dead = true;
+                }
+            } else {
+                c.quiet_since = None;
+                c.write_quiet = None;
+            }
+        }
+    }
+    did
+}
+
+/// Best-effort bounded flush of every owed response at shutdown, so the
+/// client that sent Shutdown reads its Ok before the socket closes.
+fn shutdown_flush(conns: &mut [Conn], stall: Option<Duration>) {
+    const GRACE_CAP: Duration = Duration::from_millis(1000);
+    let grace = stall.unwrap_or(GRACE_CAP).min(GRACE_CAP);
+    for c in conns.iter_mut() {
+        if c.dead || c.out.is_empty() {
+            continue;
+        }
+        if c.stream.set_nonblocking(false).is_err() {
+            continue;
+        }
+        let _ = c.stream.set_write_timeout(Some(grace));
+        use std::io::Write;
+        let _ = c.stream.write_all(&c.out);
+        let _ = c.stream.flush();
+    }
+}
+
+// ---- the legacy thread-per-connection server ----------------------------
+
+/// Serve `master` with the original one-thread-per-connection blocking
+/// server.  Retained as the measured baseline for `bench rpc-throughput`
+/// and to pin, in `tests/transport_parity.rs`, that the multiplexed
+/// [`serve`] is response-sequence-identical to it.  The accept loop is
+/// shutdown-woken and sleep-free like the multiplexed one, and lease
+/// sweeps run on the same dedicated sweeper thread.
+pub fn serve_legacy(master: DormMaster, cfg: &NetConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.bind_addr)
+        .with_context(|| format!("bind {}", cfg.bind_addr))?;
+    let addr = listener.local_addr()?;
+    let wall_epoch = Instant::now();
+    let epoch0 = master.epoch();
+    let master = Arc::new(Mutex::new(master));
+    let shared = Arc::new(Shared {
+        stop: AtomicBool::new(false),
+        addr,
+        epoch: AtomicU64::new(epoch0),
+        conns: AtomicUsize::new(0),
+        stop_mu: Mutex::new(()),
+        stop_cv: Condvar::new(),
+        workers: Vec::new(),
+    });
+    let mut threads = Vec::with_capacity(2);
+    threads.push(spawn_sweeper(&master, &shared, cfg, wall_epoch));
+    {
+        let master = Arc::clone(&master);
+        let shared = Arc::clone(&shared);
+        let cfg = cfg.clone();
+        threads.push(std::thread::spawn(move || {
+            legacy_accept_loop(listener, master, shared, cfg, wall_epoch)
+        }));
+    }
+    Ok(ServerHandle { addr, master, shared, threads })
+}
+
+fn legacy_accept_loop(
+    listener: TcpListener,
+    master: Arc<Mutex<DormMaster>>,
+    shared: Arc<Shared>,
+    cfg: NetConfig,
+    wall_epoch: Instant,
+) {
+    loop {
+        if shared.stopping() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if shared.stopping() {
+                    return; // the wake-up self-connection
+                }
+                if shared.conns.load(Ordering::SeqCst) >= cfg.max_conns {
+                    reject_over_limit(stream, &shared, &cfg);
+                    continue;
+                }
+                log::debug!("control-plane connection from {peer}");
+                shared.conns.fetch_add(1, Ordering::SeqCst);
+                let master = Arc::clone(&master);
+                let shared = Arc::clone(&shared);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    handle_conn(stream, master, &shared, cfg, wall_epoch);
+                    shared.conns.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            Err(e) => {
+                log::warn!("accept failed: {e}; backing off");
+                let g = shared.stop_mu.lock().unwrap_or_else(|p| p.into_inner());
+                drop(shared.stop_cv.wait_timeout(g, Duration::from_millis(50)));
+            }
+        }
+    }
+}
+
+/// Read exactly `buf.len()` bytes in bounded blocking polls.  While no
+/// byte of `buf` has arrived and `idle_ok` holds, waiting is healthy (a
+/// control connection between commands) and continues indefinitely; once
+/// a frame is partially read — or for a frame body — a peer silent for
+/// `stall` is stalled and the read fails so the handler can reap the
+/// connection.  Checks `stop` between polls.  `Ok(false)` = clean EOF
+/// before byte 0.
 fn read_full(
     stream: &mut TcpStream,
     buf: &mut [u8],
@@ -248,20 +996,20 @@ fn read_full(
 fn handle_conn(
     mut stream: TcpStream,
     master: Arc<Mutex<DormMaster>>,
-    stop: Arc<AtomicBool>,
+    shared: &Shared,
     cfg: NetConfig,
     wall_epoch: Instant,
 ) {
     stream.set_nodelay(true).ok();
-    // the listener is nonblocking and some platforms let accepted sockets
-    // inherit that flag, which would turn the timeout reads below into a
+    // accepted sockets may inherit non-blocking from the listener on
+    // some platforms, which would turn the timeout reads below into a
     // busy spin and make mid-frame writes fail spuriously — clear it
     if stream.set_nonblocking(false).is_err() {
         return;
     }
-    // ~100 ms poll quantum: reads wake often enough to observe `stop` and
-    // to enforce the mid-frame stall deadline without busy-waiting
-    if stream.set_read_timeout(Some(Duration::from_millis(100))).is_err() {
+    // bounded poll quantum: reads wake often enough to observe `stop`
+    // and to enforce the mid-frame stall deadline without busy-waiting
+    if stream.set_read_timeout(Some(Duration::from_millis(BLOCK_QUANTUM_MS))).is_err() {
         return;
     }
     let stall = (cfg.io_timeout_ms > 0).then(|| Duration::from_millis(cfg.io_timeout_ms));
@@ -269,6 +1017,7 @@ fn handle_conn(
         return;
     }
     let max = cfg.max_frame_bytes;
+    let stop = &shared.stop;
     let mut negotiated = false;
     // the serving epoch, refreshed after every dispatch (it changes only
     // on promotion, but the cache spares a lock on pre-dispatch errors)
@@ -279,7 +1028,7 @@ fn handle_conn(
         }
         // header: idle waiting is healthy between commands
         let mut hdr = [0u8; wire::FRAME_HEADER];
-        match read_full(&mut stream, &mut hdr, &stop, true, stall) {
+        match read_full(&mut stream, &mut hdr, stop, true, stall) {
             Ok(true) => {}
             _ => return, // EOF, stop, or a peer stalled mid-header
         }
@@ -295,7 +1044,7 @@ fn handle_conn(
         }
         // body: a silent peer mid-frame is stalled — reap, never hang
         let mut payload = vec![0u8; len];
-        match read_full(&mut stream, &mut payload, &stop, false, stall) {
+        match read_full(&mut stream, &mut payload, stop, false, stall) {
             Ok(true) => {}
             _ => return,
         }
@@ -305,8 +1054,11 @@ fn handle_conn(
                 // a newer peer's message: typed refusal, connection lives
                 let e = ProtoError::new(
                     ErrorCode::UnsupportedRequest,
-                    format!("request tag {t:#04x} is not known to protocol v{}.{}",
-                        crate::proto::PROTO_MAJOR, crate::proto::PROTO_MINOR),
+                    format!(
+                        "request tag {t:#04x} is not known to protocol v{}.{}",
+                        crate::proto::PROTO_MAJOR,
+                        crate::proto::PROTO_MINOR
+                    ),
                 );
                 if !send(&mut stream, &Response::Error(e), max, cur_epoch) {
                     return;
@@ -330,6 +1082,7 @@ fn handle_conn(
                         cur_epoch = m.epoch();
                         r
                     };
+                    shared.epoch.store(cur_epoch, Ordering::SeqCst);
                     let ok = matches!(rsp, Response::HelloAck { .. });
                     if !send(&mut stream, &rsp, max, cur_epoch) || !ok {
                         return; // version rejected: typed error then close
@@ -357,9 +1110,10 @@ fn handle_conn(
             cur_epoch = m.epoch();
             r
         };
+        shared.epoch.store(cur_epoch, Ordering::SeqCst);
         let sent = send(&mut stream, &rsp, max, cur_epoch);
         if shutdown {
-            stop.store(true, Ordering::SeqCst);
+            shared.request_stop();
             return;
         }
         if !sent {

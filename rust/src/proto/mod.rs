@@ -27,6 +27,42 @@
 //!
 //! The wire encoding lives in [`wire`]; the transports that carry the
 //! frames live in [`crate::net`].
+//!
+//! ## Version history (the handshake contract)
+//!
+//! All evolution so far is same-major: new fields ride the *trailing
+//! extension room* of existing payloads (decoders ignore bytes past the
+//! fields they know), so older peers interoperate unchanged.
+//!
+//! * **v1.0** — the base protocol: every frame is `u32` big-endian
+//!   length + payload, every payload is a tag byte + fields.
+//! * **v1.1** — epoch trailers: each response carries the serving
+//!   master's epoch (term) for split-brain fencing after a takeover.
+//! * **v1.2** — slave self-registration and batched directive acks.
+//! * **v1.3** — retry ids on `Submit`/`Complete` for exactly-once
+//!   mutation across failover re-dials.
+//!
+//! See [`PROTO_MINOR`] for the per-version details.
+//!
+//! ## Example: one frame round trip
+//!
+//! ```
+//! use dorm::proto::{wire, Request, PROTO_MAJOR, PROTO_MINOR};
+//!
+//! // every connection opens with Hello; encode it, frame it, decode it
+//! let payload =
+//!     wire::encode_request(&Request::Hello { major: PROTO_MAJOR, minor: PROTO_MINOR });
+//! let mut framed = Vec::new();
+//! wire::write_frame(&mut framed, &payload, 64 * 1024).unwrap();
+//! // the frame is the 4-byte big-endian payload length, then the payload
+//! assert_eq!(&framed[..4], &(payload.len() as u32).to_be_bytes());
+//! let body = wire::read_frame(&mut &framed[..], 64 * 1024).unwrap();
+//! let (req, rid) = wire::decode_request_rid(&body).unwrap();
+//! assert_eq!(rid, None, "Hello is never stamped with a retry id");
+//! assert!(matches!(req, Request::Hello { .. }));
+//! ```
+
+#![deny(missing_docs)]
 
 pub mod wire;
 
@@ -56,6 +92,9 @@ pub const PROTO_MAJOR: u16 = 1;
 /// a takeover re-dial returns the cached response instead of double-
 /// applying the mutation.  The id rides the trailing extension room, so
 /// older peers interoperate unchanged.
+/// (Error code 14, [`ErrorCode::TooManyConnections`], was added within
+/// v1.3: an unrecognized code degrades to [`ErrorCode::Internal`] on
+/// older peers, so new codes never need a version bump.)
 pub const PROTO_MINOR: u16 = 3;
 
 /// Version handshake rule: same major, minor no newer than ours (a newer
@@ -138,7 +177,9 @@ pub enum Request {
 pub enum Response {
     /// Handshake accepted; carries the master's version.
     HelloAck { major: u16, minor: u16 },
+    /// Request applied; nothing further to report.
     Ok,
+    /// Submission accepted; the id to address the app by from now on.
     Submitted { app: AppId },
     /// Heartbeat consumed.  `alive` is the lease verdict (a dead server's
     /// late heartbeat does not resurrect it — it must send
@@ -154,23 +195,32 @@ pub enum Response {
     Expired { dead: Vec<u32> },
     /// Apps degraded by [`Request::FailServer`].
     Affected { apps: Vec<AppId> },
+    /// Answer to [`Request::QueryState`].
     State(StateView),
+    /// Typed refusal; the connection stays usable unless the code says
+    /// otherwise ([`ErrorCode::FrameTooLarge`] is fatal to framing).
     Error(ProtoError),
 }
 
 /// Master→slave container command, piggybacked on the heartbeat ack.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Directive {
+    /// Launch `count` containers of `demand` each for `app`.
     Create { app: AppId, demand: Res, count: u32 },
+    /// Tear down `count` of `app`'s containers.
     Destroy { app: AppId, count: u32 },
+    /// Tear down every container `app` still holds on this slave.
     DestroyAll { app: AppId },
 }
 
 /// Which kind of [`Directive`] a [`DirectiveAck`] answers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AckKind {
+    /// Answers a [`Directive::Create`].
     Create,
+    /// Answers a [`Directive::Destroy`].
     Destroy,
+    /// Answers a [`Directive::DestroyAll`].
     DestroyAll,
 }
 
@@ -180,7 +230,9 @@ pub enum AckKind {
 /// master counts, not a delivery guarantee it depends on.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DirectiveAck {
+    /// The app the answered directive was for.
     pub app: AppId,
+    /// The kind of directive being answered.
     pub kind: AckKind,
     /// `false`: the slave tried and failed (e.g. local capacity check);
     /// the master's reconcile loop will re-issue or correct course.
@@ -200,7 +252,9 @@ pub enum ErrorCode {
     FrameTooLarge,
     /// Unknown request tag (e.g. a newer peer's new message).
     UnsupportedRequest,
+    /// No app with the given id (or it was forgotten after completion).
     UnknownApp,
+    /// Server ordinate outside the cluster's seat range.
     UnknownServer,
     /// Submission rejected by `AppSpec::validate`.
     InvalidSpec,
@@ -218,9 +272,14 @@ pub enum ErrorCode {
     /// and alive — almost always a duplicate slave process; the live
     /// holder keeps its seat.
     AlreadyRegistered,
+    /// The server is at its `[net].max_conns` connection limit; this
+    /// connection is answered and closed.  Back off and re-dial — an
+    /// existing connection closing frees a seat.
+    TooManyConnections,
 }
 
 impl ErrorCode {
+    /// Encode for the wire; the inverse of [`ErrorCode::from_u16`].
     pub fn as_u16(self) -> u16 {
         match self {
             ErrorCode::VersionMismatch => 1,
@@ -236,6 +295,7 @@ impl ErrorCode {
             ErrorCode::Internal => 11,
             ErrorCode::StaleEpoch => 12,
             ErrorCode::AlreadyRegistered => 13,
+            ErrorCode::TooManyConnections => 14,
         }
     }
 
@@ -255,6 +315,7 @@ impl ErrorCode {
             10 => ErrorCode::InvalidArgument,
             12 => ErrorCode::StaleEpoch,
             13 => ErrorCode::AlreadyRegistered,
+            14 => ErrorCode::TooManyConnections,
             _ => ErrorCode::Internal,
         }
     }
@@ -263,11 +324,14 @@ impl ErrorCode {
 /// A typed control-plane error, decodable on the remote side.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ProtoError {
+    /// The machine-readable category a client can branch on.
     pub code: ErrorCode,
+    /// Human-readable diagnosis; advisory, never parsed.
     pub detail: String,
 }
 
 impl ProtoError {
+    /// Build an error from a code and anything displayable.
     pub fn new(code: ErrorCode, detail: impl fmt::Display) -> Self {
         ProtoError { code, detail: detail.to_string() }
     }
@@ -292,25 +356,38 @@ pub struct StateView {
     /// logical state at `epoch + 1`; views from different epochs must not
     /// be treated as one history.
     pub epoch: u64,
+    /// Servers whose liveness lease has not lapsed.
     pub alive_servers: u32,
+    /// Cluster seats, alive or not.
     pub total_servers: u32,
+    /// Apps in a non-terminal state.
     pub active_apps: u32,
+    /// Lifetime count of resource adjustments (Fig. 9b's numerator).
     pub total_adjustments: u32,
+    /// Lifetime count of checkpoint-driven app recoveries.
     pub total_recoveries: u32,
     /// Eq. 1 over alive servers.
     pub utilization: f64,
+    /// One row per non-filtered app.
     pub apps: Vec<AppView>,
 }
 
 /// One application row of a [`StateView`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct AppView {
+    /// The app's id, as assigned by [`Response::Submitted`].
     pub id: AppId,
+    /// Lifecycle state.
     pub state: AppState,
+    /// Containers currently placed across the cluster.
     pub containers: u32,
+    /// Training steps completed.
     pub steps_done: u64,
+    /// Step of the latest durable checkpoint.
     pub ckpt_step: u64,
+    /// Resource adjustments this app has absorbed.
     pub adjustments: u32,
+    /// Checkpoint-driven recoveries this app has absorbed.
     pub recoveries: u32,
 }
 
@@ -346,6 +423,7 @@ mod tests {
             ErrorCode::Internal,
             ErrorCode::StaleEpoch,
             ErrorCode::AlreadyRegistered,
+            ErrorCode::TooManyConnections,
         ] {
             assert_eq!(ErrorCode::from_u16(code.as_u16()), code);
         }

@@ -49,6 +49,7 @@ pub enum WireError {
     Malformed(String),
     /// Declared frame length exceeds the configured limit.
     FrameTooLarge { len: usize, max: usize },
+    /// Socket/stream failure while framing (never from pure decoding).
     Io(std::io::Error),
 }
 
@@ -369,6 +370,9 @@ const REQ_QUERY: u8 = 0x0d;
 const REQ_SHUTDOWN: u8 = 0x0e;
 const REQ_REGISTER: u8 = 0x0f;
 
+/// Encode a request payload (tag byte + fields; no frame header — pair
+/// with [`write_frame`]).  The v1.0-compatible base encoding: retry ids
+/// go through [`encode_request_rid`] instead.
 pub fn encode_request(req: &Request) -> Vec<u8> {
     let mut out = Vec::with_capacity(32);
     match req {
@@ -493,6 +497,9 @@ pub fn decode_request_rid(payload: &[u8]) -> Result<(Request, Option<u64>), Wire
     Ok((req, rid))
 }
 
+/// Decode a request payload, ignoring any trailing extensions (the v1.0
+/// view of the bytes; servers use [`decode_request_rid`] to also see
+/// the retry id).
 pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
     decode_request_cur(&mut Cur::new(payload))
 }
@@ -561,6 +568,9 @@ const RSP_STATE: u8 = 0x87;
 const RSP_ERROR: u8 = 0x88;
 const RSP_REGISTERED: u8 = 0x89;
 
+/// Encode a response payload (tag byte + fields; no frame header).  The
+/// v1.0-compatible base encoding: serving masters append their epoch via
+/// [`encode_response_ep`].
 pub fn encode_response(rsp: &Response) -> Vec<u8> {
     let mut out = Vec::with_capacity(32);
     match rsp {
@@ -651,6 +661,8 @@ pub fn decode_response_ep(payload: &[u8]) -> Result<(Response, Option<u64>), Wir
     Ok((rsp, epoch))
 }
 
+/// Decode a response payload, ignoring any trailing extensions (clients
+/// that fence epochs use [`decode_response_ep`]).
 pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
     decode_response_cur(&mut Cur::new(payload))
 }

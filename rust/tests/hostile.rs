@@ -1,0 +1,230 @@
+//! Hostile-client coverage for the multiplexed server (DESIGN.md §15).
+//!
+//! The thread-per-connection baseline paid for isolation with a thread
+//! per peer; the multiplexed server must provide the same isolation from
+//! shared worker threads.  These tests pin the three load-bearing
+//! guarantees: a fleet of slow-loris peers parked mid-frame cannot
+//! starve an honest client (and is reaped on the `io_timeout_ms` stall
+//! clock), dials past `[net].max_conns` are refused with a typed
+//! [`ErrorCode::TooManyConnections`] answer before close (so a polite
+//! client can back off and re-dial instead of guessing at a reset), and
+//! one stalled peer sharing a worker with an honest client adds at most
+//! a poll tick — not a timeout — to the honest client's round trip.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use dorm::app::CheckpointStore;
+use dorm::config::{ClusterConfig, DormConfig, NetConfig};
+use dorm::master::DormMaster;
+use dorm::net::{serve, ControlPlane, ServerHandle, TcpTransport};
+use dorm::proto::{wire, ErrorCode, Request, Response, PROTO_MAJOR, PROTO_MINOR};
+use dorm::resources::Res;
+
+fn store(tag: &str) -> CheckpointStore {
+    let dir = std::env::temp_dir().join(format!("dorm_hostile_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    CheckpointStore::new(dir).unwrap()
+}
+
+fn serve_master(tag: &str, cfg: &NetConfig) -> ServerHandle {
+    let m = DormMaster::new(
+        &ClusterConfig::uniform(2, Res::cpu_gpu_ram(12.0, 0.0, 64.0)),
+        DormConfig { theta1: 0.5, theta2: 0.5 },
+        store(tag),
+    );
+    serve(m, cfg).unwrap()
+}
+
+/// Raw frame client; writes are best-effort because a rejected or reaped
+/// connection may already be closing under us.
+struct Raw {
+    stream: TcpStream,
+}
+
+impl Raw {
+    fn connect(handle: &ServerHandle) -> Raw {
+        let stream = TcpStream::connect(handle.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        Raw { stream }
+    }
+
+    fn send_payload(&mut self, payload: &[u8]) {
+        let _ = wire::write_frame(&mut self.stream, payload, usize::MAX);
+    }
+
+    fn recv(&mut self) -> Result<Response, wire::WireError> {
+        let payload = wire::read_frame(&mut self.stream, 1 << 20)?;
+        wire::decode_response(&payload)
+    }
+
+    fn hello(&mut self) {
+        self.send_payload(&wire::encode_request(&Request::Hello {
+            major: PROTO_MAJOR,
+            minor: PROTO_MINOR,
+        }));
+        match self.recv().unwrap() {
+            Response::HelloAck { .. } => {}
+            other => panic!("handshake answered {other:?}"),
+        }
+    }
+
+    /// Park mid-frame: promise a body and never deliver it.
+    fn stall_mid_frame(&mut self) {
+        let _ = self.stream.write_all(&100u32.to_be_bytes());
+        let _ = self.stream.write_all(&[1, 2, 3]);
+    }
+
+    /// The server closed our connection (EOF / reset) within `deadline`.
+    fn assert_closed(mut self, deadline: Duration) {
+        self.stream.set_read_timeout(Some(deadline)).unwrap();
+        let mut buf = [0u8; 1];
+        match self.stream.read(&mut buf) {
+            Ok(0) => {}
+            Ok(_) => panic!("server kept talking on a connection it should close"),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                panic!("server left the stalled connection open past the deadline")
+            }
+            Err(_) => {}
+        }
+    }
+}
+
+/// A dozen slow-loris peers park mid-frame on the shared worker pool; an
+/// honest client's requests must still be answered while they sit there,
+/// and every loris is reaped on the stall clock rather than held forever.
+#[test]
+fn slow_loris_fleet_cannot_starve_honest_clients() {
+    let cfg = NetConfig {
+        bind_addr: "127.0.0.1:0".into(),
+        io_timeout_ms: 1500,
+        ..NetConfig::default()
+    };
+    let handle = serve_master("loris", &cfg);
+
+    let mut fleet: Vec<Raw> = (0..12)
+        .map(|_| {
+            let mut raw = Raw::connect(&handle);
+            raw.hello();
+            raw.stall_mid_frame();
+            raw
+        })
+        .collect();
+
+    // while the fleet holds its half-frames, honest round trips proceed
+    let mut ctl = TcpTransport::connect(&handle.addr().to_string(), &cfg).unwrap();
+    for _ in 0..10 {
+        match ctl.call(Request::QueryState { app: None }).unwrap() {
+            Response::State(v) => assert_eq!(v.total_servers, 2),
+            other => panic!("query under loris load answered {other:?}"),
+        }
+    }
+
+    // the stall clock reaps every loris; none outlives io_timeout_ms by
+    // more than the test's generous scheduling margin
+    for raw in fleet.drain(..) {
+        raw.assert_closed(Duration::from_secs(10));
+    }
+
+    // and the seats they held are free again for honest dials
+    drop(TcpTransport::connect(&handle.addr().to_string(), &cfg).unwrap());
+    handle.stop();
+}
+
+/// Dialing past `[net].max_conns` is answered with a typed
+/// `TooManyConnections` error and a close — and the seat count is live:
+/// hanging up one held connection frees a seat for the next dial.
+#[test]
+fn connection_limit_rejects_with_typed_error_and_frees_seats() {
+    let cfg = NetConfig {
+        bind_addr: "127.0.0.1:0".into(),
+        io_timeout_ms: 5000,
+        max_conns: 2,
+        ..NetConfig::default()
+    };
+    let handle = serve_master("limit", &cfg);
+
+    let mut held1 = Raw::connect(&handle);
+    held1.hello();
+    let mut held2 = Raw::connect(&handle);
+    held2.hello();
+
+    // the third dial is told why it was refused, before the close
+    let mut third = Raw::connect(&handle);
+    match third.recv().unwrap() {
+        Response::Error(e) => {
+            assert_eq!(e.code, ErrorCode::TooManyConnections);
+            assert!(e.detail.contains("max_conns"), "detail names the knob: {}", e.detail);
+        }
+        other => panic!("over-limit dial answered {other:?}"),
+    }
+    third.assert_closed(Duration::from_secs(5));
+
+    // hang up one seat; the server must notice the EOF and admit a new
+    // dial within the poll cadence
+    drop(held1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut retry = Raw::connect(&handle);
+        retry.send_payload(&wire::encode_request(&Request::Hello {
+            major: PROTO_MAJOR,
+            minor: PROTO_MINOR,
+        }));
+        match retry.recv() {
+            Ok(Response::HelloAck { .. }) => break,
+            Ok(Response::Error(e)) if e.code == ErrorCode::TooManyConnections => {
+                assert!(Instant::now() < deadline, "released seat never became dialable");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            other => panic!("re-dial answered {other:?}"),
+        }
+    }
+    handle.stop();
+}
+
+/// One stalled peer sharing the *same worker* as an honest client must
+/// not couple its stall into the honest client's latency: the honest
+/// round trip costs at most a poll tick extra, never a timeout.  Pinned
+/// with workers = 1 so the two connections are guaranteed neighbours.
+#[test]
+fn stalled_client_adds_at_most_a_poll_tick_to_neighbours() {
+    let cfg = NetConfig {
+        bind_addr: "127.0.0.1:0".into(),
+        // long stall clock: the loris stays parked for the whole
+        // measurement window, so reaping never rescues the bad design
+        io_timeout_ms: 30_000,
+        workers: 1,
+        ..NetConfig::default()
+    };
+    let handle = serve_master("neighbour", &cfg);
+
+    let mut loris = Raw::connect(&handle);
+    loris.hello();
+    loris.stall_mid_frame();
+
+    let mut ctl = TcpTransport::connect(&handle.addr().to_string(), &cfg).unwrap();
+    let mut rtts: Vec<Duration> = Vec::new();
+    for _ in 0..10 {
+        let t0 = Instant::now();
+        match ctl.call(Request::QueryState { app: None }).unwrap() {
+            Response::State(_) => {}
+            other => panic!("query next to a stalled peer answered {other:?}"),
+        }
+        rtts.push(t0.elapsed());
+    }
+    rtts.sort();
+    let median = rtts[rtts.len() / 2];
+    // one poll tick is <= 16 ms; 250 ms leaves a fat margin for a busy
+    // CI box while still catching any design that parks the worker on
+    // the stalled peer's io_timeout (30 s here)
+    assert!(
+        median < Duration::from_millis(250),
+        "median honest round trip {median:?} — the stalled neighbour is coupling its \
+         stall into other clients"
+    );
+    handle.stop();
+}

@@ -10,6 +10,12 @@
 //! transport grows private semantics (stamping, reordering, lossy
 //! encoding, divergent error mapping), this breaks.
 //!
+//! The TCP leg runs twice: once against the multiplexed worker-pool
+//! server (`serve`, DESIGN.md §15) and once against the retained
+//! thread-per-connection baseline (`serve_legacy`) — the two server
+//! implementations must stay response-sequence-identical, not merely
+//! each individually correct.
+//!
 //! Protocol notes: all times in the script are finite and explicit — the
 //! TCP server only substitutes wall clock for non-finite times, so the
 //! script stays deterministic on both transports.
@@ -17,7 +23,7 @@
 use dorm::app::{AppId, AppSpec, CheckpointStore, Engine};
 use dorm::config::{ClusterConfig, DormConfig, FaultConfig, NetConfig};
 use dorm::master::DormMaster;
-use dorm::net::{serve, ControlPlane, LocalTransport, TcpTransport};
+use dorm::net::{serve, serve_legacy, ControlPlane, LocalTransport, TcpTransport};
 use dorm::proto::{ErrorCode, Request, Response};
 use dorm::resources::Res;
 use dorm::slave::SlaveReport;
@@ -119,22 +125,30 @@ fn local_and_tcp_transports_replay_identical_sequences() {
     let mut local = LocalTransport::new(master("local"));
     let local_seq = run_script(&mut local);
 
-    // ---- TCP side: same master config served over loopback --------------
+    // ---- TCP side: same master config served over loopback, once per
+    // ---- server implementation ------------------------------------------
     let net = NetConfig {
         bind_addr: "127.0.0.1:0".into(),
         io_timeout_ms: 10_000,
         ..NetConfig::default()
     };
-    let handle = serve(master("tcp"), &net).unwrap();
-    let mut tcp = TcpTransport::connect(&handle.addr().to_string(), &net).unwrap();
+    let mux = serve(master("tcp"), &net).unwrap();
+    let mut tcp = TcpTransport::connect(&mux.addr().to_string(), &net).unwrap();
     let tcp_seq = run_script(&mut tcp);
-    handle.stop();
+    mux.stop();
+
+    let leg = serve_legacy(master("legacy"), &net).unwrap();
+    let mut ltcp = TcpTransport::connect(&leg.addr().to_string(), &net).unwrap();
+    let legacy_seq = run_script(&mut ltcp);
+    leg.stop();
 
     // ---- the invariant --------------------------------------------------
-    assert_eq!(local_seq.len(), tcp_seq.len());
-    for (i, (l, t)) in local_seq.iter().zip(&tcp_seq).enumerate() {
-        assert_eq!(l.0, t.0, "response {i} diverged (request {:?})", script()[i]);
-        assert_eq!(l.1, t.1, "state after request {i} diverged ({:?})", script()[i]);
+    for (label, seq) in [("mux", &tcp_seq), ("legacy", &legacy_seq)] {
+        assert_eq!(local_seq.len(), seq.len());
+        for (i, (l, t)) in local_seq.iter().zip(seq.iter()).enumerate() {
+            assert_eq!(l.0, t.0, "{label}: response {i} diverged (request {:?})", script()[i]);
+            assert_eq!(l.1, t.1, "{label}: state after request {i} diverged ({:?})", script()[i]);
+        }
     }
 
     // ---- sanity: the script exercised the interesting paths -------------

@@ -19,6 +19,11 @@
 # throughput behind the bounded trace buffer plus the live rate sweep
 # against fresh in-process masters; it splices its "replay" series into
 # the same BENCH_sched.json.
+#
+# The rpc_throughput bench runs third (DESIGN.md §15): control-plane
+# saturation over loopback TCP, thread-per-connection baseline vs the
+# multiplexed worker pool; it splices its "rpc" series into the same
+# BENCH_sched.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -33,6 +38,7 @@ export DORM_BENCH_JSON="${DORM_BENCH_JSON:-$PWD/BENCH_sched.json}"
 
 cargo bench --manifest-path rust/Cargo.toml --bench sched_latency
 cargo bench --manifest-path rust/Cargo.toml --bench replay_rate
+cargo bench --manifest-path rust/Cargo.toml --bench rpc_throughput
 
 echo
 echo "== BENCH_sched.json"

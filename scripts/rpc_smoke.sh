@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# RPC-throughput smoke (DESIGN.md §15): exercise the `dorm bench
+# rpc-throughput` CLI verb at a tiny scale — both server implementations
+# must answer a concurrent closed-loop drive without one in-band error —
+# then run the tracked benches/rpc_throughput.rs sweep at CI scale and
+# gate its spliced "rpc" series against BENCH_baseline/ with
+# scripts/check_bench.sh.
+#
+# Usage, from the repo root (after `cargo build --release`):
+#   bash scripts/rpc_smoke.sh
+#
+# Knobs: BIN (default rust/target/release/dorm), DORM_BENCH_JSON (where
+# the sweep splices its series, default ./BENCH_sched.json — the file CI
+# uploads as an artifact).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${BIN:-rust/target/release/dorm}
+WORK=$(mktemp -d)
+cleanup() { rm -rf "$WORK"; }
+trap cleanup EXIT
+
+fail() {
+  echo "RPC SMOKE FAIL: $1" >&2
+  exit 1
+}
+
+[ -x "$BIN" ] || fail "$BIN missing; run: cargo build --release --manifest-path rust/Cargo.toml"
+
+echo "== CLI verb: dorm bench rpc-throughput (tiny drive, both servers)"
+OUT=$("$BIN" bench rpc-throughput --clients 8 --servers 8 --seconds 1 \
+  --json "$WORK/cli_rpc.json") || fail "bench verb exited non-zero: $OUT"
+echo "$OUT"
+echo "$OUT" | grep -q "multiplexed vs legacy" || fail "no speedup line in: $OUT"
+grep -q '"rpc"' "$WORK/cli_rpc.json" || fail "--json did not emit an rpc series"
+
+echo
+echo "== tracked sweep: benches/rpc_throughput.rs at CI scale"
+export DORM_SCHED_SCALE=ci
+export DORM_BENCH_JSON="${DORM_BENCH_JSON:-$PWD/BENCH_sched.json}"
+# start the document fresh so the gate sees exactly this run's rpc series
+# (the sched/replay series are then absent and skipped, not gated)
+rm -f "$DORM_BENCH_JSON"
+cargo bench --manifest-path rust/Cargo.toml --bench rpc_throughput
+
+echo
+echo "== gate: scripts/check_bench.sh vs BENCH_baseline/"
+bash scripts/check_bench.sh
+
+echo "RPC SMOKE PASS"
